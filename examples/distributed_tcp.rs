@@ -1,0 +1,211 @@
+//! Multi-process-style deployment over real TCP sockets.
+//!
+//! Demonstrates the framework's second transport: two simulation agents and
+//! a leader, each on its own `TcpTransport` endpoint (localhost sockets,
+//! length-prefixed JSON frames — exactly what `dsim agent` uses across
+//! machines).  The leader deploys the two-center demo, drives termination
+//! detection by probing, and prints final statistics.
+//!
+//! ```bash
+//! cargo run --release --example distributed_tcp
+//! ```
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dsim::coordinator::{
+    stats_from_json, AgentConfig, AgentRuntime, ProbeAnswer, TerminationDetector,
+};
+use dsim::engine::SimTime;
+use dsim::model::Payload;
+use dsim::runtime::ComputeBackend;
+use dsim::transport::{ControlMsg, NetMsg, TcpTransport, Transport, Wire};
+use dsim::util::{AgentId, ContextId};
+use dsim::workload;
+
+fn main() -> anyhow::Result<()> {
+    let base = 42_600u16;
+    let addr = |p: u16| -> SocketAddr { format!("127.0.0.1:{p}").parse().unwrap() };
+    let peers: HashMap<AgentId, SocketAddr> = [
+        (AgentId(0), addr(base)),     // leader
+        (AgentId(1), addr(base + 1)),
+        (AgentId(2), addr(base + 2)),
+    ]
+    .into_iter()
+    .collect();
+    let agent_ids = [AgentId(1), AgentId(2)];
+
+    // Agents: each its own TCP endpoint + runtime thread.  In a real
+    // deployment these are separate processes (`dsim agent --me 1 ...`).
+    let mut handles = Vec::new();
+    for &a in &agent_ids {
+        let transport: TcpTransport<Payload> =
+            TcpTransport::bind(a, peers[&a], peers.clone())?;
+        let cfg = AgentConfig {
+            me: a,
+            peers: agent_ids.to_vec(),
+            lookahead: 0.05,
+            protocol: Default::default(),
+            workers: 0,
+        };
+        let backend = Arc::new(ComputeBackend::auto(Path::new("artifacts")));
+        handles.push(std::thread::spawn(move || {
+            AgentRuntime::new(cfg, transport, backend).run();
+        }));
+    }
+
+    // Leader endpoint.
+    let leader: TcpTransport<Payload> =
+        TcpTransport::bind(AgentId(0), peers[&AgentId(0)], peers.clone())?;
+    let ctx = ContextId(1);
+    let g = workload::two_center_demo();
+
+    // Round-robin group placement (the point here is the transport, not
+    // the scheduler — see scheduling_comparison for that).
+    let n_groups = g.scenario.group_count();
+    let group_agent: Vec<AgentId> = (0..n_groups).map(|i| agent_ids[i % 2]).collect();
+    let routes: Vec<_> = g
+        .scenario
+        .lps
+        .iter()
+        .map(|l| (l.id, group_agent[l.group]))
+        .collect();
+    for &a in &agent_ids {
+        leader.send(
+            a,
+            NetMsg::Control(ControlMsg::RoutingTable {
+                context: ctx,
+                routes: routes.clone(),
+            }),
+        )?;
+    }
+    for l in &g.scenario.lps {
+        leader.send(
+            group_agent[l.group],
+            NetMsg::Control(ControlMsg::DeployLp {
+                context: ctx,
+                lp: l.id,
+                kind: l.kind.clone(),
+                params: l.params.clone(),
+            }),
+        )?;
+    }
+    for (time, dst, payload) in &g.scenario.bootstrap {
+        let group = g.scenario.lps.iter().find(|l| l.id == *dst).unwrap().group;
+        leader.send(
+            group_agent[group],
+            NetMsg::Control(ControlMsg::Bootstrap {
+                context: ctx,
+                time: *time,
+                dst: *dst,
+                payload: payload.to_json(),
+            }),
+        )?;
+    }
+    for &a in &agent_ids {
+        leader.send(
+            a,
+            NetMsg::Control(ControlMsg::StartRun {
+                context: ctx,
+                participants: agent_ids.to_vec(),
+            }),
+        )?;
+    }
+    println!("deployed {} LPs over TCP; running...", g.scenario.lps.len());
+
+    // Probe-driven termination detection + GVT broadcast, leader side.
+    let mut detector = TerminationDetector::new(agent_ids.len());
+    let started = Instant::now();
+    let mut results = 0usize;
+    'outer: loop {
+        if started.elapsed() > Duration::from_secs(120) {
+            anyhow::bail!("TCP run did not terminate in 120s");
+        }
+        let round = detector.start_round();
+        for &a in &agent_ids {
+            leader.send(a, NetMsg::Control(ControlMsg::Probe { context: ctx, round }))?;
+        }
+        let deadline = Instant::now() + Duration::from_millis(200);
+        while Instant::now() < deadline {
+            match leader.recv_timeout(Duration::from_millis(10)) {
+                Some(NetMsg::Control(ControlMsg::ProbeReply {
+                    round: r,
+                    from,
+                    idle,
+                    sent,
+                    received,
+                    lvt,
+                    next_event,
+                    ..
+                })) => {
+                    let done = detector.ingest(
+                        r,
+                        from,
+                        ProbeAnswer {
+                            idle,
+                            sent,
+                            received,
+                            lvt_s: lvt.secs(),
+                            next_event_s: next_event.secs(),
+                        },
+                    );
+                    if let Some(gvt) = detector.take_gvt() {
+                        for &a in &agent_ids {
+                            leader.send(
+                                a,
+                                NetMsg::Control(ControlMsg::GvtUpdate {
+                                    context: ctx,
+                                    gvt: SimTime::new(gvt),
+                                }),
+                            )?;
+                        }
+                    }
+                    if done {
+                        break 'outer;
+                    }
+                }
+                Some(NetMsg::Control(ControlMsg::Result { .. })) => results += 1,
+                Some(_) => {}
+                None => {}
+            }
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+
+    // Collect final statistics and shut down.
+    for &a in &agent_ids {
+        leader.send(a, NetMsg::Control(ControlMsg::EndRun { context: ctx }))?;
+    }
+    let mut got_stats = 0;
+    let mut events = 0u64;
+    while got_stats < agent_ids.len() {
+        match leader.recv_timeout(Duration::from_secs(5)) {
+            Some(NetMsg::Control(ControlMsg::FinalStats { from, stats, .. })) => {
+                if let Some(v) = stats_from_json(&stats) {
+                    println!(
+                        "  {from}: events={} remote={} sync={}",
+                        v.events_processed,
+                        v.events_sent_remote,
+                        v.null_messages_sent + v.lvt_requests_sent
+                    );
+                    events += v.events_processed;
+                }
+                got_stats += 1;
+            }
+            Some(NetMsg::Control(ControlMsg::Result { .. })) => results += 1,
+            Some(_) => {}
+            None => anyhow::bail!("timed out waiting for final stats"),
+        }
+    }
+    for &a in &agent_ids {
+        leader.send(a, NetMsg::Control(ControlMsg::Shutdown))?;
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    println!("TCP run complete: wall={wall:.3}s events={events} result_records>={results}");
+    Ok(())
+}

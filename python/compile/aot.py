@@ -1,0 +1,104 @@
+"""AOT lowering: JAX (L2) -> HLO text artifacts for the Rust PJRT runtime.
+
+HLO *text* — NOT ``lowered.compile().serialize()`` and NOT a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``); the Rust binary is then fully
+self-contained.  Each artifact is accompanied by a ``.meta.json`` recording
+its shapes so the Rust loader can validate at startup.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts():
+    """Return {name: (lowered, meta)} for every artifact we ship."""
+    n, l, f = model.N_AGENTS, model.N_LINKS, model.N_FLOWS
+
+    arts = {}
+
+    lowered = jax.jit(lambda p, v, m: (model.placement_scores(p, v, m),)).lower(
+        _spec(n), _spec(n), _spec(n)
+    )
+    arts[f"placement{n}"] = (
+        lowered,
+        {
+            "fn": "placement_scores",
+            "inputs": [[n], [n], [n]],
+            "outputs": [[n]],
+            "n_agents": n,
+        },
+    )
+
+    lowered = jax.jit(lambda w: (model.apsp(w),)).lower(_spec(n, n))
+    arts[f"apsp{n}"] = (
+        lowered,
+        {"fn": "apsp", "inputs": [[n, n]], "outputs": [[n, n]], "n_agents": n},
+    )
+
+    lowered = jax.jit(lambda c, r, a: (model.fair_share(c, r, a),)).lower(
+        _spec(l), _spec(l, f), _spec(f)
+    )
+    arts["fairshare"] = (
+        lowered,
+        {
+            "fn": "fair_share",
+            "inputs": [[l], [l, f], [f]],
+            "outputs": [[f]],
+            "n_links": l,
+            "n_flows": f,
+            "iters": model.FS_ITERS,
+        },
+    )
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="emit a single artifact by name")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    for name, (lowered, meta) in build_artifacts().items():
+        if args.only and name != args.only:
+            continue
+        text = to_hlo_text(lowered)
+        hlo_path = out / f"{name}.hlo.txt"
+        hlo_path.write_text(text)
+        (out / f"{name}.meta.json").write_text(json.dumps(meta, indent=2) + "\n")
+        print(f"wrote {hlo_path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

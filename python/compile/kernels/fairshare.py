@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: one progressive-filling sweep of max-min fair share.
+
+The paper's network model (§4.2) is "interrupt"-based: whenever a transfer
+starts or finishes on a link, every flow sharing any affected link must have
+its bandwidth re-computed, and in-flight transfers are interrupted and
+re-timed.  That re-computation is the max-min fair allocation of link
+capacity among competing flows — the hot numeric path of the network model,
+re-run on every transfer event.
+
+One sweep of the classic water-filling algorithm, fully vectorized over a
+(links x flows) routing matrix:
+
+  used[l]   = sum_f R[l,f] * rate[f]                    # capacity consumed
+  nun[l]    = sum_f R[l,f] * unfrozen[f]                # contending flows
+  share[l]  = (cap[l] - used[l]) / max(nun[l], 1)       # equal split
+  inc[f]    = min over links f crosses of share[l]      # bottleneck share
+
+The L2 graph (model.py) iterates this sweep with freezing under lax.scan.
+
+TPU mapping: R is (L, F) with L=64, F=128 by default — a single VMEM-resident
+tile (32 KiB at f32); the sweep is two row reductions plus one masked column
+min, all VPU work.  No grid needed at these sizes; larger models would tile
+F with BlockSpec and carry partial link sums in scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e18
+
+
+def _sweep_kernel(cap_ref, routing_ref, rate_ref, frozen_ref, inc_ref, share_ref):
+    """One water-filling sweep.  Shapes: cap (L,), routing (L,F), rate (F,),
+    frozen (F,) in {0,1}; outputs inc (F,), share (L,)."""
+    routing = routing_ref[...]  # (L, F)
+    rate = rate_ref[...]  # (F,)
+    frozen = frozen_ref[...]  # (F,)
+    cap = cap_ref[...]  # (L,)
+
+    unfrozen = 1.0 - frozen
+    # Residual counts all current rates (frozen and still-growing flows).
+    used = jnp.sum(routing * rate[None, :], axis=1)  # (L,)
+    nun = jnp.sum(routing * unfrozen[None, :], axis=1)  # (L,)
+    share = jnp.maximum(cap - used, 0.0) / jnp.maximum(nun, 1.0)  # (L,)
+    share_ref[...] = share
+
+    # Per-flow bottleneck: min share over links the flow crosses; BIG where
+    # the flow crosses no link (kept from mattering by the caller's masks).
+    masked = jnp.where(routing > 0.0, share[:, None], BIG)  # (L, F)
+    inc_ref[...] = jnp.min(masked, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fair_share_sweep(
+    cap: jax.Array,
+    routing: jax.Array,
+    rate: jax.Array,
+    frozen: jax.Array,
+    *,
+    interpret: bool = True,
+):
+    """Run one sweep; returns (inc[F], share[L])."""
+    l, f = routing.shape
+    assert cap.shape == (l,) and rate.shape == (f,) and frozen.shape == (f,)
+    return pl.pallas_call(
+        _sweep_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((f,), jnp.float32),
+            jax.ShapeDtypeStruct((l,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(cap, routing, rate, frozen)

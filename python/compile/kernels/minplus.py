@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: tiled min-plus matrix product (tropical semiring).
+
+``out[i, j] = min_k (a[i, k] + b[k, j])``
+
+This is the inner step of the all-pairs-shortest-paths computation used by
+the paper's placement scheduler (§4.1): repeated min-plus squaring of the
+weighted complete agent graph converges to the shortest-path matrix in
+ceil(log2(N)) steps.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the kernel is matmul
+shaped, so we tile it exactly like a dense matmul — (TILE, TILE) blocks of
+``a``, ``b`` and ``out`` staged through VMEM by BlockSpec, with a grid over
+(i, j, k) and a min-accumulator that lives in the output block across the
+k dimension.  min/add have no MXU path, so the arithmetic runs on the VPU;
+the win versus the scalar Floyd-Warshall the paper used is the dense,
+vector-parallel data layout.
+
+CPU note: lowered with ``interpret=True`` — real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile edge.  32 keeps the three live blocks (a, b, out) at
+# 3 * 32*32*4 B = 12 KiB — far under VMEM, and a multiple of the 8x128 VPU
+# lane shape once padded by Mosaic.
+DEFAULT_TILE = 32
+
+# Large-but-finite stand-in for +inf inside kernels.  Using a finite value
+# keeps ``inf + inf`` from producing NaNs under -ffast-math-style fusions
+# and survives round-trips through bf16 if the caller down-casts.  Kept as a
+# plain python float: jax Arrays would be captured as pallas constants.
+BIG = 1e18
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] = min(o[i,j], min_k a[i,k] + b[k,j])."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref[...], BIG)
+
+    a = a_ref[...]  # (T, T)
+    b = b_ref[...]  # (T, T)
+    # Broadcast to (T, T, T): s[i, k, j] = a[i, k] + b[k, j].  For T=32 this
+    # is 128 KiB of VMEM scratch — well within budget and lets the reduction
+    # run as one vectorized min instead of a scalar k-loop.
+    s = a[:, :, None] + b[None, :, :]
+    o_ref[...] = jnp.minimum(o_ref[...], jnp.min(s, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def minplus(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jax.Array:
+    """Min-plus product of two square f32 matrices via the Pallas kernel.
+
+    Both matrices must be square with identical shape, and the edge must be
+    divisible by ``tile`` (callers pad with ``BIG``).
+    """
+    n = a.shape[0]
+    assert a.shape == (n, n) and b.shape == (n, n), (a.shape, b.shape)
+    assert n % tile == 0, f"n={n} not divisible by tile={tile}"
+    grid = (n // tile, n // tile, n // tile)
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile, tile), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,106 @@
+"""Pure-jnp / pure-python oracles for the L1 kernels.
+
+These are the correctness ground truth: deliberately simple, loop-level
+implementations with no Pallas, no tiling, no tricks.  pytest compares every
+kernel and every L2 graph against these.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+BIG = 1e18
+SELF_COST = 0.75  # placement self-cost factor; must match model.SELF_COST
+
+
+def minplus_ref(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """out[i,j] = min_k a[i,k] + b[k,j], dense O(n^3) broadcast."""
+    return np.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def apsp_ref(w: np.ndarray) -> np.ndarray:
+    """Floyd-Warshall all-pairs shortest paths (the textbook triple loop,
+    vectorized per-k).  ``w`` is a dense weight matrix with BIG for missing
+    edges and 0 on the diagonal."""
+    d = w.copy().astype(np.float64)
+    n = d.shape[0]
+    for k in range(n):
+        d = np.minimum(d, d[:, k : k + 1] + d[k : k + 1, :])
+    return d
+
+
+def fair_share_ref(
+    cap: np.ndarray, routing: np.ndarray, active: np.ndarray
+) -> np.ndarray:
+    """Exact max-min fair allocation by progressive filling.
+
+    cap: (L,) link capacities; routing: (L, F) 0/1 flow-over-link matrix;
+    active: (F,) 0/1 mask of flows requesting bandwidth.
+    Returns rate: (F,) the max-min fair rates (0 for inactive flows and for
+    active flows that cross no link).
+    """
+    l, f = routing.shape
+    rate = np.zeros(f, dtype=np.float64)
+    frozen = active < 0.5
+    # A flow crossing no links can never be frozen by a bottleneck: freeze
+    # it at rate 0 up front.
+    frozen |= routing.sum(axis=0) < 0.5
+    cap = cap.astype(np.float64)
+
+    for _ in range(f):  # at most F bottleneck levels
+        unfrozen = ~frozen
+        if not unfrozen.any():
+            break
+        # Residual capacity counts *all* current rates: unfrozen flows'
+        # already-accumulated allocation consumes capacity too.
+        used = routing @ rate
+        nun = routing @ unfrozen.astype(np.float64)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            share = np.where(nun > 0, np.maximum(cap - used, 0.0) / nun, BIG)
+        # Bottleneck link: smallest share among links with unfrozen flows.
+        contended = nun > 0
+        if not contended.any():
+            break
+        b = share[contended].min()
+        bottleneck_links = contended & (share <= b + 1e-12)
+        # Every unfrozen flow gets at least b more; flows crossing a
+        # bottleneck link are now frozen at exactly rate+b.
+        rate[unfrozen] += b
+        hits_bottleneck = (routing[bottleneck_links].sum(axis=0) > 0) & unfrozen
+        frozen |= hits_bottleneck
+    rate[active < 0.5] = 0.0
+    return rate
+
+
+def placement_scores_ref(
+    perf: np.ndarray, valid: np.ndarray, member: np.ndarray
+) -> np.ndarray:
+    """Reference for the paper's §4.1 scheduling pipeline.
+
+    perf: (N,) per-agent performance cost (lower = better); valid: (N,) 0/1
+    liveness mask; member: (N,) 0/1 mask of agents already in the run.
+    Returns scores (N,): mean shortest-path cost from each valid agent to the
+    run members (or to all valid agents when the run is empty); BIG for
+    invalid agents.  argmin(scores) is the placement choice.  The post-APSP
+    diagonal is each agent's own perf cost (see model.placement_scores).
+    """
+    n = perf.shape[0]
+    w = np.full((n, n), BIG)
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                w[i, j] = 0.0
+            elif valid[i] > 0.5 and valid[j] > 0.5:
+                w[i, j] = 0.5 * (perf[i] + perf[j])
+    d = apsp_ref(w)
+    for i in range(n):
+        d[i, i] = SELF_COST * perf[i]
+    mem = member * valid
+    # Empty run: fall back to "distance to every valid agent", which reduces
+    # to (roughly) picking the lowest-cost agent.
+    target = mem if mem.sum() > 0.5 else valid.astype(np.float64)
+    scores = np.full(n, BIG)
+    for i in range(n):
+        if valid[i] > 0.5:
+            scores[i] = float((d[i] * target).sum() / target.sum())
+    return scores

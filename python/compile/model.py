@@ -1,0 +1,159 @@
+"""L2: the JAX compute graphs lowered to HLO artifacts for the Rust runtime.
+
+Two graphs, both calling the L1 Pallas kernels:
+
+* ``placement_scores`` — the paper's §4.1 scheduling pipeline: pairwise
+  performance-mean edge weights -> all-pairs shortest paths (repeated
+  min-plus squaring of the agent graph, kernel: ``kernels.minplus``) ->
+  mean path cost to the run's member agents -> per-agent score.
+  ``argmin(scores)`` on the Rust side is the placement decision.
+
+* ``fair_share`` — the network model's max-min fair bandwidth allocation
+  (progressive filling), iterating the ``kernels.fairshare`` sweep with
+  bottleneck freezing under ``lax.scan``.  Re-run by the Rust network
+  component on every transfer start/finish ("interrupt" scheme, §4.2).
+
+Shapes are fixed at AOT time (PJRT artifacts are static); the Rust side pads
+with the BIG sentinel / zero masks.  Python never runs at simulation time.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.fairshare import fair_share_sweep
+from .kernels.minplus import BIG, minplus
+
+# Fixed AOT shapes (mirrored by rust/src/runtime/mod.rs).
+N_AGENTS = 64  # placement graph order
+N_LINKS = 64  # fair-share links
+N_FLOWS = 128  # fair-share flows
+FS_ITERS = 32  # progressive-filling rounds baked into the artifact
+# Self-cost factor for the placement diagonal: a member agent's "distance to
+# itself" is SELF_COST * its own perf cost.  < 1 favours clustering (the
+# paper's minimum-cluster claim); the 0.75 setting spills to a fresh agent
+# once a member carries about twice the load of the alternatives — the
+# balance §4.1 describes ("sometimes it is best to schedule two simulation
+# jobs for execution on different workstations").
+SELF_COST = 0.75
+
+
+# ---------------------------------------------------------------------------
+# APSP + placement
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apsp(w: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """All-pairs shortest paths by repeated min-plus squaring.
+
+    ``w``: (N, N) f32 weight matrix, BIG for non-edges, 0 diagonal.  Paths
+    have at most N-1 hops, and squaring doubles the admissible hop count, so
+    ceil(log2(N)) squarings converge.
+    """
+    n = w.shape[0]
+    steps = max(1, math.ceil(math.log2(n)))
+
+    def body(d, _):
+        return minplus(d, d, interpret=interpret), None
+
+    d, _ = lax.scan(body, w, None, length=steps)
+    return d
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def placement_scores(
+    perf: jax.Array,
+    valid: jax.Array,
+    member: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Paper §4.1: score each agent for hosting the next simulation job.
+
+    perf:   (N,) performance cost per agent (lower = better; built by the
+            monitor from CPU load, memory pressure, LP count, RTT).
+    valid:  (N,) 0/1 liveness mask (padding + dead agents are 0).
+    member: (N,) 0/1 mask of agents already hosting LPs of this run.
+
+    Returns (N,) scores; argmin is the preferred agent.  Invalid agents get
+    BIG.  When the run has no members yet, the mean is taken over all valid
+    agents instead (bootstrap case).
+
+    Self-distance convention: after the APSP, the diagonal is replaced by
+    each agent's own performance cost.  With a literal d[i,i]=0 a member
+    agent would win every placement forever (its mean distance to the run
+    includes a free self-term), defeating the load balancing the paper
+    claims; charging the agent's own cost for "hosting next to itself"
+    keeps the clustering behaviour *and* lets a loaded member lose to a
+    cheap neighbour once it carries ~2x their load (see SELF_COST).
+    """
+    n = perf.shape[0]
+    vv = valid[:, None] * valid[None, :]
+    w = 0.5 * (perf[:, None] + perf[None, :])
+    w = jnp.where(vv > 0.5, w, BIG)
+    eye = jnp.eye(n, dtype=w.dtype)
+    w = w * (1.0 - eye)  # zero diagonal for a correct APSP
+
+    d = apsp(w, interpret=interpret)
+    d = d * (1.0 - eye) + jnp.diag(SELF_COST * perf)  # self-cost diagonal
+
+    mem = member * valid
+    has_members = jnp.sum(mem) > 0.5
+    target = jnp.where(has_members, mem, valid)
+    denom = jnp.maximum(jnp.sum(target), 1.0)
+    scores = jnp.sum(d * target[None, :], axis=1) / denom
+    return jnp.where(valid > 0.5, scores, BIG)
+
+
+# ---------------------------------------------------------------------------
+# Max-min fair share
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def fair_share(
+    cap: jax.Array,
+    routing: jax.Array,
+    active: jax.Array,
+    *,
+    iters: int = FS_ITERS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Max-min fair rates by progressive filling (matches ref.fair_share_ref).
+
+    cap: (L,) capacities; routing: (L, F) 0/1; active: (F,) 0/1.
+    Each round: one kernel sweep gives each link's equal split of residual
+    capacity and each unfrozen flow's bottleneck increment; the global
+    minimum increment is granted to all unfrozen flows and flows crossing a
+    saturated (bottleneck) link freeze.  Rounds after convergence are no-ops,
+    so a fixed ``iters`` is safe as long as iters >= #bottleneck levels.
+    """
+    l, f = routing.shape
+    linkless = jnp.sum(routing, axis=0) < 0.5
+    rate0 = jnp.zeros((f,), jnp.float32)
+    frozen0 = jnp.where((active < 0.5) | linkless, 1.0, 0.0)
+
+    def body(carry, _):
+        rate, frozen = carry
+        inc, share = fair_share_sweep(cap, routing, rate, frozen)
+        unfrozen = 1.0 - frozen
+        any_unfrozen = jnp.sum(unfrozen) > 0.5
+        # Global bottleneck increment: min over unfrozen flows.
+        b = jnp.min(jnp.where(unfrozen > 0.5, inc, BIG))
+        b = jnp.where(any_unfrozen & (b < BIG * 0.5), b, 0.0)
+        rate = rate + b * unfrozen
+        # Links saturated at this level freeze every unfrozen flow they carry.
+        nun = jnp.sum(routing * unfrozen[None, :], axis=1)
+        bottleneck = (nun > 0.5) & (share <= b * (1.0 + 1e-6) + 1e-9)
+        hits = jnp.sum(routing * bottleneck[:, None].astype(jnp.float32), axis=0) > 0.5
+        frozen = jnp.where(hits & (unfrozen > 0.5), 1.0, frozen)
+        return (rate, frozen), None
+
+    (rate, _), _ = lax.scan(body, (rate0, frozen0), None, length=iters)
+    return rate * active

@@ -1,0 +1,295 @@
+"""L1 kernel correctness: Pallas kernels vs pure oracles (ref.py).
+
+hypothesis sweeps shapes/values; every test asserts allclose against the
+reference implementation.  This is the core correctness signal for the
+compute layer — the Rust runtime executes exactly these graphs via PJRT.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fairshare import fair_share_sweep
+from compile.kernels.minplus import BIG, minplus
+
+RNG = np.random.default_rng(0)
+
+
+def rand_weights(n: int, density: float = 0.7, seed: int = 0) -> np.ndarray:
+    """Random non-negative weight matrix with BIG non-edges, 0 diagonal."""
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.1, 100.0, size=(n, n)).astype(np.float32)
+    mask = rng.uniform(size=(n, n)) < density
+    w = np.where(mask, w, np.float32(ref.BIG))
+    np.fill_diagonal(w, 0.0)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# min-plus kernel
+# ---------------------------------------------------------------------------
+
+
+class TestMinplus:
+    @pytest.mark.parametrize("n,tile", [(32, 32), (64, 32), (64, 16), (128, 32)])
+    def test_matches_ref(self, n, tile):
+        a = RNG.uniform(0, 50, (n, n)).astype(np.float32)
+        b = RNG.uniform(0, 50, (n, n)).astype(np.float32)
+        got = np.asarray(minplus(a, b, tile=tile))
+        want = ref.minplus_ref(a, b)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_identity(self):
+        """min-plus with the tropical identity (0 diag, BIG off-diag) is a no-op."""
+        n = 32
+        a = rand_weights(n, seed=3)
+        ident = np.full((n, n), np.float32(BIG))
+        np.fill_diagonal(ident, 0.0)
+        got = np.asarray(minplus(a, ident))
+        np.testing.assert_allclose(got, a, rtol=1e-6)
+
+    def test_big_saturation(self):
+        """All-BIG inputs stay ~BIG (no inf/NaN)."""
+        n = 32
+        a = np.full((n, n), np.float32(BIG))
+        got = np.asarray(minplus(a, a))
+        assert np.all(np.isfinite(got))
+        assert np.all(got >= BIG * 0.99)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.sampled_from([32, 64]),
+        scale=st.floats(0.1, 1e4),
+    )
+    def test_hypothesis_random(self, seed, n, scale):
+        rng = np.random.default_rng(seed)
+        a = (rng.uniform(0, 1, (n, n)) * scale).astype(np.float32)
+        b = (rng.uniform(0, 1, (n, n)) * scale).astype(np.float32)
+        got = np.asarray(minplus(a, b))
+        want = ref.minplus_ref(a, b)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_rejects_nonsquare(self):
+        a = np.zeros((32, 64), np.float32)
+        with pytest.raises(AssertionError):
+            minplus(a, a)
+
+    def test_rejects_bad_tile(self):
+        a = np.zeros((48, 48), np.float32)
+        with pytest.raises(AssertionError):
+            minplus(a, a, tile=32)
+
+
+# ---------------------------------------------------------------------------
+# fair-share sweep kernel
+# ---------------------------------------------------------------------------
+
+
+def rand_instance(l, f, seed, density=0.3):
+    rng = np.random.default_rng(seed)
+    cap = rng.uniform(1.0, 100.0, l).astype(np.float32)
+    routing = (rng.uniform(size=(l, f)) < density).astype(np.float32)
+    active = (rng.uniform(size=f) < 0.8).astype(np.float32)
+    return cap, routing, active
+
+
+class TestFairShareSweep:
+    def test_single_link_equal_split(self):
+        """3 flows over one link of capacity 30 -> each sees share 10."""
+        cap = np.array([30.0], np.float32)
+        routing = np.ones((1, 3), np.float32)
+        rate = np.zeros(3, np.float32)
+        frozen = np.zeros(3, np.float32)
+        inc, share = fair_share_sweep(cap, routing, rate, frozen)
+        np.testing.assert_allclose(np.asarray(share), [10.0])
+        np.testing.assert_allclose(np.asarray(inc), [10.0, 10.0, 10.0])
+
+    def test_frozen_consumes_capacity(self):
+        """A frozen flow's rate is subtracted before the split."""
+        cap = np.array([30.0], np.float32)
+        routing = np.ones((1, 3), np.float32)
+        rate = np.array([12.0, 0.0, 0.0], np.float32)
+        frozen = np.array([1.0, 0.0, 0.0], np.float32)
+        inc, share = fair_share_sweep(cap, routing, rate, frozen)
+        np.testing.assert_allclose(np.asarray(share), [9.0])  # (30-12)/2
+
+    def test_linkless_flow_gets_big(self):
+        cap = np.array([10.0], np.float32)
+        routing = np.array([[1.0, 0.0]], np.float32)
+        inc, _ = fair_share_sweep(cap, routing, np.zeros(2, np.float32), np.zeros(2, np.float32))
+        assert np.asarray(inc)[1] >= 1e17
+
+    def test_bottleneck_is_min_over_links(self):
+        """Flow crossing links with shares 5 and 2 gets inc 2."""
+        cap = np.array([5.0, 2.0], np.float32)
+        routing = np.array([[1.0], [1.0]], np.float32)
+        inc, _ = fair_share_sweep(cap, routing, np.zeros(1, np.float32), np.zeros(1, np.float32))
+        np.testing.assert_allclose(np.asarray(inc), [2.0])
+
+
+# ---------------------------------------------------------------------------
+# L2 graphs vs oracles
+# ---------------------------------------------------------------------------
+
+
+class TestApsp:
+    @pytest.mark.parametrize("n,density,seed", [(32, 0.2, 1), (64, 0.5, 2), (64, 0.9, 3)])
+    def test_matches_floyd_warshall(self, n, density, seed):
+        from compile.model import apsp
+
+        w = rand_weights(n, density, seed)
+        got = np.asarray(apsp(w))
+        want = ref.apsp_ref(w)
+        # Compare only reachable pairs exactly; unreachable stay >= BIG/2.
+        reach = want < ref.BIG / 2
+        np.testing.assert_allclose(got[reach], want[reach], rtol=1e-5)
+        assert np.all(got[~reach] >= ref.BIG * 0.49)
+
+    def test_triangle(self):
+        from compile.model import apsp
+
+        w = np.full((32, 32), np.float32(ref.BIG))
+        np.fill_diagonal(w, 0.0)
+        w[0, 1], w[1, 2], w[0, 2] = 1.0, 1.0, 5.0
+        d = np.asarray(apsp(w))
+        assert d[0, 2] == pytest.approx(2.0)  # detour beats direct edge
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), density=st.floats(0.05, 1.0))
+    def test_hypothesis(self, seed, density):
+        from compile.model import apsp
+
+        w = rand_weights(64, density, seed)
+        got = np.asarray(apsp(w))
+        want = ref.apsp_ref(w)
+        reach = want < ref.BIG / 2
+        np.testing.assert_allclose(got[reach], want[reach], rtol=1e-5)
+
+
+class TestFairShare:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_matches_progressive_filling(self, seed):
+        from compile.model import fair_share
+
+        cap, routing, active = rand_instance(16, 24, seed)
+        got = np.asarray(fair_share(cap, routing, active, iters=24))
+        want = ref.fair_share_ref(cap, routing, active)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_two_level_bottleneck(self):
+        """Classic example: link0 cap 6 shared by f0,f1; link1 cap 10 by f1,f2.
+        Max-min: f0=3, f1=3, f2=7."""
+        from compile.model import fair_share
+
+        cap = np.array([6.0, 10.0], np.float32)
+        routing = np.array([[1, 1, 0], [0, 1, 1]], np.float32)
+        active = np.ones(3, np.float32)
+        got = np.asarray(fair_share(cap, routing, active, iters=8))
+        np.testing.assert_allclose(got, [3.0, 3.0, 7.0], rtol=1e-5)
+
+    def test_inactive_flows_zero(self):
+        from compile.model import fair_share
+
+        cap = np.array([10.0], np.float32)
+        routing = np.ones((1, 4), np.float32)
+        active = np.array([1.0, 0.0, 1.0, 0.0], np.float32)
+        got = np.asarray(fair_share(cap, routing, active, iters=8))
+        np.testing.assert_allclose(got, [5.0, 0.0, 5.0, 0.0], rtol=1e-5)
+
+    def test_capacity_conservation(self):
+        """Total allocated on each link never exceeds its capacity."""
+        from compile.model import fair_share
+
+        for seed in range(4):
+            cap, routing, active = rand_instance(12, 20, seed, density=0.4)
+            rate = np.asarray(fair_share(cap, routing, active, iters=20)).astype(np.float64)
+            used = routing @ rate
+            assert np.all(used <= cap + 1e-3), (seed, used - cap)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis(self, seed):
+        from compile.model import fair_share
+
+        cap, routing, active = rand_instance(8, 12, seed, density=0.35)
+        got = np.asarray(fair_share(cap, routing, active, iters=12))
+        want = ref.fair_share_ref(cap, routing, active)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestPlacement:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_matches_ref(self, seed):
+        from compile.model import placement_scores
+
+        rng = np.random.default_rng(seed)
+        n = 64
+        perf = rng.uniform(0.1, 10.0, n).astype(np.float32)
+        valid = (rng.uniform(size=n) < 0.8).astype(np.float32)
+        member = ((rng.uniform(size=n) < 0.3) * valid).astype(np.float32)
+        got = np.asarray(placement_scores(perf, valid, member))
+        want = ref.placement_scores_ref(perf, valid, member)
+        ok = want < ref.BIG / 2
+        np.testing.assert_allclose(got[ok], want[ok], rtol=1e-4)
+        assert np.all(got[~ok] >= ref.BIG * 0.49)
+
+    def test_lightly_loaded_member_keeps_work(self):
+        """Clustering: a lightly loaded member beats even a cheap outsider."""
+        from compile.model import placement_scores
+
+        n = 64
+        perf = np.full(n, 5.0, np.float32)
+        perf[3] = 0.5  # cheap agent
+        perf[7] = 0.6  # cheap member
+        valid = np.ones(n, np.float32)
+        member = np.zeros(n, np.float32)
+        member[7] = 1.0
+        scores = np.asarray(placement_scores(perf, valid, member))
+        assert scores[7] == pytest.approx(0.45, rel=1e-4)  # 0.75 * 0.6
+        assert scores[3] == pytest.approx(0.55, rel=1e-4)  # (0.5+0.6)/2
+        assert np.argmin(scores) == 7
+
+    def test_overloaded_member_spills_to_cheap_agent(self):
+        """Balancing: once the member is heavily loaded, a cheap agent wins."""
+        from compile.model import placement_scores
+
+        n = 64
+        perf = np.full(n, 5.0, np.float32)
+        perf[3] = 0.5
+        perf[7] = 5.0  # member now as loaded as the rest
+        valid = np.ones(n, np.float32)
+        member = np.zeros(n, np.float32)
+        member[7] = 1.0
+        scores = np.asarray(placement_scores(perf, valid, member))
+        assert scores[7] == pytest.approx(3.75, rel=1e-4)  # 0.75 * 5
+        assert scores[3] == pytest.approx(2.75, rel=1e-4)  # (0.5+5)/2
+        assert np.argmin(scores) == 3
+
+    def test_empty_run_bootstrap(self):
+        """No members yet: lowest-cost agent should win."""
+        from compile.model import placement_scores
+
+        n = 64
+        rng = np.random.default_rng(9)
+        perf = rng.uniform(1.0, 10.0, n).astype(np.float32)
+        perf[11] = 0.01
+        valid = np.ones(n, np.float32)
+        member = np.zeros(n, np.float32)
+        scores = np.asarray(placement_scores(perf, valid, member))
+        assert np.argmin(scores) == 11
+
+    def test_invalid_agents_excluded(self):
+        from compile.model import placement_scores
+
+        n = 64
+        perf = np.ones(n, np.float32)
+        valid = np.ones(n, np.float32)
+        valid[5] = 0.0
+        member = np.zeros(n, np.float32)
+        member[1] = 1.0
+        scores = np.asarray(placement_scores(perf, valid, member))
+        assert scores[5] >= 1e17

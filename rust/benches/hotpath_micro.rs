@@ -1,0 +1,172 @@
+//! Hot-path microbenchmarks feeding EXPERIMENTS.md §Perf.
+//!
+//! * engine step throughput (events/s) on a pure local ping chain,
+//! * PJRT vs native backend latency for the two AOT graphs (placement
+//!   scoring and fair-share) — the L1/L2-vs-L3 boundary cost,
+//! * replicated-space write/read ops,
+//! * wire encode/decode of a full event frame (TCP hot path).
+//!
+//! Run: `cargo bench --bench hotpath_micro`
+
+use std::path::Path;
+use std::time::Instant;
+
+use dsim::bench::report_row;
+use dsim::config::BackendKind;
+use dsim::engine::{Engine, Event, LogicalProcess, LpApi, SimTime, StepOutcome, SyncProtocol};
+use dsim::runtime::ComputeBackend;
+use dsim::space::Space;
+use dsim::transport::Wire;
+use dsim::util::json::Json;
+use dsim::util::{AgentId, ContextId, LpId};
+
+struct Hopper {
+    next: LpId,
+}
+#[derive(Clone, Debug)]
+struct Hop(u64);
+impl LogicalProcess<Hop> for Hopper {
+    fn handle(&mut self, ev: &Event<Hop>, api: &mut LpApi<Hop>) {
+        if ev.payload.0 > 0 {
+            api.send_after(0.001, self.next, Hop(ev.payload.0 - 1));
+        }
+    }
+}
+
+fn bench_engine_steps() {
+    const HOPS: u64 = 200_000;
+    let mut e: Engine<Hop> = Engine::new(
+        AgentId(1),
+        ContextId(1),
+        &[AgentId(1)],
+        0.01,
+        SyncProtocol::NullMessagesByDemand,
+    );
+    e.add_lp(LpId(1), Box::new(Hopper { next: LpId(2) }));
+    e.add_lp(LpId(2), Box::new(Hopper { next: LpId(1) }));
+    e.schedule_initial(SimTime::ZERO, LpId(1), Hop(HOPS));
+    let t = Instant::now();
+    let mut n = 0u64;
+    loop {
+        match e.step() {
+            StepOutcome::Processed(k) => n += k as u64,
+            StepOutcome::Idle => break,
+            StepOutcome::Blocked(_) => unreachable!(),
+        }
+    }
+    let dt = t.elapsed().as_secs_f64();
+    report_row(
+        "hotpath",
+        &[
+            ("path", "engine_step".into()),
+            ("events", n.to_string()),
+            ("wall_s", format!("{dt:.4}")),
+            ("events_per_s", format!("{:.0}", n as f64 / dt)),
+        ],
+    );
+}
+
+fn bench_backend(name: &str, b: &ComputeBackend) {
+    // Placement: N=32 live agents.
+    let n = 32;
+    let perf: Vec<f32> = (0..n).map(|i| 1.0 + (i as f32) * 0.1).collect();
+    let valid = vec![1.0f32; n];
+    let mut member = vec![0.0f32; n];
+    member[3] = 1.0;
+    let t = Instant::now();
+    let iters = 100;
+    for _ in 0..iters {
+        b.placement_scores(&perf, &valid, &member).unwrap();
+    }
+    let per = t.elapsed().as_secs_f64() / iters as f64;
+    report_row(
+        "hotpath",
+        &[
+            ("path", format!("placement_{name}")),
+            ("per_call_us", format!("{:.1}", per * 1e6)),
+        ],
+    );
+
+    // Fair share: 16 links x 64 flows.
+    let l = 16;
+    let f = 64;
+    let cap = vec![100.0f32; l];
+    let routing: Vec<f32> = (0..l * f).map(|i| ((i * 7) % 3 == 0) as u32 as f32).collect();
+    let active = vec![1.0f32; f];
+    let t = Instant::now();
+    for _ in 0..iters {
+        b.fair_share(&cap, &routing, &active).unwrap();
+    }
+    let per = t.elapsed().as_secs_f64() / iters as f64;
+    report_row(
+        "hotpath",
+        &[
+            ("path", format!("fairshare_{name}")),
+            ("per_call_us", format!("{:.1}", per * 1e6)),
+        ],
+    );
+}
+
+fn bench_space() {
+    let s = Space::new(AgentId(1));
+    let iters = 100_000;
+    let t = Instant::now();
+    for i in 0..iters {
+        s.write(&format!("cpu/{}", i % 512), Json::num(i as f64));
+    }
+    let w = t.elapsed().as_secs_f64() / iters as f64;
+    let t = Instant::now();
+    for i in 0..iters {
+        let _ = s.read(&format!("cpu/{}", i % 512));
+    }
+    let r = t.elapsed().as_secs_f64() / iters as f64;
+    report_row(
+        "hotpath",
+        &[
+            ("path", "space".into()),
+            ("write_ns", format!("{:.0}", w * 1e9)),
+            ("read_ns", format!("{:.0}", r * 1e9)),
+        ],
+    );
+}
+
+fn bench_wire() {
+    use dsim::model::{JobSpec, Payload};
+    let p = Payload::JobSubmit(JobSpec {
+        id: 42,
+        cpu_seconds: 3.25,
+        dataset: Some("ds17".into()),
+        center: 3,
+        notify: LpId(9),
+    });
+    let iters = 50_000;
+    let t = Instant::now();
+    let mut bytes = 0usize;
+    for _ in 0..iters {
+        let text = p.to_json().to_string();
+        bytes = text.len();
+        let j = Json::parse(&text).unwrap();
+        let _ = Payload::from_json(&j).unwrap();
+    }
+    let per = t.elapsed().as_secs_f64() / iters as f64;
+    report_row(
+        "hotpath",
+        &[
+            ("path", "wire_roundtrip".into()),
+            ("per_msg_us", format!("{:.2}", per * 1e6)),
+            ("frame_bytes", bytes.to_string()),
+        ],
+    );
+}
+
+fn main() {
+    println!("# hot-path microbenchmarks");
+    bench_engine_steps();
+    bench_backend("native", &ComputeBackend::Native);
+    match ComputeBackend::load(BackendKind::Pjrt, Path::new("artifacts")) {
+        Ok(b) => bench_backend("pjrt", &b),
+        Err(e) => println!("# skipping pjrt backend: {e:#}"),
+    }
+    bench_space();
+    bench_wire();
+}

@@ -1,0 +1,68 @@
+//! CLAIM-SCALE — paper §1/§3.1: "simulated systems of just a few thousands
+//! computing elements ... will quickly exhaust the computing resources in
+//! any reasonable sized computer workstation"; distribution is the paper's
+//! answer.
+//!
+//! Runs a fixed large T0/T1 model on 1/2/4/8 agents and reports wall-clock,
+//! per-agent peak queue length (the memory-pressure proxy the paper
+//! discusses) and sync overhead — the distribution trade-off curve.
+//!
+//! Run: `cargo bench --bench scaling_agents`
+
+use dsim::bench::{fmt_s, report_row, Bench};
+use dsim::config::{PlacementPolicy, WorkloadConfig};
+use dsim::coordinator::Deployment;
+use dsim::workload;
+
+fn big_model() -> WorkloadConfig {
+    WorkloadConfig {
+        name: "t0t1".into(),
+        centers: 8,
+        cpus_per_center: 8,
+        jobs_per_center: 64,
+        wan_bandwidth_mbps: 622.0,
+        transfers_per_center: 64,
+        transfer_mb: 300.0,
+        seed: 3,
+        ..WorkloadConfig::default()
+    }
+}
+
+fn main() {
+    println!("# CLAIM-SCALE: fixed large model, varying agent count");
+    for agents in [1usize, 2, 4, 8] {
+        let mut events = 0u64;
+        let mut maxq = 0usize;
+        let mut sync = 0u64;
+        let mut remote = 0u64;
+        let times = Bench::new(&format!("scale/a{agents}"))
+            .warmup(1)
+            .iters(3)
+            .run(|| {
+                // Round-robin placement: the scaling question assumes the
+                // model is spread over the fleet (perf-value would cluster).
+                let report = Deployment::in_process(agents)
+                    .placement(PlacementPolicy::RoundRobin)
+                    .run(workload::generate(&big_model()))
+                    .expect("run failed");
+                events = report.events_processed;
+                maxq = report.max_queue_len;
+                sync = report.sync_messages;
+                remote = report.remote_events;
+            });
+        let med = Bench::summary(&times).map(|s| s.p50).unwrap_or(0.0);
+        report_row(
+            "scaling_agents",
+            &[
+                ("agents", agents.to_string()),
+                ("wall_s", fmt_s(med)),
+                ("events", events.to_string()),
+                ("max_queue_per_agent", maxq.to_string()),
+                ("sync_msgs", sync.to_string()),
+                ("remote_events", remote.to_string()),
+            ],
+        );
+    }
+    println!("# shape check: per-agent max queue (state pressure) shrinks as agents grow;");
+    println!("# sync overhead grows — the distribution trade-off the paper motivates");
+}

@@ -1,0 +1,77 @@
+//! CLAIM-SCHED — paper §4.1: the performance-value scheduler "tries to
+//! group the logical processes belonging to the same simulation run into a
+//! minimum cluster of nodes, limiting in this way the number of messages
+//! that are exchanged between the logical processes".
+//!
+//! Places the same scenario with the paper scheduler, round-robin and
+//! random on a 16-agent fleet and reports remote event counts, sync
+//! traffic, placement spread and wall-clock.
+//!
+//! Run: `cargo bench --bench scheduler_placement`
+
+use std::collections::BTreeSet;
+
+use dsim::bench::{fmt_s, report_row, Bench};
+use dsim::config::{PlacementPolicy, WorkloadConfig};
+use dsim::coordinator::Deployment;
+use dsim::workload;
+
+fn cfg() -> WorkloadConfig {
+    WorkloadConfig {
+        name: "t0t1".into(),
+        centers: 6,
+        cpus_per_center: 4,
+        jobs_per_center: 32,
+        wan_bandwidth_mbps: 622.0,
+        transfers_per_center: 32,
+        transfer_mb: 250.0,
+        seed: 5,
+        ..WorkloadConfig::default()
+    }
+}
+
+fn main() {
+    println!("# CLAIM-SCHED: placement policy comparison (16 agents)");
+    for (name, policy) in [
+        ("perf-value", PlacementPolicy::PerfValue),
+        ("round-robin", PlacementPolicy::RoundRobin),
+        ("random", PlacementPolicy::Random),
+    ] {
+        let mut remote = 0u64;
+        let mut sync = 0u64;
+        let mut spread = 0usize;
+        let mut events = 0u64;
+        let times = Bench::new(&format!("placement/{name}"))
+            .warmup(1)
+            .iters(3)
+            .run(|| {
+                let report = Deployment::in_process(16)
+                    .placement(policy)
+                    .seed(5)
+                    .run(workload::generate(&cfg()))
+                    .expect("run failed");
+                remote = report.remote_events;
+                sync = report.sync_messages;
+                events = report.events_processed;
+                spread = report
+                    .placements
+                    .iter()
+                    .map(|(_, a)| *a)
+                    .collect::<BTreeSet<_>>()
+                    .len();
+            });
+        let med = Bench::summary(&times).map(|s| s.p50).unwrap_or(0.0);
+        report_row(
+            "scheduler_placement",
+            &[
+                ("policy", name.to_string()),
+                ("wall_s", fmt_s(med)),
+                ("remote_events", remote.to_string()),
+                ("sync_msgs", sync.to_string()),
+                ("events", events.to_string()),
+                ("agents_used", spread.to_string()),
+            ],
+        );
+    }
+    println!("# shape check: perf-value uses fewer agents and fewer remote events than baselines");
+}

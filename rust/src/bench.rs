@@ -1,0 +1,94 @@
+//! Tiny measurement harness for the `harness = false` benches (the offline
+//! snapshot has no criterion).
+//!
+//! [`Bench`] runs a closure with warmup + repeated timed iterations and
+//! prints a criterion-like one-line summary (median, mean, min/max).  The
+//! paper-reproduction benches additionally print labeled data rows
+//! (`row!`-style via [`Bench::report_row`]) that EXPERIMENTS.md quotes
+//! directly.
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::{summarize, Summary};
+
+/// One benchmark context.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench {
+            name: name.to_string(),
+            warmup: 1,
+            iters: 5,
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.iters = n;
+        self
+    }
+
+    /// Run `f` (warmup + timed); returns the per-iteration wall times and
+    /// prints a summary line.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Vec<Duration> {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        let secs: Vec<f64> = times.iter().map(|d| d.as_secs_f64()).collect();
+        if let Some(s) = summarize(&secs) {
+            println!(
+                "bench {:<40} median {:>10.4}s  mean {:>10.4}s  min {:>10.4}s  max {:>10.4}s  (n={})",
+                self.name, s.p50, s.mean, s.min, s.max, s.n
+            );
+        }
+        times
+    }
+
+    /// Summary of a run's timings in seconds.
+    pub fn summary(times: &[Duration]) -> Option<Summary> {
+        summarize(&times.iter().map(|d| d.as_secs_f64()).collect::<Vec<_>>())
+    }
+}
+
+/// Print a labeled data row in a stable, grep-able format:
+/// `ROW <table> | k1=v1 k2=v2 ...`
+pub fn report_row(table: &str, fields: &[(&str, String)]) {
+    let body: Vec<String> = fields.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    println!("ROW {table} | {}", body.join(" "));
+}
+
+/// Format seconds with fixed precision for rows.
+pub fn fmt_s(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0;
+        let times = Bench::new("noop").warmup(2).iters(3).run(|| {
+            count += 1;
+        });
+        assert_eq!(count, 5);
+        assert_eq!(times.len(), 3);
+        assert!(Bench::summary(&times).is_some());
+    }
+}

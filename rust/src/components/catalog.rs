@@ -1,0 +1,178 @@
+//! Metadata catalog component (paper §4.2: "the distributed simulation
+//! framework should provide a series of components specific to Grid
+//! simulations, such as metadata catalog ...").
+//!
+//! A global dataset -> replica-locations registry.  The catalog is its own
+//! affinity group (it serves every center), so all interactions carry WAN
+//! latency — queries and answers are lookahead-delayed events.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::engine::{Event, LogicalProcess, LpApi};
+use crate::model::Payload;
+use crate::util::json::Json;
+
+/// The metadata catalog logical process.
+pub struct CatalogLp {
+    /// dataset -> (size_mb, replica centers).
+    entries: BTreeMap<String, (f64, Vec<usize>)>,
+    /// Reply latency (WAN hop back to the requester).
+    latency_s: f64,
+    pub queries: u64,
+}
+
+impl CatalogLp {
+    pub fn new(latency_s: f64) -> CatalogLp {
+        CatalogLp {
+            entries: BTreeMap::new(),
+            latency_s,
+            queries: 0,
+        }
+    }
+
+    pub fn from_json(_j: &Json, lookahead: f64) -> Result<CatalogLp> {
+        Ok(CatalogLp::new(lookahead))
+    }
+
+    pub fn replicas(&self, dataset: &str) -> Option<&Vec<usize>> {
+        self.entries.get(dataset).map(|(_, c)| c)
+    }
+}
+
+impl LogicalProcess<Payload> for CatalogLp {
+    fn handle(&mut self, event: &Event<Payload>, api: &mut LpApi<Payload>) {
+        match &event.payload {
+            Payload::CatalogRegister {
+                dataset,
+                center,
+                size_mb,
+            } => {
+                let entry = self
+                    .entries
+                    .entry(dataset.clone())
+                    .or_insert((*size_mb, Vec::new()));
+                if !entry.1.contains(center) {
+                    entry.1.push(*center);
+                    entry.1.sort();
+                }
+            }
+            Payload::CatalogQuery { dataset, requester } => {
+                self.queries += 1;
+                let (size_mb, centers) = self
+                    .entries
+                    .get(dataset)
+                    .cloned()
+                    .unwrap_or((0.0, Vec::new()));
+                api.send_after(
+                    self.latency_s,
+                    *requester,
+                    Payload::CatalogReply {
+                        dataset: dataset.clone(),
+                        centers,
+                        size_mb,
+                    },
+                );
+            }
+            other => log::warn!("catalog: unexpected {}", other.tag()),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        "catalog"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Engine, SimTime, StepOutcome, SyncProtocol};
+    use crate::util::{AgentId, ContextId, LpId};
+
+    struct Probe;
+    impl LogicalProcess<Payload> for Probe {
+        fn handle(&mut self, ev: &Event<Payload>, api: &mut LpApi<Payload>) {
+            if let Payload::CatalogReply {
+                dataset,
+                centers,
+                size_mb,
+            } = &ev.payload
+            {
+                api.publish(
+                    "reply",
+                    Json::obj(vec![
+                        ("ds", Json::str(dataset.clone())),
+                        (
+                            "centers",
+                            Json::arr(centers.iter().map(|c| Json::num(*c as f64))),
+                        ),
+                        ("mb", Json::num(*size_mb)),
+                        ("t", Json::num(api.now().secs())),
+                    ]),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn register_then_query_returns_replicas_with_latency() {
+        let mut e: Engine<Payload> = Engine::new(
+            AgentId(1),
+            ContextId(1),
+            &[AgentId(1)],
+            0.01,
+            SyncProtocol::NullMessagesByDemand,
+        );
+        e.add_lp(LpId(1), Box::new(CatalogLp::new(0.5)));
+        e.add_lp(LpId(2), Box::new(Probe));
+        for center in [0usize, 2, 0] {
+            // duplicate center 0 must be deduped
+            e.schedule_initial(
+                SimTime::new(0.0),
+                LpId(1),
+                Payload::CatalogRegister {
+                    dataset: "d1".into(),
+                    center,
+                    size_mb: 100.0,
+                },
+            );
+        }
+        e.schedule_initial(
+            SimTime::new(1.0),
+            LpId(1),
+            Payload::CatalogQuery {
+                dataset: "d1".into(),
+                requester: LpId(2),
+            },
+        );
+        e.schedule_initial(
+            SimTime::new(1.0),
+            LpId(1),
+            Payload::CatalogQuery {
+                dataset: "unknown".into(),
+                requester: LpId(2),
+            },
+        );
+        while !matches!(e.step(), StepOutcome::Idle) {}
+        let res = e.drain_outbox().results;
+        let replies: Vec<&Json> = res
+            .iter()
+            .filter(|(k, _)| k == "reply")
+            .map(|(_, j)| j)
+            .collect();
+        assert_eq!(replies.len(), 2);
+        let known = replies
+            .iter()
+            .find(|j| j.get("ds").unwrap().as_str() == Some("d1"))
+            .unwrap();
+        let centers = known.get("centers").unwrap().as_arr().unwrap();
+        assert_eq!(centers.len(), 2); // deduped [0, 2]
+        assert_eq!(known.get("t").unwrap().as_f64(), Some(1.5)); // latency 0.5
+        let unknown = replies
+            .iter()
+            .find(|j| j.get("ds").unwrap().as_str() == Some("unknown"))
+            .unwrap();
+        assert!(unknown.get("centers").unwrap().as_arr().unwrap().is_empty());
+    }
+}

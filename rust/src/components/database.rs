@@ -1,0 +1,331 @@
+//! The data model: database server + mass storage (paper §4.2).
+//!
+//! "For simulating the databases, two main entities used to store data will
+//! be modeled: the database server and the mass storage center.  The
+//! database server stores the data on disk drives, while the mass storage
+//! center uses tape drives ... the simulation framework also provides an
+//! algorithm that automatically moves the data from a database server to
+//! the mass storage server(s) when the first one is out of storage space."
+
+use std::collections::VecDeque;
+
+use anyhow::{Context, Result};
+
+use crate::engine::{Event, LogicalProcess, LpApi};
+use crate::model::Payload;
+use crate::util::json::Json;
+use crate::util::LpId;
+
+/// Disk-backed database server with automatic tape overflow.
+pub struct DbLp {
+    center: usize,
+    capacity_mb: f64,
+    /// LP id of the mass storage server receiving overflow.
+    mass_storage: LpId,
+    /// Latency of a local migrate hop (tape robot), virtual seconds.
+    migrate_delay_s: f64,
+    /// Insertion-ordered resident datasets (name, size).
+    resident: VecDeque<(String, f64)>,
+    used_mb: f64,
+    pub migrations: u64,
+}
+
+impl DbLp {
+    pub fn new(center: usize, capacity_mb: f64, mass_storage: LpId) -> DbLp {
+        DbLp {
+            center,
+            capacity_mb,
+            mass_storage,
+            migrate_delay_s: 0.01,
+            resident: VecDeque::new(),
+            used_mb: 0.0,
+            migrations: 0,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<DbLp> {
+        Ok(DbLp::new(
+            j.get("center").and_then(Json::as_u64).context("center")? as usize,
+            j.get("capacity_mb")
+                .and_then(Json::as_f64)
+                .context("capacity_mb")?,
+            LpId(
+                j.get("mass_storage")
+                    .and_then(Json::as_u64)
+                    .context("mass_storage")?,
+            ),
+        ))
+    }
+
+    pub fn used_mb(&self) -> f64 {
+        self.used_mb
+    }
+
+    fn holds(&self, dataset: &str) -> Option<f64> {
+        self.resident
+            .iter()
+            .find(|(n, _)| n == dataset)
+            .map(|(_, s)| *s)
+    }
+
+    /// Evict oldest datasets to tape until under capacity (the paper's
+    /// automatic migration algorithm).
+    fn enforce_capacity(&mut self, api: &mut LpApi<Payload>) {
+        while self.used_mb > self.capacity_mb {
+            let Some((name, size)) = self.resident.pop_front() else { break };
+            self.used_mb -= size;
+            self.migrations += 1;
+            api.send_after(
+                self.migrate_delay_s,
+                self.mass_storage,
+                Payload::DbMigrate {
+                    dataset: name.clone(),
+                    size_mb: size,
+                },
+            );
+            api.publish(
+                "db-migration",
+                Json::obj(vec![
+                    ("center", Json::num(self.center as f64)),
+                    ("dataset", Json::str(name)),
+                    ("mb", Json::num(size)),
+                    ("at", Json::num(api.now().secs())),
+                ]),
+            );
+        }
+    }
+}
+
+impl LogicalProcess<Payload> for DbLp {
+    fn handle(&mut self, event: &Event<Payload>, api: &mut LpApi<Payload>) {
+        match &event.payload {
+            Payload::DbStore { dataset, size_mb } => {
+                if self.holds(dataset).is_none() {
+                    self.resident.push_back((dataset.clone(), *size_mb));
+                    self.used_mb += size_mb;
+                    self.enforce_capacity(api);
+                }
+            }
+            Payload::DbFetch { dataset, requester } => {
+                let size = self.holds(dataset);
+                // Same-center query: disk seek latency, zero-safe locally.
+                api.send_after(
+                    0.001,
+                    *requester,
+                    Payload::DbFetchReply {
+                        dataset: dataset.clone(),
+                        found: size.is_some(),
+                        size_mb: size.unwrap_or(0.0),
+                    },
+                );
+            }
+            other => log::warn!("db@{}: unexpected {}", self.center, other.tag()),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        "db"
+    }
+}
+
+/// Tape-backed mass storage center: unbounded capacity, records archive
+/// volume.
+pub struct MassStorageLp {
+    center: usize,
+    pub archived_mb: f64,
+    pub archived_count: u64,
+}
+
+impl MassStorageLp {
+    pub fn new(center: usize) -> MassStorageLp {
+        MassStorageLp {
+            center,
+            archived_mb: 0.0,
+            archived_count: 0,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<MassStorageLp> {
+        Ok(MassStorageLp::new(
+            j.get("center").and_then(Json::as_u64).context("center")? as usize,
+        ))
+    }
+}
+
+impl LogicalProcess<Payload> for MassStorageLp {
+    fn handle(&mut self, event: &Event<Payload>, api: &mut LpApi<Payload>) {
+        match &event.payload {
+            Payload::DbMigrate { dataset, size_mb } => {
+                self.archived_mb += size_mb;
+                self.archived_count += 1;
+                api.publish(
+                    "tape-archive",
+                    Json::obj(vec![
+                        ("center", Json::num(self.center as f64)),
+                        ("dataset", Json::str(dataset.clone())),
+                        ("mb", Json::num(*size_mb)),
+                        ("total_mb", Json::num(self.archived_mb)),
+                    ]),
+                );
+            }
+            other => log::warn!("tape@{}: unexpected {}", self.center, other.tag()),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        "mass-storage"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Engine, SimTime, StepOutcome, SyncProtocol};
+    use crate::util::{AgentId, ContextId};
+
+    fn run_db(capacity: f64, stores: Vec<(f64, String, f64)>) -> Vec<(String, Json)> {
+        let mut e: Engine<Payload> = Engine::new(
+            AgentId(1),
+            ContextId(1),
+            &[AgentId(1)],
+            0.01,
+            SyncProtocol::NullMessagesByDemand,
+        );
+        e.add_lp(LpId(1), Box::new(DbLp::new(0, capacity, LpId(2))));
+        e.add_lp(LpId(2), Box::new(MassStorageLp::new(0)));
+        for (t, ds, mb) in stores {
+            e.schedule_initial(
+                SimTime::new(t),
+                LpId(1),
+                Payload::DbStore {
+                    dataset: ds,
+                    size_mb: mb,
+                },
+            );
+        }
+        while !matches!(e.step(), StepOutcome::Idle) {}
+        e.drain_outbox().results
+    }
+
+    #[test]
+    fn stores_within_capacity_no_migration() {
+        let res = run_db(
+            100.0,
+            vec![(0.0, "a".into(), 40.0), (1.0, "b".into(), 40.0)],
+        );
+        assert!(res.iter().all(|(k, _)| k != "db-migration"));
+    }
+
+    #[test]
+    fn overflow_migrates_oldest_to_tape() {
+        let res = run_db(
+            100.0,
+            vec![
+                (0.0, "a".into(), 60.0),
+                (1.0, "b".into(), 60.0), // overflow: "a" (oldest) goes to tape
+            ],
+        );
+        let migrations: Vec<&Json> = res
+            .iter()
+            .filter(|(k, _)| k == "db-migration")
+            .map(|(_, j)| j)
+            .collect();
+        assert_eq!(migrations.len(), 1);
+        assert_eq!(
+            migrations[0].get("dataset").unwrap().as_str(),
+            Some("a")
+        );
+        let archives: Vec<&Json> = res
+            .iter()
+            .filter(|(k, _)| k == "tape-archive")
+            .map(|(_, j)| j)
+            .collect();
+        assert_eq!(archives.len(), 1);
+        assert_eq!(archives[0].get("mb").unwrap().as_f64(), Some(60.0));
+    }
+
+    #[test]
+    fn giant_dataset_cascades_migrations() {
+        let res = run_db(
+            50.0,
+            vec![
+                (0.0, "a".into(), 30.0),
+                (1.0, "b".into(), 30.0),
+                (2.0, "c".into(), 100.0), // bigger than the whole disk
+            ],
+        );
+        let migs = res.iter().filter(|(k, _)| k == "db-migration").count();
+        // a and b must leave; c itself cannot fit and also migrates.
+        assert_eq!(migs, 3);
+    }
+
+    #[test]
+    fn fetch_replies_found_and_missing() {
+        struct Probe {
+            answers: Vec<(String, bool)>,
+        }
+        impl LogicalProcess<Payload> for Probe {
+            fn handle(&mut self, ev: &Event<Payload>, api: &mut LpApi<Payload>) {
+                if let Payload::DbFetchReply { dataset, found, .. } = &ev.payload {
+                    self.answers.push((dataset.clone(), *found));
+                    api.publish(
+                        "answer",
+                        Json::obj(vec![
+                            ("ds", Json::str(dataset.clone())),
+                            ("found", Json::Bool(*found)),
+                        ]),
+                    );
+                }
+            }
+        }
+        let mut e: Engine<Payload> = Engine::new(
+            AgentId(1),
+            ContextId(1),
+            &[AgentId(1)],
+            0.01,
+            SyncProtocol::NullMessagesByDemand,
+        );
+        e.add_lp(LpId(1), Box::new(DbLp::new(0, 100.0, LpId(3))));
+        e.add_lp(LpId(2), Box::new(Probe { answers: vec![] }));
+        e.add_lp(LpId(3), Box::new(MassStorageLp::new(0)));
+        e.schedule_initial(
+            SimTime::new(0.0),
+            LpId(1),
+            Payload::DbStore {
+                dataset: "x".into(),
+                size_mb: 10.0,
+            },
+        );
+        for (t, ds) in [(1.0, "x"), (1.0, "y")] {
+            e.schedule_initial(
+                SimTime::new(t),
+                LpId(1),
+                Payload::DbFetch {
+                    dataset: ds.into(),
+                    requester: LpId(2),
+                },
+            );
+        }
+        while !matches!(e.step(), StepOutcome::Idle) {}
+        let res = e.drain_outbox().results;
+        let answers: Vec<(Option<&str>, Option<bool>)> = res
+            .iter()
+            .filter(|(k, _)| k == "answer")
+            .map(|(_, j)| (j.get("ds").unwrap().as_str(), j.get("found").unwrap().as_bool()))
+            .collect();
+        assert!(answers.contains(&(Some("x"), Some(true))));
+        assert!(answers.contains(&(Some("y"), Some(false))));
+    }
+
+    #[test]
+    fn duplicate_store_ignored() {
+        let res = run_db(
+            100.0,
+            vec![
+                (0.0, "a".into(), 60.0),
+                (1.0, "a".into(), 60.0), // duplicate: no overflow
+            ],
+        );
+        assert!(res.iter().all(|(k, _)| k != "db-migration"));
+    }
+}

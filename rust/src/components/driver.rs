@@ -1,0 +1,545 @@
+//! Regional-center drivers for the T0/T1 data replication + production
+//! analysis study (paper §3.1).
+//!
+//! * [`T0DriverLp`] — the CERN tier-0: *produces* datasets on a fixed
+//!   cadence, stores them in the local database, registers them in the
+//!   metadata catalog and *replicates* each to every T1 center over the
+//!   WAN ("the data transfer on WAN between the T0 (CERN) and a number of
+//!   several T1 Regional Centers").  It also runs a production job stream
+//!   on its own farm.
+//!
+//! * [`T1DriverLp`] — a tier-1 regional center: receives replicas, stores
+//!   them locally (registering the new replica in the catalog), and runs an
+//!   *analysis job* stream — each job needs one dataset; jobs arriving
+//!   before their dataset's replica park until the transfer completes
+//!   (first checking the local DB, then consulting the catalog — the Grid
+//!   data-access pattern MONARC models).
+//!
+//! Both publish structured records consumed by the fig. 2 bench and the
+//! examples: `"t0-summary"`, `"center-summary"`, `"analysis-job"`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{Context, Result};
+
+use crate::engine::{Event, LogicalProcess, LpApi};
+use crate::model::{JobSpec, Payload, TransferSpec};
+use crate::util::json::Json;
+use crate::util::{LpId, Pcg32};
+
+fn lp(j: &Json, key: &str) -> Result<LpId> {
+    Ok(LpId(j.get(key).and_then(Json::as_u64).context(key.to_string())?))
+}
+
+fn f64_or(j: &Json, key: &str, default: f64) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(default)
+}
+
+fn usize_req(j: &Json, key: &str) -> Result<usize> {
+    Ok(j.get(key).and_then(Json::as_u64).context(key.to_string())? as usize)
+}
+
+// ---------------------------------------------------------------------------
+// T0 driver
+// ---------------------------------------------------------------------------
+
+/// Tier-0 production + replication driver.
+pub struct T0DriverLp {
+    center: usize,
+    wan: LpId,
+    db: LpId,
+    catalog: LpId,
+    farm: LpId,
+    t1_centers: Vec<usize>,
+    t1_drivers: Vec<LpId>,
+    datasets: usize,
+    transfer_mb: f64,
+    production_interval_s: f64,
+    jobs: usize,
+    job_cpu_s: f64,
+    lookahead: f64,
+    rng: Pcg32,
+    next_xfer_id: u64,
+    jobs_done: usize,
+    produced: usize,
+}
+
+impl T0DriverLp {
+    pub fn from_json(j: &Json, lookahead: f64) -> Result<T0DriverLp> {
+        let t1_centers: Vec<usize> = j
+            .get("t1_centers")
+            .and_then(Json::as_arr)
+            .context("t1_centers")?
+            .iter()
+            .filter_map(Json::as_u64)
+            .map(|c| c as usize)
+            .collect();
+        let t1_drivers: Vec<LpId> = j
+            .get("t1_drivers")
+            .and_then(Json::as_arr)
+            .context("t1_drivers")?
+            .iter()
+            .filter_map(Json::as_u64)
+            .map(LpId)
+            .collect();
+        if t1_centers.len() != t1_drivers.len() {
+            anyhow::bail!("t1_centers and t1_drivers must align");
+        }
+        let center = usize_req(j, "center")?;
+        let seed = j.get("seed").and_then(Json::as_u64).unwrap_or(1);
+        Ok(T0DriverLp {
+            center,
+            wan: lp(j, "wan")?,
+            db: lp(j, "db")?,
+            catalog: lp(j, "catalog")?,
+            farm: lp(j, "farm")?,
+            t1_centers,
+            t1_drivers,
+            datasets: usize_req(j, "transfers_per_center")?,
+            transfer_mb: f64_or(j, "transfer_mb", 500.0),
+            production_interval_s: f64_or(j, "production_interval_s", 1.0),
+            jobs: usize_req(j, "jobs")?,
+            job_cpu_s: f64_or(j, "job_cpu_s", 10.0),
+            lookahead,
+            rng: Pcg32::new(seed, 0x70),
+            next_xfer_id: 1,
+            jobs_done: 0,
+            produced: 0,
+        })
+    }
+
+    fn dataset_name(&self, i: usize) -> String {
+        format!("ds{i}")
+    }
+}
+
+impl LogicalProcess<Payload> for T0DriverLp {
+    fn handle(&mut self, event: &Event<Payload>, api: &mut LpApi<Payload>) {
+        match &event.payload {
+            Payload::Start => {
+                // Production schedule: dataset i at t0 + i * interval.
+                for i in 0..self.datasets {
+                    let at = i as f64 * self.production_interval_s;
+                    let name = self.dataset_name(i);
+                    let size = self.rng.exp(self.transfer_mb).max(1.0);
+                    // Store locally (same-group DB).
+                    api.send_after(
+                        at,
+                        self.db,
+                        Payload::DbStore {
+                            dataset: name.clone(),
+                            size_mb: size,
+                        },
+                    );
+                    // Register in the (remote) catalog.
+                    api.send_after(
+                        at + self.lookahead,
+                        self.catalog,
+                        Payload::CatalogRegister {
+                            dataset: name.clone(),
+                            center: self.center,
+                            size_mb: size,
+                        },
+                    );
+                    // Replicate to every T1 over the WAN.
+                    for (ci, driver) in self.t1_centers.iter().zip(&self.t1_drivers) {
+                        let spec = TransferSpec {
+                            id: self.next_xfer_id,
+                            src_center: self.center,
+                            dst_center: *ci,
+                            size_mb: size,
+                            notify: *driver,
+                            dataset: Some(name.clone()),
+                        };
+                        self.next_xfer_id += 1;
+                        api.send_after(
+                            at + self.lookahead,
+                            self.wan,
+                            Payload::TransferRequest(spec),
+                        );
+                    }
+                    self.produced += 1;
+                }
+                // Production job stream on the local farm.
+                for jid in 0..self.jobs {
+                    let at = self.rng.exp(self.production_interval_s) * jid as f64;
+                    let cpu = self.rng.exp(self.job_cpu_s).max(0.01);
+                    api.send_after(
+                        at,
+                        self.farm,
+                        Payload::JobSubmit(JobSpec {
+                            id: jid as u64,
+                            cpu_seconds: cpu,
+                            dataset: None,
+                            center: self.center,
+                            notify: api.me(),
+                        }),
+                    );
+                }
+                if self.jobs == 0 {
+                    self.publish_summary(api);
+                }
+            }
+            Payload::JobFinished { .. } => {
+                self.jobs_done += 1;
+                if self.jobs_done == self.jobs {
+                    self.publish_summary(api);
+                }
+            }
+            other => log::warn!("t0-driver: unexpected {}", other.tag()),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        "t0-driver"
+    }
+}
+
+impl T0DriverLp {
+    fn publish_summary(&self, api: &mut LpApi<Payload>) {
+        api.publish(
+            "t0-summary",
+            Json::obj(vec![
+                ("center", Json::num(self.center as f64)),
+                ("datasets_produced", Json::num(self.produced as f64)),
+                (
+                    "transfers_issued",
+                    Json::num((self.next_xfer_id - 1) as f64),
+                ),
+                ("production_jobs", Json::num(self.jobs_done as f64)),
+                ("at", Json::num(api.now().secs())),
+            ]),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// T1 driver
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+enum JobState {
+    /// Waiting for its dataset's replica (parked).
+    Parked,
+    /// Submitted to the farm.
+    Submitted,
+    Done,
+}
+
+/// Tier-1 analysis driver.
+pub struct T1DriverLp {
+    center: usize,
+    wan: LpId,
+    db: LpId,
+    catalog: LpId,
+    farm: LpId,
+    jobs: usize,
+    job_cpu_s: f64,
+    expected_datasets: usize,
+    arrival_mean_s: f64,
+    lookahead: f64,
+    rng: Pcg32,
+    /// dataset -> locally available?
+    available: BTreeSet<String>,
+    /// dataset -> parked job ids.
+    parked: BTreeMap<String, Vec<u64>>,
+    states: BTreeMap<u64, JobState>,
+    /// job id -> (arrival time, dataset).
+    job_meta: BTreeMap<u64, (f64, String)>,
+    replicas_received: usize,
+    jobs_done: usize,
+    first_arrival: Option<f64>,
+    summary_published: bool,
+}
+
+impl T1DriverLp {
+    pub fn from_json(j: &Json, lookahead: f64) -> Result<T1DriverLp> {
+        let center = usize_req(j, "center")?;
+        let seed = j.get("seed").and_then(Json::as_u64).unwrap_or(1);
+        Ok(T1DriverLp {
+            center,
+            wan: lp(j, "wan")?,
+            db: lp(j, "db")?,
+            catalog: lp(j, "catalog")?,
+            farm: lp(j, "farm")?,
+            jobs: usize_req(j, "jobs")?,
+            job_cpu_s: f64_or(j, "job_cpu_s", 10.0),
+            expected_datasets: usize_req(j, "expected_datasets")?,
+            arrival_mean_s: f64_or(j, "arrival_mean_s", 1.0),
+            lookahead,
+            rng: Pcg32::new(seed.wrapping_add(center as u64), 0x71),
+            available: BTreeSet::new(),
+            parked: BTreeMap::new(),
+            states: BTreeMap::new(),
+            job_meta: BTreeMap::new(),
+            replicas_received: 0,
+            jobs_done: 0,
+            first_arrival: None,
+            summary_published: false,
+        })
+    }
+
+    fn submit(&mut self, job: u64, api: &mut LpApi<Payload>) {
+        let cpu = self.rng.exp(self.job_cpu_s).max(0.01);
+        self.states.insert(job, JobState::Submitted);
+        api.send_after(
+            0.0,
+            self.farm,
+            Payload::JobSubmit(JobSpec {
+                id: job,
+                cpu_seconds: cpu,
+                dataset: self.job_meta.get(&job).map(|(_, d)| d.clone()),
+                center: self.center,
+                notify: api.me(),
+            }),
+        );
+    }
+
+    fn maybe_summary(&mut self, api: &mut LpApi<Payload>) {
+        if self.summary_published {
+            return;
+        }
+        if self.jobs_done == self.jobs && self.replicas_received >= self.expected_datasets {
+            self.summary_published = true;
+            api.publish(
+                "center-summary",
+                Json::obj(vec![
+                    ("center", Json::num(self.center as f64)),
+                    ("jobs", Json::num(self.jobs_done as f64)),
+                    ("replicas", Json::num(self.replicas_received as f64)),
+                    ("makespan_s", Json::num(api.now().secs())),
+                ]),
+            );
+        }
+    }
+}
+
+impl LogicalProcess<Payload> for T1DriverLp {
+    fn handle(&mut self, event: &Event<Payload>, api: &mut LpApi<Payload>) {
+        match &event.payload {
+            Payload::Start => {
+                // Analysis jobs with exponential inter-arrival times.
+                let mut t = 0.0;
+                for jid in 0..self.jobs {
+                    t += self.rng.exp(self.arrival_mean_s);
+                    // With no replication in the scenario, jobs are pure-CPU.
+                    let ds = if self.expected_datasets == 0 {
+                        String::new()
+                    } else {
+                        format!("ds{}", self.rng.below(self.expected_datasets as u64))
+                    };
+                    api.wake_after(
+                        t,
+                        Payload::Custom {
+                            tag: "arrival".into(),
+                            data: Json::obj(vec![
+                                ("job", Json::num(jid as f64)),
+                                ("ds", Json::str(ds)),
+                            ]),
+                        },
+                    );
+                }
+                if self.jobs == 0 {
+                    self.maybe_summary(api);
+                }
+            }
+            Payload::Custom { tag, data } if tag == "arrival" => {
+                let job = data.get("job").and_then(Json::as_u64).unwrap_or(0);
+                let ds = data
+                    .get("ds")
+                    .and_then(Json::as_str)
+                    .unwrap_or("ds0")
+                    .to_string();
+                let now = api.now().secs();
+                self.first_arrival.get_or_insert(now);
+                self.job_meta.insert(job, (now, ds.clone()));
+                if ds.is_empty() {
+                    // Pure-CPU job: no data dependency.
+                    self.submit(job, api);
+                } else {
+                    // Check the local database first (the MONARC access path).
+                    api.send_after(
+                        0.0,
+                        self.db,
+                        Payload::DbFetch {
+                            dataset: ds,
+                            requester: api.me(),
+                        },
+                    );
+                    self.states.insert(job, JobState::Parked);
+                }
+            }
+            Payload::DbFetchReply { dataset, found, .. } => {
+                // Every parked job waiting on this dataset reacts.
+                let waiting: Vec<u64> = self
+                    .job_meta
+                    .iter()
+                    .filter(|(id, (_, d))| {
+                        d == dataset && matches!(self.states.get(id), Some(JobState::Parked))
+                    })
+                    .map(|(id, _)| *id)
+                    .collect();
+                if *found || self.available.contains(dataset) {
+                    for job in waiting {
+                        self.submit(job, api);
+                    }
+                } else {
+                    // Not local yet: consult the catalog (informational in
+                    // the push-replication study; exercises the Grid lookup
+                    // path) and park until the replica arrives.
+                    for job in waiting {
+                        self.parked.entry(dataset.clone()).or_default().push(job);
+                    }
+                    api.send_after(
+                        self.lookahead,
+                        self.catalog,
+                        Payload::CatalogQuery {
+                            dataset: dataset.clone(),
+                            requester: api.me(),
+                        },
+                    );
+                }
+            }
+            Payload::CatalogReply { dataset, centers, .. } => {
+                // Push replication will deliver the dataset eventually; we
+                // record the observed replica distribution.
+                api.publish(
+                    "catalog-observation",
+                    Json::obj(vec![
+                        ("center", Json::num(self.center as f64)),
+                        ("ds", Json::str(dataset.clone())),
+                        ("replicas", Json::num(centers.len() as f64)),
+                    ]),
+                );
+            }
+            Payload::TransferComplete {
+                dataset: Some(ds),
+                size_mb,
+                started,
+                ..
+            } => {
+                self.replicas_received += 1;
+                self.available.insert(ds.clone());
+                // Store the replica locally and register it.
+                api.send_after(
+                    0.0,
+                    self.db,
+                    Payload::DbStore {
+                        dataset: ds.clone(),
+                        size_mb: *size_mb,
+                    },
+                );
+                api.send_after(
+                    self.lookahead,
+                    self.catalog,
+                    Payload::CatalogRegister {
+                        dataset: ds.clone(),
+                        center: self.center,
+                        size_mb: *size_mb,
+                    },
+                );
+                api.publish(
+                    "replica",
+                    Json::obj(vec![
+                        ("center", Json::num(self.center as f64)),
+                        ("ds", Json::str(ds.clone())),
+                        ("mb", Json::num(*size_mb)),
+                        ("latency_s", Json::num(api.now().secs() - started)),
+                    ]),
+                );
+                // Unpark jobs waiting on it.
+                if let Some(jobs) = self.parked.remove(ds) {
+                    for job in jobs {
+                        if matches!(self.states.get(&job), Some(JobState::Parked)) {
+                            self.submit(job, api);
+                        }
+                    }
+                }
+                self.maybe_summary(api);
+            }
+            Payload::JobFinished { job, wait_s, run_s } => {
+                self.states.insert(*job, JobState::Done);
+                self.jobs_done += 1;
+                let (arrived, ds) = self
+                    .job_meta
+                    .get(job)
+                    .cloned()
+                    .unwrap_or((0.0, String::new()));
+                api.publish(
+                    "analysis-job",
+                    Json::obj(vec![
+                        ("center", Json::num(self.center as f64)),
+                        ("job", Json::num(*job as f64)),
+                        ("ds", Json::str(ds)),
+                        ("arrived", Json::num(arrived)),
+                        ("data_wait_s", Json::num(api.now().secs() - arrived - wait_s - run_s)),
+                        ("queue_wait_s", Json::num(*wait_s)),
+                        ("run_s", Json::num(*run_s)),
+                        ("turnaround_s", Json::num(api.now().secs() - arrived)),
+                    ]),
+                );
+                self.maybe_summary(api);
+            }
+            other => log::warn!("t1-driver@{}: unexpected {}", self.center, other.tag()),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        "t1-driver"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Component-level tests for the drivers run through the full scenario
+    // integration tests in `workload` and `rust/tests/` — here we check
+    // parameter parsing and the unused WAN handle wiring.
+
+    #[test]
+    fn t0_from_json_validates_alignment() {
+        let bad = Json::parse(
+            r#"{"center": 0, "wan": 1, "db": 2, "catalog": 3, "farm": 4,
+                "t1_centers": [1, 2], "t1_drivers": [8],
+                "transfers_per_center": 4, "jobs": 2}"#,
+        )
+        .unwrap();
+        assert!(T0DriverLp::from_json(&bad, 0.05).is_err());
+    }
+
+    #[test]
+    fn t0_from_json_ok() {
+        let j = Json::parse(
+            r#"{"center": 0, "wan": 1, "db": 2, "catalog": 3, "farm": 4,
+                "t1_centers": [1], "t1_drivers": [8],
+                "transfers_per_center": 4, "transfer_mb": 200.0, "jobs": 2,
+                "seed": 9}"#,
+        )
+        .unwrap();
+        let d = T0DriverLp::from_json(&j, 0.05).unwrap();
+        assert_eq!(d.datasets, 4);
+        assert_eq!(d.transfer_mb, 200.0);
+        assert_eq!(d.wan, LpId(1));
+    }
+
+    #[test]
+    fn t1_from_json_ok() {
+        let j = Json::parse(
+            r#"{"center": 2, "wan": 1, "db": 2, "catalog": 3, "farm": 4,
+                "jobs": 4, "expected_datasets": 4, "arrival_mean_s": 3.0}"#,
+        )
+        .unwrap();
+        let d = T1DriverLp::from_json(&j, 0.05).unwrap();
+        assert_eq!(d.jobs, 4);
+        assert_eq!(d.arrival_mean_s, 3.0);
+        assert_eq!(d.wan, LpId(1));
+        assert_eq!(d.center, 2);
+    }
+
+    #[test]
+    fn t1_missing_required_field_errors() {
+        let j = Json::parse(r#"{"center": 2}"#).unwrap();
+        assert!(T1DriverLp::from_json(&j, 0.05).is_err());
+    }
+}

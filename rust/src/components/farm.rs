@@ -1,0 +1,200 @@
+//! CPU farm component: a regional center's processing resources.
+//!
+//! Models `units` CPU units of a given relative `power`.  Jobs queue FIFO;
+//! a free unit runs one job for `cpu_seconds / power` virtual seconds
+//! ("a processing job depends on the values of the processing power ... of
+//! the simulated CPU unit on which it is executed", paper §4.2).
+//!
+//! Published records (`kind = "job"`): per-job wait/run times and the unit
+//! used — the raw data behind the paper's production-study plots.
+
+use std::collections::VecDeque;
+
+use anyhow::{Context, Result};
+
+use crate::engine::{Event, LogicalProcess, LpApi};
+use crate::model::{JobSpec, Payload};
+use crate::util::json::Json;
+use crate::util::LpId;
+
+struct QueuedJob {
+    spec: JobSpec,
+    queued_at: f64,
+}
+
+/// The CPU farm logical process.
+pub struct FarmLp {
+    center: usize,
+    power: f64,
+    /// `None` = unit free; `Some(job)` = running that job id.
+    units: Vec<Option<u64>>,
+    queue: VecDeque<QueuedJob>,
+    /// In-flight (unit, job, queued_at, started_at, notify).
+    running: Vec<(usize, u64, f64, f64, LpId)>,
+    pub jobs_completed: u64,
+    max_queue: usize,
+}
+
+impl FarmLp {
+    pub fn new(center: usize, units: usize, power: f64) -> FarmLp {
+        assert!(units > 0 && power > 0.0);
+        FarmLp {
+            center,
+            power,
+            units: vec![None; units],
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            jobs_completed: 0,
+            max_queue: 0,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<FarmLp> {
+        Ok(FarmLp::new(
+            j.get("center").and_then(Json::as_u64).context("center")? as usize,
+            j.get("units").and_then(Json::as_u64).context("units")? as usize,
+            j.get("power").and_then(Json::as_f64).unwrap_or(1.0),
+        ))
+    }
+
+    fn try_dispatch(&mut self, api: &mut LpApi<Payload>) {
+        while let Some(free) = self.units.iter().position(Option::is_none) {
+            let Some(q) = self.queue.pop_front() else { break };
+            let run_s = q.spec.cpu_seconds / self.power;
+            self.units[free] = Some(q.spec.id);
+            self.running
+                .push((free, q.spec.id, q.queued_at, api.now().secs(), q.spec.notify));
+            api.wake_after(
+                run_s,
+                Payload::UnitDone {
+                    unit: free,
+                    job: q.spec.id,
+                },
+            );
+        }
+    }
+}
+
+impl LogicalProcess<Payload> for FarmLp {
+    fn handle(&mut self, event: &Event<Payload>, api: &mut LpApi<Payload>) {
+        match &event.payload {
+            Payload::JobSubmit(spec) => {
+                self.queue.push_back(QueuedJob {
+                    spec: spec.clone(),
+                    queued_at: api.now().secs(),
+                });
+                self.max_queue = self.max_queue.max(self.queue.len());
+                self.try_dispatch(api);
+            }
+            Payload::UnitDone { unit, job } => {
+                debug_assert_eq!(self.units[*unit], Some(*job));
+                self.units[*unit] = None;
+                if let Some(pos) = self.running.iter().position(|(_, j, ..)| j == job) {
+                    let (unit, job, queued_at, started_at, notify) = self.running.remove(pos);
+                    let now = api.now().secs();
+                    let wait_s = started_at - queued_at;
+                    let run_s = now - started_at;
+                    self.jobs_completed += 1;
+                    api.publish(
+                        "job",
+                        Json::obj(vec![
+                            ("job", Json::num(job as f64)),
+                            ("center", Json::num(self.center as f64)),
+                            ("unit", Json::num(unit as f64)),
+                            ("wait_s", Json::num(wait_s)),
+                            ("run_s", Json::num(run_s)),
+                            ("done_at", Json::num(now)),
+                        ]),
+                    );
+                    if notify != LpId(0) {
+                        // Notify is same-group (driver of the same center).
+                        api.send_after(
+                            0.0,
+                            notify,
+                            Payload::JobFinished { job, wait_s, run_s },
+                        );
+                    }
+                }
+                self.try_dispatch(api);
+            }
+            other => log::warn!("farm@{}: unexpected {}", self.center, other.tag()),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        "farm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Engine, SimTime, StepOutcome, SyncProtocol};
+    use crate::util::{AgentId, ContextId};
+
+    fn job(id: u64, cpu: f64) -> Payload {
+        Payload::JobSubmit(JobSpec {
+            id,
+            cpu_seconds: cpu,
+            dataset: None,
+            center: 0,
+            notify: LpId(0),
+        })
+    }
+
+    fn run_farm(units: usize, power: f64, jobs: Vec<(f64, Payload)>) -> Vec<(String, Json)> {
+        let mut e: Engine<Payload> = Engine::new(
+            AgentId(1),
+            ContextId(1),
+            &[AgentId(1)],
+            0.01,
+            SyncProtocol::NullMessagesByDemand,
+        );
+        e.add_lp(LpId(1), Box::new(FarmLp::new(0, units, power)));
+        for (t, p) in jobs {
+            e.schedule_initial(SimTime::new(t), LpId(1), p);
+        }
+        while !matches!(e.step(), StepOutcome::Idle) {}
+        e.drain_outbox().results
+    }
+
+    #[test]
+    fn single_job_runs_for_cpu_over_power() {
+        let results = run_farm(1, 2.0, vec![(0.0, job(1, 10.0))]);
+        assert_eq!(results.len(), 1);
+        let rec = &results[0].1;
+        assert_eq!(rec.get("run_s").unwrap().as_f64(), Some(5.0)); // 10 / 2
+        assert_eq!(rec.get("wait_s").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn queueing_when_units_busy() {
+        // 1 unit, two 4s jobs submitted together: second waits 4s.
+        let results = run_farm(1, 1.0, vec![(0.0, job(1, 4.0)), (0.0, job(2, 4.0))]);
+        let waits: Vec<f64> = results
+            .iter()
+            .map(|(_, r)| r.get("wait_s").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(waits.len(), 2);
+        assert!(waits.contains(&0.0) && waits.contains(&4.0), "{waits:?}");
+    }
+
+    #[test]
+    fn parallel_units_no_wait() {
+        let results = run_farm(2, 1.0, vec![(0.0, job(1, 4.0)), (0.0, job(2, 4.0))]);
+        for (_, r) in &results {
+            assert_eq!(r.get("wait_s").unwrap().as_f64(), Some(0.0));
+        }
+    }
+
+    #[test]
+    fn from_json_requires_units() {
+        assert!(FarmLp::from_json(&Json::obj(vec![("center", Json::num(0.0))])).is_err());
+        let ok = FarmLp::from_json(
+            &Json::parse(r#"{"center": 1, "units": 3, "power": 2.5}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(ok.units.len(), 3);
+        assert_eq!(ok.power, 2.5);
+    }
+}

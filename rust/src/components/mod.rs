@@ -1,0 +1,153 @@
+//! The MONARC component library (paper §4.2, fig. 1 & 5).
+//!
+//! "The simulation model consists of a number of simulation components,
+//! such as CPU units, database servers, network components, farms and
+//! regional centers."  Each component here is a [`LogicalProcess`] over
+//! [`Payload`] built from a JSON parameter block by [`build_component`] —
+//! the factory the coordinator uses when the leader's `DeployLp` control
+//! message arrives ("the basic implementations of the components are
+//! defined from the beginning inside the distributed application").
+//!
+//! Components:
+//! * [`farm::FarmLp`] — a regional center's CPU farm (`cpus_per_center`
+//!   units, FIFO queue, per-job wait/run accounting),
+//! * [`wan::WanLp`] — the WAN with the paper's "interrupt" traffic scheme:
+//!   every transfer start/finish re-solves max-min fair bandwidth
+//!   ([`crate::runtime::ComputeBackend::fair_share`]) and re-plans
+//!   completion wakes,
+//! * [`database::DbLp`] + [`database::MassStorageLp`] — the data model:
+//!   disk-backed DB server with automatic overflow migration to tape,
+//! * [`catalog::CatalogLp`] — the Grid metadata catalog,
+//! * [`driver::T0DriverLp`] / [`driver::T1DriverLp`] — the T0/T1
+//!   replication + analysis study drivers (paper §3.1),
+//! * [`RegionalCenter`] — the fig. 1 composite: helper that wires one
+//!   center's LPs into a scenario.
+
+pub mod catalog;
+pub mod database;
+pub mod driver;
+pub mod farm;
+pub mod wan;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::LogicalProcess;
+use crate::model::Payload;
+use crate::runtime::ComputeBackend;
+use crate::util::json::Json;
+use crate::util::LpId;
+
+/// Everything a component may need from its environment at build time.
+pub struct BuildCtx {
+    /// Shared compute backend (WAN fair-share, scheduler math).
+    pub backend: Arc<ComputeBackend>,
+    /// Model lookahead (= minimum cross-group latency).
+    pub lookahead: f64,
+}
+
+/// Instantiate a component by factory `kind`.
+///
+/// Known kinds: `"farm"`, `"wan"`, `"db"`, `"mass-storage"`, `"catalog"`,
+/// `"t0-driver"`, `"t1-driver"`.
+pub fn build_component(
+    kind: &str,
+    params: &Json,
+    ctx: &BuildCtx,
+) -> Result<Box<dyn LogicalProcess<Payload>>> {
+    match kind {
+        "farm" => Ok(Box::new(
+            farm::FarmLp::from_json(params).context("farm params")?,
+        )),
+        "wan" => Ok(Box::new(
+            wan::WanLp::from_json(params, Arc::clone(&ctx.backend), ctx.lookahead)
+                .context("wan params")?,
+        )),
+        "db" => Ok(Box::new(
+            database::DbLp::from_json(params).context("db params")?,
+        )),
+        "mass-storage" => Ok(Box::new(
+            database::MassStorageLp::from_json(params).context("mass-storage params")?,
+        )),
+        "catalog" => Ok(Box::new(
+            catalog::CatalogLp::from_json(params, ctx.lookahead).context("catalog params")?,
+        )),
+        "t0-driver" => Ok(Box::new(
+            driver::T0DriverLp::from_json(params, ctx.lookahead).context("t0-driver params")?,
+        )),
+        "t1-driver" => Ok(Box::new(
+            driver::T1DriverLp::from_json(params, ctx.lookahead).context("t1-driver params")?,
+        )),
+        other => bail!("unknown component kind '{other}'"),
+    }
+}
+
+/// Handles to the LPs of one regional center (paper fig. 1): a CPU farm,
+/// a database server backed by mass storage, and the center's driver.
+#[derive(Clone, Copy, Debug)]
+pub struct RegionalCenter {
+    pub center: usize,
+    pub farm: LpId,
+    pub db: LpId,
+    pub mass_storage: LpId,
+    pub driver: LpId,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+
+    fn ctx() -> BuildCtx {
+        BuildCtx {
+            backend: Arc::new(
+                ComputeBackend::load(BackendKind::Native, std::path::Path::new(".")).unwrap(),
+            ),
+            lookahead: 0.05,
+        }
+    }
+
+    #[test]
+    fn factory_builds_all_kinds() {
+        let c = ctx();
+        for (kind, params) in [
+            ("farm", r#"{"center": 0, "units": 4, "power": 1.0}"#),
+            (
+                "wan",
+                r#"{"centers": 3, "uplink_mbps": [100, 50, 50], "downlink_mbps": [100, 50, 50]}"#,
+            ),
+            ("db", r#"{"center": 0, "capacity_mb": 1000, "mass_storage": 3}"#),
+            ("mass-storage", r#"{"center": 0}"#),
+            ("catalog", r#"{}"#),
+            (
+                "t0-driver",
+                r#"{"center": 0, "wan": 1, "db": 2, "catalog": 3, "farm": 4,
+                    "t1_centers": [1, 2], "t1_drivers": [8, 9],
+                    "transfers_per_center": 4, "transfer_mb": 100.0,
+                    "jobs": 2, "job_cpu_s": 1.0, "seed": 1}"#,
+            ),
+            (
+                "t1-driver",
+                r#"{"center": 1, "wan": 1, "db": 2, "catalog": 3, "farm": 4,
+                    "jobs": 4, "job_cpu_s": 2.0, "expected_datasets": 4,
+                    "arrival_mean_s": 10.0, "seed": 2}"#,
+            ),
+        ] {
+            let params = Json::parse(params).unwrap();
+            let lp = build_component(kind, &params, &c);
+            assert!(lp.is_ok(), "kind {kind}: {:?}", lp.err());
+        }
+    }
+
+    #[test]
+    fn factory_rejects_unknown_kind() {
+        assert!(build_component("bogus", &Json::obj(vec![]), &ctx()).is_err());
+    }
+
+    #[test]
+    fn factory_rejects_bad_params() {
+        // farm without units
+        assert!(build_component("farm", &Json::obj(vec![]), &ctx()).is_err());
+    }
+}

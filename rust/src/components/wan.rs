@@ -1,0 +1,462 @@
+//! WAN network component: the paper's "interrupt"-based traffic model
+//! (§4.2: "the proposed approach used to simulate the data traffic is again
+//! based on the 'interrupt' scheme").
+//!
+//! Topology: a star of regional centers — each center has an uplink and a
+//! downlink; a transfer from center `a` to center `b` occupies `uplink(a)`
+//! and `downlink(b)`.  Whenever a transfer starts or finishes, the max-min
+//! fair allocation over all active flows is re-solved (the L2/L1 AOT
+//! artifact via [`ComputeBackend::fair_share`]) and every in-flight
+//! transfer is **interrupted**: its progress is banked at its old rate and
+//! its completion wake is re-planned at the new rate.  This is precisely
+//! the mechanism behind paper fig. 2 — as bandwidth drops, transfers
+//! overlap longer, interrupts multiply, and event counts (and simulator
+//! wall-clock) blow up.
+//!
+//! Capacity limits mirror the AOT shapes: at most [`crate::runtime::N_FLOWS`]
+//! concurrent transfers run; the excess queues FIFO (and still generates
+//! interrupt traffic when admitted).
+//!
+//! Published records: `"transfer"` per completion (size, duration,
+//! achieved rate) and a final-ish running `"wan-stats"` (interrupt count)
+//! piggybacked on each completion.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::{Event, LogicalProcess, LpApi};
+use crate::model::{Payload, TransferSpec};
+use crate::runtime::{ComputeBackend, N_FLOWS};
+use crate::util::json::Json;
+
+/// Mbps -> MB/s.
+const MBPS_TO_MBS: f64 = 1.0 / 8.0;
+/// Remaining-bytes epsilon (MB) below which a transfer counts as done.
+const EPS_MB: f64 = 1e-9;
+
+struct Flow {
+    spec: TransferSpec,
+    remaining_mb: f64,
+    rate_mbs: f64,
+    started_at: f64,
+}
+
+/// The WAN logical process.
+pub struct WanLp {
+    centers: usize,
+    uplink_mbps: Vec<f64>,
+    downlink_mbps: Vec<f64>,
+    backend: Arc<ComputeBackend>,
+    lookahead: f64,
+    active: Vec<Flow>,
+    waiting: VecDeque<TransferSpec>,
+    /// Bumped on every re-plan; stale `WanWake`s are ignored.
+    epoch: u64,
+    /// MONARC-faithful interrupt granularity: schedule one completion wake
+    /// per active transfer on every re-plan (each interrupt is a simulation
+    /// event, reproducing the paper's fig. 2 event blow-up) instead of a
+    /// single earliest-completion wake (our batched optimization).
+    per_transfer_wakes: bool,
+    last_progress_at: f64,
+    pub interrupts: u64,
+    pub transfers_completed: u64,
+}
+
+impl WanLp {
+    pub fn new(
+        centers: usize,
+        uplink_mbps: Vec<f64>,
+        downlink_mbps: Vec<f64>,
+        backend: Arc<ComputeBackend>,
+        lookahead: f64,
+    ) -> Result<WanLp> {
+        if uplink_mbps.len() != centers || downlink_mbps.len() != centers {
+            bail!("link capacity vectors must have one entry per center");
+        }
+        if 2 * centers > crate::runtime::N_LINKS {
+            bail!(
+                "{centers} centers exceeds AOT link budget ({} links max)",
+                crate::runtime::N_LINKS
+            );
+        }
+        if uplink_mbps
+            .iter()
+            .chain(downlink_mbps.iter())
+            .any(|c| *c <= 0.0)
+        {
+            bail!("link capacities must be positive");
+        }
+        Ok(WanLp {
+            centers,
+            uplink_mbps,
+            downlink_mbps,
+            backend,
+            lookahead,
+            active: Vec::new(),
+            waiting: VecDeque::new(),
+            epoch: 0,
+            per_transfer_wakes: false,
+            last_progress_at: 0.0,
+            interrupts: 0,
+            transfers_completed: 0,
+        })
+    }
+
+    pub fn from_json(j: &Json, backend: Arc<ComputeBackend>, lookahead: f64) -> Result<WanLp> {
+        let centers = j.get("centers").and_then(Json::as_u64).context("centers")? as usize;
+        let vecf = |key: &str| -> Result<Vec<f64>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("{key} must be an array"))?
+                .iter()
+                .map(|v| v.as_f64().with_context(|| format!("{key} entries must be numbers")))
+                .collect()
+        };
+        let mut wan = WanLp::new(
+            centers,
+            vecf("uplink_mbps")?,
+            vecf("downlink_mbps")?,
+            backend,
+            lookahead,
+        )?;
+        wan.per_transfer_wakes = j
+            .get("per_transfer_wakes")
+            .and_then(Json::as_bool)
+            .unwrap_or(false);
+        Ok(wan)
+    }
+
+    /// Advance every active flow at its current rate up to `now`.
+    fn progress_to(&mut self, now: f64) {
+        let dt = now - self.last_progress_at;
+        if dt > 0.0 {
+            for fl in &mut self.active {
+                fl.remaining_mb = (fl.remaining_mb - fl.rate_mbs * dt).max(0.0);
+            }
+        }
+        self.last_progress_at = now;
+    }
+
+    /// Re-solve fair share for the current active set; counts one interrupt
+    /// per already-running flow (they all get re-timed).
+    fn resolve_rates(&mut self) {
+        self.interrupts += self.active.len() as u64;
+        if self.active.is_empty() {
+            return;
+        }
+        let l = 2 * self.centers;
+        let f = self.active.len();
+        let mut cap: Vec<f32> = Vec::with_capacity(l);
+        cap.extend(self.uplink_mbps.iter().map(|c| (*c * MBPS_TO_MBS) as f32));
+        cap.extend(self.downlink_mbps.iter().map(|c| (*c * MBPS_TO_MBS) as f32));
+        let mut routing = vec![0.0f32; l * f];
+        for (fi, fl) in self.active.iter().enumerate() {
+            routing[fl.spec.src_center * f + fi] = 1.0; // uplink(src)
+            routing[(self.centers + fl.spec.dst_center) * f + fi] = 1.0; // downlink(dst)
+        }
+        let active = vec![1.0f32; f];
+        match self.backend.fair_share(&cap, &routing, &active) {
+            Ok(rates) => {
+                for (fi, fl) in self.active.iter_mut().enumerate() {
+                    fl.rate_mbs = rates[fi] as f64;
+                }
+            }
+            Err(e) => {
+                // Backend failure is a bug, not a model condition; degrade
+                // to equal split of the smallest link so the run finishes.
+                log::error!("fair_share failed: {e:#}");
+                let worst = self
+                    .uplink_mbps
+                    .iter()
+                    .chain(self.downlink_mbps.iter())
+                    .fold(f64::INFINITY, |a, b| a.min(*b));
+                let share = worst * MBPS_TO_MBS / f as f64;
+                for fl in &mut self.active {
+                    fl.rate_mbs = share;
+                }
+            }
+        }
+    }
+
+    /// Deliver completions, admit waiters, schedule the next wake.
+    fn replan(&mut self, api: &mut LpApi<Payload>) {
+        let now = api.now().secs();
+
+        // Completions at <= now.
+        let mut done = Vec::new();
+        self.active.retain(|fl| {
+            if fl.remaining_mb <= EPS_MB {
+                done.push((
+                    fl.spec.clone(),
+                    fl.started_at,
+                ));
+                false
+            } else {
+                true
+            }
+        });
+        for (spec, started_at) in done {
+            self.transfers_completed += 1;
+            let duration = now - started_at;
+            api.publish(
+                "transfer",
+                Json::obj(vec![
+                    ("xfer", Json::num(spec.id as f64)),
+                    ("src", Json::num(spec.src_center as f64)),
+                    ("dst", Json::num(spec.dst_center as f64)),
+                    ("mb", Json::num(spec.size_mb)),
+                    ("duration_s", Json::num(duration)),
+                    (
+                        "rate_mbps",
+                        Json::num(if duration > 0.0 {
+                            spec.size_mb * 8.0 / duration
+                        } else {
+                            0.0
+                        }),
+                    ),
+                    ("done_at", Json::num(now)),
+                    ("interrupts_so_far", Json::num(self.interrupts as f64)),
+                    // Simulator-state pressure (paper §3.1: "a larger number
+                    // of messages lead to an increase in the used physical
+                    // memory"): transfers concurrently held by the WAN.
+                    (
+                        "inflight",
+                        Json::num((self.active.len() + self.waiting.len()) as f64),
+                    ),
+                ]),
+            );
+            // Completion notice crosses the WAN: lookahead latency.
+            api.send_after(
+                self.lookahead,
+                spec.notify,
+                Payload::TransferComplete {
+                    xfer: spec.id,
+                    size_mb: spec.size_mb,
+                    dataset: spec.dataset.clone(),
+                    started: started_at,
+                },
+            );
+        }
+
+        // Admit queued transfers into free slots.
+        while self.active.len() < N_FLOWS {
+            let Some(spec) = self.waiting.pop_front() else { break };
+            self.active.push(Flow {
+                remaining_mb: spec.size_mb,
+                rate_mbs: 0.0,
+                started_at: now,
+                spec,
+            });
+        }
+
+        self.resolve_rates();
+
+        // Completion wakes.
+        if self.per_transfer_wakes {
+            // Faithful MONARC interrupt scheme: every active transfer gets
+            // its own re-timed completion event on every re-plan; the ones
+            // superseded by the next interrupt arrive stale (epoch check)
+            // and are discarded — the paper's per-event interrupt cost.
+            self.epoch += 1;
+            for fl in &self.active {
+                if fl.rate_mbs > 0.0 {
+                    let eta = fl.remaining_mb / fl.rate_mbs;
+                    api.wake_after(eta.max(0.0), Payload::WanWake { epoch: self.epoch });
+                }
+            }
+        } else {
+            // Batched optimization: a single earliest-completion wake.
+            let mut next: Option<f64> = None;
+            for fl in &self.active {
+                if fl.rate_mbs > 0.0 {
+                    let eta = fl.remaining_mb / fl.rate_mbs;
+                    next = Some(next.map_or(eta, |n: f64| n.min(eta)));
+                }
+            }
+            if let Some(eta) = next {
+                self.epoch += 1;
+                api.wake_after(eta.max(0.0), Payload::WanWake { epoch: self.epoch });
+            }
+        }
+    }
+}
+
+impl LogicalProcess<Payload> for WanLp {
+    fn handle(&mut self, event: &Event<Payload>, api: &mut LpApi<Payload>) {
+        match &event.payload {
+            Payload::TransferRequest(spec) => {
+                if spec.src_center >= self.centers || spec.dst_center >= self.centers {
+                    log::error!("transfer {} references unknown center", spec.id);
+                    return;
+                }
+                self.progress_to(api.now().secs());
+                self.waiting.push_back(spec.clone());
+                self.replan(api);
+            }
+            Payload::WanWake { epoch } => {
+                if *epoch != self.epoch {
+                    return; // stale wake superseded by an interrupt re-plan
+                }
+                self.progress_to(api.now().secs());
+                self.replan(api);
+            }
+            other => log::warn!("wan: unexpected {}", other.tag()),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        "wan"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+    use crate::engine::{Engine, SimTime, StepOutcome, SyncProtocol};
+    use crate::util::{AgentId, ContextId, LpId};
+
+    fn backend() -> Arc<ComputeBackend> {
+        Arc::new(ComputeBackend::load(BackendKind::Native, std::path::Path::new(".")).unwrap())
+    }
+
+    /// Sink LP recording TransferComplete times.
+    struct Sink;
+    impl LogicalProcess<Payload> for Sink {
+        fn handle(&mut self, ev: &Event<Payload>, api: &mut LpApi<Payload>) {
+            if let Payload::TransferComplete { xfer, .. } = &ev.payload {
+                api.publish(
+                    "complete",
+                    Json::obj(vec![
+                        ("xfer", Json::num(*xfer as f64)),
+                        ("t", Json::num(api.now().secs())),
+                    ]),
+                );
+            }
+        }
+    }
+
+    fn run_wan(
+        uplink: Vec<f64>,
+        downlink: Vec<f64>,
+        xfers: Vec<(f64, TransferSpec)>,
+    ) -> (Vec<(String, Json)>, f64) {
+        let centers = uplink.len();
+        let mut e: Engine<Payload> = Engine::new(
+            AgentId(1),
+            ContextId(1),
+            &[AgentId(1)],
+            0.05,
+            SyncProtocol::NullMessagesByDemand,
+        );
+        let wan =
+            WanLp::new(centers, uplink, downlink, backend(), 0.05).unwrap();
+        e.add_lp(LpId(1), Box::new(wan));
+        e.add_lp(LpId(2), Box::new(Sink));
+        for (t, s) in xfers {
+            e.schedule_initial(SimTime::new(t), LpId(1), Payload::TransferRequest(s));
+        }
+        while !matches!(e.step(), StepOutcome::Idle) {}
+        let lvt = e.lvt().secs();
+        (e.drain_outbox().results, lvt)
+    }
+
+    fn xfer(id: u64, src: usize, dst: usize, mb: f64) -> TransferSpec {
+        TransferSpec {
+            id,
+            src_center: src,
+            dst_center: dst,
+            size_mb: mb,
+            notify: LpId(2),
+            dataset: None,
+        }
+    }
+
+    #[test]
+    fn single_transfer_duration_matches_bandwidth() {
+        // 80 Mbps = 10 MB/s; 100 MB takes 10 s.
+        let (results, _) = run_wan(
+            vec![80.0, 80.0],
+            vec![80.0, 80.0],
+            vec![(0.0, xfer(1, 0, 1, 100.0))],
+        );
+        let rec = results.iter().find(|(k, _)| k == "transfer").unwrap();
+        let dur = rec.1.get("duration_s").unwrap().as_f64().unwrap();
+        assert!((dur - 10.0).abs() < 1e-6, "duration {dur}");
+    }
+
+    #[test]
+    fn two_transfers_share_uplink() {
+        // Both from center 0 (uplink 80 Mbps = 10 MB/s): each gets 5 MB/s.
+        // 50 MB each -> both finish at t = 10.
+        let (results, _) = run_wan(
+            vec![80.0, 80.0, 80.0],
+            vec![80.0, 80.0, 80.0],
+            vec![(0.0, xfer(1, 0, 1, 50.0)), (0.0, xfer(2, 0, 2, 50.0))],
+        );
+        let durs: Vec<f64> = results
+            .iter()
+            .filter(|(k, _)| k == "transfer")
+            .map(|(_, r)| r.get("duration_s").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(durs.len(), 2);
+        for d in durs {
+            assert!((d - 10.0).abs() < 1e-6, "duration {d}");
+        }
+    }
+
+    #[test]
+    fn late_arrival_interrupts_first() {
+        // t=0: xfer A (100 MB over 10 MB/s uplink). At t=4 (60 MB left) xfer
+        // B starts on the same uplink: each now 5 MB/s. A finishes at
+        // 4 + 60/5 = 16; B (40 MB) would finish at 4+8=12, then A speeds
+        // back to 10 MB/s at 12 with 20 MB left -> done at 14.
+        let (results, _) = run_wan(
+            vec![80.0, 80.0, 80.0],
+            vec![80.0, 80.0, 80.0],
+            vec![(0.0, xfer(1, 0, 1, 100.0)), (4.0, xfer(2, 0, 2, 40.0))],
+        );
+        let by_id = |id: f64| {
+            results
+                .iter()
+                .filter(|(k, _)| k == "transfer")
+                .find(|(_, r)| r.get("xfer").unwrap().as_f64() == Some(id))
+                .map(|(_, r)| r.get("done_at").unwrap().as_f64().unwrap())
+                .unwrap()
+        };
+        assert!((by_id(2.0) - 12.0).abs() < 1e-6, "B done {}", by_id(2.0));
+        assert!((by_id(1.0) - 14.0).abs() < 1e-6, "A done {}", by_id(1.0));
+    }
+
+    #[test]
+    fn interrupt_count_grows_with_contention() {
+        let solo = run_wan(
+            vec![80.0, 80.0],
+            vec![80.0, 80.0],
+            vec![(0.0, xfer(1, 0, 1, 100.0))],
+        );
+        let contended = run_wan(
+            vec![80.0, 80.0],
+            vec![80.0, 80.0],
+            (0..8)
+                .map(|i| (i as f64 * 1.0, xfer(i, 0, 1, 100.0)))
+                .collect(),
+        );
+        let last_interrupts = |res: &[(String, Json)]| {
+            res.iter()
+                .filter(|(k, _)| k == "transfer")
+                .map(|(_, r)| r.get("interrupts_so_far").unwrap().as_f64().unwrap())
+                .fold(0.0, f64::max)
+        };
+        assert!(last_interrupts(&contended.0) > last_interrupts(&solo.0) * 3.0);
+    }
+
+    #[test]
+    fn rejects_bad_topology() {
+        assert!(WanLp::new(2, vec![1.0], vec![1.0, 1.0], backend(), 0.05).is_err());
+        assert!(WanLp::new(2, vec![1.0, -1.0], vec![1.0, 1.0], backend(), 0.05).is_err());
+        assert!(WanLp::new(40, vec![1.0; 40], vec![1.0; 40], backend(), 0.05).is_err());
+    }
+}

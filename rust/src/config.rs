@@ -1,0 +1,391 @@
+//! Scenario + deployment configuration.
+//!
+//! Configs are JSON files (the offline snapshot has no TOML crate; the
+//! framework ships its own JSON implementation in [`crate::util::json`]).
+//! A config names the workload, its parameters, and how to deploy it:
+//! number of agents, sync protocol, worker threads, lookahead, compute
+//! backend.  `dsim run <config.json>` drives everything from here.
+
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::SyncProtocol;
+use crate::util::json::Json;
+
+/// How the placement scheduler and network model evaluate their numeric
+/// hot spots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT executables compiled from the AOT artifacts (default when
+    /// `artifacts/` is present).
+    Pjrt,
+    /// Pure-Rust fallback (identical algorithms, no XLA dependency).
+    Native,
+}
+
+impl FromStr for BackendKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            "native" | "rust" => Ok(BackendKind::Native),
+            other => Err(format!("unknown backend '{other}' (pjrt|native)")),
+        }
+    }
+}
+
+/// Placement policy for LP groups (paper §4.1 vs baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// The paper's performance-value / shortest-path scheduler.
+    PerfValue,
+    /// Round-robin over agents (baseline).
+    RoundRobin,
+    /// Uniform random over agents (baseline).
+    Random,
+}
+
+impl FromStr for PlacementPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "perf" | "perf-value" | "paper" => Ok(PlacementPolicy::PerfValue),
+            "rr" | "round-robin" => Ok(PlacementPolicy::RoundRobin),
+            "random" | "rand" => Ok(PlacementPolicy::Random),
+            other => Err(format!(
+                "unknown placement policy '{other}' (perf|rr|random)"
+            )),
+        }
+    }
+}
+
+/// Deployment parameters.
+#[derive(Clone, Debug)]
+pub struct DeployConfig {
+    /// Number of simulation agents.
+    pub agents: usize,
+    /// Worker threads per agent (0 = inline execution).
+    pub workers: usize,
+    /// Conservative sync variant.
+    pub protocol: SyncProtocol,
+    /// Placement policy.
+    pub placement: PlacementPolicy,
+    /// Compute backend for scheduler/network math.
+    pub backend: BackendKind,
+    /// Model lookahead override (seconds of virtual time); None = derive
+    /// from the scenario (min WAN latency).
+    pub lookahead: Option<f64>,
+    /// Directory holding the AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for DeployConfig {
+    fn default() -> Self {
+        DeployConfig {
+            agents: 2,
+            workers: 0,
+            protocol: SyncProtocol::NullMessagesByDemand,
+            placement: PlacementPolicy::PerfValue,
+            backend: BackendKind::Native,
+            lookahead: None,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+/// Workload parameters for the built-in scenario generators.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Generator name: "t0t1" | "farm" | "two-center".
+    pub name: String,
+    /// Regional centers (T1 count for t0t1).
+    pub centers: usize,
+    /// CPU units per center.
+    pub cpus_per_center: usize,
+    /// Jobs (analysis/production) per center.
+    pub jobs_per_center: usize,
+    /// T0->T1 WAN bandwidth, Mbps (the fig. 2 sweep parameter).
+    pub wan_bandwidth_mbps: f64,
+    /// WAN latency, virtual seconds (also the default lookahead).
+    pub wan_latency_s: f64,
+    /// Mean data volume per transfer, MB.
+    pub transfer_mb: f64,
+    /// Transfers per center for the replication study.
+    pub transfers_per_center: usize,
+    /// PRNG seed.
+    pub seed: u64,
+    /// MONARC-faithful per-transfer interrupt events in the WAN (fig. 2's
+    /// event blow-up mechanism); false = batched re-plan (optimized).
+    pub faithful_interrupts: bool,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            name: "t0t1".to_string(),
+            centers: 4,
+            cpus_per_center: 8,
+            jobs_per_center: 32,
+            wan_bandwidth_mbps: 622.0, // the paper-era transatlantic OC-12
+            wan_latency_s: 0.05,
+            transfer_mb: 500.0,
+            transfers_per_center: 64,
+            seed: 1,
+            faithful_interrupts: false,
+        }
+    }
+}
+
+/// The full config: deployment + workload.
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioConfig {
+    pub deploy: DeployConfig,
+    pub workload: WorkloadConfig,
+}
+
+fn get_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_f64().with_context(|| format!("field '{key}' must be a number")),
+    }
+}
+
+fn get_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => Ok(v
+            .as_u64()
+            .with_context(|| format!("field '{key}' must be a non-negative integer"))?
+            as usize),
+    }
+}
+
+fn get_str<'a>(j: &'a Json, key: &str, default: &str) -> Result<String> {
+    match j.get(key) {
+        None => Ok(default.to_string()),
+        Some(v) => Ok(v
+            .as_str()
+            .with_context(|| format!("field '{key}' must be a string"))?
+            .to_string()),
+    }
+}
+
+impl ScenarioConfig {
+    /// Parse from JSON text.
+    pub fn from_json_text(text: &str) -> Result<ScenarioConfig> {
+        let j = Json::parse(text).context("config is not valid JSON")?;
+        let d = j.get("deploy").cloned().unwrap_or(Json::obj(vec![]));
+        let w = j.get("workload").cloned().unwrap_or(Json::obj(vec![]));
+        let dd = DeployConfig::default();
+        let wd = WorkloadConfig::default();
+
+        let deploy = DeployConfig {
+            agents: get_usize(&d, "agents", dd.agents)?,
+            workers: get_usize(&d, "workers", dd.workers)?,
+            protocol: get_str(&d, "protocol", "demand")?
+                .parse()
+                .map_err(anyhow::Error::msg)?,
+            placement: get_str(&d, "placement", "perf")?
+                .parse()
+                .map_err(anyhow::Error::msg)?,
+            backend: get_str(&d, "backend", "native")?
+                .parse()
+                .map_err(anyhow::Error::msg)?,
+            lookahead: match d.get("lookahead") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().context("lookahead must be a number")?),
+            },
+            artifacts_dir: get_str(&d, "artifacts_dir", &dd.artifacts_dir)?,
+        };
+        let workload = WorkloadConfig {
+            name: get_str(&w, "name", &wd.name)?,
+            centers: get_usize(&w, "centers", wd.centers)?,
+            cpus_per_center: get_usize(&w, "cpus_per_center", wd.cpus_per_center)?,
+            jobs_per_center: get_usize(&w, "jobs_per_center", wd.jobs_per_center)?,
+            wan_bandwidth_mbps: get_f64(&w, "wan_bandwidth_mbps", wd.wan_bandwidth_mbps)?,
+            wan_latency_s: get_f64(&w, "wan_latency_s", wd.wan_latency_s)?,
+            transfer_mb: get_f64(&w, "transfer_mb", wd.transfer_mb)?,
+            transfers_per_center: get_usize(&w, "transfers_per_center", wd.transfers_per_center)?,
+            seed: get_usize(&w, "seed", wd.seed as usize)? as u64,
+            faithful_interrupts: w
+                .get("faithful_interrupts")
+                .and_then(Json::as_bool)
+                .unwrap_or(wd.faithful_interrupts),
+        };
+        let cfg = ScenarioConfig { deploy, workload };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<ScenarioConfig> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        Self::from_json_text(&text)
+    }
+
+    /// Sanity checks with actionable messages.
+    pub fn validate(&self) -> Result<()> {
+        if self.deploy.agents == 0 {
+            bail!("deploy.agents must be >= 1");
+        }
+        if self.deploy.agents > 64 {
+            bail!("deploy.agents must be <= 64 (AOT placement artifact is N=64)");
+        }
+        if let Some(l) = self.deploy.lookahead {
+            if l <= 0.0 {
+                bail!("deploy.lookahead must be > 0 (conservative sync)");
+            }
+        }
+        if self.workload.centers == 0 {
+            bail!("workload.centers must be >= 1");
+        }
+        if self.workload.wan_bandwidth_mbps <= 0.0 {
+            bail!("workload.wan_bandwidth_mbps must be > 0");
+        }
+        if self.workload.wan_latency_s <= 0.0 {
+            bail!("workload.wan_latency_s must be > 0 (it provides lookahead)");
+        }
+        if !["t0t1", "farm", "two-center"].contains(&self.workload.name.as_str()) {
+            bail!(
+                "unknown workload '{}' (t0t1|farm|two-center)",
+                self.workload.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Effective lookahead: explicit override or the WAN latency.
+    pub fn lookahead(&self) -> f64 {
+        self.deploy.lookahead.unwrap_or(self.workload.wan_latency_s)
+    }
+
+    /// Serialize (for golden tests / `dsim run --dump-config`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "deploy",
+                Json::obj(vec![
+                    ("agents", Json::num(self.deploy.agents as f64)),
+                    ("workers", Json::num(self.deploy.workers as f64)),
+                    ("protocol", Json::str(self.deploy.protocol.to_string())),
+                    (
+                        "placement",
+                        Json::str(match self.deploy.placement {
+                            PlacementPolicy::PerfValue => "perf",
+                            PlacementPolicy::RoundRobin => "rr",
+                            PlacementPolicy::Random => "random",
+                        }),
+                    ),
+                    (
+                        "backend",
+                        Json::str(match self.deploy.backend {
+                            BackendKind::Pjrt => "pjrt",
+                            BackendKind::Native => "native",
+                        }),
+                    ),
+                    (
+                        "lookahead",
+                        match self.deploy.lookahead {
+                            Some(l) => Json::num(l),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("artifacts_dir", Json::str(self.deploy.artifacts_dir.clone())),
+                ]),
+            ),
+            (
+                "workload",
+                Json::obj(vec![
+                    ("name", Json::str(self.workload.name.clone())),
+                    ("centers", Json::num(self.workload.centers as f64)),
+                    (
+                        "cpus_per_center",
+                        Json::num(self.workload.cpus_per_center as f64),
+                    ),
+                    (
+                        "jobs_per_center",
+                        Json::num(self.workload.jobs_per_center as f64),
+                    ),
+                    (
+                        "wan_bandwidth_mbps",
+                        Json::num(self.workload.wan_bandwidth_mbps),
+                    ),
+                    ("wan_latency_s", Json::num(self.workload.wan_latency_s)),
+                    ("transfer_mb", Json::num(self.workload.transfer_mb)),
+                    (
+                        "transfers_per_center",
+                        Json::num(self.workload.transfers_per_center as f64),
+                    ),
+                    ("seed", Json::num(self.workload.seed as f64)),
+                    (
+                        "faithful_interrupts",
+                        Json::Bool(self.workload.faithful_interrupts),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        ScenarioConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"{
+            "deploy": {"agents": 8, "workers": 2, "protocol": "eager",
+                       "placement": "rr", "backend": "native", "lookahead": 0.01},
+            "workload": {"name": "t0t1", "centers": 6, "wan_bandwidth_mbps": 1000.0,
+                         "seed": 42}
+        }"#;
+        let cfg = ScenarioConfig::from_json_text(text).unwrap();
+        assert_eq!(cfg.deploy.agents, 8);
+        assert_eq!(cfg.deploy.protocol, SyncProtocol::EagerNullMessages);
+        assert_eq!(cfg.deploy.placement, PlacementPolicy::RoundRobin);
+        assert_eq!(cfg.workload.centers, 6);
+        assert_eq!(cfg.workload.seed, 42);
+        assert_eq!(cfg.lookahead(), 0.01);
+        // Unspecified fields fall back to defaults.
+        assert_eq!(cfg.workload.cpus_per_center, 8);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ScenarioConfig::default();
+        let text = cfg.to_json().to_string();
+        let back = ScenarioConfig::from_json_text(&text).unwrap();
+        assert_eq!(back.deploy.agents, cfg.deploy.agents);
+        assert_eq!(back.workload.wan_bandwidth_mbps, cfg.workload.wan_bandwidth_mbps);
+        assert_eq!(back.deploy.lookahead, cfg.deploy.lookahead);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(ScenarioConfig::from_json_text(r#"{"deploy": {"agents": 0}}"#).is_err());
+        assert!(ScenarioConfig::from_json_text(r#"{"deploy": {"agents": 65}}"#).is_err());
+        assert!(ScenarioConfig::from_json_text(r#"{"deploy": {"lookahead": -1}}"#).is_err());
+        assert!(
+            ScenarioConfig::from_json_text(r#"{"workload": {"name": "bogus"}}"#).is_err()
+        );
+        assert!(ScenarioConfig::from_json_text("not json").is_err());
+        assert!(
+            ScenarioConfig::from_json_text(r#"{"workload": {"wan_bandwidth_mbps": -5}}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn lookahead_defaults_to_wan_latency() {
+        let cfg = ScenarioConfig::default();
+        assert_eq!(cfg.lookahead(), cfg.workload.wan_latency_s);
+    }
+}

@@ -1,0 +1,477 @@
+//! The simulation agent runtime: one OS thread hosting the engines of every
+//! simulation context deployed on this agent (paper fig. 3/4/9 — "each
+//! simulation agent will execute a set of event schedulers in parallel",
+//! isolated per context).
+//!
+//! The loop: drain transport messages into the right context's engine (the
+//! **context factory** role), step every started engine, forward outboxes,
+//! answer termination probes, publish monitoring samples.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::components::{build_component, BuildCtx};
+use crate::engine::{Engine, EngineStats, StepOutcome, WorkerPool};
+use crate::model::Payload;
+use crate::monitor::{HostSample, HostSampler, PerfWeights};
+use crate::runtime::ComputeBackend;
+use crate::space::Space;
+use crate::transport::{ControlMsg, NetMsg, Transport};
+use crate::util::json::Json;
+use crate::util::{AgentId, ContextId};
+
+/// Leader's agent id by convention.
+pub const LEADER: AgentId = AgentId(0);
+
+struct ContextSlot {
+    engine: Engine<Payload>,
+    started: bool,
+    /// Context-level event message counters for the double-count
+    /// termination protocol.
+    sent: u64,
+    received: u64,
+}
+
+/// Per-agent configuration.
+pub struct AgentConfig {
+    pub me: AgentId,
+    /// All agent ids participating in runs (excluding the leader).
+    pub peers: Vec<AgentId>,
+    pub lookahead: f64,
+    pub protocol: crate::engine::SyncProtocol,
+    /// Worker threads for intra-step parallelism (0 = inline).
+    pub workers: usize,
+}
+
+/// Runs an agent until `Shutdown`.  Generic over the transport so the same
+/// runtime serves in-process and TCP deployments.
+pub struct AgentRuntime<T: Transport<Payload>> {
+    cfg: AgentConfig,
+    transport: T,
+    backend: Arc<ComputeBackend>,
+    contexts: BTreeMap<ContextId, ContextSlot>,
+    space: Space,
+    sampler: HostSampler,
+    pool: Option<Arc<WorkerPool>>,
+    weights: PerfWeights,
+}
+
+impl<T: Transport<Payload>> AgentRuntime<T> {
+    pub fn new(cfg: AgentConfig, transport: T, backend: Arc<ComputeBackend>) -> Self {
+        let pool = if cfg.workers > 0 {
+            Some(Arc::new(WorkerPool::new(cfg.workers)))
+        } else {
+            None
+        };
+        let me = cfg.me;
+        AgentRuntime {
+            cfg,
+            transport,
+            backend,
+            contexts: BTreeMap::new(),
+            space: Space::new(me),
+            sampler: HostSampler::new(),
+            pool,
+            weights: PerfWeights::default(),
+        }
+    }
+
+    /// Access the replicated object space (tests / embedding).
+    pub fn space(&self) -> &Space {
+        &self.space
+    }
+
+    /// Main loop; returns on `Shutdown`.
+    pub fn run(&mut self) {
+        self.publish_perf();
+        loop {
+            // 1. Ingest everything queued on the transport.
+            let mut got_any = false;
+            for msg in self.transport.drain() {
+                got_any = true;
+                if !self.handle(msg) {
+                    return;
+                }
+            }
+
+            // 2. Step every started context until it blocks or goes idle
+            //    (bounded per outer iteration to stay responsive).
+            let mut progressed = false;
+            let ctx_ids: Vec<ContextId> = self.contexts.keys().copied().collect();
+            for ctx in ctx_ids {
+                progressed |= self.step_context(ctx);
+            }
+
+            // 3. Spin briefly, then park, when nothing is happening.
+            // Blocked-agent response latency paces every demand chain and
+            // GVT round, so a short busy-poll (~10us) before the 1ms park
+            // cuts end-to-end wall time by an order of magnitude when cores
+            // are available (measured in EXPERIMENTS.md §Perf).
+            if !got_any && !progressed {
+                let mut msg = None;
+                // On few-core hosts yielding lets the counterpart run;
+                // on many-core hosts the loop degrades to a short spin.
+                for _ in 0..32 {
+                    msg = self.transport.recv_timeout(Duration::ZERO);
+                    if msg.is_some() {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+                if msg.is_none() {
+                    msg = self.transport.recv_timeout(Duration::from_millis(1));
+                }
+                if let Some(m) = msg {
+                    if !self.handle(m) {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Returns false on shutdown.
+    fn handle(&mut self, msg: NetMsg<Payload>) -> bool {
+        match msg {
+            NetMsg::Event {
+                context,
+                event,
+                bound,
+            } => {
+                if let Some(slot) = self.contexts.get_mut(&context) {
+                    slot.received += 1;
+                    let from = event.src_agent;
+                    slot.engine.receive_remote(event);
+                    // Piggybacked promise refreshes the LVT queue for free.
+                    slot.engine
+                        .receive_sync(from, crate::engine::SyncMsg::LvtAnnounce { bound });
+                } else {
+                    log::warn!("{}: event for unknown {context}", self.cfg.me);
+                }
+            }
+            NetMsg::Sync { context, from, msg } => {
+                if let Some(slot) = self.contexts.get_mut(&context) {
+                    slot.engine.receive_sync(from, msg);
+                    self.flush_outbox(context);
+                }
+            }
+            NetMsg::Space(op) => self.space.apply_remote(op),
+            NetMsg::Control(c) => return self.handle_control(c),
+        }
+        true
+    }
+
+    fn handle_control(&mut self, c: ControlMsg) -> bool {
+        match c {
+            ControlMsg::DeployLp {
+                context,
+                lp,
+                kind,
+                params,
+            } => {
+                let ctx = BuildCtx {
+                    backend: Arc::clone(&self.backend),
+                    lookahead: self.cfg.lookahead,
+                };
+                let me = self.cfg.me;
+                let slot = self.context_slot(context);
+                match build_component(&kind, &params, &ctx) {
+                    Ok(comp) => slot.engine.add_lp(lp, comp),
+                    Err(e) => log::error!("{me}: deploy {kind} {lp}: {e:#}"),
+                }
+            }
+            ControlMsg::RoutingTable { context, routes } => {
+                // The routing table defines the context's participant set:
+                // agents hosting no LP of this context stay out of its
+                // synchronization entirely (their engine would only add
+                // demand-protocol dead weight).
+                let mut participants: Vec<AgentId> =
+                    routes.iter().map(|(_, a)| *a).collect();
+                participants.sort();
+                participants.dedup();
+                if !participants.contains(&self.cfg.me) {
+                    return true;
+                }
+                let slot = self.context_slot_with_peers(context, &participants);
+                for (lp, agent) in routes {
+                    slot.engine.route_lp(lp, agent);
+                }
+            }
+            ControlMsg::Bootstrap {
+                context,
+                time,
+                dst,
+                payload,
+            } => {
+                use crate::transport::Wire;
+                match Payload::from_json(&payload) {
+                    Ok(p) => {
+                        let slot = self.context_slot(context);
+                        slot.engine.schedule_initial(time, dst, p);
+                    }
+                    Err(e) => log::error!("bad bootstrap payload: {e:#}"),
+                }
+            }
+            ControlMsg::StartRun { context, .. } => {
+                // Non-participants never created the slot (see RoutingTable).
+                if let Some(slot) = self.contexts.get_mut(&context) {
+                    slot.started = true;
+                    slot.engine.announce_bound();
+                    self.flush_outbox(context);
+                }
+                self.publish_perf();
+            }
+            ControlMsg::Probe { context, round } => {
+                let (idle, sent, received, lvt, next_event) = match self.contexts.get(&context) {
+                    Some(slot) => (
+                        slot.started && slot.engine.is_idle(),
+                        slot.sent,
+                        slot.received,
+                        slot.engine.lvt(),
+                        slot.engine.next_event_time(),
+                    ),
+                    None => (
+                        true,
+                        0,
+                        0,
+                        crate::engine::SimTime::ZERO,
+                        crate::engine::SimTime::INF,
+                    ),
+                };
+                let _ = self.transport.send(
+                    LEADER,
+                    NetMsg::Control(ControlMsg::ProbeReply {
+                        context,
+                        round,
+                        from: self.cfg.me,
+                        idle,
+                        sent,
+                        received,
+                        lvt,
+                        next_event,
+                    }),
+                );
+            }
+            ControlMsg::GvtUpdate { context, gvt } => {
+                if let Some(slot) = self.contexts.get_mut(&context) {
+                    slot.engine.observe_gvt(gvt);
+                    self.flush_outbox(context);
+                }
+            }
+            ControlMsg::EndRun { context } => {
+                if self.contexts.get(&context).is_none() {
+                    // Non-participant: report empty stats so the leader's
+                    // collection completes.
+                    let _ = self.transport.send(
+                        LEADER,
+                        NetMsg::Control(ControlMsg::FinalStats {
+                            context,
+                            from: self.cfg.me,
+                            stats: engine_stats_json(&EngineStats::default(), 0.0),
+                        }),
+                    );
+                }
+                if let Some(mut slot) = self.contexts.remove(&context) {
+                    slot.engine.announce_finished();
+                    // Peers may already be gone; ignore send failures.
+                    let out = slot.engine.drain_outbox();
+                    for (to, sync) in out.sync {
+                        let _ = self.transport.send(
+                            to,
+                            NetMsg::Sync {
+                                context,
+                                from: self.cfg.me,
+                                msg: sync,
+                            },
+                        );
+                    }
+                    let stats = engine_stats_json(slot.engine.stats(), slot.engine.lvt().secs());
+                    let _ = self.transport.send(
+                        LEADER,
+                        NetMsg::Control(ControlMsg::FinalStats {
+                            context,
+                            from: self.cfg.me,
+                            stats,
+                        }),
+                    );
+                }
+                self.publish_perf();
+            }
+            ControlMsg::Shutdown => return false,
+            other => log::warn!("{}: unexpected control {other:?}", self.cfg.me),
+        }
+        true
+    }
+
+    fn context_slot(&mut self, context: ContextId) -> &mut ContextSlot {
+        let peers = self.cfg.peers.clone();
+        self.context_slot_with_peers(context, &peers)
+    }
+
+    /// Get-or-create the context slot; on creation the engine's peer set is
+    /// `peers` (the context's participants).  The leader sends the routing
+    /// table first on a FIFO channel, so the slot is always created with
+    /// the narrowed participant set before any DeployLp/Bootstrap arrives.
+    fn context_slot_with_peers(
+        &mut self,
+        context: ContextId,
+        peers: &[AgentId],
+    ) -> &mut ContextSlot {
+        let cfg = &self.cfg;
+        let pool = self.pool.clone();
+        self.contexts.entry(context).or_insert_with(|| {
+            let mut engine = Engine::new(cfg.me, context, peers, cfg.lookahead, cfg.protocol);
+            if let Some(p) = pool {
+                engine = engine.with_workers(p);
+            }
+            ContextSlot {
+                engine,
+                started: false,
+                sent: 0,
+                received: 0,
+            }
+        })
+    }
+
+    /// Step one context until it blocks/idles; returns true if any event
+    /// was processed.
+    fn step_context(&mut self, ctx: ContextId) -> bool {
+        let started = match self.contexts.get(&ctx) {
+            Some(s) => s.started,
+            None => return false,
+        };
+        if !started {
+            return false;
+        }
+        let mut progressed = false;
+        // Budget: a full drain could starve the transport; 256 steps is
+        // plenty per outer loop (each step can process many events).
+        for _ in 0..256 {
+            let outcome = {
+                let slot = self.contexts.get_mut(&ctx).unwrap();
+                slot.engine.step()
+            };
+            self.flush_outbox(ctx);
+            match outcome {
+                StepOutcome::Processed(_) => progressed = true,
+                StepOutcome::Blocked(_) | StepOutcome::Idle => break,
+            }
+        }
+        progressed
+    }
+
+    /// Forward engine outbox + space replication to the fabric.
+    fn flush_outbox(&mut self, ctx: ContextId) {
+        let Some(slot) = self.contexts.get_mut(&ctx) else { return };
+        let out = slot.engine.drain_outbox();
+        for (to, event) in out.events {
+            slot.sent += 1;
+            let bound = slot.engine.bound_for(to);
+            if let Err(e) = self.transport.send(
+                to,
+                NetMsg::Event {
+                    context: ctx,
+                    event,
+                    bound,
+                },
+            ) {
+                log::error!("{}: send event to {to}: {e:#}", self.cfg.me);
+            }
+        }
+        for (to, sync) in out.sync {
+            let _ = self.transport.send(
+                to,
+                NetMsg::Sync {
+                    context: ctx,
+                    from: self.cfg.me,
+                    msg: sync,
+                },
+            );
+        }
+        for (kind, record) in out.results {
+            let _ = self.transport.send(
+                LEADER,
+                NetMsg::Control(ControlMsg::Result {
+                    context: ctx,
+                    kind,
+                    record,
+                }),
+            );
+        }
+        for op in self.space.drain_outbox() {
+            for peer in self.transport.agents() {
+                if peer != self.cfg.me && peer != LEADER {
+                    let _ = self.transport.send(peer, NetMsg::Space(op.clone()));
+                }
+            }
+        }
+    }
+
+    /// Publish a monitoring sample to the leader (LISA -> MonitorHub).
+    fn publish_perf(&mut self) {
+        let lp_count: usize = self.contexts.values().map(|s| s.engine.lp_count()).sum();
+        // In-proc deployments have no real RTT; charge a nominal wire cost.
+        let sample = self.sampler.sample(lp_count, 0.1);
+        let value = crate::monitor::perf_value(&sample, &self.weights);
+        let _ = self.transport.send(
+            LEADER,
+            NetMsg::Control(ControlMsg::PerfSample {
+                from: self.cfg.me,
+                value,
+                load: sample.to_json(),
+            }),
+        );
+    }
+}
+
+/// Encode engine statistics for the FinalStats control message.
+pub fn engine_stats_json(s: &EngineStats, lvt_s: f64) -> Json {
+    Json::obj(vec![
+        ("events_processed", Json::num(s.events_processed as f64)),
+        ("events_sent_local", Json::num(s.events_sent_local as f64)),
+        ("events_sent_remote", Json::num(s.events_sent_remote as f64)),
+        ("null_messages_sent", Json::num(s.null_messages_sent as f64)),
+        ("lvt_requests_sent", Json::num(s.lvt_requests_sent as f64)),
+        (
+            "lvt_requests_received",
+            Json::num(s.lvt_requests_received as f64),
+        ),
+        ("blocked_steps", Json::num(s.blocked_steps as f64)),
+        ("lookahead_clamps", Json::num(s.lookahead_clamps as f64)),
+        ("max_queue_len", Json::num(s.max_queue_len as f64)),
+        ("steps", Json::num(s.steps as f64)),
+        ("lps_finished", Json::num(s.lps_finished as f64)),
+        ("lvt", Json::num(lvt_s)),
+    ])
+}
+
+/// Decode the counters we aggregate on the leader side.
+pub fn stats_from_json(j: &Json) -> Option<HostStatsView> {
+    Some(HostStatsView {
+        events_processed: j.get("events_processed")?.as_u64()?,
+        events_sent_remote: j.get("events_sent_remote")?.as_u64()?,
+        null_messages_sent: j.get("null_messages_sent")?.as_u64()?,
+        lvt_requests_sent: j.get("lvt_requests_sent")?.as_u64()?,
+        blocked_steps: j.get("blocked_steps")?.as_u64()?,
+        max_queue_len: j.get("max_queue_len")?.as_u64()? as usize,
+        lvt_s: j.get("lvt")?.as_f64()?,
+    })
+}
+
+/// Leader-side view of one agent's final counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HostStatsView {
+    pub events_processed: u64,
+    pub events_sent_remote: u64,
+    pub null_messages_sent: u64,
+    pub lvt_requests_sent: u64,
+    pub blocked_steps: u64,
+    pub max_queue_len: usize,
+    pub lvt_s: f64,
+}
+
+#[allow(unused)]
+fn _assert_host_sample_used(s: HostSample) -> Json {
+    s.to_json()
+}

@@ -1,0 +1,218 @@
+//! Event queue structures used by the event scheduler (paper fig. 6).
+//!
+//! "The events received from logical processes running on other simulation
+//! agents ... are kept in separate queues ... One separate queue is used to
+//! keep the events produced by the local logical processes.  The LVT queue
+//! is used in order to keep track of current dependencies between the values
+//! of LVT on various running nodes."
+//!
+//! Implementation note: we keep one min-heap for *all* pending events (the
+//! per-source split of fig. 6 survives as per-source counters).  An agent
+//! hosting many LPs emits events whose timestamps are **not** monotone per
+//! destination channel (two LPs handled in one step may schedule with very
+//! different delays), so — unlike classic per-link CMB — a queued event's
+//! timestamp is *not* a promise of channel silence below it.  All safety
+//! information therefore lives in the [`LvtTable`], which is fed only by
+//! explicit peer promises (`LvtAnnounce` / request piggybacks).
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+
+use super::{Event, SimTime};
+use crate::util::AgentId;
+
+/// Key ordering for the heap.
+type Key = (SimTime, (u64, u64));
+
+struct HeapItem<P>(Event<P>);
+
+impl<P> PartialEq for HeapItem<P> {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.key() == other.0.key()
+    }
+}
+impl<P> Eq for HeapItem<P> {}
+impl<P> PartialOrd for HeapItem<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<P> Ord for HeapItem<P> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.key().cmp(&other.0.key())
+    }
+}
+
+/// Pending-event store: one min-heap + per-source statistics.
+pub struct EventQueues<P> {
+    heap: BinaryHeap<Reverse<HeapItem<P>>>,
+    /// Events received per source agent (fig. 6's per-channel view).
+    per_source: BTreeMap<AgentId, u64>,
+}
+
+impl<P> EventQueues<P> {
+    pub fn new(peers: impl Iterator<Item = AgentId>) -> Self {
+        EventQueues {
+            heap: BinaryHeap::new(),
+            per_source: peers.map(|p| (p, 0)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn push_local(&mut self, ev: Event<P>) {
+        self.heap.push(Reverse(HeapItem(ev)));
+    }
+
+    pub fn push_remote(&mut self, ev: Event<P>) {
+        debug_assert!(
+            self.per_source.contains_key(&ev.src_agent),
+            "event from unknown peer {}",
+            ev.src_agent
+        );
+        *self.per_source.entry(ev.src_agent).or_insert(0) += 1;
+        self.heap.push(Reverse(HeapItem(ev)));
+    }
+
+    /// How many events arrived from `peer` so far.
+    pub fn received_from(&self, peer: AgentId) -> u64 {
+        self.per_source.get(&peer).copied().unwrap_or(0)
+    }
+
+    /// The smallest (time, tie) key across all pending events.
+    pub fn min_key(&self) -> Option<Key> {
+        self.heap.peek().map(|Reverse(h)| h.0.key())
+    }
+
+    /// Pop every event with timestamp exactly `ts` (one simulation step),
+    /// in deterministic key order.
+    pub fn pop_at(&mut self, ts: SimTime) -> Vec<Event<P>> {
+        let mut out = Vec::new();
+        while let Some(Reverse(h)) = self.heap.peek() {
+            if h.0.time == ts {
+                out.push(self.heap.pop().unwrap().0 .0);
+            } else {
+                break;
+            }
+        }
+        // Heap pops are already key-ordered; keep the sort as a guard for
+        // equal keys (cannot happen — keys are unique — but cheap).
+        debug_assert!(out.windows(2).all(|w| w[0].key() <= w[1].key()));
+        out
+    }
+}
+
+/// The paper's **LVT queue**: last known virtual-time bound per peer agent.
+/// A bound of `-inf` means "never heard from" — the demand protocol must ask
+/// before any event can be processed.
+pub struct LvtTable {
+    bounds: BTreeMap<AgentId, SimTime>,
+}
+
+impl LvtTable {
+    pub fn new(peers: impl Iterator<Item = AgentId>) -> Self {
+        LvtTable {
+            bounds: peers.map(|p| (p, SimTime::NEG_INF)).collect(),
+        }
+    }
+
+    /// Raise (never lower) a peer's known bound — §4.3 update rules: LVT
+    /// messages only ever *advance* knowledge.
+    pub fn observe(&mut self, peer: AgentId, t: SimTime) {
+        if let Some(b) = self.bounds.get_mut(&peer) {
+            if t > *b {
+                *b = t;
+            }
+        }
+    }
+
+    pub fn bound(&self, peer: AgentId) -> SimTime {
+        self.bounds.get(&peer).copied().unwrap_or(SimTime::INF)
+    }
+
+    pub fn peers(&self) -> Vec<AgentId> {
+        self.bounds.keys().copied().collect()
+    }
+
+    /// Smallest bound across peers (a conservative lower estimate of GVT
+    /// from this agent's perspective).
+    pub fn min_bound(&self) -> SimTime {
+        self.bounds.values().copied().min().unwrap_or(SimTime::INF)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::LpId;
+
+    fn ev(t: f64, tie: (u64, u64), src: u64) -> Event<u32> {
+        Event {
+            time: SimTime::new(t),
+            tie,
+            src_agent: AgentId(src),
+            src_lp: LpId(1),
+            dst_lp: LpId(2),
+            payload: 0,
+        }
+    }
+
+    #[test]
+    fn min_key_across_local_and_remote() {
+        let mut q = EventQueues::new([AgentId(2), AgentId(3)].into_iter());
+        q.push_local(ev(5.0, (1, 1), 1));
+        q.push_remote(ev(3.0, (2, 1), 2));
+        q.push_remote(ev(4.0, (3, 1), 3));
+        assert_eq!(q.min_key().unwrap().0, SimTime::new(3.0));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.received_from(AgentId(2)), 1);
+    }
+
+    #[test]
+    fn pop_at_takes_whole_timestep_sorted() {
+        let mut q = EventQueues::new([AgentId(2)].into_iter());
+        q.push_local(ev(1.0, (1, 2), 1));
+        q.push_local(ev(1.0, (1, 1), 1));
+        q.push_remote(ev(1.0, (2, 1), 2));
+        q.push_local(ev(2.0, (1, 3), 1));
+        let batch = q.pop_at(SimTime::new(1.0));
+        assert_eq!(batch.len(), 3);
+        let ties: Vec<_> = batch.iter().map(|e| e.tie).collect();
+        assert_eq!(ties, vec![(1, 1), (1, 2), (2, 1)]);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn out_of_order_remote_timestamps_accepted() {
+        // Aggregated channels are NOT timestamp-monotone; the queue must
+        // accept t=7 after t=9 from the same source.
+        let mut q = EventQueues::new([AgentId(2)].into_iter());
+        q.push_remote(ev(9.0, (2, 1), 2));
+        q.push_remote(ev(7.0, (2, 2), 2));
+        assert_eq!(q.min_key().unwrap().0, SimTime::new(7.0));
+        assert_eq!(q.received_from(AgentId(2)), 2);
+    }
+
+    #[test]
+    fn lvt_table_only_advances() {
+        let mut t = LvtTable::new([AgentId(2)].into_iter());
+        assert_eq!(t.bound(AgentId(2)), SimTime::NEG_INF);
+        t.observe(AgentId(2), SimTime::new(5.0));
+        t.observe(AgentId(2), SimTime::new(3.0)); // stale info ignored
+        assert_eq!(t.bound(AgentId(2)), SimTime::new(5.0));
+        assert_eq!(t.min_bound(), SimTime::new(5.0));
+    }
+
+    #[test]
+    fn empty_queues_have_no_key() {
+        let q: EventQueues<u32> = EventQueues::new(std::iter::empty());
+        assert!(q.min_key().is_none());
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,106 @@
+//! Conservative synchronization protocols (paper §4.3).
+//!
+//! Both protocols guarantee causal consistency the CMB way: an event is
+//! processed only when no channel can later deliver a lower timestamp.
+//! They differ in how LVT knowledge propagates:
+//!
+//! * [`SyncProtocol::NullMessagesByDemand`] — the paper's algorithm
+//!   (adapted from Ferscha 1995): an agent that cannot proceed *asks* the
+//!   lagging peers for their LVT (one request message, which itself carries
+//!   the asker's clock) and the peer answers when its own bound passes the
+//!   demanded value.  "Only one message is used to ask for the current value
+//!   of the remote virtual time and also to send the local current value."
+//!
+//! * [`SyncProtocol::EagerNullMessages`] — the classic CMB baseline: after
+//!   every processed step an agent floods `LVT + lookahead` announcements to
+//!   all peers, whether anyone needs them or not.  Simple, chatty; the
+//!   paper's comparison target.
+//!
+//! The mechanics live in [`super::Engine`]; this module holds the protocol
+//! selector so configs/benches can name it, plus the GVT helper.
+
+use std::fmt;
+use std::str::FromStr;
+
+use super::SimTime;
+
+/// Which conservative variant the engine runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncProtocol {
+    /// Paper §4.3: request/answer LVT only when blocked (default).
+    NullMessagesByDemand,
+    /// Classic CMB: broadcast null messages after every step (baseline).
+    EagerNullMessages,
+}
+
+impl Default for SyncProtocol {
+    fn default() -> Self {
+        SyncProtocol::NullMessagesByDemand
+    }
+}
+
+impl fmt::Display for SyncProtocol {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SyncProtocol::NullMessagesByDemand => write!(f, "demand"),
+            SyncProtocol::EagerNullMessages => write!(f, "eager"),
+        }
+    }
+}
+
+impl FromStr for SyncProtocol {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "demand" | "null-by-demand" | "nmd" => Ok(SyncProtocol::NullMessagesByDemand),
+            "eager" | "cmb" | "null" => Ok(SyncProtocol::EagerNullMessages),
+            other => Err(format!("unknown sync protocol '{other}' (demand|eager)")),
+        }
+    }
+}
+
+/// Global virtual time estimate from a set of per-agent observations:
+/// the minimum over every agent's LVT and every in-flight message time.
+/// Used by the coordinator for progress reporting and termination sanity
+/// checks (termination itself uses the double-count protocol, see
+/// `coordinator::termination`).
+pub fn gvt_estimate(agent_lvts: &[SimTime], in_flight_min: Option<SimTime>) -> SimTime {
+    let base = agent_lvts.iter().copied().min().unwrap_or(SimTime::ZERO);
+    match in_flight_min {
+        Some(t) => base.min(t),
+        None => base,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn protocol_parse_roundtrip() {
+        assert_eq!(
+            "demand".parse::<SyncProtocol>().unwrap(),
+            SyncProtocol::NullMessagesByDemand
+        );
+        assert_eq!(
+            "cmb".parse::<SyncProtocol>().unwrap(),
+            SyncProtocol::EagerNullMessages
+        );
+        assert!("bogus".parse::<SyncProtocol>().is_err());
+        assert_eq!(
+            SyncProtocol::NullMessagesByDemand.to_string(),
+            "demand"
+        );
+    }
+
+    #[test]
+    fn gvt_is_min_of_lvts_and_inflight() {
+        let lvts = [SimTime::new(5.0), SimTime::new(3.0), SimTime::new(9.0)];
+        assert_eq!(gvt_estimate(&lvts, None), SimTime::new(3.0));
+        assert_eq!(
+            gvt_estimate(&lvts, Some(SimTime::new(1.0))),
+            SimTime::new(1.0)
+        );
+        assert_eq!(gvt_estimate(&[], None), SimTime::ZERO);
+    }
+}

@@ -1,0 +1,152 @@
+//! Worker-thread pool and LP lifecycle states (paper §4.3).
+//!
+//! "For the creation of logical processes a pool of worker threads is used.
+//! This eliminates the overhead caused by creating new threads and
+//! destroying them."  The pool executes the LP handlers of one simulation
+//! step; the engine joins the step with a completion channel, matching the
+//! paper's barrier ("the scheduler will let all the ready logical processes
+//! run ... after it finishes processing the events from the current
+//! simulation step").
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Lifecycle of a logical process (paper §4.3: "a logical process can be in
+/// one of five possible states").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LpState {
+    /// Built, not yet picked up by a worker.
+    Created,
+    /// Assigned to a worker, waiting for its step to start.
+    Ready,
+    /// Handler executing.
+    Running,
+    /// Parked until the next event arrives.
+    Waiting,
+    /// Done; removed from the engine.
+    Finished,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Cmd {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed-size pool of worker threads executing boxed closures.
+///
+/// Shared work queue guarded by a mutex + condvar-free mpsc pattern: a
+/// single `Receiver` behind a mutex is plenty at step granularity (handlers
+/// do the real work; dispatch cost is amortized over a whole timestep batch).
+pub struct WorkerPool {
+    tx: Sender<Cmd>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "worker pool needs at least one thread");
+        let (tx, rx) = channel::<Cmd>();
+        let rx = Arc::new(Mutex::new(rx));
+        let threads = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("dsim-worker-{i}"))
+                    .spawn(move || loop {
+                        let cmd = {
+                            let guard = rx.lock().expect("worker queue poisoned");
+                            guard.recv()
+                        };
+                        match cmd {
+                            Ok(Cmd::Run(job)) => job(),
+                            Ok(Cmd::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        WorkerPool { tx, threads }
+    }
+
+    /// Queue a job for execution on some worker.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .send(Cmd::Run(Box::new(f)))
+            .expect("worker pool shut down");
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.threads.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for _ in &self.threads {
+            let _ = self.tx.send(Cmd::Shutdown);
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn drop_joins_threads() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.size(), 2);
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn jobs_run_in_parallel() {
+        // Two jobs that each wait for the other's signal deadlock unless
+        // they run on distinct workers.
+        let pool = WorkerPool::new(2);
+        let (ta, ra) = channel();
+        let (tb, rb) = channel();
+        let (done_tx, done_rx) = channel();
+        let d1 = done_tx.clone();
+        pool.execute(move || {
+            ta.send(()).unwrap();
+            rb.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            d1.send(()).unwrap();
+        });
+        pool.execute(move || {
+            tb.send(()).unwrap();
+            ra.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            done_tx.send(()).unwrap();
+        });
+        done_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        done_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+    }
+}

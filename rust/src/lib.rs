@@ -1,0 +1,63 @@
+//! # dsim — Distributed Simulation Framework for Large-Scale Distributed Systems
+//!
+//! A Rust + JAX/Pallas reproduction of *"Simulation Framework for Modeling
+//! Large-Scale Distributed Systems"* (Dobre, Cristea, Legrand — CS.DC 2011):
+//! a distributed discrete-event simulation (DDES) framework derived from the
+//! MONARC regional-center simulation model.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: simulation agents
+//!   hosting logical processes over a conservative synchronization engine
+//!   (null-messages-by-demand), a performance-value placement scheduler, a
+//!   replicated object space (JavaSpaces-like), lookup + monitoring services
+//!   and the MONARC component library (CPUs, network with interrupt-based
+//!   fair sharing, databases, mass storage, regional centers).
+//! * **Layer 2 (python/compile/model.py, build-time)** — JAX graphs for the
+//!   numeric hot spots: all-pairs-shortest-path placement scoring and
+//!   max-min fair bandwidth allocation.
+//! * **Layer 1 (python/compile/kernels/, build-time)** — Pallas kernels
+//!   (tiled min-plus matmul; water-filling sweep) called by L2.
+//!
+//! L2/L1 are AOT-lowered once to HLO text (`make artifacts`) and executed
+//! from Rust via the PJRT C API ([`runtime`]); Python never runs at
+//! simulation time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dsim::prelude::*;
+//!
+//! let scenario = dsim::workload::two_center_demo();
+//! let report = Deployment::in_process(2)
+//!     .run(scenario)
+//!     .expect("simulation failed");
+//! println!("completed {} jobs", report.jobs_completed);
+//! ```
+
+pub mod bench;
+pub mod components;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod lookup;
+pub mod metrics;
+pub mod model;
+pub mod monitor;
+pub mod runtime;
+pub mod space;
+pub mod testkit;
+pub mod transport;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports for the common user-facing API surface.
+pub mod prelude {
+    pub use crate::components::RegionalCenter;
+    pub use crate::config::ScenarioConfig;
+    pub use crate::coordinator::{Deployment, RunReport};
+    pub use crate::engine::{SimTime, SyncProtocol};
+    pub use crate::metrics::ResultPool;
+    pub use crate::model::Scenario;
+    pub use crate::runtime::ComputeBackend;
+}

@@ -1,0 +1,153 @@
+//! Lookup service — the Jini discovery substitute (paper §4).
+//!
+//! "The problem of dynamic lookup of the simulation agents across the
+//! network is addressed by a set of lookup services based on Jini
+//! technology."  This module provides the same semantics without a JVM:
+//!
+//! * agents **register** with a lease (TTL) and an address/attribute set,
+//! * registrations must be **renewed** before the lease expires,
+//! * clients **discover** the currently-live agent set,
+//! * expired leases disappear — the framework's failure-detection primitive
+//!   ("by using dynamic registration and discovery the simulation agents
+//!   ... can cope with the different types of failures").
+//!
+//! Time is injected (`now_ms`) so expiry is deterministic in tests; the
+//! coordinator drives it from a monotonic clock.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::AgentId;
+
+/// A live registration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Registration {
+    pub agent: AgentId,
+    /// Opaque contact info (TCP address, or empty for in-proc).
+    pub address: String,
+    /// Free-form attributes (capabilities, host name, ...).
+    pub attrs: Json,
+    /// Lease expiry, milliseconds on the service's clock.
+    pub lease_expires_ms: u64,
+}
+
+/// The lookup service registry.
+pub struct LookupService {
+    entries: Mutex<BTreeMap<AgentId, Registration>>,
+    default_ttl_ms: u64,
+}
+
+impl LookupService {
+    pub fn new(default_ttl_ms: u64) -> Self {
+        LookupService {
+            entries: Mutex::new(BTreeMap::new()),
+            default_ttl_ms,
+        }
+    }
+
+    /// Register (or re-register) an agent; returns the granted lease expiry.
+    pub fn register(&self, agent: AgentId, address: &str, attrs: Json, now_ms: u64) -> u64 {
+        let expires = now_ms + self.default_ttl_ms;
+        self.entries.lock().unwrap().insert(
+            agent,
+            Registration {
+                agent,
+                address: address.to_string(),
+                attrs,
+                lease_expires_ms: expires,
+            },
+        );
+        expires
+    }
+
+    /// Renew a lease.  Returns the new expiry, or None if the registration
+    /// already expired (the agent must fully re-register).
+    pub fn renew(&self, agent: AgentId, now_ms: u64) -> Option<u64> {
+        let mut entries = self.entries.lock().unwrap();
+        match entries.get_mut(&agent) {
+            Some(r) if r.lease_expires_ms > now_ms => {
+                r.lease_expires_ms = now_ms + self.default_ttl_ms;
+                Some(r.lease_expires_ms)
+            }
+            _ => None,
+        }
+    }
+
+    /// Explicit deregistration (graceful shutdown).
+    pub fn deregister(&self, agent: AgentId) {
+        self.entries.lock().unwrap().remove(&agent);
+    }
+
+    /// All live registrations at `now_ms` (expired ones are dropped).
+    pub fn discover(&self, now_ms: u64) -> Vec<Registration> {
+        let mut entries = self.entries.lock().unwrap();
+        entries.retain(|_, r| r.lease_expires_ms > now_ms);
+        entries.values().cloned().collect()
+    }
+
+    /// Live agent ids only.
+    pub fn live_agents(&self, now_ms: u64) -> Vec<AgentId> {
+        self.discover(now_ms).into_iter().map(|r| r.agent).collect()
+    }
+
+    /// Look up one agent.
+    pub fn find(&self, agent: AgentId, now_ms: u64) -> Option<Registration> {
+        self.discover(now_ms).into_iter().find(|r| r.agent == agent)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn attrs() -> Json {
+        Json::obj(vec![("host", Json::str("node1"))])
+    }
+
+    #[test]
+    fn register_discover() {
+        let svc = LookupService::new(1000);
+        svc.register(AgentId(1), "127.0.0.1:9000", attrs(), 0);
+        svc.register(AgentId(2), "127.0.0.1:9001", attrs(), 0);
+        let live = svc.discover(500);
+        assert_eq!(live.len(), 2);
+        assert_eq!(svc.find(AgentId(1), 500).unwrap().address, "127.0.0.1:9000");
+    }
+
+    #[test]
+    fn lease_expiry_drops_agent() {
+        let svc = LookupService::new(1000);
+        svc.register(AgentId(1), "a", attrs(), 0);
+        assert_eq!(svc.live_agents(999).len(), 1);
+        assert_eq!(svc.live_agents(1000).len(), 0); // expired exactly at TTL
+    }
+
+    #[test]
+    fn renew_extends_lease() {
+        let svc = LookupService::new(1000);
+        svc.register(AgentId(1), "a", attrs(), 0);
+        assert_eq!(svc.renew(AgentId(1), 900), Some(1900));
+        assert_eq!(svc.live_agents(1500).len(), 1);
+        // Cannot renew after expiry.
+        assert_eq!(svc.renew(AgentId(1), 2500), None);
+        assert!(svc.live_agents(2500).is_empty());
+    }
+
+    #[test]
+    fn reregistration_replaces() {
+        let svc = LookupService::new(1000);
+        svc.register(AgentId(1), "old", attrs(), 0);
+        svc.register(AgentId(1), "new", attrs(), 100);
+        assert_eq!(svc.find(AgentId(1), 200).unwrap().address, "new");
+        assert_eq!(svc.discover(200).len(), 1);
+    }
+
+    #[test]
+    fn deregister_immediate() {
+        let svc = LookupService::new(1000);
+        svc.register(AgentId(1), "a", attrs(), 0);
+        svc.deregister(AgentId(1));
+        assert!(svc.live_agents(1).is_empty());
+    }
+}

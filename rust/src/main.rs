@@ -1,0 +1,192 @@
+//! `dsim` — CLI for the distributed simulation framework.
+//!
+//! Subcommands (hand-rolled parser; the offline snapshot has no clap):
+//!
+//! ```text
+//! dsim run <config.json> [--results out.jsonl]   run a scenario from config
+//! dsim demo                                      run the two-center demo
+//! dsim sweep-bandwidth <mbps...>                 fig. 2 style sweep
+//! dsim agent --me N --bind ADDR --peers SPEC     TCP-mode agent process
+//! dsim check-artifacts [dir]                     verify AOT artifacts load
+//! ```
+use std::path::Path;
+use std::process::ExitCode;
+
+use dsim::config::{BackendKind, ScenarioConfig};
+use dsim::coordinator::Deployment;
+use dsim::runtime::ComputeBackend;
+use dsim::workload;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let result = match cmd {
+        "run" => cmd_run(rest),
+        "demo" => cmd_demo(),
+        "sweep-bandwidth" => cmd_sweep(rest),
+        "agent" => cmd_agent(rest),
+        "check-artifacts" => cmd_check_artifacts(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            Err(anyhow::anyhow!("bad usage"))
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "dsim — distributed discrete-event simulation framework (MONARC reproduction)
+
+USAGE:
+  dsim run <config.json> [--results out.jsonl]
+  dsim demo
+  dsim sweep-bandwidth <mbps> [<mbps> ...]
+  dsim agent --me <id> --bind <addr> --peers <id=addr,id=addr,...>
+  dsim check-artifacts [dir]
+"
+    );
+}
+
+fn cmd_run(args: &[String]) -> anyhow::Result<()> {
+    let path = args
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: dsim run <config.json>"))?;
+    let cfg = ScenarioConfig::load(Path::new(path))?;
+    let generated = workload::generate(&cfg.workload);
+    let report = Deployment::from_config(&cfg).run(generated)?;
+    println!("{}", report.summary());
+    for (agent, s) in &report.per_agent {
+        println!(
+            "  {agent}: events={} remote={} null={} reqs={} blocked={} maxq={}",
+            s.events_processed,
+            s.events_sent_remote,
+            s.null_messages_sent,
+            s.lvt_requests_sent,
+            s.blocked_steps,
+            s.max_queue_len
+        );
+    }
+    if let Some(i) = args.iter().position(|a| a == "--results") {
+        let out = args
+            .get(i + 1)
+            .ok_or_else(|| anyhow::anyhow!("--results needs a path"))?;
+        report.pool.save(Path::new(out))?;
+        println!("results saved to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_demo() -> anyhow::Result<()> {
+    let report = Deployment::in_process(2).run(workload::two_center_demo())?;
+    println!("{}", report.summary());
+    for (kind, n) in report.pool.kind_counts() {
+        println!("  {kind}: {n} records");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
+    let mut bands: Vec<f64> = Vec::new();
+    for a in args {
+        bands.push(a.parse().map_err(|_| anyhow::anyhow!("bad bandwidth {a}"))?);
+    }
+    if bands.is_empty() {
+        bands = vec![155.0, 311.0, 622.0, 1244.0, 2488.0];
+    }
+    println!("bandwidth_mbps,wall_s,makespan_s,events,sync_msgs");
+    for b in bands {
+        let mut cfg = ScenarioConfig::default();
+        cfg.workload.wan_bandwidth_mbps = b;
+        let generated = workload::generate(&cfg.workload);
+        let report = Deployment::from_config(&cfg).run(generated)?;
+        println!(
+            "{b},{:.4},{:.2},{},{}",
+            report.wall_s, report.makespan_s, report.events_processed, report.sync_messages
+        );
+    }
+    Ok(())
+}
+
+/// TCP-mode agent process (see examples/distributed_tcp.rs for a driver).
+fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
+    use dsim::coordinator::{AgentConfig, AgentRuntime};
+    use dsim::model::Payload;
+    use dsim::transport::TcpTransport;
+    use dsim::util::AgentId;
+    use std::collections::HashMap;
+    use std::net::SocketAddr;
+
+    let get = |flag: &str| -> Option<&String> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+    };
+    let me = AgentId(
+        get("--me")
+            .ok_or_else(|| anyhow::anyhow!("--me required"))?
+            .parse::<u64>()?,
+    );
+    let bind: SocketAddr = get("--bind")
+        .ok_or_else(|| anyhow::anyhow!("--bind required"))?
+        .parse()?;
+    let peers_spec = get("--peers").ok_or_else(|| anyhow::anyhow!("--peers required"))?;
+    let mut peers: HashMap<AgentId, SocketAddr> = HashMap::new();
+    for part in peers_spec.split(',') {
+        let (id, addr) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("peer spec must be id=addr"))?;
+        peers.insert(AgentId(id.parse()?), addr.parse()?);
+    }
+    let lookahead: f64 = get("--lookahead")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0.05);
+    let workers: usize = get("--workers").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let peer_ids: Vec<AgentId> = peers.keys().copied().filter(|a| a.raw() != 0).collect();
+
+    let transport: TcpTransport<Payload> = TcpTransport::bind(me, bind, peers)?;
+    let backend = std::sync::Arc::new(ComputeBackend::auto(Path::new("artifacts")));
+    let cfg = AgentConfig {
+        me,
+        peers: peer_ids,
+        lookahead,
+        protocol: Default::default(),
+        workers,
+    };
+    println!("agent {me} listening on {bind}");
+    AgentRuntime::new(cfg, transport, backend).run();
+    println!("agent {me} shut down");
+    Ok(())
+}
+
+fn cmd_check_artifacts(args: &[String]) -> anyhow::Result<()> {
+    let dir = args.first().map(String::as_str).unwrap_or("artifacts");
+    let backend = ComputeBackend::load(BackendKind::Pjrt, Path::new(dir))?;
+    // Exercise each artifact once.
+    let perf = vec![1.0f32; 8];
+    let valid = vec![1.0f32; 8];
+    let member = vec![0.0f32; 8];
+    let scores = backend.placement_scores(&perf, &valid, &member)?;
+    let cap = vec![10.0f32];
+    let routing = vec![1.0f32, 1.0];
+    let active = vec![1.0f32, 1.0];
+    let rates = backend.fair_share(&cap, &routing, &active)?;
+    println!(
+        "artifacts OK: placement scores[0]={:.3}, fair rates={:?}",
+        scores[0], rates
+    );
+    Ok(())
+}

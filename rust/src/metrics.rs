@@ -1,0 +1,193 @@
+//! Result pool and run metrics (paper §4.2: "the result pool is the
+//! component that runs inside the client and is responsible with their
+//! interpretation.  The pool can also save results locally" — enabling
+//! later evaluation without re-running, and feeding results into further
+//! simulation runs).
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// A typed record published by an LP during a run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Record {
+    pub kind: String,
+    pub data: Json,
+}
+
+/// Client-side collector of simulation results.
+pub struct ResultPool {
+    records: Mutex<Vec<Record>>,
+}
+
+impl ResultPool {
+    pub fn new() -> Self {
+        ResultPool {
+            records: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn push(&self, kind: &str, data: Json) {
+        self.records.lock().unwrap().push(Record {
+            kind: kind.to_string(),
+            data,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All records of one kind.
+    pub fn of_kind(&self, kind: &str) -> Vec<Record> {
+        self.records
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| r.kind == kind)
+            .cloned()
+            .collect()
+    }
+
+    /// Record count per kind.
+    pub fn kind_counts(&self) -> BTreeMap<String, usize> {
+        let mut out = BTreeMap::new();
+        for r in self.records.lock().unwrap().iter() {
+            *out.entry(r.kind.clone()).or_insert(0) += 1;
+        }
+        out
+    }
+
+    /// Numeric field extractor: values of `field` across records of `kind`.
+    pub fn values(&self, kind: &str, field: &str) -> Vec<f64> {
+        self.of_kind(kind)
+            .iter()
+            .filter_map(|r| r.data.get(field).and_then(Json::as_f64))
+            .collect()
+    }
+
+    /// Save as JSON-lines ("the simulation can be evaluated at a later
+    /// moment of time without rerunning the complete model").
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f =
+            std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+        for r in self.records.lock().unwrap().iter() {
+            let line = Json::obj(vec![("kind", Json::str(r.kind.clone())), ("data", r.data.clone())]);
+            writeln!(f, "{line}")?;
+        }
+        Ok(())
+    }
+
+    /// Load a previously-saved pool ("the simulation results can be used as
+    /// input for another simulation run").
+    pub fn load(path: &Path) -> Result<ResultPool> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+        let pool = ResultPool::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let j = Json::parse(line)?;
+            pool.push(
+                j.get("kind").and_then(Json::as_str).context("kind")?,
+                j.get("data").context("data")?.clone(),
+            );
+        }
+        Ok(pool)
+    }
+}
+
+impl Default for ResultPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Summary statistics helpers (bench reporting)
+// ---------------------------------------------------------------------------
+
+/// Basic descriptive statistics over a sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub std_dev: f64,
+}
+
+/// Compute summary statistics (None for an empty sample).
+pub fn summarize(values: &[f64]) -> Option<Summary> {
+    if values.is_empty() {
+        return None;
+    }
+    let mut sorted: Vec<f64> = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let var = sorted.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+    let pct = |p: f64| sorted[(((n - 1) as f64) * p).round() as usize];
+    Some(Summary {
+        n,
+        mean,
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: pct(0.5),
+        p95: pct(0.95),
+        std_dev: var.sqrt(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_query_kinds() {
+        let p = ResultPool::new();
+        p.push("job", Json::obj(vec![("dur", Json::num(2.0))]));
+        p.push("job", Json::obj(vec![("dur", Json::num(4.0))]));
+        p.push("transfer", Json::obj(vec![("bytes", Json::num(100.0))]));
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.of_kind("job").len(), 2);
+        assert_eq!(p.kind_counts()["transfer"], 1);
+        assert_eq!(p.values("job", "dur"), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let p = ResultPool::new();
+        p.push("a", Json::obj(vec![("x", Json::num(1.5))]));
+        p.push("b", Json::arr([Json::num(1.0), Json::str("two")]));
+        let dir = std::env::temp_dir().join("dsim-metrics-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pool.jsonl");
+        p.save(&path).unwrap();
+        let q = ResultPool::load(&path).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.of_kind("a")[0].data.get("x").unwrap().as_f64(), Some(1.5));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn summary_stats() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.std_dev - 1.4142).abs() < 1e-3);
+        assert!(summarize(&[]).is_none());
+    }
+}

@@ -1,0 +1,572 @@
+//! The simulation-model layer: event payloads, LP specifications and the
+//! [`Scenario`] description tying the MONARC component library
+//! ([`crate::components`]) to the engine.
+//!
+//! A scenario is a *description* — a list of LP specs (kind + JSON params +
+//! affinity group) plus bootstrap events.  The coordinator places affinity
+//! groups on agents (paper §4.1), instantiates the LPs through the
+//! component factory, and runs the engine.
+//!
+//! Affinity groups encode the paper's regional-center concept: all LPs of
+//! one group are placed on the same agent (they may exchange zero-delay
+//! events); cross-group traffic always crosses the simulated WAN and thus
+//! carries >= `lookahead` virtual latency.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::engine::SimTime;
+use crate::transport::Wire;
+use crate::util::json::Json;
+use crate::util::LpId;
+
+// ---------------------------------------------------------------------------
+// Specs
+// ---------------------------------------------------------------------------
+
+/// A processing job (paper: "analysis jobs").
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub id: u64,
+    /// CPU seconds on a unit-power processor.
+    pub cpu_seconds: f64,
+    /// Dataset the job needs locally before it can run (None = pure CPU).
+    pub dataset: Option<String>,
+    /// Originating regional center index.
+    pub center: usize,
+    /// LP to notify with `JobFinished` (LpId(0) = nobody).
+    pub notify: LpId,
+}
+
+/// A WAN data transfer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransferSpec {
+    pub id: u64,
+    pub src_center: usize,
+    pub dst_center: usize,
+    pub size_mb: f64,
+    /// LP to notify with `TransferComplete`.
+    pub notify: LpId,
+    /// Dataset carried (for replication bookkeeping).
+    pub dataset: Option<String>,
+}
+
+// ---------------------------------------------------------------------------
+// Payload
+// ---------------------------------------------------------------------------
+
+/// Every event payload the MONARC component library exchanges.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    // -- farm / jobs ------------------------------------------------------
+    /// Submit a job to a farm.
+    JobSubmit(JobSpec),
+    /// Farm internal: a CPU unit finished its current job.
+    UnitDone { unit: usize, job: u64 },
+    /// Farm -> submitter: job completed (wait = queueing delay).
+    JobFinished { job: u64, wait_s: f64, run_s: f64 },
+    // -- WAN / transfers ---------------------------------------------------
+    /// Ask the WAN to move data.
+    TransferRequest(TransferSpec),
+    /// WAN internal wake for the next predicted completion; `epoch` detects
+    /// stale wakes after an interrupt re-plan.
+    WanWake { epoch: u64 },
+    /// Delivered to `notify` when a transfer finishes.
+    TransferComplete {
+        xfer: u64,
+        size_mb: f64,
+        dataset: Option<String>,
+        started: f64,
+    },
+    // -- data model ---------------------------------------------------------
+    /// Store a dataset on a database server.
+    DbStore { dataset: String, size_mb: f64 },
+    /// Database internal: migrate overflow to mass storage.
+    DbMigrate { dataset: String, size_mb: f64 },
+    /// Ask a database whether it holds a dataset.
+    DbFetch { dataset: String, requester: LpId },
+    /// Database answer.
+    DbFetchReply {
+        dataset: String,
+        found: bool,
+        size_mb: f64,
+    },
+    // -- metadata catalog ----------------------------------------------------
+    /// Register a dataset replica location.
+    CatalogRegister {
+        dataset: String,
+        center: usize,
+        size_mb: f64,
+    },
+    /// Where does this dataset live?
+    CatalogQuery { dataset: String, requester: LpId },
+    /// Catalog answer (empty = unknown dataset).
+    CatalogReply {
+        dataset: String,
+        centers: Vec<usize>,
+        size_mb: f64,
+    },
+    // -- driver --------------------------------------------------------------
+    /// Kick a driver LP (scenario bootstrap).
+    Start,
+    /// Generic extension point for user-defined components.
+    Custom { tag: String, data: Json },
+}
+
+impl Payload {
+    /// Short tag for stats and tracing.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Payload::JobSubmit(_) => "job-submit",
+            Payload::UnitDone { .. } => "unit-done",
+            Payload::JobFinished { .. } => "job-finished",
+            Payload::TransferRequest(_) => "xfer-req",
+            Payload::WanWake { .. } => "wan-wake",
+            Payload::TransferComplete { .. } => "xfer-done",
+            Payload::DbStore { .. } => "db-store",
+            Payload::DbMigrate { .. } => "db-migrate",
+            Payload::DbFetch { .. } => "db-fetch",
+            Payload::DbFetchReply { .. } => "db-reply",
+            Payload::CatalogRegister { .. } => "cat-reg",
+            Payload::CatalogQuery { .. } => "cat-query",
+            Payload::CatalogReply { .. } => "cat-reply",
+            Payload::Start => "start",
+            Payload::Custom { .. } => "custom",
+        }
+    }
+}
+
+fn opt_str(j: Option<&Json>) -> Option<String> {
+    j.and_then(Json::as_str).map(str::to_string)
+}
+
+impl Wire for Payload {
+    fn to_json(&self) -> Json {
+        let kv = |k: &str, rest: Vec<(&str, Json)>| {
+            let mut v = vec![("k", Json::str(k))];
+            v.extend(rest);
+            Json::obj(v)
+        };
+        match self {
+            Payload::JobSubmit(js) => kv(
+                "job-submit",
+                vec![
+                    ("id", Json::num(js.id as f64)),
+                    ("cpu", Json::num(js.cpu_seconds)),
+                    (
+                        "ds",
+                        js.dataset.clone().map(Json::str).unwrap_or(Json::Null),
+                    ),
+                    ("center", Json::num(js.center as f64)),
+                    ("notify", Json::num(js.notify.raw() as f64)),
+                ],
+            ),
+            Payload::JobFinished { job, wait_s, run_s } => kv(
+                "job-finished",
+                vec![
+                    ("job", Json::num(*job as f64)),
+                    ("wait", Json::num(*wait_s)),
+                    ("run", Json::num(*run_s)),
+                ],
+            ),
+            Payload::UnitDone { unit, job } => kv(
+                "unit-done",
+                vec![
+                    ("unit", Json::num(*unit as f64)),
+                    ("job", Json::num(*job as f64)),
+                ],
+            ),
+            Payload::TransferRequest(ts) => kv(
+                "xfer-req",
+                vec![
+                    ("id", Json::num(ts.id as f64)),
+                    ("src", Json::num(ts.src_center as f64)),
+                    ("dst", Json::num(ts.dst_center as f64)),
+                    ("mb", Json::num(ts.size_mb)),
+                    ("notify", Json::num(ts.notify.raw() as f64)),
+                    (
+                        "ds",
+                        ts.dataset.clone().map(Json::str).unwrap_or(Json::Null),
+                    ),
+                ],
+            ),
+            Payload::WanWake { epoch } => kv("wan-wake", vec![("epoch", Json::num(*epoch as f64))]),
+            Payload::TransferComplete {
+                xfer,
+                size_mb,
+                dataset,
+                started,
+            } => kv(
+                "xfer-done",
+                vec![
+                    ("xfer", Json::num(*xfer as f64)),
+                    ("mb", Json::num(*size_mb)),
+                    (
+                        "ds",
+                        dataset.clone().map(Json::str).unwrap_or(Json::Null),
+                    ),
+                    ("started", Json::num(*started)),
+                ],
+            ),
+            Payload::DbStore { dataset, size_mb } => kv(
+                "db-store",
+                vec![
+                    ("ds", Json::str(dataset.clone())),
+                    ("mb", Json::num(*size_mb)),
+                ],
+            ),
+            Payload::DbMigrate { dataset, size_mb } => kv(
+                "db-migrate",
+                vec![
+                    ("ds", Json::str(dataset.clone())),
+                    ("mb", Json::num(*size_mb)),
+                ],
+            ),
+            Payload::DbFetch { dataset, requester } => kv(
+                "db-fetch",
+                vec![
+                    ("ds", Json::str(dataset.clone())),
+                    ("req", Json::num(requester.raw() as f64)),
+                ],
+            ),
+            Payload::DbFetchReply {
+                dataset,
+                found,
+                size_mb,
+            } => kv(
+                "db-reply",
+                vec![
+                    ("ds", Json::str(dataset.clone())),
+                    ("found", Json::Bool(*found)),
+                    ("mb", Json::num(*size_mb)),
+                ],
+            ),
+            Payload::CatalogRegister {
+                dataset,
+                center,
+                size_mb,
+            } => kv(
+                "cat-reg",
+                vec![
+                    ("ds", Json::str(dataset.clone())),
+                    ("center", Json::num(*center as f64)),
+                    ("mb", Json::num(*size_mb)),
+                ],
+            ),
+            Payload::CatalogQuery { dataset, requester } => kv(
+                "cat-query",
+                vec![
+                    ("ds", Json::str(dataset.clone())),
+                    ("req", Json::num(requester.raw() as f64)),
+                ],
+            ),
+            Payload::CatalogReply {
+                dataset,
+                centers,
+                size_mb,
+            } => kv(
+                "cat-reply",
+                vec![
+                    ("ds", Json::str(dataset.clone())),
+                    (
+                        "centers",
+                        Json::arr(centers.iter().map(|c| Json::num(*c as f64))),
+                    ),
+                    ("mb", Json::num(*size_mb)),
+                ],
+            ),
+            Payload::Start => kv("start", vec![]),
+            Payload::Custom { tag, data } => kv(
+                "custom",
+                vec![("tag", Json::str(tag.clone())), ("data", data.clone())],
+            ),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Payload> {
+        let u = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("missing u64 '{k}' in {j}"))
+        };
+        let f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("missing f64 '{k}' in {j}"))
+        };
+        let s = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("missing str '{k}' in {j}"))
+        };
+        match j.get("k").and_then(Json::as_str) {
+            Some("job-submit") => Ok(Payload::JobSubmit(JobSpec {
+                id: u("id")?,
+                cpu_seconds: f("cpu")?,
+                dataset: opt_str(j.get("ds")),
+                center: u("center")? as usize,
+                notify: LpId(u("notify")?),
+            })),
+            Some("job-finished") => Ok(Payload::JobFinished {
+                job: u("job")?,
+                wait_s: f("wait")?,
+                run_s: f("run")?,
+            }),
+            Some("unit-done") => Ok(Payload::UnitDone {
+                unit: u("unit")? as usize,
+                job: u("job")?,
+            }),
+            Some("xfer-req") => Ok(Payload::TransferRequest(TransferSpec {
+                id: u("id")?,
+                src_center: u("src")? as usize,
+                dst_center: u("dst")? as usize,
+                size_mb: f("mb")?,
+                notify: LpId(u("notify")?),
+                dataset: opt_str(j.get("ds")),
+            })),
+            Some("wan-wake") => Ok(Payload::WanWake { epoch: u("epoch")? }),
+            Some("xfer-done") => Ok(Payload::TransferComplete {
+                xfer: u("xfer")?,
+                size_mb: f("mb")?,
+                dataset: opt_str(j.get("ds")),
+                started: f("started")?,
+            }),
+            Some("db-store") => Ok(Payload::DbStore {
+                dataset: s("ds")?,
+                size_mb: f("mb")?,
+            }),
+            Some("db-migrate") => Ok(Payload::DbMigrate {
+                dataset: s("ds")?,
+                size_mb: f("mb")?,
+            }),
+            Some("db-fetch") => Ok(Payload::DbFetch {
+                dataset: s("ds")?,
+                requester: LpId(u("req")?),
+            }),
+            Some("db-reply") => Ok(Payload::DbFetchReply {
+                dataset: s("ds")?,
+                found: j
+                    .get("found")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| anyhow!("missing bool 'found'"))?,
+                size_mb: f("mb")?,
+            }),
+            Some("cat-reg") => Ok(Payload::CatalogRegister {
+                dataset: s("ds")?,
+                center: u("center")? as usize,
+                size_mb: f("mb")?,
+            }),
+            Some("cat-query") => Ok(Payload::CatalogQuery {
+                dataset: s("ds")?,
+                requester: LpId(u("req")?),
+            }),
+            Some("cat-reply") => Ok(Payload::CatalogReply {
+                dataset: s("ds")?,
+                centers: j
+                    .get("centers")
+                    .and_then(Json::as_arr)
+                    .context("centers")?
+                    .iter()
+                    .filter_map(Json::as_u64)
+                    .map(|c| c as usize)
+                    .collect(),
+                size_mb: f("mb")?,
+            }),
+            Some("start") => Ok(Payload::Start),
+            Some("custom") => Ok(Payload::Custom {
+                tag: s("tag")?,
+                data: j.get("data").context("data")?.clone(),
+            }),
+            other => Err(anyhow!("unknown payload kind {other:?}")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario description
+// ---------------------------------------------------------------------------
+
+/// One LP to instantiate: component `kind` (factory name), JSON `params`,
+/// and the affinity `group` it must be co-located with.
+#[derive(Clone, Debug)]
+pub struct LpSpec {
+    pub id: LpId,
+    pub kind: String,
+    pub params: Json,
+    pub group: usize,
+}
+
+/// A complete simulation scenario: LPs + bootstrap events + model lookahead.
+#[derive(Clone, Debug, Default)]
+pub struct Scenario {
+    pub name: String,
+    pub lps: Vec<LpSpec>,
+    pub bootstrap: Vec<(SimTime, LpId, Payload)>,
+    /// Minimum virtual latency of any cross-group interaction.
+    pub lookahead: f64,
+}
+
+impl Scenario {
+    pub fn new(name: &str, lookahead: f64) -> Scenario {
+        assert!(lookahead > 0.0);
+        Scenario {
+            name: name.to_string(),
+            lps: Vec::new(),
+            bootstrap: Vec::new(),
+            lookahead,
+        }
+    }
+
+    /// Register an LP spec; returns its id for wiring.
+    pub fn add_lp(&mut self, kind: &str, params: Json, group: usize) -> LpId {
+        let id = LpId(self.lps.len() as u64 + 1);
+        self.lps.push(LpSpec {
+            id,
+            kind: kind.to_string(),
+            params,
+            group,
+        });
+        id
+    }
+
+    /// Schedule a bootstrap event.
+    pub fn bootstrap(&mut self, time: f64, dst: LpId, payload: Payload) {
+        self.bootstrap.push((SimTime::new(time), dst, payload));
+    }
+
+    /// Number of affinity groups (max group index + 1).
+    pub fn group_count(&self) -> usize {
+        self.lps.iter().map(|l| l.group + 1).max().unwrap_or(0)
+    }
+
+    /// Ids of every LP in a group.
+    pub fn group_members(&self, group: usize) -> Vec<LpId> {
+        self.lps
+            .iter()
+            .filter(|l| l.group == group)
+            .map(|l| l.id)
+            .collect()
+    }
+
+    /// Basic consistency checks.
+    pub fn validate(&self) -> Result<()> {
+        if self.lps.is_empty() {
+            anyhow::bail!("scenario has no LPs");
+        }
+        for (t, dst, _) in &self.bootstrap {
+            if !self.lps.iter().any(|l| l.id == *dst) {
+                anyhow::bail!("bootstrap at {t} targets unknown {dst}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_wire_roundtrip_all_variants() {
+        let variants = vec![
+            Payload::JobSubmit(JobSpec {
+                id: 1,
+                cpu_seconds: 3.5,
+                dataset: Some("ds1".into()),
+                center: 2,
+                notify: LpId(4),
+            }),
+            Payload::JobSubmit(JobSpec {
+                id: 2,
+                cpu_seconds: 1.0,
+                dataset: None,
+                center: 0,
+                notify: LpId(0),
+            }),
+            Payload::UnitDone { unit: 3, job: 17 },
+            Payload::JobFinished {
+                job: 17,
+                wait_s: 0.5,
+                run_s: 2.0,
+            },
+            Payload::TransferRequest(TransferSpec {
+                id: 9,
+                src_center: 0,
+                dst_center: 4,
+                size_mb: 512.0,
+                notify: LpId(22),
+                dataset: Some("d".into()),
+            }),
+            Payload::WanWake { epoch: 42 },
+            Payload::TransferComplete {
+                xfer: 9,
+                size_mb: 512.0,
+                dataset: None,
+                started: 1.25,
+            },
+            Payload::DbStore {
+                dataset: "x".into(),
+                size_mb: 10.0,
+            },
+            Payload::DbMigrate {
+                dataset: "x".into(),
+                size_mb: 10.0,
+            },
+            Payload::DbFetch {
+                dataset: "x".into(),
+                requester: LpId(5),
+            },
+            Payload::DbFetchReply {
+                dataset: "x".into(),
+                found: true,
+                size_mb: 10.0,
+            },
+            Payload::CatalogRegister {
+                dataset: "x".into(),
+                center: 1,
+                size_mb: 10.0,
+            },
+            Payload::CatalogQuery {
+                dataset: "x".into(),
+                requester: LpId(5),
+            },
+            Payload::CatalogReply {
+                dataset: "x".into(),
+                centers: vec![0, 3],
+                size_mb: 10.0,
+            },
+            Payload::Start,
+            Payload::Custom {
+                tag: "t".into(),
+                data: Json::num(1.0),
+            },
+        ];
+        for p in variants {
+            let j = p.to_json();
+            let back = Payload::from_json(&j).unwrap();
+            assert_eq!(back, p, "roundtrip failed for {j}");
+        }
+    }
+
+    #[test]
+    fn scenario_groups_and_validation() {
+        let mut sc = Scenario::new("test", 0.05);
+        let a = sc.add_lp("farm", Json::obj(vec![]), 0);
+        let b = sc.add_lp("db", Json::obj(vec![]), 0);
+        let c = sc.add_lp("wan", Json::obj(vec![]), 1);
+        sc.bootstrap(0.0, a, Payload::Start);
+        assert_eq!(sc.group_count(), 2);
+        assert_eq!(sc.group_members(0), vec![a, b]);
+        assert_eq!(sc.group_members(1), vec![c]);
+        sc.validate().unwrap();
+
+        sc.bootstrap(0.0, LpId(99), Payload::Start);
+        assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn empty_scenario_invalid() {
+        let sc = Scenario::new("empty", 1.0);
+        assert!(sc.validate().is_err());
+    }
+}

@@ -1,0 +1,311 @@
+//! Monitoring service — the LISA (Localhost Information Service Agent)
+//! substitute (paper §4.1).
+//!
+//! "Each simulation agent publishes a performance value ... tak[ing] into
+//! consideration the load of the physical workstation where the agent is
+//! running (cpu load, available memory, etc.), the load of the network
+//! (distances between agents, round-trip-time, available bandwidth, etc.)
+//! and also the load of the agents (number of logical processes already
+//! executing on top of the simulation agent ...)."
+//!
+//! [`HostSampler`] reads real host metrics from `/proc` (with a synthetic
+//! fallback for non-Linux / benches), [`perf_value`] combines them into the
+//! scalar cost the placement scheduler consumes (lower = better), and
+//! [`MonitorHub`] is the leader-side store of the latest sample per agent.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::clamp;
+use crate::util::json::Json;
+use crate::util::AgentId;
+
+/// One monitoring sample from an agent's host.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HostSample {
+    /// 1-minute load average normalized by core count (0 = idle).
+    pub cpu_load: f64,
+    /// Fraction of physical memory in use, 0..1.
+    pub mem_used: f64,
+    /// Logical processes currently hosted by the agent.
+    pub lp_count: usize,
+    /// Mean measured round-trip time to peers, milliseconds.
+    pub rtt_ms: f64,
+}
+
+impl HostSample {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cpu", Json::num(self.cpu_load)),
+            ("mem", Json::num(self.mem_used)),
+            ("lps", Json::num(self.lp_count as f64)),
+            ("rtt", Json::num(self.rtt_ms)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<HostSample> {
+        Some(HostSample {
+            cpu_load: j.get("cpu")?.as_f64()?,
+            mem_used: j.get("mem")?.as_f64()?,
+            lp_count: j.get("lps")?.as_u64()? as usize,
+            rtt_ms: j.get("rtt")?.as_f64()?,
+        })
+    }
+}
+
+/// Weights for combining a sample into the scalar performance value.
+/// Defaults follow the paper's enumeration order (host load dominates,
+/// then network, then occupancy).
+#[derive(Clone, Copy, Debug)]
+pub struct PerfWeights {
+    pub cpu: f64,
+    pub mem: f64,
+    pub rtt: f64,
+    pub lps: f64,
+    /// LP count considered "full" for normalization.
+    pub lps_scale: f64,
+    /// RTT considered "far" for normalization, ms.
+    pub rtt_scale_ms: f64,
+}
+
+impl Default for PerfWeights {
+    fn default() -> Self {
+        PerfWeights {
+            cpu: 4.0,
+            mem: 2.0,
+            rtt: 2.0,
+            lps: 2.0,
+            lps_scale: 64.0,
+            rtt_scale_ms: 100.0,
+        }
+    }
+}
+
+/// The paper's published **performance value**: a scalar *cost* in [0, 10];
+/// lower means "schedule here".
+pub fn perf_value(s: &HostSample, w: &PerfWeights) -> f64 {
+    let cpu = clamp(s.cpu_load, 0.0, 1.0);
+    let mem = clamp(s.mem_used, 0.0, 1.0);
+    let rtt = clamp(s.rtt_ms / w.rtt_scale_ms, 0.0, 1.0);
+    let lps = clamp(s.lp_count as f64 / w.lps_scale, 0.0, 1.0);
+    w.cpu * cpu + w.mem * mem + w.rtt * rtt + w.lps * lps
+}
+
+// ---------------------------------------------------------------------------
+// Host sampling
+// ---------------------------------------------------------------------------
+
+/// Samples host metrics.  Real `/proc` values on Linux; a deterministic
+/// synthetic model elsewhere or when constructed with [`HostSampler::synthetic`].
+pub struct HostSampler {
+    synthetic: Option<HostSample>,
+    cores: f64,
+}
+
+impl HostSampler {
+    pub fn new() -> Self {
+        HostSampler {
+            synthetic: None,
+            cores: std::thread::available_parallelism()
+                .map(|n| n.get() as f64)
+                .unwrap_or(1.0),
+        }
+    }
+
+    /// Fixed sample (benches / deterministic tests).
+    pub fn synthetic(sample: HostSample) -> Self {
+        HostSampler {
+            synthetic: Some(sample),
+            cores: 1.0,
+        }
+    }
+
+    /// Take a sample; `lp_count` and `rtt_ms` come from the agent layer.
+    pub fn sample(&self, lp_count: usize, rtt_ms: f64) -> HostSample {
+        if let Some(mut s) = self.synthetic {
+            s.lp_count = lp_count;
+            s.rtt_ms = rtt_ms;
+            return s;
+        }
+        HostSample {
+            cpu_load: self.read_loadavg().unwrap_or(0.0) / self.cores,
+            mem_used: self.read_mem_used().unwrap_or(0.0),
+            lp_count,
+            rtt_ms,
+        }
+    }
+
+    fn read_loadavg(&self) -> Option<f64> {
+        let text = std::fs::read_to_string("/proc/loadavg").ok()?;
+        text.split_whitespace().next()?.parse().ok()
+    }
+
+    fn read_mem_used(&self) -> Option<f64> {
+        let text = std::fs::read_to_string("/proc/meminfo").ok()?;
+        let mut total = None;
+        let mut avail = None;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("MemTotal:") {
+                total = rest.trim().split(' ').next()?.parse::<f64>().ok();
+            } else if let Some(rest) = line.strip_prefix("MemAvailable:") {
+                avail = rest.trim().split(' ').next()?.parse::<f64>().ok();
+            }
+        }
+        match (total, avail) {
+            (Some(t), Some(a)) if t > 0.0 => Some(clamp(1.0 - a / t, 0.0, 1.0)),
+            _ => None,
+        }
+    }
+}
+
+impl Default for HostSampler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Leader-side hub
+// ---------------------------------------------------------------------------
+
+/// Latest performance value + sample per agent (what the scheduler reads).
+pub struct MonitorHub {
+    weights: PerfWeights,
+    latest: Mutex<BTreeMap<AgentId, (f64, HostSample)>>,
+}
+
+impl MonitorHub {
+    pub fn new(weights: PerfWeights) -> Self {
+        MonitorHub {
+            weights,
+            latest: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Ingest a sample published by an agent.
+    pub fn ingest(&self, agent: AgentId, sample: HostSample) -> f64 {
+        let v = perf_value(&sample, &self.weights);
+        self.latest.lock().unwrap().insert(agent, (v, sample));
+        v
+    }
+
+    /// Ingest a pre-computed performance value (TCP mode: agents publish
+    /// the scalar, paper-style).
+    pub fn ingest_value(&self, agent: AgentId, value: f64, sample: HostSample) {
+        self.latest.lock().unwrap().insert(agent, (value, sample));
+    }
+
+    /// Current performance value of one agent.
+    pub fn value(&self, agent: AgentId) -> Option<f64> {
+        self.latest.lock().unwrap().get(&agent).map(|(v, _)| *v)
+    }
+
+    /// Snapshot of all (agent, perf value) pairs, sorted by agent id.
+    pub fn snapshot(&self) -> Vec<(AgentId, f64)> {
+        self.latest
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(a, (v, _))| (*a, *v))
+            .collect()
+    }
+
+    pub fn weights(&self) -> &PerfWeights {
+        &self.weights
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perf_value_monotone_in_load() {
+        let w = PerfWeights::default();
+        let idle = HostSample {
+            cpu_load: 0.0,
+            mem_used: 0.1,
+            lp_count: 0,
+            rtt_ms: 1.0,
+        };
+        let busy = HostSample {
+            cpu_load: 0.9,
+            mem_used: 0.8,
+            lp_count: 40,
+            rtt_ms: 80.0,
+        };
+        assert!(perf_value(&idle, &w) < perf_value(&busy, &w));
+    }
+
+    #[test]
+    fn perf_value_bounded() {
+        let w = PerfWeights::default();
+        let worst = HostSample {
+            cpu_load: 99.0,
+            mem_used: 5.0,
+            lp_count: 10_000,
+            rtt_ms: 1e9,
+        };
+        let v = perf_value(&worst, &w);
+        assert!(v <= w.cpu + w.mem + w.rtt + w.lps + 1e-9);
+        let best = HostSample {
+            cpu_load: 0.0,
+            mem_used: 0.0,
+            lp_count: 0,
+            rtt_ms: 0.0,
+        };
+        assert_eq!(perf_value(&best, &w), 0.0);
+    }
+
+    #[test]
+    fn sampler_reads_proc_on_linux() {
+        let s = HostSampler::new().sample(3, 5.0);
+        assert_eq!(s.lp_count, 3);
+        assert_eq!(s.rtt_ms, 5.0);
+        assert!(s.cpu_load >= 0.0);
+        assert!((0.0..=1.0).contains(&s.mem_used));
+    }
+
+    #[test]
+    fn synthetic_sampler_fixed() {
+        let fixed = HostSample {
+            cpu_load: 0.5,
+            mem_used: 0.25,
+            lp_count: 0,
+            rtt_ms: 0.0,
+        };
+        let s = HostSampler::synthetic(fixed).sample(7, 3.0);
+        assert_eq!(s.cpu_load, 0.5);
+        assert_eq!(s.lp_count, 7);
+        assert_eq!(s.rtt_ms, 3.0);
+    }
+
+    #[test]
+    fn hub_snapshot_sorted() {
+        let hub = MonitorHub::new(PerfWeights::default());
+        let s = HostSample {
+            cpu_load: 0.2,
+            mem_used: 0.2,
+            lp_count: 1,
+            rtt_ms: 2.0,
+        };
+        hub.ingest(AgentId(3), s);
+        hub.ingest(AgentId(1), s);
+        let snap = hub.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(snap[0].0 < snap[1].0);
+        assert!(hub.value(AgentId(1)).is_some());
+        assert!(hub.value(AgentId(9)).is_none());
+    }
+
+    #[test]
+    fn sample_json_roundtrip() {
+        let s = HostSample {
+            cpu_load: 0.3,
+            mem_used: 0.6,
+            lp_count: 12,
+            rtt_ms: 7.5,
+        };
+        assert_eq!(HostSample::from_json(&s.to_json()).unwrap(), s);
+    }
+}

@@ -1,0 +1,401 @@
+//! Compute runtime: executes the AOT-compiled L2 graphs from the Rust hot
+//! path via the PJRT C API (the `xla` crate), with a pure-Rust fallback.
+//!
+//! `make artifacts` lowers the JAX graphs (`python/compile/model.py`) to HLO
+//! **text** once at build time; at startup [`ComputeBackend::load`] compiles
+//! each artifact on the PJRT CPU client, and the simulation then calls
+//! [`ComputeBackend::placement_scores`] / [`ComputeBackend::fair_share`]
+//! without any Python in the process.
+//!
+//! The [`native`] module carries bit-compatible (up to f32 rounding)
+//! pure-Rust implementations of the same algorithms.  They serve three
+//! purposes: a fallback when artifacts are absent, a cross-validation
+//! oracle in tests (PJRT vs native must agree), and the baseline for the
+//! §Perf backend comparison.
+//!
+//! Shapes are fixed at AOT time: placement/APSP use N=64 agents, fair-share
+//! uses L=64 links x F=128 flows (see `python/compile/model.py`).  Callers
+//! pass natural-size slices; this module pads/unpads.
+
+pub mod native;
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::BackendKind;
+
+/// Fixed AOT shapes (must mirror python/compile/model.py).
+pub const N_AGENTS: usize = 64;
+pub const N_LINKS: usize = 64;
+pub const N_FLOWS: usize = 128;
+/// The +inf stand-in used by the kernels.
+pub const BIG: f32 = 1e18;
+
+/// A loaded PJRT executable with its metadata.
+struct PjrtExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtExe {
+    fn load(client: &xla::PjRtClient, dir: &Path, name: &str) -> Result<PjrtExe> {
+        let path = dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile {name}"))?;
+        Ok(PjrtExe { exe })
+    }
+
+    /// Execute with f32 vector inputs (each reshaped), expect a 1-tuple
+    /// f32 output.
+    fn run(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.len() > 1 {
+                lit.reshape(dims).context("reshape input")?
+            } else {
+                lit
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("untuple")?;
+        out.to_vec::<f32>().context("read f32 output")
+    }
+}
+
+/// PJRT-backed executables for the three artifacts.
+pub struct PjrtBackend {
+    // One PJRT execution at a time: the CPU client is not guaranteed
+    // thread-safe through this binding, and the call sites (leader
+    // placement, per-agent network solver) are coarse-grained anyway.
+    inner: Mutex<PjrtInner>,
+}
+
+// SAFETY: the `xla` binding wraps the PJRT client in an `Rc` and raw
+// pointers, which makes it `!Send`/`!Sync` by construction, but we never
+// clone the `Rc` (it stays inside `PjrtInner` for its whole life) and every
+// access to the client/executables goes through the `Mutex`, so at most one
+// thread touches the underlying PJRT objects at a time.  The PJRT C API
+// itself permits calls from any thread.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+struct PjrtInner {
+    _client: xla::PjRtClient,
+    placement: PjrtExe,
+    apsp: PjrtExe,
+    fairshare: PjrtExe,
+}
+
+impl PjrtBackend {
+    fn load(dir: &Path) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let placement = PjrtExe::load(&client, dir, &format!("placement{N_AGENTS}"))?;
+        let apsp = PjrtExe::load(&client, dir, &format!("apsp{N_AGENTS}"))?;
+        let fairshare = PjrtExe::load(&client, dir, "fairshare")?;
+        Ok(PjrtBackend {
+            inner: Mutex::new(PjrtInner {
+                _client: client,
+                placement,
+                apsp,
+                fairshare,
+            }),
+        })
+    }
+}
+
+/// The compute backend facade the rest of the framework uses.
+pub enum ComputeBackend {
+    Pjrt(PjrtBackend),
+    Native,
+}
+
+impl ComputeBackend {
+    /// Load the requested backend.  `Pjrt` requires the artifacts directory
+    /// produced by `make artifacts`.
+    pub fn load(kind: BackendKind, artifacts_dir: &Path) -> Result<ComputeBackend> {
+        match kind {
+            BackendKind::Native => Ok(ComputeBackend::Native),
+            BackendKind::Pjrt => {
+                if !artifacts_dir.exists() {
+                    bail!(
+                        "artifacts dir {} missing — run `make artifacts` or use backend=native",
+                        artifacts_dir.display()
+                    );
+                }
+                Ok(ComputeBackend::Pjrt(PjrtBackend::load(artifacts_dir)?))
+            }
+        }
+    }
+
+    /// Best-effort: PJRT when artifacts exist, else native.
+    pub fn auto(artifacts_dir: &Path) -> ComputeBackend {
+        match Self::load(BackendKind::Pjrt, artifacts_dir) {
+            Ok(b) => b,
+            Err(e) => {
+                log::info!("falling back to native backend: {e:#}");
+                ComputeBackend::Native
+            }
+        }
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            ComputeBackend::Pjrt(_) => BackendKind::Pjrt,
+            ComputeBackend::Native => BackendKind::Native,
+        }
+    }
+
+    /// Paper §4.1 placement scores.  `perf[i]` is agent i's performance
+    /// cost, `valid[i]`/`member[i]` are 0/1 masks.  Returns one score per
+    /// input agent (lower = better; `BIG` for invalid agents).
+    pub fn placement_scores(
+        &self,
+        perf: &[f32],
+        valid: &[f32],
+        member: &[f32],
+    ) -> Result<Vec<f32>> {
+        let n = perf.len();
+        if n > N_AGENTS {
+            bail!("{n} agents exceeds AOT shape {N_AGENTS}");
+        }
+        if valid.len() != n || member.len() != n {
+            bail!("placement input length mismatch");
+        }
+        match self {
+            ComputeBackend::Native => Ok(native::placement_scores(perf, valid, member)),
+            ComputeBackend::Pjrt(b) => {
+                let pad = |xs: &[f32]| {
+                    let mut v = xs.to_vec();
+                    v.resize(N_AGENTS, 0.0);
+                    v
+                };
+                let (p, v, m) = (pad(perf), pad(valid), pad(member));
+                let inner = b.inner.lock().unwrap();
+                let out = inner.placement.run(&[
+                    (&p, &[N_AGENTS as i64]),
+                    (&v, &[N_AGENTS as i64]),
+                    (&m, &[N_AGENTS as i64]),
+                ])?;
+                Ok(out[..n].to_vec())
+            }
+        }
+    }
+
+    /// All-pairs shortest paths over an `n x n` weight matrix (row-major,
+    /// `BIG` = no edge, 0 diagonal).
+    pub fn apsp(&self, w: &[f32], n: usize) -> Result<Vec<f32>> {
+        if w.len() != n * n {
+            bail!("apsp: expected {n}x{n} matrix");
+        }
+        if n > N_AGENTS {
+            bail!("{n} nodes exceeds AOT shape {N_AGENTS}");
+        }
+        match self {
+            ComputeBackend::Native => Ok(native::apsp(w, n)),
+            ComputeBackend::Pjrt(b) => {
+                // Pad to N_AGENTS with BIG off-diagonal / 0 diagonal.
+                let mut full = vec![BIG; N_AGENTS * N_AGENTS];
+                for i in 0..N_AGENTS {
+                    full[i * N_AGENTS + i] = 0.0;
+                }
+                for i in 0..n {
+                    for j in 0..n {
+                        full[i * N_AGENTS + j] = w[i * n + j];
+                    }
+                }
+                let inner = b.inner.lock().unwrap();
+                let out = inner
+                    .apsp
+                    .run(&[(&full, &[N_AGENTS as i64, N_AGENTS as i64])])?;
+                let mut res = vec![0.0f32; n * n];
+                for i in 0..n {
+                    for j in 0..n {
+                        res[i * n + j] = out[i * N_AGENTS + j];
+                    }
+                }
+                Ok(res)
+            }
+        }
+    }
+
+    /// Max-min fair bandwidth allocation: `cap[l]` link capacities,
+    /// `routing[l*f]` row-major 0/1 matrix, `active[f]` 0/1.  Returns the
+    /// fair rate per flow.
+    pub fn fair_share(&self, cap: &[f32], routing: &[f32], active: &[f32]) -> Result<Vec<f32>> {
+        let l = cap.len();
+        let f = active.len();
+        if routing.len() != l * f {
+            bail!("fair_share: routing must be {l}x{f}");
+        }
+        if l > N_LINKS || f > N_FLOWS {
+            bail!("fair_share: {l} links x {f} flows exceeds AOT shape {N_LINKS}x{N_FLOWS}");
+        }
+        match self {
+            ComputeBackend::Native => Ok(native::fair_share(cap, routing, active, l, f)),
+            ComputeBackend::Pjrt(b) => {
+                let mut capp = cap.to_vec();
+                capp.resize(N_LINKS, 0.0);
+                let mut actp = active.to_vec();
+                actp.resize(N_FLOWS, 0.0);
+                let mut routp = vec![0.0f32; N_LINKS * N_FLOWS];
+                for li in 0..l {
+                    for fi in 0..f {
+                        routp[li * N_FLOWS + fi] = routing[li * f + fi];
+                    }
+                }
+                let inner = b.inner.lock().unwrap();
+                let out = inner.fairshare.run(&[
+                    (&capp, &[N_LINKS as i64]),
+                    (&routp, &[N_LINKS as i64, N_FLOWS as i64]),
+                    (&actp, &[N_FLOWS as i64]),
+                ])?;
+                Ok(out[..f].to_vec())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn both_backends() -> Vec<ComputeBackend> {
+        let mut v = vec![ComputeBackend::Native];
+        match ComputeBackend::load(BackendKind::Pjrt, &artifacts_dir()) {
+            Ok(b) => v.push(b),
+            Err(e) => eprintln!("skipping PJRT backend in tests: {e:#}"),
+        }
+        v
+    }
+
+    #[test]
+    fn apsp_triangle_both_backends() {
+        for b in both_backends() {
+            let n = 3;
+            let mut w = vec![BIG; 9];
+            for i in 0..3 {
+                w[i * 3 + i] = 0.0;
+            }
+            w[1] = 1.0; // 0->1
+            w[5] = 1.0; // 1->2
+            w[2] = 5.0; // 0->2 direct
+            let d = b.apsp(&w, n).unwrap();
+            assert!(
+                (d[2] - 2.0).abs() < 1e-3,
+                "{:?}: detour should win, got {}",
+                b.kind(),
+                d[2]
+            );
+        }
+    }
+
+    #[test]
+    fn fair_share_two_level_both_backends() {
+        // link0 cap 6 (f0, f1), link1 cap 10 (f1, f2) -> rates 3, 3, 7.
+        for b in both_backends() {
+            let cap = [6.0f32, 10.0];
+            let routing = [1.0f32, 1.0, 0.0, 0.0, 1.0, 1.0];
+            let active = [1.0f32, 1.0, 1.0];
+            let r = b.fair_share(&cap, &routing, &active).unwrap();
+            assert!((r[0] - 3.0).abs() < 1e-3, "{:?} {r:?}", b.kind());
+            assert!((r[1] - 3.0).abs() < 1e-3, "{:?} {r:?}", b.kind());
+            assert!((r[2] - 7.0).abs() < 1e-3, "{:?} {r:?}", b.kind());
+        }
+    }
+
+    #[test]
+    fn placement_prefers_cheap_agent_both_backends() {
+        for b in both_backends() {
+            let n = 8;
+            let mut perf = vec![5.0f32; n];
+            perf[3] = 0.5;
+            let valid = vec![1.0f32; n];
+            let mut member = vec![0.0f32; n];
+            member[1] = 1.0;
+            let scores = b.placement_scores(&perf, &valid, &member).unwrap();
+            let best = (0..n)
+                .filter(|i| *i != 1)
+                .min_by(|a, c| scores[*a].partial_cmp(&scores[*c]).unwrap())
+                .unwrap();
+            assert_eq!(best, 3, "{:?} scores {scores:?}", b.kind());
+        }
+    }
+
+    #[test]
+    fn pjrt_matches_native_on_random_instances() {
+        let dir = artifacts_dir();
+        let Ok(pjrt) = ComputeBackend::load(BackendKind::Pjrt, &dir) else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let native = ComputeBackend::Native;
+        let mut rng = crate::util::Pcg32::seeded(7);
+
+        for _ in 0..3 {
+            // Random placement instance.
+            let n = 16;
+            let perf: Vec<f32> = (0..n).map(|_| rng.uniform(0.1, 10.0) as f32).collect();
+            let valid: Vec<f32> = (0..n).map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 }).collect();
+            let member: Vec<f32> = valid
+                .iter()
+                .map(|v| if *v > 0.5 && rng.chance(0.3) { 1.0 } else { 0.0 })
+                .collect();
+            let a = pjrt.placement_scores(&perf, &valid, &member).unwrap();
+            let b = native.placement_scores(&perf, &valid, &member).unwrap();
+            for i in 0..n {
+                if a[i] < BIG / 2.0 || b[i] < BIG / 2.0 {
+                    assert!(
+                        (a[i] - b[i]).abs() <= 1e-3 * (1.0 + b[i].abs()),
+                        "placement[{i}]: pjrt={} native={}",
+                        a[i],
+                        b[i]
+                    );
+                }
+            }
+
+            // Random fair-share instance.
+            let l = 12;
+            let f = 20;
+            let cap: Vec<f32> = (0..l).map(|_| rng.uniform(1.0, 100.0) as f32).collect();
+            let routing: Vec<f32> = (0..l * f)
+                .map(|_| if rng.chance(0.3) { 1.0 } else { 0.0 })
+                .collect();
+            let active: Vec<f32> = (0..f).map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 }).collect();
+            let a = pjrt.fair_share(&cap, &routing, &active).unwrap();
+            let b = native.fair_share(&cap, &routing, &active).unwrap();
+            for i in 0..f {
+                assert!(
+                    (a[i] - b[i]).abs() <= 1e-2 * (1.0 + b[i].abs()),
+                    "fair_share[{i}]: pjrt={} native={}",
+                    a[i],
+                    b[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shape_validation_errors() {
+        let b = ComputeBackend::Native;
+        assert!(b.apsp(&[0.0; 9], 2).is_err());
+        assert!(b.placement_scores(&[1.0; 65], &[1.0; 65], &[1.0; 65]).is_err());
+        assert!(b.fair_share(&[1.0], &[1.0, 1.0], &[1.0]).is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Pure-Rust implementations of the L2 compute graphs.
+//!
+//! Algorithmically identical to `python/compile/kernels/ref.py` (the pytest
+//! oracles): Floyd-Warshall APSP, progressive-filling max-min fair share,
+//! and the §4.1 placement pipeline.  Used as the no-XLA fallback backend
+//! and as the cross-validation reference for the PJRT path.
+
+use super::BIG;
+
+/// Placement self-cost factor (must match python/compile/model.py
+/// SELF_COST): members keep work until ~2x more loaded than alternatives.
+pub const SELF_COST: f32 = 0.75;
+
+/// Floyd-Warshall all-pairs shortest paths on a row-major `n x n` matrix.
+pub fn apsp(w: &[f32], n: usize) -> Vec<f32> {
+    let mut d: Vec<f64> = w.iter().map(|&x| x as f64).collect();
+    for k in 0..n {
+        for i in 0..n {
+            let dik = d[i * n + k];
+            if dik >= BIG as f64 {
+                continue;
+            }
+            for j in 0..n {
+                let alt = dik + d[k * n + j];
+                if alt < d[i * n + j] {
+                    d[i * n + j] = alt;
+                }
+            }
+        }
+    }
+    d.into_iter().map(|x| x as f32).collect()
+}
+
+/// Max-min fair allocation by exact progressive filling.
+/// `routing` is row-major `l x f` (link-major).
+pub fn fair_share(cap: &[f32], routing: &[f32], active: &[f32], l: usize, f: usize) -> Vec<f32> {
+    let mut rate = vec![0.0f64; f];
+    let mut frozen: Vec<bool> = active.iter().map(|a| *a < 0.5).collect();
+    // Flows crossing no link freeze at 0.
+    for fi in 0..f {
+        let crosses = (0..l).any(|li| routing[li * f + fi] > 0.5);
+        if !crosses {
+            frozen[fi] = true;
+        }
+    }
+
+    for _ in 0..f {
+        if frozen.iter().all(|x| *x) {
+            break;
+        }
+        // Per-link residual capacity (all current rates) and contender count.
+        let mut share = vec![f64::INFINITY; l];
+        let mut contended = vec![false; l];
+        for li in 0..l {
+            let mut used = 0.0f64;
+            let mut nun = 0.0f64;
+            for fi in 0..f {
+                if routing[li * f + fi] > 0.5 {
+                    used += rate[fi];
+                    if !frozen[fi] {
+                        nun += 1.0;
+                    }
+                }
+            }
+            if nun > 0.0 {
+                share[li] = ((cap[li] as f64) - used).max(0.0) / nun;
+                contended[li] = true;
+            }
+        }
+        // Bottleneck increment.
+        let b = share
+            .iter()
+            .zip(&contended)
+            .filter(|(_, c)| **c)
+            .map(|(s, _)| *s)
+            .fold(f64::INFINITY, f64::min);
+        if !b.is_finite() {
+            break; // unfrozen flows exist but none cross a contended link
+        }
+        for fi in 0..f {
+            if !frozen[fi] {
+                rate[fi] += b;
+            }
+        }
+        // Freeze flows crossing a saturated (bottleneck) link.
+        for li in 0..l {
+            if contended[li] && share[li] <= b + 1e-12 {
+                for fi in 0..f {
+                    if routing[li * f + fi] > 0.5 {
+                        frozen[fi] = true;
+                    }
+                }
+            }
+        }
+    }
+    (0..f)
+        .map(|fi| if active[fi] < 0.5 { 0.0 } else { rate[fi] as f32 })
+        .collect()
+}
+
+/// Paper §4.1 placement scores (see `ComputeBackend::placement_scores`).
+pub fn placement_scores(perf: &[f32], valid: &[f32], member: &[f32]) -> Vec<f32> {
+    let n = perf.len();
+    let mut w = vec![BIG; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                w[i * n + j] = 0.0;
+            } else if valid[i] > 0.5 && valid[j] > 0.5 {
+                w[i * n + j] = 0.5 * (perf[i] + perf[j]);
+            }
+        }
+    }
+    let mut d = apsp(&w, n);
+    // Self-distance = SELF_COST * own perf (see python/compile/model.py):
+    // clusters while lightly loaded, spills when ~2x over the alternatives.
+    for i in 0..n {
+        d[i * n + i] = SELF_COST * perf[i];
+    }
+    let mem: Vec<f32> = (0..n).map(|i| member[i] * valid[i]).collect();
+    let has_members = mem.iter().sum::<f32>() > 0.5;
+    let target: Vec<f32> = if has_members { mem } else { valid.to_vec() };
+    let denom: f32 = target.iter().sum::<f32>().max(1.0);
+    (0..n)
+        .map(|i| {
+            if valid[i] > 0.5 {
+                (0..n).map(|j| d[i * n + j] * target[j]).sum::<f32>() / denom
+            } else {
+                BIG
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apsp_matches_hand_computed() {
+        // 0 -1- 1 -2- 2, plus a 9.0 direct 0-2 edge.
+        let n = 3;
+        let mut w = vec![BIG; 9];
+        for i in 0..3 {
+            w[i * 3 + i] = 0.0;
+        }
+        w[0 * 3 + 1] = 1.0;
+        w[1 * 3 + 0] = 1.0;
+        w[1 * 3 + 2] = 2.0;
+        w[2 * 3 + 1] = 2.0;
+        w[0 * 3 + 2] = 9.0;
+        w[2 * 3 + 0] = 9.0;
+        let d = apsp(&w, n);
+        assert_eq!(d[0 * 3 + 2], 3.0);
+        assert_eq!(d[2 * 3 + 0], 3.0);
+        assert_eq!(d[1 * 3 + 1], 0.0);
+    }
+
+    #[test]
+    fn apsp_unreachable_stays_big() {
+        let n = 2;
+        let w = vec![0.0, BIG, BIG, 0.0];
+        let d = apsp(&w, n);
+        assert!(d[1] >= BIG * 0.99);
+    }
+
+    #[test]
+    fn fair_share_single_link() {
+        let r = fair_share(&[30.0], &[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0], 1, 3);
+        for x in r {
+            assert!((x - 10.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fair_share_respects_capacity() {
+        let mut rng = crate::util::Pcg32::seeded(3);
+        for _ in 0..20 {
+            let l = 6;
+            let f = 10;
+            let cap: Vec<f32> = (0..l).map(|_| rng.uniform(1.0, 50.0) as f32).collect();
+            let routing: Vec<f32> = (0..l * f)
+                .map(|_| if rng.chance(0.4) { 1.0 } else { 0.0 })
+                .collect();
+            let active: Vec<f32> = (0..f).map(|_| if rng.chance(0.7) { 1.0 } else { 0.0 }).collect();
+            let rate = fair_share(&cap, &routing, &active, l, f);
+            for li in 0..l {
+                let used: f32 = (0..f).map(|fi| routing[li * f + fi] * rate[fi]).sum();
+                assert!(used <= cap[li] + 1e-3, "link {li}: {used} > {}", cap[li]);
+            }
+            // Max-min sanity: some active routed flow gets > 0 whenever it
+            // crosses a link with positive capacity.
+            for fi in 0..f {
+                if active[fi] > 0.5 {
+                    let crosses: Vec<usize> =
+                        (0..l).filter(|li| routing[li * f + fi] > 0.5).collect();
+                    if !crosses.is_empty() && crosses.iter().all(|li| cap[*li] > 0.0) {
+                        assert!(rate[fi] > 0.0, "flow {fi} starved");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fair_share_inactive_zero() {
+        let r = fair_share(&[10.0], &[1.0, 1.0], &[1.0, 0.0], 1, 2);
+        assert!((r[0] - 10.0).abs() < 1e-6);
+        assert_eq!(r[1], 0.0);
+    }
+
+    #[test]
+    fn placement_empty_run_picks_cheapest() {
+        let n = 6;
+        let mut perf = vec![4.0f32; n];
+        perf[2] = 0.25;
+        let valid = vec![1.0f32; n];
+        let member = vec![0.0f32; n];
+        let s = placement_scores(&perf, &valid, &member);
+        let best = (0..n)
+            .min_by(|a, b| s[*a].partial_cmp(&s[*b]).unwrap())
+            .unwrap();
+        assert_eq!(best, 2);
+    }
+
+    #[test]
+    fn placement_invalid_excluded() {
+        let n = 4;
+        let perf = vec![1.0f32; n];
+        let mut valid = vec![1.0f32; n];
+        valid[0] = 0.0;
+        let member = vec![0.0f32; n];
+        let s = placement_scores(&perf, &valid, &member);
+        assert!(s[0] >= BIG * 0.99);
+        assert!(s[1] < BIG / 2.0);
+    }
+}

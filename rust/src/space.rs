@@ -1,0 +1,379 @@
+//! Replicated object space — the JavaSpaces/Jini distributed-memory
+//! substitute (paper §4.2, fig. 5).
+//!
+//! MONARC components (CPU units, database servers, ...) are **replicated
+//! distributed objects**: every agent holds a replica so LP placement is
+//! unconstrained, and replica state is kept consistent through a shared
+//! tuple space.  The paper uses JavaSpaces ("write/read/take + event
+//! notification"); this module provides the same four primitives:
+//!
+//! * [`Space::write`] — publish/overwrite an entry (replicated to peers
+//!   through [`SpaceMsg`] traffic the agent layer forwards),
+//! * [`Space::read`] — copy an entry by key or template,
+//! * [`Space::take`] — remove-and-return (restricted to entries this agent
+//!   owns; distributed take would need consensus the paper does not ask for),
+//! * [`Space::subscribe`] — reactive notification queue per key prefix
+//!   ("the distributed objects are based on a reactive style of
+//!   programming, based on Jini's distributed event model").
+//!
+//! Consistency model: per-entry last-writer-wins ordered by a Lamport-style
+//! `(version, writer)` pair — exactly what component state sync needs
+//! (monotone attribute updates), far simpler than transactional JavaSpaces.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::AgentId;
+
+/// One tuple in the space.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    /// Hierarchical key, e.g. `"cpu/center0/unit3"`.
+    pub key: String,
+    /// Arbitrary JSON payload (component attribute state).
+    pub fields: Json,
+    /// Lamport version; ties broken by writer id.
+    pub version: u64,
+    /// The agent that produced this version.
+    pub writer: AgentId,
+}
+
+impl Entry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("key", Json::str(self.key.clone())),
+            ("fields", self.fields.clone()),
+            ("version", Json::num(self.version as f64)),
+            ("writer", Json::num(self.writer.raw() as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Entry> {
+        Ok(Entry {
+            key: j.get("key").and_then(Json::as_str).context("key")?.to_string(),
+            fields: j.get("fields").context("fields")?.clone(),
+            version: j.get("version").and_then(Json::as_u64).context("version")?,
+            writer: AgentId(j.get("writer").and_then(Json::as_u64).context("writer")?),
+        })
+    }
+}
+
+/// Replication traffic between space replicas.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpaceMsg {
+    /// Apply this entry if newer than the local copy.
+    Write(Entry),
+    /// Remove the entry (origin completed a take).
+    Remove { key: String, version: u64 },
+}
+
+impl SpaceMsg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            SpaceMsg::Write(e) => Json::obj(vec![("k", Json::str("w")), ("e", e.to_json())]),
+            SpaceMsg::Remove { key, version } => Json::obj(vec![
+                ("k", Json::str("r")),
+                ("key", Json::str(key.clone())),
+                ("version", Json::num(*version as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<SpaceMsg> {
+        match j.get("k").and_then(Json::as_str) {
+            Some("w") => Ok(SpaceMsg::Write(Entry::from_json(j.get("e").context("e")?)?)),
+            Some("r") => Ok(SpaceMsg::Remove {
+                key: j.get("key").and_then(Json::as_str).context("key")?.to_string(),
+                version: j.get("version").and_then(Json::as_u64).context("version")?,
+            }),
+            _ => anyhow::bail!("bad space msg {j}"),
+        }
+    }
+}
+
+/// A subscription handle: drained by the owner for notifications whose key
+/// starts with the subscribed prefix.
+pub struct Subscription {
+    prefix: String,
+    queue: Arc<Mutex<VecDeque<Entry>>>,
+}
+
+impl Subscription {
+    /// Drain pending notifications.
+    pub fn poll(&self) -> Vec<Entry> {
+        self.queue.lock().unwrap().drain(..).collect()
+    }
+}
+
+/// One agent's replica of the object space.
+pub struct Space {
+    me: AgentId,
+    entries: Mutex<BTreeMap<String, Entry>>,
+    clock: Mutex<u64>,
+    subs: Mutex<Vec<(String, Arc<Mutex<VecDeque<Entry>>>)>>,
+    /// Outgoing replication messages; the agent layer drains and forwards.
+    outbox: Mutex<Vec<SpaceMsg>>,
+}
+
+impl Space {
+    pub fn new(me: AgentId) -> Space {
+        Space {
+            me,
+            entries: Mutex::new(BTreeMap::new()),
+            clock: Mutex::new(0),
+            subs: Mutex::new(Vec::new()),
+            outbox: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Number of entries held.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Write (create or overwrite) an entry.  Returns the stored version.
+    pub fn write(&self, key: &str, fields: Json) -> u64 {
+        let version = {
+            let mut c = self.clock.lock().unwrap();
+            *c += 1;
+            *c
+        };
+        let entry = Entry {
+            key: key.to_string(),
+            fields,
+            version,
+            writer: self.me,
+        };
+        self.apply_local(entry.clone());
+        self.outbox.lock().unwrap().push(SpaceMsg::Write(entry));
+        version
+    }
+
+    /// Copy an entry by exact key.
+    pub fn read(&self, key: &str) -> Option<Entry> {
+        self.entries.lock().unwrap().get(key).cloned()
+    }
+
+    /// Copy all entries whose key starts with `prefix` (template matching by
+    /// key hierarchy — the common MONARC pattern, e.g. all `"cpu/center0/"`).
+    pub fn read_prefix(&self, prefix: &str) -> Vec<Entry> {
+        self.entries
+            .lock()
+            .unwrap()
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(_, e)| e.clone())
+            .collect()
+    }
+
+    /// Remove-and-return an entry.  Only entries whose latest version was
+    /// written by this agent can be taken (ownership rule, see module docs).
+    pub fn take(&self, key: &str) -> Option<Entry> {
+        let mut entries = self.entries.lock().unwrap();
+        match entries.get(key) {
+            Some(e) if e.writer == self.me => {
+                let e = entries.remove(key).unwrap();
+                self.outbox.lock().unwrap().push(SpaceMsg::Remove {
+                    key: e.key.clone(),
+                    version: e.version,
+                });
+                Some(e)
+            }
+            _ => None,
+        }
+    }
+
+    /// Subscribe to writes under a key prefix.
+    pub fn subscribe(&self, prefix: &str) -> Subscription {
+        let queue = Arc::new(Mutex::new(VecDeque::new()));
+        self.subs
+            .lock()
+            .unwrap()
+            .push((prefix.to_string(), Arc::clone(&queue)));
+        Subscription {
+            prefix: prefix.to_string(),
+            queue,
+        }
+    }
+
+    /// Apply replication traffic from a peer replica.
+    pub fn apply_remote(&self, msg: SpaceMsg) {
+        match msg {
+            SpaceMsg::Write(e) => {
+                // Lamport clock catch-up keeps our future writes ordered
+                // after everything we've seen.
+                {
+                    let mut c = self.clock.lock().unwrap();
+                    *c = (*c).max(e.version);
+                }
+                self.apply_local(e);
+            }
+            SpaceMsg::Remove { key, version } => {
+                let mut entries = self.entries.lock().unwrap();
+                if let Some(cur) = entries.get(&key) {
+                    if cur.version <= version {
+                        entries.remove(&key);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drain replication messages to forward to peers.
+    pub fn drain_outbox(&self) -> Vec<SpaceMsg> {
+        std::mem::take(&mut self.outbox.lock().unwrap())
+    }
+
+    fn apply_local(&self, e: Entry) {
+        {
+            let mut entries = self.entries.lock().unwrap();
+            if let Some(cur) = entries.get(&e.key) {
+                // Last-writer-wins: (version, writer) total order.
+                if (cur.version, cur.writer) >= (e.version, e.writer) {
+                    return;
+                }
+            }
+            entries.insert(e.key.clone(), e.clone());
+        }
+        let subs = self.subs.lock().unwrap();
+        for (prefix, q) in subs.iter() {
+            if e.key.starts_with(prefix.as_str()) {
+                q.lock().unwrap().push_back(e.clone());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fields(v: f64) -> Json {
+        Json::obj(vec![("v", Json::num(v))])
+    }
+
+    #[test]
+    fn write_read_take_cycle() {
+        let s = Space::new(AgentId(1));
+        s.write("cpu/0", fields(1.0));
+        assert_eq!(s.read("cpu/0").unwrap().fields, fields(1.0));
+        let taken = s.take("cpu/0").unwrap();
+        assert_eq!(taken.fields, fields(1.0));
+        assert!(s.read("cpu/0").is_none());
+    }
+
+    #[test]
+    fn replication_lww() {
+        let a = Space::new(AgentId(1));
+        let b = Space::new(AgentId(2));
+        a.write("db/x", fields(1.0));
+        for m in a.drain_outbox() {
+            b.apply_remote(m);
+        }
+        assert_eq!(b.read("db/x").unwrap().fields, fields(1.0));
+
+        // b overwrites; its clock advanced past a's version on apply.
+        b.write("db/x", fields(2.0));
+        for m in b.drain_outbox() {
+            a.apply_remote(m);
+        }
+        assert_eq!(a.read("db/x").unwrap().fields, fields(2.0));
+
+        // Stale write from a's old version must NOT clobber.
+        let stale = SpaceMsg::Write(Entry {
+            key: "db/x".into(),
+            fields: fields(0.5),
+            version: 1,
+            writer: AgentId(1),
+        });
+        a.apply_remote(stale);
+        assert_eq!(a.read("db/x").unwrap().fields, fields(2.0));
+    }
+
+    #[test]
+    fn concurrent_writes_converge_same_winner() {
+        // Same version from two writers: higher writer id wins everywhere.
+        let a = Space::new(AgentId(1));
+        let b = Space::new(AgentId(2));
+        a.write("k", fields(10.0)); // version 1, writer 1
+        b.write("k", fields(20.0)); // version 1, writer 2
+        let ma = a.drain_outbox();
+        let mb = b.drain_outbox();
+        for m in mb {
+            a.apply_remote(m);
+        }
+        for m in ma {
+            b.apply_remote(m);
+        }
+        assert_eq!(a.read("k").unwrap().fields, b.read("k").unwrap().fields);
+        assert_eq!(a.read("k").unwrap().fields, fields(20.0));
+    }
+
+    #[test]
+    fn take_requires_ownership() {
+        let a = Space::new(AgentId(1));
+        let b = Space::new(AgentId(2));
+        a.write("job/1", fields(1.0));
+        for m in a.drain_outbox() {
+            b.apply_remote(m);
+        }
+        // b does not own the latest version -> cannot take.
+        assert!(b.take("job/1").is_none());
+        assert!(a.take("job/1").is_some());
+    }
+
+    #[test]
+    fn remove_propagates() {
+        let a = Space::new(AgentId(1));
+        let b = Space::new(AgentId(2));
+        a.write("k", fields(1.0));
+        for m in a.drain_outbox() {
+            b.apply_remote(m);
+        }
+        a.take("k");
+        for m in a.drain_outbox() {
+            b.apply_remote(m);
+        }
+        assert!(b.read("k").is_none());
+    }
+
+    #[test]
+    fn prefix_read_and_subscribe() {
+        let s = Space::new(AgentId(1));
+        let sub = s.subscribe("cpu/");
+        s.write("cpu/0", fields(0.0));
+        s.write("cpu/1", fields(1.0));
+        s.write("net/0", fields(9.0));
+        assert_eq!(s.read_prefix("cpu/").len(), 2);
+        let notes = sub.poll();
+        assert_eq!(notes.len(), 2);
+        assert!(notes.iter().all(|e| e.key.starts_with("cpu/")));
+        assert!(sub.poll().is_empty());
+        assert_eq!(sub.prefix, "cpu/");
+    }
+
+    #[test]
+    fn entry_json_roundtrip() {
+        let e = Entry {
+            key: "a/b".into(),
+            fields: fields(3.5),
+            version: 7,
+            writer: AgentId(2),
+        };
+        assert_eq!(Entry::from_json(&e.to_json()).unwrap(), e);
+        let m = SpaceMsg::Write(e);
+        assert_eq!(SpaceMsg::from_json(&m.to_json()).unwrap(), m);
+        let r = SpaceMsg::Remove {
+            key: "x".into(),
+            version: 3,
+        };
+        assert_eq!(SpaceMsg::from_json(&r.to_json()).unwrap(), r);
+    }
+}

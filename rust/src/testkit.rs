@@ -1,0 +1,94 @@
+//! Minimal property-testing kit (the offline snapshot has no `proptest`).
+//!
+//! [`check`] runs a property over `n` seeded-random cases; on failure it
+//! retries the failing case with progressively "smaller" seeds derived from
+//! the failure (a light-weight shrink) and reports the minimal seed so the
+//! case can be replayed deterministically:
+//!
+//! ```no_run
+//! use dsim::testkit::check;
+//! use dsim::util::Pcg32;
+//!
+//! check("sorting is idempotent", 100, |rng: &mut Pcg32| {
+//!     let mut v: Vec<u32> = (0..rng.range(0, 20)).map(|_| rng.next_u32()).collect();
+//!     v.sort();
+//!     let w = { let mut w = v.clone(); w.sort(); w };
+//!     if v == w { Ok(()) } else { Err("sort not idempotent".into()) }
+//! });
+//! ```
+
+use crate::util::Pcg32;
+
+/// Result of one property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `property` for `cases` seeded cases; panics with the failing seed and
+/// message on the first (shrunk) failure.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Pcg32) -> CaseResult,
+{
+    // Deterministic base seed from the property name: reruns are stable.
+    let base = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9e3779b97f4a7c15));
+        let mut rng = Pcg32::seeded(seed);
+        if let Err(msg) = property(&mut rng) {
+            // Shrink-lite: probe a handful of related smaller seeds and
+            // report the one that still fails (often a simpler case).
+            let mut worst = (seed, msg);
+            for probe in [seed / 2, seed / 4, case, 0, 1] {
+                let mut rng = Pcg32::seeded(probe);
+                if let Err(m) = property(&mut rng) {
+                    worst = (probe, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (replay seed {}): {}",
+                worst.0, worst.1
+            );
+        }
+    }
+}
+
+/// Assert two f64s are close (absolute + relative tolerance).
+pub fn assert_close(a: f64, b: f64, tol: f64) -> CaseResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("addition commutes", 50, |rng| {
+            let (a, b) = (rng.next_u32() as u64, rng.next_u32() as u64);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_works() {
+        assert!(assert_close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(assert_close(1.0, 2.0, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,901 @@
+//! Agent-to-agent message transport.
+//!
+//! The framework runs in two deployment modes:
+//!
+//! * **In-process** ([`InProcNetwork`]) — every agent is a thread in one OS
+//!   process; messages travel over `std::sync::mpsc` channels.  This is the
+//!   default for tests, benches and single-machine studies.
+//! * **TCP** ([`TcpTransport`]) — agents are separate OS processes
+//!   (possibly on different hosts); messages are length-prefixed JSON
+//!   frames over persistent sockets.  Payloads must implement [`Wire`].
+//!
+//! Both implement [`Transport`], so the engine/agent layers are agnostic.
+//! Channels are FIFO per (src, dst) pair — the property the conservative
+//! protocol relies on (a channel's head timestamp bounds the channel).
+
+use std::collections::HashMap;
+use std::io::{Read, Write as IoWrite};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::engine::{Event, SimTime, SyncMsg};
+use crate::util::json::Json;
+use crate::util::{AgentId, ContextId, LpId};
+
+// ---------------------------------------------------------------------------
+// Messages
+// ---------------------------------------------------------------------------
+
+/// Control-plane messages (deployment, termination detection, monitoring).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ControlMsg {
+    /// Leader -> agent: install an LP of `kind` with JSON params.
+    DeployLp {
+        context: ContextId,
+        lp: LpId,
+        kind: String,
+        params: Json,
+    },
+    /// Leader -> agent: full LP->agent routing table for a context.
+    RoutingTable {
+        context: ContextId,
+        routes: Vec<(LpId, AgentId)>,
+    },
+    /// Leader -> agent: inject a bootstrap event.
+    Bootstrap {
+        context: ContextId,
+        time: SimTime,
+        dst: LpId,
+        payload: Json,
+    },
+    /// Leader -> agent: begin executing a context.  `participants` is the
+    /// set of agents actually hosting LPs of this context — only they take
+    /// part in conservative synchronization (a fleet member with no LPs
+    /// would otherwise be dead weight the demand protocol keeps polling).
+    StartRun {
+        context: ContextId,
+        participants: Vec<AgentId>,
+    },
+    /// Termination detection probe (double-count algorithm).
+    Probe { context: ContextId, round: u64 },
+    /// Agent -> leader: probe answer (idle?, #sent, #received, lvt,
+    /// earliest pending event).
+    ProbeReply {
+        context: ContextId,
+        round: u64,
+        from: AgentId,
+        idle: bool,
+        sent: u64,
+        received: u64,
+        lvt: SimTime,
+        next_event: SimTime,
+    },
+    /// Leader -> agents: proven GVT lower bound (quiescent probe round).
+    GvtUpdate { context: ContextId, gvt: SimTime },
+    /// Leader -> agents: context finished; tear down and report stats.
+    EndRun { context: ContextId },
+    /// Agent -> leader: final per-agent statistics (JSON-encoded).
+    FinalStats {
+        context: ContextId,
+        from: AgentId,
+        stats: Json,
+    },
+    /// Agent -> leader: published simulation result record.
+    Result {
+        context: ContextId,
+        kind: String,
+        record: Json,
+    },
+    /// Monitoring: an agent's published performance sample.
+    PerfSample { from: AgentId, value: f64, load: Json },
+    /// Graceful process shutdown (TCP mode).
+    Shutdown,
+}
+
+/// Everything that can travel between agents.
+#[derive(Clone, Debug)]
+pub enum NetMsg<P> {
+    /// A simulation event, carrying the sender's current per-destination
+    /// safe bound as a piggybacked null message (classic CMB optimization:
+    /// every event refreshes the receiver's LVT-queue entry for free).
+    Event {
+        context: ContextId,
+        event: Event<P>,
+        bound: SimTime,
+    },
+    Sync {
+        context: ContextId,
+        from: AgentId,
+        msg: SyncMsg,
+    },
+    Space(crate::space::SpaceMsg),
+    Control(ControlMsg),
+}
+
+// ---------------------------------------------------------------------------
+// Transport trait
+// ---------------------------------------------------------------------------
+
+/// A bidirectional, FIFO-per-channel message fabric for one agent.
+pub trait Transport<P>: Send {
+    /// This endpoint's agent id.
+    fn me(&self) -> AgentId;
+
+    /// All agents reachable (including self).
+    fn agents(&self) -> Vec<AgentId>;
+
+    /// Send a message to one agent.
+    fn send(&self, to: AgentId, msg: NetMsg<P>) -> Result<()>;
+
+    /// Receive the next message for this agent, waiting up to `timeout`.
+    fn recv_timeout(&self, timeout: Duration) -> Option<NetMsg<P>>;
+
+    /// Non-blocking drain of everything currently queued.
+    fn drain(&self) -> Vec<NetMsg<P>> {
+        let mut out = Vec::new();
+        while let Some(m) = self.recv_timeout(Duration::ZERO) {
+            out.push(m);
+        }
+        out
+    }
+
+    /// Send to every other agent.
+    fn broadcast(&self, msg: NetMsg<P>) -> Result<()>
+    where
+        P: Clone,
+    {
+        for a in self.agents() {
+            if a != self.me() {
+                self.send(a, msg.clone())?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-process transport
+// ---------------------------------------------------------------------------
+
+struct InProcShared<P> {
+    inboxes: RwLock<HashMap<AgentId, Sender<NetMsg<P>>>>,
+    /// Per-sender delivery counters (message-count metrics for benches).
+    sent: Mutex<HashMap<AgentId, u64>>,
+}
+
+/// Factory for a set of connected in-process endpoints.
+pub struct InProcNetwork<P> {
+    shared: Arc<InProcShared<P>>,
+}
+
+impl<P: Send + 'static> InProcNetwork<P> {
+    pub fn new() -> Self {
+        InProcNetwork {
+            shared: Arc::new(InProcShared {
+                inboxes: RwLock::new(HashMap::new()),
+                sent: Mutex::new(HashMap::new()),
+            }),
+        }
+    }
+
+    /// Create the endpoint for `agent`.  Panics if the id is taken.
+    pub fn endpoint(&self, agent: AgentId) -> InProcEndpoint<P> {
+        let (tx, rx) = channel();
+        let mut inboxes = self.shared.inboxes.write().unwrap();
+        assert!(
+            inboxes.insert(agent, tx).is_none(),
+            "duplicate agent {agent}"
+        );
+        InProcEndpoint {
+            me: agent,
+            shared: Arc::clone(&self.shared),
+            inbox: Mutex::new(rx),
+        }
+    }
+
+    /// Total messages sent through the fabric (all endpoints).
+    pub fn total_sent(&self) -> u64 {
+        self.shared.sent.lock().unwrap().values().sum()
+    }
+}
+
+impl<P: Send + 'static> Default for InProcNetwork<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One agent's endpoint on an [`InProcNetwork`].
+pub struct InProcEndpoint<P> {
+    me: AgentId,
+    shared: Arc<InProcShared<P>>,
+    inbox: Mutex<Receiver<NetMsg<P>>>,
+}
+
+impl<P: Send + 'static> Transport<P> for InProcEndpoint<P> {
+    fn me(&self) -> AgentId {
+        self.me
+    }
+
+    fn agents(&self) -> Vec<AgentId> {
+        let mut v: Vec<AgentId> = self.shared.inboxes.read().unwrap().keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    fn send(&self, to: AgentId, msg: NetMsg<P>) -> Result<()> {
+        let inboxes = self.shared.inboxes.read().unwrap();
+        let tx = inboxes
+            .get(&to)
+            .ok_or_else(|| anyhow!("unknown agent {to}"))?;
+        tx.send(msg).map_err(|_| anyhow!("agent {to} hung up"))?;
+        *self.shared.sent.lock().unwrap().entry(self.me).or_insert(0) += 1;
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Option<NetMsg<P>> {
+        let rx = self.inbox.lock().unwrap();
+        if timeout.is_zero() {
+            rx.try_recv().ok()
+        } else {
+            rx.recv_timeout(timeout).ok()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire encoding (TCP mode)
+// ---------------------------------------------------------------------------
+
+/// JSON-encodable payloads (needed only for the TCP transport; the
+/// in-process transport moves values directly).
+pub trait Wire: Sized {
+    fn to_json(&self) -> Json;
+    fn from_json(j: &Json) -> Result<Self>;
+}
+
+impl Wire for u32 {
+    fn to_json(&self) -> Json {
+        Json::num(*self as f64)
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        j.as_u64()
+            .map(|v| v as u32)
+            .ok_or_else(|| anyhow!("expected number"))
+    }
+}
+
+pub(crate) fn time_to_json(t: SimTime) -> Json {
+    if t.0 == f64::INFINITY {
+        Json::str("inf")
+    } else if t.0 == f64::NEG_INFINITY {
+        Json::str("-inf")
+    } else {
+        Json::num(t.0)
+    }
+}
+
+pub(crate) fn time_from_json(j: &Json) -> Result<SimTime> {
+    match j {
+        Json::Num(n) => Ok(SimTime::new(*n)),
+        Json::Str(s) if s == "inf" => Ok(SimTime::INF),
+        Json::Str(s) if s == "-inf" => Ok(SimTime::NEG_INF),
+        _ => bail!("bad time {j}"),
+    }
+}
+
+fn event_to_json<P: Wire>(e: &Event<P>) -> Json {
+    Json::obj(vec![
+        ("t", time_to_json(e.time)),
+        ("tie0", Json::num(e.tie.0 as f64)),
+        ("tie1", Json::num(e.tie.1 as f64)),
+        ("sa", Json::num(e.src_agent.raw() as f64)),
+        ("sl", Json::num(e.src_lp.raw() as f64)),
+        ("dl", Json::num(e.dst_lp.raw() as f64)),
+        ("p", e.payload.to_json()),
+    ])
+}
+
+fn event_from_json<P: Wire>(j: &Json) -> Result<Event<P>> {
+    Ok(Event {
+        time: time_from_json(j.get("t").context("t")?)?,
+        tie: (
+            j.get("tie0").and_then(Json::as_u64).context("tie0")?,
+            j.get("tie1").and_then(Json::as_u64).context("tie1")?,
+        ),
+        src_agent: AgentId(j.get("sa").and_then(Json::as_u64).context("sa")?),
+        src_lp: LpId(j.get("sl").and_then(Json::as_u64).context("sl")?),
+        dst_lp: LpId(j.get("dl").and_then(Json::as_u64).context("dl")?),
+        payload: P::from_json(j.get("p").context("p")?)?,
+    })
+}
+
+fn sync_to_json(m: &SyncMsg) -> Json {
+    match m {
+        SyncMsg::LvtRequest { need, lvt } => Json::obj(vec![
+            ("k", Json::str("req")),
+            ("need", time_to_json(*need)),
+            ("lvt", time_to_json(*lvt)),
+        ]),
+        SyncMsg::LvtAnnounce { bound } => Json::obj(vec![
+            ("k", Json::str("ann")),
+            ("bound", time_to_json(*bound)),
+        ]),
+    }
+}
+
+fn sync_from_json(j: &Json) -> Result<SyncMsg> {
+    match j.get("k").and_then(Json::as_str) {
+        Some("req") => Ok(SyncMsg::LvtRequest {
+            need: time_from_json(j.get("need").context("need")?)?,
+            lvt: time_from_json(j.get("lvt").context("lvt")?)?,
+        }),
+        Some("ann") => Ok(SyncMsg::LvtAnnounce {
+            bound: time_from_json(j.get("bound").context("bound")?)?,
+        }),
+        _ => bail!("bad sync msg {j}"),
+    }
+}
+
+fn control_to_json(c: &ControlMsg) -> Json {
+    use ControlMsg::*;
+    match c {
+        DeployLp {
+            context,
+            lp,
+            kind,
+            params,
+        } => Json::obj(vec![
+            ("k", Json::str("deploy")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("lp", Json::num(lp.raw() as f64)),
+            ("kind", Json::str(kind.clone())),
+            ("params", params.clone()),
+        ]),
+        RoutingTable { context, routes } => Json::obj(vec![
+            ("k", Json::str("routes")),
+            ("ctx", Json::num(context.raw() as f64)),
+            (
+                "routes",
+                Json::arr(routes.iter().map(|(l, a)| {
+                    Json::arr([Json::num(l.raw() as f64), Json::num(a.raw() as f64)])
+                })),
+            ),
+        ]),
+        Bootstrap {
+            context,
+            time,
+            dst,
+            payload,
+        } => Json::obj(vec![
+            ("k", Json::str("bootstrap")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("t", time_to_json(*time)),
+            ("dst", Json::num(dst.raw() as f64)),
+            ("p", payload.clone()),
+        ]),
+        StartRun {
+            context,
+            participants,
+        } => Json::obj(vec![
+            ("k", Json::str("start")),
+            ("ctx", Json::num(context.raw() as f64)),
+            (
+                "parts",
+                Json::arr(participants.iter().map(|a| Json::num(a.raw() as f64))),
+            ),
+        ]),
+        Probe { context, round } => Json::obj(vec![
+            ("k", Json::str("probe")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("round", Json::num(*round as f64)),
+        ]),
+        ProbeReply {
+            context,
+            round,
+            from,
+            idle,
+            sent,
+            received,
+            lvt,
+            next_event,
+        } => Json::obj(vec![
+            ("k", Json::str("probe-reply")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("round", Json::num(*round as f64)),
+            ("from", Json::num(from.raw() as f64)),
+            ("idle", Json::Bool(*idle)),
+            ("sent", Json::num(*sent as f64)),
+            ("received", Json::num(*received as f64)),
+            ("lvt", time_to_json(*lvt)),
+            ("next", time_to_json(*next_event)),
+        ]),
+        GvtUpdate { context, gvt } => Json::obj(vec![
+            ("k", Json::str("gvt")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("gvt", time_to_json(*gvt)),
+        ]),
+        EndRun { context } => Json::obj(vec![
+            ("k", Json::str("end")),
+            ("ctx", Json::num(context.raw() as f64)),
+        ]),
+        FinalStats {
+            context,
+            from,
+            stats,
+        } => Json::obj(vec![
+            ("k", Json::str("stats")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("from", Json::num(from.raw() as f64)),
+            ("stats", stats.clone()),
+        ]),
+        Result {
+            context,
+            kind,
+            record,
+        } => Json::obj(vec![
+            ("k", Json::str("result")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("kind", Json::str(kind.clone())),
+            ("record", record.clone()),
+        ]),
+        PerfSample { from, value, load } => Json::obj(vec![
+            ("k", Json::str("perf")),
+            ("from", Json::num(from.raw() as f64)),
+            ("value", Json::num(*value)),
+            ("load", load.clone()),
+        ]),
+        Shutdown => Json::obj(vec![("k", Json::str("shutdown"))]),
+    }
+}
+
+fn control_from_json(j: &Json) -> Result<ControlMsg> {
+    let ctx = || -> Result<ContextId> {
+        Ok(ContextId(j.get("ctx").and_then(Json::as_u64).context("ctx")?))
+    };
+    match j.get("k").and_then(Json::as_str) {
+        Some("deploy") => Ok(ControlMsg::DeployLp {
+            context: ctx()?,
+            lp: LpId(j.get("lp").and_then(Json::as_u64).context("lp")?),
+            kind: j
+                .get("kind")
+                .and_then(Json::as_str)
+                .context("kind")?
+                .to_string(),
+            params: j.get("params").context("params")?.clone(),
+        }),
+        Some("routes") => {
+            let mut routes = Vec::new();
+            for r in j.get("routes").and_then(Json::as_arr).context("routes")? {
+                let pair = r.as_arr().context("route pair")?;
+                routes.push((
+                    LpId(pair[0].as_u64().context("lp")?),
+                    AgentId(pair[1].as_u64().context("agent")?),
+                ));
+            }
+            Ok(ControlMsg::RoutingTable {
+                context: ctx()?,
+                routes,
+            })
+        }
+        Some("bootstrap") => Ok(ControlMsg::Bootstrap {
+            context: ctx()?,
+            time: time_from_json(j.get("t").context("t")?)?,
+            dst: LpId(j.get("dst").and_then(Json::as_u64).context("dst")?),
+            payload: j.get("p").context("p")?.clone(),
+        }),
+        Some("start") => Ok(ControlMsg::StartRun {
+            context: ctx()?,
+            participants: j
+                .get("parts")
+                .and_then(Json::as_arr)
+                .context("parts")?
+                .iter()
+                .filter_map(Json::as_u64)
+                .map(AgentId)
+                .collect(),
+        }),
+        Some("probe") => Ok(ControlMsg::Probe {
+            context: ctx()?,
+            round: j.get("round").and_then(Json::as_u64).context("round")?,
+        }),
+        Some("probe-reply") => Ok(ControlMsg::ProbeReply {
+            context: ctx()?,
+            round: j.get("round").and_then(Json::as_u64).context("round")?,
+            from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+            idle: j.get("idle").and_then(Json::as_bool).context("idle")?,
+            sent: j.get("sent").and_then(Json::as_u64).context("sent")?,
+            received: j
+                .get("received")
+                .and_then(Json::as_u64)
+                .context("received")?,
+            lvt: time_from_json(j.get("lvt").context("lvt")?)?,
+            next_event: time_from_json(j.get("next").context("next")?)?,
+        }),
+        Some("gvt") => Ok(ControlMsg::GvtUpdate {
+            context: ctx()?,
+            gvt: time_from_json(j.get("gvt").context("gvt")?)?,
+        }),
+        Some("end") => Ok(ControlMsg::EndRun { context: ctx()? }),
+        Some("stats") => Ok(ControlMsg::FinalStats {
+            context: ctx()?,
+            from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+            stats: j.get("stats").context("stats")?.clone(),
+        }),
+        Some("result") => Ok(ControlMsg::Result {
+            context: ctx()?,
+            kind: j
+                .get("kind")
+                .and_then(Json::as_str)
+                .context("kind")?
+                .to_string(),
+            record: j.get("record").context("record")?.clone(),
+        }),
+        Some("perf") => Ok(ControlMsg::PerfSample {
+            from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+            value: j.get("value").and_then(Json::as_f64).context("value")?,
+            load: j.get("load").context("load")?.clone(),
+        }),
+        Some("shutdown") => Ok(ControlMsg::Shutdown),
+        _ => bail!("bad control msg {j}"),
+    }
+}
+
+/// Full NetMsg encoding.
+pub fn msg_to_json<P: Wire>(m: &NetMsg<P>) -> Json {
+    match m {
+        NetMsg::Event {
+            context,
+            event,
+            bound,
+        } => Json::obj(vec![
+            ("k", Json::str("event")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("ev", event_to_json(event)),
+            ("b", time_to_json(*bound)),
+        ]),
+        NetMsg::Sync { context, from, msg } => Json::obj(vec![
+            ("k", Json::str("sync")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("from", Json::num(from.raw() as f64)),
+            ("msg", sync_to_json(msg)),
+        ]),
+        NetMsg::Space(op) => Json::obj(vec![("k", Json::str("space")), ("op", op.to_json())]),
+        NetMsg::Control(c) => {
+            Json::obj(vec![("k", Json::str("control")), ("c", control_to_json(c))])
+        }
+    }
+}
+
+pub fn msg_from_json<P: Wire>(j: &Json) -> Result<NetMsg<P>> {
+    match j.get("k").and_then(Json::as_str) {
+        Some("event") => Ok(NetMsg::Event {
+            context: ContextId(j.get("ctx").and_then(Json::as_u64).context("ctx")?),
+            event: event_from_json(j.get("ev").context("ev")?)?,
+            bound: time_from_json(j.get("b").context("b")?)?,
+        }),
+        Some("sync") => Ok(NetMsg::Sync {
+            context: ContextId(j.get("ctx").and_then(Json::as_u64).context("ctx")?),
+            from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+            msg: sync_from_json(j.get("msg").context("msg")?)?,
+        }),
+        Some("space") => Ok(NetMsg::Space(crate::space::SpaceMsg::from_json(
+            j.get("op").context("op")?,
+        )?)),
+        Some("control") => Ok(NetMsg::Control(control_from_json(
+            j.get("c").context("c")?,
+        )?)),
+        _ => bail!("bad net msg {j}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP transport
+// ---------------------------------------------------------------------------
+
+/// Length-prefixed frame I/O.
+fn write_frame(stream: &mut TcpStream, bytes: &[u8]) -> Result<()> {
+    let len = (bytes.len() as u32).to_be_bytes();
+    stream.write_all(&len)?;
+    stream.write_all(bytes)?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len)?;
+    let n = u32::from_be_bytes(len) as usize;
+    if n > 64 << 20 {
+        bail!("frame too large: {n}");
+    }
+    let mut buf = vec![0u8; n];
+    stream.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// TCP endpoint: one listener for inbound peers, one persistent outbound
+/// socket per peer (established lazily); reader threads funnel frames into
+/// a single inbox channel.
+pub struct TcpTransport<P> {
+    me: AgentId,
+    peers: HashMap<AgentId, SocketAddr>,
+    outbound: Mutex<HashMap<AgentId, TcpStream>>,
+    inbox: Mutex<Receiver<NetMsg<P>>>,
+    inbox_tx: Sender<NetMsg<P>>,
+    _listener: std::thread::JoinHandle<()>,
+}
+
+impl<P: Wire + Send + 'static> TcpTransport<P> {
+    /// Bind `bind_addr` for `me` and remember the full peer address map
+    /// (including self).
+    pub fn bind(
+        me: AgentId,
+        bind_addr: SocketAddr,
+        peers: HashMap<AgentId, SocketAddr>,
+    ) -> Result<Self> {
+        let listener =
+            TcpListener::bind(bind_addr).with_context(|| format!("bind {bind_addr} for {me}"))?;
+        let (tx, rx) = channel();
+        let tx_accept = tx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("dsim-tcp-accept-{me}"))
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    let Ok(mut stream) = stream else { break };
+                    let tx = tx_accept.clone();
+                    std::thread::spawn(move || loop {
+                        match read_frame(&mut stream) {
+                            Ok(bytes) => {
+                                let Ok(text) = std::str::from_utf8(&bytes) else { break };
+                                match Json::parse(text)
+                                    .map_err(anyhow::Error::from)
+                                    .and_then(|j| msg_from_json::<P>(&j))
+                                {
+                                    Ok(msg) => {
+                                        if tx.send(msg).is_err() {
+                                            break;
+                                        }
+                                    }
+                                    Err(e) => {
+                                        log::error!("bad frame: {e}");
+                                        break;
+                                    }
+                                }
+                            }
+                            Err(_) => break,
+                        }
+                    });
+                }
+            })?;
+        Ok(TcpTransport {
+            me,
+            peers,
+            outbound: Mutex::new(HashMap::new()),
+            inbox: Mutex::new(rx),
+            inbox_tx: tx,
+            _listener: handle,
+        })
+    }
+
+    fn connect(&self, to: AgentId) -> Result<TcpStream> {
+        let addr = self
+            .peers
+            .get(&to)
+            .ok_or_else(|| anyhow!("unknown peer {to}"))?;
+        // Retry briefly: peers race to bind at startup.
+        let mut last = None;
+        for _ in 0..50 {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    s.set_nodelay(true).ok();
+                    return Ok(s);
+                }
+                Err(e) => {
+                    last = Some(e);
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+        Err(anyhow!("connect {to} at {addr}: {last:?}"))
+    }
+}
+
+impl<P: Wire + Clone + Send + 'static> Transport<P> for TcpTransport<P> {
+    fn me(&self) -> AgentId {
+        self.me
+    }
+
+    fn agents(&self) -> Vec<AgentId> {
+        let mut v: Vec<AgentId> = self.peers.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    fn send(&self, to: AgentId, msg: NetMsg<P>) -> Result<()> {
+        if to == self.me {
+            // Loopback without a socket.
+            self.inbox_tx
+                .send(msg)
+                .map_err(|_| anyhow!("self inbox closed"))?;
+            return Ok(());
+        }
+        let text = msg_to_json(&msg).to_string();
+        let mut outbound = self.outbound.lock().unwrap();
+        if !outbound.contains_key(&to) {
+            let s = self.connect(to)?;
+            outbound.insert(to, s);
+        }
+        let stream = outbound.get_mut(&to).unwrap();
+        if let Err(e) = write_frame(stream, text.as_bytes()) {
+            // One reconnect attempt on a stale socket.
+            log::warn!("resend to {to} after {e}");
+            let mut s = self.connect(to)?;
+            write_frame(&mut s, text.as_bytes())?;
+            outbound.insert(to, s);
+        }
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Option<NetMsg<P>> {
+        let rx = self.inbox.lock().unwrap();
+        if timeout.is_zero() {
+            rx.try_recv().ok()
+        } else {
+            rx.recv_timeout(timeout).ok()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inproc_roundtrip_and_order() {
+        let net: InProcNetwork<u32> = InProcNetwork::new();
+        let a = net.endpoint(AgentId(1));
+        let b = net.endpoint(AgentId(2));
+        for i in 0..10u64 {
+            a.send(
+                AgentId(2),
+                NetMsg::Control(ControlMsg::Probe {
+                    context: ContextId(i),
+                    round: 0,
+                }),
+            )
+            .unwrap();
+        }
+        for i in 0..10u64 {
+            match b.recv_timeout(Duration::from_secs(1)).unwrap() {
+                NetMsg::Control(ControlMsg::Probe { context, .. }) => {
+                    assert_eq!(context, ContextId(i)); // FIFO preserved
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(net.total_sent(), 10);
+    }
+
+    #[test]
+    fn inproc_unknown_agent_errors() {
+        let net: InProcNetwork<u32> = InProcNetwork::new();
+        let a = net.endpoint(AgentId(1));
+        assert!(a
+            .send(AgentId(9), NetMsg::Control(ControlMsg::Shutdown))
+            .is_err());
+    }
+
+    #[test]
+    fn wire_event_roundtrip() {
+        let ev = Event {
+            time: SimTime::new(1.5),
+            tie: (3, 42),
+            src_agent: AgentId(3),
+            src_lp: LpId(7),
+            dst_lp: LpId(8),
+            payload: 99u32,
+        };
+        let j = event_to_json(&ev);
+        let back: Event<u32> = event_from_json(&j).unwrap();
+        assert_eq!(back.time, ev.time);
+        assert_eq!(back.tie, ev.tie);
+        assert_eq!(back.payload, 99);
+    }
+
+    #[test]
+    fn wire_sync_roundtrip_with_infinities() {
+        for m in [
+            SyncMsg::LvtRequest {
+                need: SimTime::new(2.0),
+                lvt: SimTime::NEG_INF,
+            },
+            SyncMsg::LvtAnnounce { bound: SimTime::INF },
+        ] {
+            let j = sync_to_json(&m);
+            assert_eq!(sync_from_json(&j).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn wire_control_roundtrip() {
+        let msgs = vec![
+            ControlMsg::DeployLp {
+                context: ContextId(1),
+                lp: LpId(5),
+                kind: "cpu".into(),
+                params: Json::obj(vec![("power", Json::num(2.5))]),
+            },
+            ControlMsg::RoutingTable {
+                context: ContextId(1),
+                routes: vec![(LpId(1), AgentId(2)), (LpId(3), AgentId(4))],
+            },
+            ControlMsg::ProbeReply {
+                context: ContextId(2),
+                round: 7,
+                from: AgentId(1),
+                idle: true,
+                sent: 10,
+                received: 10,
+                lvt: SimTime::new(3.5),
+                next_event: SimTime::INF,
+            },
+            ControlMsg::GvtUpdate {
+                context: ContextId(1),
+                gvt: SimTime::new(4.5),
+            },
+            ControlMsg::Shutdown,
+        ];
+        for m in msgs {
+            let j = control_to_json(&m);
+            assert_eq!(control_from_json(&j).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn tcp_roundtrip_two_endpoints() {
+        let addr1: SocketAddr = "127.0.0.1:39121".parse().unwrap();
+        let addr2: SocketAddr = "127.0.0.1:39122".parse().unwrap();
+        let peers: HashMap<AgentId, SocketAddr> = [(AgentId(1), addr1), (AgentId(2), addr2)]
+            .into_iter()
+            .collect();
+        let t1: TcpTransport<u32> = TcpTransport::bind(AgentId(1), addr1, peers.clone()).unwrap();
+        let t2: TcpTransport<u32> = TcpTransport::bind(AgentId(2), addr2, peers).unwrap();
+
+        t1.send(
+            AgentId(2),
+            NetMsg::Event {
+                context: ContextId(1),
+                event: Event {
+                    time: SimTime::new(9.0),
+                    tie: (1, 1),
+                    src_agent: AgentId(1),
+                    src_lp: LpId(1),
+                    dst_lp: LpId(2),
+                    payload: 7u32,
+                },
+                bound: SimTime::new(9.0),
+            },
+        )
+        .unwrap();
+        match t2.recv_timeout(Duration::from_secs(5)).unwrap() {
+            NetMsg::Event { event, .. } => {
+                assert_eq!(event.payload, 7);
+                assert_eq!(event.time, SimTime::new(9.0));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // Reply direction.
+        t2.send(AgentId(1), NetMsg::Control(ControlMsg::Shutdown))
+            .unwrap();
+        assert!(matches!(
+            t1.recv_timeout(Duration::from_secs(5)).unwrap(),
+            NetMsg::Control(ControlMsg::Shutdown)
+        ));
+    }
+}

@@ -1,0 +1,44 @@
+//! Small self-contained utilities shared across the framework.
+//!
+//! The build environment is fully offline with a minimal crate snapshot, so
+//! substrates that would normally come from crates.io (JSON, PRNG, ids) are
+//! implemented here from scratch.
+
+pub mod ids;
+pub mod json;
+pub mod rng;
+
+pub use ids::{AgentId, ContextId, LpId, RunId};
+pub use rng::Pcg32;
+
+/// Clamp helper for f64 used by the monitor's synthetic load models.
+pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+/// Arithmetic mean of a non-empty slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn clamp_basic() {
+        assert_eq!(clamp(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clamp(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clamp(0.5, 0.0, 1.0), 0.5);
+    }
+}

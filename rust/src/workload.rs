@@ -1,0 +1,287 @@
+//! Scenario generators: build [`Scenario`] descriptions from a
+//! [`WorkloadConfig`] (paper §3.1's T0/T1 study plus simpler farms for
+//! benches and examples).
+//!
+//! Affinity-group layout for `t0t1`:
+//!
+//! | group | contents |
+//! |---|---|
+//! | 0 | WAN LP |
+//! | 1 | metadata catalog |
+//! | 2 + i | regional center i: farm + db + mass storage + driver |
+//!
+//! Cross-group traffic (driver->WAN, driver->catalog, WAN->driver) always
+//! carries >= `wan_latency_s` virtual latency, which is exactly the model
+//! lookahead the conservative engine needs.
+
+use crate::components::RegionalCenter;
+use crate::config::WorkloadConfig;
+use crate::model::{Payload, Scenario};
+use crate::util::json::Json;
+use crate::util::LpId;
+
+/// Everything the caller needs to interpret a generated scenario.
+#[derive(Clone, Debug)]
+pub struct GeneratedScenario {
+    pub scenario: Scenario,
+    pub wan: LpId,
+    pub catalog: LpId,
+    pub centers: Vec<RegionalCenter>,
+}
+
+/// Build the paper's §3.1 T0/T1 replication + analysis scenario.
+///
+/// Center 0 is the T0 (CERN): it produces `transfers_per_center` datasets
+/// and replicates each to all `centers` T1s; every T1 runs
+/// `jobs_per_center` analysis jobs over the replicated data.  The
+/// `wan_bandwidth_mbps` parameter throttles the T0 uplink — the fig. 2
+/// sweep axis ("the available bandwidth between Europe and US").
+pub fn t0t1(cfg: &WorkloadConfig) -> GeneratedScenario {
+    let n_centers = cfg.centers + 1; // T0 + T1s
+    let mut sc = Scenario::new("t0t1", cfg.wan_latency_s);
+
+    // WAN: T0 uplink is the studied bottleneck; T1 links are generous so
+    // the transatlantic link dominates, as in the paper's study.
+    let t1_mbps = (cfg.wan_bandwidth_mbps * 16.0).max(10_000.0);
+    let mut uplinks = vec![t1_mbps; n_centers];
+    let mut downlinks = vec![t1_mbps; n_centers];
+    uplinks[0] = cfg.wan_bandwidth_mbps;
+    downlinks[0] = cfg.wan_bandwidth_mbps;
+    let wan = sc.add_lp(
+        "wan",
+        Json::obj(vec![
+            ("centers", Json::num(n_centers as f64)),
+            ("uplink_mbps", Json::arr(uplinks.iter().map(|c| Json::num(*c)))),
+            (
+                "downlink_mbps",
+                Json::arr(downlinks.iter().map(|c| Json::num(*c))),
+            ),
+            ("per_transfer_wakes", Json::Bool(cfg.faithful_interrupts)),
+        ]),
+        0,
+    );
+    let catalog = sc.add_lp("catalog", Json::obj(vec![]), 1);
+
+    // Regional centers: T0 = center 0, T1s = 1..n_centers.
+    // Two passes because the T0 driver must reference the T1 driver ids;
+    // LP ids are deterministic (insertion order), so precompute them.
+    let first_center_lp = 3u64; // wan=1, catalog=2
+    let lp_of = |center: usize, slot: u64| LpId(first_center_lp + 4 * center as u64 + slot);
+
+    let mut centers = Vec::with_capacity(n_centers);
+    for c in 0..n_centers {
+        let group = 2 + c;
+        let farm = sc.add_lp(
+            "farm",
+            Json::obj(vec![
+                ("center", Json::num(c as f64)),
+                ("units", Json::num(cfg.cpus_per_center as f64)),
+                ("power", Json::num(1.0)),
+            ]),
+            group,
+        );
+        // Disk sized to hold roughly half the replica volume so the
+        // paper's automatic tape migration actually triggers.
+        let disk_mb = (cfg.transfer_mb * cfg.transfers_per_center as f64 * 0.5).max(1000.0);
+        let db = sc.add_lp(
+            "db",
+            Json::obj(vec![
+                ("center", Json::num(c as f64)),
+                ("capacity_mb", Json::num(disk_mb)),
+                ("mass_storage", Json::num(lp_of(c, 2).raw() as f64)),
+            ]),
+            group,
+        );
+        let tape = sc.add_lp(
+            "mass-storage",
+            Json::obj(vec![("center", Json::num(c as f64))]),
+            group,
+        );
+        let driver = if c == 0 {
+            let t1_centers: Vec<usize> = (1..n_centers).collect();
+            let t1_drivers: Vec<u64> = t1_centers.iter().map(|i| lp_of(*i, 3).raw()).collect();
+            sc.add_lp(
+                "t0-driver",
+                Json::obj(vec![
+                    ("center", Json::num(0.0)),
+                    ("wan", Json::num(wan.raw() as f64)),
+                    ("db", Json::num(db.raw() as f64)),
+                    ("catalog", Json::num(catalog.raw() as f64)),
+                    ("farm", Json::num(farm.raw() as f64)),
+                    (
+                        "t1_centers",
+                        Json::arr(t1_centers.iter().map(|i| Json::num(*i as f64))),
+                    ),
+                    (
+                        "t1_drivers",
+                        Json::arr(t1_drivers.iter().map(|i| Json::num(*i as f64))),
+                    ),
+                    (
+                        "transfers_per_center",
+                        Json::num(cfg.transfers_per_center as f64),
+                    ),
+                    ("transfer_mb", Json::num(cfg.transfer_mb)),
+                    ("jobs", Json::num(cfg.jobs_per_center as f64)),
+                    ("job_cpu_s", Json::num(10.0)),
+                    ("seed", Json::num(cfg.seed as f64)),
+                ]),
+                group,
+            )
+        } else {
+            sc.add_lp(
+                "t1-driver",
+                Json::obj(vec![
+                    ("center", Json::num(c as f64)),
+                    ("wan", Json::num(wan.raw() as f64)),
+                    ("db", Json::num(db.raw() as f64)),
+                    ("catalog", Json::num(catalog.raw() as f64)),
+                    ("farm", Json::num(farm.raw() as f64)),
+                    ("jobs", Json::num(cfg.jobs_per_center as f64)),
+                    ("job_cpu_s", Json::num(10.0)),
+                    (
+                        "expected_datasets",
+                        Json::num(cfg.transfers_per_center as f64),
+                    ),
+                    ("arrival_mean_s", Json::num(2.0)),
+                    ("seed", Json::num(cfg.seed as f64)),
+                ]),
+                group,
+            )
+        };
+        debug_assert_eq!(farm, lp_of(c, 0));
+        debug_assert_eq!(db, lp_of(c, 1));
+        debug_assert_eq!(tape, lp_of(c, 2));
+        debug_assert_eq!(driver, lp_of(c, 3));
+        centers.push(RegionalCenter {
+            center: c,
+            farm,
+            db,
+            mass_storage: tape,
+            driver,
+        });
+        sc.bootstrap(0.0, driver, Payload::Start);
+    }
+
+    GeneratedScenario {
+        scenario: sc,
+        wan,
+        catalog,
+        centers,
+    }
+}
+
+/// Pure compute-farm scenario: `centers` independent centers running local
+/// job streams, no WAN transfers.  Used by the placement/scaling benches
+/// where the variable of interest is LP distribution, not bandwidth.
+pub fn farm(cfg: &WorkloadConfig) -> GeneratedScenario {
+    let mut local = cfg.clone();
+    local.transfers_per_center = 0;
+    // Still build WAN + catalog so the component graph is the same shape.
+    t0t1(&local)
+}
+
+/// A small two-regional-center demo used by the quickstart example and the
+/// smoke tests.
+pub fn two_center_demo() -> GeneratedScenario {
+    let cfg = WorkloadConfig {
+        name: "two-center".into(),
+        centers: 1,
+        cpus_per_center: 2,
+        jobs_per_center: 8,
+        wan_bandwidth_mbps: 100.0,
+        wan_latency_s: 0.05,
+        transfer_mb: 100.0,
+        transfers_per_center: 4,
+        seed: 7,
+        faithful_interrupts: false,
+    };
+    t0t1(&cfg)
+}
+
+/// Dispatch by `cfg.name`.
+pub fn generate(cfg: &WorkloadConfig) -> GeneratedScenario {
+    match cfg.name.as_str() {
+        "farm" => farm(cfg),
+        "two-center" => two_center_demo(),
+        _ => t0t1(cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t0t1_layout_is_consistent() {
+        let cfg = WorkloadConfig::default();
+        let g = t0t1(&cfg);
+        g.scenario.validate().unwrap();
+        assert_eq!(g.centers.len(), cfg.centers + 1);
+        // Groups: wan, catalog, one per center.
+        assert_eq!(g.scenario.group_count(), cfg.centers + 3);
+        // Driver params must reference the real catalog/wan ids.
+        let t0 = &g.scenario.lps[g.centers[0].driver.raw() as usize - 1];
+        assert_eq!(t0.kind, "t0-driver");
+        assert_eq!(
+            t0.params.get("catalog").and_then(|v| v.as_u64()),
+            Some(g.catalog.raw())
+        );
+        assert_eq!(
+            t0.params.get("wan").and_then(|v| v.as_u64()),
+            Some(g.wan.raw())
+        );
+        // All LPs of one center share a group.
+        for c in &g.centers {
+            let groups: Vec<usize> = [c.farm, c.db, c.mass_storage, c.driver]
+                .iter()
+                .map(|id| {
+                    g.scenario
+                        .lps
+                        .iter()
+                        .find(|l| l.id == *id)
+                        .unwrap()
+                        .group
+                })
+                .collect();
+            assert!(groups.windows(2).all(|w| w[0] == w[1]), "{groups:?}");
+        }
+    }
+
+    #[test]
+    fn t0_uplink_is_the_bottleneck() {
+        let cfg = WorkloadConfig {
+            wan_bandwidth_mbps: 155.0,
+            ..WorkloadConfig::default()
+        };
+        let g = t0t1(&cfg);
+        let wan_spec = &g.scenario.lps[g.wan.raw() as usize - 1];
+        let up = wan_spec.params.get("uplink_mbps").unwrap().as_arr().unwrap();
+        assert_eq!(up[0].as_f64(), Some(155.0));
+        assert!(up[1].as_f64().unwrap() > 155.0 * 10.0);
+    }
+
+    #[test]
+    fn farm_scenario_has_no_transfers() {
+        let g = farm(&WorkloadConfig::default());
+        let t0 = g
+            .scenario
+            .lps
+            .iter()
+            .find(|l| l.kind == "t0-driver")
+            .unwrap();
+        assert_eq!(
+            t0.params.get("transfers_per_center").and_then(|v| v.as_u64()),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn bootstrap_targets_drivers() {
+        let g = two_center_demo();
+        assert_eq!(g.scenario.bootstrap.len(), g.centers.len());
+        for (_, dst, p) in &g.scenario.bootstrap {
+            assert!(g.centers.iter().any(|c| c.driver == *dst));
+            assert_eq!(*p, Payload::Start);
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! End-to-end integration tests over the public API: full scenarios on the
+//! in-process deployment, cross-configuration determinism, both sync
+//! protocols, all placement policies, the PJRT backend when artifacts are
+//! present, and property-style randomized runs via the testkit.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+use std::time::Duration;
+
+use dsim::config::{BackendKind, PlacementPolicy, ScenarioConfig, WorkloadConfig};
+use dsim::coordinator::{Deployment, RunReport};
+use dsim::engine::SyncProtocol;
+use dsim::testkit;
+use dsim::workload;
+
+fn small_cfg(seed: u64) -> WorkloadConfig {
+    WorkloadConfig {
+        name: "t0t1".into(),
+        centers: 3,
+        cpus_per_center: 4,
+        jobs_per_center: 12,
+        wan_bandwidth_mbps: 311.0,
+        wan_latency_s: 0.05,
+        transfer_mb: 150.0,
+        transfers_per_center: 12,
+        seed,
+        faithful_interrupts: false,
+    }
+}
+
+fn run(agents: usize, proto: SyncProtocol, seed: u64) -> RunReport {
+    Deployment::in_process(agents)
+        .protocol(proto)
+        .max_wall(Duration::from_secs(120))
+        .run(workload::generate(&small_cfg(seed)))
+        .expect("run failed")
+}
+
+fn fingerprint(r: &RunReport) -> (usize, usize, u64) {
+    (
+        r.jobs_completed,
+        r.transfers_completed,
+        (r.makespan_s * 1e6).round() as u64,
+    )
+}
+
+#[test]
+fn full_scenario_completes_with_expected_counts() {
+    let cfg = small_cfg(1);
+    let r = run(2, SyncProtocol::NullMessagesByDemand, 1);
+    // jobs: (centers T1 + 1 T0) * jobs_per_center, transfers: centers * per.
+    assert_eq!(r.jobs_completed, (cfg.centers + 1) * cfg.jobs_per_center);
+    assert_eq!(r.transfers_completed, cfg.centers * cfg.transfers_per_center);
+    // Every T1 published its summary; T0 its own.
+    assert_eq!(r.pool.of_kind("center-summary").len(), cfg.centers);
+    assert_eq!(r.pool.of_kind("t0-summary").len(), 1);
+    // Replicas all arrived.
+    assert_eq!(
+        r.pool.of_kind("replica").len(),
+        cfg.centers * cfg.transfers_per_center
+    );
+    assert!(r.makespan_s > 0.0);
+}
+
+#[test]
+fn results_identical_across_agent_counts() {
+    let base = fingerprint(&run(1, SyncProtocol::NullMessagesByDemand, 2));
+    for agents in [2, 3, 5] {
+        let fp = fingerprint(&run(agents, SyncProtocol::NullMessagesByDemand, 2));
+        assert_eq!(fp, base, "agents={agents} diverged");
+    }
+}
+
+#[test]
+fn results_identical_across_sync_protocols() {
+    let demand = fingerprint(&run(3, SyncProtocol::NullMessagesByDemand, 3));
+    let eager = fingerprint(&run(3, SyncProtocol::EagerNullMessages, 3));
+    assert_eq!(demand, eager);
+}
+
+#[test]
+fn demand_sends_fewer_sync_messages_than_eager() {
+    // Round-robin forces real distribution; perf-value would cluster the
+    // run on one agent, where both protocols correctly send zero messages.
+    let run = |proto| {
+        Deployment::in_process(4)
+            .protocol(proto)
+            .placement(PlacementPolicy::RoundRobin)
+            .max_wall(Duration::from_secs(120))
+            .run(workload::generate(&small_cfg(4)))
+            .expect("run failed")
+    };
+    let demand = run(SyncProtocol::NullMessagesByDemand);
+    let eager = run(SyncProtocol::EagerNullMessages);
+    assert!(
+        demand.sync_messages < eager.sync_messages,
+        "demand {} !< eager {}",
+        demand.sync_messages,
+        eager.sync_messages
+    );
+}
+
+#[test]
+fn results_identical_across_placement_policies() {
+    let mk = |p: PlacementPolicy| {
+        Deployment::in_process(4)
+            .placement(p)
+            .max_wall(Duration::from_secs(120))
+            .run(workload::generate(&small_cfg(5)))
+            .expect("run failed")
+    };
+    let a = fingerprint(&mk(PlacementPolicy::PerfValue));
+    let b = fingerprint(&mk(PlacementPolicy::RoundRobin));
+    let c = fingerprint(&mk(PlacementPolicy::Random));
+    assert_eq!(a, b);
+    assert_eq!(b, c);
+}
+
+#[test]
+fn worker_pool_does_not_change_results() {
+    let inline = fingerprint(&run(2, SyncProtocol::NullMessagesByDemand, 6));
+    let pooled = fingerprint(
+        &Deployment::in_process(2)
+            .workers(4)
+            .max_wall(Duration::from_secs(120))
+            .run(workload::generate(&small_cfg(6)))
+            .expect("run failed"),
+    );
+    assert_eq!(inline, pooled);
+}
+
+#[test]
+fn pjrt_backend_matches_native_end_to_end() {
+    let dir = Path::new("artifacts");
+    if !dir.join("fairshare.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let native = fingerprint(&run(2, SyncProtocol::NullMessagesByDemand, 7));
+    let pjrt = fingerprint(
+        &Deployment::in_process(2)
+            .backend(BackendKind::Pjrt, dir)
+            .max_wall(Duration::from_secs(300))
+            .run(workload::generate(&small_cfg(7)))
+            .expect("pjrt run failed"),
+    );
+    // f32 PJRT vs f64-accumulating native can shift event timestamps by
+    // rounding; makespans must agree to ~1e-3 relative, counts exactly.
+    assert_eq!(native.0, pjrt.0);
+    assert_eq!(native.1, pjrt.1);
+    let (m1, m2) = (native.2 as f64, pjrt.2 as f64);
+    assert!(
+        (m1 - m2).abs() / m1.max(1.0) < 1e-3,
+        "makespan drift: {m1} vs {m2}"
+    );
+}
+
+#[test]
+fn farm_workload_runs_without_transfers() {
+    let mut cfg = small_cfg(8);
+    cfg.name = "farm".into();
+    let r = Deployment::in_process(2)
+        .max_wall(Duration::from_secs(120))
+        .run(workload::generate(&cfg))
+        .expect("run failed");
+    assert_eq!(r.transfers_completed, 0);
+    assert_eq!(r.jobs_completed, (cfg.centers + 1) * cfg.jobs_per_center);
+}
+
+#[test]
+fn perf_value_placement_clusters_vs_random() {
+    let spread = |p: PlacementPolicy| {
+        Deployment::in_process(12)
+            .placement(p)
+            .seed(9)
+            .max_wall(Duration::from_secs(120))
+            .run(workload::generate(&small_cfg(9)))
+            .expect("run failed")
+            .placements
+            .iter()
+            .map(|(_, a)| *a)
+            .collect::<BTreeSet<_>>()
+            .len()
+    };
+    // Round-robin by construction spreads to min(groups, agents) agents;
+    // perf-value should use no more than that.
+    assert!(spread(PlacementPolicy::PerfValue) <= spread(PlacementPolicy::RoundRobin));
+}
+
+#[test]
+fn config_to_deployment_end_to_end() {
+    let text = r#"{
+        "deploy": {"agents": 2, "protocol": "demand", "placement": "perf", "backend": "native"},
+        "workload": {"name": "t0t1", "centers": 2, "jobs_per_center": 6,
+                     "transfers_per_center": 6, "wan_bandwidth_mbps": 311.0, "seed": 12}
+    }"#;
+    let cfg = ScenarioConfig::from_json_text(text).unwrap();
+    let r = Deployment::from_config(&cfg)
+        .max_wall(Duration::from_secs(120))
+        .run(workload::generate(&cfg.workload))
+        .expect("run failed");
+    assert_eq!(r.jobs_completed, 3 * 6);
+}
+
+#[test]
+fn result_pool_survives_save_load() {
+    let r = run(1, SyncProtocol::NullMessagesByDemand, 13);
+    let dir = std::env::temp_dir().join("dsim-itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pool.jsonl");
+    r.pool.save(&path).unwrap();
+    let loaded = dsim::metrics::ResultPool::load(&path).unwrap();
+    assert_eq!(loaded.len(), r.pool.len());
+    assert_eq!(
+        loaded.kind_counts().get("transfer"),
+        r.pool.kind_counts().get("transfer")
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Property-style randomized tests (in-repo testkit; no proptest offline)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_random_workloads_terminate_and_agree() {
+    testkit::check("random workload determinism", 6, |rng| {
+        let cfg = WorkloadConfig {
+            name: "t0t1".into(),
+            centers: rng.range(1, 4) as usize,
+            cpus_per_center: rng.range(1, 6) as usize,
+            jobs_per_center: rng.range(1, 16) as usize,
+            wan_bandwidth_mbps: rng.uniform(100.0, 2000.0),
+            wan_latency_s: rng.uniform(0.01, 0.2),
+            transfer_mb: rng.uniform(50.0, 600.0),
+            transfers_per_center: rng.range(1, 16) as usize,
+            seed: rng.next_u64(),
+            // Randomly exercise both interrupt granularities.
+            faithful_interrupts: rng.chance(0.5),
+        };
+        let agents = rng.range(1, 4) as usize;
+        let r1 = Deployment::in_process(1)
+            .max_wall(Duration::from_secs(120))
+            .run(workload::generate(&cfg))
+            .map_err(|e| format!("serial run failed: {e:#}"))?;
+        let r2 = Deployment::in_process(agents)
+            .max_wall(Duration::from_secs(120))
+            .run(workload::generate(&cfg))
+            .map_err(|e| format!("distributed run failed: {e:#}"))?;
+        if fingerprint(&r1) != fingerprint(&r2) {
+            return Err(format!(
+                "{:?} != {:?} for cfg {cfg:?} agents {agents}",
+                fingerprint(&r1),
+                fingerprint(&r2)
+            ));
+        }
+        let expect_jobs = (cfg.centers + 1) * cfg.jobs_per_center;
+        if r1.jobs_completed != expect_jobs {
+            return Err(format!(
+                "jobs {} != expected {expect_jobs}",
+                r1.jobs_completed
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_capacity_never_exceeded_in_reports() {
+    testkit::check("transfer rates bounded by T0 link", 4, |rng| {
+        let mbps = rng.uniform(100.0, 1000.0);
+        let cfg = WorkloadConfig {
+            wan_bandwidth_mbps: mbps,
+            centers: 2,
+            jobs_per_center: 4,
+            transfers_per_center: 10,
+            seed: rng.next_u64(),
+            ..small_cfg(0)
+        };
+        let r = Deployment::in_process(2)
+            .max_wall(Duration::from_secs(120))
+            .run(workload::generate(&cfg))
+            .map_err(|e| format!("{e:#}"))?;
+        for rate in r.pool.values("transfer", "rate_mbps") {
+            // A single transfer can never beat the T0 uplink capacity.
+            if rate > mbps * 1.01 {
+                return Err(format!("rate {rate} > link {mbps}"));
+            }
+        }
+        Ok(())
+    });
+}
