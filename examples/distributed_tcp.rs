@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
             lookahead: 0.05,
             protocol: Default::default(),
             workers: 0,
+            exec: Default::default(),
         };
         let backend = Arc::new(ComputeBackend::auto(Path::new("artifacts")));
         handles.push(std::thread::spawn(move || {
@@ -139,6 +140,7 @@ fn main() -> anyhow::Result<()> {
                     received,
                     lvt,
                     next_event,
+                    windows,
                     ..
                 })) => {
                     let done = detector.ingest(
@@ -150,6 +152,7 @@ fn main() -> anyhow::Result<()> {
                             received,
                             lvt_s: lvt.secs(),
                             next_event_s: next_event.secs(),
+                            windows,
                         },
                     );
                     if let Some(gvt) = detector.take_gvt() {

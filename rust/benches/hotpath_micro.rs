@@ -1,6 +1,7 @@
 //! Hot-path microbenchmarks feeding EXPERIMENTS.md §Perf.
 //!
-//! * engine step throughput (events/s) on a pure local ping chain,
+//! * engine step throughput (events/s) on a pure local ping chain, both
+//!   per-timestamp (`engine_step`) and safe-window (`engine_window`),
 //! * PJRT vs native backend latency for the two AOT graphs (placement
 //!   scoring and fair-share) — the L1/L2-vs-L3 boundary cost,
 //! * replicated-space write/read ops,
@@ -13,7 +14,9 @@ use std::time::Instant;
 
 use dsim::bench::report_row;
 use dsim::config::BackendKind;
-use dsim::engine::{Engine, Event, LogicalProcess, LpApi, SimTime, StepOutcome, SyncProtocol};
+use dsim::engine::{
+    Engine, Event, LogicalProcess, LpApi, SimTime, StepOutcome, SyncProtocol, WindowOutcome,
+};
 use dsim::runtime::ComputeBackend;
 use dsim::space::Space;
 use dsim::transport::Wire;
@@ -60,6 +63,44 @@ fn bench_engine_steps() {
         &[
             ("path", "engine_step".into()),
             ("events", n.to_string()),
+            ("wall_s", format!("{dt:.4}")),
+            ("events_per_s", format!("{:.0}", n as f64 / dt)),
+        ],
+    );
+}
+
+fn bench_engine_window() {
+    // Same ping chain as bench_engine_steps, drained through safe-window
+    // execution: the single-agent horizon is +inf, so the whole run is one
+    // window — no per-timestamp safety re-derivation, no per-step sync
+    // bookkeeping.  Compare events_per_s against the engine_step row.
+    const HOPS: u64 = 200_000;
+    let mut e: Engine<Hop> = Engine::new(
+        AgentId(1),
+        ContextId(1),
+        &[AgentId(1)],
+        0.01,
+        SyncProtocol::NullMessagesByDemand,
+    );
+    e.add_lp(LpId(1), Box::new(Hopper { next: LpId(2) }));
+    e.add_lp(LpId(2), Box::new(Hopper { next: LpId(1) }));
+    e.schedule_initial(SimTime::ZERO, LpId(1), Hop(HOPS));
+    let t = Instant::now();
+    let mut n = 0u64;
+    loop {
+        match e.advance_window(usize::MAX) {
+            WindowOutcome::Processed { events, .. } => n += events as u64,
+            WindowOutcome::Idle => break,
+            WindowOutcome::Blocked(_) => unreachable!(),
+        }
+    }
+    let dt = t.elapsed().as_secs_f64();
+    report_row(
+        "hotpath",
+        &[
+            ("path", "engine_window".into()),
+            ("events", n.to_string()),
+            ("windows", e.stats().windows.to_string()),
             ("wall_s", format!("{dt:.4}")),
             ("events_per_s", format!("{:.0}", n as f64 / dt)),
         ],
@@ -162,6 +203,7 @@ fn bench_wire() {
 fn main() {
     println!("# hot-path microbenchmarks");
     bench_engine_steps();
+    bench_engine_window();
     bench_backend("native", &ComputeBackend::Native);
     match ComputeBackend::load(BackendKind::Pjrt, Path::new("artifacts")) {
         Ok(b) => bench_backend("pjrt", &b),

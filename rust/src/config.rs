@@ -11,7 +11,7 @@ use std::str::FromStr;
 
 use anyhow::{bail, Context, Result};
 
-use crate::engine::SyncProtocol;
+use crate::engine::{ExecMode, SyncProtocol};
 use crate::util::json::Json;
 
 /// How the placement scheduler and network model evaluate their numeric
@@ -70,6 +70,9 @@ pub struct DeployConfig {
     pub workers: usize,
     /// Conservative sync variant.
     pub protocol: SyncProtocol,
+    /// Scheduler granularity: safe-window batches ("window", default) or
+    /// the per-timestamp baseline ("step").
+    pub exec: ExecMode,
     /// Placement policy.
     pub placement: PlacementPolicy,
     /// Compute backend for scheduler/network math.
@@ -87,6 +90,7 @@ impl Default for DeployConfig {
             agents: 2,
             workers: 0,
             protocol: SyncProtocol::NullMessagesByDemand,
+            exec: ExecMode::SafeWindow,
             placement: PlacementPolicy::PerfValue,
             backend: BackendKind::Native,
             lookahead: None,
@@ -187,6 +191,9 @@ impl ScenarioConfig {
             protocol: get_str(&d, "protocol", "demand")?
                 .parse()
                 .map_err(anyhow::Error::msg)?,
+            exec: get_str(&d, "exec", "window")?
+                .parse()
+                .map_err(anyhow::Error::msg)?,
             placement: get_str(&d, "placement", "perf")?
                 .parse()
                 .map_err(anyhow::Error::msg)?,
@@ -271,6 +278,7 @@ impl ScenarioConfig {
                     ("agents", Json::num(self.deploy.agents as f64)),
                     ("workers", Json::num(self.deploy.workers as f64)),
                     ("protocol", Json::str(self.deploy.protocol.to_string())),
+                    ("exec", Json::str(self.deploy.exec.to_string())),
                     (
                         "placement",
                         Json::str(match self.deploy.placement {
@@ -342,7 +350,7 @@ mod tests {
     #[test]
     fn parse_full_config() {
         let text = r#"{
-            "deploy": {"agents": 8, "workers": 2, "protocol": "eager",
+            "deploy": {"agents": 8, "workers": 2, "protocol": "eager", "exec": "step",
                        "placement": "rr", "backend": "native", "lookahead": 0.01},
             "workload": {"name": "t0t1", "centers": 6, "wan_bandwidth_mbps": 1000.0,
                          "seed": 42}
@@ -350,6 +358,7 @@ mod tests {
         let cfg = ScenarioConfig::from_json_text(text).unwrap();
         assert_eq!(cfg.deploy.agents, 8);
         assert_eq!(cfg.deploy.protocol, SyncProtocol::EagerNullMessages);
+        assert_eq!(cfg.deploy.exec, ExecMode::PerTimestamp);
         assert_eq!(cfg.deploy.placement, PlacementPolicy::RoundRobin);
         assert_eq!(cfg.workload.centers, 6);
         assert_eq!(cfg.workload.seed, 42);
@@ -366,6 +375,7 @@ mod tests {
         assert_eq!(back.deploy.agents, cfg.deploy.agents);
         assert_eq!(back.workload.wan_bandwidth_mbps, cfg.workload.wan_bandwidth_mbps);
         assert_eq!(back.deploy.lookahead, cfg.deploy.lookahead);
+        assert_eq!(back.deploy.exec, cfg.deploy.exec);
     }
 
     #[test]

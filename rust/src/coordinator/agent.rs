@@ -4,15 +4,19 @@
 //! isolated per context).
 //!
 //! The loop: drain transport messages into the right context's engine (the
-//! **context factory** role), step every started engine, forward outboxes,
-//! answer termination probes, publish monitoring samples.
+//! **context factory** role), advance every started engine through its
+//! safe window (one `advance_window` per turn; per-timestamp stepping is
+//! kept as the equivalence baseline), forward outboxes, answer termination
+//! probes, publish monitoring samples.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::components::{build_component, BuildCtx};
-use crate::engine::{Engine, EngineStats, StepOutcome, WorkerPool};
+use crate::engine::{
+    Engine, EngineStats, ExecMode, SimTime, StepOutcome, WindowOutcome, WorkerPool,
+};
 use crate::model::Payload;
 use crate::monitor::{HostSample, HostSampler, PerfWeights};
 use crate::runtime::ComputeBackend;
@@ -42,7 +46,15 @@ pub struct AgentConfig {
     pub protocol: crate::engine::SyncProtocol,
     /// Worker threads for intra-step parallelism (0 = inline).
     pub workers: usize,
+    /// Scheduler granularity: safe-window batches (default) or the
+    /// per-timestamp baseline.
+    pub exec: ExecMode,
 }
+
+/// Upper bound on timestamps one `advance_window` call may execute before
+/// control returns to the transport drain.  Windows resume where they left
+/// off, so this only caps transport latency, never correctness.
+const WINDOW_TIMESTAMP_BUDGET: usize = 16_384;
 
 /// Runs an agent until `Shutdown`.  Generic over the transport so the same
 /// runtime serves in-process and TCP deployments.
@@ -223,22 +235,25 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 self.publish_perf();
             }
             ControlMsg::Probe { context, round } => {
-                let (idle, sent, received, lvt, next_event) = match self.contexts.get(&context) {
-                    Some(slot) => (
-                        slot.started && slot.engine.is_idle(),
-                        slot.sent,
-                        slot.received,
-                        slot.engine.lvt(),
-                        slot.engine.next_event_time(),
-                    ),
-                    None => (
-                        true,
-                        0,
-                        0,
-                        crate::engine::SimTime::ZERO,
-                        crate::engine::SimTime::INF,
-                    ),
-                };
+                let (idle, sent, received, lvt, next_event, windows) =
+                    match self.contexts.get(&context) {
+                        Some(slot) => (
+                            slot.started && slot.engine.is_idle(),
+                            slot.sent,
+                            slot.received,
+                            slot.engine.lvt(),
+                            slot.engine.next_event_time(),
+                            slot.engine.stats().windows,
+                        ),
+                        None => (
+                            true,
+                            0,
+                            0,
+                            crate::engine::SimTime::ZERO,
+                            crate::engine::SimTime::INF,
+                            0,
+                        ),
+                    };
                 let _ = self.transport.send(
                     LEADER,
                     NetMsg::Control(ControlMsg::ProbeReply {
@@ -250,6 +265,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                         received,
                         lvt,
                         next_event,
+                        windows,
                     }),
                 );
             }
@@ -334,8 +350,9 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
         })
     }
 
-    /// Step one context until it blocks/idles; returns true if any event
-    /// was processed.
+    /// Advance one context through its safe horizon (window mode) or until
+    /// it blocks/idles (per-timestamp mode); returns true if any event was
+    /// processed.
     fn step_context(&mut self, ctx: ContextId) -> bool {
         let started = match self.contexts.get(&ctx) {
             Some(s) => s.started,
@@ -344,30 +361,65 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
         if !started {
             return false;
         }
-        let mut progressed = false;
-        // Budget: a full drain could starve the transport; 256 steps is
-        // plenty per outer loop (each step can process many events).
-        for _ in 0..256 {
-            let outcome = {
-                let slot = self.contexts.get_mut(&ctx).unwrap();
-                slot.engine.step()
-            };
-            self.flush_outbox(ctx);
-            match outcome {
-                StepOutcome::Processed(_) => progressed = true,
-                StepOutcome::Blocked(_) | StepOutcome::Idle => break,
+        match self.cfg.exec {
+            ExecMode::SafeWindow => {
+                // One window per outer-loop turn: a window already drains
+                // every provably-safe event, and nothing new becomes safe
+                // until the transport delivers fresh promises (ingested by
+                // the caller before the next turn).  Outbox traffic —
+                // remote events and the window's single sync flush — goes
+                // out once per window, not once per timestamp.
+                let outcome = {
+                    let slot = self.contexts.get_mut(&ctx).unwrap();
+                    slot.engine.advance_window(WINDOW_TIMESTAMP_BUDGET)
+                };
+                self.flush_outbox(ctx);
+                matches!(outcome, WindowOutcome::Processed { .. })
+            }
+            ExecMode::PerTimestamp => {
+                let mut progressed = false;
+                // Budget: a full drain could starve the transport; 256
+                // steps is plenty per outer loop (each step can process
+                // many events).
+                for _ in 0..256 {
+                    let outcome = {
+                        let slot = self.contexts.get_mut(&ctx).unwrap();
+                        slot.engine.step()
+                    };
+                    self.flush_outbox(ctx);
+                    match outcome {
+                        StepOutcome::Processed(_) => progressed = true,
+                        StepOutcome::Blocked(_) | StepOutcome::Idle => break,
+                    }
+                }
+                progressed
             }
         }
-        progressed
     }
 
     /// Forward engine outbox + space replication to the fabric.
     fn flush_outbox(&mut self, ctx: ContextId) {
         let Some(slot) = self.contexts.get_mut(&ctx) else { return };
         let out = slot.engine.drain_outbox();
-        for (to, event) in out.events {
+        // The piggybacked promise on each event frame must not exceed the
+        // timestamp of any event still unsent to the same peer later in
+        // this flush: under window mode the outbox spans many timestamps,
+        // and a bound computed from post-window engine state would
+        // otherwise precede a lower-timestamped in-flight event on the
+        // same FIFO channel — a promise violation the receiver could act
+        // on.  Cap each frame's bound by the per-peer suffix-minimum of
+        // later event times (the last frame to a peer carries the full
+        // engine bound, so no knowledge is lost by the end of the flush).
+        let mut later_min: BTreeMap<AgentId, SimTime> = BTreeMap::new();
+        let mut caps = vec![SimTime::INF; out.events.len()];
+        for (i, (to, ev)) in out.events.iter().enumerate().rev() {
+            let later = later_min.get(to).copied().unwrap_or(SimTime::INF);
+            caps[i] = later;
+            later_min.insert(*to, later.min(ev.time));
+        }
+        for ((to, event), cap) in out.events.into_iter().zip(caps) {
             slot.sent += 1;
-            let bound = slot.engine.bound_for(to);
+            let bound = slot.engine.bound_for(to).min(cap);
             if let Err(e) = self.transport.send(
                 to,
                 NetMsg::Event {
@@ -442,6 +494,10 @@ pub fn engine_stats_json(s: &EngineStats, lvt_s: f64) -> Json {
         ("max_queue_len", Json::num(s.max_queue_len as f64)),
         ("steps", Json::num(s.steps as f64)),
         ("lps_finished", Json::num(s.lps_finished as f64)),
+        ("windows", Json::num(s.windows as f64)),
+        ("window_timestamps", Json::num(s.window_timestamps as f64)),
+        ("max_window_events", Json::num(s.max_window_events as f64)),
+        ("events_rejected", Json::num(s.events_rejected as f64)),
         ("lvt", Json::num(lvt_s)),
     ])
 }
@@ -455,6 +511,13 @@ pub fn stats_from_json(j: &Json) -> Option<HostStatsView> {
         lvt_requests_sent: j.get("lvt_requests_sent")?.as_u64()?,
         blocked_steps: j.get("blocked_steps")?.as_u64()?,
         max_queue_len: j.get("max_queue_len")?.as_u64()? as usize,
+        // Window counters were introduced after the wire format froze;
+        // default to 0 so old frames still decode.
+        windows: j.get("windows").and_then(Json::as_u64).unwrap_or(0),
+        window_timestamps: j
+            .get("window_timestamps")
+            .and_then(Json::as_u64)
+            .unwrap_or(0),
         lvt_s: j.get("lvt")?.as_f64()?,
     })
 }
@@ -468,6 +531,8 @@ pub struct HostStatsView {
     pub lvt_requests_sent: u64,
     pub blocked_steps: u64,
     pub max_queue_len: usize,
+    pub windows: u64,
+    pub window_timestamps: u64,
     pub lvt_s: f64,
 }
 

@@ -28,7 +28,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::config::{BackendKind, PlacementPolicy, ScenarioConfig};
-use crate::engine::SyncProtocol;
+use crate::engine::{ExecMode, SyncProtocol};
 use crate::lookup::LookupService;
 use crate::metrics::ResultPool;
 use crate::model::Payload;
@@ -54,6 +54,8 @@ pub struct RunReport {
     pub max_queue_len: usize,
     pub jobs_completed: usize,
     pub transfers_completed: usize,
+    /// Safe windows executed fleet-wide (0 under per-timestamp mode).
+    pub windows: u64,
     /// All records published by LPs during the run.
     pub pool: ResultPool,
     /// Final per-agent statistics.
@@ -77,6 +79,29 @@ impl RunReport {
             self.transfers_completed
         )
     }
+
+    /// Deterministic digest of the run's *virtual-time* results.  Identical
+    /// across execution modes (safe-window vs per-timestamp), worker
+    /// counts, sync protocols, and placement policies by the determinism
+    /// contract; deliberately excludes wall-clock and synchronization
+    /// counters, which legitimately vary with real-time scheduling.
+    pub fn determinism_fingerprint(&self) -> String {
+        let kinds: Vec<String> = self
+            .pool
+            .kind_counts()
+            .into_iter()
+            .map(|(k, n)| format!("{k}:{n}"))
+            .collect();
+        format!(
+            "events={} remote={} jobs={} transfers={} makespan={:.9} kinds=[{}]",
+            self.events_processed,
+            self.remote_events,
+            self.jobs_completed,
+            self.transfers_completed,
+            self.makespan_s,
+            kinds.join(",")
+        )
+    }
 }
 
 /// Builder for an in-process deployment of N agents + a leader.
@@ -84,6 +109,7 @@ pub struct Deployment {
     agents: usize,
     workers: usize,
     protocol: SyncProtocol,
+    exec: ExecMode,
     placement: PlacementPolicy,
     backend_kind: BackendKind,
     artifacts_dir: PathBuf,
@@ -101,6 +127,7 @@ impl Deployment {
             agents: agents.max(1),
             workers: 0,
             protocol: SyncProtocol::NullMessagesByDemand,
+            exec: ExecMode::SafeWindow,
             placement: PlacementPolicy::PerfValue,
             backend_kind: BackendKind::Native,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -116,6 +143,7 @@ impl Deployment {
             agents: cfg.deploy.agents,
             workers: cfg.deploy.workers,
             protocol: cfg.deploy.protocol,
+            exec: cfg.deploy.exec,
             placement: cfg.deploy.placement,
             backend_kind: cfg.deploy.backend,
             artifacts_dir: PathBuf::from(&cfg.deploy.artifacts_dir),
@@ -132,6 +160,13 @@ impl Deployment {
 
     pub fn protocol(mut self, p: SyncProtocol) -> Self {
         self.protocol = p;
+        self
+    }
+
+    /// Scheduler granularity: safe-window batches (default) or the
+    /// per-timestamp baseline.
+    pub fn exec_mode(mut self, m: ExecMode) -> Self {
+        self.exec = m;
         self
     }
 
@@ -203,6 +238,7 @@ impl Deployment {
                 lookahead,
                 protocol: self.protocol,
                 workers: self.workers,
+                exec: self.exec,
             };
             let backend = Arc::clone(&backend);
             handles.push(
@@ -406,7 +442,14 @@ impl Deployment {
                     std::thread::yield_now();
                 }
                 if msg.is_none() {
-                    msg = leader_ep.recv_timeout(Duration::from_micros(200));
+                    // Bounded park: sleep until the next probe cadence is
+                    // due rather than a fixed short nap, so an idle fleet
+                    // costs the leader one wakeup per probe round instead
+                    // of a 5 kHz busy-poll.  Any arriving message (probe
+                    // replies included) ends the park immediately.
+                    let until_cadence = self.probe_every.saturating_sub(last_probe.elapsed());
+                    let park = until_cadence.clamp(Duration::from_micros(50), self.probe_every);
+                    msg = leader_ep.recv_timeout(park);
                 }
                 if let Some(m) = msg {
                     Self::leader_ingest(&hub, &mut runs, m);
@@ -456,6 +499,7 @@ impl Deployment {
             let mut sync = 0;
             let mut blocked = 0;
             let mut maxq = 0;
+            let mut windows = 0;
             let mut per_agent = Vec::new();
             for (a, s) in &st.final_stats {
                 events += s.events_processed;
@@ -463,6 +507,7 @@ impl Deployment {
                 sync += s.null_messages_sent + s.lvt_requests_sent;
                 blocked += s.blocked_steps;
                 maxq = maxq.max(s.max_queue_len);
+                windows += s.windows;
                 per_agent.push((*a, *s));
             }
             let jobs = st.pool.of_kind("job").len();
@@ -478,6 +523,7 @@ impl Deployment {
                 max_queue_len: maxq,
                 jobs_completed: jobs,
                 transfers_completed: transfers,
+                windows,
                 pool: st.pool,
                 per_agent,
                 placements: placements_all[i]
@@ -510,6 +556,7 @@ impl Deployment {
                 received,
                 lvt,
                 next_event,
+                windows,
             }) => {
                 if let Some(st) = runs.get_mut(&context) {
                     if st.wall_s.is_none() {
@@ -522,6 +569,7 @@ impl Deployment {
                                 received,
                                 lvt_s: lvt.secs(),
                                 next_event_s: next_event.secs(),
+                                windows,
                             },
                         );
                         if done {

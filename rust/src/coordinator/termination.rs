@@ -5,6 +5,13 @@
 //! two *consecutive* probe rounds, every agent reported idle and the global
 //! sent == received totals were equal and unchanged — ruling out messages
 //! in flight between the two snapshots.
+//!
+//! Progress is observed at **window granularity**: each probe answer also
+//! carries the agent's executed-window count, and a round only counts as
+//! stable when the global window total is unchanged too.  Local-only
+//! progress (windows executed without any remote traffic) therefore
+//! invalidates stability just like in-flight messages do, which keeps the
+//! proven-GVT bound honest under safe-window batch execution.
 
 use std::collections::BTreeMap;
 
@@ -19,6 +26,8 @@ pub struct ProbeAnswer {
     pub lvt_s: f64,
     /// Earliest pending event time (infinity if the agent is idle).
     pub next_event_s: f64,
+    /// Safe windows the agent has executed so far (monotone counter).
+    pub windows: u64,
 }
 
 /// Accumulates probe rounds until termination is certain.
@@ -26,7 +35,8 @@ pub struct TerminationDetector {
     expected: usize,
     round: u64,
     answers: BTreeMap<AgentId, ProbeAnswer>,
-    previous: Option<(u64, u64)>, // totals of the last complete stable round
+    /// (sent, received, windows) totals of the last complete stable round.
+    previous: Option<(u64, u64, u64)>,
     /// GVT proven by the last quiescent (stable, fully-delivered) round.
     /// Drained by the leader with [`take_gvt`](Self::take_gvt); only ever
     /// increases.
@@ -79,8 +89,9 @@ impl TerminationDetector {
         let all_idle = self.answers.values().all(|a| a.idle);
         let sent: u64 = self.answers.values().map(|a| a.sent).sum();
         let received: u64 = self.answers.values().map(|a| a.received).sum();
+        let windows: u64 = self.answers.values().map(|a| a.windows).sum();
         if sent == received {
-            if self.previous == Some((sent, received)) {
+            if self.previous == Some((sent, received, windows)) {
                 // Two identical fully-delivered snapshots: the network was
                 // quiescent in between, so the per-agent next-event minima
                 // form a *proven* GVT lower bound.
@@ -96,7 +107,7 @@ impl TerminationDetector {
                     self.gvt = Some(gvt);
                 }
             }
-            self.previous = Some((sent, received));
+            self.previous = Some((sent, received, windows));
         } else {
             self.previous = None;
         }
@@ -130,6 +141,7 @@ mod tests {
             received,
             lvt_s: 1.0,
             next_event_s: if idle { f64::INFINITY } else { 5.0 },
+            windows: 0,
         }
     }
 
@@ -191,6 +203,22 @@ mod tests {
         assert!(!d.ingest(r, AgentId(1), ans(false, 4, 4)));
         assert!(!d.ingest(r, AgentId(2), ans(true, 2, 2)));
         assert_eq!(d.take_gvt(), None);
+    }
+
+    #[test]
+    fn window_progress_blocks_stability() {
+        // Local-only progress (windows executed, no remote traffic) must
+        // invalidate the stability snapshot just like in-flight messages.
+        let with_windows = |idle, w| ProbeAnswer { windows: w, ..ans(idle, 3, 3) };
+        let mut d = TerminationDetector::new(1);
+        let r = d.start_round();
+        assert!(!d.ingest(r, AgentId(1), with_windows(true, 5)));
+        // Same counts but two more windows executed in between: not stable.
+        let r = d.start_round();
+        assert!(!d.ingest(r, AgentId(1), with_windows(true, 7)));
+        // Window total unchanged now: stable twice -> terminated.
+        let r = d.start_round();
+        assert!(d.ingest(r, AgentId(1), with_windows(true, 7)));
     }
 
     #[test]

@@ -11,6 +11,27 @@
 //! component model (see [`crate::model::Payload`]) and unit tests with
 //! trivial payloads share the same machinery.
 //!
+//! ## Safe-window batch execution
+//!
+//! The scheduler's primary entry point is [`Engine::advance_window`]: it
+//! computes the **conservative horizon** `W = min(peer promises)` once
+//! (each promise already embeds the sender's lookahead), then drains and
+//! executes *every* event with `time <= W` in one call — including events
+//! spawned mid-window that land back inside the window, which is sound
+//! because a handler at `t` only schedules at `>= t` and no peer can
+//! deliver below its own promise.  Synchronization traffic (eager-CMB
+//! announcements, parked-demand answers) is emitted **once per window**
+//! instead of once per timestamp, which is where the throughput win over
+//! classic per-timestamp conservative stepping comes from (cf. SimGrid's
+//! amortized synchronization intervals).
+//!
+//! Per-timestamp semantics are preserved exactly: within a window the
+//! engine still executes one complete timestamp batch at a time, in
+//! deterministic `(time, tie)` order, so a window-executed run produces
+//! results identical to the per-timestamp baseline ([`Engine::step`], kept
+//! as the equivalence shim and for the demand-blocked path) for any worker
+//! count.  The `window_equivalence` integration suite pins this down.
+//!
 //! ## Lookahead contract
 //!
 //! Conservative progress requires strictly positive lookahead: any event an
@@ -27,8 +48,8 @@ mod sync;
 mod workers;
 
 pub use queues::{EventQueues, LvtTable};
-pub use sync::SyncProtocol;
-pub use workers::{LpState, WorkerPool};
+pub use sync::{plan_window, ExecMode, SyncProtocol, WindowPlan};
+pub use workers::{BatchChannel, BatchSender, LpState, WorkerPool};
 
 use std::collections::{BTreeMap, HashMap};
 use std::fmt;
@@ -208,6 +229,16 @@ pub struct EngineStats {
     pub max_queue_len: usize,
     pub steps: u64,
     pub lps_finished: u64,
+    /// Safe windows executed (each drains >= 1 timestamp).
+    pub windows: u64,
+    /// Total timestamps executed across all windows — `windows <<
+    /// window_timestamps` is the batching win over per-timestamp stepping.
+    pub window_timestamps: u64,
+    /// Largest single window, in events.
+    pub max_window_events: usize,
+    /// Remote events dropped because their source is outside the context's
+    /// participant set (see `EventQueues::push_remote`).
+    pub events_rejected: u64,
 }
 
 impl EngineStats {
@@ -223,6 +254,18 @@ pub enum StepOutcome {
     /// Processed `n` events at the step's timestamp.
     Processed(usize),
     /// Cannot proceed until the listed peers' LVT reaches the given time.
+    Blocked(Vec<(AgentId, SimTime)>),
+    /// No local work at all (queues empty).
+    Idle,
+}
+
+/// Outcome of one safe-window execution ([`Engine::advance_window`]).
+#[derive(Debug, PartialEq)]
+pub enum WindowOutcome {
+    /// Executed `events` events across `timestamps` distinct timestamps.
+    Processed { events: usize, timestamps: usize },
+    /// The queue head is beyond the horizon; demands were emitted toward
+    /// the listed lagging peers.
     Blocked(Vec<(AgentId, SimTime)>),
     /// No local work at all (queues empty).
     Idle,
@@ -258,6 +301,10 @@ struct LpSlot<P> {
     state: LpState,
     events_handled: u64,
 }
+
+/// One finished handler-job: the LP, its buffered actions, and its slot to
+/// reinstall.  What flows back over the window's [`BatchChannel`].
+type LpJob<P> = (LpId, LpApi<P>, LpSlot<P>);
 
 /// The per-(agent, context) simulation engine.  See module docs.
 pub struct Engine<P> {
@@ -419,7 +466,15 @@ impl<P: Clone + Send + 'static> Engine<P> {
     /// safety information comes exclusively from explicit promises.
     pub fn receive_remote(&mut self, ev: Event<P>) {
         debug_assert_ne!(ev.src_agent, self.agent);
-        self.queues.push_remote(ev);
+        let src = ev.src_agent;
+        if !self.queues.push_remote(ev) {
+            // The LVT table holds no promise for a peer outside the
+            // participant set, so its events could never be proven safe —
+            // reject loudly rather than admit an unsynchronizable event.
+            self.stats.events_rejected += 1;
+            log::warn!("{}: rejecting event from unknown peer {src}", self.agent);
+            return;
+        }
         self.note_queue_len();
     }
 
@@ -532,9 +587,78 @@ impl<P: Clone + Send + 'static> Engine<P> {
 
     // ---------------------------------------------------------------- stepping
 
+    /// Execute one **safe window**: compute the conservative horizon
+    /// `W = min(peer promises)` once, then drain and execute every queued
+    /// event with `time <= W` — including events spawned mid-window that
+    /// land back inside the window.  Per-timestamp ordering semantics are
+    /// identical to repeated [`step`](Self::step) calls; synchronization
+    /// traffic (eager announces, parked-demand answers) is emitted once
+    /// per window instead of once per timestamp.
+    ///
+    /// `max_timestamps` bounds how long the engine may ignore its caller
+    /// (the agent loop must keep draining its transport); when the budget
+    /// is hit the outcome still reports progress and the next invocation
+    /// resumes the same window.  Must be >= 1.
+    pub fn advance_window(&mut self, max_timestamps: usize) -> WindowOutcome {
+        debug_assert!(max_timestamps >= 1);
+        let horizon = self.lvt_table.min_bound();
+        let next = self.queues.min_key().map(|(t, _)| t);
+        match sync::plan_window(next, horizon) {
+            WindowPlan::Idle => {
+                self.flush_parked_demands();
+                WindowOutcome::Idle
+            }
+            WindowPlan::Blocked { need } => {
+                self.stats.blocked_steps += 1;
+                let lagging = self.unsafe_peers(need);
+                WindowOutcome::Blocked(self.demand_from_lagging(lagging, need))
+            }
+            WindowPlan::Execute { horizon } => {
+                // One completion channel for the whole window: every
+                // timestamp's jobs are batched onto the pool through it.
+                let chan = self.workers.as_ref().map(|_| BatchChannel::new());
+                let mut events = 0usize;
+                let mut timestamps = 0usize;
+                while timestamps < max_timestamps {
+                    let Some((ts, batch)) = self.queues.pop_window(horizon) else {
+                        break;
+                    };
+                    self.lvt = ts;
+                    events += batch.len();
+                    timestamps += 1;
+                    let buffers = self.execute_batch(ts, batch, chan.as_ref());
+                    for (lp_id, api) in buffers {
+                        self.apply_buffer(lp_id, api, ts);
+                    }
+                }
+                self.stats.events_processed += events as u64;
+                self.stats.windows += 1;
+                self.stats.window_timestamps += timestamps as u64;
+                self.stats.max_window_events = self.stats.max_window_events.max(events);
+                // Sync once per window — the batching win.  Eager CMB
+                // announces per-peer bounds unconditionally; the demand
+                // protocol only answers what the window's progress now
+                // satisfies.
+                if self.protocol == SyncProtocol::EagerNullMessages {
+                    for peer in self.lvt_table.peers() {
+                        let bound = self.bound_for(peer);
+                        self.outbox_sync.push((peer, SyncMsg::LvtAnnounce { bound }));
+                        self.stats.null_messages_sent += 1;
+                    }
+                }
+                self.flush_parked_demands();
+                WindowOutcome::Processed { events, timestamps }
+            }
+        }
+    }
+
     /// Execute one scheduler step: take the globally-lowest-timestamp local
     /// batch if the sync protocol says it is safe, run the target LPs
     /// (via the worker pool when attached), apply their buffered actions.
+    ///
+    /// Kept as the per-timestamp equivalence baseline for
+    /// [`advance_window`](Self::advance_window) (`ExecMode::PerTimestamp`);
+    /// the blocked path is shared between both entry points.
     pub fn step(&mut self) -> StepOutcome {
         self.stats.steps += 1;
         let (ts, _) = match self.queues.min_key() {
@@ -549,27 +673,7 @@ impl<P: Clone + Send + 'static> Engine<P> {
         let lagging = self.unsafe_peers(ts);
         if !lagging.is_empty() {
             self.stats.blocked_steps += 1;
-            let mut demands = Vec::new();
-            for peer in lagging {
-                let asked = self.outstanding_demands.get(&peer).copied();
-                if asked.map_or(true, |a| a < ts) {
-                    self.outstanding_demands.insert(peer, ts);
-                    // The request carries our own current safe bound — the
-                    // most informative truthful promise we can make (the
-                    // paper piggybacks the local clock on the request; the
-                    // safe bound strictly dominates it).
-                    self.outbox_sync.push((
-                        peer,
-                        SyncMsg::LvtRequest {
-                            need: ts,
-                            lvt: self.bound_for(peer),
-                        },
-                    ));
-                    self.stats.lvt_requests_sent += 1;
-                }
-                demands.push((peer, ts));
-            }
-            return StepOutcome::Blocked(demands);
+            return StepOutcome::Blocked(self.demand_from_lagging(lagging, ts));
         }
 
         // Safe: pop every event at exactly this timestamp (the paper's
@@ -579,7 +683,7 @@ impl<P: Clone + Send + 'static> Engine<P> {
         self.lvt = ts;
         let n = batch.len();
 
-        let buffers = self.execute_batch(ts, batch);
+        let buffers = self.execute_batch(ts, batch, None);
         for (lp_id, api) in buffers {
             self.apply_buffer(lp_id, api, ts);
         }
@@ -598,6 +702,39 @@ impl<P: Clone + Send + 'static> Engine<P> {
         StepOutcome::Processed(n)
     }
 
+    /// Demand fresher bounds from every peer in `lagging` (the
+    /// `unsafe_peers(need)` set the caller already computed), deduplicated
+    /// through `outstanding_demands`.  Returns the full lagging set for
+    /// the caller's Blocked outcome.
+    fn demand_from_lagging(
+        &mut self,
+        lagging: Vec<AgentId>,
+        need: SimTime,
+    ) -> Vec<(AgentId, SimTime)> {
+        debug_assert!(!lagging.is_empty());
+        let mut demands = Vec::with_capacity(lagging.len());
+        for peer in lagging {
+            let asked = self.outstanding_demands.get(&peer).copied();
+            if asked.map_or(true, |a| a < need) {
+                self.outstanding_demands.insert(peer, need);
+                // The request carries our own current safe bound — the
+                // most informative truthful promise we can make (the
+                // paper piggybacks the local clock on the request; the
+                // safe bound strictly dominates it).
+                self.outbox_sync.push((
+                    peer,
+                    SyncMsg::LvtRequest {
+                        need,
+                        lvt: self.bound_for(peer),
+                    },
+                ));
+                self.stats.lvt_requests_sent += 1;
+            }
+            demands.push((peer, need));
+        }
+        demands
+    }
+
     /// Peers whose promised bound is below `ts` (processing would be
     /// unsafe).  Under the demand protocol an unknown peer must be asked
     /// first.
@@ -612,7 +749,15 @@ impl<P: Clone + Send + 'static> Engine<P> {
     /// Run the batch's LP handlers, in parallel when a pool is attached.
     /// Slots are moved out of the map for the duration of the handlers and
     /// reinstalled afterwards (keeps the code safe without aliasing tricks).
-    fn execute_batch(&mut self, ts: SimTime, batch: Vec<Event<P>>) -> Vec<(LpId, LpApi<P>)> {
+    ///
+    /// `chan` is the window's shared completion channel; `None` (the
+    /// per-timestamp path) falls back to a batch-local channel.
+    fn execute_batch(
+        &mut self,
+        ts: SimTime,
+        batch: Vec<Event<P>>,
+        chan: Option<&BatchChannel<LpJob<P>>>,
+    ) -> Vec<(LpId, LpApi<P>)> {
         let mut per_lp: BTreeMap<LpId, Vec<Event<P>>> = BTreeMap::new();
         for ev in batch {
             per_lp.entry(ev.dst_lp).or_default().push(ev);
@@ -653,18 +798,24 @@ impl<P: Clone + Send + 'static> Engine<P> {
             (lp_id, api, slot)
         };
 
-        let mut out: Vec<(LpId, LpApi<P>, LpSlot<P>)> = match (&self.workers, jobs.len()) {
+        let mut out: Vec<LpJob<P>> = match (&self.workers, jobs.len()) {
             (Some(pool), n) if n > 1 => {
-                let (tx, rx) = std::sync::mpsc::channel();
+                let local;
+                let chan = match chan {
+                    Some(c) => c,
+                    None => {
+                        local = BatchChannel::new();
+                        &local
+                    }
+                };
                 let n_jobs = jobs.len();
                 for (lp_id, evs, slot) in jobs {
-                    let tx = tx.clone();
+                    let tx = chan.sender();
                     pool.execute(move || {
-                        let _ = tx.send(run_one(lp_id, evs, slot));
+                        tx.send(run_one(lp_id, evs, slot));
                     });
                 }
-                drop(tx);
-                let mut v: Vec<_> = rx.iter().take(n_jobs).collect();
+                let mut v = chan.collect(n_jobs);
                 // Deterministic order regardless of worker interleaving.
                 v.sort_by_key(|(id, _, _)| *id);
                 v
@@ -1041,6 +1192,166 @@ mod tests {
                 .count(),
             2
         );
+    }
+
+    #[test]
+    fn window_drains_whole_horizon_in_one_call() {
+        // Single agent: horizon = +inf, so the entire run — including the
+        // chain of events each handler spawns mid-window — is one window.
+        let mut e = single_agent_engine();
+        e.add_lp(LpId(1), Box::new(Forwarder { next: LpId(2), delay: 1.0 }));
+        e.add_lp(LpId(2), Box::new(Forwarder { next: LpId(1), delay: 1.0 }));
+        e.schedule_initial(SimTime::new(0.0), LpId(1), Ping { hops: 5 });
+
+        match e.advance_window(usize::MAX) {
+            WindowOutcome::Processed { events, timestamps } => {
+                assert_eq!(events, 6); // initial + 5 forwards
+                assert_eq!(timestamps, 6);
+            }
+            o => panic!("expected one full window, got {o:?}"),
+        }
+        assert_eq!(e.advance_window(usize::MAX), WindowOutcome::Idle);
+        assert_eq!(e.lvt(), SimTime::new(5.0));
+        assert_eq!(e.stats().windows, 1);
+        assert_eq!(e.stats().window_timestamps, 6);
+        assert_eq!(e.stats().events_processed, 6);
+        assert_eq!(e.drain_outbox().results.len(), 1);
+    }
+
+    #[test]
+    fn window_budget_pauses_and_resumes() {
+        let mut e = single_agent_engine();
+        e.add_lp(LpId(1), Box::new(Forwarder { next: LpId(1), delay: 1.0 }));
+        e.schedule_initial(SimTime::ZERO, LpId(1), Ping { hops: 5 });
+        // Budget of 2 timestamps per call: the window resumes across calls.
+        let mut events = 0;
+        let mut calls = 0;
+        loop {
+            match e.advance_window(2) {
+                WindowOutcome::Processed { events: n, timestamps } => {
+                    assert!(timestamps <= 2);
+                    events += n;
+                    calls += 1;
+                }
+                WindowOutcome::Idle => break,
+                o => panic!("unexpected {o:?}"),
+            }
+        }
+        assert_eq!(events, 6);
+        assert_eq!(calls, 3);
+        assert_eq!(e.lvt(), SimTime::new(5.0));
+    }
+
+    #[test]
+    fn window_blocked_emits_demand_like_step() {
+        let a1 = AgentId(1);
+        let a2 = AgentId(2);
+        let mut e = Engine::new(
+            a1,
+            ContextId(1),
+            &[a1, a2],
+            0.5,
+            SyncProtocol::NullMessagesByDemand,
+        );
+        e.add_lp(LpId(1), Box::new(Forwarder { next: LpId(1), delay: 1.0 }));
+        e.schedule_initial(SimTime::new(2.0), LpId(1), Ping { hops: 0 });
+
+        match e.advance_window(usize::MAX) {
+            WindowOutcome::Blocked(d) => assert_eq!(d, vec![(a2, SimTime::new(2.0))]),
+            o => panic!("expected block, got {o:?}"),
+        }
+        let out = e.drain_outbox();
+        assert_eq!(out.sync.len(), 1);
+        assert!(matches!(out.sync[0].1, SyncMsg::LvtRequest { .. }));
+        // Re-invoking while still lagging must not duplicate the demand.
+        assert!(matches!(e.advance_window(usize::MAX), WindowOutcome::Blocked(_)));
+        assert!(e.drain_outbox().sync.is_empty());
+
+        // A sufficient promise turns the window safe; the bounded horizon
+        // (3.0) admits the t=2 event.
+        e.receive_sync(a2, SyncMsg::LvtAnnounce { bound: SimTime::new(3.0) });
+        match e.advance_window(usize::MAX) {
+            WindowOutcome::Processed { events, .. } => assert_eq!(events, 1),
+            o => panic!("expected progress, got {o:?}"),
+        }
+        assert_eq!(e.lvt(), SimTime::new(2.0));
+    }
+
+    #[test]
+    fn window_and_step_produce_identical_results() {
+        // The determinism contract at engine granularity: same published
+        // results, same final LVT, same events processed, either way.
+        let run = |windowed: bool| {
+            let mut e = single_agent_engine();
+            e.add_lp(LpId(1), Box::new(Forwarder { next: LpId(2), delay: 0.5 }));
+            e.add_lp(LpId(2), Box::new(Forwarder { next: LpId(1), delay: 0.5 }));
+            e.add_lp(LpId(3), Box::new(Forwarder { next: LpId(4), delay: 1.5 }));
+            e.add_lp(LpId(4), Box::new(Forwarder { next: LpId(3), delay: 1.5 }));
+            e.schedule_initial(SimTime::ZERO, LpId(1), Ping { hops: 9 });
+            e.schedule_initial(SimTime::new(0.25), LpId(3), Ping { hops: 4 });
+            if windowed {
+                while !matches!(e.advance_window(3), WindowOutcome::Idle) {}
+            } else {
+                while !matches!(e.step(), StepOutcome::Idle) {}
+            }
+            let results: Vec<String> = e
+                .drain_outbox()
+                .results
+                .iter()
+                .map(|(k, j)| format!("{k}={j}"))
+                .collect();
+            (e.lvt(), e.stats().events_processed, results)
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn eager_window_announces_once_per_window() {
+        let a1 = AgentId(1);
+        let a2 = AgentId(2);
+        let mut e = Engine::new(
+            a1,
+            ContextId(1),
+            &[a1, a2],
+            0.5,
+            SyncProtocol::EagerNullMessages,
+        );
+        e.add_lp(LpId(1), Box::new(Forwarder { next: LpId(1), delay: 1.0 }));
+        e.schedule_initial(SimTime::ZERO, LpId(1), Ping { hops: 4 });
+        e.receive_sync(a2, SyncMsg::LvtAnnounce { bound: SimTime::new(100.0) });
+        match e.advance_window(usize::MAX) {
+            WindowOutcome::Processed { events, timestamps } => {
+                assert_eq!(events, 5);
+                assert_eq!(timestamps, 5);
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+        // Five timestamps, ONE announce to the single peer — the
+        // per-timestamp baseline would have sent five.
+        let announces = e
+            .drain_outbox()
+            .sync
+            .iter()
+            .filter(|(_, m)| matches!(m, SyncMsg::LvtAnnounce { .. }))
+            .count();
+        assert_eq!(announces, 1);
+        assert_eq!(e.stats().null_messages_sent, 1);
+    }
+
+    #[test]
+    fn rejected_unknown_peer_event_is_counted() {
+        let mut e = single_agent_engine();
+        e.add_lp(LpId(1), Box::new(Forwarder { next: LpId(1), delay: 1.0 }));
+        e.receive_remote(Event {
+            time: SimTime::new(1.0),
+            tie: (7, 1),
+            src_agent: AgentId(7), // not in the participant set
+            src_lp: LpId(9),
+            dst_lp: LpId(1),
+            payload: Ping { hops: 0 },
+        });
+        assert!(e.is_idle());
+        assert_eq!(e.stats().events_rejected, 1);
     }
 
     #[test]

@@ -70,14 +70,22 @@ impl<P> EventQueues<P> {
         self.heap.push(Reverse(HeapItem(ev)));
     }
 
-    pub fn push_remote(&mut self, ev: Event<P>) {
-        debug_assert!(
-            self.per_source.contains_key(&ev.src_agent),
-            "event from unknown peer {}",
-            ev.src_agent
-        );
-        *self.per_source.entry(ev.src_agent).or_insert(0) += 1;
-        self.heap.push(Reverse(HeapItem(ev)));
+    /// Accept an event from a peer agent.  Returns `false` — and leaves the
+    /// queue untouched — when the source is outside the context's
+    /// participant set: the LVT table holds no promise for such a peer, so
+    /// its events could never be proven safe to execute.  Rejection is
+    /// uniform across debug and release builds; the engine counts and logs
+    /// it (`EngineStats::events_rejected`).
+    #[must_use]
+    pub fn push_remote(&mut self, ev: Event<P>) -> bool {
+        match self.per_source.get_mut(&ev.src_agent) {
+            Some(n) => {
+                *n += 1;
+                self.heap.push(Reverse(HeapItem(ev)));
+                true
+            }
+            None => false,
+        }
     }
 
     /// How many events arrived from `peer` so far.
@@ -105,6 +113,25 @@ impl<P> EventQueues<P> {
         // equal keys (cannot happen — keys are unique — but cheap).
         debug_assert!(out.windows(2).all(|w| w[0].key() <= w[1].key()));
         out
+    }
+
+    /// Pop the complete lowest-timestamp batch, provided that timestamp
+    /// lies within `horizon` (inclusive — an event at exactly the horizon
+    /// is safe, matching the per-peer `bound < ts` blocking rule).
+    ///
+    /// This is the safe-window drain primitive: the engine calls it in a
+    /// loop, executing each returned batch before the next call, so events
+    /// spawned mid-window that land back inside the horizon are picked up
+    /// by a later call at their own timestamp.  Per-window ordering is
+    /// therefore identical to per-timestamp stepping: batches come out in
+    /// strictly increasing timestamp order, each batch internally in
+    /// deterministic `(time, tie)` order.
+    pub fn pop_window(&mut self, horizon: SimTime) -> Option<(SimTime, Vec<Event<P>>)> {
+        let (ts, _) = self.min_key()?;
+        if ts > horizon {
+            return None;
+        }
+        Some((ts, self.pop_at(ts)))
     }
 }
 
@@ -167,8 +194,8 @@ mod tests {
     fn min_key_across_local_and_remote() {
         let mut q = EventQueues::new([AgentId(2), AgentId(3)].into_iter());
         q.push_local(ev(5.0, (1, 1), 1));
-        q.push_remote(ev(3.0, (2, 1), 2));
-        q.push_remote(ev(4.0, (3, 1), 3));
+        assert!(q.push_remote(ev(3.0, (2, 1), 2)));
+        assert!(q.push_remote(ev(4.0, (3, 1), 3)));
         assert_eq!(q.min_key().unwrap().0, SimTime::new(3.0));
         assert_eq!(q.len(), 3);
         assert_eq!(q.received_from(AgentId(2)), 1);
@@ -179,7 +206,7 @@ mod tests {
         let mut q = EventQueues::new([AgentId(2)].into_iter());
         q.push_local(ev(1.0, (1, 2), 1));
         q.push_local(ev(1.0, (1, 1), 1));
-        q.push_remote(ev(1.0, (2, 1), 2));
+        assert!(q.push_remote(ev(1.0, (2, 1), 2)));
         q.push_local(ev(2.0, (1, 3), 1));
         let batch = q.pop_at(SimTime::new(1.0));
         assert_eq!(batch.len(), 3);
@@ -193,10 +220,69 @@ mod tests {
         // Aggregated channels are NOT timestamp-monotone; the queue must
         // accept t=7 after t=9 from the same source.
         let mut q = EventQueues::new([AgentId(2)].into_iter());
-        q.push_remote(ev(9.0, (2, 1), 2));
-        q.push_remote(ev(7.0, (2, 2), 2));
+        assert!(q.push_remote(ev(9.0, (2, 1), 2)));
+        assert!(q.push_remote(ev(7.0, (2, 2), 2)));
         assert_eq!(q.min_key().unwrap().0, SimTime::new(7.0));
         assert_eq!(q.received_from(AgentId(2)), 2);
+    }
+
+    #[test]
+    fn unknown_peer_events_rejected_consistently() {
+        let mut q = EventQueues::new([AgentId(2)].into_iter());
+        assert!(!q.push_remote(ev(1.0, (9, 1), 9)));
+        // Rejection leaves both the heap and the counters untouched.
+        assert!(q.is_empty());
+        assert_eq!(q.received_from(AgentId(9)), 0);
+    }
+
+    #[test]
+    fn pop_window_respects_horizon_inclusive() {
+        let mut q = EventQueues::new(std::iter::empty());
+        q.push_local(ev(1.0, (1, 1), 1));
+        q.push_local(ev(2.0, (1, 2), 1));
+        q.push_local(ev(3.0, (1, 3), 1));
+        // Horizon below the head: nothing is safe.
+        assert!(q.pop_window(SimTime::new(0.5)).is_none());
+        // Inclusive at the horizon.
+        let (ts, batch) = q.pop_window(SimTime::new(1.0)).unwrap();
+        assert_eq!(ts, SimTime::new(1.0));
+        assert_eq!(batch.len(), 1);
+        // Next head (t=2) is beyond the same horizon.
+        assert!(q.pop_window(SimTime::new(1.0)).is_none());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pop_window_picks_up_mid_window_insertions() {
+        let mut q = EventQueues::new([AgentId(2)].into_iter());
+        q.push_local(ev(1.0, (1, 1), 1));
+        q.push_local(ev(3.0, (1, 2), 1));
+        let horizon = SimTime::new(5.0);
+
+        let (ts, _) = q.pop_window(horizon).unwrap();
+        assert_eq!(ts, SimTime::new(1.0));
+        // A handler at t=1 schedules new work at t=2 — inside the window,
+        // *before* the already-queued t=3 event.
+        q.push_local(ev(2.0, (1, 3), 1));
+
+        let (ts, batch) = q.pop_window(horizon).unwrap();
+        assert_eq!(ts, SimTime::new(2.0));
+        assert_eq!(batch[0].tie, (1, 3));
+        let (ts, _) = q.pop_window(horizon).unwrap();
+        assert_eq!(ts, SimTime::new(3.0));
+        assert!(q.pop_window(horizon).is_none());
+    }
+
+    #[test]
+    fn pop_window_batches_equal_timestamps_in_tie_order() {
+        let mut q = EventQueues::new([AgentId(2)].into_iter());
+        q.push_local(ev(1.0, (1, 2), 1));
+        assert!(q.push_remote(ev(1.0, (2, 1), 2)));
+        q.push_local(ev(1.0, (1, 1), 1));
+        let (ts, batch) = q.pop_window(SimTime::INF).unwrap();
+        assert_eq!(ts, SimTime::new(1.0));
+        let ties: Vec<_> = batch.iter().map(|e| e.tie).collect();
+        assert_eq!(ties, vec![(1, 1), (1, 2), (2, 1)]);
     }
 
     #[test]

@@ -16,8 +16,17 @@
 //!   all peers, whether anyone needs them or not.  Simple, chatty; the
 //!   paper's comparison target.
 //!
+//! Orthogonal to the protocol choice is the **execution granularity**
+//! ([`ExecMode`]): how much of the virtual future the engine commits to in
+//! one scheduler invocation.  [`ExecMode::SafeWindow`] (default) computes
+//! the conservative horizon once and drains *every* event within it —
+//! synchronization traffic is emitted once per window.  The per-timestamp
+//! mode is kept as the equivalence baseline; both produce identical
+//! virtual-time results.
+//!
 //! The mechanics live in [`super::Engine`]; this module holds the protocol
-//! selector so configs/benches can name it, plus the GVT helper.
+//! and mode selectors so configs/benches can name them, the pure window
+//! planner ([`plan_window`]), plus the GVT helper.
 
 use std::fmt;
 use std::str::FromStr;
@@ -59,6 +68,70 @@ impl FromStr for SyncProtocol {
     }
 }
 
+/// Execution granularity of the scheduler loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Safe-window batch execution (default): compute the conservative
+    /// horizon once, drain every event within it in one call, emit sync
+    /// traffic once per window.
+    #[default]
+    SafeWindow,
+    /// One timestamp per scheduler invocation — the original engine loop,
+    /// kept as the window-equivalence baseline.
+    PerTimestamp,
+}
+
+impl fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecMode::SafeWindow => write!(f, "window"),
+            ExecMode::PerTimestamp => write!(f, "step"),
+        }
+    }
+}
+
+impl FromStr for ExecMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "window" | "safe-window" | "batch" => Ok(ExecMode::SafeWindow),
+            "step" | "per-timestamp" | "timestamp" => Ok(ExecMode::PerTimestamp),
+            other => Err(format!("unknown exec mode '{other}' (window|step)")),
+        }
+    }
+}
+
+/// What a scheduler invocation should do, given the engine's queue head and
+/// its conservative horizon.
+///
+/// The horizon is the minimum over all peer promises (the LVT queue):
+/// every peer has guaranteed silence below its promise, so *every* queued
+/// event with `time <= horizon` is already safe — including events spawned
+/// mid-window, since a handler at `t` only schedules at `>= t`, and no
+/// remote arrival can undercut the horizon.  Peer promises embed the
+/// sender's lookahead (see [`super::Engine::bound_for`]), which is what
+/// makes the horizon a *window* rather than a single instant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WindowPlan {
+    /// Drain and execute every timestamp `<= horizon`.
+    Execute { horizon: SimTime },
+    /// The queue head is beyond the horizon: demand bounds from the
+    /// lagging peers for `need`.
+    Blocked { need: SimTime },
+    /// Nothing queued at all.
+    Idle,
+}
+
+/// Pure window planning: `next_event` is the engine's queue head (None if
+/// empty), `horizon` the minimum peer promise (`+inf` with no peers).
+pub fn plan_window(next_event: Option<SimTime>, horizon: SimTime) -> WindowPlan {
+    match next_event {
+        None => WindowPlan::Idle,
+        Some(ts) if ts <= horizon => WindowPlan::Execute { horizon },
+        Some(ts) => WindowPlan::Blocked { need: ts },
+    }
+}
+
 /// Global virtual time estimate from a set of per-agent observations:
 /// the minimum over every agent's LVT and every in-flight message time.
 /// Used by the coordinator for progress reporting and termination sanity
@@ -90,6 +163,45 @@ mod tests {
         assert_eq!(
             SyncProtocol::NullMessagesByDemand.to_string(),
             "demand"
+        );
+    }
+
+    #[test]
+    fn exec_mode_parse_roundtrip() {
+        assert_eq!("window".parse::<ExecMode>().unwrap(), ExecMode::SafeWindow);
+        assert_eq!("step".parse::<ExecMode>().unwrap(), ExecMode::PerTimestamp);
+        assert!("bogus".parse::<ExecMode>().is_err());
+        assert_eq!(ExecMode::default(), ExecMode::SafeWindow);
+        assert_eq!(ExecMode::SafeWindow.to_string(), "window");
+        assert_eq!(ExecMode::PerTimestamp.to_string(), "step");
+    }
+
+    #[test]
+    fn window_plan_covers_all_cases() {
+        let h = SimTime::new(5.0);
+        assert_eq!(plan_window(None, h), WindowPlan::Idle);
+        // Inclusive at the horizon.
+        assert_eq!(
+            plan_window(Some(SimTime::new(5.0)), h),
+            WindowPlan::Execute { horizon: h }
+        );
+        assert_eq!(
+            plan_window(Some(SimTime::new(1.0)), h),
+            WindowPlan::Execute { horizon: h }
+        );
+        assert_eq!(
+            plan_window(Some(SimTime::new(5.5)), h),
+            WindowPlan::Blocked { need: SimTime::new(5.5) }
+        );
+        // Unknown peers (horizon -inf) block everything; no peers
+        // (horizon +inf) admit everything.
+        assert_eq!(
+            plan_window(Some(SimTime::ZERO), SimTime::NEG_INF),
+            WindowPlan::Blocked { need: SimTime::ZERO }
+        );
+        assert_eq!(
+            plan_window(Some(SimTime::new(1e12)), SimTime::INF),
+            WindowPlan::Execute { horizon: SimTime::INF }
         );
     }
 

@@ -2,15 +2,18 @@
 //!
 //! "For the creation of logical processes a pool of worker threads is used.
 //! This eliminates the overhead caused by creating new threads and
-//! destroying them."  The pool executes the LP handlers of one simulation
-//! step; the engine joins the step with a completion channel, matching the
-//! paper's barrier ("the scheduler will let all the ready logical processes
-//! run ... after it finishes processing the events from the current
-//! simulation step").
+//! destroying them."  The pool executes the LP handlers of one timestamp
+//! batch; the engine joins each batch with a completion channel, matching
+//! the paper's barrier ("the scheduler will let all the ready logical
+//! processes run ... after it finishes processing the events from the
+//! current simulation step").  Under safe-window execution one
+//! [`BatchChannel`] serves every timestamp of the window, so the dispatch
+//! plumbing is amortized across the whole window.
 
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// Lifecycle of a logical process (paper §4.3: "a logical process can be in
 /// one of five possible states").
@@ -85,6 +88,93 @@ impl WorkerPool {
     }
 }
 
+/// Completion channel for dispatching job batches onto a [`WorkerPool`]
+/// and joining them.
+///
+/// Created once per *safe window* and reused across all of the window's
+/// timestamp batches (cross-timestamp job batching): the channel allocation
+/// is amortized over the whole window instead of paid per timestamp.  Each
+/// dispatched job gets its own [`sender`](Self::sender); the engine joins
+/// a batch with [`collect`](Self::collect).
+///
+/// Because the channel outlives each batch, a job that outlives its
+/// batch's join (worker stalled past the collect timeout) could otherwise
+/// deliver into a *later* batch and corrupt it.  Every send is therefore
+/// tagged with the batch epoch it was dispatched under, and `collect`
+/// discards results from past epochs.
+pub struct BatchChannel<T> {
+    tx: Sender<(u64, T)>,
+    rx: Receiver<(u64, T)>,
+    epoch: std::cell::Cell<u64>,
+}
+
+/// One job's tagged completion handle (one per dispatched job).
+pub struct BatchSender<T> {
+    epoch: u64,
+    tx: Sender<(u64, T)>,
+}
+
+impl<T: Send + 'static> BatchSender<T> {
+    /// Deliver the job's result (consumed: one result per job).
+    pub fn send(self, value: T) {
+        let _ = self.tx.send((self.epoch, value));
+    }
+}
+
+impl<T: Send + 'static> BatchChannel<T> {
+    pub fn new() -> Self {
+        let (tx, rx) = channel();
+        BatchChannel {
+            tx,
+            rx,
+            epoch: std::cell::Cell::new(0),
+        }
+    }
+
+    /// A tagged sender to move into one dispatched job of the current
+    /// batch.
+    pub fn sender(&self) -> BatchSender<T> {
+        BatchSender {
+            epoch: self.epoch.get(),
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Join one batch: collect exactly `n` current-epoch results, then
+    /// advance the epoch so any straggler of this batch is discarded by
+    /// later joins.  A lost job (worker panicked mid-handler) cannot be
+    /// detected by channel closure — the channel outlives the batch — so
+    /// a generous timeout keeps the engine from hanging forever and the
+    /// shortfall is logged loudly.
+    pub fn collect(&self, n: usize) -> Vec<T> {
+        let epoch = self.epoch.get();
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match self.rx.recv_timeout(Duration::from_secs(60)) {
+                Ok((e, v)) if e == epoch => out.push(v),
+                // Straggler from a previously timed-out batch: drop it.
+                Ok(_) => {}
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                    log::error!(
+                        "worker batch incomplete: {} of {} jobs returned (worker panic?)",
+                        out.len(),
+                        n
+                    );
+                    break;
+                }
+            }
+        }
+        self.epoch.set(epoch + 1);
+        out
+    }
+}
+
+impl<T: Send + 'static> Default for BatchChannel<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         for _ in &self.threads {
@@ -125,6 +215,37 @@ mod tests {
         let pool = WorkerPool::new(2);
         assert_eq!(pool.size(), 2);
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn batch_channel_reused_across_batches() {
+        let pool = WorkerPool::new(2);
+        let chan: BatchChannel<usize> = BatchChannel::new();
+        // Two consecutive "timestamps" joined over the same channel.
+        for round in 0..2usize {
+            for j in 0..4usize {
+                let tx = chan.sender();
+                pool.execute(move || {
+                    tx.send(round * 10 + j);
+                });
+            }
+            let mut got = chan.collect(4);
+            got.sort_unstable();
+            assert_eq!(got, vec![round * 10, round * 10 + 1, round * 10 + 2, round * 10 + 3]);
+        }
+    }
+
+    #[test]
+    fn batch_channel_discards_stragglers_from_past_batches() {
+        let chan: BatchChannel<u32> = BatchChannel::new();
+        let straggler = chan.sender(); // dispatched under epoch 0
+        chan.sender().send(1);
+        assert_eq!(chan.collect(1), vec![1]); // epoch advances
+        // The epoch-0 job finally finishes, after its batch was joined.
+        straggler.send(99);
+        chan.sender().send(2);
+        // The stale 99 must not leak into the new batch.
+        assert_eq!(chan.collect(1), vec![2]);
     }
 
     #[test]

@@ -13,6 +13,17 @@
 //!   replicated object space (JavaSpaces-like), lookup + monitoring services
 //!   and the MONARC component library (CPUs, network with interrupt-based
 //!   fair sharing, databases, mass storage, regional centers).
+//!
+//!   Execution is **safe-window batched**: each engine computes its
+//!   conservative horizon (the minimum over peer LVT promises, each already
+//!   embedding the sender's lookahead) once per scheduler turn and drains
+//!   *every* event within it — events spawned mid-window included — in a
+//!   single [`engine::Engine::advance_window`] call, emitting
+//!   synchronization traffic once per window instead of once per
+//!   timestamp.  Per-timestamp ordering semantics are preserved exactly,
+//!   so results are bit-identical to the per-timestamp baseline
+//!   ([`engine::ExecMode::PerTimestamp`], kept for equivalence testing)
+//!   for any worker or agent count.
 //! * **Layer 2 (python/compile/model.py, build-time)** — JAX graphs for the
 //!   numeric hot spots: all-pairs-shortest-path placement scoring and
 //!   max-min fair bandwidth allocation.
@@ -56,7 +67,7 @@ pub mod prelude {
     pub use crate::components::RegionalCenter;
     pub use crate::config::ScenarioConfig;
     pub use crate::coordinator::{Deployment, RunReport};
-    pub use crate::engine::{SimTime, SyncProtocol};
+    pub use crate::engine::{ExecMode, SimTime, SyncProtocol};
     pub use crate::metrics::ResultPool;
     pub use crate::model::Scenario;
     pub use crate::runtime::ComputeBackend;

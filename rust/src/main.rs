@@ -155,6 +155,10 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         .transpose()?
         .unwrap_or(0.05);
     let workers: usize = get("--workers").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let exec = get("--exec")
+        .map(|s| s.parse().map_err(anyhow::Error::msg))
+        .transpose()?
+        .unwrap_or_default();
     let peer_ids: Vec<AgentId> = peers.keys().copied().filter(|a| a.raw() != 0).collect();
 
     let transport: TcpTransport<Payload> = TcpTransport::bind(me, bind, peers)?;
@@ -165,6 +169,7 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         lookahead,
         protocol: Default::default(),
         workers,
+        exec,
     };
     println!("agent {me} listening on {bind}");
     AgentRuntime::new(cfg, transport, backend).run();

@@ -63,7 +63,7 @@ pub enum ControlMsg {
     /// Termination detection probe (double-count algorithm).
     Probe { context: ContextId, round: u64 },
     /// Agent -> leader: probe answer (idle?, #sent, #received, lvt,
-    /// earliest pending event).
+    /// earliest pending event, safe windows executed).
     ProbeReply {
         context: ContextId,
         round: u64,
@@ -73,6 +73,10 @@ pub enum ControlMsg {
         received: u64,
         lvt: SimTime,
         next_event: SimTime,
+        /// Total safe windows this agent has executed for the context —
+        /// the termination detector's progress signal at window
+        /// granularity.
+        windows: u64,
     },
     /// Leader -> agents: proven GVT lower bound (quiescent probe round).
     GvtUpdate { context: ContextId, gvt: SimTime },
@@ -403,6 +407,7 @@ fn control_to_json(c: &ControlMsg) -> Json {
             received,
             lvt,
             next_event,
+            windows,
         } => Json::obj(vec![
             ("k", Json::str("probe-reply")),
             ("ctx", Json::num(context.raw() as f64)),
@@ -413,6 +418,7 @@ fn control_to_json(c: &ControlMsg) -> Json {
             ("received", Json::num(*received as f64)),
             ("lvt", time_to_json(*lvt)),
             ("next", time_to_json(*next_event)),
+            ("win", Json::num(*windows as f64)),
         ]),
         GvtUpdate { context, gvt } => Json::obj(vec![
             ("k", Json::str("gvt")),
@@ -515,6 +521,9 @@ fn control_from_json(j: &Json) -> Result<ControlMsg> {
                 .context("received")?,
             lvt: time_from_json(j.get("lvt").context("lvt")?)?,
             next_event: time_from_json(j.get("next").context("next")?)?,
+            // Absent in pre-window frames; default keeps mixed fleets
+            // decoding.
+            windows: j.get("win").and_then(Json::as_u64).unwrap_or(0),
         }),
         Some("gvt") => Ok(ControlMsg::GvtUpdate {
             context: ctx()?,
@@ -843,6 +852,7 @@ mod tests {
                 received: 10,
                 lvt: SimTime::new(3.5),
                 next_event: SimTime::INF,
+                windows: 42,
             },
             ControlMsg::GvtUpdate {
                 context: ContextId(1),

@@ -1,0 +1,93 @@
+//! Window-vs-step determinism: the tentpole contract of safe-window batch
+//! execution.  The same scenario, run under safe-window mode and the
+//! per-timestamp baseline, with workers in {0, 4}, must yield byte-identical
+//! `RunReport` determinism fingerprints (virtual-time results only —
+//! wall-clock and sync-message counts legitimately differ, the latter being
+//! the whole point of windowing).
+
+use std::time::Duration;
+
+use dsim::config::{PlacementPolicy, WorkloadConfig};
+use dsim::coordinator::{Deployment, RunReport};
+use dsim::engine::{ExecMode, SyncProtocol};
+use dsim::workload;
+
+fn cfg(seed: u64) -> WorkloadConfig {
+    WorkloadConfig {
+        name: "t0t1".into(),
+        centers: 3,
+        cpus_per_center: 4,
+        jobs_per_center: 8,
+        wan_bandwidth_mbps: 311.0,
+        wan_latency_s: 0.05,
+        transfer_mb: 150.0,
+        transfers_per_center: 8,
+        seed,
+        faithful_interrupts: false,
+    }
+}
+
+fn run(mode: ExecMode, workers: usize, proto: SyncProtocol, seed: u64) -> RunReport {
+    Deployment::in_process(3)
+        .exec_mode(mode)
+        .workers(workers)
+        .protocol(proto)
+        .placement(PlacementPolicy::RoundRobin)
+        .seed(seed)
+        .max_wall(Duration::from_secs(120))
+        .run(workload::generate(&cfg(seed)))
+        .expect("run failed")
+}
+
+#[test]
+fn window_matches_step_across_worker_counts() {
+    for proto in [
+        SyncProtocol::NullMessagesByDemand,
+        SyncProtocol::EagerNullMessages,
+    ] {
+        let baseline = run(ExecMode::PerTimestamp, 0, proto, 21).determinism_fingerprint();
+        for workers in [0usize, 4] {
+            for mode in [ExecMode::PerTimestamp, ExecMode::SafeWindow] {
+                let fp = run(mode, workers, proto, 21).determinism_fingerprint();
+                assert_eq!(
+                    fp, baseline,
+                    "diverged: proto={proto} mode={mode} workers={workers}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn window_mode_batches_timestamps() {
+    // The windows counter only moves in safe-window mode, and a window
+    // must on average cover multiple timestamps for the batching to mean
+    // anything on this workload.
+    let windowed = run(ExecMode::SafeWindow, 0, SyncProtocol::NullMessagesByDemand, 22);
+    let stepped = run(ExecMode::PerTimestamp, 0, SyncProtocol::NullMessagesByDemand, 22);
+    assert!(windowed.windows > 0, "no windows recorded");
+    assert_eq!(stepped.windows, 0, "per-timestamp mode must not window");
+    assert_eq!(
+        windowed.determinism_fingerprint(),
+        stepped.determinism_fingerprint()
+    );
+}
+
+#[test]
+fn window_mode_cuts_eager_sync_traffic() {
+    // Eager CMB announces per timestamp in step mode but per window in
+    // window mode: on a distributed run the sync volume must not grow, and
+    // with real multi-timestamp windows it shrinks sharply.
+    let windowed = run(ExecMode::SafeWindow, 0, SyncProtocol::EagerNullMessages, 23);
+    let stepped = run(ExecMode::PerTimestamp, 0, SyncProtocol::EagerNullMessages, 23);
+    assert_eq!(
+        windowed.determinism_fingerprint(),
+        stepped.determinism_fingerprint()
+    );
+    assert!(
+        windowed.sync_messages <= stepped.sync_messages,
+        "windowing increased sync traffic: {} > {}",
+        windowed.sync_messages,
+        stepped.sync_messages
+    );
+}
