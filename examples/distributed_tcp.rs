@@ -2,9 +2,11 @@
 //!
 //! Demonstrates the framework's second transport: two simulation agents and
 //! a leader, each on its own `TcpTransport` endpoint (localhost sockets,
-//! length-prefixed JSON frames — exactly what `dsim agent` uses across
-//! machines).  The leader deploys the two-center demo, drives termination
-//! detection by probing, and prints final statistics.
+//! length-prefixed JSON frames, window-batched: one `WindowBatch` frame per
+//! peer per window plus one `WindowReport` to the leader — exactly what
+//! `dsim agent` uses across machines).  The leader deploys the two-center
+//! demo, drives termination detection by probing, and prints final
+//! statistics.
 //!
 //! ```bash
 //! cargo run --release --example distributed_tcp
@@ -51,6 +53,9 @@ fn main() -> anyhow::Result<()> {
             protocol: Default::default(),
             workers: 0,
             exec: Default::default(),
+            // Window-batched wire protocol: one frame per peer per window
+            // plus one per-window WindowReport to the leader.
+            wire_batch: true,
         };
         let backend = Arc::new(ComputeBackend::auto(Path::new("artifacts")));
         handles.push(std::thread::spawn(move || {
@@ -170,6 +175,11 @@ fn main() -> anyhow::Result<()> {
                         break 'outer;
                     }
                 }
+                // Batched: one WindowReport per window carries the records.
+                Some(NetMsg::Control(ControlMsg::WindowReport { records, .. })) => {
+                    results += records.len()
+                }
+                // Legacy per-record frames (wire batching off).
                 Some(NetMsg::Control(ControlMsg::Result { .. })) => results += 1,
                 Some(_) => {}
                 None => {}
@@ -197,6 +207,9 @@ fn main() -> anyhow::Result<()> {
                     events += v.events_processed;
                 }
                 got_stats += 1;
+            }
+            Some(NetMsg::Control(ControlMsg::WindowReport { records, .. })) => {
+                results += records.len()
             }
             Some(NetMsg::Control(ControlMsg::Result { .. })) => results += 1,
             Some(_) => {}

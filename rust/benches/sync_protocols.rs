@@ -95,6 +95,7 @@ fn main() {
             let mut sync = 0u64;
             let mut events = 0u64;
             let mut windows = 0u64;
+            let mut frames = 0u64;
             let mut fingerprint = String::new();
             let times = Bench::new(&format!("window/{pname}/{mname}/a4"))
                 .warmup(1)
@@ -109,6 +110,7 @@ fn main() {
                     sync = report.sync_messages;
                     events = report.events_processed;
                     windows = report.windows;
+                    frames = report.wire_frames;
                     fingerprint = report.determinism_fingerprint();
                 });
             let med = Bench::summary(&times).map(|s| s.p50).unwrap_or(0.0);
@@ -124,6 +126,7 @@ fn main() {
                     ("events_per_s", format!("{rate:.0}")),
                     ("sync_msgs", sync.to_string()),
                     ("windows", windows.to_string()),
+                    ("wire_frames", frames.to_string()),
                     ("fingerprint", fingerprint),
                 ],
             );
@@ -136,4 +139,54 @@ fn main() {
         }
     }
     println!("# shape check: window events/sec >= 2x step events/sec (eager), fingerprints equal");
+
+    // ------------------------------------------------------------------
+    // CLAIM-FRAMES: window-batched wire protocol.  One WindowBatch frame
+    // per peer per window plus one WindowReport to the leader — so frames
+    // per window must be <= peers + 1 (here 3 peers + 1 = 4), down from
+    // the legacy protocol's one frame per message (>= one per remote
+    // event, plus sync and result frames).
+    // ------------------------------------------------------------------
+    println!("# CLAIM-FRAMES: frames per window, batched vs per-message wire protocol");
+    for (bname, batch) in [("batched", true), ("per-message", false)] {
+        let mut frames = 0u64;
+        let mut windows = 0u64;
+        let mut remote = 0u64;
+        let mut sync = 0u64;
+        let times = Bench::new(&format!("frames/{bname}/a4"))
+            .warmup(1)
+            .iters(3)
+            .run(|| {
+                let report = Deployment::in_process(4)
+                    .placement(PlacementPolicy::RoundRobin)
+                    .wire_batching(batch)
+                    .run(workload::generate(&cfg()))
+                    .expect("run failed");
+                frames = report.wire_frames;
+                windows = report.windows;
+                remote = report.remote_events;
+                sync = report.sync_messages;
+            });
+        let med = Bench::summary(&times).map(|s| s.p50).unwrap_or(0.0);
+        let fpw = if windows > 0 {
+            frames as f64 / windows as f64
+        } else {
+            0.0
+        };
+        report_row(
+            "frames_per_window",
+            &[
+                ("wire", bname.to_string()),
+                ("agents", "4".to_string()),
+                ("wall_s", fmt_s(med)),
+                ("wire_frames", frames.to_string()),
+                ("windows", windows.to_string()),
+                ("frames_per_window", format!("{fpw:.2}")),
+                ("bound_peers_plus_1", "4".to_string()),
+                ("remote_events", remote.to_string()),
+                ("sync_msgs", sync.to_string()),
+            ],
+        );
+    }
+    println!("# shape check: batched frames_per_window <= 4 (= peers + 1); per-message >= one frame per remote event");
 }

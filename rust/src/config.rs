@@ -80,6 +80,22 @@ pub struct DeployConfig {
     /// Model lookahead override (seconds of virtual time); None = derive
     /// from the scenario (min WAN latency).
     pub lookahead: Option<f64>,
+    /// Window-batched wire protocol (default true): one frame per peer per
+    /// window flush plus one per-window leader report, instead of one
+    /// frame per message.  `false` restores the legacy protocol (mixed
+    /// fleets, equivalence baselines).
+    pub wire_batch: bool,
+    /// Maximum accepted wire frame size in MiB (TCP transport).  Outbound
+    /// window batches above the limit are split; inbound oversized frames
+    /// are drained and skipped.  Records the fleet-wide value that every
+    /// `dsim agent --max-frame-mib` must be launched with — limits must
+    /// match across the fleet (a sender only splits against its *own*
+    /// limit); in-process deployments move values directly and ignore it.
+    pub max_frame_mib: usize,
+    /// GVT probe fallback cadence in milliseconds.  Probe rounds normally
+    /// trigger on window-completion notifications; this timer only retries
+    /// lost replies and bounds termination latency on a quiet fleet.
+    pub probe_fallback_ms: u64,
     /// Directory holding the AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -94,6 +110,9 @@ impl Default for DeployConfig {
             placement: PlacementPolicy::PerfValue,
             backend: BackendKind::Native,
             lookahead: None,
+            wire_batch: true,
+            max_frame_mib: crate::transport::DEFAULT_MAX_FRAME_BYTES >> 20,
+            probe_fallback_ms: 2,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -204,6 +223,13 @@ impl ScenarioConfig {
                 None | Some(Json::Null) => None,
                 Some(v) => Some(v.as_f64().context("lookahead must be a number")?),
             },
+            wire_batch: d
+                .get("wire_batch")
+                .and_then(Json::as_bool)
+                .unwrap_or(dd.wire_batch),
+            max_frame_mib: get_usize(&d, "max_frame_mib", dd.max_frame_mib)?,
+            probe_fallback_ms: get_usize(&d, "probe_fallback_ms", dd.probe_fallback_ms as usize)?
+                as u64,
             artifacts_dir: get_str(&d, "artifacts_dir", &dd.artifacts_dir)?,
         };
         let workload = WorkloadConfig {
@@ -245,6 +271,15 @@ impl ScenarioConfig {
             if l <= 0.0 {
                 bail!("deploy.lookahead must be > 0 (conservative sync)");
             }
+        }
+        if !(1..=usize::MAX >> 20).contains(&self.deploy.max_frame_mib) {
+            bail!(
+                "deploy.max_frame_mib must be in 1..={} (MiB shifted to bytes must fit usize)",
+                usize::MAX >> 20
+            );
+        }
+        if self.deploy.probe_fallback_ms == 0 {
+            bail!("deploy.probe_fallback_ms must be >= 1");
         }
         if self.workload.centers == 0 {
             bail!("workload.centers must be >= 1");
@@ -300,6 +335,15 @@ impl ScenarioConfig {
                             Some(l) => Json::num(l),
                             None => Json::Null,
                         },
+                    ),
+                    ("wire_batch", Json::Bool(self.deploy.wire_batch)),
+                    (
+                        "max_frame_mib",
+                        Json::num(self.deploy.max_frame_mib as f64),
+                    ),
+                    (
+                        "probe_fallback_ms",
+                        Json::num(self.deploy.probe_fallback_ms as f64),
                     ),
                     ("artifacts_dir", Json::str(self.deploy.artifacts_dir.clone())),
                 ]),
@@ -376,6 +420,26 @@ mod tests {
         assert_eq!(back.workload.wan_bandwidth_mbps, cfg.workload.wan_bandwidth_mbps);
         assert_eq!(back.deploy.lookahead, cfg.deploy.lookahead);
         assert_eq!(back.deploy.exec, cfg.deploy.exec);
+        assert_eq!(back.deploy.wire_batch, cfg.deploy.wire_batch);
+        assert_eq!(back.deploy.max_frame_mib, cfg.deploy.max_frame_mib);
+        assert_eq!(back.deploy.probe_fallback_ms, cfg.deploy.probe_fallback_ms);
+    }
+
+    #[test]
+    fn batching_knobs_parse_and_default() {
+        // Defaults: batching on, 64 MiB frames, 2 ms probe fallback.
+        let cfg = ScenarioConfig::from_json_text("{}").unwrap();
+        assert!(cfg.deploy.wire_batch);
+        assert_eq!(cfg.deploy.max_frame_mib, 64);
+        assert_eq!(cfg.deploy.probe_fallback_ms, 2);
+        // Explicit overrides.
+        let cfg = ScenarioConfig::from_json_text(
+            r#"{"deploy": {"wire_batch": false, "max_frame_mib": 8, "probe_fallback_ms": 10}}"#,
+        )
+        .unwrap();
+        assert!(!cfg.deploy.wire_batch);
+        assert_eq!(cfg.deploy.max_frame_mib, 8);
+        assert_eq!(cfg.deploy.probe_fallback_ms, 10);
     }
 
     #[test]
@@ -383,6 +447,10 @@ mod tests {
         assert!(ScenarioConfig::from_json_text(r#"{"deploy": {"agents": 0}}"#).is_err());
         assert!(ScenarioConfig::from_json_text(r#"{"deploy": {"agents": 65}}"#).is_err());
         assert!(ScenarioConfig::from_json_text(r#"{"deploy": {"lookahead": -1}}"#).is_err());
+        assert!(ScenarioConfig::from_json_text(r#"{"deploy": {"max_frame_mib": 0}}"#).is_err());
+        assert!(
+            ScenarioConfig::from_json_text(r#"{"deploy": {"probe_fallback_ms": 0}}"#).is_err()
+        );
         assert!(
             ScenarioConfig::from_json_text(r#"{"workload": {"name": "bogus"}}"#).is_err()
         );

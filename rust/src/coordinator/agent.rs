@@ -6,8 +6,9 @@
 //! The loop: drain transport messages into the right context's engine (the
 //! **context factory** role), advance every started engine through its
 //! safe window (one `advance_window` per turn; per-timestamp stepping is
-//! kept as the equivalence baseline), forward outboxes, answer termination
-//! probes, publish monitoring samples.
+//! kept as the equivalence baseline), flush outboxes — one `WindowBatch`
+//! frame per peer plus one `WindowReport` leader frame per window under
+//! wire batching — answer termination probes, publish monitoring samples.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -35,6 +36,12 @@ struct ContextSlot {
     /// termination protocol.
     sent: u64,
     received: u64,
+    /// Wire frames this agent emitted for the context (batched or legacy);
+    /// the numerator of the frames-per-window metric.
+    frames: u64,
+    /// Engine window count already reported to the leader via
+    /// `WindowReport` (so each completed window is announced exactly once).
+    reported_windows: u64,
 }
 
 /// Per-agent configuration.
@@ -49,6 +56,11 @@ pub struct AgentConfig {
     /// Scheduler granularity: safe-window batches (default) or the
     /// per-timestamp baseline.
     pub exec: ExecMode,
+    /// Batch each outbox flush into one `WindowBatch` frame per peer plus
+    /// one `WindowReport` frame to the leader (default).  `false` restores
+    /// the legacy one-frame-per-message wire protocol — kept for mixed
+    /// fleets and as the equivalence baseline.
+    pub wire_batch: bool,
 }
 
 /// Upper bound on timestamps one `advance_window` call may execute before
@@ -160,6 +172,36 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                         .receive_sync(from, crate::engine::SyncMsg::LvtAnnounce { bound });
                 } else {
                     log::warn!("{}: event for unknown {context}", self.cfg.me);
+                }
+            }
+            NetMsg::WindowBatch {
+                context,
+                from,
+                events,
+                sync,
+                bound,
+            } => {
+                if let Some(slot) = self.contexts.get_mut(&context) {
+                    // Frame order is the promise order: events first, then
+                    // the window's sync flush, then the piggybacked bound —
+                    // so the single trailing promise never undercuts an
+                    // event of its own frame.
+                    slot.received += events.len() as u64;
+                    for event in events {
+                        slot.engine.receive_remote(event);
+                    }
+                    for msg in sync {
+                        slot.engine.receive_sync(from, msg);
+                    }
+                    if let Some(bound) = bound {
+                        slot.engine
+                            .receive_sync(from, crate::engine::SyncMsg::LvtAnnounce { bound });
+                    }
+                    // Sync ingest may have produced answers (parked-demand
+                    // responses); ship them now rather than next turn.
+                    self.flush_outbox(context);
+                } else {
+                    log::warn!("{}: batch for unknown {context}", self.cfg.me);
                 }
             }
             NetMsg::Sync { context, from, msg } => {
@@ -284,7 +326,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                         NetMsg::Control(ControlMsg::FinalStats {
                             context,
                             from: self.cfg.me,
-                            stats: engine_stats_json(&EngineStats::default(), 0.0),
+                            stats: engine_stats_json(&EngineStats::default(), 0.0, 0),
                         }),
                     );
                 }
@@ -293,6 +335,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                     // Peers may already be gone; ignore send failures.
                     let out = slot.engine.drain_outbox();
                     for (to, sync) in out.sync {
+                        slot.frames += 1;
                         let _ = self.transport.send(
                             to,
                             NetMsg::Sync {
@@ -302,7 +345,11 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                             },
                         );
                     }
-                    let stats = engine_stats_json(slot.engine.stats(), slot.engine.lvt().secs());
+                    let stats = engine_stats_json(
+                        slot.engine.stats(),
+                        slot.engine.lvt().secs(),
+                        slot.frames,
+                    );
                     let _ = self.transport.send(
                         LEADER,
                         NetMsg::Control(ControlMsg::FinalStats {
@@ -346,6 +393,8 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 started: false,
                 sent: 0,
                 received: 0,
+                frames: 0,
+                reported_windows: 0,
             }
         })
     }
@@ -398,58 +447,120 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
     }
 
     /// Forward engine outbox + space replication to the fabric.
+    ///
+    /// Under wire batching (default) the whole drain becomes **one
+    /// `WindowBatch` frame per destination peer** — the window's events
+    /// for that peer in emission order plus its sync flush, with the
+    /// engine's post-drain promise trailing — and at most **one
+    /// `WindowReport` frame to the leader** carrying the window's
+    /// published records and the cumulative executed-window count (the
+    /// leader's GVT progress signal).  Frames per flush are O(peers)
+    /// instead of O(messages).
+    ///
+    /// The single trailing bound is sound because the frame is atomic: the
+    /// receiver ingests the frame's own events before the promise, and
+    /// every *future* emission is >= the post-drain `bound_for` by the
+    /// usual conditional-CMB argument.  (The legacy path instead caps each
+    /// per-event bound by the suffix-minimum of later event times on the
+    /// same channel, since there each event travels as its own frame.)
     fn flush_outbox(&mut self, ctx: ContextId) {
         let Some(slot) = self.contexts.get_mut(&ctx) else { return };
         let out = slot.engine.drain_outbox();
-        // The piggybacked promise on each event frame must not exceed the
-        // timestamp of any event still unsent to the same peer later in
-        // this flush: under window mode the outbox spans many timestamps,
-        // and a bound computed from post-window engine state would
-        // otherwise precede a lower-timestamped in-flight event on the
-        // same FIFO channel — a promise violation the receiver could act
-        // on.  Cap each frame's bound by the per-peer suffix-minimum of
-        // later event times (the last frame to a peer carries the full
-        // engine bound, so no knowledge is lost by the end of the flush).
-        let mut later_min: BTreeMap<AgentId, SimTime> = BTreeMap::new();
-        let mut caps = vec![SimTime::INF; out.events.len()];
-        for (i, (to, ev)) in out.events.iter().enumerate().rev() {
-            let later = later_min.get(to).copied().unwrap_or(SimTime::INF);
-            caps[i] = later;
-            later_min.insert(*to, later.min(ev.time));
-        }
-        for ((to, event), cap) in out.events.into_iter().zip(caps) {
-            slot.sent += 1;
-            let bound = slot.engine.bound_for(to).min(cap);
-            if let Err(e) = self.transport.send(
-                to,
-                NetMsg::Event {
-                    context: ctx,
-                    event,
-                    bound,
-                },
-            ) {
-                log::error!("{}: send event to {to}: {e:#}", self.cfg.me);
+        if self.cfg.wire_batch {
+            let (batches, results) = out.into_peer_batches();
+            for (to, batch) in batches {
+                slot.sent += batch.events.len() as u64;
+                slot.frames += 1;
+                let bound = slot.engine.bound_for(to);
+                if let Err(e) = self.transport.send(
+                    to,
+                    NetMsg::WindowBatch {
+                        context: ctx,
+                        from: self.cfg.me,
+                        events: batch.events,
+                        sync: batch.sync,
+                        bound: Some(bound),
+                    },
+                ) {
+                    // Undeliverable events keep sent != received, so the
+                    // run fails loudly at max_wall rather than silently
+                    // diverging.
+                    log::error!("{}: send batch to {to} (run will stall): {e:#}", self.cfg.me);
+                }
             }
-        }
-        for (to, sync) in out.sync {
-            let _ = self.transport.send(
-                to,
-                NetMsg::Sync {
-                    context: ctx,
-                    from: self.cfg.me,
-                    msg: sync,
-                },
-            );
-        }
-        for (kind, record) in out.results {
-            let _ = self.transport.send(
-                LEADER,
-                NetMsg::Control(ControlMsg::Result {
-                    context: ctx,
-                    kind,
-                    record,
-                }),
-            );
+            // One leader frame per completed window (or result batch):
+            // per-window result batching + the window-completion
+            // notification that drives notification-based GVT probing.
+            let windows = slot.engine.stats().windows;
+            if !results.is_empty() || windows > slot.reported_windows {
+                slot.reported_windows = windows;
+                slot.frames += 1;
+                let _ = self.transport.send(
+                    LEADER,
+                    NetMsg::Control(ControlMsg::WindowReport {
+                        context: ctx,
+                        from: self.cfg.me,
+                        windows,
+                        records: results,
+                    }),
+                );
+            }
+        } else {
+            // Legacy one-frame-per-message path.  The piggybacked promise
+            // on each event frame must not exceed the timestamp of any
+            // event still unsent to the same peer later in this flush:
+            // under window mode the outbox spans many timestamps, and a
+            // bound computed from post-window engine state would otherwise
+            // precede a lower-timestamped in-flight event on the same FIFO
+            // channel — a promise violation the receiver could act on.
+            // Cap each frame's bound by the per-peer suffix-minimum of
+            // later event times (the last frame to a peer carries the
+            // full engine bound, so no knowledge is lost by the end of
+            // the flush).
+            let mut later_min: BTreeMap<AgentId, SimTime> = BTreeMap::new();
+            let mut caps = vec![SimTime::INF; out.events.len()];
+            for (i, (to, ev)) in out.events.iter().enumerate().rev() {
+                let later = later_min.get(to).copied().unwrap_or(SimTime::INF);
+                caps[i] = later;
+                later_min.insert(*to, later.min(ev.time));
+            }
+            for ((to, event), cap) in out.events.into_iter().zip(caps) {
+                slot.sent += 1;
+                slot.frames += 1;
+                let bound = slot.engine.bound_for(to).min(cap);
+                if let Err(e) = self.transport.send(
+                    to,
+                    NetMsg::Event {
+                        context: ctx,
+                        event,
+                        bound,
+                    },
+                ) {
+                    log::error!("{}: send event to {to}: {e:#}", self.cfg.me);
+                }
+            }
+            for (to, sync) in out.sync {
+                slot.frames += 1;
+                let _ = self.transport.send(
+                    to,
+                    NetMsg::Sync {
+                        context: ctx,
+                        from: self.cfg.me,
+                        msg: sync,
+                    },
+                );
+            }
+            for (kind, record) in out.results {
+                slot.frames += 1;
+                let _ = self.transport.send(
+                    LEADER,
+                    NetMsg::Control(ControlMsg::Result {
+                        context: ctx,
+                        kind,
+                        record,
+                    }),
+                );
+            }
         }
         for op in self.space.drain_outbox() {
             for peer in self.transport.agents() {
@@ -478,7 +589,9 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
 }
 
 /// Encode engine statistics for the FinalStats control message.
-pub fn engine_stats_json(s: &EngineStats, lvt_s: f64) -> Json {
+/// `wire_frames` is the agent-level frame counter for the context (the
+/// engine itself never sees frames).
+pub fn engine_stats_json(s: &EngineStats, lvt_s: f64, wire_frames: u64) -> Json {
     Json::obj(vec![
         ("events_processed", Json::num(s.events_processed as f64)),
         ("events_sent_local", Json::num(s.events_sent_local as f64)),
@@ -498,6 +611,7 @@ pub fn engine_stats_json(s: &EngineStats, lvt_s: f64) -> Json {
         ("window_timestamps", Json::num(s.window_timestamps as f64)),
         ("max_window_events", Json::num(s.max_window_events as f64)),
         ("events_rejected", Json::num(s.events_rejected as f64)),
+        ("wire_frames", Json::num(wire_frames as f64)),
         ("lvt", Json::num(lvt_s)),
     ])
 }
@@ -518,6 +632,7 @@ pub fn stats_from_json(j: &Json) -> Option<HostStatsView> {
             .get("window_timestamps")
             .and_then(Json::as_u64)
             .unwrap_or(0),
+        wire_frames: j.get("wire_frames").and_then(Json::as_u64).unwrap_or(0),
         lvt_s: j.get("lvt")?.as_f64()?,
     })
 }
@@ -533,6 +648,9 @@ pub struct HostStatsView {
     pub max_queue_len: usize,
     pub windows: u64,
     pub window_timestamps: u64,
+    /// Wire frames the agent emitted for the context (WindowBatch +
+    /// WindowReport under batching; one per message on the legacy path).
+    pub wire_frames: u64,
     pub lvt_s: f64,
 }
 

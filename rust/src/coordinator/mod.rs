@@ -56,6 +56,11 @@ pub struct RunReport {
     pub transfers_completed: usize,
     /// Safe windows executed fleet-wide (0 under per-timestamp mode).
     pub windows: u64,
+    /// Wire frames the fleet emitted (WindowBatch + WindowReport under
+    /// batching; one per message on the legacy path).  `wire_frames /
+    /// windows` is the frames-per-window metric — O(peers) when batching,
+    /// O(messages) without.
+    pub wire_frames: u64,
     /// All records published by LPs during the run.
     pub pool: ResultPool,
     /// Final per-agent statistics.
@@ -82,26 +87,43 @@ impl RunReport {
 
     /// Deterministic digest of the run's *virtual-time* results.  Identical
     /// across execution modes (safe-window vs per-timestamp), worker
-    /// counts, sync protocols, and placement policies by the determinism
-    /// contract; deliberately excludes wall-clock and synchronization
-    /// counters, which legitimately vary with real-time scheduling.
+    /// counts, sync protocols, placement policies — and transports — by
+    /// the determinism contract; deliberately excludes wall-clock and
+    /// synchronization counters, which legitimately vary with real-time
+    /// scheduling.
     pub fn determinism_fingerprint(&self) -> String {
-        let kinds: Vec<String> = self
-            .pool
-            .kind_counts()
-            .into_iter()
-            .map(|(k, n)| format!("{k}:{n}"))
-            .collect();
-        format!(
-            "events={} remote={} jobs={} transfers={} makespan={:.9} kinds=[{}]",
+        fingerprint_parts(
             self.events_processed,
             self.remote_events,
             self.jobs_completed,
             self.transfers_completed,
             self.makespan_s,
-            kinds.join(",")
+            &self.pool.kind_counts(),
         )
     }
+}
+
+/// Canonical determinism digest from raw parts — shared by
+/// [`RunReport::determinism_fingerprint`] and cross-transport test drivers
+/// that assemble the same digest from control-plane messages (FinalStats
+/// counters + collected result records) instead of a `RunReport`.
+pub fn fingerprint_parts(
+    events_processed: u64,
+    remote_events: u64,
+    jobs: usize,
+    transfers: usize,
+    makespan_s: f64,
+    kind_counts: &BTreeMap<String, usize>,
+) -> String {
+    let kinds: Vec<String> = kind_counts
+        .iter()
+        .map(|(k, n)| format!("{k}:{n}"))
+        .collect();
+    format!(
+        "events={events_processed} remote={remote_events} jobs={jobs} \
+         transfers={transfers} makespan={makespan_s:.9} kinds=[{}]",
+        kinds.join(",")
+    )
 }
 
 /// Builder for an in-process deployment of N agents + a leader.
@@ -114,9 +136,13 @@ pub struct Deployment {
     backend_kind: BackendKind,
     artifacts_dir: PathBuf,
     seed: u64,
+    /// Window-batched wire protocol (one frame per peer per flush).
+    wire_batch: bool,
     /// Safety valve for runaway runs.
     max_wall: Duration,
-    /// Probe cadence for termination detection.
+    /// GVT probe *fallback* cadence: rounds normally trigger on pushed
+    /// window-completion notifications; the timer only retries lost
+    /// replies and bounds termination latency once the fleet goes quiet.
     probe_every: Duration,
 }
 
@@ -132,6 +158,7 @@ impl Deployment {
             backend_kind: BackendKind::Native,
             artifacts_dir: PathBuf::from("artifacts"),
             seed: 1,
+            wire_batch: true,
             max_wall: Duration::from_secs(600),
             probe_every: Duration::from_millis(2),
         }
@@ -148,8 +175,9 @@ impl Deployment {
             backend_kind: cfg.deploy.backend,
             artifacts_dir: PathBuf::from(&cfg.deploy.artifacts_dir),
             seed: cfg.workload.seed,
+            wire_batch: cfg.deploy.wire_batch,
             max_wall: Duration::from_secs(600),
-            probe_every: Duration::from_millis(2),
+            probe_every: Duration::from_millis(cfg.deploy.probe_fallback_ms.max(1)),
         }
     }
 
@@ -183,6 +211,19 @@ impl Deployment {
 
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
+        self
+    }
+
+    /// Toggle the window-batched wire protocol (default on); `false`
+    /// restores the legacy one-frame-per-message protocol.
+    pub fn wire_batching(mut self, on: bool) -> Self {
+        self.wire_batch = on;
+        self
+    }
+
+    /// GVT probe fallback cadence (see `probe_every`).
+    pub fn probe_fallback(mut self, d: Duration) -> Self {
+        self.probe_every = d;
         self
     }
 
@@ -239,6 +280,7 @@ impl Deployment {
                 protocol: self.protocol,
                 workers: self.workers,
                 exec: self.exec,
+                wire_batch: self.wire_batch,
             };
             let backend = Arc::clone(&backend);
             handles.push(
@@ -403,13 +445,17 @@ impl Deployment {
                     active
                 );
             }
-            // Self-clocked probing: fire the next round as soon as the
-            // previous completes (GVT latency tracks message latency, not a
-            // timer); the cadence is only a retry for lost replies.
+            // Window-aware probing: a round fires when the previous one's
+            // replies are in AND an agent pushed a window-completion
+            // notification since — GVT rounds track *virtual* progress.
+            // The wall-clock cadence survives only as the retry for lost
+            // replies and the latency bound once the fleet goes quiet.
             let cadence_due = last_probe.elapsed() >= self.probe_every;
+            let mut any_round = false;
             for ctx in &active {
                 let st = runs.get_mut(ctx).unwrap();
-                if st.wall_s.is_none() && (st.detector.round_complete() || cadence_due) {
+                if st.wall_s.is_none() && st.detector.should_probe(cadence_due) {
+                    any_round = true;
                     let round = st.detector.start_round();
                     for &a in &agent_ids {
                         leader_ep.send(
@@ -422,7 +468,11 @@ impl Deployment {
                     }
                 }
             }
-            if cadence_due {
+            // Rearm the fallback on *any* round start (not just timer
+            // fires), so a notification-driven round gets a full
+            // `probe_every` to collect replies before the timer barges in
+            // and cancels it with a fresh round.
+            if cadence_due || any_round {
                 last_probe = Instant::now();
             }
             // Drain; spin briefly before a short park — the leader's
@@ -500,6 +550,7 @@ impl Deployment {
             let mut blocked = 0;
             let mut maxq = 0;
             let mut windows = 0;
+            let mut wire_frames = 0;
             let mut per_agent = Vec::new();
             for (a, s) in &st.final_stats {
                 events += s.events_processed;
@@ -508,6 +559,7 @@ impl Deployment {
                 blocked += s.blocked_steps;
                 maxq = maxq.max(s.max_queue_len);
                 windows += s.windows;
+                wire_frames += s.wire_frames;
                 per_agent.push((*a, *s));
             }
             let jobs = st.pool.of_kind("job").len();
@@ -524,6 +576,7 @@ impl Deployment {
                 jobs_completed: jobs,
                 transfers_completed: transfers,
                 windows,
+                wire_frames,
                 pool: st.pool,
                 per_agent,
                 placements: placements_all[i]
@@ -543,8 +596,19 @@ impl Deployment {
     ) {
         match msg {
             NetMsg::Control(ControlMsg::Result { context, kind, record }) => {
+                // Legacy per-record frame (wire batching off / old agents).
                 if let Some(st) = runs.get_mut(&context) {
                     st.pool.push(&kind, record);
+                }
+            }
+            NetMsg::Control(ControlMsg::WindowReport { context, records, .. }) => {
+                if let Some(st) = runs.get_mut(&context) {
+                    for (kind, record) in records {
+                        st.pool.push(&kind, record);
+                    }
+                    // Window completed somewhere: let the detector trigger
+                    // the next GVT probe round on virtual progress.
+                    st.detector.note_progress();
                 }
             }
             NetMsg::Control(ControlMsg::ProbeReply {

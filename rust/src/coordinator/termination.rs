@@ -12,6 +12,16 @@
 //! progress (windows executed without any remote traffic) therefore
 //! invalidates stability just like in-flight messages do, which keeps the
 //! proven-GVT bound honest under safe-window batch execution.
+//!
+//! Probe *pacing* is window-aware too: agents push window-completion
+//! notifications (`WindowReport` frames), the leader records them with
+//! [`TerminationDetector::note_progress`], and
+//! [`TerminationDetector::should_probe`] starts the next round as soon as
+//! the previous round's replies are in **and** virtual progress happened —
+//! so GVT rounds track virtual progress, not a wall-clock timer.  The
+//! timer survives only as a fallback/retry (lost replies, notification
+//! droughts), and it alone bounds termination latency once the fleet goes
+//! quiet.
 
 use std::collections::BTreeMap;
 
@@ -42,6 +52,10 @@ pub struct TerminationDetector {
     /// increases.
     gvt: Option<f64>,
     last_broadcast_gvt: f64,
+    /// Virtual progress (window completions) observed since the current
+    /// round started; gates notification-driven probing.  Starts `true`
+    /// so the first round fires immediately.
+    progress_pending: bool,
 }
 
 impl TerminationDetector {
@@ -53,6 +67,7 @@ impl TerminationDetector {
             previous: None,
             gvt: None,
             last_broadcast_gvt: f64::NEG_INFINITY,
+            progress_pending: true,
         }
     }
 
@@ -68,10 +83,25 @@ impl TerminationDetector {
         self.round == 0 || self.answers.len() >= self.expected
     }
 
-    /// Begin a new probe round.
+    /// Record a pushed window-completion notification: some agent made
+    /// virtual progress since the current round started.
+    pub fn note_progress(&mut self) {
+        self.progress_pending = true;
+    }
+
+    /// Window-aware probe pacing: start a round when the previous round's
+    /// replies are all in and virtual progress was notified since —
+    /// otherwise only when the wall-clock fallback (`fallback_due`) fires,
+    /// which doubles as the retry for lost replies.
+    pub fn should_probe(&self, fallback_due: bool) -> bool {
+        fallback_due || (self.round_complete() && self.progress_pending)
+    }
+
+    /// Begin a new probe round (consumes the pending progress signal).
     pub fn start_round(&mut self) -> u64 {
         self.round += 1;
         self.answers.clear();
+        self.progress_pending = false;
         self.round
     }
 
@@ -219,6 +249,27 @@ mod tests {
         // Window total unchanged now: stable twice -> terminated.
         let r = d.start_round();
         assert!(d.ingest(r, AgentId(1), with_windows(true, 7)));
+    }
+
+    #[test]
+    fn probes_trigger_on_progress_with_timer_fallback() {
+        let mut d = TerminationDetector::new(1);
+        // Round 0: first probe fires immediately (initial progress).
+        assert!(d.should_probe(false));
+        let r = d.start_round();
+        // Round in flight, no replies yet: neither path probes...
+        assert!(!d.should_probe(false));
+        // ...except the wall-clock fallback (lost-reply retry).
+        assert!(d.should_probe(true));
+        // Round complete but no progress notified: stay quiet.
+        assert!(!d.ingest(r, AgentId(1), ans(false, 1, 0)));
+        assert!(!d.should_probe(false));
+        // A pushed window-completion notification triggers the next round.
+        d.note_progress();
+        assert!(d.should_probe(false));
+        // start_round consumes the signal.
+        d.start_round();
+        assert!(!d.should_probe(false));
     }
 
     #[test]

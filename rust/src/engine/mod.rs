@@ -290,9 +290,36 @@ pub struct Outbox<P> {
     pub results: Vec<(String, Json)>,
 }
 
+/// One peer's share of a window flush: the events bound for that peer in
+/// emission order, followed by the sync messages for that peer.  The unit
+/// the wire layer ships as a single `WindowBatch` frame.
+pub struct PeerBatch<P> {
+    pub events: Vec<Event<P>>,
+    pub sync: Vec<SyncMsg>,
+}
+
 impl<P> Outbox<P> {
     pub fn is_empty(&self) -> bool {
         self.events.is_empty() && self.sync.is_empty() && self.results.is_empty()
+    }
+
+    /// Group the drain per destination peer (preserving per-peer emission
+    /// order for events and sync alike) and split off the published
+    /// results.  One `PeerBatch` becomes one wire frame; the results
+    /// become the window's single leader report.
+    pub fn into_peer_batches(self) -> (BTreeMap<AgentId, PeerBatch<P>>, Vec<(String, Json)>) {
+        let empty = || PeerBatch {
+            events: Vec::new(),
+            sync: Vec::new(),
+        };
+        let mut per: BTreeMap<AgentId, PeerBatch<P>> = BTreeMap::new();
+        for (to, ev) in self.events {
+            per.entry(to).or_insert_with(empty).events.push(ev);
+        }
+        for (to, msg) in self.sync {
+            per.entry(to).or_insert_with(empty).sync.push(msg);
+        }
+        (per, self.results)
     }
 }
 
@@ -1336,6 +1363,80 @@ mod tests {
             .count();
         assert_eq!(announces, 1);
         assert_eq!(e.stats().null_messages_sent, 1);
+    }
+
+    #[test]
+    fn outbox_groups_per_peer_preserving_order() {
+        let a2 = AgentId(2);
+        let a3 = AgentId(3);
+        let ev = |t: f64, seq: u64| Event {
+            time: SimTime::new(t),
+            tie: (1, seq),
+            src_agent: AgentId(1),
+            src_lp: LpId(1),
+            dst_lp: LpId(9),
+            payload: Ping { hops: 0 },
+        };
+        let out = Outbox {
+            events: vec![(a2, ev(3.0, 1)), (a3, ev(1.0, 2)), (a2, ev(2.0, 3))],
+            sync: vec![
+                (a3, SyncMsg::LvtAnnounce { bound: SimTime::new(5.0) }),
+                (a2, SyncMsg::LvtRequest { need: SimTime::new(7.0), lvt: SimTime::new(6.0) }),
+            ],
+            results: vec![("job".into(), Json::num(1.0))],
+        };
+        let (batches, results) = out.into_peer_batches();
+        assert_eq!(results.len(), 1);
+        assert_eq!(batches.len(), 2);
+        let b2 = &batches[&a2];
+        // Emission order kept even when timestamps are not monotone
+        // (aggregated agent channels are not timestamp-ordered).
+        assert_eq!(
+            b2.events.iter().map(|e| e.tie.1).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+        assert_eq!(b2.sync.len(), 1);
+        let b3 = &batches[&a3];
+        assert_eq!(b3.events.len(), 1);
+        assert_eq!(b3.sync.len(), 1);
+    }
+
+    #[test]
+    fn unknown_peer_rejection_is_uniform_across_exec_modes() {
+        // `push_remote` must reject (and count) an unknown-peer event
+        // identically whether the scheduler then runs in safe-window or
+        // per-timestamp mode — and the engine must stay healthy either way.
+        for windowed in [true, false] {
+            let mut e = single_agent_engine();
+            e.add_lp(LpId(1), Box::new(Forwarder { next: LpId(1), delay: 1.0 }));
+            e.receive_remote(Event {
+                time: SimTime::new(1.0),
+                tie: (7, 1),
+                src_agent: AgentId(7), // outside the participant set
+                src_lp: LpId(9),
+                dst_lp: LpId(1),
+                payload: Ping { hops: 0 },
+            });
+            assert_eq!(e.stats().events_rejected, 1, "windowed={windowed}");
+            assert!(e.is_idle(), "rejected event must not be queued");
+            if windowed {
+                assert_eq!(e.advance_window(usize::MAX), WindowOutcome::Idle);
+            } else {
+                assert_eq!(e.step(), StepOutcome::Idle);
+            }
+            assert_eq!(e.stats().events_processed, 0, "windowed={windowed}");
+            // A legitimate event afterwards still executes normally.
+            e.schedule_initial(SimTime::new(2.0), LpId(1), Ping { hops: 0 });
+            if windowed {
+                assert!(matches!(
+                    e.advance_window(usize::MAX),
+                    WindowOutcome::Processed { events: 1, .. }
+                ));
+            } else {
+                assert_eq!(e.step(), StepOutcome::Processed(1));
+            }
+            assert_eq!(e.stats().events_rejected, 1);
+        }
     }
 
     #[test]

@@ -55,6 +55,8 @@ USAGE:
   dsim demo
   dsim sweep-bandwidth <mbps> [<mbps> ...]
   dsim agent --me <id> --bind <addr> --peers <id=addr,id=addr,...>
+             [--lookahead s] [--workers n] [--exec window|step]
+             [--max-frame-mib n] [--no-wire-batch]
   dsim check-artifacts [dir]
 "
     );
@@ -159,9 +161,21 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         .map(|s| s.parse().map_err(anyhow::Error::msg))
         .transpose()?
         .unwrap_or_default();
+    let max_frame_mib: usize = get("--max-frame-mib")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(dsim::transport::DEFAULT_MAX_FRAME_BYTES >> 20);
+    anyhow::ensure!(
+        (1..=usize::MAX >> 20).contains(&max_frame_mib),
+        "--max-frame-mib must be in 1..={} (MiB shifted to bytes must fit usize)",
+        usize::MAX >> 20
+    );
+    // Legacy one-frame-per-message wire protocol (mixed fleets, baselines).
+    let wire_batch = !args.iter().any(|a| a == "--no-wire-batch");
     let peer_ids: Vec<AgentId> = peers.keys().copied().filter(|a| a.raw() != 0).collect();
 
-    let transport: TcpTransport<Payload> = TcpTransport::bind(me, bind, peers)?;
+    let transport: TcpTransport<Payload> =
+        TcpTransport::bind_with(me, bind, peers, max_frame_mib << 20)?;
     let backend = std::sync::Arc::new(ComputeBackend::auto(Path::new("artifacts")));
     let cfg = AgentConfig {
         me,
@@ -170,6 +184,7 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         protocol: Default::default(),
         workers,
         exec,
+        wire_batch,
     };
     println!("agent {me} listening on {bind}");
     AgentRuntime::new(cfg, transport, backend).run();

@@ -12,6 +12,37 @@
 //! Both implement [`Transport`], so the engine/agent layers are agnostic.
 //! Channels are FIFO per (src, dst) pair — the property the conservative
 //! protocol relies on (a channel's head timestamp bounds the channel).
+//!
+//! ## Window-batched frame schema
+//!
+//! Safe-window execution flushes an engine's outbox once per window, so the
+//! wire protocol batches at the same granularity: a flush produces **one
+//! [`NetMsg::WindowBatch`] frame per destination peer**, carrying every
+//! event of the window bound for that peer (in emission order), the
+//! window's sync messages for that peer, and a single piggybacked promise
+//! (`bound`) applied *after* the frame's events — plus at most **one
+//! [`ControlMsg::WindowReport`] frame to the leader** carrying the window's
+//! published result records and the sender's cumulative executed-window
+//! count (the leader's GVT progress signal).  Frames per window are
+//! therefore O(peers), not O(messages).
+//!
+//! The atomic frame is what makes the single trailing `bound` sound: the
+//! receiver ingests the frame's events before observing the promise, and
+//! every *future* send to that peer is ≥ the post-drain bound by the same
+//! argument that justifies [`LvtAnnounce`](crate::engine::SyncMsg)
+//! bounds.  A `WindowBatch` whose encoding exceeds the frame-size limit is
+//! split transparently; non-final chunks carry no sync flush and no bound,
+//! so promise ordering survives the split.
+//!
+//! The pre-batch frames (`event`, `sync`, one frame per message) remain
+//! fully supported: they are still emitted when wire batching is disabled
+//! (`deploy.wire_batch = false`) and always decode, so mixed old/new
+//! fleets interoperate.
+//!
+//! Frames are length-prefixed (u32, big-endian) and capped at a
+//! configurable limit ([`DEFAULT_MAX_FRAME_BYTES`]); an inbound oversized
+//! frame is drained and skipped — one bad frame never poisons its reader
+//! thread or connection.
 
 use std::collections::HashMap;
 use std::io::{Read, Write as IoWrite};
@@ -88,11 +119,24 @@ pub enum ControlMsg {
         from: AgentId,
         stats: Json,
     },
-    /// Agent -> leader: published simulation result record.
+    /// Agent -> leader: published simulation result record (pre-batch
+    /// frame; still accepted, and emitted when wire batching is off).
     Result {
         context: ContextId,
         kind: String,
         record: Json,
+    },
+    /// Agent -> leader, once per flushed window: every result record the
+    /// window published, plus the sender's cumulative executed-window
+    /// count.  Replaces one `Result` frame per record with one frame per
+    /// window, and doubles as the window-completion notification that
+    /// triggers leader GVT probe rounds on virtual progress.
+    WindowReport {
+        context: ContextId,
+        from: AgentId,
+        /// Total safe windows the sender has executed for the context.
+        windows: u64,
+        records: Vec<(String, Json)>,
     },
     /// Monitoring: an agent's published performance sample.
     PerfSample { from: AgentId, value: f64, load: Json },
@@ -106,10 +150,25 @@ pub enum NetMsg<P> {
     /// A simulation event, carrying the sender's current per-destination
     /// safe bound as a piggybacked null message (classic CMB optimization:
     /// every event refreshes the receiver's LVT-queue entry for free).
+    /// Pre-batch frame: still accepted, and emitted when wire batching is
+    /// off.
     Event {
         context: ContextId,
         event: Event<P>,
         bound: SimTime,
+    },
+    /// One window's traffic to one peer in a single frame: the window's
+    /// events for that peer (in emission order), its sync flush, and the
+    /// sender's post-window promise.  The receiver ingests events, then
+    /// sync, then the bound — so the single trailing promise can never
+    /// undercut an event of its own frame.  `bound` is `None` on non-final
+    /// chunks of a size-split batch.
+    WindowBatch {
+        context: ContextId,
+        from: AgentId,
+        events: Vec<Event<P>>,
+        sync: Vec<SyncMsg>,
+        bound: Option<SimTime>,
     },
     Sync {
         context: ContextId,
@@ -449,6 +508,23 @@ fn control_to_json(c: &ControlMsg) -> Json {
             ("kind", Json::str(kind.clone())),
             ("record", record.clone()),
         ]),
+        WindowReport {
+            context,
+            from,
+            windows,
+            records,
+        } => Json::obj(vec![
+            ("k", Json::str("wreport")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("from", Json::num(from.raw() as f64)),
+            ("win", Json::num(*windows as f64)),
+            (
+                "recs",
+                Json::arr(records.iter().map(|(kind, record)| {
+                    Json::arr([Json::str(kind.clone()), record.clone()])
+                })),
+            ),
+        ]),
         PerfSample { from, value, load } => Json::obj(vec![
             ("k", Json::str("perf")),
             ("from", Json::num(from.raw() as f64)),
@@ -544,6 +620,25 @@ fn control_from_json(j: &Json) -> Result<ControlMsg> {
                 .to_string(),
             record: j.get("record").context("record")?.clone(),
         }),
+        Some("wreport") => {
+            let mut records = Vec::new();
+            for r in j.get("recs").and_then(Json::as_arr).context("recs")? {
+                let pair = r.as_arr().context("record pair")?;
+                if pair.len() != 2 {
+                    bail!("bad record pair {r}");
+                }
+                records.push((
+                    pair[0].as_str().context("record kind")?.to_string(),
+                    pair[1].clone(),
+                ));
+            }
+            Ok(ControlMsg::WindowReport {
+                context: ctx()?,
+                from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+                windows: j.get("win").and_then(Json::as_u64).context("win")?,
+                records,
+            })
+        }
         Some("perf") => Ok(ControlMsg::PerfSample {
             from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
             value: j.get("value").and_then(Json::as_f64).context("value")?,
@@ -567,6 +662,26 @@ pub fn msg_to_json<P: Wire>(m: &NetMsg<P>) -> Json {
             ("ev", event_to_json(event)),
             ("b", time_to_json(*bound)),
         ]),
+        NetMsg::WindowBatch {
+            context,
+            from,
+            events,
+            sync,
+            bound,
+        } => {
+            let mut fields = vec![
+                ("k", Json::str("batch")),
+                ("ctx", Json::num(context.raw() as f64)),
+                ("from", Json::num(from.raw() as f64)),
+                ("evs", Json::arr(events.iter().map(event_to_json))),
+                ("sync", Json::arr(sync.iter().map(sync_to_json))),
+            ];
+            // Absent key = no promise (non-final split chunk).
+            if let Some(b) = bound {
+                fields.push(("b", time_to_json(*b)));
+            }
+            Json::obj(fields)
+        }
         NetMsg::Sync { context, from, msg } => Json::obj(vec![
             ("k", Json::str("sync")),
             ("ctx", Json::num(context.raw() as f64)),
@@ -587,6 +702,26 @@ pub fn msg_from_json<P: Wire>(j: &Json) -> Result<NetMsg<P>> {
             event: event_from_json(j.get("ev").context("ev")?)?,
             bound: time_from_json(j.get("b").context("b")?)?,
         }),
+        Some("batch") => {
+            let mut events = Vec::new();
+            for e in j.get("evs").and_then(Json::as_arr).context("evs")? {
+                events.push(event_from_json(e)?);
+            }
+            let mut sync = Vec::new();
+            for s in j.get("sync").and_then(Json::as_arr).context("sync")? {
+                sync.push(sync_from_json(s)?);
+            }
+            Ok(NetMsg::WindowBatch {
+                context: ContextId(j.get("ctx").and_then(Json::as_u64).context("ctx")?),
+                from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+                events,
+                sync,
+                bound: match j.get("b") {
+                    Some(b) => Some(time_from_json(b)?),
+                    None => None,
+                },
+            })
+        }
         Some("sync") => Ok(NetMsg::Sync {
             context: ContextId(j.get("ctx").and_then(Json::as_u64).context("ctx")?),
             from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
@@ -606,6 +741,16 @@ pub fn msg_from_json<P: Wire>(j: &Json) -> Result<NetMsg<P>> {
 // TCP transport
 // ---------------------------------------------------------------------------
 
+/// Default ceiling on a single length-prefixed frame, in bytes.  Window
+/// batching concentrates a whole window's traffic into one frame, so the
+/// default is generous; the limit exists so a corrupt length prefix can
+/// never make a reader allocate gigabytes.  Configurable per endpoint via
+/// [`TcpTransport::bind_with`] / `dsim agent --max-frame-mib` (the
+/// `deploy.max_frame_mib` config knob records the fleet-wide value, which
+/// must match on every agent); outbound `WindowBatch` frames above the
+/// limit are split, inbound oversized frames are drained and skipped.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 64 << 20;
+
 /// Length-prefixed frame I/O.
 fn write_frame(stream: &mut TcpStream, bytes: &[u8]) -> Result<()> {
     let len = (bytes.len() as u32).to_be_bytes();
@@ -615,16 +760,38 @@ fn write_frame(stream: &mut TcpStream, bytes: &[u8]) -> Result<()> {
     Ok(())
 }
 
-fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+/// Read one frame, enforcing `max_bytes`.  An oversized frame is *skipped*,
+/// not fatal: its body is drained from the stream (keeping frame alignment)
+/// and `Ok(None)` is returned, so one bad frame costs its own payload but
+/// never poisons the reader thread or the connection behind it.
+///
+/// A skipped frame can only occur with mismatched per-agent limits (the
+/// sender splits against its *own* limit) or a corrupt peer.  Dropped
+/// event frames are not silent corruption: the double-count termination
+/// protocol sees sent != received forever and the run fails loudly at
+/// `max_wall` instead of terminating with wrong results.
+fn read_frame(stream: &mut TcpStream, max_bytes: usize) -> Result<Option<Vec<u8>>> {
     let mut len = [0u8; 4];
     stream.read_exact(&mut len)?;
     let n = u32::from_be_bytes(len) as usize;
-    if n > 64 << 20 {
-        bail!("frame too large: {n}");
+    if n > max_bytes {
+        log::error!(
+            "skipping oversized frame: {n} bytes > {max_bytes} limit \
+             (mismatched --max-frame-mib across the fleet? dropped events \
+             will stall termination)"
+        );
+        let mut chunk = [0u8; 8192];
+        let mut remaining = n;
+        while remaining > 0 {
+            let take = remaining.min(chunk.len());
+            stream.read_exact(&mut chunk[..take])?;
+            remaining -= take;
+        }
+        return Ok(None);
     }
     let mut buf = vec![0u8; n];
     stream.read_exact(&mut buf)?;
-    Ok(buf)
+    Ok(Some(buf))
 }
 
 /// TCP endpoint: one listener for inbound peers, one persistent outbound
@@ -633,6 +800,7 @@ fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
 pub struct TcpTransport<P> {
     me: AgentId,
     peers: HashMap<AgentId, SocketAddr>,
+    max_frame: usize,
     outbound: Mutex<HashMap<AgentId, TcpStream>>,
     inbox: Mutex<Receiver<NetMsg<P>>>,
     inbox_tx: Sender<NetMsg<P>>,
@@ -641,14 +809,38 @@ pub struct TcpTransport<P> {
 
 impl<P: Wire + Send + 'static> TcpTransport<P> {
     /// Bind `bind_addr` for `me` and remember the full peer address map
-    /// (including self).
+    /// (including self).  Uses the default frame-size limit.
     pub fn bind(
         me: AgentId,
         bind_addr: SocketAddr,
         peers: HashMap<AgentId, SocketAddr>,
     ) -> Result<Self> {
+        Self::bind_with(me, bind_addr, peers, DEFAULT_MAX_FRAME_BYTES)
+    }
+
+    /// [`bind`](Self::bind) with an explicit frame-size limit in bytes.
+    pub fn bind_with(
+        me: AgentId,
+        bind_addr: SocketAddr,
+        peers: HashMap<AgentId, SocketAddr>,
+        max_frame: usize,
+    ) -> Result<Self> {
         let listener =
             TcpListener::bind(bind_addr).with_context(|| format!("bind {bind_addr} for {me}"))?;
+        Self::from_listener(me, listener, peers, max_frame)
+    }
+
+    /// Build an endpoint from an already-bound listener.  Lets callers use
+    /// OS-assigned ports: bind `127.0.0.1:0` listeners first, collect their
+    /// `local_addr()`s into the peer map, then construct every endpoint —
+    /// the pattern the cross-transport test suite uses to avoid port
+    /// collisions.
+    pub fn from_listener(
+        me: AgentId,
+        listener: TcpListener,
+        peers: HashMap<AgentId, SocketAddr>,
+        max_frame: usize,
+    ) -> Result<Self> {
         let (tx, rx) = channel();
         let tx_accept = tx.clone();
         let handle = std::thread::Builder::new()
@@ -658,8 +850,10 @@ impl<P: Wire + Send + 'static> TcpTransport<P> {
                     let Ok(mut stream) = stream else { break };
                     let tx = tx_accept.clone();
                     std::thread::spawn(move || loop {
-                        match read_frame(&mut stream) {
-                            Ok(bytes) => {
+                        match read_frame(&mut stream, max_frame) {
+                            // Oversized frame skipped; connection still good.
+                            Ok(None) => continue,
+                            Ok(Some(bytes)) => {
                                 let Ok(text) = std::str::from_utf8(&bytes) else { break };
                                 match Json::parse(text)
                                     .map_err(anyhow::Error::from)
@@ -684,6 +878,7 @@ impl<P: Wire + Send + 'static> TcpTransport<P> {
         Ok(TcpTransport {
             me,
             peers,
+            max_frame,
             outbound: Mutex::new(HashMap::new()),
             inbox: Mutex::new(rx),
             inbox_tx: tx,
@@ -712,6 +907,96 @@ impl<P: Wire + Send + 'static> TcpTransport<P> {
         }
         Err(anyhow!("connect {to} at {addr}: {last:?}"))
     }
+
+    /// Encode and transmit one frame, splitting over-limit batch frames
+    /// into smaller chunks: a [`NetMsg::WindowBatch`] by halving its event
+    /// list (non-final chunks carry no sync flush and no bound, so the
+    /// promise stays behind every event it covers), a
+    /// [`ControlMsg::WindowReport`] by halving its record list (the
+    /// cumulative window count is idempotent).  Anything else over the
+    /// limit is a hard error — the receiver would drain and drop it
+    /// anyway.
+    fn send_framed(&self, to: AgentId, msg: NetMsg<P>) -> Result<()> {
+        let text = msg_to_json(&msg).to_string();
+        if text.len() > self.max_frame {
+            match msg {
+                NetMsg::WindowBatch {
+                    context,
+                    from,
+                    mut events,
+                    sync,
+                    bound,
+                } if events.len() > 1 => {
+                    let tail = events.split_off(events.len() / 2);
+                    self.send_framed(
+                        to,
+                        NetMsg::WindowBatch {
+                            context,
+                            from,
+                            events,
+                            sync: Vec::new(),
+                            bound: None,
+                        },
+                    )?;
+                    return self.send_framed(
+                        to,
+                        NetMsg::WindowBatch {
+                            context,
+                            from,
+                            events: tail,
+                            sync,
+                            bound,
+                        },
+                    );
+                }
+                NetMsg::Control(ControlMsg::WindowReport {
+                    context,
+                    from,
+                    windows,
+                    mut records,
+                }) if records.len() > 1 => {
+                    let tail = records.split_off(records.len() / 2);
+                    self.send_framed(
+                        to,
+                        NetMsg::Control(ControlMsg::WindowReport {
+                            context,
+                            from,
+                            windows,
+                            records,
+                        }),
+                    )?;
+                    return self.send_framed(
+                        to,
+                        NetMsg::Control(ControlMsg::WindowReport {
+                            context,
+                            from,
+                            windows,
+                            records: tail,
+                        }),
+                    );
+                }
+                _ => bail!(
+                    "frame too large: {} bytes > {} limit (unsplittable)",
+                    text.len(),
+                    self.max_frame
+                ),
+            }
+        }
+        let mut outbound = self.outbound.lock().unwrap();
+        if !outbound.contains_key(&to) {
+            let s = self.connect(to)?;
+            outbound.insert(to, s);
+        }
+        let stream = outbound.get_mut(&to).unwrap();
+        if let Err(e) = write_frame(stream, text.as_bytes()) {
+            // One reconnect attempt on a stale socket.
+            log::warn!("resend to {to} after {e}");
+            let mut s = self.connect(to)?;
+            write_frame(&mut s, text.as_bytes())?;
+            outbound.insert(to, s);
+        }
+        Ok(())
+    }
 }
 
 impl<P: Wire + Clone + Send + 'static> Transport<P> for TcpTransport<P> {
@@ -733,21 +1018,7 @@ impl<P: Wire + Clone + Send + 'static> Transport<P> for TcpTransport<P> {
                 .map_err(|_| anyhow!("self inbox closed"))?;
             return Ok(());
         }
-        let text = msg_to_json(&msg).to_string();
-        let mut outbound = self.outbound.lock().unwrap();
-        if !outbound.contains_key(&to) {
-            let s = self.connect(to)?;
-            outbound.insert(to, s);
-        }
-        let stream = outbound.get_mut(&to).unwrap();
-        if let Err(e) = write_frame(stream, text.as_bytes()) {
-            // One reconnect attempt on a stale socket.
-            log::warn!("resend to {to} after {e}");
-            let mut s = self.connect(to)?;
-            write_frame(&mut s, text.as_bytes())?;
-            outbound.insert(to, s);
-        }
-        Ok(())
+        self.send_framed(to, msg)
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Option<NetMsg<P>> {
@@ -858,12 +1129,366 @@ mod tests {
                 context: ContextId(1),
                 gvt: SimTime::new(4.5),
             },
+            ControlMsg::WindowReport {
+                context: ContextId(3),
+                from: AgentId(2),
+                windows: 9,
+                records: vec![
+                    ("job".into(), Json::num(1.0)),
+                    ("transfer".into(), Json::obj(vec![("mb", Json::num(2.0))])),
+                ],
+            },
+            ControlMsg::WindowReport {
+                context: ContextId(3),
+                from: AgentId(2),
+                windows: 10,
+                records: vec![], // progress-only notification
+            },
             ControlMsg::Shutdown,
         ];
         for m in msgs {
             let j = control_to_json(&m);
             assert_eq!(control_from_json(&j).unwrap(), m);
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Property-style codec coverage (satellite: every NetMsg variant,
+    // including WindowBatch and the legacy pre-batch frames, through the
+    // full encode -> serialize -> parse -> decode -> re-encode cycle).
+    // ------------------------------------------------------------------
+
+    use crate::util::Pcg32;
+
+    fn rand_time(rng: &mut Pcg32) -> SimTime {
+        match rng.below(10) {
+            0 => SimTime::INF,
+            1 => SimTime::NEG_INF,
+            _ => SimTime::new(rng.uniform(0.0, 1e6)),
+        }
+    }
+
+    fn rand_event(rng: &mut Pcg32) -> Event<u32> {
+        Event {
+            time: SimTime::new(rng.uniform(0.0, 1e6)),
+            tie: (rng.below(8), rng.next_u32() as u64),
+            src_agent: AgentId(rng.below(8)),
+            src_lp: LpId(rng.below(64)),
+            dst_lp: LpId(rng.below(64)),
+            payload: rng.next_u32(),
+        }
+    }
+
+    fn rand_sync(rng: &mut Pcg32) -> SyncMsg {
+        if rng.chance(0.5) {
+            SyncMsg::LvtRequest {
+                need: rand_time(rng),
+                lvt: rand_time(rng),
+            }
+        } else {
+            SyncMsg::LvtAnnounce { bound: rand_time(rng) }
+        }
+    }
+
+    fn rand_json(rng: &mut Pcg32) -> Json {
+        Json::obj(vec![
+            ("x", Json::num(rng.uniform(-10.0, 10.0))),
+            ("s", Json::str(format!("v{}", rng.below(100)))),
+        ])
+    }
+
+    fn rand_control(rng: &mut Pcg32) -> ControlMsg {
+        let ctx = ContextId(rng.below(4));
+        match rng.below(13) {
+            0 => ControlMsg::DeployLp {
+                context: ctx,
+                lp: LpId(rng.below(64)),
+                kind: format!("kind{}", rng.below(4)),
+                params: rand_json(rng),
+            },
+            1 => ControlMsg::RoutingTable {
+                context: ctx,
+                routes: (0..rng.below(5))
+                    .map(|i| (LpId(i), AgentId(rng.below(4))))
+                    .collect(),
+            },
+            2 => ControlMsg::Bootstrap {
+                context: ctx,
+                time: rand_time(rng),
+                dst: LpId(rng.below(64)),
+                payload: rand_json(rng),
+            },
+            3 => ControlMsg::StartRun {
+                context: ctx,
+                participants: (1..=rng.below(5) + 1).map(AgentId).collect(),
+            },
+            4 => ControlMsg::Probe {
+                context: ctx,
+                round: rng.below(100),
+            },
+            5 => ControlMsg::ProbeReply {
+                context: ctx,
+                round: rng.below(100),
+                from: AgentId(rng.below(8)),
+                idle: rng.chance(0.5),
+                sent: rng.below(1000),
+                received: rng.below(1000),
+                lvt: rand_time(rng),
+                next_event: rand_time(rng),
+                windows: rng.below(1000),
+            },
+            6 => ControlMsg::GvtUpdate {
+                context: ctx,
+                gvt: rand_time(rng),
+            },
+            7 => ControlMsg::EndRun { context: ctx },
+            8 => ControlMsg::FinalStats {
+                context: ctx,
+                from: AgentId(rng.below(8)),
+                stats: rand_json(rng),
+            },
+            9 => ControlMsg::Result {
+                context: ctx,
+                kind: format!("kind{}", rng.below(4)),
+                record: rand_json(rng),
+            },
+            10 => ControlMsg::WindowReport {
+                context: ctx,
+                from: AgentId(rng.below(8)),
+                windows: rng.below(10_000),
+                records: (0..rng.below(4))
+                    .map(|_| (format!("k{}", rng.below(3)), rand_json(rng)))
+                    .collect(),
+            },
+            11 => ControlMsg::PerfSample {
+                from: AgentId(rng.below(8)),
+                value: rng.uniform(0.0, 10.0),
+                load: rand_json(rng),
+            },
+            _ => ControlMsg::Shutdown,
+        }
+    }
+
+    fn rand_msg(rng: &mut Pcg32) -> NetMsg<u32> {
+        let ctx = ContextId(rng.below(4));
+        match rng.below(5) {
+            0 => NetMsg::Event {
+                context: ctx,
+                event: rand_event(rng),
+                bound: rand_time(rng),
+            },
+            1 => NetMsg::WindowBatch {
+                context: ctx,
+                from: AgentId(rng.below(8)),
+                events: (0..rng.below(6)).map(|_| rand_event(rng)).collect(),
+                sync: (0..rng.below(4)).map(|_| rand_sync(rng)).collect(),
+                bound: if rng.chance(0.7) {
+                    Some(rand_time(rng))
+                } else {
+                    None // non-final split chunk
+                },
+            },
+            2 => NetMsg::Sync {
+                context: ctx,
+                from: AgentId(rng.below(8)),
+                msg: rand_sync(rng),
+            },
+            3 => NetMsg::Space(crate::space::SpaceMsg::Remove {
+                key: format!("key{}", rng.below(10)),
+                version: rng.below(100),
+            }),
+            _ => NetMsg::Control(rand_control(rng)),
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_property_every_variant() {
+        crate::testkit::check("netmsg wire roundtrip", 300, |rng| {
+            let msg = rand_msg(rng);
+            // The full wire cycle: encode, serialize, parse, decode,
+            // re-encode.  Byte-identical re-encoding implies the decode
+            // lost nothing (serialization is deterministic).
+            let text = msg_to_json(&msg).to_string();
+            let parsed = Json::parse(&text).map_err(|e| format!("parse: {e}"))?;
+            let back: NetMsg<u32> =
+                msg_from_json(&parsed).map_err(|e| format!("decode {text}: {e:#}"))?;
+            let text2 = msg_to_json(&back).to_string();
+            if text == text2 {
+                Ok(())
+            } else {
+                Err(format!("re-encode mismatch:\n  {text}\n  {text2}"))
+            }
+        });
+    }
+
+    #[test]
+    fn legacy_pre_batch_frames_still_decode() {
+        // Exact pre-batch wire frames (one frame per message): the new
+        // codec must accept them verbatim so mixed fleets interoperate.
+        let event = r#"{"k":"event","ctx":1,"ev":{"t":9,"tie0":1,"tie1":1,"sa":1,"sl":1,"dl":2,"p":7},"b":9}"#;
+        match msg_from_json::<u32>(&Json::parse(event).unwrap()).unwrap() {
+            NetMsg::Event { event, bound, .. } => {
+                assert_eq!(event.payload, 7);
+                assert_eq!(bound, SimTime::new(9.0));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let sync = r#"{"k":"sync","ctx":1,"from":2,"msg":{"k":"ann","bound":"inf"}}"#;
+        match msg_from_json::<u32>(&Json::parse(sync).unwrap()).unwrap() {
+            NetMsg::Sync {
+                msg: SyncMsg::LvtAnnounce { bound },
+                from,
+                ..
+            } => {
+                assert_eq!(bound, SimTime::INF);
+                assert_eq!(from, AgentId(2));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Pre-window ProbeReply without the "win" field defaults to 0.
+        let reply = r#"{"k":"control","c":{"k":"probe-reply","ctx":1,"round":3,"from":2,"idle":true,"sent":4,"received":4,"lvt":1.5,"next":"inf"}}"#;
+        match msg_from_json::<u32>(&Json::parse(reply).unwrap()).unwrap() {
+            NetMsg::Control(ControlMsg::ProbeReply { windows, round, .. }) => {
+                assert_eq!(windows, 0);
+                assert_eq!(round, 3);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // A batch frame without "b" (non-final split chunk): bound = None.
+        let chunk = r#"{"k":"batch","ctx":1,"from":2,"evs":[],"sync":[]}"#;
+        match msg_from_json::<u32>(&Json::parse(chunk).unwrap()).unwrap() {
+            NetMsg::WindowBatch { bound, events, .. } => {
+                assert!(bound.is_none());
+                assert!(events.is_empty());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Garbage frames are rejected, not panicked on.
+        assert!(msg_from_json::<u32>(&Json::parse(r#"{"k":"bogus"}"#).unwrap()).is_err());
+    }
+
+    // ------------------------------------------------------------------
+    // Frame-size limit: oversized frames fail cleanly on both sides.
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn read_frame_skips_oversized_and_recovers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (mut server, _) = listener.accept().unwrap();
+        write_frame(&mut client, &[b'x'; 100]).unwrap();
+        write_frame(&mut client, b"ok").unwrap();
+        // The 100-byte frame exceeds the limit: skipped (drained), and the
+        // next frame on the same stream still reads correctly.
+        assert!(read_frame(&mut server, 16).unwrap().is_none());
+        assert_eq!(read_frame(&mut server, 16).unwrap().unwrap(), b"ok");
+    }
+
+    #[test]
+    fn oversized_inbound_frame_does_not_poison_reader() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peers: HashMap<AgentId, SocketAddr> = [(AgentId(1), addr)].into_iter().collect();
+        let t: TcpTransport<u32> =
+            TcpTransport::from_listener(AgentId(1), listener, peers, 1024).unwrap();
+        // A rogue peer writes an oversized frame, then a valid one, on the
+        // same connection: the reader thread must survive and deliver the
+        // valid message.
+        let mut rogue = TcpStream::connect(addr).unwrap();
+        write_frame(&mut rogue, &[b'x'; 4096]).unwrap();
+        let valid: NetMsg<u32> = NetMsg::Control(ControlMsg::Shutdown);
+        write_frame(&mut rogue, msg_to_json(&valid).to_string().as_bytes()).unwrap();
+        assert!(matches!(
+            t.recv_timeout(Duration::from_secs(5)).unwrap(),
+            NetMsg::Control(ControlMsg::Shutdown)
+        ));
+    }
+
+    #[test]
+    fn oversized_window_batch_splits_and_reassembles() {
+        // Two endpoints with a tiny frame limit: a large batch must arrive
+        // complete, in order, as several chunks, with the sync flush and
+        // the promise riding only the final chunk.
+        let (l1, l2) = (
+            TcpListener::bind("127.0.0.1:0").unwrap(),
+            TcpListener::bind("127.0.0.1:0").unwrap(),
+        );
+        let peers: HashMap<AgentId, SocketAddr> = [
+            (AgentId(1), l1.local_addr().unwrap()),
+            (AgentId(2), l2.local_addr().unwrap()),
+        ]
+        .into_iter()
+        .collect();
+        let t1: TcpTransport<u32> =
+            TcpTransport::from_listener(AgentId(1), l1, peers.clone(), 256).unwrap();
+        let t2: TcpTransport<u32> =
+            TcpTransport::from_listener(AgentId(2), l2, peers, 256).unwrap();
+        let events: Vec<Event<u32>> = (0..8u64)
+            .map(|i| Event {
+                time: SimTime::new(i as f64),
+                tie: (1, i),
+                src_agent: AgentId(1),
+                src_lp: LpId(1),
+                dst_lp: LpId(2),
+                payload: i as u32,
+            })
+            .collect();
+        t1.send(
+            AgentId(2),
+            NetMsg::WindowBatch {
+                context: ContextId(1),
+                from: AgentId(1),
+                events,
+                sync: vec![SyncMsg::LvtAnnounce { bound: SimTime::new(99.0) }],
+                bound: Some(SimTime::new(99.0)),
+            },
+        )
+        .unwrap();
+        let mut got = Vec::new();
+        let mut bounds = Vec::new();
+        let mut syncs = 0;
+        while got.len() < 8 {
+            match t2.recv_timeout(Duration::from_secs(5)).expect("batch chunk") {
+                NetMsg::WindowBatch { events, sync, bound, .. } => {
+                    got.extend(events.into_iter().map(|e| e.payload));
+                    syncs += sync.len();
+                    bounds.push(bound);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(got, (0..8u32).collect::<Vec<_>>());
+        assert!(bounds.len() > 1, "batch should have split");
+        assert!(bounds.last().unwrap().is_some(), "final chunk carries the bound");
+        assert!(bounds[..bounds.len() - 1].iter().all(Option::is_none));
+        assert_eq!(syncs, 1, "sync flush rides the final chunk only");
+    }
+
+    #[test]
+    fn unsplittable_oversized_frame_errors_on_send() {
+        let (l1, l2) = (
+            TcpListener::bind("127.0.0.1:0").unwrap(),
+            TcpListener::bind("127.0.0.1:0").unwrap(),
+        );
+        let peers: HashMap<AgentId, SocketAddr> = [
+            (AgentId(1), l1.local_addr().unwrap()),
+            (AgentId(2), l2.local_addr().unwrap()),
+        ]
+        .into_iter()
+        .collect();
+        let t1: TcpTransport<u32> =
+            TcpTransport::from_listener(AgentId(1), l1, peers.clone(), 64).unwrap();
+        let _t2: TcpTransport<u32> =
+            TcpTransport::from_listener(AgentId(2), l2, peers, 64).unwrap();
+        // A control frame cannot be split; over the limit it must error
+        // rather than ship a frame the receiver would drain and drop.
+        let big = ControlMsg::Result {
+            context: ContextId(1),
+            kind: "x".repeat(128),
+            record: Json::Null,
+        };
+        assert!(t1.send(AgentId(2), NetMsg::Control(big)).is_err());
     }
 
     #[test]

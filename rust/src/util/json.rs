@@ -21,13 +21,21 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-/// Parse error with byte offset for diagnostics.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+/// Parse error with byte offset for diagnostics.  (Display/Error are
+/// hand-rolled: the offline crate snapshot has no `thiserror`.)
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---------------------------------------------------------------- accessors

@@ -218,6 +218,116 @@ fn result_pool_survives_save_load() {
     std::fs::remove_file(&path).ok();
 }
 
+#[test]
+fn unknown_peer_events_rejected_in_both_exec_modes() {
+    // Runtime-level companion to the engine's push_remote rejection: an
+    // event whose source agent is outside the context's participant set
+    // must be dropped (never executed) and counted in events_rejected —
+    // identically under safe-window and per-timestamp scheduling.
+    use dsim::coordinator::{AgentConfig, AgentRuntime, LEADER};
+    use dsim::engine::{Event, ExecMode, SimTime};
+    use dsim::model::Payload;
+    use dsim::runtime::ComputeBackend;
+    use dsim::transport::{ControlMsg, InProcNetwork, NetMsg, Transport};
+    use dsim::util::{AgentId, ContextId, LpId};
+    use std::path::Path;
+    use std::sync::Arc;
+
+    for exec in [ExecMode::SafeWindow, ExecMode::PerTimestamp] {
+        let net: InProcNetwork<Payload> = InProcNetwork::new();
+        let leader = net.endpoint(LEADER);
+        let a1 = AgentId(1);
+        let rogue = AgentId(7); // never in any routing table
+        let ep = net.endpoint(a1);
+        let rogue_ep = net.endpoint(rogue);
+        let backend = Arc::new(ComputeBackend::auto(Path::new("artifacts")));
+        let cfg = AgentConfig {
+            me: a1,
+            peers: vec![a1],
+            lookahead: 0.05,
+            protocol: Default::default(),
+            workers: 0,
+            exec,
+            wire_batch: true,
+        };
+        let handle = std::thread::spawn(move || {
+            AgentRuntime::new(cfg, ep, backend).run();
+        });
+
+        let ctx = ContextId(1);
+        // Participant set = {a1}: the routing table names only a1.
+        leader
+            .send(
+                a1,
+                NetMsg::Control(ControlMsg::RoutingTable {
+                    context: ctx,
+                    routes: vec![(LpId(1), a1)],
+                }),
+            )
+            .unwrap();
+        leader
+            .send(
+                a1,
+                NetMsg::Control(ControlMsg::StartRun {
+                    context: ctx,
+                    participants: vec![a1],
+                }),
+            )
+            .unwrap();
+        // Rogue event for the context from outside the participant set.
+        rogue_ep
+            .send(
+                a1,
+                NetMsg::Event {
+                    context: ctx,
+                    event: Event {
+                        time: SimTime::new(1.0),
+                        tie: (rogue.raw(), 1),
+                        src_agent: rogue,
+                        src_lp: LpId(9),
+                        dst_lp: LpId(1),
+                        payload: Payload::JobFinished {
+                            job: 1,
+                            wait_s: 0.0,
+                            run_s: 0.0,
+                        },
+                    },
+                    bound: SimTime::new(1.0),
+                },
+            )
+            .unwrap();
+        // The agent drains its transport FIFO in order, so by the time
+        // EndRun is handled the rogue event has been ingested (and
+        // rejected).  NOTE: both sends originate from this thread; mpsc
+        // preserves that order.
+        leader
+            .send(a1, NetMsg::Control(ControlMsg::EndRun { context: ctx }))
+            .unwrap();
+
+        // Collect the final stats and assert the rejection was counted.
+        let mut rejected = None;
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        while rejected.is_none() && std::time::Instant::now() < deadline {
+            if let Some(NetMsg::Control(ControlMsg::FinalStats { stats, .. })) =
+                leader.recv_timeout(Duration::from_millis(50))
+            {
+                rejected = Some((
+                    stats.get("events_rejected").and_then(|j| j.as_u64()),
+                    stats.get("events_processed").and_then(|j| j.as_u64()),
+                ));
+            }
+        }
+        let (rejected, processed) = rejected.expect("no FinalStats received");
+        assert_eq!(rejected, Some(1), "exec={exec}");
+        assert_eq!(processed, Some(0), "exec={exec}");
+
+        leader
+            .send(a1, NetMsg::Control(ControlMsg::Shutdown))
+            .unwrap();
+        handle.join().unwrap();
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Property-style randomized tests (in-repo testkit; no proptest offline)
 // ---------------------------------------------------------------------------

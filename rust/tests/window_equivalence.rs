@@ -39,6 +39,16 @@ fn run(mode: ExecMode, workers: usize, proto: SyncProtocol, seed: u64) -> RunRep
         .expect("run failed")
 }
 
+fn run_batching(wire_batch: bool, seed: u64) -> RunReport {
+    Deployment::in_process(3)
+        .wire_batching(wire_batch)
+        .placement(PlacementPolicy::RoundRobin)
+        .seed(seed)
+        .max_wall(Duration::from_secs(120))
+        .run(workload::generate(&cfg(seed)))
+        .expect("run failed")
+}
+
 #[test]
 fn window_matches_step_across_worker_counts() {
     for proto in [
@@ -71,6 +81,29 @@ fn window_mode_batches_timestamps() {
         windowed.determinism_fingerprint(),
         stepped.determinism_fingerprint()
     );
+}
+
+#[test]
+fn wire_batching_preserves_results_and_cuts_frames() {
+    // The window-batched wire protocol sends one frame per peer per flush
+    // (plus one leader report per window) instead of one frame per
+    // message; on a distributed run that must shrink the frame count
+    // sharply while leaving the virtual-time results bit-identical.
+    let batched = run_batching(true, 24);
+    let legacy = run_batching(false, 24);
+    assert_eq!(
+        batched.determinism_fingerprint(),
+        legacy.determinism_fingerprint()
+    );
+    assert!(batched.windows > 0);
+    assert!(
+        batched.wire_frames < legacy.wire_frames,
+        "batching did not reduce frames: {} !< {}",
+        batched.wire_frames,
+        legacy.wire_frames
+    );
+    // Legacy lower bound: at least one frame per remote event.
+    assert!(legacy.wire_frames >= legacy.remote_events);
 }
 
 #[test]
