@@ -2,7 +2,8 @@
 //!
 //! Demonstrates the framework's second transport: two simulation agents and
 //! a leader, each on its own `TcpTransport` endpoint (localhost sockets,
-//! length-prefixed JSON frames, window-batched: one `WindowBatch` frame per
+//! length-prefixed binary frames by default — `TcpOptions::codec` selects
+//! the JSON interop codec — window-batched: one `WindowBatch` frame per
 //! peer per window plus one `WindowReport` to the leader — exactly what
 //! `dsim agent` uses across machines).  The leader deploys the two-center
 //! demo, drives termination detection by probing, and prints final

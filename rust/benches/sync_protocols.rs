@@ -14,6 +14,7 @@ use dsim::bench::{fmt_s, report_row, Bench};
 use dsim::config::{PlacementPolicy, WorkloadConfig};
 use dsim::coordinator::Deployment;
 use dsim::engine::{ExecMode, SyncProtocol};
+use dsim::transport::WireCodec;
 use dsim::workload;
 
 fn cfg() -> WorkloadConfig {
@@ -31,6 +32,31 @@ fn cfg() -> WorkloadConfig {
 }
 
 fn main() {
+    // Optional section filter: `cargo bench --bench sync_protocols -- codec`
+    // runs only sections whose name contains "codec" (CI uses this for the
+    // bytes-per-window report step).
+    // (skip flag-shaped args some cargo versions forward, e.g. `--bench`)
+    let filter: Option<String> = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let runs = |section: &str| filter.as_deref().map_or(true, |f| section.contains(f));
+
+    if runs("sync") {
+        claim_sync();
+    }
+    if runs("window") {
+        claim_window();
+    }
+    if runs("frames") {
+        claim_frames();
+    }
+    if runs("eager-dedup") {
+        claim_eager_dedup();
+    }
+    if runs("codec") {
+        claim_codec();
+    }
+}
+
+fn claim_sync() {
     println!("# CLAIM-SYNC: demand-driven vs eager null messages");
     for agents in [2usize, 4, 8] {
         for (name, proto) in [
@@ -74,14 +100,16 @@ fn main() {
         }
     }
     println!("# shape check: demand sends fewer sync messages than eager at every agent count");
+}
 
-    // ------------------------------------------------------------------
-    // CLAIM-WINDOW: safe-window batch execution vs the per-timestamp
-    // baseline on a distributed run.  Windowing amortizes sync traffic
-    // (one flush per window instead of per timestamp) and the transport
-    // round trips that pace it; the target is >= 2x events/sec under the
-    // chatty eager baseline, with identical virtual-time results.
-    // ------------------------------------------------------------------
+// ------------------------------------------------------------------
+// CLAIM-WINDOW: safe-window batch execution vs the per-timestamp
+// baseline on a distributed run.  Windowing amortizes sync traffic
+// (one flush per window instead of per timestamp) and the transport
+// round trips that pace it; the target is >= 2x events/sec under the
+// chatty eager baseline, with identical virtual-time results.
+// ------------------------------------------------------------------
+fn claim_window() {
     println!("# CLAIM-WINDOW: safe-window batching vs per-timestamp stepping");
     for (pname, proto) in [
         ("eager", SyncProtocol::EagerNullMessages),
@@ -139,14 +167,16 @@ fn main() {
         }
     }
     println!("# shape check: window events/sec >= 2x step events/sec (eager), fingerprints equal");
+}
 
-    // ------------------------------------------------------------------
-    // CLAIM-FRAMES: window-batched wire protocol.  One WindowBatch frame
-    // per peer per window plus one WindowReport to the leader — so frames
-    // per window must be <= peers + 1 (here 3 peers + 1 = 4), down from
-    // the legacy protocol's one frame per message (>= one per remote
-    // event, plus sync and result frames).
-    // ------------------------------------------------------------------
+// ------------------------------------------------------------------
+// CLAIM-FRAMES: window-batched wire protocol.  One WindowBatch frame
+// per peer per window plus one WindowReport to the leader — so frames
+// per window must be <= peers + 1 (here 3 peers + 1 = 4), down from
+// the legacy protocol's one frame per message (>= one per remote
+// event, plus sync and result frames).
+// ------------------------------------------------------------------
+fn claim_frames() {
     println!("# CLAIM-FRAMES: frames per window, batched vs per-message wire protocol");
     for (bname, batch) in [("batched", true), ("per-message", false)] {
         let mut frames = 0u64;
@@ -189,4 +219,130 @@ fn main() {
         );
     }
     println!("# shape check: batched frames_per_window <= 4 (= peers + 1); per-message >= one frame per remote event");
+}
+
+// ------------------------------------------------------------------
+// CLAIM-EAGER-DEDUP: the eager flood now routes through the monotone
+// `announce_to` filter (still once per window).  Classic CMB would send
+// one announce per peer per window unconditionally: windows x (agents-1)
+// frames fleet-wide.  The rows report actual announces vs that computed
+// classic baseline.
+// ------------------------------------------------------------------
+fn claim_eager_dedup() {
+    println!("# CLAIM-EAGER-DEDUP: eager announces through the monotone filter vs classic-CMB flood");
+    let agents = 4usize;
+    let mut announces = 0u64;
+    let mut windows = 0u64;
+    let times = Bench::new(&format!("eager-dedup/a{agents}"))
+        .warmup(1)
+        .iters(3)
+        .run(|| {
+            let report = Deployment::in_process(agents)
+                .placement(PlacementPolicy::RoundRobin)
+                .protocol(SyncProtocol::EagerNullMessages)
+                .run(workload::generate(&cfg()))
+                .expect("run failed");
+            announces = report
+                .per_agent
+                .iter()
+                .map(|(_, s)| s.null_messages_sent)
+                .sum();
+            windows = report.windows;
+        });
+    let med = Bench::summary(&times).map(|s| s.p50).unwrap_or(0.0);
+    // Every agent of a window's flush would flood its (agents-1) peers.
+    let classic = windows * (agents as u64 - 1);
+    let saved = classic.saturating_sub(announces);
+    report_row(
+        "eager_dedup",
+        &[
+            ("agents", agents.to_string()),
+            ("wall_s", fmt_s(med)),
+            ("windows", windows.to_string()),
+            ("announces_sent", announces.to_string()),
+            ("classic_cmb_flood", classic.to_string()),
+            ("frames_saved", saved.to_string()),
+            (
+                "saved_pct",
+                if classic > 0 {
+                    format!("{:.1}", 100.0 * saved as f64 / classic as f64)
+                } else {
+                    "0.0".into()
+                },
+            ),
+        ],
+    );
+    println!("# shape check: announces_sent <= classic_cmb_flood (monotone filter only ever removes frames)");
+}
+
+// ------------------------------------------------------------------
+// CLAIM-CODEC: binary vs JSON wire codec on the two-center demo —
+// bytes per window under in-proc wire accounting (every send encoded
+// exactly as a TCP fleet would frame it, +4B length prefix).  Target:
+// >= 3x fewer bytes per window under binary, identical fingerprints.
+// ------------------------------------------------------------------
+fn claim_codec() {
+    println!("# CLAIM-CODEC: wire bytes per window, binary vs json codec (two-center demo)");
+    let mut bytes_per_window = Vec::new();
+    let mut fingerprints = Vec::new();
+    for (name, codec) in [("json", WireCodec::Json), ("binary", WireCodec::Binary)] {
+        let mut bytes = 0u64;
+        let mut frames = 0u64;
+        let mut windows = 0u64;
+        let mut fingerprint = String::new();
+        let times = Bench::new(&format!("codec/{name}/a2"))
+            .warmup(1)
+            .iters(3)
+            .run(|| {
+                let report = Deployment::in_process(2)
+                    .placement(PlacementPolicy::RoundRobin)
+                    .wire_accounting(codec)
+                    .run(workload::two_center_demo())
+                    .expect("run failed");
+                bytes = report.wire_bytes;
+                frames = report.wire_frames;
+                windows = report.windows;
+                fingerprint = report.determinism_fingerprint();
+            });
+        let med = Bench::summary(&times).map(|s| s.p50).unwrap_or(0.0);
+        let bpw = if windows > 0 {
+            bytes as f64 / windows as f64
+        } else {
+            0.0
+        };
+        let bpf = if frames > 0 {
+            bytes as f64 / frames as f64
+        } else {
+            0.0
+        };
+        bytes_per_window.push(bpw);
+        fingerprints.push(fingerprint.clone());
+        report_row(
+            "wire_codec",
+            &[
+                ("codec", name.to_string()),
+                ("agents", "2".to_string()),
+                ("wall_s", fmt_s(med)),
+                ("wire_bytes", bytes.to_string()),
+                ("wire_frames", frames.to_string()),
+                ("windows", windows.to_string()),
+                ("bytes_per_window", format!("{bpw:.1}")),
+                ("bytes_per_frame", format!("{bpf:.1}")),
+                ("fingerprint", fingerprint),
+            ],
+        );
+    }
+    if bytes_per_window.len() == 2 && bytes_per_window[1] > 0.0 {
+        println!(
+            "# codec reduction: {:.2}x fewer bytes per window (json -> binary)",
+            bytes_per_window[0] / bytes_per_window[1]
+        );
+    }
+    if fingerprints.len() == 2 {
+        println!(
+            "# fingerprints identical across codecs: {}",
+            fingerprints[0] == fingerprints[1]
+        );
+    }
+    println!("# shape check: binary cuts bytes/window >= 3x, fingerprints bit-identical");
 }

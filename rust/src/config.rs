@@ -12,6 +12,7 @@ use std::str::FromStr;
 use anyhow::{bail, Context, Result};
 
 use crate::engine::{ExecMode, SyncProtocol};
+use crate::transport::WireCodec;
 use crate::util::json::Json;
 
 /// How the placement scheduler and network model evaluate their numeric
@@ -92,6 +93,16 @@ pub struct DeployConfig {
     /// match across the fleet (a sender only splits against its *own*
     /// limit); in-process deployments move values directly and ignore it.
     pub max_frame_mib: usize,
+    /// Frame body encoding on TCP deployments (`binary` default,
+    /// `json` = pre-codec interop / on-the-wire debugging).  Chosen per
+    /// *outbound* connection — receivers decode whatever each sender's
+    /// preamble announces, so the knob records the fleet's intent rather
+    /// than a hard constraint; in-process deployments move values
+    /// directly and ignore it.
+    pub wire_codec: WireCodec,
+    /// Bound of each per-peer TCP writer queue, in messages (>= 1).  A
+    /// full queue blocks the sending agent — backpressure, never loss.
+    pub writer_queue_frames: usize,
     /// GVT probe fallback cadence in milliseconds.  Probe rounds normally
     /// trigger on window-completion notifications; this timer only retries
     /// lost replies and bounds termination latency on a quiet fleet.
@@ -112,6 +123,8 @@ impl Default for DeployConfig {
             lookahead: None,
             wire_batch: true,
             max_frame_mib: crate::transport::DEFAULT_MAX_FRAME_BYTES >> 20,
+            wire_codec: WireCodec::default(),
+            writer_queue_frames: crate::transport::DEFAULT_WRITER_QUEUE_FRAMES,
             probe_fallback_ms: 2,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -228,6 +241,10 @@ impl ScenarioConfig {
                 .and_then(Json::as_bool)
                 .unwrap_or(dd.wire_batch),
             max_frame_mib: get_usize(&d, "max_frame_mib", dd.max_frame_mib)?,
+            wire_codec: get_str(&d, "wire_codec", &dd.wire_codec.to_string())?
+                .parse()
+                .map_err(anyhow::Error::msg)?,
+            writer_queue_frames: get_usize(&d, "writer_queue_frames", dd.writer_queue_frames)?,
             probe_fallback_ms: get_usize(&d, "probe_fallback_ms", dd.probe_fallback_ms as usize)?
                 as u64,
             artifacts_dir: get_str(&d, "artifacts_dir", &dd.artifacts_dir)?,
@@ -277,6 +294,9 @@ impl ScenarioConfig {
                 "deploy.max_frame_mib must be in 1..={} (MiB shifted to bytes must fit usize)",
                 usize::MAX >> 20
             );
+        }
+        if self.deploy.writer_queue_frames == 0 {
+            bail!("deploy.writer_queue_frames must be >= 1 (a bounded queue needs room for one frame)");
         }
         if self.deploy.probe_fallback_ms == 0 {
             bail!("deploy.probe_fallback_ms must be >= 1");
@@ -340,6 +360,11 @@ impl ScenarioConfig {
                     (
                         "max_frame_mib",
                         Json::num(self.deploy.max_frame_mib as f64),
+                    ),
+                    ("wire_codec", Json::str(self.deploy.wire_codec.to_string())),
+                    (
+                        "writer_queue_frames",
+                        Json::num(self.deploy.writer_queue_frames as f64),
                     ),
                     (
                         "probe_fallback_ms",
@@ -422,23 +447,34 @@ mod tests {
         assert_eq!(back.deploy.exec, cfg.deploy.exec);
         assert_eq!(back.deploy.wire_batch, cfg.deploy.wire_batch);
         assert_eq!(back.deploy.max_frame_mib, cfg.deploy.max_frame_mib);
+        assert_eq!(back.deploy.wire_codec, cfg.deploy.wire_codec);
+        assert_eq!(
+            back.deploy.writer_queue_frames,
+            cfg.deploy.writer_queue_frames
+        );
         assert_eq!(back.deploy.probe_fallback_ms, cfg.deploy.probe_fallback_ms);
     }
 
     #[test]
     fn batching_knobs_parse_and_default() {
-        // Defaults: batching on, 64 MiB frames, 2 ms probe fallback.
+        // Defaults: batching on, 64 MiB frames, binary codec, 256-frame
+        // writer queues, 2 ms probe fallback.
         let cfg = ScenarioConfig::from_json_text("{}").unwrap();
         assert!(cfg.deploy.wire_batch);
         assert_eq!(cfg.deploy.max_frame_mib, 64);
+        assert_eq!(cfg.deploy.wire_codec, WireCodec::Binary);
+        assert_eq!(cfg.deploy.writer_queue_frames, 256);
         assert_eq!(cfg.deploy.probe_fallback_ms, 2);
         // Explicit overrides.
         let cfg = ScenarioConfig::from_json_text(
-            r#"{"deploy": {"wire_batch": false, "max_frame_mib": 8, "probe_fallback_ms": 10}}"#,
+            r#"{"deploy": {"wire_batch": false, "max_frame_mib": 8, "probe_fallback_ms": 10,
+                           "wire_codec": "json", "writer_queue_frames": 4}}"#,
         )
         .unwrap();
         assert!(!cfg.deploy.wire_batch);
         assert_eq!(cfg.deploy.max_frame_mib, 8);
+        assert_eq!(cfg.deploy.wire_codec, WireCodec::Json);
+        assert_eq!(cfg.deploy.writer_queue_frames, 4);
         assert_eq!(cfg.deploy.probe_fallback_ms, 10);
     }
 
@@ -448,6 +484,12 @@ mod tests {
         assert!(ScenarioConfig::from_json_text(r#"{"deploy": {"agents": 65}}"#).is_err());
         assert!(ScenarioConfig::from_json_text(r#"{"deploy": {"lookahead": -1}}"#).is_err());
         assert!(ScenarioConfig::from_json_text(r#"{"deploy": {"max_frame_mib": 0}}"#).is_err());
+        assert!(
+            ScenarioConfig::from_json_text(r#"{"deploy": {"wire_codec": "xml"}}"#).is_err()
+        );
+        assert!(
+            ScenarioConfig::from_json_text(r#"{"deploy": {"writer_queue_frames": 0}}"#).is_err()
+        );
         assert!(
             ScenarioConfig::from_json_text(r#"{"deploy": {"probe_fallback_ms": 0}}"#).is_err()
         );

@@ -79,6 +79,12 @@ pub struct AgentRuntime<T: Transport<Payload>> {
     sampler: HostSampler,
     pool: Option<Arc<WorkerPool>>,
     weights: PerfWeights,
+    /// Transport bytes already attributed to a finished context's
+    /// `FinalStats`.  The transport counter is endpoint-global, so each
+    /// `EndRun` reports the delta since the previous report; with
+    /// concurrent contexts the per-context split is approximate (teardown
+    /// order) but the fleet total is exact.
+    wire_bytes_reported: u64,
 }
 
 impl<T: Transport<Payload>> AgentRuntime<T> {
@@ -98,7 +104,16 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             sampler: HostSampler::new(),
             pool,
             weights: PerfWeights::default(),
+            wire_bytes_reported: 0,
         }
+    }
+
+    /// Wire bytes emitted since the last `FinalStats` report.
+    fn take_wire_bytes_delta(&mut self) -> u64 {
+        let total = self.transport.wire_bytes();
+        let delta = total.saturating_sub(self.wire_bytes_reported);
+        self.wire_bytes_reported = total;
+        delta
     }
 
     /// Access the replicated object space (tests / embedding).
@@ -179,8 +194,16 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 from,
                 events,
                 sync,
+                space,
                 bound,
             } => {
+                // Space replication rides the batch frame but is
+                // context-free: apply it even when this agent hosts no LP
+                // of `context` (every fleet member keeps a replica).
+                let space_only = !space.is_empty() && events.is_empty() && sync.is_empty();
+                for op in space {
+                    self.space.apply_remote(op);
+                }
                 if let Some(slot) = self.contexts.get_mut(&context) {
                     // Frame order is the promise order: events first, then
                     // the window's sync flush, then the piggybacked bound —
@@ -200,7 +223,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                     // Sync ingest may have produced answers (parked-demand
                     // responses); ship them now rather than next turn.
                     self.flush_outbox(context);
-                } else {
+                } else if !space_only {
                     log::warn!("{}: batch for unknown {context}", self.cfg.me);
                 }
             }
@@ -320,13 +343,14 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             ControlMsg::EndRun { context } => {
                 if self.contexts.get(&context).is_none() {
                     // Non-participant: report empty stats so the leader's
-                    // collection completes.
+                    // collection completes.  No wire-byte delta — control
+                    // chatter stays attributed to the contexts doing work.
                     let _ = self.transport.send(
                         LEADER,
                         NetMsg::Control(ControlMsg::FinalStats {
                             context,
                             from: self.cfg.me,
-                            stats: engine_stats_json(&EngineStats::default(), 0.0, 0),
+                            stats: engine_stats_json(&EngineStats::default(), 0.0, 0, 0),
                         }),
                     );
                 }
@@ -345,10 +369,12 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                             },
                         );
                     }
+                    let wire_bytes = self.take_wire_bytes_delta();
                     let stats = engine_stats_json(
                         slot.engine.stats(),
                         slot.engine.lvt().secs(),
                         slot.frames,
+                        wire_bytes,
                     );
                     let _ = self.transport.send(
                         LEADER,
@@ -466,12 +492,31 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
     fn flush_outbox(&mut self, ctx: ContextId) {
         let Some(slot) = self.contexts.get_mut(&ctx) else { return };
         let out = slot.engine.drain_outbox();
+        let space_ops = self.space.drain_outbox();
         if self.cfg.wire_batch {
-            let (batches, results) = out.into_peer_batches();
+            let (mut batches, results) = out.into_peer_batches();
+            if !space_ops.is_empty() {
+                // Fold replication into the per-peer frames (previously
+                // one `Space` frame per op per peer).  Replication reaches
+                // every fleet peer, so peers without engine traffic this
+                // flush get a space-only batch (no promise — exactly the
+                // knowledge the old standalone frames carried).
+                for peer in self.transport.agents() {
+                    if peer != self.cfg.me && peer != LEADER {
+                        batches.entry(peer).or_insert_with(crate::engine::PeerBatch::empty);
+                    }
+                }
+            }
             for (to, batch) in batches {
                 slot.sent += batch.events.len() as u64;
                 slot.frames += 1;
-                let bound = slot.engine.bound_for(to);
+                // A peer with engine traffic also gets the post-drain
+                // promise; a space-only frame carries none.
+                let bound = if batch.events.is_empty() && batch.sync.is_empty() {
+                    None
+                } else {
+                    Some(slot.engine.bound_for(to))
+                };
                 if let Err(e) = self.transport.send(
                     to,
                     NetMsg::WindowBatch {
@@ -479,7 +524,8 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                         from: self.cfg.me,
                         events: batch.events,
                         sync: batch.sync,
-                        bound: Some(bound),
+                        space: space_ops.clone(),
+                        bound,
                     },
                 ) {
                     // Undeliverable events keep sent != received, so the
@@ -561,11 +607,13 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                     }),
                 );
             }
-        }
-        for op in self.space.drain_outbox() {
-            for peer in self.transport.agents() {
-                if peer != self.cfg.me && peer != LEADER {
-                    let _ = self.transport.send(peer, NetMsg::Space(op.clone()));
+            // Legacy replication: one standalone frame per op per peer.
+            for op in space_ops {
+                for peer in self.transport.agents() {
+                    if peer != self.cfg.me && peer != LEADER {
+                        slot.frames += 1;
+                        let _ = self.transport.send(peer, NetMsg::Space(op.clone()));
+                    }
                 }
             }
         }
@@ -589,9 +637,9 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
 }
 
 /// Encode engine statistics for the FinalStats control message.
-/// `wire_frames` is the agent-level frame counter for the context (the
-/// engine itself never sees frames).
-pub fn engine_stats_json(s: &EngineStats, lvt_s: f64, wire_frames: u64) -> Json {
+/// `wire_frames` / `wire_bytes` are agent-level transport counters for
+/// the context (the engine itself never sees frames).
+pub fn engine_stats_json(s: &EngineStats, lvt_s: f64, wire_frames: u64, wire_bytes: u64) -> Json {
     Json::obj(vec![
         ("events_processed", Json::num(s.events_processed as f64)),
         ("events_sent_local", Json::num(s.events_sent_local as f64)),
@@ -612,6 +660,7 @@ pub fn engine_stats_json(s: &EngineStats, lvt_s: f64, wire_frames: u64) -> Json 
         ("max_window_events", Json::num(s.max_window_events as f64)),
         ("events_rejected", Json::num(s.events_rejected as f64)),
         ("wire_frames", Json::num(wire_frames as f64)),
+        ("wire_bytes", Json::num(wire_bytes as f64)),
         ("lvt", Json::num(lvt_s)),
     ])
 }
@@ -633,6 +682,7 @@ pub fn stats_from_json(j: &Json) -> Option<HostStatsView> {
             .and_then(Json::as_u64)
             .unwrap_or(0),
         wire_frames: j.get("wire_frames").and_then(Json::as_u64).unwrap_or(0),
+        wire_bytes: j.get("wire_bytes").and_then(Json::as_u64).unwrap_or(0),
         lvt_s: j.get("lvt")?.as_f64()?,
     })
 }
@@ -651,10 +701,116 @@ pub struct HostStatsView {
     /// Wire frames the agent emitted for the context (WindowBatch +
     /// WindowReport under batching; one per message on the legacy path).
     pub wire_frames: u64,
+    /// Encoded wire bytes the agent's transport emitted for the context
+    /// (0 on plain in-proc runs; see `Transport::wire_bytes`).
+    pub wire_bytes: u64,
     pub lvt_s: f64,
 }
 
 #[allow(unused)]
 fn _assert_host_sample_used(s: HostSample) -> Json {
     s.to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SyncProtocol;
+    use crate::transport::{InProcEndpoint, InProcNetwork};
+    use crate::util::LpId;
+    use std::path::Path;
+
+    fn runtime(
+        me: u64,
+        ep: InProcEndpoint<Payload>,
+        wire_batch: bool,
+    ) -> AgentRuntime<InProcEndpoint<Payload>> {
+        let cfg = AgentConfig {
+            me: AgentId(me),
+            peers: vec![AgentId(1), AgentId(2)],
+            lookahead: 0.05,
+            protocol: SyncProtocol::NullMessagesByDemand,
+            workers: 0,
+            exec: ExecMode::SafeWindow,
+            wire_batch,
+        };
+        let backend = Arc::new(ComputeBackend::auto(Path::new("artifacts")));
+        AgentRuntime::new(cfg, ep, backend)
+    }
+
+    fn routed(rt: &mut AgentRuntime<InProcEndpoint<Payload>>, ctx: ContextId) {
+        rt.handle(NetMsg::Control(ControlMsg::RoutingTable {
+            context: ctx,
+            routes: vec![(LpId(1), AgentId(1)), (LpId(2), AgentId(2))],
+        }));
+    }
+
+    #[test]
+    fn space_ops_fold_into_window_batches() {
+        let net: InProcNetwork<Payload> = InProcNetwork::new();
+        let peer = net.endpoint(AgentId(2));
+        let leader = net.endpoint(LEADER);
+        let mut a1 = runtime(1, net.endpoint(AgentId(1)), true);
+        let ctx = ContextId(1);
+        routed(&mut a1, ctx);
+
+        a1.space().write("cpu/0", Json::num(1.0));
+        a1.flush_outbox(ctx);
+
+        // The peer gets exactly one frame: a space-only WindowBatch (no
+        // promise — the old standalone Space frame carried none either).
+        match peer.recv_timeout(Duration::from_secs(1)).unwrap() {
+            NetMsg::WindowBatch {
+                events,
+                sync,
+                space,
+                bound,
+                ..
+            } => {
+                assert!(events.is_empty() && sync.is_empty());
+                assert_eq!(space.len(), 1);
+                assert!(bound.is_none());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(peer.recv_timeout(Duration::ZERO).is_none(), "one frame only");
+        // Replication never targets the leader.
+        assert!(leader.recv_timeout(Duration::ZERO).is_none());
+
+        // Receiving side: a folded op lands in the replica even when the
+        // receiver does not host the batch's context.
+        let mut a2 = runtime(2, peer, true);
+        a2.handle(NetMsg::WindowBatch {
+            context: ContextId(99), // unknown on a2
+            from: AgentId(1),
+            events: vec![],
+            sync: vec![],
+            space: vec![crate::space::SpaceMsg::Write(crate::space::Entry {
+                key: "db/x".into(),
+                fields: Json::num(2.0),
+                version: 1,
+                writer: AgentId(1),
+            })],
+            bound: None,
+        });
+        assert_eq!(a2.space().read("db/x").unwrap().fields, Json::num(2.0));
+    }
+
+    #[test]
+    fn legacy_wire_mode_keeps_standalone_space_frames() {
+        let net: InProcNetwork<Payload> = InProcNetwork::new();
+        let peer = net.endpoint(AgentId(2));
+        let _leader = net.endpoint(LEADER);
+        let mut a1 = runtime(1, net.endpoint(AgentId(1)), false);
+        let ctx = ContextId(1);
+        routed(&mut a1, ctx);
+
+        a1.space().write("cpu/0", Json::num(1.0));
+        a1.flush_outbox(ctx);
+
+        assert!(matches!(
+            peer.recv_timeout(Duration::from_secs(1)).unwrap(),
+            NetMsg::Space(_)
+        ));
+    }
 }

@@ -61,6 +61,12 @@ pub struct RunReport {
     /// windows` is the frames-per-window metric — O(peers) when batching,
     /// O(messages) without.
     pub wire_frames: u64,
+    /// Encoded wire bytes the fleet emitted.  Real socket bytes on TCP;
+    /// on in-proc deployments it is 0 unless byte accounting is enabled
+    /// ([`Deployment::wire_accounting`]), which encodes every send purely
+    /// to measure what a TCP fleet would pay — `wire_bytes / windows` is
+    /// the codec-comparison metric in the sync_protocols bench.
+    pub wire_bytes: u64,
     /// All records published by LPs during the run.
     pub pool: ResultPool,
     /// Final per-agent statistics.
@@ -138,6 +144,9 @@ pub struct Deployment {
     seed: u64,
     /// Window-batched wire protocol (one frame per peer per flush).
     wire_batch: bool,
+    /// When set, the in-proc fabric meters every send under this codec so
+    /// `RunReport::wire_bytes` reports what a TCP fleet would emit.
+    wire_meter: Option<crate::transport::WireCodec>,
     /// Safety valve for runaway runs.
     max_wall: Duration,
     /// GVT probe *fallback* cadence: rounds normally trigger on pushed
@@ -159,6 +168,7 @@ impl Deployment {
             artifacts_dir: PathBuf::from("artifacts"),
             seed: 1,
             wire_batch: true,
+            wire_meter: None,
             max_wall: Duration::from_secs(600),
             probe_every: Duration::from_millis(2),
         }
@@ -176,6 +186,7 @@ impl Deployment {
             artifacts_dir: PathBuf::from(&cfg.deploy.artifacts_dir),
             seed: cfg.workload.seed,
             wire_batch: cfg.deploy.wire_batch,
+            wire_meter: None,
             max_wall: Duration::from_secs(600),
             probe_every: Duration::from_millis(cfg.deploy.probe_fallback_ms.max(1)),
         }
@@ -221,6 +232,15 @@ impl Deployment {
         self
     }
 
+    /// Meter every in-proc send under `codec` so the report carries the
+    /// wire bytes a TCP fleet would emit (costs one encode per send; off
+    /// by default).  The codec-comparison rows in the sync_protocols
+    /// bench are built on this.
+    pub fn wire_accounting(mut self, codec: crate::transport::WireCodec) -> Self {
+        self.wire_meter = Some(codec);
+        self
+    }
+
     /// GVT probe fallback cadence (see `probe_every`).
     pub fn probe_fallback(mut self, d: Duration) -> Self {
         self.probe_every = d;
@@ -254,7 +274,10 @@ impl Deployment {
         );
 
         // --- fabric + agents ------------------------------------------------
-        let net: InProcNetwork<Payload> = InProcNetwork::new();
+        let net: InProcNetwork<Payload> = match self.wire_meter {
+            Some(codec) => InProcNetwork::with_wire_accounting(codec),
+            None => InProcNetwork::new(),
+        };
         let leader_ep = net.endpoint(LEADER);
         let agent_ids: Vec<AgentId> = (1..=self.agents as u64).map(AgentId).collect();
 
@@ -551,6 +574,7 @@ impl Deployment {
             let mut maxq = 0;
             let mut windows = 0;
             let mut wire_frames = 0;
+            let mut wire_bytes = 0;
             let mut per_agent = Vec::new();
             for (a, s) in &st.final_stats {
                 events += s.events_processed;
@@ -560,6 +584,7 @@ impl Deployment {
                 maxq = maxq.max(s.max_queue_len);
                 windows += s.windows;
                 wire_frames += s.wire_frames;
+                wire_bytes += s.wire_bytes;
                 per_agent.push((*a, *s));
             }
             let jobs = st.pool.of_kind("job").len();
@@ -577,6 +602,7 @@ impl Deployment {
                 transfers_completed: transfers,
                 windows,
                 wire_frames,
+                wire_bytes,
                 pool: st.pool,
                 per_agent,
                 placements: placements_all[i]

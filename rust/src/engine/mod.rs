@@ -298,6 +298,16 @@ pub struct PeerBatch<P> {
     pub sync: Vec<SyncMsg>,
 }
 
+impl<P> PeerBatch<P> {
+    /// An empty batch (not `Default`: `P` itself need not be `Default`).
+    pub fn empty() -> Self {
+        PeerBatch {
+            events: Vec::new(),
+            sync: Vec::new(),
+        }
+    }
+}
+
 impl<P> Outbox<P> {
     pub fn is_empty(&self) -> bool {
         self.events.is_empty() && self.sync.is_empty() && self.results.is_empty()
@@ -308,16 +318,12 @@ impl<P> Outbox<P> {
     /// results.  One `PeerBatch` becomes one wire frame; the results
     /// become the window's single leader report.
     pub fn into_peer_batches(self) -> (BTreeMap<AgentId, PeerBatch<P>>, Vec<(String, Json)>) {
-        let empty = || PeerBatch {
-            events: Vec::new(),
-            sync: Vec::new(),
-        };
         let mut per: BTreeMap<AgentId, PeerBatch<P>> = BTreeMap::new();
         for (to, ev) in self.events {
-            per.entry(to).or_insert_with(empty).events.push(ev);
+            per.entry(to).or_insert_with(PeerBatch::empty).events.push(ev);
         }
         for (to, msg) in self.sync {
-            per.entry(to).or_insert_with(empty).sync.push(msg);
+            per.entry(to).or_insert_with(PeerBatch::empty).sync.push(msg);
         }
         (per, self.results)
     }
@@ -662,15 +668,19 @@ impl<P: Clone + Send + 'static> Engine<P> {
                 self.stats.windows += 1;
                 self.stats.window_timestamps += timestamps as u64;
                 self.stats.max_window_events = self.stats.max_window_events.max(events);
-                // Sync once per window — the batching win.  Eager CMB
-                // announces per-peer bounds unconditionally; the demand
-                // protocol only answers what the window's progress now
-                // satisfies.
+                // Sync once per window — the batching win.  The eager
+                // flood routes through the monotone `announce_to` filter:
+                // a window that moved no per-peer bound sends that peer
+                // nothing.  Receivers already ignore stale bounds
+                // (`LvtTable::observe` keeps the max), so the suppressed
+                // repeats carried zero information — same knowledge
+                // everywhere, strictly fewer frames than classic CMB's
+                // unconditional announce-per-peer.  The demand protocol
+                // only answers what the window's progress now satisfies.
                 if self.protocol == SyncProtocol::EagerNullMessages {
                     for peer in self.lvt_table.peers() {
                         let bound = self.bound_for(peer);
-                        self.outbox_sync.push((peer, SyncMsg::LvtAnnounce { bound }));
-                        self.stats.null_messages_sent += 1;
+                        self.announce_to(peer, bound);
                     }
                 }
                 self.flush_parked_demands();
@@ -716,13 +726,13 @@ impl<P: Clone + Send + 'static> Engine<P> {
         }
         self.stats.events_processed += n as u64;
 
-        // Eager CMB baseline: announce per-peer bounds after each step,
-        // unconditionally.
+        // Eager CMB baseline: announce per-peer bounds after each step —
+        // deduplicated through the monotone filter, like the window path
+        // (a repeat of a bound the peer already holds carries nothing).
         if self.protocol == SyncProtocol::EagerNullMessages {
             for peer in self.lvt_table.peers() {
                 let bound = self.bound_for(peer);
-                self.outbox_sync.push((peer, SyncMsg::LvtAnnounce { bound }));
-                self.stats.null_messages_sent += 1;
+                self.announce_to(peer, bound);
             }
         }
         self.flush_parked_demands();

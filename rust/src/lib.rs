@@ -71,4 +71,5 @@ pub mod prelude {
     pub use crate::metrics::ResultPool;
     pub use crate::model::Scenario;
     pub use crate::runtime::ComputeBackend;
+    pub use crate::transport::WireCodec;
 }

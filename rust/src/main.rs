@@ -57,6 +57,7 @@ USAGE:
   dsim agent --me <id> --bind <addr> --peers <id=addr,id=addr,...>
              [--lookahead s] [--workers n] [--exec window|step]
              [--max-frame-mib n] [--no-wire-batch]
+             [--wire-codec binary|json] [--writer-queue-frames n]
   dsim check-artifacts [dir]
 "
     );
@@ -170,12 +171,30 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         "--max-frame-mib must be in 1..={} (MiB shifted to bytes must fit usize)",
         usize::MAX >> 20
     );
+    // Outbound frame encoding; inbound connections follow each sender's
+    // preamble, so mixed fleets can roll this out one agent at a time.
+    let wire_codec: dsim::transport::WireCodec = get("--wire-codec")
+        .map(|s| s.parse().map_err(anyhow::Error::msg))
+        .transpose()?
+        .unwrap_or_default();
+    let writer_queue_frames: usize = get("--writer-queue-frames")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(dsim::transport::DEFAULT_WRITER_QUEUE_FRAMES);
+    anyhow::ensure!(
+        writer_queue_frames >= 1,
+        "--writer-queue-frames must be >= 1 (a bounded queue needs room for one frame)"
+    );
     // Legacy one-frame-per-message wire protocol (mixed fleets, baselines).
     let wire_batch = !args.iter().any(|a| a == "--no-wire-batch");
     let peer_ids: Vec<AgentId> = peers.keys().copied().filter(|a| a.raw() != 0).collect();
 
-    let transport: TcpTransport<Payload> =
-        TcpTransport::bind_with(me, bind, peers, max_frame_mib << 20)?;
+    let opts = dsim::transport::TcpOptions {
+        max_frame: max_frame_mib << 20,
+        codec: wire_codec,
+        writer_queue: writer_queue_frames,
+    };
+    let transport: TcpTransport<Payload> = TcpTransport::bind_with(me, bind, peers, opts)?;
     let backend = std::sync::Arc::new(ComputeBackend::auto(Path::new("artifacts")));
     let cfg = AgentConfig {
         me,

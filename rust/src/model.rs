@@ -12,10 +12,11 @@
 //! events); cross-group traffic always crosses the simulated WAN and thus
 //! carries >= `lookahead` virtual latency.
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::engine::SimTime;
 use crate::transport::Wire;
+use crate::util::bin;
 use crate::util::json::Json;
 use crate::util::LpId;
 
@@ -380,6 +381,203 @@ impl Wire for Payload {
             other => Err(anyhow!("unknown payload kind {other:?}")),
         }
     }
+
+    /// Dedicated binary form: one tag byte per variant, fields in
+    /// declaration order (varint ints, raw-bit f64, 0/1-prefixed optional
+    /// strings — see [`crate::util::bin`]).  Overrides the JSON-tree
+    /// bridge because event payloads *are* the TCP hot path: the
+    /// tag+fields form drops every key string and float print, which is
+    /// most of a frame's bytes.
+    fn encode_bin(&self, out: &mut Vec<u8>) {
+        match self {
+            Payload::JobSubmit(js) => {
+                out.push(1);
+                bin::put_u64(out, js.id);
+                bin::put_f64(out, js.cpu_seconds);
+                bin::put_opt_str(out, js.dataset.as_deref());
+                bin::put_u64(out, js.center as u64);
+                bin::put_u64(out, js.notify.raw());
+            }
+            Payload::UnitDone { unit, job } => {
+                out.push(2);
+                bin::put_u64(out, *unit as u64);
+                bin::put_u64(out, *job);
+            }
+            Payload::JobFinished { job, wait_s, run_s } => {
+                out.push(3);
+                bin::put_u64(out, *job);
+                bin::put_f64(out, *wait_s);
+                bin::put_f64(out, *run_s);
+            }
+            Payload::TransferRequest(ts) => {
+                out.push(4);
+                bin::put_u64(out, ts.id);
+                bin::put_u64(out, ts.src_center as u64);
+                bin::put_u64(out, ts.dst_center as u64);
+                bin::put_f64(out, ts.size_mb);
+                bin::put_u64(out, ts.notify.raw());
+                bin::put_opt_str(out, ts.dataset.as_deref());
+            }
+            Payload::WanWake { epoch } => {
+                out.push(5);
+                bin::put_u64(out, *epoch);
+            }
+            Payload::TransferComplete {
+                xfer,
+                size_mb,
+                dataset,
+                started,
+            } => {
+                out.push(6);
+                bin::put_u64(out, *xfer);
+                bin::put_f64(out, *size_mb);
+                bin::put_opt_str(out, dataset.as_deref());
+                bin::put_f64(out, *started);
+            }
+            Payload::DbStore { dataset, size_mb } => {
+                out.push(7);
+                bin::put_str(out, dataset);
+                bin::put_f64(out, *size_mb);
+            }
+            Payload::DbMigrate { dataset, size_mb } => {
+                out.push(8);
+                bin::put_str(out, dataset);
+                bin::put_f64(out, *size_mb);
+            }
+            Payload::DbFetch { dataset, requester } => {
+                out.push(9);
+                bin::put_str(out, dataset);
+                bin::put_u64(out, requester.raw());
+            }
+            Payload::DbFetchReply {
+                dataset,
+                found,
+                size_mb,
+            } => {
+                out.push(10);
+                bin::put_str(out, dataset);
+                bin::put_bool(out, *found);
+                bin::put_f64(out, *size_mb);
+            }
+            Payload::CatalogRegister {
+                dataset,
+                center,
+                size_mb,
+            } => {
+                out.push(11);
+                bin::put_str(out, dataset);
+                bin::put_u64(out, *center as u64);
+                bin::put_f64(out, *size_mb);
+            }
+            Payload::CatalogQuery { dataset, requester } => {
+                out.push(12);
+                bin::put_str(out, dataset);
+                bin::put_u64(out, requester.raw());
+            }
+            Payload::CatalogReply {
+                dataset,
+                centers,
+                size_mb,
+            } => {
+                out.push(13);
+                bin::put_str(out, dataset);
+                bin::put_u64(out, centers.len() as u64);
+                for c in centers {
+                    bin::put_u64(out, *c as u64);
+                }
+                bin::put_f64(out, *size_mb);
+            }
+            Payload::Start => out.push(14),
+            Payload::Custom { tag, data } => {
+                out.push(15);
+                bin::put_str(out, tag);
+                data.encode_bin(out);
+            }
+        }
+    }
+
+    fn decode_bin(r: &mut bin::Reader) -> Result<Payload> {
+        let tag = r.u8()?;
+        Ok(match tag {
+            1 => Payload::JobSubmit(JobSpec {
+                id: r.u64()?,
+                cpu_seconds: r.f64()?,
+                dataset: r.opt_str()?,
+                center: r.u64()? as usize,
+                notify: LpId(r.u64()?),
+            }),
+            2 => Payload::UnitDone {
+                unit: r.u64()? as usize,
+                job: r.u64()?,
+            },
+            3 => Payload::JobFinished {
+                job: r.u64()?,
+                wait_s: r.f64()?,
+                run_s: r.f64()?,
+            },
+            4 => Payload::TransferRequest(TransferSpec {
+                id: r.u64()?,
+                src_center: r.u64()? as usize,
+                dst_center: r.u64()? as usize,
+                size_mb: r.f64()?,
+                notify: LpId(r.u64()?),
+                dataset: r.opt_str()?,
+            }),
+            5 => Payload::WanWake { epoch: r.u64()? },
+            6 => Payload::TransferComplete {
+                xfer: r.u64()?,
+                size_mb: r.f64()?,
+                dataset: r.opt_str()?,
+                started: r.f64()?,
+            },
+            7 => Payload::DbStore {
+                dataset: r.str()?,
+                size_mb: r.f64()?,
+            },
+            8 => Payload::DbMigrate {
+                dataset: r.str()?,
+                size_mb: r.f64()?,
+            },
+            9 => Payload::DbFetch {
+                dataset: r.str()?,
+                requester: LpId(r.u64()?),
+            },
+            10 => Payload::DbFetchReply {
+                dataset: r.str()?,
+                found: r.bool()?,
+                size_mb: r.f64()?,
+            },
+            11 => Payload::CatalogRegister {
+                dataset: r.str()?,
+                center: r.u64()? as usize,
+                size_mb: r.f64()?,
+            },
+            12 => Payload::CatalogQuery {
+                dataset: r.str()?,
+                requester: LpId(r.u64()?),
+            },
+            13 => {
+                let dataset = r.str()?;
+                let n = r.len_prefix()?;
+                // Byte-bounded count; cap the memory pre-allocation.
+                let mut centers = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    centers.push(r.u64()? as usize);
+                }
+                Payload::CatalogReply {
+                    dataset,
+                    centers,
+                    size_mb: r.f64()?,
+                }
+            }
+            14 => Payload::Start,
+            15 => Payload::Custom {
+                tag: r.str()?,
+                data: Json::decode_bin(r)?,
+            },
+            t => bail!("bad payload tag {t}"),
+        })
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -466,9 +664,8 @@ impl Scenario {
 mod tests {
     use super::*;
 
-    #[test]
-    fn payload_wire_roundtrip_all_variants() {
-        let variants = vec![
+    fn all_variants() -> Vec<Payload> {
+        vec![
             Payload::JobSubmit(JobSpec {
                 id: 1,
                 cpu_seconds: 3.5,
@@ -540,12 +737,51 @@ mod tests {
                 tag: "t".into(),
                 data: Json::num(1.0),
             },
-        ];
-        for p in variants {
+        ]
+    }
+
+    #[test]
+    fn payload_wire_roundtrip_all_variants() {
+        for p in all_variants() {
             let j = p.to_json();
             let back = Payload::from_json(&j).unwrap();
             assert_eq!(back, p, "roundtrip failed for {j}");
         }
+    }
+
+    #[test]
+    fn payload_binary_roundtrip_all_variants() {
+        for p in all_variants() {
+            let mut out = Vec::new();
+            p.encode_bin(&mut out);
+            let mut r = bin::Reader::new(&out);
+            let back = Payload::decode_bin(&mut r).unwrap();
+            r.finish().unwrap();
+            assert_eq!(back, p, "binary roundtrip failed for {p:?}");
+            // The dedicated form must beat the JSON text it replaces.
+            assert!(
+                out.len() < p.to_json().to_string().len(),
+                "binary not smaller for {p:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn payload_binary_rejects_corrupt_input() {
+        assert!(Payload::decode_bin(&mut bin::Reader::new(&[])).is_err());
+        assert!(Payload::decode_bin(&mut bin::Reader::new(&[0])).is_err());
+        assert!(Payload::decode_bin(&mut bin::Reader::new(&[99])).is_err());
+        // Truncated JobSubmit.
+        let mut out = Vec::new();
+        Payload::JobSubmit(JobSpec {
+            id: 1,
+            cpu_seconds: 2.0,
+            dataset: None,
+            center: 0,
+            notify: LpId(1),
+        })
+        .encode_bin(&mut out);
+        assert!(Payload::decode_bin(&mut bin::Reader::new(&out[..out.len() - 1])).is_err());
     }
 
     #[test]

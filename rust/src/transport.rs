@@ -39,21 +39,94 @@
 //! (`deploy.wire_batch = false`) and always decode, so mixed old/new
 //! fleets interoperate.
 //!
-//! Frames are length-prefixed (u32, big-endian) and capped at a
+//! ## Wire-format specification (TCP mode)
+//!
+//! Every frame is `u32 big-endian body length | body`, capped at a
 //! configurable limit ([`DEFAULT_MAX_FRAME_BYTES`]); an inbound oversized
 //! frame is drained and skipped — one bad frame never poisons its reader
-//! thread or connection.
+//! thread or connection.  The *body* encoding is the connection's
+//! [`WireCodec`], chosen by the sender per connection:
+//!
+//! * **Connection preamble** — a binary connection opens with the 6-byte
+//!   preamble `b"DSIM" | version u8 | codec u8` before its first frame.
+//!   A JSON connection sends **no preamble**: its byte stream is exactly
+//!   the pre-codec (PR 2) protocol, which is what makes
+//!   `--wire-codec json` the mixed-fleet interop fallback.  Receivers
+//!   sniff the first four bytes: the magic can never collide with a sane
+//!   frame length (it would imply a >1 GiB frame), so preamble-less
+//!   streams from both old peers and JSON-codec peers are recognized and
+//!   decoded as JSON text.  Caveat for fleets that use the object space:
+//!   pre-space receivers ignore the batch frame's `sp` key (unknown JSON
+//!   keys don't error), so space replication toward them also needs
+//!   `wire_batch = false` (standalone `Space` frames) — `wire_codec =
+//!   json` alone only covers the event/sync/control plane.
+//! * **[`WireCodec::Json`]** (tag 0) — the body is the compact JSON text
+//!   of [`msg_to_json`]; human-readable on the wire, interoperable with
+//!   pre-codec fleets, and the debugging format.
+//! * **[`WireCodec::Binary`]** (tag 1, default) — the body is the binary
+//!   encoding below.  Primitives (see [`crate::util::bin`]): unsigned
+//!   integers are ULEB128 varints; `f64` is 8 raw little-endian IEEE-754
+//!   bits, so timestamps round-trip **bit-exactly** with no float
+//!   printing/parsing on the hot path; strings are varint-length-prefixed
+//!   UTF-8; `vec<T>` is a varint count then elements; `opt<T>` is a 0/1
+//!   byte then the value; JSON trees use the tagged form of
+//!   [`Json::encode_bin`].
+//!
+//!   ```text
+//!   msg    := tag u8 ...
+//!     1 Event        ctx, event, bound f64
+//!     2 WindowBatch  ctx, from, vec<event>, vec<sync>, vec<space>, opt<f64 bound>
+//!     3 Sync         ctx, from, sync
+//!     4 Space        space
+//!     5 Control      control
+//!   event  := time f64, tie0, tie1, src_agent, src_lp, dst_lp, payload
+//!   sync   := 1 LvtRequest(need f64, lvt f64) | 2 LvtAnnounce(bound f64)
+//!   space  := 1 Write(key str, fields json, version, writer)
+//!           | 2 Remove(key str, version)
+//!   control:= tag u8 ...   (tags 1..=13, field order matches the struct
+//!             declaration; see `control_to_bin`)
+//!   ```
+//!
+//!   Payload encoding is [`Wire::encode_bin`]: the default bridges
+//!   through the JSON tree (still raw-bit f64, no text); hot payloads
+//!   (the MONARC [`Payload`](crate::model::Payload)) override it with a
+//!   dedicated tag+fields form.
+//!
+//! **Versioning rules.**  New message kinds take fresh tag values; an
+//! unknown tag is a decode error that drops only its own connection
+//! (fail loud, never silent corruption).  Any change to an *existing*
+//! field layout must bump [`WIRE_VERSION`], which rejects the connection
+//! at the preamble.  The JSON codec is the long-horizon interop format:
+//! mixed or upgrading fleets run `--wire-codec json` until every agent
+//! speaks the same binary version.
+//!
+//! ## Per-peer writer threads
+//!
+//! [`TcpTransport::send`] never touches a socket: it enqueues the message
+//! on a **bounded per-peer writer queue**
+//! ([`TcpOptions::writer_queue`]).  A dedicated writer thread per peer
+//! encodes frames and performs the blocking `write`, so serialization and
+//! socket stalls overlap with window execution on the agent thread.  A
+//! full queue **blocks the sender** — backpressure, never loss:
+//! conservative sync frames cannot be lossy.  Per-peer FIFO order is
+//! preserved (single queue, single writer).  Dropping the transport
+//! closes every queue, and each writer drains what is already queued
+//! before exiting (joined in `Drop`), so shutdown flushes rather than
+//! truncates.
 
 use std::collections::HashMap;
 use std::io::{Read, Write as IoWrite};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::engine::{Event, SimTime, SyncMsg};
+use crate::space::SpaceMsg;
+use crate::util::bin;
 use crate::util::json::Json;
 use crate::util::{AgentId, ContextId, LpId};
 
@@ -158,16 +231,24 @@ pub enum NetMsg<P> {
         bound: SimTime,
     },
     /// One window's traffic to one peer in a single frame: the window's
-    /// events for that peer (in emission order), its sync flush, and the
-    /// sender's post-window promise.  The receiver ingests events, then
+    /// events for that peer (in emission order), its sync flush, the
+    /// flush's object-space replication ops, and the sender's post-window
+    /// promise.  The receiver ingests space ops (context-free, versioned
+    /// LWW — their order against events is immaterial), then events, then
     /// sync, then the bound — so the single trailing promise can never
-    /// undercut an event of its own frame.  `bound` is `None` on non-final
-    /// chunks of a size-split batch.
+    /// undercut anything in its own frame.  `bound` is `None` on non-final
+    /// chunks of a size-split batch (which also carry no sync and no
+    /// space ops).
     WindowBatch {
         context: ContextId,
         from: AgentId,
         events: Vec<Event<P>>,
         sync: Vec<SyncMsg>,
+        /// Object-space replication folded into the per-peer frame
+        /// (previously one `NetMsg::Space` frame per op per peer).
+        /// Space ops are context-free and applied even when the receiver
+        /// does not host `context`.
+        space: Vec<SpaceMsg>,
         bound: Option<SimTime>,
     },
     Sync {
@@ -175,7 +256,8 @@ pub enum NetMsg<P> {
         from: AgentId,
         msg: SyncMsg,
     },
-    Space(crate::space::SpaceMsg),
+    /// Standalone space replication op (legacy / wire batching off).
+    Space(SpaceMsg),
     Control(ControlMsg),
 }
 
@@ -218,16 +300,31 @@ pub trait Transport<P>: Send {
         }
         Ok(())
     }
+
+    /// Cumulative encoded bytes this endpoint has put on the wire (frame
+    /// bodies plus length prefixes and preambles).  Endpoints that move
+    /// values without serializing report 0 unless byte accounting is
+    /// enabled ([`InProcNetwork::with_wire_accounting`]).  On TCP the
+    /// counter advances when the writer thread transmits, so frames still
+    /// queued are not yet counted (best-effort at teardown).
+    fn wire_bytes(&self) -> u64 {
+        0
+    }
 }
 
 // ---------------------------------------------------------------------------
 // In-process transport
 // ---------------------------------------------------------------------------
 
+/// Measures what a message *would* cost on the wire (in-proc accounting).
+type WireMeter<P> = Arc<dyn Fn(&NetMsg<P>) -> u64 + Send + Sync>;
+
 struct InProcShared<P> {
     inboxes: RwLock<HashMap<AgentId, Sender<NetMsg<P>>>>,
     /// Per-sender delivery counters (message-count metrics for benches).
     sent: Mutex<HashMap<AgentId, u64>>,
+    /// Optional wire-byte meter (see [`InProcNetwork::with_wire_accounting`]).
+    meter: Option<WireMeter<P>>,
 }
 
 /// Factory for a set of connected in-process endpoints.
@@ -237,10 +334,15 @@ pub struct InProcNetwork<P> {
 
 impl<P: Send + 'static> InProcNetwork<P> {
     pub fn new() -> Self {
+        Self::with_meter(None)
+    }
+
+    fn with_meter(meter: Option<WireMeter<P>>) -> Self {
         InProcNetwork {
             shared: Arc::new(InProcShared {
                 inboxes: RwLock::new(HashMap::new()),
                 sent: Mutex::new(HashMap::new()),
+                meter,
             }),
         }
     }
@@ -257,12 +359,27 @@ impl<P: Send + 'static> InProcNetwork<P> {
             me: agent,
             shared: Arc::clone(&self.shared),
             inbox: Mutex::new(rx),
+            wire_bytes: AtomicU64::new(0),
         }
     }
 
     /// Total messages sent through the fabric (all endpoints).
     pub fn total_sent(&self) -> u64 {
         self.shared.sent.lock().unwrap().values().sum()
+    }
+}
+
+impl<P: Wire + Send + 'static> InProcNetwork<P> {
+    /// A fabric with **wire-byte accounting**: every send is additionally
+    /// encoded with `codec` (result discarded) purely to measure the
+    /// bytes a TCP deployment would emit — frame body plus the 4-byte
+    /// length prefix.  Off by default, since the measurement costs one
+    /// encode per send; benches use it for codec byte comparisons on
+    /// runs that never touch a socket.
+    pub fn with_wire_accounting(codec: WireCodec) -> Self {
+        Self::with_meter(Some(Arc::new(move |m: &NetMsg<P>| {
+            encode_msg(codec, m).len() as u64 + 4
+        })))
     }
 }
 
@@ -277,6 +394,8 @@ pub struct InProcEndpoint<P> {
     me: AgentId,
     shared: Arc<InProcShared<P>>,
     inbox: Mutex<Receiver<NetMsg<P>>>,
+    /// Metered bytes (0 unless the fabric has wire accounting).
+    wire_bytes: AtomicU64,
 }
 
 impl<P: Send + 'static> Transport<P> for InProcEndpoint<P> {
@@ -295,6 +414,9 @@ impl<P: Send + 'static> Transport<P> for InProcEndpoint<P> {
         let tx = inboxes
             .get(&to)
             .ok_or_else(|| anyhow!("unknown agent {to}"))?;
+        if let Some(meter) = &self.shared.meter {
+            self.wire_bytes.fetch_add(meter(&msg), Ordering::Relaxed);
+        }
         tx.send(msg).map_err(|_| anyhow!("agent {to} hung up"))?;
         *self.shared.sent.lock().unwrap().entry(self.me).or_insert(0) += 1;
         Ok(())
@@ -308,17 +430,94 @@ impl<P: Send + 'static> Transport<P> for InProcEndpoint<P> {
             rx.recv_timeout(timeout).ok()
         }
     }
+
+    fn wire_bytes(&self) -> u64 {
+        self.wire_bytes.load(Ordering::Relaxed)
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Wire encoding (TCP mode)
 // ---------------------------------------------------------------------------
 
-/// JSON-encodable payloads (needed only for the TCP transport; the
-/// in-process transport moves values directly).
+/// Frame body encoding, selected by the sender per connection (see the
+/// module docs for the full format specification).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WireCodec {
+    /// Compact binary (default): varint ids, raw-bit f64, no text.
+    #[default]
+    Binary,
+    /// JSON text — byte-compatible with pre-codec fleets (no preamble),
+    /// readable on the wire; the interop/debug fallback.
+    Json,
+}
+
+impl WireCodec {
+    /// Preamble codec tag.
+    pub fn tag(self) -> u8 {
+        match self {
+            WireCodec::Json => 0,
+            WireCodec::Binary => 1,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<WireCodec> {
+        match tag {
+            0 => Some(WireCodec::Json),
+            1 => Some(WireCodec::Binary),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for WireCodec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireCodec::Binary => write!(f, "binary"),
+            WireCodec::Json => write!(f, "json"),
+        }
+    }
+}
+
+impl std::str::FromStr for WireCodec {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "binary" | "bin" => Ok(WireCodec::Binary),
+            "json" | "text" => Ok(WireCodec::Json),
+            other => Err(format!("unknown wire codec '{other}' (binary|json)")),
+        }
+    }
+}
+
+/// Connection preamble magic.  Chosen so it can never be mistaken for a
+/// frame length prefix: as a u32 BE length it would claim a >1 GiB frame,
+/// far beyond any accepted limit.
+pub const WIRE_MAGIC: [u8; 4] = *b"DSIM";
+
+/// Bump on any incompatible change to an *existing* binary field layout
+/// (new message kinds take new tags instead; see module docs).
+pub const WIRE_VERSION: u8 = 1;
+
+/// Wire-encodable payloads (needed only for the TCP transport and byte
+/// accounting; the in-process transport moves values directly).  JSON is
+/// the mandatory base form; the binary form defaults to bridging through
+/// the JSON tree — still raw-bit f64, no text — and hot payload types
+/// override it with a dedicated tag+fields encoding.
 pub trait Wire: Sized {
     fn to_json(&self) -> Json;
     fn from_json(j: &Json) -> Result<Self>;
+
+    /// Append this value's binary wire form.
+    fn encode_bin(&self, out: &mut Vec<u8>) {
+        self.to_json().encode_bin(out);
+    }
+
+    /// Decode one value produced by [`encode_bin`](Self::encode_bin).
+    fn decode_bin(r: &mut bin::Reader) -> Result<Self> {
+        let j = Json::decode_bin(r)?;
+        Self::from_json(&j)
+    }
 }
 
 impl Wire for u32 {
@@ -329,6 +528,13 @@ impl Wire for u32 {
         j.as_u64()
             .map(|v| v as u32)
             .ok_or_else(|| anyhow!("expected number"))
+    }
+    fn encode_bin(&self, out: &mut Vec<u8>) {
+        bin::put_u64(out, *self as u64);
+    }
+    fn decode_bin(r: &mut bin::Reader) -> Result<Self> {
+        let v = r.u64()?;
+        u32::try_from(v).map_err(|_| anyhow!("u32 payload out of range: {v}"))
     }
 }
 
@@ -667,6 +873,7 @@ pub fn msg_to_json<P: Wire>(m: &NetMsg<P>) -> Json {
             from,
             events,
             sync,
+            space,
             bound,
         } => {
             let mut fields = vec![
@@ -676,6 +883,10 @@ pub fn msg_to_json<P: Wire>(m: &NetMsg<P>) -> Json {
                 ("evs", Json::arr(events.iter().map(event_to_json))),
                 ("sync", Json::arr(sync.iter().map(sync_to_json))),
             ];
+            // Absent keys keep pre-space and pre-codec frames decoding.
+            if !space.is_empty() {
+                fields.push(("sp", Json::arr(space.iter().map(|op| op.to_json()))));
+            }
             // Absent key = no promise (non-final split chunk).
             if let Some(b) = bound {
                 fields.push(("b", time_to_json(*b)));
@@ -711,11 +922,19 @@ pub fn msg_from_json<P: Wire>(j: &Json) -> Result<NetMsg<P>> {
             for s in j.get("sync").and_then(Json::as_arr).context("sync")? {
                 sync.push(sync_from_json(s)?);
             }
+            // Absent in pre-space frames: no replication ops.
+            let mut space = Vec::new();
+            if let Some(sp) = j.get("sp") {
+                for op in sp.as_arr().context("sp")? {
+                    space.push(SpaceMsg::from_json(op)?);
+                }
+            }
             Ok(NetMsg::WindowBatch {
                 context: ContextId(j.get("ctx").and_then(Json::as_u64).context("ctx")?),
                 from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
                 events,
                 sync,
+                space,
                 bound: match j.get("b") {
                     Some(b) => Some(time_from_json(b)?),
                     None => None,
@@ -727,13 +946,476 @@ pub fn msg_from_json<P: Wire>(j: &Json) -> Result<NetMsg<P>> {
             from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
             msg: sync_from_json(j.get("msg").context("msg")?)?,
         }),
-        Some("space") => Ok(NetMsg::Space(crate::space::SpaceMsg::from_json(
-            j.get("op").context("op")?,
-        )?)),
+        Some("space") => Ok(NetMsg::Space(SpaceMsg::from_json(j.get("op").context("op")?)?)),
         Some("control") => Ok(NetMsg::Control(control_from_json(
             j.get("c").context("c")?,
         )?)),
         _ => bail!("bad net msg {j}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary codec (format spec in the module docs)
+// ---------------------------------------------------------------------------
+
+/// Decode-side pre-allocation ceiling for vec counts.  `len_prefix`
+/// bounds a count by the *bytes* remaining, but elements can be far
+/// larger in memory than on the wire — capping the reserved capacity
+/// keeps a hostile count from amplifying a 64 MiB frame into a multi-GiB
+/// allocation; genuine larger vecs just grow amortized past the hint.
+const CAP_HINT: usize = 1024;
+
+fn put_time(out: &mut Vec<u8>, t: SimTime) {
+    bin::put_f64(out, t.secs());
+}
+
+fn get_time(r: &mut bin::Reader) -> Result<SimTime> {
+    let v = r.f64()?;
+    if v.is_nan() {
+        bail!("NaN timestamp on the wire");
+    }
+    Ok(SimTime::new(v))
+}
+
+fn event_to_bin<P: Wire>(out: &mut Vec<u8>, e: &Event<P>) {
+    put_time(out, e.time);
+    bin::put_u64(out, e.tie.0);
+    bin::put_u64(out, e.tie.1);
+    bin::put_u64(out, e.src_agent.raw());
+    bin::put_u64(out, e.src_lp.raw());
+    bin::put_u64(out, e.dst_lp.raw());
+    e.payload.encode_bin(out);
+}
+
+fn event_from_bin<P: Wire>(r: &mut bin::Reader) -> Result<Event<P>> {
+    Ok(Event {
+        time: get_time(r)?,
+        tie: (r.u64()?, r.u64()?),
+        src_agent: AgentId(r.u64()?),
+        src_lp: LpId(r.u64()?),
+        dst_lp: LpId(r.u64()?),
+        payload: P::decode_bin(r)?,
+    })
+}
+
+fn sync_to_bin(out: &mut Vec<u8>, m: &SyncMsg) {
+    match m {
+        SyncMsg::LvtRequest { need, lvt } => {
+            out.push(1);
+            put_time(out, *need);
+            put_time(out, *lvt);
+        }
+        SyncMsg::LvtAnnounce { bound } => {
+            out.push(2);
+            put_time(out, *bound);
+        }
+    }
+}
+
+fn sync_from_bin(r: &mut bin::Reader) -> Result<SyncMsg> {
+    match r.u8()? {
+        1 => Ok(SyncMsg::LvtRequest {
+            need: get_time(r)?,
+            lvt: get_time(r)?,
+        }),
+        2 => Ok(SyncMsg::LvtAnnounce { bound: get_time(r)? }),
+        t => bail!("bad sync tag {t}"),
+    }
+}
+
+fn space_to_bin(out: &mut Vec<u8>, m: &SpaceMsg) {
+    match m {
+        SpaceMsg::Write(e) => {
+            out.push(1);
+            bin::put_str(out, &e.key);
+            e.fields.encode_bin(out);
+            bin::put_u64(out, e.version);
+            bin::put_u64(out, e.writer.raw());
+        }
+        SpaceMsg::Remove { key, version } => {
+            out.push(2);
+            bin::put_str(out, key);
+            bin::put_u64(out, *version);
+        }
+    }
+}
+
+fn space_from_bin(r: &mut bin::Reader) -> Result<SpaceMsg> {
+    match r.u8()? {
+        1 => Ok(SpaceMsg::Write(crate::space::Entry {
+            key: r.str()?,
+            fields: Json::decode_bin(r)?,
+            version: r.u64()?,
+            writer: AgentId(r.u64()?),
+        })),
+        2 => Ok(SpaceMsg::Remove {
+            key: r.str()?,
+            version: r.u64()?,
+        }),
+        t => bail!("bad space tag {t}"),
+    }
+}
+
+fn control_to_bin(out: &mut Vec<u8>, c: &ControlMsg) {
+    use ControlMsg::*;
+    match c {
+        DeployLp {
+            context,
+            lp,
+            kind,
+            params,
+        } => {
+            out.push(1);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, lp.raw());
+            bin::put_str(out, kind);
+            params.encode_bin(out);
+        }
+        RoutingTable { context, routes } => {
+            out.push(2);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, routes.len() as u64);
+            for (lp, agent) in routes {
+                bin::put_u64(out, lp.raw());
+                bin::put_u64(out, agent.raw());
+            }
+        }
+        Bootstrap {
+            context,
+            time,
+            dst,
+            payload,
+        } => {
+            out.push(3);
+            bin::put_u64(out, context.raw());
+            put_time(out, *time);
+            bin::put_u64(out, dst.raw());
+            payload.encode_bin(out);
+        }
+        StartRun {
+            context,
+            participants,
+        } => {
+            out.push(4);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, participants.len() as u64);
+            for a in participants {
+                bin::put_u64(out, a.raw());
+            }
+        }
+        Probe { context, round } => {
+            out.push(5);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, *round);
+        }
+        ProbeReply {
+            context,
+            round,
+            from,
+            idle,
+            sent,
+            received,
+            lvt,
+            next_event,
+            windows,
+        } => {
+            out.push(6);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, *round);
+            bin::put_u64(out, from.raw());
+            bin::put_bool(out, *idle);
+            bin::put_u64(out, *sent);
+            bin::put_u64(out, *received);
+            put_time(out, *lvt);
+            put_time(out, *next_event);
+            bin::put_u64(out, *windows);
+        }
+        GvtUpdate { context, gvt } => {
+            out.push(7);
+            bin::put_u64(out, context.raw());
+            put_time(out, *gvt);
+        }
+        EndRun { context } => {
+            out.push(8);
+            bin::put_u64(out, context.raw());
+        }
+        FinalStats {
+            context,
+            from,
+            stats,
+        } => {
+            out.push(9);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, from.raw());
+            stats.encode_bin(out);
+        }
+        Result {
+            context,
+            kind,
+            record,
+        } => {
+            out.push(10);
+            bin::put_u64(out, context.raw());
+            bin::put_str(out, kind);
+            record.encode_bin(out);
+        }
+        WindowReport {
+            context,
+            from,
+            windows,
+            records,
+        } => {
+            out.push(11);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, from.raw());
+            bin::put_u64(out, *windows);
+            bin::put_u64(out, records.len() as u64);
+            for (kind, record) in records {
+                bin::put_str(out, kind);
+                record.encode_bin(out);
+            }
+        }
+        PerfSample { from, value, load } => {
+            out.push(12);
+            bin::put_u64(out, from.raw());
+            bin::put_f64(out, *value);
+            load.encode_bin(out);
+        }
+        Shutdown => out.push(13),
+    }
+}
+
+fn control_from_bin(r: &mut bin::Reader) -> Result<ControlMsg> {
+    let tag = r.u8()?;
+    Ok(match tag {
+        1 => ControlMsg::DeployLp {
+            context: ContextId(r.u64()?),
+            lp: LpId(r.u64()?),
+            kind: r.str()?,
+            params: Json::decode_bin(r)?,
+        },
+        2 => {
+            let context = ContextId(r.u64()?);
+            let n = r.len_prefix()?;
+            let mut routes = Vec::with_capacity(n.min(CAP_HINT));
+            for _ in 0..n {
+                routes.push((LpId(r.u64()?), AgentId(r.u64()?)));
+            }
+            ControlMsg::RoutingTable { context, routes }
+        }
+        3 => ControlMsg::Bootstrap {
+            context: ContextId(r.u64()?),
+            time: get_time(r)?,
+            dst: LpId(r.u64()?),
+            payload: Json::decode_bin(r)?,
+        },
+        4 => {
+            let context = ContextId(r.u64()?);
+            let n = r.len_prefix()?;
+            let mut participants = Vec::with_capacity(n.min(CAP_HINT));
+            for _ in 0..n {
+                participants.push(AgentId(r.u64()?));
+            }
+            ControlMsg::StartRun {
+                context,
+                participants,
+            }
+        }
+        5 => ControlMsg::Probe {
+            context: ContextId(r.u64()?),
+            round: r.u64()?,
+        },
+        6 => ControlMsg::ProbeReply {
+            context: ContextId(r.u64()?),
+            round: r.u64()?,
+            from: AgentId(r.u64()?),
+            idle: r.bool()?,
+            sent: r.u64()?,
+            received: r.u64()?,
+            lvt: get_time(r)?,
+            next_event: get_time(r)?,
+            windows: r.u64()?,
+        },
+        7 => ControlMsg::GvtUpdate {
+            context: ContextId(r.u64()?),
+            gvt: get_time(r)?,
+        },
+        8 => ControlMsg::EndRun {
+            context: ContextId(r.u64()?),
+        },
+        9 => ControlMsg::FinalStats {
+            context: ContextId(r.u64()?),
+            from: AgentId(r.u64()?),
+            stats: Json::decode_bin(r)?,
+        },
+        10 => ControlMsg::Result {
+            context: ContextId(r.u64()?),
+            kind: r.str()?,
+            record: Json::decode_bin(r)?,
+        },
+        11 => {
+            let context = ContextId(r.u64()?);
+            let from = AgentId(r.u64()?);
+            let windows = r.u64()?;
+            let n = r.len_prefix()?;
+            let mut records = Vec::with_capacity(n.min(CAP_HINT));
+            for _ in 0..n {
+                records.push((r.str()?, Json::decode_bin(r)?));
+            }
+            ControlMsg::WindowReport {
+                context,
+                from,
+                windows,
+                records,
+            }
+        }
+        12 => ControlMsg::PerfSample {
+            from: AgentId(r.u64()?),
+            value: r.f64()?,
+            load: Json::decode_bin(r)?,
+        },
+        13 => ControlMsg::Shutdown,
+        t => bail!("bad control tag {t}"),
+    })
+}
+
+fn msg_to_bin<P: Wire>(out: &mut Vec<u8>, m: &NetMsg<P>) {
+    match m {
+        NetMsg::Event {
+            context,
+            event,
+            bound,
+        } => {
+            out.push(1);
+            bin::put_u64(out, context.raw());
+            event_to_bin(out, event);
+            put_time(out, *bound);
+        }
+        NetMsg::WindowBatch {
+            context,
+            from,
+            events,
+            sync,
+            space,
+            bound,
+        } => {
+            out.push(2);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, from.raw());
+            bin::put_u64(out, events.len() as u64);
+            for e in events {
+                event_to_bin(out, e);
+            }
+            bin::put_u64(out, sync.len() as u64);
+            for s in sync {
+                sync_to_bin(out, s);
+            }
+            bin::put_u64(out, space.len() as u64);
+            for op in space {
+                space_to_bin(out, op);
+            }
+            match bound {
+                Some(b) => {
+                    out.push(1);
+                    put_time(out, *b);
+                }
+                None => out.push(0),
+            }
+        }
+        NetMsg::Sync { context, from, msg } => {
+            out.push(3);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, from.raw());
+            sync_to_bin(out, msg);
+        }
+        NetMsg::Space(op) => {
+            out.push(4);
+            space_to_bin(out, op);
+        }
+        NetMsg::Control(c) => {
+            out.push(5);
+            control_to_bin(out, c);
+        }
+    }
+}
+
+fn msg_from_bin<P: Wire>(r: &mut bin::Reader) -> Result<NetMsg<P>> {
+    let tag = r.u8()?;
+    Ok(match tag {
+        1 => NetMsg::Event {
+            context: ContextId(r.u64()?),
+            event: event_from_bin(r)?,
+            bound: get_time(r)?,
+        },
+        2 => {
+            let context = ContextId(r.u64()?);
+            let from = AgentId(r.u64()?);
+            let n = r.len_prefix()?;
+            let mut events = Vec::with_capacity(n.min(CAP_HINT));
+            for _ in 0..n {
+                events.push(event_from_bin(r)?);
+            }
+            let n = r.len_prefix()?;
+            let mut sync = Vec::with_capacity(n.min(CAP_HINT));
+            for _ in 0..n {
+                sync.push(sync_from_bin(r)?);
+            }
+            let n = r.len_prefix()?;
+            let mut space = Vec::with_capacity(n.min(CAP_HINT));
+            for _ in 0..n {
+                space.push(space_from_bin(r)?);
+            }
+            let bound = match r.u8()? {
+                0 => None,
+                1 => Some(get_time(r)?),
+                t => bail!("bad option tag {t}"),
+            };
+            NetMsg::WindowBatch {
+                context,
+                from,
+                events,
+                sync,
+                space,
+                bound,
+            }
+        }
+        3 => NetMsg::Sync {
+            context: ContextId(r.u64()?),
+            from: AgentId(r.u64()?),
+            msg: sync_from_bin(r)?,
+        },
+        4 => NetMsg::Space(space_from_bin(r)?),
+        5 => NetMsg::Control(control_from_bin(r)?),
+        t => bail!("bad net msg tag {t}"),
+    })
+}
+
+/// Encode one message as a frame body under `codec`.
+pub fn encode_msg<P: Wire>(codec: WireCodec, m: &NetMsg<P>) -> Vec<u8> {
+    match codec {
+        WireCodec::Json => msg_to_json(m).to_string().into_bytes(),
+        WireCodec::Binary => {
+            let mut out = Vec::with_capacity(64);
+            msg_to_bin(&mut out, m);
+            out
+        }
+    }
+}
+
+/// Decode one frame body under `codec`.  Rejects trailing bytes in binary
+/// bodies (a corrupt or foreign frame, not a prefix of one).
+pub fn decode_msg<P: Wire>(codec: WireCodec, bytes: &[u8]) -> Result<NetMsg<P>> {
+    match codec {
+        WireCodec::Json => {
+            let text = std::str::from_utf8(bytes).context("frame is not utf8")?;
+            msg_from_json(&Json::parse(text).map_err(anyhow::Error::from)?)
+        }
+        WireCodec::Binary => {
+            let mut r = bin::Reader::new(bytes);
+            let m = msg_from_bin(&mut r)?;
+            r.finish()?;
+            Ok(m)
+        }
     }
 }
 
@@ -750,6 +1432,38 @@ pub fn msg_from_json<P: Wire>(j: &Json) -> Result<NetMsg<P>> {
 /// must match on every agent); outbound `WindowBatch` frames above the
 /// limit are split, inbound oversized frames are drained and skipped.
 pub const DEFAULT_MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Default bound of each per-peer writer queue, in messages.  Deep enough
+/// to absorb a window's burst of batch frames; shallow enough that an
+/// agent outrunning a dead-slow peer blocks (bounded memory) instead of
+/// buffering without limit.  Configurable via
+/// `deploy.writer_queue_frames` / `dsim agent --writer-queue-frames`.
+pub const DEFAULT_WRITER_QUEUE_FRAMES: usize = 256;
+
+/// Tuning knobs for a TCP endpoint.
+#[derive(Clone, Copy, Debug)]
+pub struct TcpOptions {
+    /// Frame-size ceiling in bytes (see [`DEFAULT_MAX_FRAME_BYTES`]).
+    pub max_frame: usize,
+    /// Frame body encoding for *outbound* connections.  Inbound frames
+    /// are decoded per each sender's preamble, so mixed-codec fleets
+    /// interoperate in both directions.
+    pub codec: WireCodec,
+    /// Bound of each per-peer writer queue, in messages
+    /// ([`DEFAULT_WRITER_QUEUE_FRAMES`]).  A full queue blocks the
+    /// sender — backpressure, never loss.
+    pub writer_queue: usize,
+}
+
+impl Default for TcpOptions {
+    fn default() -> Self {
+        TcpOptions {
+            max_frame: DEFAULT_MAX_FRAME_BYTES,
+            codec: WireCodec::default(),
+            writer_queue: DEFAULT_WRITER_QUEUE_FRAMES,
+        }
+    }
+}
 
 /// Length-prefixed frame I/O.
 fn write_frame(stream: &mut TcpStream, bytes: &[u8]) -> Result<()> {
@@ -773,6 +1487,16 @@ fn write_frame(stream: &mut TcpStream, bytes: &[u8]) -> Result<()> {
 fn read_frame(stream: &mut TcpStream, max_bytes: usize) -> Result<Option<Vec<u8>>> {
     let mut len = [0u8; 4];
     stream.read_exact(&mut len)?;
+    read_frame_body(stream, len, max_bytes)
+}
+
+/// [`read_frame`] with the 4 length bytes already consumed (the preamble
+/// sniff reads them to distinguish magic from a frame length).
+fn read_frame_body(
+    stream: &mut TcpStream,
+    len: [u8; 4],
+    max_bytes: usize,
+) -> Result<Option<Vec<u8>>> {
     let n = u32::from_be_bytes(len) as usize;
     if n > max_bytes {
         log::error!(
@@ -794,40 +1518,177 @@ fn read_frame(stream: &mut TcpStream, max_bytes: usize) -> Result<Option<Vec<u8>
     Ok(Some(buf))
 }
 
-/// TCP endpoint: one listener for inbound peers, one persistent outbound
-/// socket per peer (established lazily); reader threads funnel frames into
-/// a single inbox channel.
+/// Sniff a new inbound connection: a binary sender opens with
+/// `WIRE_MAGIC | version | codec`; a bare stream (JSON codec, or a
+/// pre-codec peer) starts directly with its first frame's length prefix,
+/// which is returned as `pending` so no byte is lost.  `Ok(None)` means
+/// the preamble was present but unusable (version/codec mismatch) — the
+/// caller drops only this connection.
+fn read_connection_codec(
+    stream: &mut TcpStream,
+) -> std::io::Result<Option<(WireCodec, Option<[u8; 4]>)>> {
+    let mut head = [0u8; 4];
+    stream.read_exact(&mut head)?;
+    if head != WIRE_MAGIC {
+        return Ok(Some((WireCodec::Json, Some(head))));
+    }
+    let mut vc = [0u8; 2];
+    stream.read_exact(&mut vc)?;
+    if vc[0] != WIRE_VERSION {
+        log::error!(
+            "dropping connection with wire version {} (this agent speaks {WIRE_VERSION}); \
+             run mixed fleets with --wire-codec json",
+            vc[0]
+        );
+        return Ok(None);
+    }
+    match WireCodec::from_tag(vc[1]) {
+        Some(codec) => Ok(Some((codec, None))),
+        None => {
+            log::error!("dropping connection with unknown wire codec tag {}", vc[1]);
+            Ok(None)
+        }
+    }
+}
+
+/// Encode `msg` under `codec`, splitting over-limit batch frames into
+/// smaller chunks: a [`NetMsg::WindowBatch`] by halving its event list
+/// (non-final chunks carry no sync flush, no space ops and no bound, so
+/// the promise stays behind everything it covers), a
+/// [`ControlMsg::WindowReport`] by halving its record list (the
+/// cumulative window count is idempotent).  Anything else over the limit
+/// is a hard error — the receiver would drain and drop it anyway.
+/// Encoded frame bodies are appended to `out` in send order.
+fn encode_split<P: Wire>(
+    codec: WireCodec,
+    max_frame: usize,
+    msg: NetMsg<P>,
+    out: &mut Vec<Vec<u8>>,
+) -> Result<()> {
+    let body = encode_msg(codec, &msg);
+    if body.len() <= max_frame {
+        out.push(body);
+        return Ok(());
+    }
+    match msg {
+        NetMsg::WindowBatch {
+            context,
+            from,
+            mut events,
+            sync,
+            space,
+            bound,
+        } if events.len() > 1 => {
+            let tail = events.split_off(events.len() / 2);
+            encode_split(
+                codec,
+                max_frame,
+                NetMsg::WindowBatch {
+                    context,
+                    from,
+                    events,
+                    sync: Vec::new(),
+                    space: Vec::new(),
+                    bound: None,
+                },
+                out,
+            )?;
+            encode_split(
+                codec,
+                max_frame,
+                NetMsg::WindowBatch {
+                    context,
+                    from,
+                    events: tail,
+                    sync,
+                    space,
+                    bound,
+                },
+                out,
+            )
+        }
+        NetMsg::Control(ControlMsg::WindowReport {
+            context,
+            from,
+            windows,
+            mut records,
+        }) if records.len() > 1 => {
+            let tail = records.split_off(records.len() / 2);
+            encode_split(
+                codec,
+                max_frame,
+                NetMsg::Control(ControlMsg::WindowReport {
+                    context,
+                    from,
+                    windows,
+                    records,
+                }),
+                out,
+            )?;
+            encode_split(
+                codec,
+                max_frame,
+                NetMsg::Control(ControlMsg::WindowReport {
+                    context,
+                    from,
+                    windows,
+                    records: tail,
+                }),
+                out,
+            )
+        }
+        _ => bail!(
+            "frame too large: {} bytes > {} limit (unsplittable)",
+            body.len(),
+            max_frame
+        ),
+    }
+}
+
+/// One peer's dedicated writer: a bounded message queue feeding a thread
+/// that encodes and transmits.
+struct PeerWriter<P> {
+    tx: SyncSender<NetMsg<P>>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+/// TCP endpoint: one listener for inbound peers; per-connection reader
+/// threads funnel decoded frames into a single inbox channel; one writer
+/// thread per outbound peer (spawned lazily) owns that peer's socket.
 pub struct TcpTransport<P> {
     me: AgentId,
     peers: HashMap<AgentId, SocketAddr>,
-    max_frame: usize,
-    outbound: Mutex<HashMap<AgentId, TcpStream>>,
+    opts: TcpOptions,
+    writers: Mutex<HashMap<AgentId, PeerWriter<P>>>,
     inbox: Mutex<Receiver<NetMsg<P>>>,
     inbox_tx: Sender<NetMsg<P>>,
+    /// Bytes the writer threads have put on the wire (frames + prefixes
+    /// + preambles).
+    bytes_sent: Arc<AtomicU64>,
     _listener: std::thread::JoinHandle<()>,
 }
 
 impl<P: Wire + Send + 'static> TcpTransport<P> {
     /// Bind `bind_addr` for `me` and remember the full peer address map
-    /// (including self).  Uses the default frame-size limit.
+    /// (including self).  Uses default [`TcpOptions`].
     pub fn bind(
         me: AgentId,
         bind_addr: SocketAddr,
         peers: HashMap<AgentId, SocketAddr>,
     ) -> Result<Self> {
-        Self::bind_with(me, bind_addr, peers, DEFAULT_MAX_FRAME_BYTES)
+        Self::bind_with(me, bind_addr, peers, TcpOptions::default())
     }
 
-    /// [`bind`](Self::bind) with an explicit frame-size limit in bytes.
+    /// [`bind`](Self::bind) with explicit [`TcpOptions`].
     pub fn bind_with(
         me: AgentId,
         bind_addr: SocketAddr,
         peers: HashMap<AgentId, SocketAddr>,
-        max_frame: usize,
+        opts: TcpOptions,
     ) -> Result<Self> {
         let listener =
             TcpListener::bind(bind_addr).with_context(|| format!("bind {bind_addr} for {me}"))?;
-        Self::from_listener(me, listener, peers, max_frame)
+        Self::from_listener(me, listener, peers, opts)
     }
 
     /// Build an endpoint from an already-bound listener.  Lets callers use
@@ -839,38 +1700,48 @@ impl<P: Wire + Send + 'static> TcpTransport<P> {
         me: AgentId,
         listener: TcpListener,
         peers: HashMap<AgentId, SocketAddr>,
-        max_frame: usize,
+        opts: TcpOptions,
     ) -> Result<Self> {
         let (tx, rx) = channel();
         let tx_accept = tx.clone();
+        let max_frame = opts.max_frame;
         let handle = std::thread::Builder::new()
             .name(format!("dsim-tcp-accept-{me}"))
             .spawn(move || {
                 for stream in listener.incoming() {
                     let Ok(mut stream) = stream else { break };
                     let tx = tx_accept.clone();
-                    std::thread::spawn(move || loop {
-                        match read_frame(&mut stream, max_frame) {
-                            // Oversized frame skipped; connection still good.
-                            Ok(None) => continue,
-                            Ok(Some(bytes)) => {
-                                let Ok(text) = std::str::from_utf8(&bytes) else { break };
-                                match Json::parse(text)
-                                    .map_err(anyhow::Error::from)
-                                    .and_then(|j| msg_from_json::<P>(&j))
-                                {
+                    std::thread::spawn(move || {
+                        // Sniff the optional preamble; a bare stream is
+                        // JSON text (new json-codec peer or pre-codec
+                        // fleet member alike).
+                        let (codec, mut pending) = match read_connection_codec(&mut stream) {
+                            Ok(Some(x)) => x,
+                            // Unusable preamble or EOF before one frame:
+                            // only this connection is affected.
+                            Ok(None) | Err(_) => return,
+                        };
+                        loop {
+                            let frame = match pending.take() {
+                                Some(len) => read_frame_body(&mut stream, len, max_frame),
+                                None => read_frame(&mut stream, max_frame),
+                            };
+                            match frame {
+                                // Oversized frame skipped; connection still good.
+                                Ok(None) => continue,
+                                Ok(Some(bytes)) => match decode_msg::<P>(codec, &bytes) {
                                     Ok(msg) => {
                                         if tx.send(msg).is_err() {
                                             break;
                                         }
                                     }
                                     Err(e) => {
-                                        log::error!("bad frame: {e}");
+                                        log::error!("bad {codec} frame: {e:#}");
                                         break;
                                     }
-                                }
+                                },
+                                Err(_) => break,
                             }
-                            Err(_) => break,
                         }
                     });
                 }
@@ -878,124 +1749,134 @@ impl<P: Wire + Send + 'static> TcpTransport<P> {
         Ok(TcpTransport {
             me,
             peers,
-            max_frame,
-            outbound: Mutex::new(HashMap::new()),
+            opts,
+            writers: Mutex::new(HashMap::new()),
             inbox: Mutex::new(rx),
             inbox_tx: tx,
+            bytes_sent: Arc::new(AtomicU64::new(0)),
             _listener: handle,
         })
     }
 
-    fn connect(&self, to: AgentId) -> Result<TcpStream> {
-        let addr = self
+    /// Spawn the writer thread owning the socket to `to`.
+    fn spawn_writer(&self, to: AgentId) -> Result<PeerWriter<P>> {
+        let addr = *self
             .peers
             .get(&to)
             .ok_or_else(|| anyhow!("unknown peer {to}"))?;
-        // Retry briefly: peers race to bind at startup.
-        let mut last = None;
-        for _ in 0..50 {
-            match TcpStream::connect(addr) {
-                Ok(s) => {
-                    s.set_nodelay(true).ok();
-                    return Ok(s);
-                }
-                Err(e) => {
-                    last = Some(e);
-                    std::thread::sleep(Duration::from_millis(100));
-                }
-            }
-        }
-        Err(anyhow!("connect {to} at {addr}: {last:?}"))
+        let (tx, rx) = sync_channel(self.opts.writer_queue);
+        let me = self.me;
+        let opts = self.opts;
+        let bytes = Arc::clone(&self.bytes_sent);
+        let handle = std::thread::Builder::new()
+            .name(format!("dsim-tcp-writer-{me}-{to}"))
+            .spawn(move || writer_loop::<P>(me, to, addr, opts, rx, bytes))?;
+        Ok(PeerWriter { tx, handle })
     }
+}
 
-    /// Encode and transmit one frame, splitting over-limit batch frames
-    /// into smaller chunks: a [`NetMsg::WindowBatch`] by halving its event
-    /// list (non-final chunks carry no sync flush and no bound, so the
-    /// promise stays behind every event it covers), a
-    /// [`ControlMsg::WindowReport`] by halving its record list (the
-    /// cumulative window count is idempotent).  Anything else over the
-    /// limit is a hard error — the receiver would drain and drop it
-    /// anyway.
-    fn send_framed(&self, to: AgentId, msg: NetMsg<P>) -> Result<()> {
-        let text = msg_to_json(&msg).to_string();
-        if text.len() > self.max_frame {
-            match msg {
-                NetMsg::WindowBatch {
-                    context,
-                    from,
-                    mut events,
-                    sync,
-                    bound,
-                } if events.len() > 1 => {
-                    let tail = events.split_off(events.len() / 2);
-                    self.send_framed(
-                        to,
-                        NetMsg::WindowBatch {
-                            context,
-                            from,
-                            events,
-                            sync: Vec::new(),
-                            bound: None,
-                        },
-                    )?;
-                    return self.send_framed(
-                        to,
-                        NetMsg::WindowBatch {
-                            context,
-                            from,
-                            events: tail,
-                            sync,
-                            bound,
-                        },
-                    );
+/// Connect with startup retry (peers race to bind) and send the binary
+/// preamble when due; counts preamble bytes.
+fn connect_peer(
+    to: AgentId,
+    addr: SocketAddr,
+    codec: WireCodec,
+    bytes: &AtomicU64,
+) -> Result<TcpStream> {
+    let mut last = None;
+    for _ in 0..50 {
+        match TcpStream::connect(addr) {
+            Ok(mut s) => {
+                s.set_nodelay(true).ok();
+                if codec != WireCodec::Json {
+                    // JSON connections stay preamble-less — byte-compatible
+                    // with pre-codec receivers (module docs).
+                    let preamble = [
+                        WIRE_MAGIC[0],
+                        WIRE_MAGIC[1],
+                        WIRE_MAGIC[2],
+                        WIRE_MAGIC[3],
+                        WIRE_VERSION,
+                        codec.tag(),
+                    ];
+                    s.write_all(&preamble)?;
+                    bytes.fetch_add(preamble.len() as u64, Ordering::Relaxed);
                 }
-                NetMsg::Control(ControlMsg::WindowReport {
-                    context,
-                    from,
-                    windows,
-                    mut records,
-                }) if records.len() > 1 => {
-                    let tail = records.split_off(records.len() / 2);
-                    self.send_framed(
-                        to,
-                        NetMsg::Control(ControlMsg::WindowReport {
-                            context,
-                            from,
-                            windows,
-                            records,
-                        }),
-                    )?;
-                    return self.send_framed(
-                        to,
-                        NetMsg::Control(ControlMsg::WindowReport {
-                            context,
-                            from,
-                            windows,
-                            records: tail,
-                        }),
-                    );
-                }
-                _ => bail!(
-                    "frame too large: {} bytes > {} limit (unsplittable)",
-                    text.len(),
-                    self.max_frame
-                ),
+                return Ok(s);
+            }
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(100));
             }
         }
-        let mut outbound = self.outbound.lock().unwrap();
-        if !outbound.contains_key(&to) {
-            let s = self.connect(to)?;
-            outbound.insert(to, s);
+    }
+    Err(anyhow!("connect {to} at {addr}: {last:?}"))
+}
+
+/// The per-peer writer: encodes (and size-splits) each queued message and
+/// performs the blocking socket writes, off the agent thread.  `rx.iter()`
+/// drains everything already queued before observing disconnect, so a
+/// dropped transport flushes rather than truncates.  Any frame that cannot
+/// be transmitted — a hard connection failure, or an unsplittable
+/// over-limit message — ends the writer: the channel to that peer is
+/// compromised either way (the synchronous path surfaced these as send
+/// errors), and a dead writer turns every *subsequent* send into a loud
+/// error instead of a silently incomplete run.
+fn writer_loop<P: Wire>(
+    me: AgentId,
+    to: AgentId,
+    addr: SocketAddr,
+    opts: TcpOptions,
+    rx: Receiver<NetMsg<P>>,
+    bytes: Arc<AtomicU64>,
+) {
+    let mut stream: Option<TcpStream> = None;
+    let mut frames: Vec<Vec<u8>> = Vec::new();
+    for msg in rx.iter() {
+        frames.clear();
+        if let Err(e) = encode_split(opts.codec, opts.max_frame, msg, &mut frames) {
+            log::error!("{me}: writer to {to} exiting on undeliverable frame: {e:#}");
+            return;
         }
-        let stream = outbound.get_mut(&to).unwrap();
-        if let Err(e) = write_frame(stream, text.as_bytes()) {
-            // One reconnect attempt on a stale socket.
-            log::warn!("resend to {to} after {e}");
-            let mut s = self.connect(to)?;
-            write_frame(&mut s, text.as_bytes())?;
-            outbound.insert(to, s);
+        for frame in &frames {
+            if stream.is_none() {
+                match connect_peer(to, addr, opts.codec, &bytes) {
+                    Ok(s) => stream = Some(s),
+                    Err(e) => {
+                        log::error!("{me}: writer to {to} exiting (run will stall): {e:#}");
+                        return;
+                    }
+                }
+            }
+            let first_try = write_frame(stream.as_mut().expect("connected above"), frame);
+            if let Err(e) = first_try {
+                // One reconnect attempt on a stale socket.
+                log::warn!("{me}: resend to {to} after {e}");
+                stream = None;
+                let retried = connect_peer(to, addr, opts.codec, &bytes)
+                    .and_then(|mut s| write_frame(&mut s, frame).map(|()| s));
+                match retried {
+                    Ok(s) => stream = Some(s),
+                    Err(e) => {
+                        log::error!("{me}: writer to {to} exiting (run will stall): {e:#}");
+                        return;
+                    }
+                }
+            }
+            bytes.fetch_add(frame.len() as u64 + 4, Ordering::Relaxed);
         }
-        Ok(())
+    }
+}
+
+impl<P> Drop for TcpTransport<P> {
+    /// Flush and join every writer: dropping a sender lets its writer
+    /// drain the already-queued frames, then exit.
+    fn drop(&mut self) {
+        let writers = std::mem::take(&mut *self.writers.lock().unwrap());
+        for (_, w) in writers {
+            drop(w.tx);
+            let _ = w.handle.join();
+        }
     }
 }
 
@@ -1010,6 +1891,9 @@ impl<P: Wire + Clone + Send + 'static> Transport<P> for TcpTransport<P> {
         v
     }
 
+    /// Enqueue on the peer's bounded writer queue.  Blocks when the queue
+    /// is full (backpressure — frames are never dropped); errors if the
+    /// peer is unknown or its writer has exited on a dead connection.
     fn send(&self, to: AgentId, msg: NetMsg<P>) -> Result<()> {
         if to == self.me {
             // Loopback without a socket.
@@ -1018,7 +1902,25 @@ impl<P: Wire + Clone + Send + 'static> Transport<P> for TcpTransport<P> {
                 .map_err(|_| anyhow!("self inbox closed"))?;
             return Ok(());
         }
-        self.send_framed(to, msg)
+        // Clone the sender out of the lock: a backpressure block must not
+        // hold the writer map against sends to other peers.
+        let tx = {
+            let mut writers = self.writers.lock().unwrap();
+            if !writers.contains_key(&to) {
+                let w = self.spawn_writer(to)?;
+                writers.insert(to, w);
+            }
+            writers[&to].tx.clone()
+        };
+        if tx.send(msg).is_err() {
+            // Writer died (connection failure).  Remove it so a later send
+            // gets a fresh writer and thus a fresh connect attempt.
+            if let Some(w) = self.writers.lock().unwrap().remove(&to) {
+                let _ = w.handle.join();
+            }
+            bail!("writer for {to} has shut down (connection failed)");
+        }
+        Ok(())
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Option<NetMsg<P>> {
@@ -1028,6 +1930,10 @@ impl<P: Wire + Clone + Send + 'static> Transport<P> for TcpTransport<P> {
         } else {
             rx.recv_timeout(timeout).ok()
         }
+    }
+
+    fn wire_bytes(&self) -> u64 {
+        self.bytes_sent.load(Ordering::Relaxed)
     }
 }
 
@@ -1282,6 +2188,7 @@ mod tests {
                 from: AgentId(rng.below(8)),
                 events: (0..rng.below(6)).map(|_| rand_event(rng)).collect(),
                 sync: (0..rng.below(4)).map(|_| rand_sync(rng)).collect(),
+                space: (0..rng.below(3)).map(|_| rand_space(rng)).collect(),
                 bound: if rng.chance(0.7) {
                     Some(rand_time(rng))
                 } else {
@@ -1293,11 +2200,24 @@ mod tests {
                 from: AgentId(rng.below(8)),
                 msg: rand_sync(rng),
             },
-            3 => NetMsg::Space(crate::space::SpaceMsg::Remove {
+            3 => NetMsg::Space(rand_space(rng)),
+            _ => NetMsg::Control(rand_control(rng)),
+        }
+    }
+
+    fn rand_space(rng: &mut Pcg32) -> SpaceMsg {
+        if rng.chance(0.5) {
+            SpaceMsg::Write(crate::space::Entry {
+                key: format!("cpu/{}", rng.below(10)),
+                fields: rand_json(rng),
+                version: rng.below(100),
+                writer: AgentId(rng.below(8)),
+            })
+        } else {
+            SpaceMsg::Remove {
                 key: format!("key{}", rng.below(10)),
                 version: rng.below(100),
-            }),
-            _ => NetMsg::Control(rand_control(rng)),
+            }
         }
     }
 
@@ -1319,6 +2239,81 @@ mod tests {
                 Err(format!("re-encode mismatch:\n  {text}\n  {text2}"))
             }
         });
+    }
+
+    #[test]
+    fn binary_roundtrip_property_every_variant() {
+        crate::testkit::check("netmsg binary roundtrip", 300, |rng| {
+            let msg = rand_msg(rng);
+            let body = encode_msg(WireCodec::Binary, &msg);
+            let back: NetMsg<u32> = decode_msg(WireCodec::Binary, &body)
+                .map_err(|e| format!("decode: {e:#}"))?;
+            // Byte-identical re-encoding implies the decode lost nothing
+            // (the encoding is deterministic).
+            let body2 = encode_msg(WireCodec::Binary, &back);
+            if body != body2 {
+                return Err(format!("re-encode mismatch for {msg:?}"));
+            }
+            // Cross-codec agreement: the binary cycle and the JSON cycle
+            // must describe the same message.
+            let via_json = msg_to_json(&back).to_string();
+            let direct_json = msg_to_json(&msg).to_string();
+            if via_json != direct_json {
+                return Err(format!(
+                    "codec divergence:\n  {direct_json}\n  {via_json}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn binary_codec_is_smaller_than_json() {
+        // The codec exists to shrink the hot path; a representative batch
+        // frame must be several times smaller in binary.
+        let mut rng = Pcg32::seeded(7);
+        let msg: NetMsg<u32> = NetMsg::WindowBatch {
+            context: ContextId(1),
+            from: AgentId(1),
+            events: (0..32).map(|_| rand_event(&mut rng)).collect(),
+            sync: vec![SyncMsg::LvtAnnounce { bound: SimTime::new(1234.567890123) }],
+            space: vec![],
+            bound: Some(SimTime::new(1234.567890123)),
+        };
+        let json = encode_msg(WireCodec::Json, &msg).len();
+        let binary = encode_msg(WireCodec::Binary, &msg).len();
+        assert!(
+            binary * 3 <= json,
+            "binary {binary}B vs json {json}B: expected >= 3x reduction"
+        );
+    }
+
+    #[test]
+    fn binary_decode_rejects_corrupt_bodies() {
+        let msg: NetMsg<u32> = NetMsg::Control(ControlMsg::Probe {
+            context: ContextId(1),
+            round: 9,
+        });
+        let body = encode_msg(WireCodec::Binary, &msg);
+        // Truncations at every prefix length fail cleanly (never panic).
+        for cut in 0..body.len() {
+            assert!(
+                decode_msg::<u32>(WireCodec::Binary, &body[..cut]).is_err(),
+                "truncation at {cut} decoded"
+            );
+        }
+        // Trailing garbage is rejected, not ignored.
+        let mut long = body.clone();
+        long.push(0);
+        assert!(decode_msg::<u32>(WireCodec::Binary, &long).is_err());
+        // Unknown tags.
+        assert!(decode_msg::<u32>(WireCodec::Binary, &[0xee]).is_err());
+        // A huge vec count with no bytes behind it: rejected pre-alloc.
+        let mut evil = vec![2u8]; // WindowBatch
+        bin::put_u64(&mut evil, 1); // ctx
+        bin::put_u64(&mut evil, 1); // from
+        bin::put_u64(&mut evil, u32::MAX as u64); // "events"
+        assert!(decode_msg::<u32>(WireCodec::Binary, &evil).is_err());
     }
 
     #[test]
@@ -1354,12 +2349,14 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
-        // A batch frame without "b" (non-final split chunk): bound = None.
+        // A batch frame without "b" (non-final split chunk) and without
+        // "sp" (pre-space fleet): bound = None, no replication ops.
         let chunk = r#"{"k":"batch","ctx":1,"from":2,"evs":[],"sync":[]}"#;
         match msg_from_json::<u32>(&Json::parse(chunk).unwrap()).unwrap() {
-            NetMsg::WindowBatch { bound, events, .. } => {
+            NetMsg::WindowBatch { bound, events, space, .. } => {
                 assert!(bound.is_none());
                 assert!(events.is_empty());
+                assert!(space.is_empty());
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -1390,8 +2387,12 @@ mod tests {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let peers: HashMap<AgentId, SocketAddr> = [(AgentId(1), addr)].into_iter().collect();
+        let opts = TcpOptions {
+            max_frame: 1024,
+            ..TcpOptions::default()
+        };
         let t: TcpTransport<u32> =
-            TcpTransport::from_listener(AgentId(1), listener, peers, 1024).unwrap();
+            TcpTransport::from_listener(AgentId(1), listener, peers, opts).unwrap();
         // A rogue peer writes an oversized frame, then a valid one, on the
         // same connection: the reader thread must survive and deliver the
         // valid message.
@@ -1420,10 +2421,17 @@ mod tests {
         ]
         .into_iter()
         .collect();
+        // JSON codec: the split logic is codec-independent, and JSON's
+        // frame sizes make a 256-byte limit force a multi-way split.
+        let opts = TcpOptions {
+            max_frame: 256,
+            codec: WireCodec::Json,
+            ..TcpOptions::default()
+        };
         let t1: TcpTransport<u32> =
-            TcpTransport::from_listener(AgentId(1), l1, peers.clone(), 256).unwrap();
+            TcpTransport::from_listener(AgentId(1), l1, peers.clone(), opts).unwrap();
         let t2: TcpTransport<u32> =
-            TcpTransport::from_listener(AgentId(2), l2, peers, 256).unwrap();
+            TcpTransport::from_listener(AgentId(2), l2, peers, opts).unwrap();
         let events: Vec<Event<u32>> = (0..8u64)
             .map(|i| Event {
                 time: SimTime::new(i as f64),
@@ -1441,6 +2449,7 @@ mod tests {
                 from: AgentId(1),
                 events,
                 sync: vec![SyncMsg::LvtAnnounce { bound: SimTime::new(99.0) }],
+                space: vec![SpaceMsg::Remove { key: "k".into(), version: 1 }],
                 bound: Some(SimTime::new(99.0)),
             },
         )
@@ -1448,11 +2457,13 @@ mod tests {
         let mut got = Vec::new();
         let mut bounds = Vec::new();
         let mut syncs = 0;
+        let mut spaces = 0;
         while got.len() < 8 {
             match t2.recv_timeout(Duration::from_secs(5)).expect("batch chunk") {
-                NetMsg::WindowBatch { events, sync, bound, .. } => {
+                NetMsg::WindowBatch { events, sync, space, bound, .. } => {
                     got.extend(events.into_iter().map(|e| e.payload));
                     syncs += sync.len();
+                    spaces += space.len();
                     bounds.push(bound);
                 }
                 other => panic!("unexpected {other:?}"),
@@ -1463,10 +2474,49 @@ mod tests {
         assert!(bounds.last().unwrap().is_some(), "final chunk carries the bound");
         assert!(bounds[..bounds.len() - 1].iter().all(Option::is_none));
         assert_eq!(syncs, 1, "sync flush rides the final chunk only");
+        assert_eq!(spaces, 1, "space ops ride the final chunk only");
     }
 
     #[test]
-    fn unsplittable_oversized_frame_errors_on_send() {
+    fn unsplittable_oversized_frame_fails_loudly() {
+        let opts = TcpOptions {
+            max_frame: 64,
+            ..TcpOptions::default()
+        };
+        let (t1, t2) = tcp_pair(opts, opts);
+        // A control frame cannot be split; over the limit it kills the
+        // peer's writer (the receiver would drain and discard it anyway),
+        // so a subsequent send errors instead of the run silently missing
+        // a control-plane frame.  The death is asynchronous — poll.
+        let big = ControlMsg::Result {
+            context: ContextId(1),
+            kind: "x".repeat(128),
+            record: Json::Null,
+        };
+        t1.send(AgentId(2), NetMsg::Control(big)).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match t1.send(AgentId(2), NetMsg::Control(ControlMsg::Shutdown)) {
+                Err(_) => break, // writer observed dead: loud failure
+                Ok(()) => assert!(
+                    std::time::Instant::now() < deadline,
+                    "sends kept succeeding after an undeliverable frame"
+                ),
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // The receiver never saw the oversized frame.
+        assert!(!matches!(
+            t2.recv_timeout(Duration::from_millis(200)),
+            Some(NetMsg::Control(ControlMsg::Result { .. }))
+        ));
+    }
+
+    /// Two connected endpoints on OS-assigned ports.
+    fn tcp_pair(
+        o1: TcpOptions,
+        o2: TcpOptions,
+    ) -> (TcpTransport<u32>, TcpTransport<u32>) {
         let (l1, l2) = (
             TcpListener::bind("127.0.0.1:0").unwrap(),
             TcpListener::bind("127.0.0.1:0").unwrap(),
@@ -1477,18 +2527,108 @@ mod tests {
         ]
         .into_iter()
         .collect();
-        let t1: TcpTransport<u32> =
-            TcpTransport::from_listener(AgentId(1), l1, peers.clone(), 64).unwrap();
-        let _t2: TcpTransport<u32> =
-            TcpTransport::from_listener(AgentId(2), l2, peers, 64).unwrap();
-        // A control frame cannot be split; over the limit it must error
-        // rather than ship a frame the receiver would drain and drop.
-        let big = ControlMsg::Result {
-            context: ContextId(1),
-            kind: "x".repeat(128),
-            record: Json::Null,
-        };
-        assert!(t1.send(AgentId(2), NetMsg::Control(big)).is_err());
+        (
+            TcpTransport::from_listener(AgentId(1), l1, peers.clone(), o1).unwrap(),
+            TcpTransport::from_listener(AgentId(2), l2, peers, o2).unwrap(),
+        )
+    }
+
+    #[test]
+    fn mixed_codec_fleet_interoperates() {
+        // Agent 1 speaks binary (preamble), agent 2 speaks JSON (bare
+        // stream): each decodes the other per its connection.
+        let o_bin = TcpOptions { codec: WireCodec::Binary, ..TcpOptions::default() };
+        let o_json = TcpOptions { codec: WireCodec::Json, ..TcpOptions::default() };
+        let (t1, t2) = tcp_pair(o_bin, o_json);
+        t1.send(
+            AgentId(2),
+            NetMsg::Control(ControlMsg::Probe { context: ContextId(7), round: 3 }),
+        )
+        .unwrap();
+        match t2.recv_timeout(Duration::from_secs(5)).unwrap() {
+            NetMsg::Control(ControlMsg::Probe { context, round }) => {
+                assert_eq!((context, round), (ContextId(7), 3));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        t2.send(
+            AgentId(1),
+            NetMsg::Control(ControlMsg::Probe { context: ContextId(8), round: 4 }),
+        )
+        .unwrap();
+        match t1.recv_timeout(Duration::from_secs(5)).unwrap() {
+            NetMsg::Control(ControlMsg::Probe { context, round }) => {
+                assert_eq!((context, round), (ContextId(8), 4));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Binary bytes were actually metered on the wire.
+        assert!(t1.wire_bytes() > 0);
+    }
+
+    #[test]
+    fn bad_preamble_or_truncated_frame_only_kills_its_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peers: HashMap<AgentId, SocketAddr> = [(AgentId(1), addr)].into_iter().collect();
+        let t: TcpTransport<u32> =
+            TcpTransport::from_listener(AgentId(1), listener, peers, TcpOptions::default())
+                .unwrap();
+
+        // Rogue connection 1: valid magic, unknown codec tag.
+        let mut rogue = TcpStream::connect(addr).unwrap();
+        rogue.write_all(b"DSIM\x01\x7f").unwrap();
+        drop(rogue);
+        // Rogue connection 2: wrong version.
+        let mut rogue = TcpStream::connect(addr).unwrap();
+        rogue.write_all(b"DSIM\x63\x01").unwrap();
+        drop(rogue);
+        // Rogue connection 3: truncated frame (length prefix promises 100
+        // bytes, stream ends after 3).
+        let mut rogue = TcpStream::connect(addr).unwrap();
+        rogue.write_all(&100u32.to_be_bytes()).unwrap();
+        rogue.write_all(&[1, 2, 3]).unwrap();
+        drop(rogue);
+        // Rogue connection 4: garbage binary body behind a valid preamble.
+        let mut rogue = TcpStream::connect(addr).unwrap();
+        rogue.write_all(b"DSIM\x01\x01").unwrap();
+        write_frame(&mut rogue, &[0xee, 0xff]).unwrap();
+        drop(rogue);
+
+        // A well-formed connection afterwards still delivers.
+        let mut good = TcpStream::connect(addr).unwrap();
+        good.write_all(b"DSIM\x01\x01").unwrap();
+        let valid: NetMsg<u32> = NetMsg::Control(ControlMsg::Shutdown);
+        write_frame(&mut good, &encode_msg(WireCodec::Binary, &valid)).unwrap();
+        assert!(matches!(
+            t.recv_timeout(Duration::from_secs(5)).unwrap(),
+            NetMsg::Control(ControlMsg::Shutdown)
+        ));
+    }
+
+    #[test]
+    fn writer_queue_flushes_on_drop_and_preserves_fifo() {
+        // A tiny queue forces backpressure while the messages flow, and
+        // dropping the sender transport must flush everything queued.
+        let opts = TcpOptions { writer_queue: 1, ..TcpOptions::default() };
+        let (t1, t2) = tcp_pair(opts, opts);
+        const N: u64 = 200;
+        for i in 0..N {
+            t1.send(
+                AgentId(2),
+                NetMsg::Control(ControlMsg::Probe { context: ContextId(i), round: i }),
+            )
+            .unwrap();
+        }
+        drop(t1); // joins the writer after it drains the queue
+        for i in 0..N {
+            match t2.recv_timeout(Duration::from_secs(5)).expect("flushed frame") {
+                NetMsg::Control(ControlMsg::Probe { context, .. }) => {
+                    assert_eq!(context, ContextId(i), "FIFO violated");
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! Binary encoding primitives for the wire codec (the message-level frame
+//! layout lives in [`crate::transport`]'s module docs).
+//!
+//! Conventions, shared by every binary encoder in the tree:
+//!
+//! * **Unsigned integers** (ids, counts, lengths) are ULEB128 varints —
+//!   little-endian base-128, 7 value bits per byte, high bit = continue.
+//!   Ids and counts are small in practice, so varints beat any fixed
+//!   width by 4-8x on the hot path while still carrying full `u64` range.
+//! * **`f64`** is its 8 raw IEEE-754 bits, little-endian — timestamps
+//!   round-trip *bit-exactly* (including the `±inf` sentinels), with no
+//!   float printing or parsing anywhere near the hot path.
+//! * **Strings** are a varint byte length followed by raw UTF-8.
+//! * Every decode is bounds-checked against the remaining input: a
+//!   truncated or corrupt buffer yields a [`BinError`] with the failure
+//!   offset, never a panic — and a length prefix is validated against the
+//!   bytes actually present *before* any allocation, so a hostile frame
+//!   cannot request a gigabyte `Vec` with five bytes of input.
+
+use std::fmt;
+
+/// Decode error with byte offset for diagnostics.  (Display/Error are
+/// hand-rolled: the offline crate snapshot has no `thiserror`.)
+#[derive(Debug)]
+pub struct BinError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for BinError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "binary decode error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for BinError {}
+
+// ---------------------------------------------------------------------------
+// Writers
+// ---------------------------------------------------------------------------
+
+/// Append `v` as a ULEB128 varint.
+pub fn put_u64(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Append the raw little-endian IEEE-754 bits of `v`.
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Append a bool as a single 0/1 byte.
+pub fn put_bool(out: &mut Vec<u8>, b: bool) {
+    out.push(b as u8);
+}
+
+/// Append a varint-length-prefixed UTF-8 string.
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Append an optional string as the shared `opt<T>` form: a 0/1 byte,
+/// then the string when present.
+pub fn put_opt_str(out: &mut Vec<u8>, s: Option<&str>) {
+    match s {
+        None => out.push(0),
+        Some(s) => {
+            out.push(1);
+            put_str(out, s);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked cursor over an encoded buffer.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Current byte offset (for callers building their own [`BinError`]s
+    /// with accurate positions).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn err(&self, msg: impl Into<String>) -> BinError {
+        BinError {
+            pos: self.pos,
+            msg: msg.into(),
+        }
+    }
+
+    pub fn u8(&mut self) -> Result<u8, BinError> {
+        let b = *self
+            .buf
+            .get(self.pos)
+            .ok_or_else(|| self.err("unexpected end of input"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    /// ULEB128 varint; rejects encodings longer than 10 bytes (u64 max).
+    pub fn u64(&mut self) -> Result<u64, BinError> {
+        let mut v = 0u64;
+        for shift in (0..64).step_by(7) {
+            let byte = self.u8()?;
+            let low = (byte & 0x7f) as u64;
+            if shift == 63 && low > 1 {
+                return Err(self.err("varint overflows u64"));
+            }
+            v |= low << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(self.err("varint longer than 10 bytes"))
+    }
+
+    /// Raw-bit little-endian `f64`.
+    pub fn f64(&mut self) -> Result<f64, BinError> {
+        let bytes = self.take(8)?;
+        Ok(f64::from_bits(u64::from_le_bytes(bytes.try_into().unwrap())))
+    }
+
+    /// Strict 0/1 bool byte.
+    pub fn bool(&mut self) -> Result<bool, BinError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(self.err(format!("bad bool byte {other}"))),
+        }
+    }
+
+    /// Consume exactly `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], BinError> {
+        if n > self.remaining() {
+            return Err(self.err(format!(
+                "need {n} bytes, only {} remain",
+                self.remaining()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Varint-length-prefixed UTF-8 string.  The length is validated
+    /// against the remaining input before any allocation.
+    pub fn str(&mut self) -> Result<String, BinError> {
+        let n = self.len_prefix()?;
+        let bytes = self.take(n)?;
+        std::str::from_utf8(bytes)
+            .map(str::to_string)
+            .map_err(|_| self.err("invalid utf8 in string"))
+    }
+
+    /// Optional string written by [`put_opt_str`].
+    pub fn opt_str(&mut self) -> Result<Option<String>, BinError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.str()?)),
+            t => Err(self.err(format!("bad option tag {t}"))),
+        }
+    }
+
+    /// A varint element count / byte length, sanity-bounded by the
+    /// remaining input (every element occupies at least one byte, so a
+    /// count above `remaining()` can only be a corrupt or hostile prefix).
+    pub fn len_prefix(&mut self) -> Result<usize, BinError> {
+        let n = self.u64()?;
+        if n > self.remaining() as u64 {
+            return Err(self.err(format!(
+                "length prefix {n} exceeds {} remaining bytes",
+                self.remaining()
+            )));
+        }
+        Ok(n as usize)
+    }
+
+    /// Assert full consumption — trailing bytes mean a corrupt frame.
+    pub fn finish(&self) -> Result<(), BinError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(self.err(format!("{} trailing bytes", self.remaining())))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip_edges() {
+        for v in [
+            0u64,
+            1,
+            127,
+            128,
+            300,
+            16_383,
+            16_384,
+            u32::MAX as u64,
+            u64::MAX - 1,
+            u64::MAX,
+        ] {
+            let mut out = Vec::new();
+            put_u64(&mut out, v);
+            let mut r = Reader::new(&out);
+            assert_eq!(r.u64().unwrap(), v, "value {v}");
+            r.finish().unwrap();
+        }
+        // Small values stay small on the wire.
+        let mut out = Vec::new();
+        put_u64(&mut out, 5);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn f64_roundtrip_is_bit_exact() {
+        for v in [
+            0.0,
+            -0.0,
+            1.5,
+            0.1 + 0.2, // classic non-representable sum
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+            1e300,
+        ] {
+            let mut out = Vec::new();
+            put_f64(&mut out, v);
+            let mut r = Reader::new(&out);
+            assert_eq!(r.f64().unwrap().to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn str_and_bool_roundtrip() {
+        let mut out = Vec::new();
+        put_str(&mut out, "héllo");
+        put_bool(&mut out, true);
+        put_bool(&mut out, false);
+        put_opt_str(&mut out, None);
+        put_opt_str(&mut out, Some("ds"));
+        let mut r = Reader::new(&out);
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert!(r.bool().unwrap());
+        assert!(!r.bool().unwrap());
+        assert_eq!(r.opt_str().unwrap(), None);
+        assert_eq!(r.opt_str().unwrap(), Some("ds".to_string()));
+        r.finish().unwrap();
+        // Bad option tag errors.
+        assert!(Reader::new(&[7]).opt_str().is_err());
+    }
+
+    #[test]
+    fn truncation_and_corruption_error_not_panic() {
+        // Truncated f64.
+        let mut r = Reader::new(&[1, 2, 3]);
+        assert!(r.f64().is_err());
+        // String length prefix beyond the buffer: rejected before alloc.
+        let mut out = Vec::new();
+        put_u64(&mut out, 1 << 40);
+        let mut r = Reader::new(&out);
+        assert!(r.str().is_err());
+        // Over-long varint.
+        let mut r = Reader::new(&[0x80u8; 11]);
+        assert!(r.u64().is_err());
+        // Varint that overflows 64 bits.
+        let mut bytes = vec![0xffu8; 9];
+        bytes.push(0x7f);
+        let mut r = Reader::new(&bytes);
+        assert!(r.u64().is_err());
+        // Bad bool byte.
+        let mut r = Reader::new(&[7]);
+        assert!(r.bool().is_err());
+        // Trailing bytes flagged.
+        let r = Reader::new(&[0]);
+        assert!(r.finish().is_err());
+    }
+}

@@ -9,6 +9,8 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+use super::bin::{self, BinError, Reader};
+
 /// A JSON value. Objects use `BTreeMap` so serialization is deterministic —
 /// important for golden tests and reproducible wire bytes.
 #[derive(Clone, Debug, PartialEq)]
@@ -120,6 +122,101 @@ impl Json {
             return Err(p.err("trailing characters"));
         }
         Ok(v)
+    }
+
+    // ---------------------------------------------------------------- binary
+
+    /// Decoder nesting bound for [`decode_bin`](Self::decode_bin).  Trees
+    /// deeper than this are **not wire-safe**: they encode without error
+    /// but every receiver rejects them — keep model-produced JSON (LP
+    /// params, result records, `Payload::Custom` data) well below it.
+    pub const MAX_BIN_DEPTH: u32 = 128;
+
+    /// Append the compact binary form used by the binary wire codec (see
+    /// [`crate::util::bin`] for the primitive conventions).  One tag byte
+    /// per value — 0 null, 1 false, 2 true, 3 number (raw-bit f64),
+    /// 4 string, 5 array, 6 object — with varint element counts.  Object
+    /// keys serialize in `BTreeMap` order, so the encoding is
+    /// deterministic and numbers round-trip bit-exactly (neither holds
+    /// for general JSON *text* from foreign writers).  Nesting deeper
+    /// than [`MAX_BIN_DEPTH`](Self::MAX_BIN_DEPTH) is rejected by the
+    /// decoder, not the encoder.
+    pub fn encode_bin(&self, out: &mut Vec<u8>) {
+        match self {
+            Json::Null => out.push(0),
+            Json::Bool(false) => out.push(1),
+            Json::Bool(true) => out.push(2),
+            Json::Num(n) => {
+                out.push(3);
+                bin::put_f64(out, *n);
+            }
+            Json::Str(s) => {
+                out.push(4);
+                bin::put_str(out, s);
+            }
+            Json::Arr(a) => {
+                out.push(5);
+                bin::put_u64(out, a.len() as u64);
+                for v in a {
+                    v.encode_bin(out);
+                }
+            }
+            Json::Obj(o) => {
+                out.push(6);
+                bin::put_u64(out, o.len() as u64);
+                for (k, v) in o {
+                    bin::put_str(out, k);
+                    v.encode_bin(out);
+                }
+            }
+        }
+    }
+
+    /// Decode one value produced by [`encode_bin`](Self::encode_bin).
+    /// Nesting is capped at [`MAX_BIN_DEPTH`](Self::MAX_BIN_DEPTH) so a
+    /// hostile deeply-nested body errors instead of overflowing the
+    /// decoder's stack.
+    pub fn decode_bin(r: &mut Reader) -> Result<Json, BinError> {
+        Self::decode_bin_at(r, Self::MAX_BIN_DEPTH)
+    }
+
+    fn decode_bin_at(r: &mut Reader, depth: u32) -> Result<Json, BinError> {
+        if depth == 0 {
+            return Err(BinError {
+                pos: r.pos(),
+                msg: "json nesting too deep".to_string(),
+            });
+        }
+        match r.u8()? {
+            0 => Ok(Json::Null),
+            1 => Ok(Json::Bool(false)),
+            2 => Ok(Json::Bool(true)),
+            3 => Ok(Json::Num(r.f64()?)),
+            4 => Ok(Json::Str(r.str()?)),
+            5 => {
+                let n = r.len_prefix()?;
+                // Cap the pre-allocation: n is byte-bounded, not
+                // memory-bounded (a Json value outweighs its wire byte).
+                let mut a = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    a.push(Json::decode_bin_at(r, depth - 1)?);
+                }
+                Ok(Json::Arr(a))
+            }
+            6 => {
+                let n = r.len_prefix()?;
+                let mut o = BTreeMap::new();
+                for _ in 0..n {
+                    let k = r.str()?;
+                    o.insert(k, Json::decode_bin_at(r, depth - 1)?);
+                }
+                Ok(Json::Obj(o))
+            }
+            other => Err(BinError {
+                pos: r.pos() - 1, // the tag byte just consumed
+                msg: format!("bad json tag {other}"),
+            }),
+        }
     }
 }
 
@@ -416,6 +513,47 @@ mod tests {
     fn unicode_passthrough() {
         let v = Json::parse("\"héllo ☃\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo ☃"));
+    }
+
+    #[test]
+    fn binary_roundtrip_every_shape() {
+        let v = Json::parse(
+            r#"{"a": 1.5, "b": [true, false, null, "x\ny"], "c": {"d": -2.5e3, "e": []},
+                "inf-ish": 1e308, "s": "héllo ☃", "z": {}}"#,
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        v.encode_bin(&mut out);
+        let mut r = crate::util::bin::Reader::new(&out);
+        let back = Json::decode_bin(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn binary_numbers_are_bit_exact() {
+        // 0.1 + 0.2 has no short decimal form; the raw-bit encoding must
+        // return the identical f64, not a reparse.
+        let v = Json::num(0.1 + 0.2);
+        let mut out = Vec::new();
+        v.encode_bin(&mut out);
+        let back = Json::decode_bin(&mut crate::util::bin::Reader::new(&out)).unwrap();
+        assert_eq!(back.as_f64().unwrap().to_bits(), (0.1 + 0.2f64).to_bits());
+    }
+
+    #[test]
+    fn binary_rejects_corrupt_input() {
+        // Unknown tag.
+        assert!(Json::decode_bin(&mut crate::util::bin::Reader::new(&[9])).is_err());
+        // Array count beyond the buffer.
+        assert!(Json::decode_bin(&mut crate::util::bin::Reader::new(&[5, 200])).is_err());
+        // Truncated number.
+        assert!(Json::decode_bin(&mut crate::util::bin::Reader::new(&[3, 1, 2])).is_err());
+        // Empty input.
+        assert!(Json::decode_bin(&mut crate::util::bin::Reader::new(&[])).is_err());
+        // Hostile deep nesting errors instead of blowing the stack.
+        let deep: Vec<u8> = std::iter::repeat([5u8, 1u8]).take(100_000).flatten().collect();
+        assert!(Json::decode_bin(&mut crate::util::bin::Reader::new(&deep)).is_err());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! substrates that would normally come from crates.io (JSON, PRNG, ids) are
 //! implemented here from scratch.
 
+pub mod bin;
 pub mod ids;
 pub mod json;
 pub mod rng;

@@ -1,9 +1,9 @@
 //! Cross-transport determinism: the two-center demo driven over real
-//! localhost TCP sockets (length-prefixed, window-batched JSON frames)
-//! must produce a result fingerprint **bit-identical** to the same
-//! scenario driven over the in-process channel transport — for workers
-//! {0, 4} x both sync protocols, and with the legacy one-frame-per-message
-//! wire protocol as well.
+//! localhost TCP sockets (length-prefixed, window-batched frames) must
+//! produce a result fingerprint **bit-identical** to the same scenario
+//! driven over the in-process channel transport — for workers {0, 4} x
+//! both sync protocols, under both wire codecs ({json, binary}), and
+//! with the legacy one-frame-per-message wire protocol as well.
 //!
 //! Both sides run through one generic leader driver, so the only variable
 //! is the transport itself; the digest is assembled with the same
@@ -26,8 +26,8 @@ use dsim::metrics::ResultPool;
 use dsim::model::Payload;
 use dsim::runtime::ComputeBackend;
 use dsim::transport::{
-    ControlMsg, InProcEndpoint, InProcNetwork, NetMsg, TcpTransport, Transport, Wire,
-    DEFAULT_MAX_FRAME_BYTES,
+    ControlMsg, InProcEndpoint, InProcNetwork, NetMsg, TcpOptions, TcpTransport, Transport, Wire,
+    WireCodec,
 };
 use dsim::util::{AgentId, ContextId};
 use dsim::workload;
@@ -71,11 +71,15 @@ fn tcp_fleet(
     workers: usize,
     proto: SyncProtocol,
     wire_batch: bool,
-    max_frame: usize,
+    codec: WireCodec,
 ) -> (
     TcpTransport<Payload>,
     Vec<(AgentConfig, TcpTransport<Payload>)>,
 ) {
+    let opts = TcpOptions {
+        codec,
+        ..TcpOptions::default()
+    };
     let ids = [LEADER, AGENTS[0], AGENTS[1]];
     let listeners: Vec<TcpListener> = ids
         .iter()
@@ -89,7 +93,7 @@ fn tcp_fleet(
     let mut transports: Vec<TcpTransport<Payload>> = ids
         .iter()
         .zip(listeners)
-        .map(|(a, l)| TcpTransport::from_listener(*a, l, peers.clone(), max_frame).unwrap())
+        .map(|(a, l)| TcpTransport::from_listener(*a, l, peers.clone(), opts).unwrap())
         .collect();
     let leader = transports.remove(0);
     let agents = AGENTS
@@ -296,8 +300,8 @@ fn drive<T: Transport<Payload> + Send + 'static>(
 
 #[test]
 fn tcp_loopback_fingerprint_matches_in_proc() {
-    // The acceptance grid: workers {0, 4} x both protocols, TCP sockets vs
-    // in-proc channels, bit-identical fingerprints.
+    // Workers {0, 4} x both protocols, TCP sockets (default binary codec)
+    // vs in-proc channels, bit-identical fingerprints.
     for proto in [
         SyncProtocol::NullMessagesByDemand,
         SyncProtocol::EagerNullMessages,
@@ -305,7 +309,7 @@ fn tcp_loopback_fingerprint_matches_in_proc() {
         for workers in [0usize, 4] {
             let (l, a) = inproc_fleet(workers, proto, true);
             let inproc = drive(l, a);
-            let (l, a) = tcp_fleet(workers, proto, true, DEFAULT_MAX_FRAME_BYTES);
+            let (l, a) = tcp_fleet(workers, proto, true, WireCodec::Binary);
             let tcp = drive(l, a);
             assert_eq!(
                 tcp, inproc,
@@ -316,12 +320,33 @@ fn tcp_loopback_fingerprint_matches_in_proc() {
 }
 
 #[test]
+fn codec_matrix_fingerprints_bit_identical() {
+    // The codec acceptance grid: {json, binary} x {in-proc, TCP} x
+    // workers {0, 4}.  f64 timestamps travel as decimal text under JSON
+    // and as raw bits under binary — the fingerprints must still match
+    // bit-for-bit, which is exactly the round-trip-exactness claim.
+    for workers in [0usize, 4] {
+        let (l, a) = inproc_fleet(workers, SyncProtocol::NullMessagesByDemand, true);
+        let baseline = drive(l, a);
+        for codec in [WireCodec::Json, WireCodec::Binary] {
+            let (l, a) = tcp_fleet(workers, SyncProtocol::NullMessagesByDemand, true, codec);
+            let tcp = drive(l, a);
+            assert_eq!(
+                tcp, baseline,
+                "codec divergence: codec={codec} workers={workers}"
+            );
+        }
+    }
+}
+
+#[test]
 fn legacy_wire_protocol_matches_batched_over_tcp() {
     // Backward-compat: the pre-batch one-frame-per-message protocol must
-    // produce the same results as window-batched frames.
-    let (l, a) = tcp_fleet(0, SyncProtocol::NullMessagesByDemand, true, DEFAULT_MAX_FRAME_BYTES);
+    // produce the same results as window-batched frames (JSON codec — the
+    // byte-compatible interop configuration).
+    let (l, a) = tcp_fleet(0, SyncProtocol::NullMessagesByDemand, true, WireCodec::Json);
     let batched = drive(l, a);
-    let (l, a) = tcp_fleet(0, SyncProtocol::NullMessagesByDemand, false, DEFAULT_MAX_FRAME_BYTES);
+    let (l, a) = tcp_fleet(0, SyncProtocol::NullMessagesByDemand, false, WireCodec::Json);
     let legacy = drive(l, a);
     assert_eq!(batched, legacy);
 }
