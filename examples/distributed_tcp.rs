@@ -57,6 +57,9 @@ fn main() -> anyhow::Result<()> {
             // Window-batched wire protocol: one frame per peer per window
             // plus one per-window WindowReport to the leader.
             wire_batch: true,
+            // Fixed window budget (the default); `adaptive` would size it
+            // from this endpoint's writer-queue telemetry.
+            budget: Default::default(),
         };
         let backend = Arc::new(ComputeBackend::auto(Path::new("artifacts")));
         handles.push(std::thread::spawn(move || {

@@ -11,6 +11,7 @@ use std::str::FromStr;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::adaptive::{WindowBudgetMode, WindowBudgetSpec};
 use crate::engine::{ExecMode, SyncProtocol};
 use crate::transport::WireCodec;
 use crate::util::json::Json;
@@ -103,12 +104,35 @@ pub struct DeployConfig {
     /// Bound of each per-peer TCP writer queue, in messages (>= 1).  A
     /// full queue blocks the sending agent — backpressure, never loss.
     pub writer_queue_frames: usize,
+    /// Per-window timestamp-budget policy: `"fixed(N)"` (default
+    /// `fixed(16384)`, the historical constant) or `"adaptive"` — the
+    /// feedback controller sized from transport backlog + window
+    /// occupancy.  Results are identical either way; only window counts
+    /// and latency change (see `coordinator::adaptive`).
+    pub window_budget: WindowBudgetMode,
+    /// Adaptive controller lower clamp / slow-start value (>= 1).
+    pub window_budget_min: usize,
+    /// Adaptive controller upper clamp (>= `window_budget_min`).
+    pub window_budget_max: usize,
     /// GVT probe fallback cadence in milliseconds.  Probe rounds normally
     /// trigger on window-completion notifications; this timer only retries
     /// lost replies and bounds termination latency on a quiet fleet.
     pub probe_fallback_ms: u64,
     /// Directory holding the AOT artifacts.
     pub artifacts_dir: String,
+}
+
+impl DeployConfig {
+    /// The window-budget policy as one value — the single assembly point
+    /// for the three knobs, shared by validation and deployment so they
+    /// can never drift apart.
+    pub fn budget_spec(&self) -> WindowBudgetSpec {
+        WindowBudgetSpec {
+            mode: self.window_budget,
+            min: self.window_budget_min,
+            max: self.window_budget_max,
+        }
+    }
 }
 
 impl Default for DeployConfig {
@@ -125,6 +149,9 @@ impl Default for DeployConfig {
             max_frame_mib: crate::transport::DEFAULT_MAX_FRAME_BYTES >> 20,
             wire_codec: WireCodec::default(),
             writer_queue_frames: crate::transport::DEFAULT_WRITER_QUEUE_FRAMES,
+            window_budget: WindowBudgetSpec::default().mode,
+            window_budget_min: WindowBudgetSpec::default().min,
+            window_budget_max: WindowBudgetSpec::default().max,
             probe_fallback_ms: 2,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -245,6 +272,11 @@ impl ScenarioConfig {
                 .parse()
                 .map_err(anyhow::Error::msg)?,
             writer_queue_frames: get_usize(&d, "writer_queue_frames", dd.writer_queue_frames)?,
+            window_budget: get_str(&d, "window_budget", &dd.window_budget.to_string())?
+                .parse()
+                .map_err(anyhow::Error::msg)?,
+            window_budget_min: get_usize(&d, "window_budget_min", dd.window_budget_min)?,
+            window_budget_max: get_usize(&d, "window_budget_max", dd.window_budget_max)?,
             probe_fallback_ms: get_usize(&d, "probe_fallback_ms", dd.probe_fallback_ms as usize)?
                 as u64,
             artifacts_dir: get_str(&d, "artifacts_dir", &dd.artifacts_dir)?,
@@ -297,6 +329,9 @@ impl ScenarioConfig {
         }
         if self.deploy.writer_queue_frames == 0 {
             bail!("deploy.writer_queue_frames must be >= 1 (a bounded queue needs room for one frame)");
+        }
+        if let Err(e) = self.deploy.budget_spec().validate() {
+            bail!("deploy.{e}");
         }
         if self.deploy.probe_fallback_ms == 0 {
             bail!("deploy.probe_fallback_ms must be >= 1");
@@ -365,6 +400,18 @@ impl ScenarioConfig {
                     (
                         "writer_queue_frames",
                         Json::num(self.deploy.writer_queue_frames as f64),
+                    ),
+                    (
+                        "window_budget",
+                        Json::str(self.deploy.window_budget.to_string()),
+                    ),
+                    (
+                        "window_budget_min",
+                        Json::num(self.deploy.window_budget_min as f64),
+                    ),
+                    (
+                        "window_budget_max",
+                        Json::num(self.deploy.window_budget_max as f64),
                     ),
                     (
                         "probe_fallback_ms",
@@ -453,6 +500,9 @@ mod tests {
             cfg.deploy.writer_queue_frames
         );
         assert_eq!(back.deploy.probe_fallback_ms, cfg.deploy.probe_fallback_ms);
+        assert_eq!(back.deploy.window_budget, cfg.deploy.window_budget);
+        assert_eq!(back.deploy.window_budget_min, cfg.deploy.window_budget_min);
+        assert_eq!(back.deploy.window_budget_max, cfg.deploy.window_budget_max);
     }
 
     #[test]
@@ -476,6 +526,60 @@ mod tests {
         assert_eq!(cfg.deploy.wire_codec, WireCodec::Json);
         assert_eq!(cfg.deploy.writer_queue_frames, 4);
         assert_eq!(cfg.deploy.probe_fallback_ms, 10);
+    }
+
+    #[test]
+    fn window_budget_knobs_parse_and_default() {
+        use crate::coordinator::adaptive::WindowBudgetMode;
+        // Defaults: the historical fixed constant, clamps 256..=1M.
+        let cfg = ScenarioConfig::from_json_text("{}").unwrap();
+        assert_eq!(cfg.deploy.window_budget, WindowBudgetMode::Fixed(16_384));
+        assert_eq!(cfg.deploy.window_budget_min, 256);
+        assert_eq!(cfg.deploy.window_budget_max, 1 << 20);
+        // Explicit adaptive with clamps.
+        let cfg = ScenarioConfig::from_json_text(
+            r#"{"deploy": {"window_budget": "adaptive", "window_budget_min": 8,
+                           "window_budget_max": 4096}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.deploy.window_budget, WindowBudgetMode::Adaptive);
+        assert_eq!(cfg.deploy.window_budget_min, 8);
+        assert_eq!(cfg.deploy.window_budget_max, 4096);
+        // Fixed(N) spelling and the unbounded form.
+        let cfg =
+            ScenarioConfig::from_json_text(r#"{"deploy": {"window_budget": "fixed(512)"}}"#)
+                .unwrap();
+        assert_eq!(cfg.deploy.window_budget, WindowBudgetMode::Fixed(512));
+        let cfg =
+            ScenarioConfig::from_json_text(r#"{"deploy": {"window_budget": "fixed(inf)"}}"#)
+                .unwrap();
+        assert_eq!(cfg.deploy.window_budget, WindowBudgetMode::Fixed(usize::MAX));
+    }
+
+    #[test]
+    fn window_budget_knobs_reject_bad_clamps() {
+        // min > max is a contradiction, zero budgets can never execute,
+        // and garbage mode strings fail the parse — each with its own
+        // actionable error.
+        for (bad, needle) in [
+            (
+                r#"{"deploy": {"window_budget_min": 9, "window_budget_max": 8}}"#,
+                "window_budget_min",
+            ),
+            (r#"{"deploy": {"window_budget_min": 0}}"#, "window_budget_min"),
+            (r#"{"deploy": {"window_budget": "fixed(0)"}}"#, "window budget"),
+            (r#"{"deploy": {"window_budget": "0"}}"#, "window budget"),
+            (r#"{"deploy": {"window_budget": "auto"}}"#, "window budget"),
+            (r#"{"deploy": {"window_budget": "fixed(-1)"}}"#, "window budget"),
+        ] {
+            let err = ScenarioConfig::from_json_text(bad)
+                .err()
+                .unwrap_or_else(|| panic!("accepted {bad}"));
+            assert!(
+                format!("{err:#}").contains(needle),
+                "error for {bad} lacks '{needle}': {err:#}"
+            );
+        }
     }
 
     #[test]

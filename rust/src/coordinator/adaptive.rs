@@ -1,0 +1,503 @@
+//! Adaptive safe-window sizing from transport-backlog telemetry.
+//!
+//! # Design note
+//!
+//! `Engine::advance_window(max_timestamps)` takes a *timestamp budget*: the
+//! most distinct timestamps one call may drain before control returns to
+//! the agent loop's transport drain.  The budget is a pure latency/
+//! throughput dial — a window always resumes exactly where it left off, so
+//! the budget decides **when** the outbox flushes and the transport gets
+//! drained, never **which** events execute or in what order.  Historically
+//! it was the fixed constant 16 384
+//! ([`DEFAULT_WINDOW_TIMESTAMP_BUDGET`]); the paper's promise of "hiding
+//! the computational effort from the end-user" wants the framework, not
+//! the operator, to pick it per workload.
+//!
+//! ## Inputs
+//!
+//! The controller combines two families of signals, both already counted
+//! elsewhere — it adds no new instrumentation to the hot path:
+//!
+//! * **Engine window occupancy** — the `timestamps` count of each
+//!   completed window versus the budget it ran under.  `timestamps ==
+//!   budget` means the budget truncated the window (the engine had more
+//!   provably-safe work queued): the budget is the binding constraint and
+//!   raising it buys throughput.  Also surfaced as
+//!   `EngineStats::windows_truncated`.
+//! * **Transport backlog** ([`TransportTelemetry`](crate::transport::TransportTelemetry))
+//!   — the per-peer writer queues' current occupancy against their
+//!   configured depth, plus the cumulative time senders spent *blocked* on
+//!   a full queue.  Saturated queues or positive block time mean the wire
+//!   is the bottleneck: a smaller budget flushes smaller frames more
+//!   often, overlapping transmission with execution instead of dumping
+//!   one giant batch on a backed-up queue.
+//!
+//! ## Update rule
+//!
+//! One controller step per completed window, classic AIMD simplified to
+//! deterministic integer halving/doubling (see [`WirePressure`]):
+//!
+//! * wire **saturated** (occupancy ≥ ¾ depth, or the sender blocked since
+//!   the last window) → `budget = max(min, budget / 2)`;
+//! * window **truncated** by the budget *and* wire **idle** (occupancy ≤ ¼
+//!   depth and no blocking) → `budget = min(max, budget * 2)`;
+//! * otherwise hold.
+//!
+//! Adaptive mode starts at `min` (slow-start): a compute-bound fleet
+//! doubles up to the point where windows stop being truncated, while a
+//! wire-bound fleet never climbs past what its queues can absorb.
+//!
+//! ## Clamps
+//!
+//! The budget moves inside the configurable
+//! `[window_budget_min, window_budget_max]` (`deploy.window_budget_min` /
+//! `_max`, both ≥ 1, min ≤ max — rejected at config parse otherwise).
+//! `deploy.window_budget = fixed(N)` pins the budget to `N` and disables
+//! the controller entirely — the default, and the equivalence baseline.
+//!
+//! ## Why results are invariant
+//!
+//! The controller only moves the *budget*.  A truncated window resumes at
+//! the same horizon on the next call; conservative safety (`time ≤ min
+//! peer promise`) is checked per window against the same LVT table either
+//! way, and per-timestamp ordering inside a window is identical to
+//! repeated `step()` calls.  So any budget sequence whatsoever yields the
+//! same events in the same per-timestamp order — adaptive vs fixed can
+//! differ only in window counts and frame boundaries, never in results.
+//! `tests/adaptive_equivalence.rs` pins this across {in-proc, TCP} ×
+//! workers {0, 4} × {json, binary}.
+//!
+//! ## Determinism
+//!
+//! The controller's inputs are the window's timestamp count and transport
+//! *counters* — never the wall clock and never randomness — so its
+//! trajectory is a pure function of its input sequence
+//! (`budget_trajectory_is_pure_function` below).  On in-process
+//! deployments the transport has no writer queues, the wire classifies as
+//! idle every window, and the whole trajectory is reproducible run-to-run
+//! (pinned by `tests/adaptive_equivalence.rs`); on TCP the queue signals
+//! track real socket timing, so the trajectory may differ between runs
+//! while the simulation results still cannot.
+
+use std::str::FromStr;
+
+/// The historical fixed budget: upper bound on timestamps one
+/// `advance_window` call may execute before control returns to the
+/// transport drain.  Windows resume where they left off, so this only
+/// caps transport latency, never correctness.
+pub const DEFAULT_WINDOW_TIMESTAMP_BUDGET: usize = 16_384;
+
+/// Default lower clamp for the adaptive controller (also its slow-start
+/// value).
+pub const DEFAULT_WINDOW_BUDGET_MIN: usize = 256;
+
+/// Default upper clamp for the adaptive controller.
+pub const DEFAULT_WINDOW_BUDGET_MAX: usize = 1 << 20;
+
+/// How the per-window timestamp budget is chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WindowBudgetMode {
+    /// Pin the budget to `N` (controller disabled).  The default —
+    /// `fixed(16384)` — preserves the historical behavior bit-for-bit.
+    Fixed(usize),
+    /// Feedback control from window occupancy + transport backlog.
+    Adaptive,
+}
+
+impl std::fmt::Display for WindowBudgetMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WindowBudgetMode::Adaptive => write!(f, "adaptive"),
+            WindowBudgetMode::Fixed(n) if *n == usize::MAX => write!(f, "fixed(inf)"),
+            WindowBudgetMode::Fixed(n) => write!(f, "fixed({n})"),
+        }
+    }
+}
+
+impl FromStr for WindowBudgetMode {
+    type Err = String;
+
+    /// Accepts `adaptive`, `fixed(N)`, `fixed(inf)`, or a bare integer
+    /// (shorthand for `fixed(N)`).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s == "adaptive" {
+            return Ok(WindowBudgetMode::Adaptive);
+        }
+        let inner = s
+            .strip_prefix("fixed(")
+            .and_then(|rest| rest.strip_suffix(')'))
+            .unwrap_or(s);
+        let n = match inner {
+            "inf" | "max" | "unbounded" => usize::MAX,
+            _ => inner.parse::<usize>().map_err(|_| {
+                format!("bad window budget '{s}' (adaptive | fixed(N) | fixed(inf))")
+            })?,
+        };
+        if n == 0 {
+            return Err(format!("bad window budget '{s}': a zero budget can never execute"));
+        }
+        Ok(WindowBudgetMode::Fixed(n))
+    }
+}
+
+/// The full budget policy: mode plus the adaptive controller's clamps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowBudgetSpec {
+    pub mode: WindowBudgetMode,
+    /// Lower clamp (and adaptive slow-start value); >= 1.
+    pub min: usize,
+    /// Upper clamp; >= `min`.
+    pub max: usize,
+}
+
+impl Default for WindowBudgetSpec {
+    fn default() -> Self {
+        WindowBudgetSpec {
+            mode: WindowBudgetMode::Fixed(DEFAULT_WINDOW_TIMESTAMP_BUDGET),
+            min: DEFAULT_WINDOW_BUDGET_MIN,
+            max: DEFAULT_WINDOW_BUDGET_MAX,
+        }
+    }
+}
+
+impl WindowBudgetSpec {
+    /// An adaptive spec with explicit clamps.
+    pub fn adaptive(min: usize, max: usize) -> Self {
+        WindowBudgetSpec {
+            mode: WindowBudgetMode::Adaptive,
+            min,
+            max,
+        }
+    }
+
+    /// A fixed-budget spec (controller disabled).
+    pub fn fixed(n: usize) -> Self {
+        WindowBudgetSpec {
+            mode: WindowBudgetMode::Fixed(n),
+            ..WindowBudgetSpec::default()
+        }
+    }
+
+    /// Reject specs the engine cannot run (`advance_window` needs >= 1).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.min == 0 {
+            return Err("window_budget_min must be >= 1 (a zero budget can never execute)".into());
+        }
+        if self.min > self.max {
+            return Err(format!(
+                "window_budget_min ({}) must be <= window_budget_max ({})",
+                self.min, self.max
+            ));
+        }
+        if let WindowBudgetMode::Fixed(0) = self.mode {
+            return Err("window_budget fixed(0) can never execute".into());
+        }
+        Ok(())
+    }
+}
+
+/// Transport-backlog classification for one controller step, derived from
+/// writer-queue counters (never the wall clock — the *inputs* are
+/// counters; on transports without queues everything classifies as idle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WirePressure {
+    /// Queues near-empty and no sender blocked: the wire can absorb more.
+    Idle,
+    /// Somewhere in between: hold the budget.
+    Busy,
+    /// Queue occupancy >= 3/4 of depth, or a sender blocked on a full
+    /// queue since the last window: the wire is the bottleneck.
+    Saturated,
+}
+
+impl WirePressure {
+    /// Classify one window's transport backlog: `occupancy` frames queued
+    /// (max across peers) against the configured `depth`, plus the
+    /// microseconds senders spent blocked on full queues since the last
+    /// classification.  `depth == 0` means the transport has no writer
+    /// queues (in-process) — idle unless something still blocked.
+    pub fn classify(occupancy: u64, depth: u64, blocked_delta_us: u64) -> WirePressure {
+        if blocked_delta_us > 0 {
+            return WirePressure::Saturated;
+        }
+        if depth == 0 {
+            return WirePressure::Idle;
+        }
+        if occupancy * 4 >= depth * 3 {
+            WirePressure::Saturated
+        } else if occupancy * 4 <= depth {
+            WirePressure::Idle
+        } else {
+            WirePressure::Busy
+        }
+    }
+}
+
+/// Budget-trajectory telemetry: where the controller went during a run.
+/// Threaded agent → `FinalStats` → `RunReport` next to the wire counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BudgetTelemetry {
+    /// Smallest budget any window ran under.
+    pub min: u64,
+    /// Largest budget any window ran under.
+    pub max: u64,
+    /// Budget in force when the run ended.
+    pub last: u64,
+    /// Number of doubling steps taken.
+    pub grows: u64,
+    /// Number of halving steps taken.
+    pub shrinks: u64,
+}
+
+/// Per-context window-size controller (see module docs for the design
+/// note).  In fixed mode it is a constant with telemetry.
+#[derive(Clone, Debug)]
+pub struct WindowController {
+    spec: WindowBudgetSpec,
+    budget: usize,
+    telemetry: BudgetTelemetry,
+}
+
+impl WindowController {
+    /// Build a controller from `spec`.  The clamps are normalized here
+    /// (`min >= 1`, `max >= min`) so the controller is total: config
+    /// parsing and the CLI reject contradictory specs loudly, but a spec
+    /// assembled programmatically (`Deployment::window_budget`) can never
+    /// drive the budget outside its own clamps or invert the grow/shrink
+    /// counts.
+    pub fn new(mut spec: WindowBudgetSpec) -> Self {
+        spec.min = spec.min.max(1);
+        spec.max = spec.max.max(spec.min);
+        let budget = match spec.mode {
+            WindowBudgetMode::Fixed(n) => n.max(1),
+            // Slow-start: grow from the floor instead of guessing.
+            WindowBudgetMode::Adaptive => spec.min,
+        };
+        let b = budget as u64;
+        WindowController {
+            spec,
+            budget,
+            telemetry: BudgetTelemetry {
+                min: b,
+                max: b,
+                last: b,
+                grows: 0,
+                shrinks: 0,
+            },
+        }
+    }
+
+    /// The budget the next `advance_window` call should run under.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Whether the feedback loop is live (fixed mode never reads the
+    /// transport, keeping the baseline path byte-identical).
+    pub fn is_adaptive(&self) -> bool {
+        self.spec.mode == WindowBudgetMode::Adaptive
+    }
+
+    /// Trajectory so far.
+    pub fn telemetry(&self) -> BudgetTelemetry {
+        self.telemetry
+    }
+
+    /// One controller step after a completed window that executed
+    /// `timestamps` distinct timestamps under the current budget.
+    pub fn on_window(&mut self, timestamps: usize, wire: WirePressure) {
+        if !self.is_adaptive() {
+            return;
+        }
+        let truncated = timestamps >= self.budget;
+        let next = match wire {
+            WirePressure::Saturated => (self.budget / 2).max(self.spec.min),
+            WirePressure::Idle if truncated => {
+                self.budget.saturating_mul(2).min(self.spec.max)
+            }
+            _ => self.budget,
+        };
+        if next > self.budget {
+            self.telemetry.grows += 1;
+        } else if next < self.budget {
+            self.telemetry.shrinks += 1;
+        }
+        self.budget = next;
+        self.telemetry.last = next as u64;
+        self.telemetry.min = self.telemetry.min.min(next as u64);
+        self.telemetry.max = self.telemetry.max.max(next as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn fixed_mode_never_moves() {
+        let mut c = WindowController::new(WindowBudgetSpec::fixed(500));
+        assert!(!c.is_adaptive());
+        for _ in 0..10 {
+            c.on_window(500, WirePressure::Saturated);
+            c.on_window(500, WirePressure::Idle);
+        }
+        assert_eq!(c.budget(), 500);
+        let t = c.telemetry();
+        assert_eq!((t.min, t.max, t.last, t.grows, t.shrinks), (500, 500, 500, 0, 0));
+    }
+
+    #[test]
+    fn grows_on_truncated_windows_when_wire_idle() {
+        let mut c = WindowController::new(WindowBudgetSpec::adaptive(2, 16));
+        assert_eq!(c.budget(), 2, "adaptive slow-starts at min");
+        // Truncated + idle wire: double toward max, then saturate there.
+        for expect in [4usize, 8, 16, 16] {
+            let b = c.budget();
+            c.on_window(b, WirePressure::Idle);
+            assert_eq!(c.budget(), expect);
+        }
+        let t = c.telemetry();
+        assert_eq!(t.grows, 3);
+        assert_eq!((t.min, t.max, t.last), (2, 16, 16));
+    }
+
+    #[test]
+    fn shrinks_on_saturated_wire_and_holds_otherwise() {
+        let mut c = WindowController::new(WindowBudgetSpec::adaptive(2, 64));
+        for _ in 0..5 {
+            let b = c.budget();
+            c.on_window(b, WirePressure::Idle);
+        }
+        assert_eq!(c.budget(), 64);
+        // An under-full window holds; saturation halves toward min.
+        c.on_window(3, WirePressure::Idle);
+        assert_eq!(c.budget(), 64, "under-full + idle holds");
+        c.on_window(64, WirePressure::Busy);
+        assert_eq!(c.budget(), 64, "busy wire holds even when truncated");
+        for expect in [32usize, 16, 8, 4, 2, 2] {
+            c.on_window(1, WirePressure::Saturated);
+            assert_eq!(c.budget(), expect);
+        }
+        assert_eq!(c.telemetry().shrinks, 5);
+        assert_eq!(c.telemetry().min, 2);
+    }
+
+    #[test]
+    fn classify_thresholds() {
+        // No queues (in-proc): idle unless blocking happened.
+        assert_eq!(WirePressure::classify(0, 0, 0), WirePressure::Idle);
+        assert_eq!(WirePressure::classify(0, 0, 5), WirePressure::Saturated);
+        // Quartile thresholds against a depth-8 queue.
+        assert_eq!(WirePressure::classify(0, 8, 0), WirePressure::Idle);
+        assert_eq!(WirePressure::classify(2, 8, 0), WirePressure::Idle);
+        assert_eq!(WirePressure::classify(3, 8, 0), WirePressure::Busy);
+        assert_eq!(WirePressure::classify(5, 8, 0), WirePressure::Busy);
+        assert_eq!(WirePressure::classify(6, 8, 0), WirePressure::Saturated);
+        assert_eq!(WirePressure::classify(8, 8, 0), WirePressure::Saturated);
+        // Block time since the last window always saturates.
+        assert_eq!(WirePressure::classify(0, 8, 1), WirePressure::Saturated);
+    }
+
+    #[test]
+    fn budget_trajectory_is_pure_function() {
+        // The determinism contract: the same input sequence must produce
+        // the same trajectory — the controller may not consult the clock,
+        // randomness, or any hidden state.
+        crate::testkit::check("controller trajectory is pure", 50, |rng: &mut Pcg32| {
+            let spec = WindowBudgetSpec::adaptive(1 + rng.below(8) as usize, 64);
+            let inputs: Vec<(usize, WirePressure)> = (0..rng.below(64))
+                .map(|_| {
+                    let wire = match rng.below(3) {
+                        0 => WirePressure::Idle,
+                        1 => WirePressure::Busy,
+                        _ => WirePressure::Saturated,
+                    };
+                    (rng.below(128) as usize, wire)
+                })
+                .collect();
+            let mut a = WindowController::new(spec);
+            let mut b = WindowController::new(spec);
+            for &(ts, wire) in &inputs {
+                a.on_window(ts, wire);
+                b.on_window(ts, wire);
+            }
+            if a.telemetry() == b.telemetry() && a.budget() == b.budget() {
+                Ok(())
+            } else {
+                Err(format!("trajectories diverged: {:?} vs {:?}", a.telemetry(), b.telemetry()))
+            }
+        });
+        // Clamps hold under any input sequence.
+        crate::testkit::check("budget stays clamped", 50, |rng: &mut Pcg32| {
+            let min = 1 + rng.below(8) as usize;
+            let max = min + rng.below(64) as usize;
+            let mut c = WindowController::new(WindowBudgetSpec::adaptive(min, max));
+            for _ in 0..rng.below(128) {
+                let wire = match rng.below(3) {
+                    0 => WirePressure::Idle,
+                    1 => WirePressure::Busy,
+                    _ => WirePressure::Saturated,
+                };
+                c.on_window(rng.below(256) as usize, wire);
+                if c.budget() < min || c.budget() > max {
+                    return Err(format!("budget {} left [{min}, {max}]", c.budget()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn contradictory_clamps_are_normalized() {
+        // Config parsing rejects min > max; the programmatic path instead
+        // normalizes (max raised to min), so the budget can never leave
+        // the clamps and the grow/shrink counts keep their meaning.
+        let mut c = WindowController::new(WindowBudgetSpec::adaptive(9, 8));
+        assert_eq!(c.budget(), 9);
+        for _ in 0..4 {
+            let b = c.budget();
+            c.on_window(b, WirePressure::Idle);
+            assert_eq!(c.budget(), 9, "budget left its clamps");
+        }
+        c.on_window(9, WirePressure::Saturated);
+        assert_eq!(c.budget(), 9);
+        let t = c.telemetry();
+        assert_eq!((t.grows, t.shrinks), (0, 0));
+        // A zero min is likewise floored at the engine's requirement.
+        let c = WindowController::new(WindowBudgetSpec::adaptive(0, 8));
+        assert_eq!(c.budget(), 1);
+    }
+
+    #[test]
+    fn mode_parse_and_display_roundtrip() {
+        for (text, mode) in [
+            ("adaptive", WindowBudgetMode::Adaptive),
+            ("fixed(16384)", WindowBudgetMode::Fixed(16_384)),
+            ("fixed(1)", WindowBudgetMode::Fixed(1)),
+            ("fixed(inf)", WindowBudgetMode::Fixed(usize::MAX)),
+        ] {
+            assert_eq!(text.parse::<WindowBudgetMode>().unwrap(), mode);
+            assert_eq!(mode.to_string(), text);
+        }
+        // Bare integer shorthand.
+        assert_eq!("512".parse::<WindowBudgetMode>().unwrap(), WindowBudgetMode::Fixed(512));
+        // Error paths.
+        for bad in ["fixed(0)", "0", "fixed()", "auto", "fixed(-3)", ""] {
+            assert!(bad.parse::<WindowBudgetMode>().is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn spec_validation_rejects_bad_clamps() {
+        assert!(WindowBudgetSpec::default().validate().is_ok());
+        assert!(WindowBudgetSpec::adaptive(1, 1).validate().is_ok());
+        assert!(WindowBudgetSpec::adaptive(0, 8).validate().is_err(), "zero min");
+        assert!(WindowBudgetSpec::adaptive(9, 8).validate().is_err(), "min > max");
+        let s = WindowBudgetSpec {
+            mode: WindowBudgetMode::Fixed(0),
+            ..WindowBudgetSpec::default()
+        };
+        assert!(s.validate().is_err(), "fixed zero budget");
+    }
+}

@@ -14,6 +14,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
+use super::adaptive::{BudgetTelemetry, WindowBudgetSpec, WindowController, WirePressure};
 use crate::components::{build_component, BuildCtx};
 use crate::engine::{
     Engine, EngineStats, ExecMode, SimTime, StepOutcome, WindowOutcome, WorkerPool,
@@ -22,7 +23,7 @@ use crate::model::Payload;
 use crate::monitor::{HostSample, HostSampler, PerfWeights};
 use crate::runtime::ComputeBackend;
 use crate::space::Space;
-use crate::transport::{ControlMsg, NetMsg, Transport};
+use crate::transport::{ControlMsg, NetMsg, Transport, TransportTelemetry};
 use crate::util::json::Json;
 use crate::util::{AgentId, ContextId};
 
@@ -31,6 +32,9 @@ pub const LEADER: AgentId = AgentId(0);
 
 struct ContextSlot {
     engine: Engine<Payload>,
+    /// Per-context window-size controller: fixed budget by default, or
+    /// the adaptive feedback loop (`deploy.window_budget = adaptive`).
+    controller: WindowController,
     started: bool,
     /// Context-level event message counters for the double-count
     /// termination protocol.
@@ -61,12 +65,13 @@ pub struct AgentConfig {
     /// the legacy one-frame-per-message wire protocol — kept for mixed
     /// fleets and as the equivalence baseline.
     pub wire_batch: bool,
+    /// Per-window timestamp-budget policy: a fixed cap (default 16 384,
+    /// the historical constant) or the adaptive controller sized from
+    /// transport backlog + window occupancy (see
+    /// [`crate::coordinator::adaptive`]).  Windows resume where they left
+    /// off, so the budget only shapes transport latency, never results.
+    pub budget: WindowBudgetSpec,
 }
-
-/// Upper bound on timestamps one `advance_window` call may execute before
-/// control returns to the transport drain.  Windows resume where they left
-/// off, so this only caps transport latency, never correctness.
-const WINDOW_TIMESTAMP_BUDGET: usize = 16_384;
 
 /// Runs an agent until `Shutdown`.  Generic over the transport so the same
 /// runtime serves in-process and TCP deployments.
@@ -85,6 +90,14 @@ pub struct AgentRuntime<T: Transport<Payload>> {
     /// concurrent contexts the per-context split is approximate (teardown
     /// order) but the fleet total is exact.
     wire_bytes_reported: u64,
+    /// Send-block time already consumed by a controller step (the
+    /// transport counter is cumulative; each window reacts to the delta
+    /// since the previous window).
+    send_block_seen: u64,
+    /// Send-block time already attributed to a finished context's
+    /// `FinalStats` (delta reporting, same scheme as
+    /// `wire_bytes_reported`).
+    send_block_reported: u64,
 }
 
 impl<T: Transport<Payload>> AgentRuntime<T> {
@@ -105,6 +118,8 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             pool,
             weights: PerfWeights::default(),
             wire_bytes_reported: 0,
+            send_block_seen: 0,
+            send_block_reported: 0,
         }
     }
 
@@ -350,7 +365,14 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                         NetMsg::Control(ControlMsg::FinalStats {
                             context,
                             from: self.cfg.me,
-                            stats: engine_stats_json(&EngineStats::default(), 0.0, 0, 0),
+                            stats: engine_stats_json(
+                                &EngineStats::default(),
+                                0.0,
+                                0,
+                                0,
+                                &BudgetTelemetry::default(),
+                                &TransportTelemetry::default(),
+                            ),
                         }),
                     );
                 }
@@ -370,11 +392,28 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                         );
                     }
                     let wire_bytes = self.take_wire_bytes_delta();
+                    // Budget trajectory is genuinely per-context.  The
+                    // queue telemetry is endpoint-global: send-block time
+                    // is reported as the delta since the previous
+                    // FinalStats (same scheme as wire_bytes — fleet total
+                    // exact, per-context split approximate), while the
+                    // high-water mark is a monotone endpoint gauge every
+                    // context reports as-is (the leader aggregates it
+                    // with max, so no double counting).
+                    let budget = slot.controller.telemetry();
+                    let mut wire_telemetry = self.transport.telemetry();
+                    let block_delta = wire_telemetry
+                        .send_block_us
+                        .saturating_sub(self.send_block_reported);
+                    self.send_block_reported = wire_telemetry.send_block_us;
+                    wire_telemetry.send_block_us = block_delta;
                     let stats = engine_stats_json(
                         slot.engine.stats(),
                         slot.engine.lvt().secs(),
                         slot.frames,
                         wire_bytes,
+                        &budget,
+                        &wire_telemetry,
                     );
                     let _ = self.transport.send(
                         LEADER,
@@ -416,6 +455,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             }
             ContextSlot {
                 engine,
+                controller: WindowController::new(cfg.budget),
                 started: false,
                 sent: 0,
                 received: 0,
@@ -443,13 +483,23 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 // until the transport delivers fresh promises (ingested by
                 // the caller before the next turn).  Outbox traffic —
                 // remote events and the window's single sync flush — goes
-                // out once per window, not once per timestamp.
+                // out once per window, not once per timestamp.  The
+                // timestamp budget comes from the per-context controller:
+                // the historical fixed 16 384 by default, or the adaptive
+                // feedback loop.
                 let outcome = {
                     let slot = self.contexts.get_mut(&ctx).unwrap();
-                    slot.engine.advance_window(WINDOW_TIMESTAMP_BUDGET)
+                    let budget = slot.controller.budget();
+                    slot.engine.advance_window(budget)
                 };
                 self.flush_outbox(ctx);
-                matches!(outcome, WindowOutcome::Processed { .. })
+                match outcome {
+                    WindowOutcome::Processed { timestamps, .. } => {
+                        self.tune_budget(ctx, timestamps);
+                        true
+                    }
+                    _ => false,
+                }
             }
             ExecMode::PerTimestamp => {
                 let mut progressed = false;
@@ -469,6 +519,30 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 }
                 progressed
             }
+        }
+    }
+
+    /// One adaptive-controller step after a completed window.  No-op
+    /// under a fixed budget — that path never reads the transport, so the
+    /// baseline stays byte-identical to pre-controller behavior.  Runs
+    /// *after* the flush so the queue occupancy the controller sees
+    /// includes the window's own frames; reacts to the send-block *delta*
+    /// since the previous window (the counter is cumulative).
+    fn tune_budget(&mut self, ctx: ContextId, timestamps: usize) {
+        let adaptive = self
+            .contexts
+            .get(&ctx)
+            .map(|s| s.controller.is_adaptive())
+            .unwrap_or(false);
+        if !adaptive {
+            return;
+        }
+        let t = self.transport.telemetry();
+        let blocked = t.send_block_us.saturating_sub(self.send_block_seen);
+        self.send_block_seen = t.send_block_us;
+        let pressure = WirePressure::classify(t.queue_occupancy, t.queue_depth, blocked);
+        if let Some(slot) = self.contexts.get_mut(&ctx) {
+            slot.controller.on_window(timestamps, pressure);
         }
     }
 
@@ -638,8 +712,17 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
 
 /// Encode engine statistics for the FinalStats control message.
 /// `wire_frames` / `wire_bytes` are agent-level transport counters for
-/// the context (the engine itself never sees frames).
-pub fn engine_stats_json(s: &EngineStats, lvt_s: f64, wire_frames: u64, wire_bytes: u64) -> Json {
+/// the context (the engine itself never sees frames); `budget` is the
+/// context's window-budget trajectory and `wire` the endpoint's
+/// writer-queue telemetry snapshot.
+pub fn engine_stats_json(
+    s: &EngineStats,
+    lvt_s: f64,
+    wire_frames: u64,
+    wire_bytes: u64,
+    budget: &BudgetTelemetry,
+    wire: &TransportTelemetry,
+) -> Json {
     Json::obj(vec![
         ("events_processed", Json::num(s.events_processed as f64)),
         ("events_sent_local", Json::num(s.events_sent_local as f64)),
@@ -661,6 +744,15 @@ pub fn engine_stats_json(s: &EngineStats, lvt_s: f64, wire_frames: u64, wire_byt
         ("events_rejected", Json::num(s.events_rejected as f64)),
         ("wire_frames", Json::num(wire_frames as f64)),
         ("wire_bytes", Json::num(wire_bytes as f64)),
+        ("windows_truncated", Json::num(s.windows_truncated as f64)),
+        ("budget_min", Json::num(budget.min as f64)),
+        ("budget_max", Json::num(budget.max as f64)),
+        ("budget_last", Json::num(budget.last as f64)),
+        ("budget_grows", Json::num(budget.grows as f64)),
+        ("budget_shrinks", Json::num(budget.shrinks as f64)),
+        ("queue_highwater", Json::num(wire.queue_highwater as f64)),
+        ("queue_depth", Json::num(wire.queue_depth as f64)),
+        ("send_block_us", Json::num(wire.send_block_us as f64)),
         ("lvt", Json::num(lvt_s)),
     ])
 }
@@ -683,6 +775,26 @@ pub fn stats_from_json(j: &Json) -> Option<HostStatsView> {
             .unwrap_or(0),
         wire_frames: j.get("wire_frames").and_then(Json::as_u64).unwrap_or(0),
         wire_bytes: j.get("wire_bytes").and_then(Json::as_u64).unwrap_or(0),
+        // Budget/backlog telemetry postdates the wire format too; zeros
+        // keep pre-controller frames decoding.
+        windows_truncated: j
+            .get("windows_truncated")
+            .and_then(Json::as_u64)
+            .unwrap_or(0),
+        budget_min: j.get("budget_min").and_then(Json::as_u64).unwrap_or(0),
+        budget_max: j.get("budget_max").and_then(Json::as_u64).unwrap_or(0),
+        budget_last: j.get("budget_last").and_then(Json::as_u64).unwrap_or(0),
+        budget_grows: j.get("budget_grows").and_then(Json::as_u64).unwrap_or(0),
+        budget_shrinks: j
+            .get("budget_shrinks")
+            .and_then(Json::as_u64)
+            .unwrap_or(0),
+        queue_highwater: j
+            .get("queue_highwater")
+            .and_then(Json::as_u64)
+            .unwrap_or(0),
+        queue_depth: j.get("queue_depth").and_then(Json::as_u64).unwrap_or(0),
+        send_block_us: j.get("send_block_us").and_then(Json::as_u64).unwrap_or(0),
         lvt_s: j.get("lvt")?.as_f64()?,
     })
 }
@@ -704,6 +816,26 @@ pub struct HostStatsView {
     /// Encoded wire bytes the agent's transport emitted for the context
     /// (0 on plain in-proc runs; see `Transport::wire_bytes`).
     pub wire_bytes: u64,
+    /// Windows cut short by the timestamp budget (resumed next call).
+    pub windows_truncated: u64,
+    /// Window-budget trajectory: smallest / largest / final budget any
+    /// window of the context ran under, and the number of controller
+    /// doubling / halving steps.  Under a fixed budget all three values
+    /// equal the constant and both step counts are zero.
+    pub budget_min: u64,
+    pub budget_max: u64,
+    pub budget_last: u64,
+    pub budget_grows: u64,
+    pub budget_shrinks: u64,
+    /// Writer-queue telemetry at teardown: highest occupancy the
+    /// endpoint ever observed (monotone gauge — aggregate with max) and
+    /// the configured depth.
+    pub queue_highwater: u64,
+    pub queue_depth: u64,
+    /// Sender block time on full queues attributed to this context: the
+    /// delta since the endpoint's previous FinalStats (same scheme as
+    /// `wire_bytes` — fleet total exact, per-context split approximate).
+    pub send_block_us: u64,
     pub lvt_s: f64,
 }
 
@@ -733,6 +865,7 @@ mod tests {
             workers: 0,
             exec: ExecMode::SafeWindow,
             wire_batch,
+            budget: WindowBudgetSpec::default(),
         };
         let backend = Arc::new(ComputeBackend::auto(Path::new("artifacts")));
         AgentRuntime::new(cfg, ep, backend)

@@ -12,10 +12,15 @@
 //! println!("makespan {:.1}s, {} events", report.makespan_s, report.events_processed);
 //! ```
 
+pub mod adaptive;
 mod agent;
 mod scheduler;
 mod termination;
 
+pub use adaptive::{
+    BudgetTelemetry, WindowBudgetMode, WindowBudgetSpec, WindowController, WirePressure,
+    DEFAULT_WINDOW_BUDGET_MAX, DEFAULT_WINDOW_BUDGET_MIN, DEFAULT_WINDOW_TIMESTAMP_BUDGET,
+};
 pub use agent::{engine_stats_json, stats_from_json, AgentConfig, AgentRuntime, HostStatsView, LEADER};
 pub use scheduler::PlacementScheduler;
 pub use termination::{ProbeAnswer, TerminationDetector};
@@ -67,6 +72,24 @@ pub struct RunReport {
     /// to measure what a TCP fleet would pay — `wire_bytes / windows` is
     /// the codec-comparison metric in the sync_protocols bench.
     pub wire_bytes: u64,
+    /// Windows cut short by the timestamp budget, fleet-wide.
+    pub windows_truncated: u64,
+    /// Window-budget trajectory across the fleet: smallest / largest
+    /// budget any window ran under (min over / max over participating
+    /// agents), the largest final budget, and total controller grow /
+    /// shrink steps.  Under the default fixed budget min == max == last
+    /// == the constant and both step counts are 0.  Per-agent
+    /// trajectories are in `per_agent`.
+    pub budget_min: u64,
+    pub budget_max: u64,
+    pub budget_last: u64,
+    pub budget_grows: u64,
+    pub budget_shrinks: u64,
+    /// Highest writer-queue occupancy any agent observed (frames; 0 on
+    /// in-proc deployments, which have no writer queues).
+    pub queue_highwater: u64,
+    /// Total microseconds agents spent blocked on full writer queues.
+    pub send_block_us: u64,
     /// All records published by LPs during the run.
     pub pool: ResultPool,
     /// Final per-agent statistics.
@@ -144,6 +167,9 @@ pub struct Deployment {
     seed: u64,
     /// Window-batched wire protocol (one frame per peer per flush).
     wire_batch: bool,
+    /// Per-window timestamp-budget policy (fixed constant by default, or
+    /// the adaptive controller).
+    budget: WindowBudgetSpec,
     /// When set, the in-proc fabric meters every send under this codec so
     /// `RunReport::wire_bytes` reports what a TCP fleet would emit.
     wire_meter: Option<crate::transport::WireCodec>,
@@ -168,6 +194,7 @@ impl Deployment {
             artifacts_dir: PathBuf::from("artifacts"),
             seed: 1,
             wire_batch: true,
+            budget: WindowBudgetSpec::default(),
             wire_meter: None,
             max_wall: Duration::from_secs(600),
             probe_every: Duration::from_millis(2),
@@ -186,6 +213,7 @@ impl Deployment {
             artifacts_dir: PathBuf::from(&cfg.deploy.artifacts_dir),
             seed: cfg.workload.seed,
             wire_batch: cfg.deploy.wire_batch,
+            budget: cfg.deploy.budget_spec(),
             wire_meter: None,
             max_wall: Duration::from_secs(600),
             probe_every: Duration::from_millis(cfg.deploy.probe_fallback_ms.max(1)),
@@ -229,6 +257,16 @@ impl Deployment {
     /// restores the legacy one-frame-per-message protocol.
     pub fn wire_batching(mut self, on: bool) -> Self {
         self.wire_batch = on;
+        self
+    }
+
+    /// Per-window timestamp-budget policy: `WindowBudgetSpec::fixed(n)`
+    /// (default `fixed(16384)`) or `WindowBudgetSpec::adaptive(min, max)`
+    /// for the transport-backlog feedback controller.  Either way the
+    /// virtual-time results are identical — the budget only shapes window
+    /// boundaries (see [`adaptive`]).
+    pub fn window_budget(mut self, spec: WindowBudgetSpec) -> Self {
+        self.budget = spec;
         self
     }
 
@@ -304,6 +342,7 @@ impl Deployment {
                 workers: self.workers,
                 exec: self.exec,
                 wire_batch: self.wire_batch,
+                budget: self.budget,
             };
             let backend = Arc::clone(&backend);
             handles.push(
@@ -575,6 +614,14 @@ impl Deployment {
             let mut windows = 0;
             let mut wire_frames = 0;
             let mut wire_bytes = 0;
+            let mut windows_truncated = 0;
+            let mut budget_min = u64::MAX;
+            let mut budget_max = 0;
+            let mut budget_last = 0;
+            let mut budget_grows = 0;
+            let mut budget_shrinks = 0;
+            let mut queue_highwater = 0;
+            let mut send_block_us = 0;
             let mut per_agent = Vec::new();
             for (a, s) in &st.final_stats {
                 events += s.events_processed;
@@ -585,7 +632,22 @@ impl Deployment {
                 windows += s.windows;
                 wire_frames += s.wire_frames;
                 wire_bytes += s.wire_bytes;
+                windows_truncated += s.windows_truncated;
+                // Non-participants report an all-zero trajectory; only
+                // agents that actually ran windows shape the fleet view.
+                if s.budget_last > 0 {
+                    budget_min = budget_min.min(s.budget_min);
+                    budget_max = budget_max.max(s.budget_max);
+                    budget_last = budget_last.max(s.budget_last);
+                }
+                budget_grows += s.budget_grows;
+                budget_shrinks += s.budget_shrinks;
+                queue_highwater = queue_highwater.max(s.queue_highwater);
+                send_block_us += s.send_block_us;
                 per_agent.push((*a, *s));
+            }
+            if budget_min == u64::MAX {
+                budget_min = 0;
             }
             let jobs = st.pool.of_kind("job").len();
             let transfers = st.pool.of_kind("transfer").len();
@@ -603,6 +665,14 @@ impl Deployment {
                 windows,
                 wire_frames,
                 wire_bytes,
+                windows_truncated,
+                budget_min,
+                budget_max,
+                budget_last,
+                budget_grows,
+                budget_shrinks,
+                queue_highwater,
+                send_block_us,
                 pool: st.pool,
                 per_agent,
                 placements: placements_all[i]

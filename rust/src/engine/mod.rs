@@ -236,6 +236,11 @@ pub struct EngineStats {
     pub window_timestamps: u64,
     /// Largest single window, in events.
     pub max_window_events: usize,
+    /// Windows cut short by the caller's timestamp budget (the window had
+    /// more provably-safe work and resumed next call) — the signal that
+    /// the budget, not the horizon, is the binding constraint.  Feeds the
+    /// adaptive window-size controller's grow decision.
+    pub windows_truncated: u64,
     /// Remote events dropped because their source is outside the context's
     /// participant set (see `EventQueues::push_remote`).
     pub events_rejected: u64,
@@ -668,6 +673,10 @@ impl<P: Clone + Send + 'static> Engine<P> {
                 self.stats.windows += 1;
                 self.stats.window_timestamps += timestamps as u64;
                 self.stats.max_window_events = self.stats.max_window_events.max(events);
+                if timestamps == max_timestamps {
+                    // The loop ended on the budget, not the horizon.
+                    self.stats.windows_truncated += 1;
+                }
                 // Sync once per window — the batching win.  The eager
                 // flood routes through the monotone `announce_to` filter:
                 // a window that moved no per-peer bound sends that peer
@@ -1251,6 +1260,7 @@ mod tests {
         assert_eq!(e.lvt(), SimTime::new(5.0));
         assert_eq!(e.stats().windows, 1);
         assert_eq!(e.stats().window_timestamps, 6);
+        assert_eq!(e.stats().windows_truncated, 0);
         assert_eq!(e.stats().events_processed, 6);
         assert_eq!(e.drain_outbox().results.len(), 1);
     }
@@ -1277,6 +1287,9 @@ mod tests {
         assert_eq!(events, 6);
         assert_eq!(calls, 3);
         assert_eq!(e.lvt(), SimTime::new(5.0));
+        // Every call ended on the budget (the last exactly drained the
+        // queue, which still counts — the budget was the loop's bound).
+        assert_eq!(e.stats().windows_truncated, 3);
     }
 
     #[test]

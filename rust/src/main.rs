@@ -58,6 +58,8 @@ USAGE:
              [--lookahead s] [--workers n] [--exec window|step]
              [--max-frame-mib n] [--no-wire-batch]
              [--wire-codec binary|json] [--writer-queue-frames n]
+             [--window-budget adaptive|fixed(N)|fixed(inf)]
+             [--window-budget-min n] [--window-budget-max n]
   dsim check-artifacts [dir]
 "
     );
@@ -82,6 +84,19 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
             s.max_queue_len
         );
     }
+    // Budget trajectory + wire backlog: the compute-bound vs wire-bound
+    // signal (constant trajectory under the default fixed budget).
+    println!(
+        "  budget: min={} max={} last={} grows={} shrinks={} truncated={} queue_hw={} blocked_us={}",
+        report.budget_min,
+        report.budget_max,
+        report.budget_last,
+        report.budget_grows,
+        report.budget_shrinks,
+        report.windows_truncated,
+        report.queue_highwater,
+        report.send_block_us
+    );
     if let Some(i) = args.iter().position(|a| a == "--results") {
         let out = args
             .get(i + 1)
@@ -185,6 +200,24 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         writer_queue_frames >= 1,
         "--writer-queue-frames must be >= 1 (a bounded queue needs room for one frame)"
     );
+    // Window-budget policy: fixed(N) baseline (default) or the adaptive
+    // controller fed by this endpoint's writer-queue telemetry.
+    let budget_default = dsim::coordinator::WindowBudgetSpec::default();
+    let budget = dsim::coordinator::WindowBudgetSpec {
+        mode: get("--window-budget")
+            .map(|s| s.parse().map_err(anyhow::Error::msg))
+            .transpose()?
+            .unwrap_or(budget_default.mode),
+        min: get("--window-budget-min")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(budget_default.min),
+        max: get("--window-budget-max")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(budget_default.max),
+    };
+    budget.validate().map_err(anyhow::Error::msg)?;
     // Legacy one-frame-per-message wire protocol (mixed fleets, baselines).
     let wire_batch = !args.iter().any(|a| a == "--no-wire-batch");
     let peer_ids: Vec<AgentId> = peers.keys().copied().filter(|a| a.raw() != 0).collect();
@@ -204,6 +237,7 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         workers,
         exec,
         wire_batch,
+        budget,
     };
     println!("agent {me} listening on {bind}");
     AgentRuntime::new(cfg, transport, backend).run();

@@ -1,4 +1,6 @@
-//! Minimal property-testing kit (the offline snapshot has no `proptest`).
+//! Minimal property-testing kit (the offline snapshot has no `proptest`)
+//! plus the shared cross-transport fleet driver the equivalence suites
+//! run on.
 //!
 //! [`check`] runs a property over `n` seeded-random cases; on failure it
 //! retries the failing case with progressively "smaller" seeds derived from
@@ -16,8 +18,31 @@
 //!     if v == w { Ok(()) } else { Err("sort not idempotent".into()) }
 //! });
 //! ```
+//!
+//! [`drive_two_center`] deploys and runs the two-center demo over an
+//! arbitrary [`Transport`] — the generic leader the `tcp_equivalence` and
+//! `adaptive_equivalence` suites share, so the only variable between two
+//! drives is the fleet configuration under test.
 
-use crate::util::Pcg32;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener};
+
+use crate::coordinator::{
+    fingerprint_parts, stats_from_json, AgentConfig, AgentRuntime, HostStatsView, ProbeAnswer,
+    TerminationDetector, LEADER,
+};
+use crate::engine::SimTime;
+use crate::metrics::ResultPool;
+use crate::model::Payload;
+use crate::runtime::ComputeBackend;
+use crate::transport::{
+    ControlMsg, InProcEndpoint, InProcNetwork, NetMsg, TcpOptions, TcpTransport, Transport, Wire,
+};
+use crate::util::{AgentId, Pcg32};
+use crate::workload;
 
 /// Result of one property case.
 pub type CaseResult = Result<(), String>;
@@ -53,6 +78,271 @@ where
             );
         }
     }
+}
+
+/// The two-agent fleet the equivalence suites and benches drive (the
+/// leader is [`LEADER`]).
+pub const FLEET_AGENTS: [AgentId; 2] = [AgentId(1), AgentId(2)];
+
+/// A leader endpoint + per-agent endpoints for [`FLEET_AGENTS`] on one
+/// in-process channel fabric; `cfg` builds each agent's configuration.
+pub fn inproc_fleet(
+    cfg: impl Fn(AgentId) -> AgentConfig,
+) -> (
+    InProcEndpoint<Payload>,
+    Vec<(AgentConfig, InProcEndpoint<Payload>)>,
+) {
+    let net: InProcNetwork<Payload> = InProcNetwork::new();
+    let leader = net.endpoint(LEADER);
+    let agents = FLEET_AGENTS
+        .iter()
+        .map(|&a| (cfg(a), net.endpoint(a)))
+        .collect();
+    (leader, agents)
+}
+
+/// A leader + [`FLEET_AGENTS`] TCP fleet on OS-assigned localhost ports:
+/// listeners are bound first so the full peer address map exists before
+/// any endpoint is built (no port collisions between parallel tests).
+pub fn tcp_fleet(
+    opts: TcpOptions,
+    cfg: impl Fn(AgentId) -> AgentConfig,
+) -> (
+    TcpTransport<Payload>,
+    Vec<(AgentConfig, TcpTransport<Payload>)>,
+) {
+    let ids = [LEADER, FLEET_AGENTS[0], FLEET_AGENTS[1]];
+    let listeners: Vec<TcpListener> = ids
+        .iter()
+        .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+        .collect();
+    let peers: HashMap<AgentId, SocketAddr> = ids
+        .iter()
+        .zip(&listeners)
+        .map(|(a, l)| (*a, l.local_addr().unwrap()))
+        .collect();
+    let mut transports: Vec<TcpTransport<Payload>> = ids
+        .iter()
+        .zip(listeners)
+        .map(|(a, l)| TcpTransport::from_listener(*a, l, peers.clone(), opts).unwrap())
+        .collect();
+    let leader = transports.remove(0);
+    let agents = FLEET_AGENTS
+        .iter()
+        .zip(transports)
+        .map(|(&a, t)| (cfg(a), t))
+        .collect();
+    (leader, agents)
+}
+
+/// What one [`drive_two_center`] run produced: the canonical determinism
+/// digest plus each agent's final counters (budget trajectory and queue
+/// telemetry included), so suites can assert on both results and
+/// telemetry.
+pub struct FleetOutcome {
+    /// The same digest `RunReport::determinism_fingerprint` computes,
+    /// assembled from the control-plane messages.
+    pub fingerprint: String,
+    /// Final per-agent statistics (FinalStats), in arrival order.
+    pub stats: Vec<(AgentId, HostStatsView)>,
+}
+
+/// Drive the two-center demo over an arbitrary transport: deploy with
+/// round-robin group placement (matching the in-proc Deployment's
+/// RoundRobin scheduler: group i -> agents\[i % n\]), run probe-driven
+/// termination with GVT broadcast, collect results and final statistics.
+/// Panics (failing the calling test) if the run does not terminate or an
+/// agent never reports.
+pub fn drive_two_center<T: Transport<Payload> + Send + 'static>(
+    leader: T,
+    agents: Vec<(AgentConfig, T)>,
+) -> FleetOutcome {
+    let ids: Vec<AgentId> = agents.iter().map(|(cfg, _)| cfg.me).collect();
+    let g = workload::two_center_demo();
+    let ctx = crate::util::ContextId(1);
+    let backend = Arc::new(ComputeBackend::auto(std::path::Path::new("artifacts")));
+
+    let mut handles = Vec::new();
+    for (cfg, transport) in agents {
+        let backend = Arc::clone(&backend);
+        handles.push(std::thread::spawn(move || {
+            AgentRuntime::new(cfg, transport, backend).run();
+        }));
+    }
+
+    // --- deploy -----------------------------------------------------------
+    let n_groups = g.scenario.group_count();
+    let group_agent: Vec<AgentId> = (0..n_groups).map(|i| ids[i % ids.len()]).collect();
+    let routes: Vec<_> = g
+        .scenario
+        .lps
+        .iter()
+        .map(|l| (l.id, group_agent[l.group]))
+        .collect();
+    for &a in &ids {
+        leader
+            .send(
+                a,
+                NetMsg::Control(ControlMsg::RoutingTable {
+                    context: ctx,
+                    routes: routes.clone(),
+                }),
+            )
+            .unwrap();
+    }
+    for l in &g.scenario.lps {
+        leader
+            .send(
+                group_agent[l.group],
+                NetMsg::Control(ControlMsg::DeployLp {
+                    context: ctx,
+                    lp: l.id,
+                    kind: l.kind.clone(),
+                    params: l.params.clone(),
+                }),
+            )
+            .unwrap();
+    }
+    for (time, dst, payload) in &g.scenario.bootstrap {
+        let group = g.scenario.lps.iter().find(|l| l.id == *dst).unwrap().group;
+        leader
+            .send(
+                group_agent[group],
+                NetMsg::Control(ControlMsg::Bootstrap {
+                    context: ctx,
+                    time: *time,
+                    dst: *dst,
+                    payload: payload.to_json(),
+                }),
+            )
+            .unwrap();
+    }
+    for &a in &ids {
+        leader
+            .send(
+                a,
+                NetMsg::Control(ControlMsg::StartRun {
+                    context: ctx,
+                    participants: ids.clone(),
+                }),
+            )
+            .unwrap();
+    }
+
+    // --- run: probe rounds + GVT broadcast + result collection -----------
+    let pool = ResultPool::new();
+    let mut detector = TerminationDetector::new(ids.len());
+    let started = Instant::now();
+    'outer: loop {
+        assert!(
+            started.elapsed() < Duration::from_secs(120),
+            "run did not terminate"
+        );
+        let round = detector.start_round();
+        for &a in &ids {
+            leader
+                .send(a, NetMsg::Control(ControlMsg::Probe { context: ctx, round }))
+                .unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_millis(100);
+        while Instant::now() < deadline && !detector.round_complete() {
+            match leader.recv_timeout(Duration::from_millis(5)) {
+                Some(NetMsg::Control(ControlMsg::ProbeReply {
+                    round: r,
+                    from,
+                    idle,
+                    sent,
+                    received,
+                    lvt,
+                    next_event,
+                    windows,
+                    ..
+                })) => {
+                    let done = detector.ingest(
+                        r,
+                        from,
+                        ProbeAnswer {
+                            idle,
+                            sent,
+                            received,
+                            lvt_s: lvt.secs(),
+                            next_event_s: next_event.secs(),
+                            windows,
+                        },
+                    );
+                    if let Some(gvt) = detector.take_gvt() {
+                        for &a in &ids {
+                            leader
+                                .send(
+                                    a,
+                                    NetMsg::Control(ControlMsg::GvtUpdate {
+                                        context: ctx,
+                                        gvt: SimTime::new(gvt),
+                                    }),
+                                )
+                                .unwrap();
+                        }
+                    }
+                    if done {
+                        break 'outer;
+                    }
+                }
+                Some(NetMsg::Control(ControlMsg::WindowReport { records, .. })) => {
+                    for (kind, record) in records {
+                        pool.push(&kind, record);
+                    }
+                }
+                Some(NetMsg::Control(ControlMsg::Result { kind, record, .. })) => {
+                    pool.push(&kind, record);
+                }
+                _ => {}
+            }
+        }
+    }
+    let mut makespan = detector.max_lvt();
+
+    // --- teardown: final stats, trailing records, shutdown ----------------
+    for &a in &ids {
+        leader
+            .send(a, NetMsg::Control(ControlMsg::EndRun { context: ctx }))
+            .unwrap();
+    }
+    let mut events = 0u64;
+    let mut remote = 0u64;
+    let mut stats: Vec<(AgentId, HostStatsView)> = Vec::new();
+    while stats.len() < ids.len() {
+        match leader.recv_timeout(Duration::from_secs(10)) {
+            Some(NetMsg::Control(ControlMsg::FinalStats { stats: s, from, .. })) => {
+                let v = stats_from_json(&s).expect("final stats decode");
+                events += v.events_processed;
+                remote += v.events_sent_remote;
+                makespan = makespan.max(v.lvt_s);
+                stats.push((from, v));
+            }
+            Some(NetMsg::Control(ControlMsg::WindowReport { records, .. })) => {
+                for (kind, record) in records {
+                    pool.push(&kind, record);
+                }
+            }
+            Some(NetMsg::Control(ControlMsg::Result { kind, record, .. })) => {
+                pool.push(&kind, record);
+            }
+            Some(_) => {}
+            None => panic!("timed out waiting for final stats"),
+        }
+    }
+    for &a in &ids {
+        let _ = leader.send(a, NetMsg::Control(ControlMsg::Shutdown));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+
+    let jobs = pool.of_kind("job").len();
+    let transfers = pool.of_kind("transfer").len();
+    let fingerprint =
+        fingerprint_parts(events, remote, jobs, transfers, makespan, &pool.kind_counts());
+    FleetOutcome { fingerprint, stats }
 }
 
 /// Assert two f64s are close (absolute + relative tolerance).

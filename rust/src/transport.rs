@@ -118,9 +118,9 @@ use std::collections::HashMap;
 use std::io::{Read, Write as IoWrite};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -310,6 +310,33 @@ pub trait Transport<P>: Send {
     fn wire_bytes(&self) -> u64 {
         0
     }
+
+    /// Writer-queue backpressure telemetry: the wire-side input of the
+    /// adaptive window controller (`coordinator::WindowController`) and
+    /// the operator's compute-bound-vs-wire-bound signal.  All counters
+    /// (no wall-clock reads on this path; the block-time counter is
+    /// accumulated by the blocked sender itself).  Transports that
+    /// deliver without queueing — in-process channels — report the
+    /// default all-zero snapshot.
+    fn telemetry(&self) -> TransportTelemetry {
+        TransportTelemetry::default()
+    }
+}
+
+/// Snapshot of an endpoint's writer-queue backpressure counters (see
+/// [`Transport::telemetry`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportTelemetry {
+    /// Configured per-peer writer-queue bound, in frames (0 = the
+    /// transport has no writer queues).
+    pub queue_depth: u64,
+    /// Frames currently queued, max across peers.
+    pub queue_occupancy: u64,
+    /// Highest occupancy ever observed (capped at `queue_depth`).
+    pub queue_highwater: u64,
+    /// Cumulative microseconds senders have spent blocked on a full
+    /// writer queue (backpressure stalls).
+    pub send_block_us: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -1649,6 +1676,9 @@ fn encode_split<P: Wire>(
 /// that encodes and transmits.
 struct PeerWriter<P> {
     tx: SyncSender<NetMsg<P>>,
+    /// Frames currently queued (sender increments before enqueue, the
+    /// writer decrements as it dequeues — never underflows).
+    occupancy: Arc<AtomicU64>,
     handle: std::thread::JoinHandle<()>,
 }
 
@@ -1665,6 +1695,13 @@ pub struct TcpTransport<P> {
     /// Bytes the writer threads have put on the wire (frames + prefixes
     /// + preambles).
     bytes_sent: Arc<AtomicU64>,
+    /// Highest writer-queue occupancy ever observed (frames, capped at
+    /// the configured depth).
+    queue_highwater: AtomicU64,
+    /// Cumulative microseconds senders spent blocked on a full writer
+    /// queue (backpressure stalls; telemetry only — never consulted for
+    /// protocol decisions).
+    send_block_us: AtomicU64,
     _listener: std::thread::JoinHandle<()>,
 }
 
@@ -1754,6 +1791,8 @@ impl<P: Wire + Send + 'static> TcpTransport<P> {
             inbox: Mutex::new(rx),
             inbox_tx: tx,
             bytes_sent: Arc::new(AtomicU64::new(0)),
+            queue_highwater: AtomicU64::new(0),
+            send_block_us: AtomicU64::new(0),
             _listener: handle,
         })
     }
@@ -1768,10 +1807,16 @@ impl<P: Wire + Send + 'static> TcpTransport<P> {
         let me = self.me;
         let opts = self.opts;
         let bytes = Arc::clone(&self.bytes_sent);
+        let occupancy = Arc::new(AtomicU64::new(0));
+        let occ = Arc::clone(&occupancy);
         let handle = std::thread::Builder::new()
             .name(format!("dsim-tcp-writer-{me}-{to}"))
-            .spawn(move || writer_loop::<P>(me, to, addr, opts, rx, bytes))?;
-        Ok(PeerWriter { tx, handle })
+            .spawn(move || writer_loop::<P>(me, to, addr, opts, rx, bytes, occ))?;
+        Ok(PeerWriter {
+            tx,
+            occupancy,
+            handle,
+        })
     }
 }
 
@@ -1829,10 +1874,12 @@ fn writer_loop<P: Wire>(
     opts: TcpOptions,
     rx: Receiver<NetMsg<P>>,
     bytes: Arc<AtomicU64>,
+    occupancy: Arc<AtomicU64>,
 ) {
     let mut stream: Option<TcpStream> = None;
     let mut frames: Vec<Vec<u8>> = Vec::new();
     for msg in rx.iter() {
+        occupancy.fetch_sub(1, Ordering::Relaxed);
         frames.clear();
         if let Err(e) = encode_split(opts.codec, opts.max_frame, msg, &mut frames) {
             log::error!("{me}: writer to {to} exiting on undeliverable frame: {e:#}");
@@ -1904,15 +1951,40 @@ impl<P: Wire + Clone + Send + 'static> Transport<P> for TcpTransport<P> {
         }
         // Clone the sender out of the lock: a backpressure block must not
         // hold the writer map against sends to other peers.
-        let tx = {
+        let (tx, occupancy) = {
             let mut writers = self.writers.lock().unwrap();
             if !writers.contains_key(&to) {
                 let w = self.spawn_writer(to)?;
                 writers.insert(to, w);
             }
-            writers[&to].tx.clone()
+            let w = &writers[&to];
+            (w.tx.clone(), Arc::clone(&w.occupancy))
         };
-        if tx.send(msg).is_err() {
+        // Occupancy brackets the enqueue — increment here, the writer
+        // decrements as it dequeues — so the gauge never underflows; its
+        // running max (capped at the depth) is the queue-high-water
+        // telemetry the adaptive window controller consumes.
+        let depth = self.opts.writer_queue as u64;
+        let occ = occupancy.fetch_add(1, Ordering::Relaxed) + 1;
+        self.queue_highwater
+            .fetch_max(occ.min(depth), Ordering::Relaxed);
+        let delivered = match tx.try_send(msg) {
+            Ok(()) => true,
+            Err(TrySendError::Full(msg)) => {
+                // Backpressure: the queue is at depth; meter the stall so
+                // the controller (and the operator) can see the fleet is
+                // wire-bound, then block — never drop.
+                self.queue_highwater.fetch_max(depth, Ordering::Relaxed);
+                let t0 = Instant::now();
+                let sent = tx.send(msg).is_ok();
+                self.send_block_us
+                    .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                sent
+            }
+            Err(TrySendError::Disconnected(_)) => false,
+        };
+        if !delivered {
+            occupancy.fetch_sub(1, Ordering::Relaxed);
             // Writer died (connection failure).  Remove it so a later send
             // gets a fresh writer and thus a fresh connect attempt.
             if let Some(w) = self.writers.lock().unwrap().remove(&to) {
@@ -1934,6 +2006,23 @@ impl<P: Wire + Clone + Send + 'static> Transport<P> for TcpTransport<P> {
 
     fn wire_bytes(&self) -> u64 {
         self.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    fn telemetry(&self) -> TransportTelemetry {
+        let occupancy = {
+            let writers = self.writers.lock().unwrap();
+            writers
+                .values()
+                .map(|w| w.occupancy.load(Ordering::Relaxed))
+                .max()
+                .unwrap_or(0)
+        };
+        TransportTelemetry {
+            queue_depth: self.opts.writer_queue as u64,
+            queue_occupancy: occupancy,
+            queue_highwater: self.queue_highwater.load(Ordering::Relaxed),
+            send_block_us: self.send_block_us.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -2629,6 +2718,40 @@ mod tests {
                 other => panic!("unexpected {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn writer_queue_telemetry_reports_depth_and_highwater() {
+        let opts = TcpOptions { writer_queue: 4, ..TcpOptions::default() };
+        let (t1, t2) = tcp_pair(opts, opts);
+        // Before any send: depth is configured, gauges are zero.
+        let t = t1.telemetry();
+        assert_eq!(t.queue_depth, 4);
+        assert_eq!((t.queue_occupancy, t.queue_highwater, t.send_block_us), (0, 0, 0));
+        // Every enqueue raises the high-water mark synchronously (the
+        // writer may drain the queue at any speed, so only the mark — not
+        // the live occupancy — is deterministic here).
+        for i in 0..8u64 {
+            t1.send(
+                AgentId(2),
+                NetMsg::Control(ControlMsg::Probe { context: ContextId(i), round: i }),
+            )
+            .unwrap();
+        }
+        let t = t1.telemetry();
+        assert!(t.queue_highwater >= 1, "no high-water recorded");
+        assert!(t.queue_highwater <= 4, "high-water exceeded depth: {}", t.queue_highwater);
+        for _ in 0..8 {
+            assert!(t2.recv_timeout(Duration::from_secs(5)).is_some());
+        }
+        // Loopback sends bypass the writer queues entirely.
+        let before = t2.telemetry();
+        t2.send(AgentId(2), NetMsg::Control(ControlMsg::Shutdown)).unwrap();
+        assert_eq!(t2.telemetry(), before);
+        // The in-proc fabric has no queues: permanently all-zero.
+        let net: InProcNetwork<u32> = InProcNetwork::new();
+        let a = net.endpoint(AgentId(1));
+        assert_eq!(a.telemetry(), TransportTelemetry::default());
     }
 
     #[test]

@@ -249,6 +249,7 @@ fn unknown_peer_events_rejected_in_both_exec_modes() {
             workers: 0,
             exec,
             wire_batch: true,
+            budget: Default::default(),
         };
         let handle = std::thread::spawn(move || {
             AgentRuntime::new(cfg, ep, backend).run();

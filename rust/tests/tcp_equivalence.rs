@@ -5,49 +5,37 @@
 //! both sync protocols, under both wire codecs ({json, binary}), and
 //! with the legacy one-frame-per-message wire protocol as well.
 //!
-//! Both sides run through one generic leader driver, so the only variable
-//! is the transport itself; the digest is assembled with the same
-//! [`fingerprint_parts`] the in-proc `RunReport` uses, extending the
-//! `window_equivalence` fingerprint check across transports.
+//! Both sides run through the shared generic leader driver and fleet
+//! builders ([`dsim::testkit`] — also the engine of the
+//! `adaptive_equivalence` suite), so the only variable is the transport
+//! itself; the digest is assembled with the same
+//! [`dsim::coordinator::fingerprint_parts`] the in-proc `RunReport` uses,
+//! extending the `window_equivalence` fingerprint check across
+//! transports.
 
-use std::collections::HashMap;
-use std::net::{SocketAddr, TcpListener};
-use std::path::Path;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use dsim::config::PlacementPolicy;
-use dsim::coordinator::{
-    fingerprint_parts, stats_from_json, AgentConfig, AgentRuntime, Deployment, ProbeAnswer,
-    TerminationDetector, LEADER,
-};
-use dsim::engine::{ExecMode, SimTime, SyncProtocol};
-use dsim::metrics::ResultPool;
+use dsim::coordinator::{AgentConfig, Deployment, WindowBudgetSpec};
+use dsim::engine::{ExecMode, SyncProtocol};
 use dsim::model::Payload;
-use dsim::runtime::ComputeBackend;
-use dsim::transport::{
-    ControlMsg, InProcEndpoint, InProcNetwork, NetMsg, TcpOptions, TcpTransport, Transport, Wire,
-    WireCodec,
-};
-use dsim::util::{AgentId, ContextId};
-use dsim::workload;
-
-const AGENTS: [AgentId; 2] = [AgentId(1), AgentId(2)];
+use dsim::testkit::{drive_two_center, FLEET_AGENTS};
+use dsim::transport::{InProcEndpoint, TcpOptions, TcpTransport, WireCodec};
+use dsim::util::AgentId;
 
 fn agent_cfg(me: AgentId, workers: usize, proto: SyncProtocol, wire_batch: bool) -> AgentConfig {
     AgentConfig {
         me,
-        peers: AGENTS.to_vec(),
+        peers: FLEET_AGENTS.to_vec(),
         lookahead: 0.05,
         protocol: proto,
         workers,
         exec: ExecMode::SafeWindow,
         wire_batch,
+        budget: WindowBudgetSpec::default(),
     }
 }
 
-/// An in-process fleet: leader endpoint + per-agent endpoints on one
-/// channel fabric.
 fn inproc_fleet(
     workers: usize,
     proto: SyncProtocol,
@@ -56,17 +44,9 @@ fn inproc_fleet(
     InProcEndpoint<Payload>,
     Vec<(AgentConfig, InProcEndpoint<Payload>)>,
 ) {
-    let net: InProcNetwork<Payload> = InProcNetwork::new();
-    let leader = net.endpoint(LEADER);
-    let agents = AGENTS
-        .iter()
-        .map(|&a| (agent_cfg(a, workers, proto, wire_batch), net.endpoint(a)))
-        .collect();
-    (leader, agents)
+    dsim::testkit::inproc_fleet(|me| agent_cfg(me, workers, proto, wire_batch))
 }
 
-/// A TCP fleet on OS-assigned localhost ports: listeners are bound first
-/// so the full peer address map exists before any endpoint is built.
 fn tcp_fleet(
     workers: usize,
     proto: SyncProtocol,
@@ -80,222 +60,7 @@ fn tcp_fleet(
         codec,
         ..TcpOptions::default()
     };
-    let ids = [LEADER, AGENTS[0], AGENTS[1]];
-    let listeners: Vec<TcpListener> = ids
-        .iter()
-        .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
-        .collect();
-    let peers: HashMap<AgentId, SocketAddr> = ids
-        .iter()
-        .zip(&listeners)
-        .map(|(a, l)| (*a, l.local_addr().unwrap()))
-        .collect();
-    let mut transports: Vec<TcpTransport<Payload>> = ids
-        .iter()
-        .zip(listeners)
-        .map(|(a, l)| TcpTransport::from_listener(*a, l, peers.clone(), opts).unwrap())
-        .collect();
-    let leader = transports.remove(0);
-    let agents = AGENTS
-        .iter()
-        .zip(transports)
-        .map(|(&a, t)| (agent_cfg(a, workers, proto, wire_batch), t))
-        .collect();
-    (leader, agents)
-}
-
-/// Drive the two-center demo over an arbitrary transport: deploy with
-/// round-robin group placement (matching the in-proc Deployment's
-/// RoundRobin scheduler: group i -> agents[i % 2]), run probe-driven
-/// termination with GVT broadcast, collect results and final statistics,
-/// and return the canonical determinism fingerprint.
-fn drive<T: Transport<Payload> + Send + 'static>(
-    leader: T,
-    agents: Vec<(AgentConfig, T)>,
-) -> String {
-    let g = workload::two_center_demo();
-    let ctx = ContextId(1);
-    let backend = Arc::new(ComputeBackend::auto(Path::new("artifacts")));
-
-    let mut handles = Vec::new();
-    for (cfg, transport) in agents {
-        let backend = Arc::clone(&backend);
-        handles.push(std::thread::spawn(move || {
-            AgentRuntime::new(cfg, transport, backend).run();
-        }));
-    }
-
-    // --- deploy -----------------------------------------------------------
-    let n_groups = g.scenario.group_count();
-    let group_agent: Vec<AgentId> = (0..n_groups).map(|i| AGENTS[i % AGENTS.len()]).collect();
-    let routes: Vec<_> = g
-        .scenario
-        .lps
-        .iter()
-        .map(|l| (l.id, group_agent[l.group]))
-        .collect();
-    for &a in &AGENTS {
-        leader
-            .send(
-                a,
-                NetMsg::Control(ControlMsg::RoutingTable {
-                    context: ctx,
-                    routes: routes.clone(),
-                }),
-            )
-            .unwrap();
-    }
-    for l in &g.scenario.lps {
-        leader
-            .send(
-                group_agent[l.group],
-                NetMsg::Control(ControlMsg::DeployLp {
-                    context: ctx,
-                    lp: l.id,
-                    kind: l.kind.clone(),
-                    params: l.params.clone(),
-                }),
-            )
-            .unwrap();
-    }
-    for (time, dst, payload) in &g.scenario.bootstrap {
-        let group = g.scenario.lps.iter().find(|l| l.id == *dst).unwrap().group;
-        leader
-            .send(
-                group_agent[group],
-                NetMsg::Control(ControlMsg::Bootstrap {
-                    context: ctx,
-                    time: *time,
-                    dst: *dst,
-                    payload: payload.to_json(),
-                }),
-            )
-            .unwrap();
-    }
-    for &a in &AGENTS {
-        leader
-            .send(
-                a,
-                NetMsg::Control(ControlMsg::StartRun {
-                    context: ctx,
-                    participants: AGENTS.to_vec(),
-                }),
-            )
-            .unwrap();
-    }
-
-    // --- run: probe rounds + GVT broadcast + result collection -----------
-    let pool = ResultPool::new();
-    let mut detector = TerminationDetector::new(AGENTS.len());
-    let started = Instant::now();
-    'outer: loop {
-        assert!(
-            started.elapsed() < Duration::from_secs(120),
-            "run did not terminate"
-        );
-        let round = detector.start_round();
-        for &a in &AGENTS {
-            leader
-                .send(a, NetMsg::Control(ControlMsg::Probe { context: ctx, round }))
-                .unwrap();
-        }
-        let deadline = Instant::now() + Duration::from_millis(100);
-        while Instant::now() < deadline && !detector.round_complete() {
-            match leader.recv_timeout(Duration::from_millis(5)) {
-                Some(NetMsg::Control(ControlMsg::ProbeReply {
-                    round: r,
-                    from,
-                    idle,
-                    sent,
-                    received,
-                    lvt,
-                    next_event,
-                    windows,
-                    ..
-                })) => {
-                    let done = detector.ingest(
-                        r,
-                        from,
-                        ProbeAnswer {
-                            idle,
-                            sent,
-                            received,
-                            lvt_s: lvt.secs(),
-                            next_event_s: next_event.secs(),
-                            windows,
-                        },
-                    );
-                    if let Some(gvt) = detector.take_gvt() {
-                        for &a in &AGENTS {
-                            leader
-                                .send(
-                                    a,
-                                    NetMsg::Control(ControlMsg::GvtUpdate {
-                                        context: ctx,
-                                        gvt: SimTime::new(gvt),
-                                    }),
-                                )
-                                .unwrap();
-                        }
-                    }
-                    if done {
-                        break 'outer;
-                    }
-                }
-                Some(NetMsg::Control(ControlMsg::WindowReport { records, .. })) => {
-                    for (kind, record) in records {
-                        pool.push(&kind, record);
-                    }
-                }
-                Some(NetMsg::Control(ControlMsg::Result { kind, record, .. })) => {
-                    pool.push(&kind, record);
-                }
-                _ => {}
-            }
-        }
-    }
-    let mut makespan = detector.max_lvt();
-
-    // --- teardown: final stats, trailing records, shutdown ----------------
-    for &a in &AGENTS {
-        leader
-            .send(a, NetMsg::Control(ControlMsg::EndRun { context: ctx }))
-            .unwrap();
-    }
-    let mut events = 0u64;
-    let mut remote = 0u64;
-    let mut got_stats = 0;
-    while got_stats < AGENTS.len() {
-        match leader.recv_timeout(Duration::from_secs(10)) {
-            Some(NetMsg::Control(ControlMsg::FinalStats { stats, .. })) => {
-                let v = stats_from_json(&stats).expect("final stats decode");
-                events += v.events_processed;
-                remote += v.events_sent_remote;
-                makespan = makespan.max(v.lvt_s);
-                got_stats += 1;
-            }
-            Some(NetMsg::Control(ControlMsg::WindowReport { records, .. })) => {
-                for (kind, record) in records {
-                    pool.push(&kind, record);
-                }
-            }
-            Some(NetMsg::Control(ControlMsg::Result { kind, record, .. })) => {
-                pool.push(&kind, record);
-            }
-            Some(_) => {}
-            None => panic!("timed out waiting for final stats"),
-        }
-    }
-    for &a in &AGENTS {
-        let _ = leader.send(a, NetMsg::Control(ControlMsg::Shutdown));
-    }
-    for h in handles {
-        let _ = h.join();
-    }
-
-    let jobs = pool.of_kind("job").len();
-    let transfers = pool.of_kind("transfer").len();
-    fingerprint_parts(events, remote, jobs, transfers, makespan, &pool.kind_counts())
+    dsim::testkit::tcp_fleet(opts, |me| agent_cfg(me, workers, proto, wire_batch))
 }
 
 #[test]
@@ -308,9 +73,9 @@ fn tcp_loopback_fingerprint_matches_in_proc() {
     ] {
         for workers in [0usize, 4] {
             let (l, a) = inproc_fleet(workers, proto, true);
-            let inproc = drive(l, a);
+            let inproc = drive_two_center(l, a).fingerprint;
             let (l, a) = tcp_fleet(workers, proto, true, WireCodec::Binary);
-            let tcp = drive(l, a);
+            let tcp = drive_two_center(l, a).fingerprint;
             assert_eq!(
                 tcp, inproc,
                 "transport divergence: proto={proto} workers={workers}"
@@ -327,10 +92,10 @@ fn codec_matrix_fingerprints_bit_identical() {
     // bit-for-bit, which is exactly the round-trip-exactness claim.
     for workers in [0usize, 4] {
         let (l, a) = inproc_fleet(workers, SyncProtocol::NullMessagesByDemand, true);
-        let baseline = drive(l, a);
+        let baseline = drive_two_center(l, a).fingerprint;
         for codec in [WireCodec::Json, WireCodec::Binary] {
             let (l, a) = tcp_fleet(workers, SyncProtocol::NullMessagesByDemand, true, codec);
-            let tcp = drive(l, a);
+            let tcp = drive_two_center(l, a).fingerprint;
             assert_eq!(
                 tcp, baseline,
                 "codec divergence: codec={codec} workers={workers}"
@@ -345,24 +110,24 @@ fn legacy_wire_protocol_matches_batched_over_tcp() {
     // produce the same results as window-batched frames (JSON codec — the
     // byte-compatible interop configuration).
     let (l, a) = tcp_fleet(0, SyncProtocol::NullMessagesByDemand, true, WireCodec::Json);
-    let batched = drive(l, a);
+    let batched = drive_two_center(l, a).fingerprint;
     let (l, a) = tcp_fleet(0, SyncProtocol::NullMessagesByDemand, false, WireCodec::Json);
-    let legacy = drive(l, a);
+    let legacy = drive_two_center(l, a).fingerprint;
     assert_eq!(batched, legacy);
 }
 
 #[test]
 fn manual_driver_matches_deployment_pipeline() {
-    // The hand-rolled driver above must agree with the full Deployment
-    // pipeline (RoundRobin placement maps group i -> agents[i % 2], same
-    // as the driver), tying the cross-transport digest back to
+    // The shared driver must agree with the full Deployment pipeline
+    // (RoundRobin placement maps group i -> agents[i % 2], same as the
+    // driver), tying the cross-transport digest back to
     // `RunReport::determinism_fingerprint`.
     let (l, a) = inproc_fleet(0, SyncProtocol::NullMessagesByDemand, true);
-    let manual = drive(l, a);
-    let report = Deployment::in_process(AGENTS.len())
+    let manual = drive_two_center(l, a).fingerprint;
+    let report = Deployment::in_process(FLEET_AGENTS.len())
         .placement(PlacementPolicy::RoundRobin)
         .max_wall(Duration::from_secs(120))
-        .run(workload::two_center_demo())
+        .run(dsim::workload::two_center_demo())
         .expect("deployment run failed");
     assert_eq!(manual, report.determinism_fingerprint());
 }
