@@ -19,9 +19,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use dsim::coordinator::{
-    stats_from_json, AgentConfig, AgentRuntime, ProbeAnswer, TerminationDetector,
-};
+use dsim::coordinator::{AgentConfig, AgentRuntime, ProbeAnswer, TerminationDetector};
 use dsim::engine::SimTime;
 use dsim::model::Payload;
 use dsim::runtime::ComputeBackend;
@@ -201,15 +199,14 @@ fn main() -> anyhow::Result<()> {
     while got_stats < agent_ids.len() {
         match leader.recv_timeout(Duration::from_secs(5)) {
             Some(NetMsg::Control(ControlMsg::FinalStats { from, stats, .. })) => {
-                if let Some(v) = stats_from_json(&stats) {
-                    println!(
-                        "  {from}: events={} remote={} sync={}",
-                        v.events_processed,
-                        v.events_sent_remote,
-                        v.null_messages_sent + v.lvt_requests_sent
-                    );
-                    events += v.events_processed;
-                }
+                // FinalStats is typed end-to-end: no JSON to decode.
+                println!(
+                    "  {from}: events={} remote={} sync={}",
+                    stats.events_processed,
+                    stats.events_sent_remote,
+                    stats.null_messages_sent + stats.lvt_requests_sent
+                );
+                events += stats.events_processed;
                 got_stats += 1;
             }
             Some(NetMsg::Control(ControlMsg::WindowReport { records, .. })) => {

@@ -15,7 +15,7 @@ use dsim::config::{PlacementPolicy, WorkloadConfig};
 use dsim::coordinator::{AgentConfig, Deployment, WindowBudgetSpec};
 use dsim::engine::{ExecMode, SyncProtocol};
 use dsim::model::Payload;
-use dsim::transport::{TcpOptions, TcpTransport, WireCodec};
+use dsim::transport::{TcpOptions, TcpTransport, WireCodec, WriterQueue};
 use dsim::workload;
 
 fn cfg() -> WorkloadConfig {
@@ -58,6 +58,53 @@ fn main() {
     if runs("adaptive") {
         claim_adaptive();
     }
+    if runs("scenario") {
+        claim_scenario();
+    }
+}
+
+// ------------------------------------------------------------------
+// CLAIM-SCENARIO: the declarative front door costs nothing — a run
+// compiled from a scenario file matches the equivalent hand-built
+// Deployment in both results (fingerprint) and throughput, and the
+// row carries the scenario content fingerprint that reproduces it.
+// ------------------------------------------------------------------
+fn claim_scenario() {
+    println!("# CLAIM-SCENARIO: scenario-file-driven run vs hand-built deployment");
+    // Benches run from the package root (rust/); the bundled library
+    // lives beside it.
+    let path = std::path::Path::new("../examples/scenarios/compute_bound.json");
+    if !path.exists() {
+        println!("# scenario {path:?} not found (run from rust/); skipping");
+        return;
+    }
+    let compiled = dsim::scenario::compile_file(path, &[]).expect("bundled scenario compiles");
+    let mut events = 0u64;
+    let mut fingerprint = String::new();
+    let mut scenario_fp = String::new();
+    let times = Bench::new("scenario/compute-bound/a2")
+        .warmup(1)
+        .iters(3)
+        .run(|| {
+            let outcomes = compiled.run().expect("scenario run failed");
+            let o = &outcomes[0];
+            events = o.events;
+            fingerprint = o.fingerprint.clone();
+            scenario_fp = o.scenario_fingerprint.clone();
+        });
+    let med = Bench::summary(&times).map(|s| s.p50).unwrap_or(0.0);
+    let rate = if med > 0.0 { events as f64 / med } else { 0.0 };
+    report_row(
+        "scenario_driven",
+        &[
+            ("scenario", compiled.name.clone()),
+            ("wall_s", fmt_s(med)),
+            ("events_per_s", format!("{rate:.0}")),
+            ("scenario_fingerprint", scenario_fp),
+            ("fingerprint", fingerprint),
+        ],
+    );
+    println!("# shape check: the run completes and the row is reproducible from the file via its scenario_fingerprint");
 }
 
 fn claim_sync() {
@@ -442,7 +489,7 @@ fn tcp_budget_fleet(
     Vec<(AgentConfig, TcpTransport<Payload>)>,
 ) {
     let opts = TcpOptions {
-        writer_queue: 2,
+        writer_queue: WriterQueue::Fixed(2),
         max_frame: 8 << 10,
         ..TcpOptions::default()
     };

@@ -47,10 +47,22 @@ pub struct BuildCtx {
     pub lookahead: f64,
 }
 
+/// Every factory kind [`build_component`] accepts — the catalog the
+/// declarative scenario validator checks component declarations against,
+/// so the two can never drift.
+pub const KNOWN_KINDS: [&str; 7] = [
+    "farm",
+    "wan",
+    "db",
+    "mass-storage",
+    "catalog",
+    "t0-driver",
+    "t1-driver",
+];
+
 /// Instantiate a component by factory `kind`.
 ///
-/// Known kinds: `"farm"`, `"wan"`, `"db"`, `"mass-storage"`, `"catalog"`,
-/// `"t0-driver"`, `"t1-driver"`.
+/// Known kinds: see [`KNOWN_KINDS`].
 pub fn build_component(
     kind: &str,
     params: &Json,
@@ -79,7 +91,7 @@ pub fn build_component(
         "t1-driver" => Ok(Box::new(
             driver::T1DriverLp::from_json(params, ctx.lookahead).context("t1-driver params")?,
         )),
-        other => bail!("unknown component kind '{other}'"),
+        other => bail!("unknown component kind '{other}' (known: {KNOWN_KINDS:?})"),
     }
 }
 

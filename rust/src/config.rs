@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::adaptive::{WindowBudgetMode, WindowBudgetSpec};
 use crate::engine::{ExecMode, SyncProtocol};
-use crate::transport::WireCodec;
+use crate::transport::{WireCodec, WriterQueue};
 use crate::util::json::Json;
 
 /// How the placement scheduler and network model evaluate their numeric
@@ -101,9 +101,13 @@ pub struct DeployConfig {
     /// than a hard constraint; in-process deployments move values
     /// directly and ignore it.
     pub wire_codec: WireCodec,
-    /// Bound of each per-peer TCP writer queue, in messages (>= 1).  A
-    /// full queue blocks the sending agent — backpressure, never loss.
-    pub writer_queue_frames: usize,
+    /// Per-peer TCP writer-queue sizing policy: a number or `"fixed(N)"`
+    /// pins the bound to N frames (>= 1, the historical behavior);
+    /// `"adaptive"` starts shallow and doubles the bound from the
+    /// occupancy high-water telemetry whenever a send finds the queue
+    /// full, up to a ceiling.  Either way a full queue at the ceiling
+    /// blocks the sending agent — backpressure, never loss.
+    pub writer_queue_frames: WriterQueue,
     /// Per-window timestamp-budget policy: `"fixed(N)"` (default
     /// `fixed(16384)`, the historical constant) or `"adaptive"` — the
     /// feedback controller sized from transport backlog + window
@@ -133,6 +137,39 @@ impl DeployConfig {
             max: self.window_budget_max,
         }
     }
+
+    /// Deploy-section sanity checks with actionable messages — shared by
+    /// [`ScenarioConfig::validate`] and the declarative scenario loader
+    /// ([`crate::scenario`]), so the two front doors can never drift.
+    pub fn validate(&self) -> Result<()> {
+        if self.agents == 0 {
+            bail!("deploy.agents must be >= 1");
+        }
+        if self.agents > 64 {
+            bail!("deploy.agents must be <= 64 (AOT placement artifact is N=64)");
+        }
+        if let Some(l) = self.lookahead {
+            if l <= 0.0 {
+                bail!("deploy.lookahead must be > 0 (conservative sync)");
+            }
+        }
+        if !(1..=usize::MAX >> 20).contains(&self.max_frame_mib) {
+            bail!(
+                "deploy.max_frame_mib must be in 1..={} (MiB shifted to bytes must fit usize)",
+                usize::MAX >> 20
+            );
+        }
+        if let Err(e) = self.writer_queue_frames.validate() {
+            bail!("deploy.{e}");
+        }
+        if let Err(e) = self.budget_spec().validate() {
+            bail!("deploy.{e}");
+        }
+        if self.probe_fallback_ms == 0 {
+            bail!("deploy.probe_fallback_ms must be >= 1");
+        }
+        Ok(())
+    }
 }
 
 impl Default for DeployConfig {
@@ -148,7 +185,7 @@ impl Default for DeployConfig {
             wire_batch: true,
             max_frame_mib: crate::transport::DEFAULT_MAX_FRAME_BYTES >> 20,
             wire_codec: WireCodec::default(),
-            writer_queue_frames: crate::transport::DEFAULT_WRITER_QUEUE_FRAMES,
+            writer_queue_frames: WriterQueue::default(),
             window_budget: WindowBudgetSpec::default().mode,
             window_budget_min: WindowBudgetSpec::default().min,
             window_budget_max: WindowBudgetSpec::default().max,
@@ -271,7 +308,11 @@ impl ScenarioConfig {
             wire_codec: get_str(&d, "wire_codec", &dd.wire_codec.to_string())?
                 .parse()
                 .map_err(anyhow::Error::msg)?,
-            writer_queue_frames: get_usize(&d, "writer_queue_frames", dd.writer_queue_frames)?,
+            writer_queue_frames: match d.get("writer_queue_frames") {
+                None => dd.writer_queue_frames,
+                // Plain numbers stay valid (pre-adaptive configs).
+                Some(v) => WriterQueue::from_json(v).map_err(anyhow::Error::msg)?,
+            },
             window_budget: get_str(&d, "window_budget", &dd.window_budget.to_string())?
                 .parse()
                 .map_err(anyhow::Error::msg)?,
@@ -310,32 +351,7 @@ impl ScenarioConfig {
 
     /// Sanity checks with actionable messages.
     pub fn validate(&self) -> Result<()> {
-        if self.deploy.agents == 0 {
-            bail!("deploy.agents must be >= 1");
-        }
-        if self.deploy.agents > 64 {
-            bail!("deploy.agents must be <= 64 (AOT placement artifact is N=64)");
-        }
-        if let Some(l) = self.deploy.lookahead {
-            if l <= 0.0 {
-                bail!("deploy.lookahead must be > 0 (conservative sync)");
-            }
-        }
-        if !(1..=usize::MAX >> 20).contains(&self.deploy.max_frame_mib) {
-            bail!(
-                "deploy.max_frame_mib must be in 1..={} (MiB shifted to bytes must fit usize)",
-                usize::MAX >> 20
-            );
-        }
-        if self.deploy.writer_queue_frames == 0 {
-            bail!("deploy.writer_queue_frames must be >= 1 (a bounded queue needs room for one frame)");
-        }
-        if let Err(e) = self.deploy.budget_spec().validate() {
-            bail!("deploy.{e}");
-        }
-        if self.deploy.probe_fallback_ms == 0 {
-            bail!("deploy.probe_fallback_ms must be >= 1");
-        }
+        self.deploy.validate()?;
         if self.workload.centers == 0 {
             bail!("workload.centers must be >= 1");
         }
@@ -399,7 +415,13 @@ impl ScenarioConfig {
                     ("wire_codec", Json::str(self.deploy.wire_codec.to_string())),
                     (
                         "writer_queue_frames",
-                        Json::num(self.deploy.writer_queue_frames as f64),
+                        // Fixed depths serialize as plain numbers (the
+                        // pre-adaptive format); only `adaptive` needs the
+                        // policy-string form.
+                        match self.deploy.writer_queue_frames {
+                            WriterQueue::Fixed(n) => Json::num(n as f64),
+                            q => Json::str(q.to_string()),
+                        },
                     ),
                     (
                         "window_budget",
@@ -513,9 +535,9 @@ mod tests {
         assert!(cfg.deploy.wire_batch);
         assert_eq!(cfg.deploy.max_frame_mib, 64);
         assert_eq!(cfg.deploy.wire_codec, WireCodec::Binary);
-        assert_eq!(cfg.deploy.writer_queue_frames, 256);
+        assert_eq!(cfg.deploy.writer_queue_frames, WriterQueue::Fixed(256));
         assert_eq!(cfg.deploy.probe_fallback_ms, 2);
-        // Explicit overrides.
+        // Explicit overrides; a plain number still means a fixed depth.
         let cfg = ScenarioConfig::from_json_text(
             r#"{"deploy": {"wire_batch": false, "max_frame_mib": 8, "probe_fallback_ms": 10,
                            "wire_codec": "json", "writer_queue_frames": 4}}"#,
@@ -524,8 +546,23 @@ mod tests {
         assert!(!cfg.deploy.wire_batch);
         assert_eq!(cfg.deploy.max_frame_mib, 8);
         assert_eq!(cfg.deploy.wire_codec, WireCodec::Json);
-        assert_eq!(cfg.deploy.writer_queue_frames, 4);
+        assert_eq!(cfg.deploy.writer_queue_frames, WriterQueue::Fixed(4));
         assert_eq!(cfg.deploy.probe_fallback_ms, 10);
+        // Policy strings: the adaptive depth and the explicit fixed form.
+        let cfg = ScenarioConfig::from_json_text(
+            r#"{"deploy": {"writer_queue_frames": "adaptive"}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.deploy.writer_queue_frames, WriterQueue::adaptive());
+        let cfg = ScenarioConfig::from_json_text(
+            r#"{"deploy": {"writer_queue_frames": "fixed(32)"}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.deploy.writer_queue_frames, WriterQueue::Fixed(32));
+        assert!(
+            ScenarioConfig::from_json_text(r#"{"deploy": {"writer_queue_frames": "turbo"}}"#)
+                .is_err()
+        );
     }
 
     #[test]

@@ -365,14 +365,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                         NetMsg::Control(ControlMsg::FinalStats {
                             context,
                             from: self.cfg.me,
-                            stats: engine_stats_json(
-                                &EngineStats::default(),
-                                0.0,
-                                0,
-                                0,
-                                &BudgetTelemetry::default(),
-                                &TransportTelemetry::default(),
-                            ),
+                            stats: HostStatsView::default(),
                         }),
                     );
                 }
@@ -407,7 +400,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                         .saturating_sub(self.send_block_reported);
                     self.send_block_reported = wire_telemetry.send_block_us;
                     wire_telemetry.send_block_us = block_delta;
-                    let stats = engine_stats_json(
+                    let stats = HostStatsView::from_parts(
                         slot.engine.stats(),
                         slot.engine.lvt().secs(),
                         slot.frames,
@@ -710,106 +703,30 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
     }
 }
 
-/// Encode engine statistics for the FinalStats control message.
-/// `wire_frames` / `wire_bytes` are agent-level transport counters for
-/// the context (the engine itself never sees frames); `budget` is the
-/// context's window-budget trajectory and `wire` the endpoint's
-/// writer-queue telemetry snapshot.
-pub fn engine_stats_json(
-    s: &EngineStats,
-    lvt_s: f64,
-    wire_frames: u64,
-    wire_bytes: u64,
-    budget: &BudgetTelemetry,
-    wire: &TransportTelemetry,
-) -> Json {
-    Json::obj(vec![
-        ("events_processed", Json::num(s.events_processed as f64)),
-        ("events_sent_local", Json::num(s.events_sent_local as f64)),
-        ("events_sent_remote", Json::num(s.events_sent_remote as f64)),
-        ("null_messages_sent", Json::num(s.null_messages_sent as f64)),
-        ("lvt_requests_sent", Json::num(s.lvt_requests_sent as f64)),
-        (
-            "lvt_requests_received",
-            Json::num(s.lvt_requests_received as f64),
-        ),
-        ("blocked_steps", Json::num(s.blocked_steps as f64)),
-        ("lookahead_clamps", Json::num(s.lookahead_clamps as f64)),
-        ("max_queue_len", Json::num(s.max_queue_len as f64)),
-        ("steps", Json::num(s.steps as f64)),
-        ("lps_finished", Json::num(s.lps_finished as f64)),
-        ("windows", Json::num(s.windows as f64)),
-        ("window_timestamps", Json::num(s.window_timestamps as f64)),
-        ("max_window_events", Json::num(s.max_window_events as f64)),
-        ("events_rejected", Json::num(s.events_rejected as f64)),
-        ("wire_frames", Json::num(wire_frames as f64)),
-        ("wire_bytes", Json::num(wire_bytes as f64)),
-        ("windows_truncated", Json::num(s.windows_truncated as f64)),
-        ("budget_min", Json::num(budget.min as f64)),
-        ("budget_max", Json::num(budget.max as f64)),
-        ("budget_last", Json::num(budget.last as f64)),
-        ("budget_grows", Json::num(budget.grows as f64)),
-        ("budget_shrinks", Json::num(budget.shrinks as f64)),
-        ("queue_highwater", Json::num(wire.queue_highwater as f64)),
-        ("queue_depth", Json::num(wire.queue_depth as f64)),
-        ("send_block_us", Json::num(wire.send_block_us as f64)),
-        ("lvt", Json::num(lvt_s)),
-    ])
-}
-
-/// Decode the counters we aggregate on the leader side.
-pub fn stats_from_json(j: &Json) -> Option<HostStatsView> {
-    Some(HostStatsView {
-        events_processed: j.get("events_processed")?.as_u64()?,
-        events_sent_remote: j.get("events_sent_remote")?.as_u64()?,
-        null_messages_sent: j.get("null_messages_sent")?.as_u64()?,
-        lvt_requests_sent: j.get("lvt_requests_sent")?.as_u64()?,
-        blocked_steps: j.get("blocked_steps")?.as_u64()?,
-        max_queue_len: j.get("max_queue_len")?.as_u64()? as usize,
-        // Window counters were introduced after the wire format froze;
-        // default to 0 so old frames still decode.
-        windows: j.get("windows").and_then(Json::as_u64).unwrap_or(0),
-        window_timestamps: j
-            .get("window_timestamps")
-            .and_then(Json::as_u64)
-            .unwrap_or(0),
-        wire_frames: j.get("wire_frames").and_then(Json::as_u64).unwrap_or(0),
-        wire_bytes: j.get("wire_bytes").and_then(Json::as_u64).unwrap_or(0),
-        // Budget/backlog telemetry postdates the wire format too; zeros
-        // keep pre-controller frames decoding.
-        windows_truncated: j
-            .get("windows_truncated")
-            .and_then(Json::as_u64)
-            .unwrap_or(0),
-        budget_min: j.get("budget_min").and_then(Json::as_u64).unwrap_or(0),
-        budget_max: j.get("budget_max").and_then(Json::as_u64).unwrap_or(0),
-        budget_last: j.get("budget_last").and_then(Json::as_u64).unwrap_or(0),
-        budget_grows: j.get("budget_grows").and_then(Json::as_u64).unwrap_or(0),
-        budget_shrinks: j
-            .get("budget_shrinks")
-            .and_then(Json::as_u64)
-            .unwrap_or(0),
-        queue_highwater: j
-            .get("queue_highwater")
-            .and_then(Json::as_u64)
-            .unwrap_or(0),
-        queue_depth: j.get("queue_depth").and_then(Json::as_u64).unwrap_or(0),
-        send_block_us: j.get("send_block_us").and_then(Json::as_u64).unwrap_or(0),
-        lvt_s: j.get("lvt")?.as_f64()?,
-    })
-}
-
-/// Leader-side view of one agent's final counters.
-#[derive(Clone, Copy, Debug, Default)]
+/// The typed final-statistics record an agent reports at `EndRun` — the
+/// `ControlMsg::FinalStats` payload, end-to-end: in-process deployments
+/// move this struct directly (no JSON construction at run teardown); the
+/// TCP codecs serialize it through [`to_json`](Self::to_json), whose key
+/// set matches the historical JSON frames, so old fleets still decode.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct HostStatsView {
     pub events_processed: u64,
+    pub events_sent_local: u64,
     pub events_sent_remote: u64,
     pub null_messages_sent: u64,
     pub lvt_requests_sent: u64,
+    pub lvt_requests_received: u64,
     pub blocked_steps: u64,
+    pub lookahead_clamps: u64,
     pub max_queue_len: usize,
+    pub steps: u64,
+    pub lps_finished: u64,
     pub windows: u64,
     pub window_timestamps: u64,
+    /// Largest single window, in events.
+    pub max_window_events: usize,
+    /// Remote events rejected at the participant-set gate.
+    pub events_rejected: u64,
     /// Wire frames the agent emitted for the context (WindowBatch +
     /// WindowReport under batching; one per message on the legacy path).
     pub wire_frames: u64,
@@ -829,14 +746,139 @@ pub struct HostStatsView {
     pub budget_shrinks: u64,
     /// Writer-queue telemetry at teardown: highest occupancy the
     /// endpoint ever observed (monotone gauge — aggregate with max) and
-    /// the configured depth.
+    /// the live depth (grown depth under an adaptive writer-queue
+    /// policy).
     pub queue_highwater: u64,
     pub queue_depth: u64,
     /// Sender block time on full queues attributed to this context: the
     /// delta since the endpoint's previous FinalStats (same scheme as
     /// `wire_bytes` — fleet total exact, per-context split approximate).
     pub send_block_us: u64,
+    /// Adaptive writer-queue doubling steps (0 under a fixed policy).
+    pub queue_grows: u64,
     pub lvt_s: f64,
+}
+
+impl HostStatsView {
+    /// Assemble the record from its sources: the engine counters, the
+    /// agent-level wire counters for the context (the engine itself never
+    /// sees frames), the context's window-budget trajectory and the
+    /// endpoint's writer-queue telemetry snapshot.
+    pub fn from_parts(
+        s: &EngineStats,
+        lvt_s: f64,
+        wire_frames: u64,
+        wire_bytes: u64,
+        budget: &BudgetTelemetry,
+        wire: &TransportTelemetry,
+    ) -> HostStatsView {
+        HostStatsView {
+            events_processed: s.events_processed,
+            events_sent_local: s.events_sent_local,
+            events_sent_remote: s.events_sent_remote,
+            null_messages_sent: s.null_messages_sent,
+            lvt_requests_sent: s.lvt_requests_sent,
+            lvt_requests_received: s.lvt_requests_received,
+            blocked_steps: s.blocked_steps,
+            lookahead_clamps: s.lookahead_clamps,
+            max_queue_len: s.max_queue_len,
+            steps: s.steps,
+            lps_finished: s.lps_finished,
+            windows: s.windows,
+            window_timestamps: s.window_timestamps,
+            max_window_events: s.max_window_events,
+            events_rejected: s.events_rejected,
+            wire_frames,
+            wire_bytes,
+            windows_truncated: s.windows_truncated,
+            budget_min: budget.min,
+            budget_max: budget.max,
+            budget_last: budget.last,
+            budget_grows: budget.grows,
+            budget_shrinks: budget.shrinks,
+            queue_highwater: wire.queue_highwater,
+            queue_depth: wire.queue_depth,
+            send_block_us: wire.send_block_us,
+            queue_grows: wire.queue_grows,
+            lvt_s,
+        }
+    }
+
+    /// Wire form (the JSON codec body, and the tree the binary codec
+    /// bridges through).  Key set is a superset of the pre-typed frames,
+    /// so nothing downstream has to change.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("events_processed", Json::num(self.events_processed as f64)),
+            ("events_sent_local", Json::num(self.events_sent_local as f64)),
+            ("events_sent_remote", Json::num(self.events_sent_remote as f64)),
+            ("null_messages_sent", Json::num(self.null_messages_sent as f64)),
+            ("lvt_requests_sent", Json::num(self.lvt_requests_sent as f64)),
+            (
+                "lvt_requests_received",
+                Json::num(self.lvt_requests_received as f64),
+            ),
+            ("blocked_steps", Json::num(self.blocked_steps as f64)),
+            ("lookahead_clamps", Json::num(self.lookahead_clamps as f64)),
+            ("max_queue_len", Json::num(self.max_queue_len as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("lps_finished", Json::num(self.lps_finished as f64)),
+            ("windows", Json::num(self.windows as f64)),
+            ("window_timestamps", Json::num(self.window_timestamps as f64)),
+            ("max_window_events", Json::num(self.max_window_events as f64)),
+            ("events_rejected", Json::num(self.events_rejected as f64)),
+            ("wire_frames", Json::num(self.wire_frames as f64)),
+            ("wire_bytes", Json::num(self.wire_bytes as f64)),
+            ("windows_truncated", Json::num(self.windows_truncated as f64)),
+            ("budget_min", Json::num(self.budget_min as f64)),
+            ("budget_max", Json::num(self.budget_max as f64)),
+            ("budget_last", Json::num(self.budget_last as f64)),
+            ("budget_grows", Json::num(self.budget_grows as f64)),
+            ("budget_shrinks", Json::num(self.budget_shrinks as f64)),
+            ("queue_highwater", Json::num(self.queue_highwater as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("send_block_us", Json::num(self.send_block_us as f64)),
+            ("queue_grows", Json::num(self.queue_grows as f64)),
+            ("lvt", Json::num(self.lvt_s)),
+        ])
+    }
+
+    /// Decode a wire stats object.  Only the original counter set is
+    /// required; everything that postdates the first frozen frame layout
+    /// defaults to 0, so frames from old fleets still decode.
+    pub fn from_json(j: &Json) -> Option<HostStatsView> {
+        let opt = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0);
+        Some(HostStatsView {
+            events_processed: j.get("events_processed")?.as_u64()?,
+            events_sent_local: opt("events_sent_local"),
+            events_sent_remote: j.get("events_sent_remote")?.as_u64()?,
+            null_messages_sent: j.get("null_messages_sent")?.as_u64()?,
+            lvt_requests_sent: j.get("lvt_requests_sent")?.as_u64()?,
+            lvt_requests_received: opt("lvt_requests_received"),
+            blocked_steps: j.get("blocked_steps")?.as_u64()?,
+            lookahead_clamps: opt("lookahead_clamps"),
+            max_queue_len: j.get("max_queue_len")?.as_u64()? as usize,
+            steps: opt("steps"),
+            lps_finished: opt("lps_finished"),
+            windows: opt("windows"),
+            window_timestamps: opt("window_timestamps"),
+            max_window_events: opt("max_window_events") as usize,
+            events_rejected: opt("events_rejected"),
+            wire_frames: opt("wire_frames"),
+            wire_bytes: opt("wire_bytes"),
+            windows_truncated: opt("windows_truncated"),
+            budget_min: opt("budget_min"),
+            budget_max: opt("budget_max"),
+            budget_last: opt("budget_last"),
+            budget_grows: opt("budget_grows"),
+            budget_shrinks: opt("budget_shrinks"),
+            queue_highwater: opt("queue_highwater"),
+            queue_depth: opt("queue_depth"),
+            send_block_us: opt("send_block_us"),
+            queue_grows: opt("queue_grows"),
+            lvt_s: j.get("lvt")?.as_f64()?,
+        })
+    }
 }
 
 #[allow(unused)]

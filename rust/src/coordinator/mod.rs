@@ -21,7 +21,7 @@ pub use adaptive::{
     BudgetTelemetry, WindowBudgetMode, WindowBudgetSpec, WindowController, WirePressure,
     DEFAULT_WINDOW_BUDGET_MAX, DEFAULT_WINDOW_BUDGET_MIN, DEFAULT_WINDOW_TIMESTAMP_BUDGET,
 };
-pub use agent::{engine_stats_json, stats_from_json, AgentConfig, AgentRuntime, HostStatsView, LEADER};
+pub use agent::{AgentConfig, AgentRuntime, HostStatsView, LEADER};
 pub use scheduler::PlacementScheduler;
 pub use termination::{ProbeAnswer, TerminationDetector};
 
@@ -90,6 +90,13 @@ pub struct RunReport {
     pub queue_highwater: u64,
     /// Total microseconds agents spent blocked on full writer queues.
     pub send_block_us: u64,
+    /// Adaptive writer-queue depth doublings across the fleet (0 under
+    /// the fixed `writer_queue_frames` policy and on in-proc runs).
+    pub queue_grows: u64,
+    /// Content fingerprint of the scenario file that produced this run
+    /// (see [`crate::scenario`]); empty for runs assembled in code.  With
+    /// it, any result row is reproducible from its scenario file alone.
+    pub scenario_fingerprint: String,
     /// All records published by LPs during the run.
     pub pool: ResultPool,
     /// Final per-agent statistics.
@@ -173,6 +180,9 @@ pub struct Deployment {
     /// When set, the in-proc fabric meters every send under this codec so
     /// `RunReport::wire_bytes` reports what a TCP fleet would emit.
     wire_meter: Option<crate::transport::WireCodec>,
+    /// Scenario content fingerprint threaded into every report (empty
+    /// for deployments assembled in code).
+    scenario_fp: String,
     /// Safety valve for runaway runs.
     max_wall: Duration,
     /// GVT probe *fallback* cadence: rounds normally trigger on pushed
@@ -196,28 +206,36 @@ impl Deployment {
             wire_batch: true,
             budget: WindowBudgetSpec::default(),
             wire_meter: None,
+            scenario_fp: String::new(),
             max_wall: Duration::from_secs(600),
             probe_every: Duration::from_millis(2),
         }
     }
 
+    /// Build from a deploy section alone (the scenario subsystem compiles
+    /// its files through this; `seed` feeds the placement scheduler).
+    pub fn from_deploy(d: &crate::config::DeployConfig, seed: u64) -> Deployment {
+        Deployment {
+            agents: d.agents,
+            workers: d.workers,
+            protocol: d.protocol,
+            exec: d.exec,
+            placement: d.placement,
+            backend_kind: d.backend,
+            artifacts_dir: PathBuf::from(&d.artifacts_dir),
+            seed,
+            wire_batch: d.wire_batch,
+            budget: d.budget_spec(),
+            wire_meter: None,
+            scenario_fp: String::new(),
+            max_wall: Duration::from_secs(600),
+            probe_every: Duration::from_millis(d.probe_fallback_ms.max(1)),
+        }
+    }
+
     /// Build from a [`ScenarioConfig`]'s deploy section.
     pub fn from_config(cfg: &ScenarioConfig) -> Deployment {
-        Deployment {
-            agents: cfg.deploy.agents,
-            workers: cfg.deploy.workers,
-            protocol: cfg.deploy.protocol,
-            exec: cfg.deploy.exec,
-            placement: cfg.deploy.placement,
-            backend_kind: cfg.deploy.backend,
-            artifacts_dir: PathBuf::from(&cfg.deploy.artifacts_dir),
-            seed: cfg.workload.seed,
-            wire_batch: cfg.deploy.wire_batch,
-            budget: cfg.deploy.budget_spec(),
-            wire_meter: None,
-            max_wall: Duration::from_secs(600),
-            probe_every: Duration::from_millis(cfg.deploy.probe_fallback_ms.max(1)),
-        }
+        Self::from_deploy(&cfg.deploy, cfg.workload.seed)
     }
 
     pub fn workers(mut self, n: usize) -> Self {
@@ -282,6 +300,13 @@ impl Deployment {
     /// GVT probe fallback cadence (see `probe_every`).
     pub fn probe_fallback(mut self, d: Duration) -> Self {
         self.probe_every = d;
+        self
+    }
+
+    /// Thread a scenario content fingerprint into every [`RunReport`]
+    /// this deployment produces (see [`crate::scenario`]).
+    pub fn scenario_fingerprint(mut self, fp: impl Into<String>) -> Self {
+        self.scenario_fp = fp.into();
         self
     }
 
@@ -622,6 +647,7 @@ impl Deployment {
             let mut budget_shrinks = 0;
             let mut queue_highwater = 0;
             let mut send_block_us = 0;
+            let mut queue_grows = 0;
             let mut per_agent = Vec::new();
             for (a, s) in &st.final_stats {
                 events += s.events_processed;
@@ -644,6 +670,7 @@ impl Deployment {
                 budget_shrinks += s.budget_shrinks;
                 queue_highwater = queue_highwater.max(s.queue_highwater);
                 send_block_us += s.send_block_us;
+                queue_grows += s.queue_grows;
                 per_agent.push((*a, *s));
             }
             if budget_min == u64::MAX {
@@ -673,6 +700,8 @@ impl Deployment {
                 budget_shrinks,
                 queue_highwater,
                 send_block_us,
+                queue_grows,
+                scenario_fingerprint: self.scenario_fp.clone(),
                 pool: st.pool,
                 per_agent,
                 placements: placements_all[i]
@@ -741,11 +770,11 @@ impl Deployment {
                 }
             }
             NetMsg::Control(ControlMsg::FinalStats { context, from, stats }) => {
+                // Typed end-to-end: the in-proc fabric moved the struct
+                // itself, so teardown involves no JSON at all.
                 if let Some(st) = runs.get_mut(&context) {
-                    if let Some(view) = stats_from_json(&stats) {
-                        st.makespan = st.makespan.max(view.lvt_s);
-                        st.final_stats.insert(from, view);
-                    }
+                    st.makespan = st.makespan.max(stats.lvt_s);
+                    st.final_stats.insert(from, stats);
                 }
             }
             NetMsg::Control(ControlMsg::PerfSample { from, value, load }) => {

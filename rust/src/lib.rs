@@ -56,6 +56,7 @@ pub mod metrics;
 pub mod model;
 pub mod monitor;
 pub mod runtime;
+pub mod scenario;
 pub mod space;
 pub mod testkit;
 pub mod transport;
@@ -71,5 +72,6 @@ pub mod prelude {
     pub use crate::metrics::ResultPool;
     pub use crate::model::Scenario;
     pub use crate::runtime::ComputeBackend;
+    pub use crate::scenario::CompiledScenario;
     pub use crate::transport::WireCodec;
 }

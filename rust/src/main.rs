@@ -3,7 +3,8 @@
 //! Subcommands (hand-rolled parser; the offline snapshot has no clap):
 //!
 //! ```text
-//! dsim run <config.json> [--results out.jsonl]   run a scenario from config
+//! dsim run <config.json> [--results out.jsonl]   run a workload from config
+//! dsim scenario validate|run|sweep <file>        declarative scenario front door
 //! dsim demo                                      run the two-center demo
 //! dsim sweep-bandwidth <mbps...>                 fig. 2 style sweep
 //! dsim agent --me N --bind ADDR --peers SPEC     TCP-mode agent process
@@ -23,6 +24,7 @@ fn main() -> ExitCode {
     let rest = &args[1.min(args.len())..];
     let result = match cmd {
         "run" => cmd_run(rest),
+        "scenario" => cmd_scenario(rest),
         "demo" => cmd_demo(),
         "sweep-bandwidth" => cmd_sweep(rest),
         "agent" => cmd_agent(rest),
@@ -52,15 +54,23 @@ fn print_help() {
 
 USAGE:
   dsim run <config.json> [--results out.jsonl]
+  dsim scenario validate <file.json> [--set path=value ...]
+  dsim scenario run      <file.json> [--set path=value ...] [--results out.jsonl]
+  dsim scenario sweep    <file.json> [--set path=value ...]
   dsim demo
   dsim sweep-bandwidth <mbps> [<mbps> ...]
   dsim agent --me <id> --bind <addr> --peers <id=addr,id=addr,...>
              [--lookahead s] [--workers n] [--exec window|step]
              [--max-frame-mib n] [--no-wire-batch]
-             [--wire-codec binary|json] [--writer-queue-frames n]
+             [--wire-codec binary|json]
+             [--writer-queue-frames adaptive|fixed(N)|n]
              [--window-budget adaptive|fixed(N)|fixed(inf)]
              [--window-budget-min n] [--window-budget-max n]
   dsim check-artifacts [dir]
+
+A scenario file declares everything a run needs — contexts, component
+graphs or grid presets, deploy knobs, vars and sweep axes — see
+examples/scenarios/ and the `dsim::scenario` module docs for the schema.
 "
     );
 }
@@ -87,7 +97,7 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     // Budget trajectory + wire backlog: the compute-bound vs wire-bound
     // signal (constant trajectory under the default fixed budget).
     println!(
-        "  budget: min={} max={} last={} grows={} shrinks={} truncated={} queue_hw={} blocked_us={}",
+        "  budget: min={} max={} last={} grows={} shrinks={} truncated={} queue_hw={} queue_grows={} blocked_us={}",
         report.budget_min,
         report.budget_max,
         report.budget_last,
@@ -95,6 +105,7 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         report.budget_shrinks,
         report.windows_truncated,
         report.queue_highwater,
+        report.queue_grows,
         report.send_block_us
     );
     if let Some(i) = args.iter().position(|a| a == "--results") {
@@ -105,6 +116,130 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         println!("results saved to {out}");
     }
     Ok(())
+}
+
+/// Declarative scenario front door: `dsim scenario validate|run|sweep
+/// <file> [--set path=value ...]` (see the `dsim::scenario` module docs
+/// for the file schema).
+fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
+    use dsim::scenario;
+
+    let sub = args
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("usage: dsim scenario validate|run|sweep <file.json>"))?;
+    let path = args
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: dsim scenario {sub} <file.json>"))?;
+    // Strict flag parsing: a silently ignored argument is as much a lie
+    // as a silently ignored knob, so anything unrecognized is an error.
+    let mut sets: Vec<(String, String)> = Vec::new();
+    let mut results_path: Option<String> = None;
+    let mut i = 2;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--set" => {
+                let kv = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--set needs path=value"))?;
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("--set expects path=value, got '{kv}'"))?;
+                sets.push((k.to_string(), v.to_string()));
+                i += 2;
+            }
+            "--results" => {
+                let out = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--results needs a path"))?;
+                results_path = Some(out.clone());
+                i += 2;
+            }
+            other => {
+                return Err(anyhow::anyhow!(
+                    "unknown argument '{other}' (expected --set path=value or --results out.jsonl)"
+                ))
+            }
+        }
+    }
+    if results_path.is_some() && sub != "run" {
+        anyhow::bail!("--results only applies to `dsim scenario run`");
+    }
+
+    match sub {
+        "validate" => {
+            let doc = scenario::load_doc(Path::new(path), &sets)?;
+            let points = scenario::sweep_points(&doc)?;
+            for point in &points {
+                let compiled = scenario::compile(&point.doc)
+                    .map_err(|e| anyhow::anyhow!("point '{}': {e:#}", point.label))?;
+                compiled.preflight()?;
+                let lps: usize = compiled
+                    .contexts
+                    .iter()
+                    .map(|c| c.generated.scenario.lps.len())
+                    .sum();
+                println!(
+                    "OK {name} [{label}]: {ctxs} context(s), {lps} LPs, {transport}, fingerprint {fp}",
+                    name = compiled.name,
+                    label = point.label,
+                    ctxs = compiled.contexts.len(),
+                    transport = compiled.transport,
+                    fp = compiled.fingerprint,
+                );
+            }
+            println!("{path}: {} sweep point(s) valid", points.len());
+            Ok(())
+        }
+        "run" => {
+            let doc = scenario::load_doc(Path::new(path), &sets)?;
+            let compiled = scenario::compile(&scenario::without_sweep(&doc))?;
+            let outcomes = compiled.run()?;
+            for o in &outcomes {
+                println!("{}", o.row());
+            }
+            println!("scenario fingerprint: {}", compiled.fingerprint);
+            if let Some(out) = &results_path {
+                // One file for the whole run: merge every context's pool
+                // (a per-context save would truncate its predecessors).
+                let merged = dsim::metrics::ResultPool::new();
+                for o in &outcomes {
+                    if let Some(pool) = &o.pool {
+                        merged.merge_from(pool);
+                    }
+                }
+                merged.save(Path::new(out))?;
+                println!("{} records saved to {out}", merged.len());
+            }
+            Ok(())
+        }
+        "sweep" => {
+            let doc = scenario::load_doc(Path::new(path), &sets)?;
+            let points = scenario::sweep_points(&doc)?;
+            println!("point,context,wall_s,events,makespan_s,jobs,transfers,fingerprint");
+            for point in points {
+                let compiled = scenario::compile(&point.doc)
+                    .map_err(|e| anyhow::anyhow!("point '{}': {e:#}", point.label))?;
+                for o in compiled.run()? {
+                    println!(
+                        "{label},{ctx},{wall:.4},{events},{makespan:.2},{jobs},{transfers},{fp}",
+                        label = point.label,
+                        ctx = o.context,
+                        wall = o.wall_s,
+                        events = o.events,
+                        makespan = o.makespan_s,
+                        jobs = o.jobs,
+                        transfers = o.transfers,
+                        fp = compiled.fingerprint,
+                    );
+                }
+            }
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!(
+            "unknown scenario subcommand '{other}' (validate|run|sweep)"
+        )),
+    }
 }
 
 fn cmd_demo() -> anyhow::Result<()> {
@@ -192,14 +327,12 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         .map(|s| s.parse().map_err(anyhow::Error::msg))
         .transpose()?
         .unwrap_or_default();
-    let writer_queue_frames: usize = get("--writer-queue-frames")
-        .map(|s| s.parse())
+    // Writer-queue policy: a fixed bound (bare N or fixed(N)) or the
+    // adaptive depth grown from occupancy high-water telemetry.
+    let writer_queue_frames: dsim::transport::WriterQueue = get("--writer-queue-frames")
+        .map(|s| s.parse().map_err(anyhow::Error::msg))
         .transpose()?
-        .unwrap_or(dsim::transport::DEFAULT_WRITER_QUEUE_FRAMES);
-    anyhow::ensure!(
-        writer_queue_frames >= 1,
-        "--writer-queue-frames must be >= 1 (a bounded queue needs room for one frame)"
-    );
+        .unwrap_or_default();
     // Window-budget policy: fixed(N) baseline (default) or the adaptive
     // controller fed by this endpoint's writer-queue telemetry.
     let budget_default = dsim::coordinator::WindowBudgetSpec::default();

@@ -58,6 +58,13 @@ impl ResultPool {
             .collect()
     }
 
+    /// Append every record of `other` (aggregating multi-context runs
+    /// into one saved file).
+    pub fn merge_from(&self, other: &ResultPool) {
+        let theirs: Vec<Record> = other.records.lock().unwrap().clone();
+        self.records.lock().unwrap().extend(theirs);
+    }
+
     /// Record count per kind.
     pub fn kind_counts(&self) -> BTreeMap<String, usize> {
         let mut out = BTreeMap::new();

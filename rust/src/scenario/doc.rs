@@ -1,0 +1,651 @@
+//! Typed scenario document: strict parsing with path-carrying errors.
+//!
+//! Every diagnostic names the exact location it came from
+//! (`at contexts.0.components.3.params.wan: ...`), because a scenario
+//! file is the paper's promised end-user surface — the loader, not the
+//! engine, is where a typo must die.  Unknown keys are errors here
+//! (unlike the lenient `dsim run` config), since a silently ignored knob
+//! is indistinguishable from a working one.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::components::KNOWN_KINDS;
+use crate::config::{DeployConfig, PlacementPolicy, WorkloadConfig};
+use crate::engine::SimTime;
+use crate::model::Payload;
+use crate::transport::{Wire, WriterQueue};
+use crate::util::json::Json;
+use crate::util::LpId;
+
+/// Where a compiled scenario runs its fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RunTransport {
+    /// Agent threads over in-process channels (default).
+    #[default]
+    InProc,
+    /// Agent threads over real localhost TCP sockets — the full wire
+    /// path (codec, framing, writer queues) in one process.
+    Tcp,
+}
+
+impl std::fmt::Display for RunTransport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunTransport::InProc => write!(f, "in-proc"),
+            RunTransport::Tcp => write!(f, "tcp"),
+        }
+    }
+}
+
+impl std::str::FromStr for RunTransport {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "inproc" | "in-proc" | "in_process" => Ok(RunTransport::InProc),
+            "tcp" => Ok(RunTransport::Tcp),
+            other => Err(format!("unknown transport '{other}' (inproc|tcp)")),
+        }
+    }
+}
+
+/// One declared component instance: a catalog `kind`, its (ref-resolved)
+/// JSON params, and the affinity group it must be co-located with.
+#[derive(Clone, Debug)]
+pub struct ComponentDecl {
+    pub name: String,
+    pub kind: String,
+    pub group: usize,
+    /// Params with every `"@name"` reference already replaced by the
+    /// referenced component's LP id (declaration order, 1-based).
+    pub params: Json,
+}
+
+/// One bootstrap event of a component-graph context.
+#[derive(Clone, Debug)]
+pub struct BootstrapDecl {
+    pub time: SimTime,
+    /// Index into the context's component list.
+    pub to: usize,
+    pub payload: Payload,
+}
+
+/// What a context simulates: a grid preset or an explicit component
+/// graph.
+#[derive(Clone, Debug)]
+pub enum ContextModel {
+    /// A built-in workload-generator preset with its knobs.
+    Grid(WorkloadConfig),
+    /// An explicit component graph + bootstrap events.
+    Components {
+        components: Vec<ComponentDecl>,
+        bootstrap: Vec<BootstrapDecl>,
+    },
+}
+
+/// One simulation context of the scenario (isolated engine + results).
+#[derive(Clone, Debug)]
+pub struct ContextDecl {
+    pub name: String,
+    /// Explicit model lookahead override (virtual seconds).
+    pub lookahead: Option<f64>,
+    pub model: ContextModel,
+}
+
+/// The parsed, var-substituted, strictly validated scenario document.
+#[derive(Clone, Debug)]
+pub struct ScenarioDoc {
+    pub name: String,
+    pub description: String,
+    pub transport: RunTransport,
+    pub deploy: DeployConfig,
+    pub contexts: Vec<ContextDecl>,
+}
+
+fn err_at<T>(path: &str, msg: impl std::fmt::Display) -> Result<T> {
+    Err(anyhow!("at {path}: {msg}"))
+}
+
+/// Reject unknown keys: a silently ignored knob is a lying knob.
+fn check_keys(j: &Json, path: &str, allowed: &[&str]) -> Result<()> {
+    let Some(obj) = j.as_obj() else {
+        return err_at(path, "expected an object");
+    };
+    for k in obj.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return err_at(
+                path,
+                format!("unknown key '{k}' (expected one of {allowed:?})"),
+            );
+        }
+    }
+    Ok(())
+}
+
+fn req<'a>(j: &'a Json, path: &str, key: &str) -> Result<&'a Json> {
+    match j.get(key) {
+        Some(v) => Ok(v),
+        None => err_at(path, format!("missing required key '{key}'")),
+    }
+}
+
+fn as_str_at<'a>(j: &'a Json, path: &str) -> Result<&'a str> {
+    j.as_str()
+        .ok_or_else(|| anyhow!("at {path}: expected a string"))
+}
+
+fn as_f64_at(j: &Json, path: &str) -> Result<f64> {
+    j.as_f64()
+        .ok_or_else(|| anyhow!("at {path}: expected a number"))
+}
+
+fn as_u64_at(j: &Json, path: &str) -> Result<u64> {
+    j.as_u64()
+        .ok_or_else(|| anyhow!("at {path}: expected a non-negative integer"))
+}
+
+// ---------------------------------------------------------------------------
+// Vars: ${name} substitution with cycle detection
+// ---------------------------------------------------------------------------
+
+/// A whole-string `"${name}"` reference, if this value is one.
+fn var_ref(j: &Json) -> Option<&str> {
+    let s = j.as_str()?;
+    s.strip_prefix("${")?.strip_suffix('}')
+}
+
+/// Resolve the `vars` table: scalar values, possibly referencing other
+/// vars; reference cycles are detected and reported with their chain.
+fn resolve_vars(doc: &Json) -> Result<std::collections::BTreeMap<String, Json>> {
+    let mut resolved = std::collections::BTreeMap::new();
+    let Some(raw) = doc.get("vars") else {
+        return Ok(resolved);
+    };
+    let Some(table) = raw.as_obj() else {
+        return err_at("vars", "expected an object of name -> scalar");
+    };
+    fn resolve_one(
+        name: &str,
+        table: &std::collections::BTreeMap<String, Json>,
+        resolved: &mut std::collections::BTreeMap<String, Json>,
+        visiting: &mut Vec<String>,
+    ) -> Result<Json> {
+        if let Some(v) = resolved.get(name) {
+            return Ok(v.clone());
+        }
+        if visiting.iter().any(|n| n == name) {
+            visiting.push(name.to_string());
+            return err_at(
+                &format!("vars.{}", visiting[0]),
+                format!("reference cycle: {}", visiting.join(" -> ")),
+            );
+        }
+        let Some(raw) = table.get(name) else {
+            return err_at(&format!("vars.{name}"), "unknown variable");
+        };
+        if matches!(raw, Json::Arr(_) | Json::Obj(_)) {
+            return err_at(&format!("vars.{name}"), "vars must be scalars");
+        }
+        let value = match var_ref(raw) {
+            Some(inner) => {
+                visiting.push(name.to_string());
+                let v = resolve_one(inner, table, resolved, visiting)?;
+                visiting.pop();
+                v
+            }
+            None => raw.clone(),
+        };
+        resolved.insert(name.to_string(), value.clone());
+        Ok(value)
+    }
+    for name in table.keys() {
+        let mut visiting = Vec::new();
+        resolve_one(name, table, &mut resolved, &mut visiting)?;
+    }
+    Ok(resolved)
+}
+
+/// Deep-substitute `${name}` references through a subtree.
+fn substitute(
+    j: &Json,
+    vars: &std::collections::BTreeMap<String, Json>,
+    path: &str,
+) -> Result<Json> {
+    if let Some(name) = var_ref(j) {
+        return match vars.get(name) {
+            Some(v) => Ok(v.clone()),
+            None => err_at(path, format!("unknown variable '${{{name}}}' (declare it under vars)")),
+        };
+    }
+    Ok(match j {
+        Json::Arr(items) => {
+            let mut out = Vec::with_capacity(items.len());
+            for (i, v) in items.iter().enumerate() {
+                out.push(substitute(v, vars, &format!("{path}.{i}"))?);
+            }
+            Json::Arr(out)
+        }
+        Json::Obj(map) => {
+            let mut out = std::collections::BTreeMap::new();
+            for (k, v) in map {
+                out.insert(k.clone(), substitute(v, vars, &format!("{path}.{k}"))?);
+            }
+            Json::Obj(out)
+        }
+        other => other.clone(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Section parsers
+// ---------------------------------------------------------------------------
+
+const DEPLOY_KEYS: [&str; 17] = [
+    "transport",
+    "agents",
+    "workers",
+    "protocol",
+    "exec",
+    "placement",
+    "backend",
+    "lookahead",
+    "wire_batch",
+    "max_frame_mib",
+    "wire_codec",
+    "writer_queue_frames",
+    "window_budget",
+    "window_budget_min",
+    "window_budget_max",
+    "probe_fallback_ms",
+    "artifacts_dir",
+];
+
+fn parse_deploy(j: &Json, path: &str) -> Result<(RunTransport, DeployConfig)> {
+    check_keys(j, path, &DEPLOY_KEYS)?;
+    let d = DeployConfig::default();
+    let str_knob = |key: &str, default: &str| -> Result<String> {
+        match j.get(key) {
+            None => Ok(default.to_string()),
+            Some(v) => Ok(as_str_at(v, &format!("{path}.{key}"))?.to_string()),
+        }
+    };
+    let usize_knob = |key: &str, default: usize| -> Result<usize> {
+        match j.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(as_u64_at(v, &format!("{path}.{key}"))? as usize),
+        }
+    };
+    let transport: RunTransport = str_knob("transport", "inproc")?
+        .parse()
+        .map_err(|e| anyhow!("at {path}.transport: {e}"))?;
+    let deploy = DeployConfig {
+        agents: usize_knob("agents", d.agents)?,
+        workers: usize_knob("workers", d.workers)?,
+        protocol: str_knob("protocol", "demand")?
+            .parse()
+            .map_err(|e| anyhow!("at {path}.protocol: {e}"))?,
+        exec: str_knob("exec", "window")?
+            .parse()
+            .map_err(|e| anyhow!("at {path}.exec: {e}"))?,
+        placement: str_knob("placement", "perf")?
+            .parse()
+            .map_err(|e| anyhow!("at {path}.placement: {e}"))?,
+        backend: str_knob("backend", "native")?
+            .parse()
+            .map_err(|e| anyhow!("at {path}.backend: {e}"))?,
+        lookahead: match j.get("lookahead") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(as_f64_at(v, &format!("{path}.lookahead"))?),
+        },
+        wire_batch: match j.get("wire_batch") {
+            None => d.wire_batch,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| anyhow!("at {path}.wire_batch: expected a bool"))?,
+        },
+        max_frame_mib: usize_knob("max_frame_mib", d.max_frame_mib)?,
+        wire_codec: str_knob("wire_codec", &d.wire_codec.to_string())?
+            .parse()
+            .map_err(|e| anyhow!("at {path}.wire_codec: {e}"))?,
+        writer_queue_frames: match j.get("writer_queue_frames") {
+            None => d.writer_queue_frames,
+            Some(v) => WriterQueue::from_json(v)
+                .map_err(|e| anyhow!("at {path}.writer_queue_frames: {e}"))?,
+        },
+        window_budget: str_knob("window_budget", &d.window_budget.to_string())?
+            .parse()
+            .map_err(|e| anyhow!("at {path}.window_budget: {e}"))?,
+        window_budget_min: usize_knob("window_budget_min", d.window_budget_min)?,
+        window_budget_max: usize_knob("window_budget_max", d.window_budget_max)?,
+        probe_fallback_ms: usize_knob("probe_fallback_ms", d.probe_fallback_ms as usize)? as u64,
+        artifacts_dir: str_knob("artifacts_dir", &d.artifacts_dir)?,
+    };
+    deploy
+        .validate()
+        .map_err(|e| anyhow!("at {path}: {e:#}"))?;
+    Ok((transport, deploy))
+}
+
+const GRID_KEYS: [&str; 10] = [
+    "preset",
+    "centers",
+    "cpus_per_center",
+    "jobs_per_center",
+    "wan_bandwidth_mbps",
+    "wan_latency_s",
+    "transfer_mb",
+    "transfers_per_center",
+    "seed",
+    "faithful_interrupts",
+];
+
+fn parse_grid(j: &Json, path: &str) -> Result<WorkloadConfig> {
+    check_keys(j, path, &GRID_KEYS)?;
+    let d = WorkloadConfig::default();
+    let preset = match j.get("preset") {
+        None => "t0t1".to_string(),
+        Some(v) => as_str_at(v, &format!("{path}.preset"))?.to_string(),
+    };
+    if !["t0t1", "farm", "two-center"].contains(&preset.as_str()) {
+        return err_at(
+            &format!("{path}.preset"),
+            format!("unknown preset '{preset}' (t0t1|farm|two-center)"),
+        );
+    }
+    if preset == "two-center" {
+        // The fixed demo ignores every knob; reject them so a tweaked
+        // file cannot silently run the untweaked demo.
+        if let Some(obj) = j.as_obj() {
+            if let Some(k) = obj.keys().find(|k| *k != "preset") {
+                return err_at(
+                    &format!("{path}.{k}"),
+                    "the two-center preset is fixed; its knobs cannot be overridden \
+                     (use preset t0t1 with centers=1 instead)",
+                );
+            }
+        }
+    }
+    let f64_knob = |key: &str, default: f64| -> Result<f64> {
+        match j.get(key) {
+            None => Ok(default),
+            Some(v) => as_f64_at(v, &format!("{path}.{key}")),
+        }
+    };
+    let usize_knob = |key: &str, default: usize| -> Result<usize> {
+        match j.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(as_u64_at(v, &format!("{path}.{key}"))? as usize),
+        }
+    };
+    let cfg = WorkloadConfig {
+        name: preset,
+        centers: usize_knob("centers", d.centers)?,
+        cpus_per_center: usize_knob("cpus_per_center", d.cpus_per_center)?,
+        jobs_per_center: usize_knob("jobs_per_center", d.jobs_per_center)?,
+        wan_bandwidth_mbps: f64_knob("wan_bandwidth_mbps", d.wan_bandwidth_mbps)?,
+        wan_latency_s: f64_knob("wan_latency_s", d.wan_latency_s)?,
+        transfer_mb: f64_knob("transfer_mb", d.transfer_mb)?,
+        transfers_per_center: usize_knob("transfers_per_center", d.transfers_per_center)?,
+        seed: usize_knob("seed", d.seed as usize)? as u64,
+        faithful_interrupts: match j.get("faithful_interrupts") {
+            None => d.faithful_interrupts,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| anyhow!("at {path}.faithful_interrupts: expected a bool"))?,
+        },
+    };
+    if cfg.centers == 0 {
+        return err_at(&format!("{path}.centers"), "must be >= 1");
+    }
+    if cfg.wan_bandwidth_mbps <= 0.0 {
+        return err_at(&format!("{path}.wan_bandwidth_mbps"), "must be > 0");
+    }
+    if cfg.wan_latency_s <= 0.0 {
+        return err_at(
+            &format!("{path}.wan_latency_s"),
+            "must be > 0 (it provides the model lookahead)",
+        );
+    }
+    Ok(cfg)
+}
+
+/// Replace every `"@name"` string in a params tree by the referenced
+/// component's LP id.
+fn resolve_refs(
+    j: &Json,
+    ids: &std::collections::BTreeMap<String, LpId>,
+    path: &str,
+) -> Result<Json> {
+    if let Some(name) = j.as_str().and_then(|s| s.strip_prefix('@')) {
+        return match ids.get(name) {
+            Some(id) => Ok(Json::num(id.raw() as f64)),
+            None => err_at(
+                path,
+                format!("reference '@{name}' names no component in this context"),
+            ),
+        };
+    }
+    Ok(match j {
+        Json::Arr(items) => {
+            let mut out = Vec::with_capacity(items.len());
+            for (i, v) in items.iter().enumerate() {
+                out.push(resolve_refs(v, ids, &format!("{path}.{i}"))?);
+            }
+            Json::Arr(out)
+        }
+        Json::Obj(map) => {
+            let mut out = std::collections::BTreeMap::new();
+            for (k, v) in map {
+                out.insert(k.clone(), resolve_refs(v, ids, &format!("{path}.{k}"))?);
+            }
+            Json::Obj(out)
+        }
+        other => other.clone(),
+    })
+}
+
+const CONTEXT_KEYS: [&str; 5] = ["name", "lookahead", "grid", "components", "bootstrap"];
+const COMPONENT_KEYS: [&str; 4] = ["name", "kind", "group", "params"];
+const BOOTSTRAP_KEYS: [&str; 3] = ["time", "to", "payload"];
+
+fn parse_context(j: &Json, path: &str) -> Result<ContextDecl> {
+    check_keys(j, path, &CONTEXT_KEYS)?;
+    let name = as_str_at(req(j, path, "name")?, &format!("{path}.name"))?.to_string();
+    if name.is_empty() {
+        return err_at(&format!("{path}.name"), "must be non-empty");
+    }
+    let lookahead = match j.get("lookahead") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let l = as_f64_at(v, &format!("{path}.lookahead"))?;
+            if l <= 0.0 {
+                return err_at(&format!("{path}.lookahead"), "must be > 0 (conservative sync)");
+            }
+            Some(l)
+        }
+    };
+    let model = match (j.get("grid"), j.get("components")) {
+        (Some(_), Some(_)) => {
+            return err_at(path, "declare either 'grid' or 'components', not both")
+        }
+        (None, None) => return err_at(path, "a context needs a 'grid' or a 'components' model"),
+        (Some(g), None) => {
+            if j.get("bootstrap").is_some() {
+                return err_at(
+                    &format!("{path}.bootstrap"),
+                    "grid presets generate their own bootstrap events",
+                );
+            }
+            ContextModel::Grid(parse_grid(g, &format!("{path}.grid"))?)
+        }
+        (None, Some(c)) => parse_components(c, j.get("bootstrap"), path)?,
+    };
+    Ok(ContextDecl {
+        name,
+        lookahead,
+        model,
+    })
+}
+
+fn parse_components(c: &Json, bootstrap: Option<&Json>, path: &str) -> Result<ContextModel> {
+    let list = c
+        .as_arr()
+        .ok_or_else(|| anyhow!("at {path}.components: expected an array"))?;
+    if list.is_empty() {
+        return err_at(&format!("{path}.components"), "a component graph needs >= 1 component");
+    }
+    // First pass: names -> LP ids (declaration order, 1-based — the same
+    // ids Scenario::add_lp will hand out).
+    let mut ids: std::collections::BTreeMap<String, LpId> = std::collections::BTreeMap::new();
+    for (i, comp) in list.iter().enumerate() {
+        let cpath = format!("{path}.components.{i}");
+        check_keys(comp, &cpath, &COMPONENT_KEYS)?;
+        let name = as_str_at(req(comp, &cpath, "name")?, &format!("{cpath}.name"))?.to_string();
+        if name.is_empty() || name.starts_with('@') {
+            return err_at(
+                &format!("{cpath}.name"),
+                "component names must be non-empty and must not start with '@'",
+            );
+        }
+        if ids.insert(name.clone(), LpId(i as u64 + 1)).is_some() {
+            return err_at(&format!("{cpath}.name"), format!("duplicate component name '{name}'"));
+        }
+    }
+    // Second pass: kinds, groups, ref-resolved params.
+    let mut components = Vec::with_capacity(list.len());
+    for (i, comp) in list.iter().enumerate() {
+        let cpath = format!("{path}.components.{i}");
+        let kind = as_str_at(req(comp, &cpath, "kind")?, &format!("{cpath}.kind"))?.to_string();
+        if !KNOWN_KINDS.contains(&kind.as_str()) {
+            return err_at(
+                &format!("{cpath}.kind"),
+                format!("unknown component kind '{kind}' (known: {KNOWN_KINDS:?})"),
+            );
+        }
+        let group = as_u64_at(req(comp, &cpath, "group")?, &format!("{cpath}.group"))? as usize;
+        let raw_params = comp.get("params").cloned().unwrap_or_else(|| Json::obj(vec![]));
+        let params = resolve_refs(&raw_params, &ids, &format!("{cpath}.params"))?;
+        let name = comp
+            .get("name")
+            .and_then(Json::as_str)
+            .expect("validated in first pass")
+            .to_string();
+        components.push(ComponentDecl {
+            name,
+            kind,
+            group,
+            params,
+        });
+    }
+    // Bootstrap events.
+    let mut boots = Vec::new();
+    if let Some(b) = bootstrap {
+        let list = b
+            .as_arr()
+            .ok_or_else(|| anyhow!("at {path}.bootstrap: expected an array"))?;
+        for (i, entry) in list.iter().enumerate() {
+            let bpath = format!("{path}.bootstrap.{i}");
+            check_keys(entry, &bpath, &BOOTSTRAP_KEYS)?;
+            let time = as_f64_at(req(entry, &bpath, "time")?, &format!("{bpath}.time"))?;
+            if time < 0.0 {
+                return err_at(&format!("{bpath}.time"), "must be >= 0");
+            }
+            let to_name = as_str_at(req(entry, &bpath, "to")?, &format!("{bpath}.to"))?;
+            let to_name = to_name.strip_prefix('@').unwrap_or(to_name);
+            let Some(id) = ids.get(to_name) else {
+                return err_at(
+                    &format!("{bpath}.to"),
+                    format!("'{to_name}' names no component in this context"),
+                );
+            };
+            let payload = match req(entry, &bpath, "payload")? {
+                Json::Str(s) if s == "start" => Payload::Start,
+                j => Payload::from_json(j)
+                    .with_context(|| format!("at {bpath}.payload: bad payload"))?,
+            };
+            boots.push(BootstrapDecl {
+                time: SimTime::new(time),
+                to: id.raw() as usize - 1,
+                payload,
+            });
+        }
+    }
+    Ok(ContextModel::Components {
+        components,
+        bootstrap: boots,
+    })
+}
+
+const TOP_KEYS: [&str; 6] = ["name", "description", "vars", "deploy", "contexts", "sweep"];
+
+impl ScenarioDoc {
+    /// Parse a raw (already `--set`-overridden) document: strict keys,
+    /// var resolution + substitution, per-section validation.  The
+    /// `sweep` block is *not* interpreted here — expansion happens on the
+    /// raw document (see [`super::sweep`]); this parser only tolerates
+    /// its presence.
+    pub fn parse(doc: &Json) -> Result<ScenarioDoc> {
+        if doc.as_obj().is_none() {
+            bail!("a scenario document must be a JSON object");
+        }
+        check_keys(doc, "<root>", &TOP_KEYS)?;
+        let name = as_str_at(req(doc, "<root>", "name")?, "name")?.to_string();
+        if name.is_empty() {
+            return err_at("name", "must be non-empty");
+        }
+        let description = match doc.get("description") {
+            None => String::new(),
+            Some(v) => as_str_at(v, "description")?.to_string(),
+        };
+        let vars = resolve_vars(doc)?;
+
+        let deploy_raw = doc.get("deploy").cloned().unwrap_or_else(|| Json::obj(vec![]));
+        let deploy_sub = substitute(&deploy_raw, &vars, "deploy")?;
+        let (transport, deploy) = parse_deploy(&deploy_sub, "deploy")?;
+
+        let contexts_raw = req(doc, "<root>", "contexts")?;
+        let list = contexts_raw
+            .as_arr()
+            .ok_or_else(|| anyhow!("at contexts: expected an array"))?;
+        if list.is_empty() {
+            return err_at("contexts", "a scenario needs >= 1 context");
+        }
+        let mut contexts = Vec::with_capacity(list.len());
+        let mut seen = std::collections::BTreeSet::new();
+        for (i, ctx) in list.iter().enumerate() {
+            let path = format!("contexts.{i}");
+            let ctx = substitute(ctx, &vars, &path)?;
+            let decl = parse_context(&ctx, &path)?;
+            if !seen.insert(decl.name.clone()) {
+                return err_at(
+                    &format!("{path}.name"),
+                    format!("duplicate context name '{}'", decl.name),
+                );
+            }
+            contexts.push(decl);
+        }
+        if transport == RunTransport::Tcp && contexts.len() > 1 {
+            return err_at(
+                "deploy.transport",
+                "tcp scenarios are single-context (run several files, or transport=inproc \
+                 which multiplexes contexts over one fleet)",
+            );
+        }
+        // The tcp fleet driver places affinity groups round-robin; a knob
+        // it would silently ignore is a lying knob, so anything else is an
+        // error rather than a surprise.
+        if transport == RunTransport::Tcp && deploy.placement != PlacementPolicy::RoundRobin {
+            return err_at(
+                "deploy.placement",
+                "tcp scenarios place affinity groups round-robin; set placement=rr \
+                 explicitly (or use transport=inproc for the perf-value scheduler)",
+            );
+        }
+        Ok(ScenarioDoc {
+            name,
+            description,
+            transport,
+            deploy,
+            contexts,
+        })
+    }
+}

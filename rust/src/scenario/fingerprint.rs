@@ -1,0 +1,41 @@
+//! Scenario content fingerprints.
+//!
+//! A fingerprint is the FNV-1a 64 hash of the scenario document's
+//! canonical serialization ([`Json`]'s `Display` is deterministic —
+//! objects are `BTreeMap`s, so key order is fixed), rendered as 16 hex
+//! digits.  It identifies the *effective* document of a run — after
+//! `--set` overrides and sweep-point substitution — so any result row
+//! can be traced back to, and reproduced from, exactly one scenario
+//! content.  Variable references (`"${name}"`) are hashed unresolved:
+//! resolution is a pure function of the document, so the pre-resolution
+//! text identifies the run just as uniquely.
+
+use crate::util::json::Json;
+
+/// Fingerprint a scenario document (see module docs).
+pub fn fingerprint(doc: &Json) -> String {
+    let text = doc.to_string();
+    let mut h = 0xcbf29ce484222325u64;
+    for b in text.as_bytes() {
+        h = (h ^ *b as u64).wrapping_mul(0x100000001b3);
+    }
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_content_sensitive() {
+        let a = Json::parse(r#"{"name": "x", "deploy": {"agents": 2}}"#).unwrap();
+        let b = Json::parse(r#"{"deploy": {"agents":2}, "name":"x"}"#).unwrap();
+        let c = Json::parse(r#"{"name": "x", "deploy": {"agents": 3}}"#).unwrap();
+        // Key order and whitespace are canonicalized away...
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        // ...but any value change moves the hash.
+        assert_ne!(fingerprint(&a), fingerprint(&c));
+        assert_eq!(fingerprint(&a).len(), 16);
+        assert_eq!(fingerprint(&a), fingerprint(&a));
+    }
+}

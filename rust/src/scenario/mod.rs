@@ -1,0 +1,473 @@
+//! Declarative scenarios: describe a Grid in one JSON file, get a
+//! distributed run.
+//!
+//! The paper's core promise is modeling "very complex distributed
+//! systems while hiding the computational effort from the end-user" —
+//! this module is that front door.  A scenario file declares everything
+//! a run needs (contexts, component graphs or grid presets, deploy
+//! knobs, variables, sweep axes); the loader validates it with
+//! path-carrying errors, compiles it onto the existing
+//! [`Deployment`]/[`AgentConfig`](crate::coordinator::AgentConfig)
+//! machinery for in-proc *and* TCP fleets, and threads a content
+//! fingerprint into every [`RunReport`] so any result row is
+//! reproducible from its file.  Surfaced as
+//! `dsim scenario validate|run|sweep <file> [--set path=value]`; a
+//! bundled library lives in `examples/scenarios/`.
+//!
+//! # Schema reference
+//!
+//! ```json
+//! {
+//!   "name": "regional-grid",              // required, non-empty
+//!   "description": "what this models",    // optional
+//!   "vars": {"band": 622.0},              // optional scalar table
+//!   "deploy": { ... },                    // optional, all knobs optional
+//!   "contexts": [ { ... }, ... ],         // required, >= 1
+//!   "sweep": {"vars.band": [155, 622]}    // optional parameter grid
+//! }
+//! ```
+//!
+//! **`vars`** — named scalars.  Any string anywhere in `deploy` or
+//! `contexts` equal to `"${name}"` (whole-string) is replaced by the
+//! var's value; vars may reference other vars, and reference cycles are
+//! detected and reported with their chain.
+//!
+//! **`deploy`** — fleet shape and wire knobs.  Unknown keys are errors.
+//!
+//! | key | values (default) |
+//! |---|---|
+//! | `transport` | `inproc` (default) \| `tcp` — tcp runs the fleet over real localhost sockets through the shared fleet driver: single-context only, requires `placement: rr` (the driver's round-robin grouping), and `backend`/`artifacts_dir`/`probe_fallback_ms` apply to in-proc runs only |
+//! | `agents` | 1..=64 (2) |
+//! | `workers` | worker threads per agent (0) |
+//! | `protocol` | `demand` \| `eager` (demand) |
+//! | `exec` | `window` \| `step` (window) |
+//! | `placement` | `perf` \| `rr` \| `random` (perf) |
+//! | `backend` | `native` \| `pjrt` (native) |
+//! | `lookahead` | explicit model lookahead, virtual seconds (null) |
+//! | `wire_batch` | window-batched wire protocol (true) |
+//! | `max_frame_mib` | frame-size ceiling (64) |
+//! | `wire_codec` | `binary` \| `json` (binary) |
+//! | `writer_queue_frames` | N \| `fixed(N)` \| `adaptive` (256) |
+//! | `window_budget` | `fixed(N)` \| `fixed(inf)` \| `adaptive` (fixed(16384)) |
+//! | `window_budget_min` / `window_budget_max` | adaptive clamps (256 / 1M) |
+//! | `probe_fallback_ms` | GVT probe fallback cadence (2) |
+//! | `artifacts_dir` | AOT artifact directory ("artifacts") |
+//!
+//! **`contexts[i]`** — one isolated simulation (own engine, own
+//! results).  Each declares `name` (unique), optional `lookahead`, and
+//! exactly one model:
+//!
+//! * `"grid"` — a built-in generator preset with its knobs: `preset`
+//!   (`t0t1` default \| `farm` \| `two-center`), `centers`,
+//!   `cpus_per_center`, `jobs_per_center`, `wan_bandwidth_mbps`,
+//!   `wan_latency_s`, `transfer_mb`, `transfers_per_center`, `seed`,
+//!   `faithful_interrupts`.  The MONARC regional-center study in five
+//!   lines.
+//! * `"components"` — an explicit graph over the component catalog
+//!   ([`crate::components::KNOWN_KINDS`]): each entry has `name`
+//!   (unique), `kind`, `group` (affinity group — co-located LPs), and
+//!   `params` (the component's JSON params, where any string `"@name"`
+//!   resolves to the referenced component's LP id).  `bootstrap`
+//!   entries (`{"time": 0.0, "to": "driver", "payload": "start"}`)
+//!   inject the initial events; `payload` is `"start"` or a full
+//!   payload object.
+//!
+//! **`sweep`** — map of dotted document paths to scalar value lists
+//! (`contexts.0.grid.seed`, `deploy.protocol`, `vars.band`).  One file
+//! expands into the full cartesian grid, deterministically: axes in
+//! sorted path order, rightmost fastest, same order on every machine.
+//! `--set path=value` applies before expansion and parsing, so both
+//! one-off overrides and whole axes are reachable from the CLI.
+//!
+//! # Fingerprints
+//!
+//! [`compile`] hashes the effective document (FNV-1a 64 of its canonical
+//! serialization) into [`CompiledScenario::fingerprint`], which
+//! [`CompiledScenario::run`] threads into
+//! [`RunReport::scenario_fingerprint`].  Same file, same results —
+//! across in-proc and TCP fleets and both wire codecs, pinned by the
+//! scenario test suite.
+
+mod doc;
+mod fingerprint;
+mod sweep;
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use doc::{
+    BootstrapDecl, ComponentDecl, ContextDecl, ContextModel, RunTransport, ScenarioDoc,
+};
+pub use fingerprint::fingerprint;
+pub use sweep::{
+    apply_sets, get_path, point_fingerprint, set_path, sweep_points, without_sweep, SweepPoint,
+};
+
+use crate::components::{build_component, BuildCtx};
+use crate::config::DeployConfig;
+use crate::coordinator::{AgentConfig, Deployment, RunReport};
+use crate::metrics::ResultPool;
+use crate::model::Scenario;
+use crate::runtime::ComputeBackend;
+use crate::transport::TcpOptions;
+use crate::util::json::Json;
+use crate::util::LpId;
+use crate::workload::{self, GeneratedScenario};
+
+/// One compiled context: its declared name plus the generated scenario
+/// the coordinator deploys.
+pub struct NamedContext {
+    pub name: String,
+    pub generated: GeneratedScenario,
+}
+
+/// A scenario compiled down to the deployment machinery: run it, hand it
+/// to a [`Deployment`] yourself, or inspect what it would deploy.
+pub struct CompiledScenario {
+    pub name: String,
+    pub description: String,
+    pub transport: RunTransport,
+    pub deploy: DeployConfig,
+    pub contexts: Vec<NamedContext>,
+    /// Content fingerprint of the compiled document (see module docs).
+    pub fingerprint: String,
+    /// Placement-scheduler seed (first grid context's seed, else 1).
+    pub seed: u64,
+}
+
+/// What one context of a scenario run produced — a transport-agnostic
+/// slice of [`RunReport`] (TCP runs assemble it from the control plane).
+pub struct ScenarioOutcome {
+    pub context: String,
+    pub wall_s: f64,
+    pub events: u64,
+    pub remote_events: u64,
+    pub makespan_s: f64,
+    pub jobs: usize,
+    pub transfers: usize,
+    pub windows: u64,
+    /// The determinism digest (`RunReport::determinism_fingerprint`).
+    pub fingerprint: String,
+    /// The scenario content fingerprint the run carried.
+    pub scenario_fingerprint: String,
+    /// Published records (both transports collect them).
+    pub pool: Option<ResultPool>,
+}
+
+impl ScenarioOutcome {
+    /// One human-readable result line for the CLI.
+    pub fn row(&self) -> String {
+        format!(
+            "ctx={} wall={:.3}s makespan={:.1}s events={} remote={} jobs={} transfers={} windows={}",
+            self.context,
+            self.wall_s,
+            self.makespan_s,
+            self.events,
+            self.remote_events,
+            self.jobs,
+            self.transfers,
+            self.windows
+        )
+    }
+}
+
+/// Read a scenario file and apply `--set path=value` overrides; the
+/// result is the raw document [`sweep_points`] and [`compile`] operate
+/// on.
+pub fn load_doc(path: &Path, sets: &[(String, String)]) -> Result<Json> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+    let mut doc = Json::parse(&text)
+        .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    apply_sets(&mut doc, sets)?;
+    Ok(doc)
+}
+
+/// Compile one (sweep-free) scenario document: strict parse, model
+/// generation, scenario validation, content fingerprint.
+pub fn compile(doc: &Json) -> Result<CompiledScenario> {
+    let parsed = ScenarioDoc::parse(doc)?;
+    let fp = fingerprint(doc);
+    let mut contexts = Vec::with_capacity(parsed.contexts.len());
+    let mut seed = None;
+    for (i, ctx) in parsed.contexts.iter().enumerate() {
+        let generated = match &ctx.model {
+            ContextModel::Grid(cfg) => {
+                if seed.is_none() {
+                    seed = Some(cfg.seed);
+                }
+                let mut g = workload::generate(cfg);
+                if let Some(l) = ctx.lookahead.or(parsed.deploy.lookahead) {
+                    g.scenario.lookahead = l;
+                }
+                g
+            }
+            ContextModel::Components {
+                components,
+                bootstrap,
+            } => {
+                let lookahead = ctx.lookahead.or(parsed.deploy.lookahead).ok_or_else(|| {
+                    anyhow!(
+                        "at contexts.{i}: a components context needs a lookahead \
+                         (set contexts.{i}.lookahead or deploy.lookahead)"
+                    )
+                })?;
+                let mut sc = Scenario::new(&ctx.name, lookahead);
+                for c in components {
+                    sc.add_lp(&c.kind, c.params.clone(), c.group);
+                }
+                for b in bootstrap {
+                    let dst = sc.lps[b.to].id;
+                    sc.bootstrap(b.time.secs(), dst, b.payload.clone());
+                }
+                let find_kind = |kind: &str| {
+                    sc.lps
+                        .iter()
+                        .find(|l| l.kind == kind)
+                        .map(|l| l.id)
+                        .unwrap_or(LpId(0))
+                };
+                let wan = find_kind("wan");
+                let catalog = find_kind("catalog");
+                GeneratedScenario {
+                    scenario: sc,
+                    wan,
+                    catalog,
+                    centers: Vec::new(),
+                }
+            }
+        };
+        generated
+            .scenario
+            .validate()
+            .map_err(|e| anyhow!("at contexts.{i}: {e:#}"))?;
+        contexts.push(NamedContext {
+            name: ctx.name.clone(),
+            generated,
+        });
+    }
+    Ok(CompiledScenario {
+        name: parsed.name,
+        description: parsed.description,
+        transport: parsed.transport,
+        deploy: parsed.deploy,
+        contexts,
+        fingerprint: fp,
+        seed: seed.unwrap_or(1),
+    })
+}
+
+impl CompiledScenario {
+    /// Trial-build every declared LP against the native compute backend:
+    /// bad component params die here, at validate time, with the context
+    /// and component named — not as an agent-side deploy error that
+    /// stalls the run.
+    pub fn preflight(&self) -> Result<()> {
+        let backend = std::sync::Arc::new(
+            ComputeBackend::load(crate::config::BackendKind::Native, Path::new("."))
+                .context("native compute backend")?,
+        );
+        for ctx in &self.contexts {
+            let build = BuildCtx {
+                backend: std::sync::Arc::clone(&backend),
+                lookahead: ctx.generated.scenario.lookahead,
+            };
+            for lp in &ctx.generated.scenario.lps {
+                build_component(&lp.kind, &lp.params, &build).map_err(|e| {
+                    anyhow!(
+                        "context '{}' component {} (kind '{}'): {e:#}",
+                        ctx.name,
+                        lp.id,
+                        lp.kind
+                    )
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The in-proc [`Deployment`] this scenario describes (knobs +
+    /// fingerprint applied).  Callers that want `RunReport`s directly —
+    /// tests, benches — can run it themselves.
+    pub fn deployment(&self) -> Deployment {
+        Deployment::from_deploy(&self.deploy, self.seed)
+            .scenario_fingerprint(self.fingerprint.clone())
+    }
+
+    /// Run the scenario to completion on its declared transport and
+    /// return one outcome per context.
+    pub fn run(&self) -> Result<Vec<ScenarioOutcome>> {
+        self.preflight()?;
+        match self.transport {
+            RunTransport::InProc => {
+                let scenarios: Vec<GeneratedScenario> = self
+                    .contexts
+                    .iter()
+                    .map(|c| c.generated.clone())
+                    .collect();
+                let reports = self.deployment().run_many(scenarios)?;
+                Ok(self
+                    .contexts
+                    .iter()
+                    .zip(reports)
+                    .map(|(ctx, report)| self.outcome_from_report(&ctx.name, report))
+                    .collect())
+            }
+            RunTransport::Tcp => {
+                // Parse-time validation pins tcp scenarios to one context.
+                let ctx = self
+                    .contexts
+                    .first()
+                    .ok_or_else(|| anyhow!("scenario has no contexts"))?;
+                Ok(vec![self.run_tcp(ctx)?])
+            }
+        }
+    }
+
+    fn outcome_from_report(&self, name: &str, report: RunReport) -> ScenarioOutcome {
+        ScenarioOutcome {
+            context: name.to_string(),
+            wall_s: report.wall_s,
+            events: report.events_processed,
+            remote_events: report.remote_events,
+            makespan_s: report.makespan_s,
+            jobs: report.jobs_completed,
+            transfers: report.transfers_completed,
+            windows: report.windows,
+            fingerprint: report.determinism_fingerprint(),
+            scenario_fingerprint: report.scenario_fingerprint.clone(),
+            pool: Some(report.pool),
+        }
+    }
+
+    /// One context over real localhost TCP sockets: the full wire path —
+    /// codec, framing, writer queues, window batching — driven by the
+    /// shared generic leader ([`crate::testkit::drive_fleet`]).  The
+    /// driver places groups round-robin (the parser pins
+    /// `deploy.placement = rr` for tcp scenarios) and uses the
+    /// best-effort `ComputeBackend::auto` — `backend`, `artifacts_dir`
+    /// and `probe_fallback_ms` are in-proc knobs.
+    fn run_tcp(&self, ctx: &NamedContext) -> Result<ScenarioOutcome> {
+        if self.deploy.agents == 0 {
+            bail!("deploy.agents must be >= 1");
+        }
+        let opts = TcpOptions {
+            max_frame: self.deploy.max_frame_mib << 20,
+            codec: self.deploy.wire_codec,
+            writer_queue: self.deploy.writer_queue_frames,
+        };
+        let lookahead = ctx.generated.scenario.lookahead;
+        let deploy = &self.deploy;
+        let peer_ids: Vec<crate::util::AgentId> = (1..=deploy.agents as u64)
+            .map(crate::util::AgentId)
+            .collect();
+        let (leader, agents) = crate::testkit::tcp_fleet_n(deploy.agents, opts, |me| AgentConfig {
+            me,
+            peers: peer_ids.clone(),
+            lookahead,
+            protocol: deploy.protocol,
+            workers: deploy.workers,
+            exec: deploy.exec,
+            wire_batch: deploy.wire_batch,
+            budget: deploy.budget_spec(),
+        });
+        let out = crate::testkit::drive_fleet(leader, agents, &ctx.generated);
+        let windows: u64 = out.stats.iter().map(|(_, s)| s.windows).sum();
+        Ok(ScenarioOutcome {
+            context: ctx.name.clone(),
+            wall_s: out.wall_s,
+            events: out.events,
+            remote_events: out.remote_events,
+            makespan_s: out.makespan_s,
+            jobs: out.jobs,
+            transfers: out.transfers,
+            windows,
+            fingerprint: out.fingerprint,
+            scenario_fingerprint: self.fingerprint.clone(),
+            pool: Some(out.pool),
+        })
+    }
+}
+
+/// [`load_doc`] + [`without_sweep`] + [`compile`] in one call — what
+/// `dsim scenario run <file>` executes.
+pub fn compile_file(path: &Path, sets: &[(String, String)]) -> Result<CompiledScenario> {
+    let doc = load_doc(path, sets)?;
+    compile(&without_sweep(&doc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal() -> Json {
+        Json::parse(
+            r#"{"name": "t", "deploy": {"agents": 2, "placement": "rr"},
+                "contexts": [{"name": "c", "grid": {"preset": "two-center"}}]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn minimal_scenario_compiles() {
+        let c = compile(&minimal()).unwrap();
+        assert_eq!(c.name, "t");
+        assert_eq!(c.transport, RunTransport::InProc);
+        assert_eq!(c.contexts.len(), 1);
+        assert_eq!(c.contexts[0].generated.scenario.lps.len(), 10);
+        assert_eq!(c.fingerprint.len(), 16);
+        c.preflight().unwrap();
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let a = compile(&minimal()).unwrap();
+        let b = compile(&minimal()).unwrap();
+        assert_eq!(a.fingerprint, b.fingerprint);
+        let mut doc = minimal();
+        set_path(&mut doc, "deploy.workers", Json::num(4.0)).unwrap();
+        assert_ne!(compile(&doc).unwrap().fingerprint, a.fingerprint);
+    }
+
+    #[test]
+    fn component_graph_compiles_with_refs() {
+        let doc = Json::parse(
+            r#"{"name": "g", "deploy": {"agents": 1},
+                "contexts": [{
+                  "name": "c", "lookahead": 0.05,
+                  "components": [
+                    {"name": "farm", "kind": "farm", "group": 0,
+                     "params": {"center": 0, "units": 2, "power": 1.0}},
+                    {"name": "cat", "kind": "catalog", "group": 1, "params": {}}
+                  ],
+                  "bootstrap": []
+                }]}"#,
+        )
+        .unwrap();
+        let c = compile(&doc).unwrap();
+        let sc = &c.contexts[0].generated.scenario;
+        assert_eq!(sc.lps.len(), 2);
+        assert_eq!(sc.lps[0].kind, "farm");
+        assert_eq!(sc.lookahead, 0.05);
+        c.preflight().unwrap();
+    }
+
+    #[test]
+    fn preflight_rejects_bad_component_params() {
+        // A known kind with missing params parses (the loader cannot know
+        // every component's schema) but dies in preflight with the
+        // component named.
+        let doc = Json::parse(
+            r#"{"name": "g", "deploy": {"lookahead": 0.05},
+                "contexts": [{
+                  "name": "c",
+                  "components": [{"name": "f", "kind": "farm", "group": 0, "params": {}}]
+                }]}"#,
+        )
+        .unwrap();
+        let c = compile(&doc).unwrap();
+        let err = c.preflight().expect_err("farm without units must not preflight");
+        assert!(format!("{err:#}").contains("kind 'farm'"), "{err:#}");
+    }
+}

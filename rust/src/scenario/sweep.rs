@@ -1,0 +1,295 @@
+//! Dotted-path document surgery and sweep-grid expansion.
+//!
+//! Paths address into the scenario document with `.`-separated segments;
+//! a numeric segment indexes an array (`contexts.0.grid.seed`).  The
+//! same machinery serves `--set path=value` overrides and the `sweep`
+//! block, which expands one file into a deterministic parameter grid:
+//! axes iterate in sorted path order, rightmost axis fastest — the same
+//! row-major order every run, every machine.
+
+use anyhow::{bail, Result};
+
+use super::fingerprint::fingerprint;
+use crate::util::json::Json;
+
+/// One expanded sweep point: the axis assignments as a label and the
+/// fully substituted document (its own fingerprint — no `sweep` key).
+pub struct SweepPoint {
+    /// `"path=value,path=value"` in axis order; `"base"` when the
+    /// document has no sweep block.
+    pub label: String,
+    pub doc: Json,
+}
+
+/// Read the value at a dotted path, if present.
+pub fn get_path<'a>(doc: &'a Json, path: &str) -> Option<&'a Json> {
+    let mut cur = doc;
+    for seg in path.split('.') {
+        cur = match cur {
+            Json::Obj(map) => map.get(seg)?,
+            Json::Arr(items) => items.get(seg.parse::<usize>().ok()?)?,
+            _ => return None,
+        };
+    }
+    Some(cur)
+}
+
+/// Write `value` at a dotted path, creating intermediate objects for
+/// missing object keys (array indices must already exist — an array's
+/// shape is the scenario author's, not the override's, to invent).
+pub fn set_path(doc: &mut Json, path: &str, value: Json) -> Result<()> {
+    let segs: Vec<&str> = path.split('.').collect();
+    if segs.iter().any(|s| s.is_empty()) {
+        bail!("bad path '{path}': empty segment");
+    }
+    set_path_at(doc, &segs, path, value)
+}
+
+fn set_path_at(doc: &mut Json, segs: &[&str], path: &str, value: Json) -> Result<()> {
+    match doc {
+        Json::Obj(map) => {
+            if segs.len() == 1 {
+                map.insert(segs[0].to_string(), value);
+                return Ok(());
+            }
+            let child = map
+                .entry(segs[0].to_string())
+                .or_insert_with(|| Json::obj(vec![]));
+            set_path_at(child, &segs[1..], path, value)
+        }
+        Json::Arr(items) => {
+            let idx: usize = segs[0].parse().map_err(|_| {
+                anyhow::anyhow!("path '{path}': '{}' is not an array index", segs[0])
+            })?;
+            let len = items.len();
+            let child = items.get_mut(idx).ok_or_else(|| {
+                anyhow::anyhow!("path '{path}': index {idx} out of bounds (array has {len})")
+            })?;
+            if segs.len() == 1 {
+                *child = value;
+                return Ok(());
+            }
+            set_path_at(child, &segs[1..], path, value)
+        }
+        _ => bail!("path '{path}': segment '{}' addresses into a non-container", segs[0]),
+    }
+}
+
+/// Apply `--set path=value` overrides in order.  Values parse as JSON
+/// when they can (`4`, `true`, `[1,2]`, `"x"`); anything else is taken
+/// as a bare string, so `--set deploy.protocol=eager` works unquoted.
+pub fn apply_sets(doc: &mut Json, sets: &[(String, String)]) -> Result<()> {
+    for (path, raw) in sets {
+        let value = Json::parse(raw).unwrap_or_else(|_| Json::str(raw.clone()));
+        set_path(doc, path, value)?;
+    }
+    Ok(())
+}
+
+/// The document with its `sweep` block removed — what a single `run`
+/// executes and fingerprints.
+pub fn without_sweep(doc: &Json) -> Json {
+    match doc {
+        Json::Obj(map) => {
+            let mut m = map.clone();
+            m.remove("sweep");
+            Json::Obj(m)
+        }
+        other => other.clone(),
+    }
+}
+
+/// Expand the document's `sweep` block into the full deterministic grid
+/// (see module docs for the ordering contract).  A document without a
+/// sweep block expands to its single base point.
+pub fn sweep_points(doc: &Json) -> Result<Vec<SweepPoint>> {
+    let base = without_sweep(doc);
+    let Some(spec) = doc.get("sweep") else {
+        return Ok(vec![SweepPoint {
+            label: "base".to_string(),
+            doc: base,
+        }]);
+    };
+    let Some(axes_map) = spec.as_obj() else {
+        bail!("at sweep: expected an object of path -> [values]");
+    };
+    if axes_map.is_empty() {
+        bail!("at sweep: empty sweep block (delete it or add an axis)");
+    }
+    // BTreeMap iteration = sorted path order: the axis order is a
+    // property of the file, not of any parse.
+    let mut axes: Vec<(&String, &[Json])> = Vec::new();
+    for (path, values) in axes_map {
+        let Some(vals) = values.as_arr() else {
+            bail!("at sweep.{path}: expected an array of values");
+        };
+        if vals.is_empty() {
+            bail!("at sweep.{path}: empty value list (a sweep axis needs >= 1 value)");
+        }
+        for (i, v) in vals.iter().enumerate() {
+            if matches!(v, Json::Arr(_) | Json::Obj(_)) {
+                bail!("at sweep.{path}[{i}]: sweep values must be scalars");
+            }
+        }
+        if get_path(&base, path).is_none() {
+            bail!(
+                "at sweep.{path}: path does not exist in the document \
+                 (sweeps override declared values, they cannot invent them)"
+            );
+        }
+        axes.push((path, vals));
+    }
+    // Row-major cartesian product, rightmost (last sorted) axis fastest.
+    let total: usize = axes.iter().map(|(_, v)| v.len()).product();
+    let mut points = Vec::with_capacity(total);
+    for mut n in 0..total {
+        let mut picks: Vec<(usize, usize)> = vec![(0, 0); axes.len()]; // (axis, value idx)
+        for (a, (_, vals)) in axes.iter().enumerate().rev() {
+            picks[a] = (a, n % vals.len());
+            n /= vals.len();
+        }
+        let mut doc = base.clone();
+        let mut label_parts = Vec::with_capacity(axes.len());
+        for (a, vi) in picks {
+            let (path, vals) = axes[a];
+            set_path(&mut doc, path, vals[vi].clone())?;
+            label_parts.push(format!("{path}={}", scalar_label(&vals[vi])));
+        }
+        points.push(SweepPoint {
+            label: label_parts.join(","),
+            doc,
+        });
+    }
+    Ok(points)
+}
+
+/// Human label for a scalar sweep value (strings unquoted).
+fn scalar_label(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+/// Convenience for callers that want point identity without rerunning
+/// the expansion.
+pub fn point_fingerprint(point: &SweepPoint) -> String {
+    fingerprint(&point.doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc() -> Json {
+        Json::parse(
+            r#"{"name": "s", "vars": {"band": 100},
+                "deploy": {"agents": 2, "protocol": "demand"},
+                "contexts": [{"name": "c", "grid": {"seed": 1}}],
+                "sweep": {"vars.band": [100, 200], "deploy.protocol": ["demand", "eager"]}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn get_and_set_paths() {
+        let mut d = doc();
+        assert_eq!(get_path(&d, "deploy.agents").and_then(Json::as_u64), Some(2));
+        assert_eq!(
+            get_path(&d, "contexts.0.grid.seed").and_then(Json::as_u64),
+            Some(1)
+        );
+        assert!(get_path(&d, "contexts.7.grid").is_none());
+        assert!(get_path(&d, "deploy.agents.x").is_none());
+        set_path(&mut d, "contexts.0.grid.seed", Json::num(9.0)).unwrap();
+        assert_eq!(
+            get_path(&d, "contexts.0.grid.seed").and_then(Json::as_u64),
+            Some(9)
+        );
+        // Missing object keys are created; bad array indices are not.
+        set_path(&mut d, "deploy.new_knob", Json::Bool(true)).unwrap();
+        assert_eq!(get_path(&d, "deploy.new_knob").and_then(Json::as_bool), Some(true));
+        assert!(set_path(&mut d, "contexts.7.name", Json::str("x")).is_err());
+        assert!(set_path(&mut d, "name.sub", Json::str("x")).is_err());
+    }
+
+    #[test]
+    fn apply_sets_parses_scalars_and_bare_strings() {
+        let mut d = doc();
+        apply_sets(
+            &mut d,
+            &[
+                ("deploy.agents".into(), "4".into()),
+                ("deploy.protocol".into(), "eager".into()),
+                ("deploy.wire_batch".into(), "false".into()),
+            ],
+        )
+        .unwrap();
+        assert_eq!(get_path(&d, "deploy.agents").and_then(Json::as_u64), Some(4));
+        assert_eq!(
+            get_path(&d, "deploy.protocol").and_then(Json::as_str),
+            Some("eager")
+        );
+        assert_eq!(
+            get_path(&d, "deploy.wire_batch").and_then(Json::as_bool),
+            Some(false)
+        );
+    }
+
+    #[test]
+    fn sweep_grid_is_deterministic_row_major() {
+        let points = sweep_points(&doc()).unwrap();
+        // Sorted axes: deploy.protocol before vars.band; rightmost
+        // (vars.band) varies fastest.
+        let labels: Vec<&str> = points.iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "deploy.protocol=demand,vars.band=100",
+                "deploy.protocol=demand,vars.band=200",
+                "deploy.protocol=eager,vars.band=100",
+                "deploy.protocol=eager,vars.band=200",
+            ]
+        );
+        // Expansion is reproducible, point docs carry no sweep key, and
+        // every point has a distinct fingerprint.
+        let again = sweep_points(&doc()).unwrap();
+        let mut fps = std::collections::BTreeSet::new();
+        for (a, b) in points.iter().zip(again.iter()) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.doc, b.doc);
+            assert!(a.doc.get("sweep").is_none());
+            fps.insert(point_fingerprint(a));
+        }
+        assert_eq!(fps.len(), 4);
+    }
+
+    #[test]
+    fn malformed_sweeps_are_rejected_with_paths() {
+        for (bad, needle) in [
+            (r#"{"a": 1, "sweep": []}"#, "expected an object"),
+            (r#"{"a": 1, "sweep": {}}"#, "empty sweep block"),
+            (r#"{"a": 1, "sweep": {"a": 5}}"#, "expected an array"),
+            (r#"{"a": 1, "sweep": {"a": []}}"#, "empty value list"),
+            (r#"{"a": 1, "sweep": {"a": [{"x": 1}]}}"#, "must be scalars"),
+            (r#"{"a": 1, "sweep": {"missing.path": [1]}}"#, "does not exist"),
+        ] {
+            let err = sweep_points(&Json::parse(bad).unwrap())
+                .err()
+                .unwrap_or_else(|| panic!("accepted {bad}"));
+            assert!(
+                format!("{err:#}").contains(needle),
+                "error for {bad} lacks '{needle}': {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn no_sweep_is_one_base_point() {
+        let d = Json::parse(r#"{"name": "s"}"#).unwrap();
+        let points = sweep_points(&d).unwrap();
+        assert_eq!(points.len(), 1);
+        assert_eq!(points[0].label, "base");
+        assert_eq!(points[0].doc, d);
+    }
+}

@@ -19,10 +19,12 @@
 //! });
 //! ```
 //!
-//! [`drive_two_center`] deploys and runs the two-center demo over an
-//! arbitrary [`Transport`] — the generic leader the `tcp_equivalence` and
-//! `adaptive_equivalence` suites share, so the only variable between two
-//! drives is the fleet configuration under test.
+//! [`drive_fleet`] deploys and runs any [`GeneratedScenario`] over an
+//! arbitrary [`Transport`] — the generic leader the `tcp_equivalence`,
+//! `adaptive_equivalence` and scenario suites share (and the TCP path of
+//! `dsim scenario run`), so the only variable between two drives is the
+//! fleet configuration under test.  [`drive_two_center`] specializes it
+//! to the two-center demo.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -31,7 +33,7 @@ use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener};
 
 use crate::coordinator::{
-    fingerprint_parts, stats_from_json, AgentConfig, AgentRuntime, HostStatsView, ProbeAnswer,
+    fingerprint_parts, AgentConfig, AgentRuntime, HostStatsView, ProbeAnswer,
     TerminationDetector, LEADER,
 };
 use crate::engine::SimTime;
@@ -42,7 +44,7 @@ use crate::transport::{
     ControlMsg, InProcEndpoint, InProcNetwork, NetMsg, TcpOptions, TcpTransport, Transport, Wire,
 };
 use crate::util::{AgentId, Pcg32};
-use crate::workload;
+use crate::workload::{self, GeneratedScenario};
 
 /// Result of one property case.
 pub type CaseResult = Result<(), String>;
@@ -84,9 +86,11 @@ where
 /// leader is [`LEADER`]).
 pub const FLEET_AGENTS: [AgentId; 2] = [AgentId(1), AgentId(2)];
 
-/// A leader endpoint + per-agent endpoints for [`FLEET_AGENTS`] on one
-/// in-process channel fabric; `cfg` builds each agent's configuration.
-pub fn inproc_fleet(
+/// A leader endpoint + per-agent endpoints for `n` agents (ids 1..=n) on
+/// one in-process channel fabric; `cfg` builds each agent's
+/// configuration.
+pub fn inproc_fleet_n(
+    n: usize,
     cfg: impl Fn(AgentId) -> AgentConfig,
 ) -> (
     InProcEndpoint<Payload>,
@@ -94,24 +98,37 @@ pub fn inproc_fleet(
 ) {
     let net: InProcNetwork<Payload> = InProcNetwork::new();
     let leader = net.endpoint(LEADER);
-    let agents = FLEET_AGENTS
-        .iter()
-        .map(|&a| (cfg(a), net.endpoint(a)))
+    let agents = (1..=n.max(1) as u64)
+        .map(AgentId)
+        .map(|a| (cfg(a), net.endpoint(a)))
         .collect();
     (leader, agents)
 }
 
-/// A leader + [`FLEET_AGENTS`] TCP fleet on OS-assigned localhost ports:
-/// listeners are bound first so the full peer address map exists before
-/// any endpoint is built (no port collisions between parallel tests).
-pub fn tcp_fleet(
+/// [`inproc_fleet_n`] for the canonical two-agent [`FLEET_AGENTS`] fleet.
+pub fn inproc_fleet(
+    cfg: impl Fn(AgentId) -> AgentConfig,
+) -> (
+    InProcEndpoint<Payload>,
+    Vec<(AgentConfig, InProcEndpoint<Payload>)>,
+) {
+    inproc_fleet_n(FLEET_AGENTS.len(), cfg)
+}
+
+/// A leader + `n` agents (ids 1..=n) as a TCP fleet on OS-assigned
+/// localhost ports: listeners are bound first so the full peer address
+/// map exists before any endpoint is built (no port collisions between
+/// parallel tests).
+pub fn tcp_fleet_n(
+    n: usize,
     opts: TcpOptions,
     cfg: impl Fn(AgentId) -> AgentConfig,
 ) -> (
     TcpTransport<Payload>,
     Vec<(AgentConfig, TcpTransport<Payload>)>,
 ) {
-    let ids = [LEADER, FLEET_AGENTS[0], FLEET_AGENTS[1]];
+    let mut ids = vec![LEADER];
+    ids.extend((1..=n.max(1) as u64).map(AgentId));
     let listeners: Vec<TcpListener> = ids
         .iter()
         .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
@@ -127,7 +144,7 @@ pub fn tcp_fleet(
         .map(|(a, l)| TcpTransport::from_listener(*a, l, peers.clone(), opts).unwrap())
         .collect();
     let leader = transports.remove(0);
-    let agents = FLEET_AGENTS
+    let agents = ids[1..]
         .iter()
         .zip(transports)
         .map(|(&a, t)| (cfg(a), t))
@@ -135,30 +152,60 @@ pub fn tcp_fleet(
     (leader, agents)
 }
 
-/// What one [`drive_two_center`] run produced: the canonical determinism
-/// digest plus each agent's final counters (budget trajectory and queue
-/// telemetry included), so suites can assert on both results and
-/// telemetry.
+/// [`tcp_fleet_n`] for the canonical two-agent [`FLEET_AGENTS`] fleet.
+pub fn tcp_fleet(
+    opts: TcpOptions,
+    cfg: impl Fn(AgentId) -> AgentConfig,
+) -> (
+    TcpTransport<Payload>,
+    Vec<(AgentConfig, TcpTransport<Payload>)>,
+) {
+    tcp_fleet_n(FLEET_AGENTS.len(), opts, cfg)
+}
+
+/// What one [`drive_fleet`] run produced: the canonical determinism
+/// digest, the raw counters behind it, plus each agent's final counters
+/// (budget trajectory and queue telemetry included), so suites can
+/// assert on both results and telemetry.
 pub struct FleetOutcome {
     /// The same digest `RunReport::determinism_fingerprint` computes,
     /// assembled from the control-plane messages.
     pub fingerprint: String,
+    /// Fleet totals behind the digest.
+    pub events: u64,
+    pub remote_events: u64,
+    pub jobs: usize,
+    pub transfers: usize,
+    pub makespan_s: f64,
+    /// Wall-clock seconds from deploy to the final stats report.
+    pub wall_s: f64,
+    /// Every record published during the run, by kind.
+    pub pool: ResultPool,
     /// Final per-agent statistics (FinalStats), in arrival order.
     pub stats: Vec<(AgentId, HostStatsView)>,
 }
 
-/// Drive the two-center demo over an arbitrary transport: deploy with
+/// Drive the two-center demo over an arbitrary transport (the historical
+/// entry point of the equivalence suites).
+pub fn drive_two_center<T: Transport<Payload> + Send + 'static>(
+    leader: T,
+    agents: Vec<(AgentConfig, T)>,
+) -> FleetOutcome {
+    drive_fleet(leader, agents, &workload::two_center_demo())
+}
+
+/// Drive any generated scenario over an arbitrary transport: deploy with
 /// round-robin group placement (matching the in-proc Deployment's
 /// RoundRobin scheduler: group i -> agents\[i % n\]), run probe-driven
 /// termination with GVT broadcast, collect results and final statistics.
 /// Panics (failing the calling test) if the run does not terminate or an
 /// agent never reports.
-pub fn drive_two_center<T: Transport<Payload> + Send + 'static>(
+pub fn drive_fleet<T: Transport<Payload> + Send + 'static>(
     leader: T,
     agents: Vec<(AgentConfig, T)>,
+    g: &GeneratedScenario,
 ) -> FleetOutcome {
     let ids: Vec<AgentId> = agents.iter().map(|(cfg, _)| cfg.me).collect();
-    let g = workload::two_center_demo();
     let ctx = crate::util::ContextId(1);
     let backend = Arc::new(ComputeBackend::auto(std::path::Path::new("artifacts")));
 
@@ -312,8 +359,7 @@ pub fn drive_two_center<T: Transport<Payload> + Send + 'static>(
     let mut stats: Vec<(AgentId, HostStatsView)> = Vec::new();
     while stats.len() < ids.len() {
         match leader.recv_timeout(Duration::from_secs(10)) {
-            Some(NetMsg::Control(ControlMsg::FinalStats { stats: s, from, .. })) => {
-                let v = stats_from_json(&s).expect("final stats decode");
+            Some(NetMsg::Control(ControlMsg::FinalStats { stats: v, from, .. })) => {
                 events += v.events_processed;
                 remote += v.events_sent_remote;
                 makespan = makespan.max(v.lvt_s);
@@ -342,7 +388,17 @@ pub fn drive_two_center<T: Transport<Payload> + Send + 'static>(
     let transfers = pool.of_kind("transfer").len();
     let fingerprint =
         fingerprint_parts(events, remote, jobs, transfers, makespan, &pool.kind_counts());
-    FleetOutcome { fingerprint, stats }
+    FleetOutcome {
+        fingerprint,
+        events,
+        remote_events: remote,
+        jobs,
+        transfers,
+        makespan_s: makespan,
+        wall_s: started.elapsed().as_secs_f64(),
+        pool,
+        stats,
+    }
 }
 
 /// Assert two f64s are close (absolute + relative tolerance).

@@ -114,16 +114,17 @@
 //! before exiting (joined in `Drop`), so shutdown flushes rather than
 //! truncates.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write as IoWrite};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::coordinator::HostStatsView;
 use crate::engine::{Event, SimTime, SyncMsg};
 use crate::space::SpaceMsg;
 use crate::util::bin;
@@ -186,11 +187,15 @@ pub enum ControlMsg {
     GvtUpdate { context: ContextId, gvt: SimTime },
     /// Leader -> agents: context finished; tear down and report stats.
     EndRun { context: ContextId },
-    /// Agent -> leader: final per-agent statistics (JSON-encoded).
+    /// Agent -> leader: final per-agent statistics.  Typed end-to-end —
+    /// in-process deployments move the struct directly with zero JSON
+    /// construction; the wire codecs serialize it through the same JSON
+    /// tree as before (see [`HostStatsView::to_json`]), so the frame
+    /// layout is unchanged and old fleets still decode.
     FinalStats {
         context: ContextId,
         from: AgentId,
-        stats: Json,
+        stats: HostStatsView,
     },
     /// Agent -> leader: published simulation result record (pre-batch
     /// frame; still accepted, and emitted when wire batching is off).
@@ -337,6 +342,9 @@ pub struct TransportTelemetry {
     /// Cumulative microseconds senders have spent blocked on a full
     /// writer queue (backpressure stalls).
     pub send_block_us: u64,
+    /// Adaptive-depth doubling steps taken across all writer queues
+    /// (0 under a fixed [`WriterQueue`] policy).
+    pub queue_grows: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -729,7 +737,7 @@ fn control_to_json(c: &ControlMsg) -> Json {
             ("k", Json::str("stats")),
             ("ctx", Json::num(context.raw() as f64)),
             ("from", Json::num(from.raw() as f64)),
-            ("stats", stats.clone()),
+            ("stats", stats.to_json()),
         ]),
         Result {
             context,
@@ -842,7 +850,8 @@ fn control_from_json(j: &Json) -> Result<ControlMsg> {
         Some("stats") => Ok(ControlMsg::FinalStats {
             context: ctx()?,
             from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
-            stats: j.get("stats").context("stats")?.clone(),
+            stats: HostStatsView::from_json(j.get("stats").context("stats")?)
+                .ok_or_else(|| anyhow!("bad stats object"))?,
         }),
         Some("result") => Ok(ControlMsg::Result {
             context: ctx()?,
@@ -1174,7 +1183,9 @@ fn control_to_bin(out: &mut Vec<u8>, c: &ControlMsg) {
             out.push(9);
             bin::put_u64(out, context.raw());
             bin::put_u64(out, from.raw());
-            stats.encode_bin(out);
+            // Bridge through the JSON tree: byte-identical to the
+            // pre-typed frames, so no WIRE_VERSION bump is needed.
+            stats.to_json().encode_bin(out);
         }
         Result {
             context,
@@ -1270,11 +1281,17 @@ fn control_from_bin(r: &mut bin::Reader) -> Result<ControlMsg> {
         8 => ControlMsg::EndRun {
             context: ContextId(r.u64()?),
         },
-        9 => ControlMsg::FinalStats {
-            context: ContextId(r.u64()?),
-            from: AgentId(r.u64()?),
-            stats: Json::decode_bin(r)?,
-        },
+        9 => {
+            let context = ContextId(r.u64()?);
+            let from = AgentId(r.u64()?);
+            let j = Json::decode_bin(r)?;
+            ControlMsg::FinalStats {
+                context,
+                from,
+                stats: HostStatsView::from_json(&j)
+                    .ok_or_else(|| anyhow!("bad stats object"))?,
+            }
+        }
         10 => ControlMsg::Result {
             context: ContextId(r.u64()?),
             kind: r.str()?,
@@ -1467,6 +1484,136 @@ pub const DEFAULT_MAX_FRAME_BYTES: usize = 64 << 20;
 /// `deploy.writer_queue_frames` / `dsim agent --writer-queue-frames`.
 pub const DEFAULT_WRITER_QUEUE_FRAMES: usize = 256;
 
+/// Adaptive writer queues start this shallow (frames) and double on
+/// saturation.
+pub const ADAPTIVE_WRITER_QUEUE_START: usize = 16;
+
+/// Ceiling an adaptive writer queue may grow to (frames): past this the
+/// queue behaves like a fixed queue at the cap — block, never drop.
+pub const ADAPTIVE_WRITER_QUEUE_MAX: usize = 4096;
+
+/// Per-peer writer-queue sizing policy (`deploy.writer_queue_frames`).
+///
+/// `Fixed(N)` is the historical static bound.  `Adaptive` sizes the
+/// depth from the queue's own occupancy high-water telemetry: the queue
+/// starts at `start` frames and, whenever a send finds it full (the
+/// high-water mark has reached the current depth), the depth doubles up
+/// to `max` instead of blocking the sender — the queue self-tunes to the
+/// burst size the fleet actually produces.  At `max` it blocks like a
+/// fixed queue (backpressure, never loss), so the adaptive *window*
+/// controller still sees saturation when the wire truly cannot keep up.
+/// Growth is monotone (never shrinks) and per peer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriterQueue {
+    /// Static bound of `N` frames (>= 1).
+    Fixed(usize),
+    /// Grow from `start` frames by doubling on saturation, up to `max`.
+    Adaptive { start: usize, max: usize },
+}
+
+impl WriterQueue {
+    /// The default adaptive policy (`"adaptive"` in configs).
+    pub fn adaptive() -> WriterQueue {
+        WriterQueue::Adaptive {
+            start: ADAPTIVE_WRITER_QUEUE_START,
+            max: ADAPTIVE_WRITER_QUEUE_MAX,
+        }
+    }
+
+    /// Depth a fresh queue opens with.
+    pub fn initial(&self) -> usize {
+        match *self {
+            WriterQueue::Fixed(n) => n,
+            WriterQueue::Adaptive { start, .. } => start,
+        }
+    }
+
+    /// Depth the queue may never exceed.
+    pub fn ceiling(&self) -> usize {
+        match *self {
+            WriterQueue::Fixed(n) => n,
+            WriterQueue::Adaptive { max, .. } => max,
+        }
+    }
+
+    /// Parse the config-file form: a plain number (fixed depth, the
+    /// pre-adaptive format) or a policy string (`fixed(N)` | `adaptive`).
+    /// Shared by the lenient `dsim run` config and the strict scenario
+    /// loader so the two front doors can never drift.
+    pub fn from_json(j: &Json) -> Result<WriterQueue, String> {
+        match j {
+            Json::Num(_) => {
+                let n = j.as_u64().ok_or_else(|| {
+                    "writer_queue_frames must be a non-negative integer or a policy string"
+                        .to_string()
+                })?;
+                let q = WriterQueue::Fixed(n as usize);
+                q.validate()?;
+                Ok(q)
+            }
+            Json::Str(s) => s.parse(),
+            _ => Err(
+                "writer_queue_frames must be a number or a policy string (fixed(N) | adaptive)"
+                    .to_string(),
+            ),
+        }
+    }
+
+    /// Reject policies a bounded queue cannot run.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            WriterQueue::Fixed(0) => Err(
+                "writer_queue_frames must be >= 1 (a bounded queue needs room for one frame)"
+                    .into(),
+            ),
+            WriterQueue::Adaptive { start: 0, .. } => {
+                Err("adaptive writer queue start depth must be >= 1".into())
+            }
+            WriterQueue::Adaptive { start, max } if start > max => Err(format!(
+                "adaptive writer queue start ({start}) must be <= max ({max})"
+            )),
+            _ => Ok(()),
+        }
+    }
+}
+
+impl Default for WriterQueue {
+    fn default() -> Self {
+        WriterQueue::Fixed(DEFAULT_WRITER_QUEUE_FRAMES)
+    }
+}
+
+impl std::fmt::Display for WriterQueue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WriterQueue::Fixed(n) => write!(f, "fixed({n})"),
+            WriterQueue::Adaptive { .. } => write!(f, "adaptive"),
+        }
+    }
+}
+
+impl std::str::FromStr for WriterQueue {
+    type Err = String;
+
+    /// Accepts `adaptive`, `fixed(N)`, or a bare integer (shorthand for
+    /// `fixed(N)`).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s == "adaptive" {
+            return Ok(WriterQueue::adaptive());
+        }
+        let inner = s
+            .strip_prefix("fixed(")
+            .and_then(|rest| rest.strip_suffix(')'))
+            .unwrap_or(s);
+        let n = inner.parse::<usize>().map_err(|_| {
+            format!("bad writer queue '{s}' (adaptive | fixed(N) | bare frame count)")
+        })?;
+        let q = WriterQueue::Fixed(n);
+        q.validate()?;
+        Ok(q)
+    }
+}
+
 /// Tuning knobs for a TCP endpoint.
 #[derive(Clone, Copy, Debug)]
 pub struct TcpOptions {
@@ -1476,10 +1623,9 @@ pub struct TcpOptions {
     /// are decoded per each sender's preamble, so mixed-codec fleets
     /// interoperate in both directions.
     pub codec: WireCodec,
-    /// Bound of each per-peer writer queue, in messages
-    /// ([`DEFAULT_WRITER_QUEUE_FRAMES`]).  A full queue blocks the
-    /// sender — backpressure, never loss.
-    pub writer_queue: usize,
+    /// Per-peer writer-queue sizing policy ([`WriterQueue`]).  A full
+    /// queue blocks the sender — backpressure, never loss.
+    pub writer_queue: WriterQueue,
 }
 
 impl Default for TcpOptions {
@@ -1487,7 +1633,7 @@ impl Default for TcpOptions {
         TcpOptions {
             max_frame: DEFAULT_MAX_FRAME_BYTES,
             codec: WireCodec::default(),
-            writer_queue: DEFAULT_WRITER_QUEUE_FRAMES,
+            writer_queue: WriterQueue::default(),
         }
     }
 }
@@ -1579,13 +1725,15 @@ fn read_connection_codec(
 }
 
 /// Encode `msg` under `codec`, splitting over-limit batch frames into
-/// smaller chunks: a [`NetMsg::WindowBatch`] by halving its event list
-/// (non-final chunks carry no sync flush, no space ops and no bound, so
-/// the promise stays behind everything it covers), a
-/// [`ControlMsg::WindowReport`] by halving its record list (the
-/// cumulative window count is idempotent).  Anything else over the limit
-/// is a hard error — the receiver would drain and drop it anyway.
-/// Encoded frame bodies are appended to `out` in send order.
+/// smaller chunks: a [`NetMsg::WindowBatch`] through the zero-re-encode
+/// chunker ([`encode_batch_chunks`] — each event is encoded exactly once
+/// and frames are sliced out of those encodings; non-final chunks carry
+/// no sync flush, no space ops and no bound, so the promise stays behind
+/// everything it covers), a [`ControlMsg::WindowReport`] by halving its
+/// record list (the cumulative window count is idempotent).  Anything
+/// else over the limit is a hard error — the receiver would drain and
+/// drop it anyway.  Encoded frame bodies are appended to `out` in send
+/// order.
 fn encode_split<P: Wire>(
     codec: WireCodec,
     max_frame: usize,
@@ -1601,39 +1749,13 @@ fn encode_split<P: Wire>(
         NetMsg::WindowBatch {
             context,
             from,
-            mut events,
+            events,
             sync,
             space,
             bound,
-        } if events.len() > 1 => {
-            let tail = events.split_off(events.len() / 2);
-            encode_split(
-                codec,
-                max_frame,
-                NetMsg::WindowBatch {
-                    context,
-                    from,
-                    events,
-                    sync: Vec::new(),
-                    space: Vec::new(),
-                    bound: None,
-                },
-                out,
-            )?;
-            encode_split(
-                codec,
-                max_frame,
-                NetMsg::WindowBatch {
-                    context,
-                    from,
-                    events: tail,
-                    sync,
-                    space,
-                    bound,
-                },
-                out,
-            )
-        }
+        } if !events.is_empty() => encode_batch_chunks(
+            codec, max_frame, context, from, events, sync, space, bound, out,
+        ),
         NetMsg::Control(ControlMsg::WindowReport {
             context,
             from,
@@ -1672,13 +1794,267 @@ fn encode_split<P: Wire>(
     }
 }
 
+/// Zero-re-encode splitter for over-limit [`NetMsg::WindowBatch`] frames:
+/// every event is encoded exactly **once**, event-only chunk frames are
+/// packed greedily under `max_frame` by slicing those encodings, and one
+/// final chunk carries the window's sync flush, space ops and trailing
+/// bound (possibly with zero events — a valid batch the receiver already
+/// handles).  Replaces the halving splitter's O(n log n) whole-batch
+/// re-encode with O(n) work; receiver semantics are unchanged — events
+/// arrive in emission order and the promise trails everything it covers.
+#[allow(clippy::too_many_arguments)]
+fn encode_batch_chunks<P: Wire>(
+    codec: WireCodec,
+    max_frame: usize,
+    context: ContextId,
+    from: AgentId,
+    events: Vec<Event<P>>,
+    sync: Vec<SyncMsg>,
+    space: Vec<SpaceMsg>,
+    bound: Option<SimTime>,
+    out: &mut Vec<Vec<u8>>,
+) -> Result<()> {
+    // Per-event encodings, produced exactly once.
+    let encoded: Vec<Vec<u8>> = events
+        .iter()
+        .map(|e| match codec {
+            WireCodec::Json => event_to_json(e).to_string().into_bytes(),
+            WireCodec::Binary => {
+                let mut b = Vec::with_capacity(64);
+                event_to_bin(&mut b, e);
+                b
+            }
+        })
+        .collect();
+    // Worst-case per-chunk bytes outside the event encodings: the binary
+    // header is msg tag + three <= 10-byte varints + a 3-byte empty
+    // trailer; the JSON skeleton plus two u64 ids in decimal tops out
+    // near 90.  96 covers both; the event bytes dominate real frames.
+    const CHUNK_OVERHEAD: usize = 96;
+    if max_frame <= CHUNK_OVERHEAD {
+        bail!("frame limit {max_frame} bytes is too small to carry any batch chunk");
+    }
+    let budget = max_frame - CHUNK_OVERHEAD;
+    let mut chunk: Vec<usize> = Vec::new(); // indices into `encoded`
+    let mut chunk_bytes = 0usize;
+    for (i, enc) in encoded.iter().enumerate() {
+        if !chunk.is_empty() && chunk_bytes + 1 + enc.len() > budget {
+            out.push(assemble_event_chunk(codec, context, from, &chunk, &encoded));
+            chunk.clear();
+            chunk_bytes = 0;
+        }
+        if chunk.is_empty() && enc.len() > budget {
+            bail!(
+                "frame too large: one event encodes to {} bytes > {} limit (unsplittable)",
+                enc.len(),
+                max_frame
+            );
+        }
+        chunk_bytes += enc.len() + if chunk.is_empty() { 0 } else { 1 };
+        chunk.push(i);
+    }
+    if !chunk.is_empty() {
+        out.push(assemble_event_chunk(codec, context, from, &chunk, &encoded));
+    }
+    // The final chunk ships the window's sync flush, replication ops and
+    // the single trailing promise — after every event chunk, so the bound
+    // still never undercuts an event it covers.
+    let tail: NetMsg<P> = NetMsg::WindowBatch {
+        context,
+        from,
+        events: Vec::new(),
+        sync,
+        space,
+        bound,
+    };
+    let body = encode_msg(codec, &tail);
+    if body.len() > max_frame {
+        bail!(
+            "frame too large: batch sync/space tail encodes to {} bytes > {} limit (unsplittable)",
+            body.len(),
+            max_frame
+        );
+    }
+    out.push(body);
+    Ok(())
+}
+
+/// Assemble one event-only `WindowBatch` frame body from pre-encoded
+/// events (no sync flush, no space ops, no bound).  The hand-assembled
+/// JSON parses to exactly what [`msg_to_json`] would produce for the
+/// same chunk — key order is irrelevant to the parser.
+fn assemble_event_chunk(
+    codec: WireCodec,
+    context: ContextId,
+    from: AgentId,
+    chunk: &[usize],
+    encoded: &[Vec<u8>],
+) -> Vec<u8> {
+    let events_len: usize = chunk.iter().map(|&i| encoded[i].len()).sum();
+    match codec {
+        WireCodec::Binary => {
+            let mut b = Vec::with_capacity(events_len + 40);
+            b.push(2); // WindowBatch msg tag
+            bin::put_u64(&mut b, context.raw());
+            bin::put_u64(&mut b, from.raw());
+            bin::put_u64(&mut b, chunk.len() as u64);
+            for &i in chunk {
+                b.extend_from_slice(&encoded[i]);
+            }
+            bin::put_u64(&mut b, 0); // empty sync flush
+            bin::put_u64(&mut b, 0); // no space ops
+            b.push(0); // no bound
+            b
+        }
+        WireCodec::Json => {
+            let mut s = String::with_capacity(events_len + chunk.len() + 96);
+            s.push_str(&format!(
+                "{{\"k\":\"batch\",\"ctx\":{},\"from\":{},\"evs\":[",
+                context.raw(),
+                from.raw()
+            ));
+            for (n, &i) in chunk.iter().enumerate() {
+                if n > 0 {
+                    s.push(',');
+                }
+                s.push_str(std::str::from_utf8(&encoded[i]).expect("event json is utf8"));
+            }
+            s.push_str("],\"sync\":[]}");
+            s.into_bytes()
+        }
+    }
+}
+
+/// What one [`FrameQueue::push`] observed, for the sender's telemetry
+/// counters (the queue itself never touches the endpoint gauges).
+struct Pushed {
+    /// Frames queued immediately after the push.
+    occupancy: u64,
+    /// Queue depth in force after the push (may have just grown).
+    cap: u64,
+    /// The depth the push found the queue full at, if it did.
+    full_at: Option<u64>,
+    /// Microseconds this push spent blocked waiting for room.
+    blocked_us: u64,
+}
+
+struct FrameQueueState<P> {
+    buf: VecDeque<NetMsg<P>>,
+    /// Current bound; fixed policies never move it, adaptive ones double
+    /// it (up to `FrameQueue::max_cap`) instead of blocking a saturated
+    /// sender.
+    cap: usize,
+    closed: bool,
+}
+
+/// The bounded per-peer writer queue: senders push (blocking when full at
+/// the ceiling), the writer thread pops, and `close` ends the stream
+/// after the already-queued frames drain (flush-on-drop semantics).
+/// Under an adaptive [`WriterQueue`] policy the bound itself grows from
+/// the saturation signal — the occupancy high-water reaching the current
+/// depth — doubling toward the ceiling.
+struct FrameQueue<P> {
+    state: Mutex<FrameQueueState<P>>,
+    /// Signalled when room frees up (senders wait here).
+    can_push: Condvar,
+    /// Signalled when a frame arrives or the queue closes (writer waits).
+    can_pop: Condvar,
+    /// Depth ceiling (== initial cap for fixed policies).
+    max_cap: usize,
+    /// Doubling steps taken (adaptive depth telemetry).
+    grows: AtomicU64,
+}
+
+impl<P> FrameQueue<P> {
+    fn new(spec: WriterQueue) -> Self {
+        FrameQueue {
+            state: Mutex::new(FrameQueueState {
+                buf: VecDeque::new(),
+                cap: spec.initial().max(1),
+                closed: false,
+            }),
+            can_push: Condvar::new(),
+            can_pop: Condvar::new(),
+            max_cap: spec.ceiling().max(1),
+            grows: AtomicU64::new(0),
+        }
+    }
+
+    /// Enqueue one message; `Err(())` if the queue is closed (writer
+    /// gone).  Blocks while full at the ceiling; below the ceiling a full
+    /// queue grows instead.
+    fn push(&self, msg: NetMsg<P>) -> Result<Pushed, ()> {
+        let mut st = self.state.lock().unwrap();
+        let mut full_at = None;
+        let mut blocked_us = 0u64;
+        while st.buf.len() >= st.cap && !st.closed {
+            if full_at.is_none() {
+                full_at = Some(st.cap as u64);
+            }
+            if st.cap < self.max_cap {
+                st.cap = st.cap.saturating_mul(2).min(self.max_cap);
+                self.grows.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            let t0 = Instant::now();
+            st = self.can_push.wait(st).unwrap();
+            blocked_us += t0.elapsed().as_micros() as u64;
+        }
+        if st.closed {
+            return Err(());
+        }
+        st.buf.push_back(msg);
+        let out = Pushed {
+            occupancy: st.buf.len() as u64,
+            cap: st.cap as u64,
+            full_at,
+            blocked_us,
+        };
+        drop(st);
+        self.can_pop.notify_one();
+        Ok(out)
+    }
+
+    /// Dequeue the next message; `None` once the queue is closed *and*
+    /// drained — close flushes, never truncates.
+    fn pop(&self) -> Option<NetMsg<P>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(m) = st.buf.pop_front() {
+                drop(st);
+                self.can_push.notify_one();
+                return Some(m);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.can_pop.wait(st).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.can_pop.notify_all();
+        self.can_push.notify_all();
+    }
+
+    /// (frames queued, current depth, doubling steps) for telemetry.
+    fn snapshot(&self) -> (u64, u64, u64) {
+        let st = self.state.lock().unwrap();
+        (
+            st.buf.len() as u64,
+            st.cap as u64,
+            self.grows.load(Ordering::Relaxed),
+        )
+    }
+}
+
 /// One peer's dedicated writer: a bounded message queue feeding a thread
 /// that encodes and transmits.
 struct PeerWriter<P> {
-    tx: SyncSender<NetMsg<P>>,
-    /// Frames currently queued (sender increments before enqueue, the
-    /// writer decrements as it dequeues — never underflows).
-    occupancy: Arc<AtomicU64>,
+    queue: Arc<FrameQueue<P>>,
     handle: std::thread::JoinHandle<()>,
 }
 
@@ -1803,20 +2179,15 @@ impl<P: Wire + Send + 'static> TcpTransport<P> {
             .peers
             .get(&to)
             .ok_or_else(|| anyhow!("unknown peer {to}"))?;
-        let (tx, rx) = sync_channel(self.opts.writer_queue);
+        let queue = Arc::new(FrameQueue::new(self.opts.writer_queue));
         let me = self.me;
         let opts = self.opts;
         let bytes = Arc::clone(&self.bytes_sent);
-        let occupancy = Arc::new(AtomicU64::new(0));
-        let occ = Arc::clone(&occupancy);
+        let q = Arc::clone(&queue);
         let handle = std::thread::Builder::new()
             .name(format!("dsim-tcp-writer-{me}-{to}"))
-            .spawn(move || writer_loop::<P>(me, to, addr, opts, rx, bytes, occ))?;
-        Ok(PeerWriter {
-            tx,
-            occupancy,
-            handle,
-        })
+            .spawn(move || writer_loop::<P>(me, to, addr, opts, q, bytes))?;
+        Ok(PeerWriter { queue, handle })
     }
 }
 
@@ -1859,31 +2230,29 @@ fn connect_peer(
 }
 
 /// The per-peer writer: encodes (and size-splits) each queued message and
-/// performs the blocking socket writes, off the agent thread.  `rx.iter()`
-/// drains everything already queued before observing disconnect, so a
-/// dropped transport flushes rather than truncates.  Any frame that cannot
-/// be transmitted — a hard connection failure, or an unsplittable
-/// over-limit message — ends the writer: the channel to that peer is
-/// compromised either way (the synchronous path surfaced these as send
-/// errors), and a dead writer turns every *subsequent* send into a loud
-/// error instead of a silently incomplete run.
+/// performs the blocking socket writes, off the agent thread.  `pop`
+/// drains everything already queued before observing close, so a dropped
+/// transport flushes rather than truncates.  Any frame that cannot be
+/// transmitted — a hard connection failure, or an unsplittable over-limit
+/// message — ends the writer, which closes its queue: the channel to that
+/// peer is compromised either way (the synchronous path surfaced these as
+/// send errors), and a dead writer turns every *subsequent* send into a
+/// loud error instead of a silently incomplete run.
 fn writer_loop<P: Wire>(
     me: AgentId,
     to: AgentId,
     addr: SocketAddr,
     opts: TcpOptions,
-    rx: Receiver<NetMsg<P>>,
+    queue: Arc<FrameQueue<P>>,
     bytes: Arc<AtomicU64>,
-    occupancy: Arc<AtomicU64>,
 ) {
     let mut stream: Option<TcpStream> = None;
     let mut frames: Vec<Vec<u8>> = Vec::new();
-    for msg in rx.iter() {
-        occupancy.fetch_sub(1, Ordering::Relaxed);
+    'outer: while let Some(msg) = queue.pop() {
         frames.clear();
         if let Err(e) = encode_split(opts.codec, opts.max_frame, msg, &mut frames) {
             log::error!("{me}: writer to {to} exiting on undeliverable frame: {e:#}");
-            return;
+            break 'outer;
         }
         for frame in &frames {
             if stream.is_none() {
@@ -1891,7 +2260,7 @@ fn writer_loop<P: Wire>(
                     Ok(s) => stream = Some(s),
                     Err(e) => {
                         log::error!("{me}: writer to {to} exiting (run will stall): {e:#}");
-                        return;
+                        break 'outer;
                     }
                 }
             }
@@ -1906,22 +2275,26 @@ fn writer_loop<P: Wire>(
                     Ok(s) => stream = Some(s),
                     Err(e) => {
                         log::error!("{me}: writer to {to} exiting (run will stall): {e:#}");
-                        return;
+                        break 'outer;
                     }
                 }
             }
             bytes.fetch_add(frame.len() as u64 + 4, Ordering::Relaxed);
         }
     }
+    // Whether close() initiated this exit or a failure did, mark the
+    // queue closed so blocked and future senders fail loudly instead of
+    // queueing into the void.
+    queue.close();
 }
 
 impl<P> Drop for TcpTransport<P> {
-    /// Flush and join every writer: dropping a sender lets its writer
-    /// drain the already-queued frames, then exit.
+    /// Flush and join every writer: closing a queue lets its writer drain
+    /// the already-queued frames, then exit.
     fn drop(&mut self) {
         let writers = std::mem::take(&mut *self.writers.lock().unwrap());
         for (_, w) in writers {
-            drop(w.tx);
+            w.queue.close();
             let _ = w.handle.join();
         }
     }
@@ -1949,50 +2322,44 @@ impl<P: Wire + Clone + Send + 'static> Transport<P> for TcpTransport<P> {
                 .map_err(|_| anyhow!("self inbox closed"))?;
             return Ok(());
         }
-        // Clone the sender out of the lock: a backpressure block must not
+        // Clone the queue out of the lock: a backpressure block must not
         // hold the writer map against sends to other peers.
-        let (tx, occupancy) = {
+        let queue = {
             let mut writers = self.writers.lock().unwrap();
             if !writers.contains_key(&to) {
                 let w = self.spawn_writer(to)?;
                 writers.insert(to, w);
             }
-            let w = &writers[&to];
-            (w.tx.clone(), Arc::clone(&w.occupancy))
+            Arc::clone(&writers[&to].queue)
         };
-        // Occupancy brackets the enqueue — increment here, the writer
-        // decrements as it dequeues — so the gauge never underflows; its
-        // running max (capped at the depth) is the queue-high-water
-        // telemetry the adaptive window controller consumes.
-        let depth = self.opts.writer_queue as u64;
-        let occ = occupancy.fetch_add(1, Ordering::Relaxed) + 1;
-        self.queue_highwater
-            .fetch_max(occ.min(depth), Ordering::Relaxed);
-        let delivered = match tx.try_send(msg) {
-            Ok(()) => true,
-            Err(TrySendError::Full(msg)) => {
-                // Backpressure: the queue is at depth; meter the stall so
-                // the controller (and the operator) can see the fleet is
-                // wire-bound, then block — never drop.
-                self.queue_highwater.fetch_max(depth, Ordering::Relaxed);
-                let t0 = Instant::now();
-                let sent = tx.send(msg).is_ok();
-                self.send_block_us
-                    .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
-                sent
+        match queue.push(msg) {
+            Ok(p) => {
+                // The running occupancy max (capped at the live depth) is
+                // the queue-high-water telemetry the adaptive window
+                // controller consumes; a push that found the queue full
+                // pins the mark at the depth it saturated, and any wait is
+                // metered so the controller (and the operator) can see the
+                // fleet is wire-bound.  Backpressure, never loss.
+                if let Some(full_cap) = p.full_at {
+                    self.queue_highwater.fetch_max(full_cap, Ordering::Relaxed);
+                }
+                self.queue_highwater
+                    .fetch_max(p.occupancy.min(p.cap), Ordering::Relaxed);
+                if p.blocked_us > 0 {
+                    self.send_block_us.fetch_add(p.blocked_us, Ordering::Relaxed);
+                }
+                Ok(())
             }
-            Err(TrySendError::Disconnected(_)) => false,
-        };
-        if !delivered {
-            occupancy.fetch_sub(1, Ordering::Relaxed);
-            // Writer died (connection failure).  Remove it so a later send
-            // gets a fresh writer and thus a fresh connect attempt.
-            if let Some(w) = self.writers.lock().unwrap().remove(&to) {
-                let _ = w.handle.join();
+            Err(()) => {
+                // Writer died (connection failure).  Remove it so a later
+                // send gets a fresh writer and thus a fresh connect
+                // attempt.
+                if let Some(w) = self.writers.lock().unwrap().remove(&to) {
+                    let _ = w.handle.join();
+                }
+                bail!("writer for {to} has shut down (connection failed)")
             }
-            bail!("writer for {to} has shut down (connection failed)");
         }
-        Ok(())
     }
 
     fn recv_timeout(&self, timeout: Duration) -> Option<NetMsg<P>> {
@@ -2009,19 +2376,27 @@ impl<P: Wire + Clone + Send + 'static> Transport<P> for TcpTransport<P> {
     }
 
     fn telemetry(&self) -> TransportTelemetry {
-        let occupancy = {
+        // Depth is live per peer under an adaptive policy: report the
+        // deepest queue (the initial depth before any writer exists).
+        let (occupancy, depth, grows) = {
             let writers = self.writers.lock().unwrap();
-            writers
-                .values()
-                .map(|w| w.occupancy.load(Ordering::Relaxed))
-                .max()
-                .unwrap_or(0)
+            let mut occ = 0;
+            let mut depth = self.opts.writer_queue.initial() as u64;
+            let mut grows = 0;
+            for w in writers.values() {
+                let (o, c, g) = w.queue.snapshot();
+                occ = occ.max(o);
+                depth = depth.max(c);
+                grows += g;
+            }
+            (occ, depth, grows)
         };
         TransportTelemetry {
-            queue_depth: self.opts.writer_queue as u64,
+            queue_depth: depth,
             queue_occupancy: occupancy,
             queue_highwater: self.queue_highwater.load(Ordering::Relaxed),
             send_block_us: self.send_block_us.load(Ordering::Relaxed),
+            queue_grows: grows,
         }
     }
 }
@@ -2240,7 +2615,20 @@ mod tests {
             8 => ControlMsg::FinalStats {
                 context: ctx,
                 from: AgentId(rng.below(8)),
-                stats: rand_json(rng),
+                stats: HostStatsView {
+                    events_processed: rng.below(100_000),
+                    events_sent_remote: rng.below(10_000),
+                    null_messages_sent: rng.below(1000),
+                    windows: rng.below(1000),
+                    wire_frames: rng.below(1000),
+                    wire_bytes: rng.below(1 << 20),
+                    budget_last: rng.below(1 << 16),
+                    queue_highwater: rng.below(256),
+                    queue_grows: rng.below(8),
+                    events_rejected: rng.below(4),
+                    lvt_s: rng.uniform(0.0, 1e5),
+                    ..HostStatsView::default()
+                },
             },
             9 => ControlMsg::Result {
                 context: ctx,
@@ -2547,13 +2935,18 @@ mod tests {
         let mut bounds = Vec::new();
         let mut syncs = 0;
         let mut spaces = 0;
-        while got.len() < 8 {
+        // The final chunk is the one carrying the bound; events precede it.
+        loop {
             match t2.recv_timeout(Duration::from_secs(5)).expect("batch chunk") {
                 NetMsg::WindowBatch { events, sync, space, bound, .. } => {
                     got.extend(events.into_iter().map(|e| e.payload));
                     syncs += sync.len();
                     spaces += space.len();
+                    let done = bound.is_some();
                     bounds.push(bound);
+                    if done {
+                        break;
+                    }
                 }
                 other => panic!("unexpected {other:?}"),
             }
@@ -2699,7 +3092,10 @@ mod tests {
     fn writer_queue_flushes_on_drop_and_preserves_fifo() {
         // A tiny queue forces backpressure while the messages flow, and
         // dropping the sender transport must flush everything queued.
-        let opts = TcpOptions { writer_queue: 1, ..TcpOptions::default() };
+        let opts = TcpOptions {
+            writer_queue: WriterQueue::Fixed(1),
+            ..TcpOptions::default()
+        };
         let (t1, t2) = tcp_pair(opts, opts);
         const N: u64 = 200;
         for i in 0..N {
@@ -2722,7 +3118,10 @@ mod tests {
 
     #[test]
     fn writer_queue_telemetry_reports_depth_and_highwater() {
-        let opts = TcpOptions { writer_queue: 4, ..TcpOptions::default() };
+        let opts = TcpOptions {
+            writer_queue: WriterQueue::Fixed(4),
+            ..TcpOptions::default()
+        };
         let (t1, t2) = tcp_pair(opts, opts);
         // Before any send: depth is configured, gauges are zero.
         let t = t1.telemetry();
@@ -2752,6 +3151,170 @@ mod tests {
         let net: InProcNetwork<u32> = InProcNetwork::new();
         let a = net.endpoint(AgentId(1));
         assert_eq!(a.telemetry(), TransportTelemetry::default());
+    }
+
+    #[test]
+    fn writer_queue_mode_parse_and_display() {
+        assert_eq!("adaptive".parse::<WriterQueue>().unwrap(), WriterQueue::adaptive());
+        assert_eq!("fixed(8)".parse::<WriterQueue>().unwrap(), WriterQueue::Fixed(8));
+        assert_eq!("256".parse::<WriterQueue>().unwrap(), WriterQueue::Fixed(256));
+        assert_eq!(WriterQueue::Fixed(8).to_string(), "fixed(8)");
+        assert_eq!(WriterQueue::adaptive().to_string(), "adaptive");
+        for bad in ["fixed(0)", "0", "auto", "fixed()", ""] {
+            assert!(bad.parse::<WriterQueue>().is_err(), "accepted '{bad}'");
+        }
+        assert!(WriterQueue::Fixed(0).validate().is_err());
+        assert!(WriterQueue::Adaptive { start: 0, max: 4 }.validate().is_err());
+        assert!(WriterQueue::Adaptive { start: 8, max: 4 }.validate().is_err());
+        assert!(WriterQueue::Adaptive { start: 4, max: 4 }.validate().is_ok());
+    }
+
+    #[test]
+    fn adaptive_frame_queue_grows_instead_of_blocking() {
+        // With no consumer at all, an adaptive queue must absorb pushes
+        // beyond its start depth by doubling toward the ceiling — the
+        // saturation signal (occupancy high-water == depth) is the grow
+        // trigger, deterministic with a single pusher.
+        let q: FrameQueue<u32> =
+            FrameQueue::new(WriterQueue::Adaptive { start: 1, max: 4 });
+        for i in 0..4u64 {
+            let p = q
+                .push(NetMsg::Control(ControlMsg::Probe { context: ContextId(i), round: i }))
+                .expect("queue open");
+            assert_eq!(p.blocked_us, 0, "grew instead of blocking");
+        }
+        let (occ, cap, grows) = q.snapshot();
+        assert_eq!(occ, 4);
+        assert_eq!(cap, 4, "1 -> 2 -> 4");
+        assert_eq!(grows, 2);
+        // FIFO drain, then close -> pop None, push Err.
+        for i in 0..4u64 {
+            match q.pop().unwrap() {
+                NetMsg::Control(ControlMsg::Probe { context, .. }) => {
+                    assert_eq!(context, ContextId(i));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        q.close();
+        assert!(q.pop().is_none());
+        assert!(q.push(NetMsg::Control(ControlMsg::Shutdown)).is_err());
+    }
+
+    #[test]
+    fn fixed_frame_queue_never_grows() {
+        // A fixed depth-2 queue must block (not grow) when full: verify
+        // with a consumer thread that drains after a delay.
+        let q: Arc<FrameQueue<u32>> = Arc::new(FrameQueue::new(WriterQueue::Fixed(2)));
+        let q2 = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            let mut got = Vec::new();
+            while let Some(NetMsg::Control(ControlMsg::Probe { context, .. })) = q2.pop() {
+                got.push(context.raw());
+            }
+            got
+        });
+        for i in 0..6u64 {
+            q.push(NetMsg::Control(ControlMsg::Probe { context: ContextId(i), round: i }))
+                .expect("queue open");
+        }
+        let (_, cap, grows) = q.snapshot();
+        assert_eq!((cap, grows), (2, 0), "fixed queue must not grow");
+        q.close();
+        assert_eq!(consumer.join().unwrap(), (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn adaptive_writer_queue_tcp_delivers_fifo() {
+        // End to end over sockets: adaptive queues grow under burst but
+        // deliver everything in order, and the telemetry reports the
+        // doubling steps and the live (grown) depth.
+        let opts = TcpOptions {
+            writer_queue: WriterQueue::Adaptive { start: 1, max: 64 },
+            ..TcpOptions::default()
+        };
+        let (t1, t2) = tcp_pair(opts, opts);
+        assert_eq!(t1.telemetry().queue_depth, 1, "initial depth before any writer");
+        const N: u64 = 100;
+        for i in 0..N {
+            t1.send(
+                AgentId(2),
+                NetMsg::Control(ControlMsg::Probe { context: ContextId(i), round: i }),
+            )
+            .unwrap();
+        }
+        let t = t1.telemetry();
+        assert!(t.queue_depth >= 1 && t.queue_depth <= 64);
+        assert!(t.queue_grows <= 6, "1 -> 64 is six doublings at most");
+        for i in 0..N {
+            match t2.recv_timeout(Duration::from_secs(5)).expect("frame") {
+                NetMsg::Control(ControlMsg::Probe { context, .. }) => {
+                    assert_eq!(context, ContextId(i), "FIFO violated");
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn batch_chunking_splits_without_reencoding_property() {
+        // The zero-re-encode chunker must, for any batch and any frame
+        // limit, produce chunks that (a) each fit the limit, (b) decode,
+        // (c) reassemble the events in order, and (d) carry the sync
+        // flush, space ops and bound on the final chunk only.
+        crate::testkit::check("batch chunking", 60, |rng| {
+            let codec = if rng.chance(0.5) { WireCodec::Json } else { WireCodec::Binary };
+            let events: Vec<Event<u32>> = (0..rng.range(1, 40)).map(|_| rand_event(rng)).collect();
+            let sync: Vec<SyncMsg> = (0..rng.below(3)).map(|_| rand_sync(rng)).collect();
+            let space: Vec<SpaceMsg> = (0..rng.below(3)).map(|_| rand_space(rng)).collect();
+            let bound = if rng.chance(0.8) { Some(rand_time(rng)) } else { None };
+            let msg = NetMsg::WindowBatch {
+                context: ContextId(rng.below(4)),
+                from: AgentId(rng.below(8)),
+                events: events.clone(),
+                sync: sync.clone(),
+                space: space.clone(),
+                bound,
+            };
+            let max_frame = 200 + rng.below(400) as usize;
+            let mut frames = Vec::new();
+            encode_split(codec, max_frame, msg, &mut frames)
+                .map_err(|e| format!("split failed: {e:#}"))?;
+            let mut got_events = Vec::new();
+            let mut got_sync = Vec::new();
+            let mut got_space = Vec::new();
+            let mut got_bound = None;
+            for (i, frame) in frames.iter().enumerate() {
+                if frame.len() > max_frame {
+                    return Err(format!("chunk {i} is {} bytes > {max_frame}", frame.len()));
+                }
+                let m: NetMsg<u32> = decode_msg(codec, frame)
+                    .map_err(|e| format!("chunk {i} did not decode: {e:#}"))?;
+                match m {
+                    NetMsg::WindowBatch { events, sync, space, bound, .. } => {
+                        let last = i == frames.len() - 1;
+                        if !last && (!sync.is_empty() || !space.is_empty() || bound.is_some()) {
+                            return Err(format!("non-final chunk {i} carries tail data"));
+                        }
+                        got_events.extend(events);
+                        got_sync.extend(sync);
+                        got_space.extend(space);
+                        got_bound = bound;
+                    }
+                    other => return Err(format!("chunk {i} decoded to {other:?}")),
+                }
+            }
+            if got_events.iter().map(|e| e.payload).collect::<Vec<_>>()
+                != events.iter().map(|e| e.payload).collect::<Vec<_>>()
+            {
+                return Err("events lost or reordered".into());
+            }
+            if got_sync != sync || got_space != space || got_bound != bound {
+                return Err("sync/space/bound did not survive the split".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

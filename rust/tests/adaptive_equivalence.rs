@@ -28,7 +28,7 @@ use dsim::coordinator::{AgentConfig, Deployment, RunReport, WindowBudgetSpec};
 use dsim::engine::{ExecMode, SyncProtocol};
 use dsim::model::Payload;
 use dsim::testkit::{drive_two_center, FleetOutcome, FLEET_AGENTS};
-use dsim::transport::{InProcEndpoint, TcpOptions, TcpTransport, WireCodec};
+use dsim::transport::{InProcEndpoint, TcpOptions, TcpTransport, WireCodec, WriterQueue};
 use dsim::util::AgentId;
 use dsim::workload;
 
@@ -184,7 +184,7 @@ fn backpressure_stress_no_deadlock_no_drops() {
     let baseline = drive_two_center(l, a).fingerprint;
 
     let opts = TcpOptions {
-        writer_queue: 1,
+        writer_queue: WriterQueue::Fixed(1),
         max_frame: 4096,
         codec: WireCodec::Binary,
     };

@@ -305,22 +305,20 @@ fn unknown_peer_events_rejected_in_both_exec_modes() {
             .send(a1, NetMsg::Control(ControlMsg::EndRun { context: ctx }))
             .unwrap();
 
-        // Collect the final stats and assert the rejection was counted.
+        // Collect the (typed) final stats and assert the rejection was
+        // counted.
         let mut rejected = None;
         let deadline = std::time::Instant::now() + Duration::from_secs(30);
         while rejected.is_none() && std::time::Instant::now() < deadline {
             if let Some(NetMsg::Control(ControlMsg::FinalStats { stats, .. })) =
                 leader.recv_timeout(Duration::from_millis(50))
             {
-                rejected = Some((
-                    stats.get("events_rejected").and_then(|j| j.as_u64()),
-                    stats.get("events_processed").and_then(|j| j.as_u64()),
-                ));
+                rejected = Some((stats.events_rejected, stats.events_processed));
             }
         }
         let (rejected, processed) = rejected.expect("no FinalStats received");
-        assert_eq!(rejected, Some(1), "exec={exec}");
-        assert_eq!(processed, Some(0), "exec={exec}");
+        assert_eq!(rejected, 1, "exec={exec}");
+        assert_eq!(processed, 0, "exec={exec}");
 
         leader
             .send(a1, NetMsg::Control(ControlMsg::Shutdown))

@@ -1,0 +1,336 @@
+//! Declarative-scenario acceptance: the loader's error paths carry
+//! document paths, the bundled library validates and runs, sweep
+//! expansion is deterministic, and — the load→run→fingerprint roundtrip —
+//! a fleet built from `two_center_graph.json` produces a determinism
+//! fingerprint identical to the equivalent hand-built [`Deployment`]
+//! across {in-proc, TCP} × {json, binary}, with the scenario content
+//! fingerprint threaded into the `RunReport`.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use dsim::config::PlacementPolicy;
+use dsim::coordinator::Deployment;
+use dsim::scenario::{self, RunTransport};
+use dsim::util::json::Json;
+use dsim::workload;
+
+/// Bundled scenario directory (tests run from the package root, rust/).
+fn scenario_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+fn load(name: &str, sets: &[(String, String)]) -> Json {
+    scenario::load_doc(&scenario_dir().join(name), sets).expect("bundled scenario loads")
+}
+
+fn set(k: &str, v: &str) -> (String, String) {
+    (k.to_string(), v.to_string())
+}
+
+// ---------------------------------------------------------------------------
+// Validator error paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn validator_error_table() {
+    // Every rejection must carry the path it came from: the scenario
+    // file is the end-user surface, so "bad config" without a location
+    // is a bug.  (path-needle, document, error-needle)
+    let cases: Vec<(&str, &str, &str)> = vec![
+        // Top level.
+        ("<root>", r#"{"name": "x", "contexts": [], "bogus": 1}"#, "unknown key 'bogus'"),
+        ("name", r#"{"name": "", "contexts": [{"name": "c", "grid": {}}]}"#, "non-empty"),
+        ("contexts", r#"{"name": "x", "contexts": []}"#, ">= 1 context"),
+        ("", r#"{"name": "x"}"#, "missing required key 'contexts'"),
+        // Unknown knobs are errors, not silently ignored defaults.
+        (
+            "deploy",
+            r#"{"name": "x", "deploy": {"agnets": 2}, "contexts": [{"name": "c", "grid": {}}]}"#,
+            "unknown key 'agnets'",
+        ),
+        (
+            "deploy.protocol",
+            r#"{"name": "x", "deploy": {"protocol": "psychic"}, "contexts": [{"name": "c", "grid": {}}]}"#,
+            "psychic",
+        ),
+        (
+            "deploy",
+            r#"{"name": "x", "deploy": {"agents": 65}, "contexts": [{"name": "c", "grid": {}}]}"#,
+            "<= 64",
+        ),
+        (
+            "deploy.writer_queue_frames",
+            r#"{"name": "x", "deploy": {"writer_queue_frames": "turbo"}, "contexts": [{"name": "c", "grid": {}}]}"#,
+            "turbo",
+        ),
+        // Grid knobs.
+        (
+            "contexts.0.grid",
+            r#"{"name": "x", "contexts": [{"name": "c", "grid": {"cpus": 4}}]}"#,
+            "unknown key 'cpus'",
+        ),
+        (
+            "contexts.0.grid.preset",
+            r#"{"name": "x", "contexts": [{"name": "c", "grid": {"preset": "mesh"}}]}"#,
+            "unknown preset",
+        ),
+        (
+            "contexts.0.grid.centers",
+            r#"{"name": "x", "contexts": [{"name": "c", "grid": {"preset": "two-center", "centers": 3}}]}"#,
+            "fixed",
+        ),
+        // Context shape.
+        (
+            "contexts.0",
+            r#"{"name": "x", "contexts": [{"name": "c"}]}"#,
+            "'grid' or a 'components'",
+        ),
+        (
+            "contexts.0",
+            r#"{"name": "x", "contexts": [{"name": "c", "grid": {}, "components": []}]}"#,
+            "not both",
+        ),
+        (
+            "contexts.1.name",
+            r#"{"name": "x", "contexts": [{"name": "c", "grid": {}}, {"name": "c", "grid": {}}]}"#,
+            "duplicate context name",
+        ),
+        // Component graphs: bad refs, unknown kinds, duplicates.
+        (
+            "contexts.0.components.0.params.db",
+            r#"{"name": "x", "deploy": {"lookahead": 0.05}, "contexts": [{"name": "c", "components": [
+                {"name": "f", "kind": "farm", "group": 0, "params": {"db": "@ghost"}}]}]}"#,
+            "'@ghost' names no component",
+        ),
+        (
+            "contexts.0.components.0.kind",
+            r#"{"name": "x", "contexts": [{"name": "c", "components": [
+                {"name": "f", "kind": "blackhole", "group": 0}]}]}"#,
+            "unknown component kind",
+        ),
+        (
+            "contexts.0.components.1.name",
+            r#"{"name": "x", "contexts": [{"name": "c", "components": [
+                {"name": "f", "kind": "farm", "group": 0},
+                {"name": "f", "kind": "catalog", "group": 1}]}]}"#,
+            "duplicate component name",
+        ),
+        (
+            "contexts.0.bootstrap.0.to",
+            r#"{"name": "x", "deploy": {"lookahead": 0.05}, "contexts": [{"name": "c",
+                "components": [{"name": "cat", "kind": "catalog", "group": 0}],
+                "bootstrap": [{"time": 0.0, "to": "ghost", "payload": "start"}]}]}"#,
+            "names no component",
+        ),
+        // Vars: unknown refs and cycles.
+        (
+            "deploy.workers",
+            r#"{"name": "x", "deploy": {"workers": "${ghost}"}, "contexts": [{"name": "c", "grid": {}}]}"#,
+            "unknown variable",
+        ),
+        (
+            "vars",
+            r#"{"name": "x", "vars": {"a": "${b}", "b": "${a}"},
+                "contexts": [{"name": "c", "grid": {}}]}"#,
+            "cycle",
+        ),
+        // TCP is single-context, and its fleet driver places round-robin
+        // — the default perf placement would be silently ignored, so it
+        // is rejected instead.
+        (
+            "deploy.transport",
+            r#"{"name": "x", "deploy": {"transport": "tcp"},
+                "contexts": [{"name": "a", "grid": {}}, {"name": "b", "grid": {}}]}"#,
+            "single-context",
+        ),
+        (
+            "deploy.placement",
+            r#"{"name": "x", "deploy": {"transport": "tcp"},
+                "contexts": [{"name": "a", "grid": {}}]}"#,
+            "placement=rr",
+        ),
+    ];
+    for (path_needle, text, needle) in cases {
+        let doc = Json::parse(text).unwrap_or_else(|e| panic!("bad test JSON {text}: {e}"));
+        let err = scenario::compile(&doc)
+            .err()
+            .unwrap_or_else(|| panic!("accepted: {text}"));
+        let msg = format!("{err:#}");
+        assert!(msg.contains(needle), "error for {text}\n  lacks '{needle}': {msg}");
+        assert!(
+            path_needle.is_empty() || msg.contains(path_needle),
+            "error for {text}\n  lacks path '{path_needle}': {msg}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bundled library
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_bundled_scenario_validates() {
+    let dir = scenario_dir();
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("examples/scenarios exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        seen += 1;
+        let doc = scenario::load_doc(&path, &[]).unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        let points = scenario::sweep_points(&doc).unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        assert!(!points.is_empty(), "{path:?}: no sweep points");
+        for point in points {
+            let compiled = scenario::compile(&point.doc)
+                .unwrap_or_else(|e| panic!("{path:?} [{}]: {e:#}", point.label));
+            compiled
+                .preflight()
+                .unwrap_or_else(|e| panic!("{path:?} [{}]: {e:#}", point.label));
+        }
+    }
+    assert!(seen >= 5, "bundled scenario library shrank: {seen} files");
+}
+
+#[test]
+fn sweep_expansion_is_deterministic() {
+    let doc = load("sync_shootout.json", &[]);
+    let a = scenario::sweep_points(&doc).unwrap();
+    let b = scenario::sweep_points(&doc).unwrap();
+    assert_eq!(a.len(), 4, "2 protocols x 2 exec modes");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.doc, y.doc);
+        assert_eq!(
+            scenario::fingerprint(&x.doc),
+            scenario::fingerprint(&y.doc)
+        );
+    }
+    // Row-major over sorted axes: deploy.exec varies slower than
+    // deploy.protocol?  Sorted keys: deploy.exec < deploy.protocol, so
+    // exec is the outer axis.
+    let labels: Vec<&str> = a.iter().map(|p| p.label.as_str()).collect();
+    assert_eq!(
+        labels,
+        vec![
+            "deploy.exec=window,deploy.protocol=demand",
+            "deploy.exec=window,deploy.protocol=eager",
+            "deploy.exec=step,deploy.protocol=demand",
+            "deploy.exec=step,deploy.protocol=eager",
+        ]
+    );
+}
+
+#[test]
+fn set_overrides_reach_the_compiled_scenario() {
+    let doc = load(
+        "compute_bound.json",
+        &[set("deploy.workers", "3"), set("contexts.0.grid.seed", "99")],
+    );
+    let compiled = scenario::compile(&scenario::without_sweep(&doc)).unwrap();
+    assert_eq!(compiled.deploy.workers, 3);
+    assert_eq!(compiled.seed, 99);
+    // Overrides move the content fingerprint: a tweaked run can never
+    // masquerade as the base file's.
+    let base = scenario::compile(&scenario::without_sweep(&load("compute_bound.json", &[])))
+        .unwrap();
+    assert_ne!(compiled.fingerprint, base.fingerprint);
+}
+
+// ---------------------------------------------------------------------------
+// Load -> run -> fingerprint roundtrip (the acceptance criterion)
+// ---------------------------------------------------------------------------
+
+/// The hand-built equivalent of `two_center_graph.json`: the demo
+/// generator on an in-proc 2-agent round-robin deployment.
+fn hand_built_fingerprint() -> String {
+    Deployment::in_process(2)
+        .placement(PlacementPolicy::RoundRobin)
+        .max_wall(Duration::from_secs(120))
+        .run(workload::two_center_demo())
+        .expect("hand-built run failed")
+        .determinism_fingerprint()
+}
+
+#[test]
+fn graph_scenario_matches_hand_built_deployment_in_proc() {
+    let baseline = hand_built_fingerprint();
+    let doc = load("two_center_graph.json", &[]);
+    let compiled = scenario::compile(&scenario::without_sweep(&doc)).unwrap();
+    assert_eq!(compiled.transport, RunTransport::InProc);
+    let outcomes = compiled.run().expect("scenario run failed");
+    assert_eq!(outcomes.len(), 1);
+    assert_eq!(
+        outcomes[0].fingerprint, baseline,
+        "declarative graph diverged from the generator it transcribes"
+    );
+    // The report carries the scenario content fingerprint.
+    assert_eq!(outcomes[0].scenario_fingerprint, compiled.fingerprint);
+    assert_eq!(compiled.fingerprint.len(), 16);
+
+    // Through the Deployment API directly: RunReport carries it too.
+    let report = compiled
+        .deployment()
+        .run(compiled.contexts[0].generated.clone())
+        .expect("deployment run failed");
+    assert_eq!(report.scenario_fingerprint, compiled.fingerprint);
+    assert_eq!(report.determinism_fingerprint(), baseline);
+}
+
+#[test]
+fn graph_scenario_matches_hand_built_deployment_over_tcp_both_codecs() {
+    let baseline = hand_built_fingerprint();
+    for codec in ["binary", "json"] {
+        let doc = load(
+            "two_center_graph.json",
+            &[set("deploy.transport", "tcp"), set("deploy.wire_codec", codec)],
+        );
+        let compiled = scenario::compile(&scenario::without_sweep(&doc)).unwrap();
+        assert_eq!(compiled.transport, RunTransport::Tcp);
+        let outcomes = compiled.run().expect("tcp scenario run failed");
+        assert_eq!(
+            outcomes[0].fingerprint, baseline,
+            "tcp/{codec} scenario run diverged from the in-proc hand-built deployment"
+        );
+        assert_eq!(outcomes[0].scenario_fingerprint, compiled.fingerprint);
+    }
+}
+
+#[test]
+fn wire_bound_scenario_runs_over_tcp() {
+    // The bundled TCP scenario (adaptive writer queues, 1 MiB frames)
+    // must run to completion and agree with its in-proc override.
+    let tcp = scenario::compile(&scenario::without_sweep(&load("wire_bound.json", &[])))
+        .unwrap();
+    assert_eq!(tcp.transport, RunTransport::Tcp);
+    let tcp_out = tcp.run().expect("wire-bound tcp run failed");
+    let inproc = scenario::compile(&scenario::without_sweep(&load(
+        "wire_bound.json",
+        &[set("deploy.transport", "inproc")],
+    )))
+    .unwrap();
+    let inproc_out = inproc.run().expect("wire-bound inproc run failed");
+    assert_eq!(tcp_out[0].fingerprint, inproc_out[0].fingerprint);
+    // Same file content except the transport knob: different fingerprints.
+    assert_ne!(tcp.fingerprint, inproc.fingerprint);
+}
+
+#[test]
+fn multi_context_scenario_runs_contexts_isolated() {
+    // Two identical grid contexts in one file: isolated contexts over
+    // one fleet must produce identical results.
+    let doc = Json::parse(
+        r#"{"name": "pair", "deploy": {"agents": 2, "placement": "rr"},
+            "contexts": [
+              {"name": "a", "grid": {"preset": "two-center"}},
+              {"name": "b", "grid": {"preset": "two-center"}}
+            ]}"#,
+    )
+    .unwrap();
+    let outcomes = scenario::compile(&doc).unwrap().run().expect("pair run failed");
+    assert_eq!(outcomes.len(), 2);
+    assert_eq!(outcomes[0].fingerprint, outcomes[1].fingerprint);
+    assert_eq!(outcomes[0].context, "a");
+    assert_eq!(outcomes[1].context, "b");
+}
