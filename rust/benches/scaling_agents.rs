@@ -1,17 +1,38 @@
 //! CLAIM-SCALE — paper §1/§3.1: "simulated systems of just a few thousands
 //! computing elements ... will quickly exhaust the computing resources in
 //! any reasonable sized computer workstation"; distribution is the paper's
-//! answer.
+//! answer, and a per-entity footprint small enough to host 10^5–10^6 LPs
+//! in one agent is the engine-core half of it.
 //!
-//! Runs a fixed large T0/T1 model on 1/2/4/8 agents and reports wall-clock,
-//! per-agent peak queue length (the memory-pressure proxy the paper
-//! discusses) and sync overhead — the distribution trade-off curve.
+//! Two sections:
+//!
+//! 1. **Agent scaling** — a fixed large T0/T1 model on 1/2/4/8 agents:
+//!    wall-clock, per-agent peak queue length (the memory-pressure proxy)
+//!    and sync overhead — the distribution trade-off curve.
+//! 2. **Queue scaling** — the `large_grid` preset at 10^4–10^6 LPs, heap
+//!    vs ladder event queue, measuring events/sec and bytes/LP.  Rows are
+//!    persisted to `BENCH_SCALE.json` at the repo root so the perf
+//!    trajectory is tracked across PRs; when a committed file already
+//!    exists the bench prints the events/sec delta against it.
 //!
 //! Run: `cargo bench --bench scaling_agents`
+//!
+//! Env knobs for the queue-scaling section:
+//! - `DSIM_SCALE_LPS`     comma-separated LP targets (default `10000,100000`;
+//!   the committed trajectory uses `10000,100000,1000000`)
+//! - `DSIM_SCALE_ITERS`   timed iterations per cell (default 1)
+//! - `DSIM_SCALE_OUT`     output path (default `../BENCH_SCALE.json`, i.e.
+//!   the repo root when run from `rust/`); set a scratch path in CI to
+//!   compare against the committed file without overwriting it
+//! - `DSIM_SCALE_ONLY=1`  skip the agent-scaling section
 
-use dsim::bench::{fmt_s, report_row, Bench};
+use std::path::Path;
+
+use dsim::bench::{fmt_s, peak_rss_bytes, report_row, Bench};
 use dsim::config::{PlacementPolicy, WorkloadConfig};
 use dsim::coordinator::Deployment;
+use dsim::engine::EventQueueKind;
+use dsim::util::json::Json;
 use dsim::workload;
 
 fn big_model() -> WorkloadConfig {
@@ -28,7 +49,7 @@ fn big_model() -> WorkloadConfig {
     }
 }
 
-fn main() {
+fn agent_scaling() {
     println!("# CLAIM-SCALE: fixed large model, varying agent count");
     for agents in [1usize, 2, 4, 8] {
         let mut events = 0u64;
@@ -65,4 +86,158 @@ fn main() {
     }
     println!("# shape check: per-agent max queue (state pressure) shrinks as agents grow;");
     println!("# sync overhead grows — the distribution trade-off the paper motivates");
+}
+
+/// `large_grid` sized so `2 * centers + 2 == lps`.
+fn grid_model(lps: usize) -> WorkloadConfig {
+    WorkloadConfig {
+        name: "large_grid".into(),
+        centers: (lps.saturating_sub(2)) / 2,
+        cpus_per_center: 4,
+        jobs_per_center: 2,
+        seed: 5,
+        ..WorkloadConfig::default()
+    }
+}
+
+struct ScaleRow {
+    lps: usize,
+    queue: EventQueueKind,
+    events: u64,
+    wall_s: f64,
+    events_per_sec: f64,
+    peak_rss_bytes: u64,
+    bytes_per_lp: f64,
+}
+
+fn queue_scaling() {
+    let lp_targets: Vec<usize> = std::env::var("DSIM_SCALE_LPS")
+        .unwrap_or_else(|_| "10000,100000".to_string())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let iters: usize = std::env::var("DSIM_SCALE_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let out_path = std::env::var("DSIM_SCALE_OUT")
+        .unwrap_or_else(|_| "../BENCH_SCALE.json".to_string());
+
+    println!("# CLAIM-SCALE: large_grid LP scaling, heap vs ladder event queue");
+    let mut rows: Vec<ScaleRow> = Vec::new();
+    // Increasing LP order: peak RSS is process-monotone, so each scale's
+    // reading is dominated by the largest model seen so far — its own.
+    for &lps in &lp_targets {
+        for queue in [EventQueueKind::Heap, EventQueueKind::Ladder] {
+            let mut events = 0u64;
+            let times = Bench::new(&format!("scale/lps{lps}/{queue}"))
+                .warmup(0)
+                .iters(iters)
+                .run(|| {
+                    let report = Deployment::in_process(1)
+                        .event_queue(queue)
+                        .placement(PlacementPolicy::RoundRobin)
+                        .run(workload::generate(&grid_model(lps)))
+                        .expect("run failed");
+                    events = report.events_processed;
+                });
+            let wall = Bench::summary(&times).map(|s| s.p50).unwrap_or(0.0);
+            let peak = peak_rss_bytes();
+            let row = ScaleRow {
+                lps,
+                queue,
+                events,
+                wall_s: wall,
+                events_per_sec: if wall > 0.0 { events as f64 / wall } else { 0.0 },
+                peak_rss_bytes: peak,
+                bytes_per_lp: peak as f64 / lps.max(1) as f64,
+            };
+            report_row(
+                "scaling_queue",
+                &[
+                    ("lps", row.lps.to_string()),
+                    ("queue", row.queue.to_string()),
+                    ("events", row.events.to_string()),
+                    ("wall_s", fmt_s(row.wall_s)),
+                    ("events_per_sec", format!("{:.0}", row.events_per_sec)),
+                    ("bytes_per_lp", format!("{:.0}", row.bytes_per_lp)),
+                ],
+            );
+            rows.push(row);
+        }
+    }
+
+    // Delta vs the committed trajectory, before overwriting anything: the
+    // CI regen step greps these lines for regressions.
+    print_deltas(&rows, Path::new("../BENCH_SCALE.json"));
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("scaling_agents/claim-scale")),
+        (
+            "note",
+            Json::str(
+                "large_grid preset, 1 in-process agent, workers=0; \
+                 events_per_sec = events / median wall; bytes_per_lp = \
+                 peak RSS (VmHWM) / LP count, measured in increasing LP \
+                 order",
+            ),
+        ),
+        (
+            "rows",
+            Json::arr(rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("lps", Json::num(r.lps as f64)),
+                    ("queue", Json::str(r.queue.to_string())),
+                    ("events", Json::num(r.events as f64)),
+                    ("wall_s", Json::num(r.wall_s)),
+                    ("events_per_sec", Json::num(r.events_per_sec.round())),
+                    ("peak_rss_bytes", Json::num(r.peak_rss_bytes as f64)),
+                    ("bytes_per_lp", Json::num(r.bytes_per_lp.round())),
+                ])
+            })),
+        ),
+    ]);
+    std::fs::write(&out_path, format!("{doc}\n")).expect("write scale rows");
+    println!("# queue-scaling rows written to {out_path}");
+}
+
+/// Print `SCALE-DELTA` lines comparing fresh rows against the committed
+/// `BENCH_SCALE.json` (matched on (lps, queue); silent when absent).
+fn print_deltas(rows: &[ScaleRow], committed: &Path) {
+    let Ok(text) = std::fs::read_to_string(committed) else {
+        return;
+    };
+    let Ok(doc) = Json::parse(&text) else {
+        println!("# committed {} is not valid JSON", committed.display());
+        return;
+    };
+    let Some(old_rows) = doc.get("rows").and_then(Json::as_arr) else {
+        return;
+    };
+    for r in rows {
+        let kind = r.queue.to_string();
+        let old = old_rows.iter().find(|o| {
+            o.get("lps").and_then(Json::as_u64) == Some(r.lps as u64)
+                && o.get("queue").and_then(Json::as_str) == Some(kind.as_str())
+        });
+        let Some(old_eps) = old.and_then(|o| o.get("events_per_sec")).and_then(Json::as_f64)
+        else {
+            continue;
+        };
+        if old_eps <= 0.0 {
+            continue;
+        }
+        let pct = (r.events_per_sec - old_eps) / old_eps * 100.0;
+        println!(
+            "SCALE-DELTA lps={} queue={} events_per_sec={:.0} committed={:.0} delta={:+.1}%",
+            r.lps, r.queue, r.events_per_sec, old_eps, pct
+        );
+    }
+}
+
+fn main() {
+    if std::env::var("DSIM_SCALE_ONLY").map(|v| v == "1") != Ok(true) {
+        agent_scaling();
+    }
+    queue_scaling();
 }

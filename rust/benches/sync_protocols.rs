@@ -500,6 +500,7 @@ fn tcp_budget_fleet(
         protocol: SyncProtocol::NullMessagesByDemand,
         workers: 0,
         exec: ExecMode::SafeWindow,
+        event_queue: Default::default(),
         wire_batch: true,
         budget,
     })

@@ -65,6 +65,22 @@ impl Bench {
     }
 }
 
+/// Peak resident set size of this process in bytes (Linux `VmHWM`; 0
+/// where `/proc` is unavailable).  Process-monotone: it never decreases,
+/// so callers comparing scales should measure in increasing-size order.
+pub fn peak_rss_bytes() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|kb| kb.parse::<u64>().ok())
+        })
+        .map(|kb| kb * 1024)
+        .unwrap_or(0)
+}
+
 /// Print a labeled data row in a stable, grep-able format:
 /// `ROW <table> | k1=v1 k2=v2 ...`
 pub fn report_row(table: &str, fields: &[(&str, String)]) {

@@ -12,7 +12,7 @@ use std::str::FromStr;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::adaptive::{WindowBudgetMode, WindowBudgetSpec};
-use crate::engine::{ExecMode, SyncProtocol};
+use crate::engine::{EventQueueKind, ExecMode, SyncProtocol};
 use crate::transport::{WireCodec, WriterQueue};
 use crate::util::json::Json;
 
@@ -75,6 +75,12 @@ pub struct DeployConfig {
     /// Scheduler granularity: safe-window batches ("window", default) or
     /// the per-timestamp baseline ("step").
     pub exec: ExecMode,
+    /// Pending-event store: the global binary `heap` (default, the
+    /// equivalence baseline) or the `ladder` calendar queue (O(1) amortized,
+    /// built for 10⁵–10⁶ LPs).  Results are bit-identical either way —
+    /// event keys are unique, so any correct priority queue pops in the
+    /// same order.
+    pub event_queue: EventQueueKind,
     /// Placement policy.
     pub placement: PlacementPolicy,
     /// Compute backend for scheduler/network math.
@@ -179,6 +185,7 @@ impl Default for DeployConfig {
             workers: 0,
             protocol: SyncProtocol::NullMessagesByDemand,
             exec: ExecMode::SafeWindow,
+            event_queue: EventQueueKind::default(),
             placement: PlacementPolicy::PerfValue,
             backend: BackendKind::Native,
             lookahead: None,
@@ -290,6 +297,9 @@ impl ScenarioConfig {
             exec: get_str(&d, "exec", "window")?
                 .parse()
                 .map_err(anyhow::Error::msg)?,
+            event_queue: get_str(&d, "event_queue", &dd.event_queue.to_string())?
+                .parse()
+                .map_err(anyhow::Error::msg)?,
             placement: get_str(&d, "placement", "perf")?
                 .parse()
                 .map_err(anyhow::Error::msg)?,
@@ -361,9 +371,9 @@ impl ScenarioConfig {
         if self.workload.wan_latency_s <= 0.0 {
             bail!("workload.wan_latency_s must be > 0 (it provides lookahead)");
         }
-        if !["t0t1", "farm", "two-center"].contains(&self.workload.name.as_str()) {
+        if !["t0t1", "farm", "two-center", "large_grid"].contains(&self.workload.name.as_str()) {
             bail!(
-                "unknown workload '{}' (t0t1|farm|two-center)",
+                "unknown workload '{}' (t0t1|farm|two-center|large_grid)",
                 self.workload.name
             );
         }
@@ -385,6 +395,10 @@ impl ScenarioConfig {
                     ("workers", Json::num(self.deploy.workers as f64)),
                     ("protocol", Json::str(self.deploy.protocol.to_string())),
                     ("exec", Json::str(self.deploy.exec.to_string())),
+                    (
+                        "event_queue",
+                        Json::str(self.deploy.event_queue.to_string()),
+                    ),
                     (
                         "placement",
                         Json::str(match self.deploy.placement {
@@ -525,6 +539,29 @@ mod tests {
         assert_eq!(back.deploy.window_budget, cfg.deploy.window_budget);
         assert_eq!(back.deploy.window_budget_min, cfg.deploy.window_budget_min);
         assert_eq!(back.deploy.window_budget_max, cfg.deploy.window_budget_max);
+        assert_eq!(back.deploy.event_queue, cfg.deploy.event_queue);
+    }
+
+    #[test]
+    fn event_queue_knob_parses_and_defaults() {
+        use crate::engine::EventQueueKind;
+        let cfg = ScenarioConfig::from_json_text("{}").unwrap();
+        assert_eq!(cfg.deploy.event_queue, EventQueueKind::Heap);
+        let cfg =
+            ScenarioConfig::from_json_text(r#"{"deploy": {"event_queue": "ladder"}}"#).unwrap();
+        assert_eq!(cfg.deploy.event_queue, EventQueueKind::Ladder);
+        assert!(
+            ScenarioConfig::from_json_text(r#"{"deploy": {"event_queue": "splay"}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn large_grid_workload_is_accepted() {
+        let cfg = ScenarioConfig::from_json_text(
+            r#"{"workload": {"name": "large_grid", "centers": 100}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.workload.name, "large_grid");
     }
 
     #[test]

@@ -17,7 +17,8 @@ use std::time::Duration;
 use super::adaptive::{BudgetTelemetry, WindowBudgetSpec, WindowController, WirePressure};
 use crate::components::{build_component, BuildCtx};
 use crate::engine::{
-    Engine, EngineStats, ExecMode, SimTime, StepOutcome, WindowOutcome, WorkerPool,
+    Engine, EngineStats, EventQueueKind, ExecMode, SimTime, StepOutcome, WindowOutcome,
+    WorkerPool,
 };
 use crate::model::Payload;
 use crate::monitor::{HostSample, HostSampler, PerfWeights};
@@ -60,6 +61,9 @@ pub struct AgentConfig {
     /// Scheduler granularity: safe-window batches (default) or the
     /// per-timestamp baseline.
     pub exec: ExecMode,
+    /// Future-event-set implementation (heap baseline or ladder queue);
+    /// results are identical either way, only the pop cost differs.
+    pub event_queue: EventQueueKind,
     /// Batch each outbox flush into one `WindowBatch` frame per peer plus
     /// one `WindowReport` frame to the leader (default).  `false` restores
     /// the legacy one-frame-per-message wire protocol — kept for mixed
@@ -442,7 +446,8 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
         let cfg = &self.cfg;
         let pool = self.pool.clone();
         self.contexts.entry(context).or_insert_with(|| {
-            let mut engine = Engine::new(cfg.me, context, peers, cfg.lookahead, cfg.protocol);
+            let mut engine = Engine::new(cfg.me, context, peers, cfg.lookahead, cfg.protocol)
+                .with_queue_kind(cfg.event_queue);
             if let Some(p) = pool {
                 engine = engine.with_workers(p);
             }
@@ -756,6 +761,9 @@ pub struct HostStatsView {
     pub send_block_us: u64,
     /// Adaptive writer-queue doubling steps (0 under a fixed policy).
     pub queue_grows: u64,
+    /// Adaptive writer-queue halving steps — depth decayed after the
+    /// occupancy high-water subsided (0 under a fixed policy).
+    pub queue_shrinks: u64,
     pub lvt_s: f64,
 }
 
@@ -800,6 +808,7 @@ impl HostStatsView {
             queue_depth: wire.queue_depth,
             send_block_us: wire.send_block_us,
             queue_grows: wire.queue_grows,
+            queue_shrinks: wire.queue_shrinks,
             lvt_s,
         }
     }
@@ -839,6 +848,7 @@ impl HostStatsView {
             ("queue_depth", Json::num(self.queue_depth as f64)),
             ("send_block_us", Json::num(self.send_block_us as f64)),
             ("queue_grows", Json::num(self.queue_grows as f64)),
+            ("queue_shrinks", Json::num(self.queue_shrinks as f64)),
             ("lvt", Json::num(self.lvt_s)),
         ])
     }
@@ -876,6 +886,7 @@ impl HostStatsView {
             queue_depth: opt("queue_depth"),
             send_block_us: opt("send_block_us"),
             queue_grows: opt("queue_grows"),
+            queue_shrinks: opt("queue_shrinks"),
             lvt_s: j.get("lvt")?.as_f64()?,
         })
     }
@@ -906,6 +917,7 @@ mod tests {
             protocol: SyncProtocol::NullMessagesByDemand,
             workers: 0,
             exec: ExecMode::SafeWindow,
+            event_queue: EventQueueKind::default(),
             wire_batch,
             budget: WindowBudgetSpec::default(),
         };

@@ -33,7 +33,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::config::{BackendKind, PlacementPolicy, ScenarioConfig};
-use crate::engine::{ExecMode, SyncProtocol};
+use crate::engine::{EventQueueKind, ExecMode, SyncProtocol};
 use crate::lookup::LookupService;
 use crate::metrics::ResultPool;
 use crate::model::Payload;
@@ -93,6 +93,10 @@ pub struct RunReport {
     /// Adaptive writer-queue depth doublings across the fleet (0 under
     /// the fixed `writer_queue_frames` policy and on in-proc runs).
     pub queue_grows: u64,
+    /// Adaptive writer-queue depth halvings across the fleet — the decay
+    /// side of the controller, taken when occupancy high-water subsides
+    /// (0 under the fixed policy and on in-proc runs).
+    pub queue_shrinks: u64,
     /// Content fingerprint of the scenario file that produced this run
     /// (see [`crate::scenario`]); empty for runs assembled in code.  With
     /// it, any result row is reproducible from its scenario file alone.
@@ -168,6 +172,8 @@ pub struct Deployment {
     workers: usize,
     protocol: SyncProtocol,
     exec: ExecMode,
+    /// Future-event-set implementation every agent engine uses.
+    event_queue: EventQueueKind,
     placement: PlacementPolicy,
     backend_kind: BackendKind,
     artifacts_dir: PathBuf,
@@ -199,6 +205,7 @@ impl Deployment {
             workers: 0,
             protocol: SyncProtocol::NullMessagesByDemand,
             exec: ExecMode::SafeWindow,
+            event_queue: EventQueueKind::default(),
             placement: PlacementPolicy::PerfValue,
             backend_kind: BackendKind::Native,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -220,6 +227,7 @@ impl Deployment {
             workers: d.workers,
             protocol: d.protocol,
             exec: d.exec,
+            event_queue: d.event_queue,
             placement: d.placement,
             backend_kind: d.backend,
             artifacts_dir: PathBuf::from(&d.artifacts_dir),
@@ -252,6 +260,15 @@ impl Deployment {
     /// per-timestamp baseline.
     pub fn exec_mode(mut self, m: ExecMode) -> Self {
         self.exec = m;
+        self
+    }
+
+    /// Future-event-set implementation: the `BinaryHeap` baseline
+    /// (default) or the ladder queue.  Virtual-time results are identical
+    /// either way — event keys are unique, so any correct priority queue
+    /// pops the same order (the equivalence suites assert it).
+    pub fn event_queue(mut self, k: EventQueueKind) -> Self {
+        self.event_queue = k;
         self
     }
 
@@ -366,6 +383,7 @@ impl Deployment {
                 protocol: self.protocol,
                 workers: self.workers,
                 exec: self.exec,
+                event_queue: self.event_queue,
                 wire_batch: self.wire_batch,
                 budget: self.budget,
             };
@@ -648,6 +666,7 @@ impl Deployment {
             let mut queue_highwater = 0;
             let mut send_block_us = 0;
             let mut queue_grows = 0;
+            let mut queue_shrinks = 0;
             let mut per_agent = Vec::new();
             for (a, s) in &st.final_stats {
                 events += s.events_processed;
@@ -671,6 +690,7 @@ impl Deployment {
                 queue_highwater = queue_highwater.max(s.queue_highwater);
                 send_block_us += s.send_block_us;
                 queue_grows += s.queue_grows;
+                queue_shrinks += s.queue_shrinks;
                 per_agent.push((*a, *s));
             }
             if budget_min == u64::MAX {
@@ -701,6 +721,7 @@ impl Deployment {
                 queue_highwater,
                 send_block_us,
                 queue_grows,
+                queue_shrinks,
                 scenario_fingerprint: self.scenario_fp.clone(),
                 pool: st.pool,
                 per_agent,

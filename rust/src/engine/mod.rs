@@ -47,7 +47,7 @@ mod queues;
 mod sync;
 mod workers;
 
-pub use queues::{EventQueues, LvtTable};
+pub use queues::{EventQueueKind, EventQueues, LvtTable};
 pub use sync::{plan_window, ExecMode, SyncProtocol, WindowPlan};
 pub use workers::{BatchChannel, BatchSender, LpState, WorkerPool};
 
@@ -340,9 +340,10 @@ struct LpSlot<P> {
     events_handled: u64,
 }
 
-/// One finished handler-job: the LP, its buffered actions, and its slot to
-/// reinstall.  What flows back over the window's [`BatchChannel`].
-type LpJob<P> = (LpId, LpApi<P>, LpSlot<P>);
+/// One finished handler-job: the LP, its buffered actions, its slot to
+/// reinstall, and the drained event buffer to recycle.  What flows back
+/// over the window's [`BatchChannel`].
+type LpJob<P> = (LpId, LpApi<P>, LpSlot<P>, Vec<Event<P>>);
 
 /// The per-(agent, context) simulation engine.  See module docs.
 pub struct Engine<P> {
@@ -353,7 +354,13 @@ pub struct Engine<P> {
     lvt_table: LvtTable,
     protocol: SyncProtocol,
     lookahead: f64,
-    lps: HashMap<LpId, LpSlot<P>>,
+    /// LP registry: slab storage indexed by dense handles.  `lp_index` maps
+    /// the global LP id to its slot once at install time; the dispatch hot
+    /// path then moves slots in and out of `lp_slots` with a plain
+    /// `Option::take`/put-back instead of `HashMap` remove/insert churn.
+    lp_index: HashMap<LpId, usize>,
+    lp_slots: Vec<Option<LpSlot<P>>>,
+    lp_live: usize,
     /// Where each known LP lives; kept in sync with the lookup service by
     /// the agent layer so the engine can route locally vs remotely.
     directory: BTreeMap<LpId, AgentId>,
@@ -372,7 +379,19 @@ pub struct Engine<P> {
     outstanding_demands: BTreeMap<AgentId, SimTime>,
     stats: EngineStats,
     workers: Option<std::sync::Arc<WorkerPool>>,
+    /// Reusable scratch buffers for the dispatch hot path (see
+    /// [`Engine::execute_batch`]): the popped batch, the per-LP grouping
+    /// list + its id index, and a pool of recycled event buffers — no
+    /// per-window allocations in steady state, in heap and ladder mode
+    /// alike.
+    scratch_batch: Vec<Event<P>>,
+    scratch_groups: Vec<(LpId, Vec<Event<P>>)>,
+    scratch_group_index: HashMap<LpId, usize>,
+    free_event_bufs: Vec<Vec<Event<P>>>,
 }
+
+/// Cap on recycled event buffers retained between batches.
+const FREE_BUF_POOL_CAP: usize = 4096;
 
 impl<P: Clone + Send + 'static> Engine<P> {
     /// Create an engine for `agent` within `context`, given the full peer
@@ -394,7 +413,9 @@ impl<P: Clone + Send + 'static> Engine<P> {
             lvt_table: LvtTable::new(others.iter().copied()),
             protocol,
             lookahead,
-            lps: HashMap::new(),
+            lp_index: HashMap::new(),
+            lp_slots: Vec::new(),
+            lp_live: 0,
             directory: BTreeMap::new(),
             seq: 0,
             outbox_events: Vec::new(),
@@ -405,6 +426,10 @@ impl<P: Clone + Send + 'static> Engine<P> {
             outstanding_demands: BTreeMap::new(),
             stats: EngineStats::default(),
             workers: None,
+            scratch_batch: Vec::new(),
+            scratch_groups: Vec::new(),
+            scratch_group_index: HashMap::new(),
+            free_event_bufs: Vec::new(),
         }
     }
 
@@ -412,6 +437,18 @@ impl<P: Clone + Send + 'static> Engine<P> {
     /// execution.
     pub fn with_workers(mut self, pool: std::sync::Arc<WorkerPool>) -> Self {
         self.workers = Some(pool);
+        self
+    }
+
+    /// Select the pending-event store (`event_queue` config knob).  Must be
+    /// called before any event is scheduled; the per-source counters and
+    /// peer set carry over, the (empty) store is swapped.
+    pub fn with_queue_kind(mut self, kind: EventQueueKind) -> Self {
+        assert!(
+            self.queues.is_empty(),
+            "with_queue_kind must precede scheduling"
+        );
+        self.queues = EventQueues::with_kind(kind, self.lvt_table.peers().into_iter());
         self
     }
 
@@ -442,7 +479,7 @@ impl<P: Clone + Send + 'static> Engine<P> {
     /// Number of LPs currently hosted (the paper's agent-occupancy input to
     /// the performance value).
     pub fn lp_count(&self) -> usize {
-        self.lps.len()
+        self.lp_live
     }
 
     /// True when no local or remote events are queued.
@@ -452,21 +489,34 @@ impl<P: Clone + Send + 'static> Engine<P> {
 
     /// Lifecycle state of a hosted LP (None if not hosted here).
     pub fn lp_state(&self, lp: LpId) -> Option<LpState> {
-        self.lps.get(&lp).map(|s| s.state)
+        self.lp_index
+            .get(&lp)
+            .and_then(|i| self.lp_slots[*i].as_ref())
+            .map(|s| s.state)
     }
 
     // ------------------------------------------------------------- LP admin
 
     /// Install an LP on this engine and record it in the routing directory.
     pub fn add_lp(&mut self, id: LpId, lp: Box<dyn LogicalProcess<P>>) {
-        self.lps.insert(
-            id,
-            LpSlot {
-                lp,
-                state: LpState::Created,
-                events_handled: 0,
-            },
-        );
+        let slot = LpSlot {
+            lp,
+            state: LpState::Created,
+            events_handled: 0,
+        };
+        match self.lp_index.get(&id) {
+            Some(i) => {
+                // Re-install over an existing handle (test convenience).
+                if self.lp_slots[*i].replace(slot).is_none() {
+                    self.lp_live += 1;
+                }
+            }
+            None => {
+                self.lp_index.insert(id, self.lp_slots.len());
+                self.lp_slots.push(Some(slot));
+                self.lp_live += 1;
+            }
+        }
         self.directory.insert(id, self.agent);
     }
 
@@ -657,18 +707,18 @@ impl<P: Clone + Send + 'static> Engine<P> {
                 let chan = self.workers.as_ref().map(|_| BatchChannel::new());
                 let mut events = 0usize;
                 let mut timestamps = 0usize;
+                let mut batch = std::mem::take(&mut self.scratch_batch);
                 while timestamps < max_timestamps {
-                    let Some((ts, batch)) = self.queues.pop_window(horizon) else {
+                    batch.clear();
+                    let Some(ts) = self.queues.pop_window_into(horizon, &mut batch) else {
                         break;
                     };
                     self.lvt = ts;
                     events += batch.len();
                     timestamps += 1;
-                    let buffers = self.execute_batch(ts, batch, chan.as_ref());
-                    for (lp_id, api) in buffers {
-                        self.apply_buffer(lp_id, api, ts);
-                    }
+                    self.execute_batch(ts, &mut batch, chan.as_ref());
                 }
+                self.scratch_batch = batch;
                 self.stats.events_processed += events as u64;
                 self.stats.windows += 1;
                 self.stats.window_timestamps += timestamps as u64;
@@ -724,15 +774,15 @@ impl<P: Clone + Send + 'static> Engine<P> {
 
         // Safe: pop every event at exactly this timestamp (the paper's
         // "current simulation step"), grouped per destination LP.
-        let batch = self.queues.pop_at(ts);
+        let mut batch = std::mem::take(&mut self.scratch_batch);
+        batch.clear();
+        self.queues.pop_at_into(ts, &mut batch);
         debug_assert!(!batch.is_empty());
         self.lvt = ts;
         let n = batch.len();
 
-        let buffers = self.execute_batch(ts, batch, None);
-        for (lp_id, api) in buffers {
-            self.apply_buffer(lp_id, api, ts);
-        }
+        self.execute_batch(ts, &mut batch, None);
+        self.scratch_batch = batch;
         self.stats.events_processed += n as u64;
 
         // Eager CMB baseline: announce per-peer bounds after each step —
@@ -792,26 +842,48 @@ impl<P: Clone + Send + 'static> Engine<P> {
             .collect()
     }
 
-    /// Run the batch's LP handlers, in parallel when a pool is attached.
-    /// Slots are moved out of the map for the duration of the handlers and
-    /// reinstalled afterwards (keeps the code safe without aliasing tricks).
+    /// Run the batch's LP handlers, in parallel when a pool is attached,
+    /// then reinstall the slots and apply each LP's buffered actions in
+    /// ascending-LP-id order (the same order the former `BTreeMap`
+    /// grouping produced, so tie sequences — and hence fingerprints — are
+    /// unchanged).  Slots are moved out of the slab for the duration of
+    /// the handlers and put back afterwards (keeps the code safe without
+    /// aliasing tricks).
+    ///
+    /// Drains `batch` (the caller's reusable scratch buffer); grouping
+    /// runs over reusable scratch structures and recycled event buffers,
+    /// so the steady-state dispatch path allocates nothing.
     ///
     /// `chan` is the window's shared completion channel; `None` (the
     /// per-timestamp path) falls back to a batch-local channel.
     fn execute_batch(
         &mut self,
         ts: SimTime,
-        batch: Vec<Event<P>>,
+        batch: &mut Vec<Event<P>>,
         chan: Option<&BatchChannel<LpJob<P>>>,
-    ) -> Vec<(LpId, LpApi<P>)> {
-        let mut per_lp: BTreeMap<LpId, Vec<Event<P>>> = BTreeMap::new();
-        for ev in batch {
-            per_lp.entry(ev.dst_lp).or_default().push(ev);
+    ) {
+        // Group per destination LP: first-seen order, then sorted by id.
+        let mut groups = std::mem::take(&mut self.scratch_groups);
+        let mut index = std::mem::take(&mut self.scratch_group_index);
+        debug_assert!(groups.is_empty());
+        index.clear();
+        for ev in batch.drain(..) {
+            let gi = *index.entry(ev.dst_lp).or_insert_with(|| {
+                let buf = self.free_event_bufs.pop().unwrap_or_default();
+                groups.push((ev.dst_lp, buf));
+                groups.len() - 1
+            });
+            groups[gi].1.push(ev);
         }
+        groups.sort_unstable_by_key(|(id, _)| *id);
 
-        let mut jobs: Vec<(LpId, Vec<Event<P>>, LpSlot<P>)> = Vec::new();
-        for (lp_id, evs) in per_lp {
-            match self.lps.remove(&lp_id) {
+        let mut jobs: Vec<(LpId, Vec<Event<P>>, LpSlot<P>)> = Vec::with_capacity(groups.len());
+        for (lp_id, evs) in groups.drain(..) {
+            let slot = self
+                .lp_index
+                .get(&lp_id)
+                .and_then(|i| self.lp_slots[*i].take());
+            match slot {
                 Some(mut slot) => {
                     slot.state = LpState::Ready;
                     jobs.push((lp_id, evs, slot));
@@ -825,11 +897,14 @@ impl<P: Clone + Send + 'static> Engine<P> {
                         evs.len(),
                         lp_id
                     );
+                    self.recycle_event_buf(evs);
                 }
             }
         }
+        self.scratch_groups = groups;
+        self.scratch_group_index = index;
 
-        let run_one = move |lp_id: LpId, evs: Vec<Event<P>>, mut slot: LpSlot<P>| {
+        let run_one = move |lp_id: LpId, mut evs: Vec<Event<P>>, mut slot: LpSlot<P>| {
             slot.state = LpState::Running;
             let mut api = LpApi::new(lp_id, ts);
             for ev in &evs {
@@ -841,7 +916,8 @@ impl<P: Clone + Send + 'static> Engine<P> {
             } else {
                 LpState::Waiting
             };
-            (lp_id, api, slot)
+            evs.clear();
+            (lp_id, api, slot, evs)
         };
 
         let mut out: Vec<LpJob<P>> = match (&self.workers, jobs.len()) {
@@ -863,7 +939,7 @@ impl<P: Clone + Send + 'static> Engine<P> {
                 }
                 let mut v = chan.collect(n_jobs);
                 // Deterministic order regardless of worker interleaving.
-                v.sort_by_key(|(id, _, _)| *id);
+                v.sort_by_key(|(id, _, _, _)| *id);
                 v
             }
             _ => jobs
@@ -872,18 +948,27 @@ impl<P: Clone + Send + 'static> Engine<P> {
                 .collect(),
         };
 
-        let mut buffers = Vec::with_capacity(out.len());
-        for (lp_id, api, slot) in out.drain(..) {
+        for (lp_id, api, slot, evs) in out.drain(..) {
+            self.recycle_event_buf(evs);
             if slot.state == LpState::Finished {
                 self.stats.lps_finished += 1;
+                self.lp_live -= 1;
                 self.directory.remove(&lp_id);
-                // Slot dropped: worker thread returned to the pool's queue.
+                // Slot stays vacated: the LP no longer exists here.
             } else {
-                self.lps.insert(lp_id, slot);
+                let i = self.lp_index[&lp_id];
+                self.lp_slots[i] = Some(slot);
             }
-            buffers.push((lp_id, api));
+            self.apply_buffer(lp_id, api, ts);
         }
-        buffers
+    }
+
+    /// Return a drained per-LP event buffer to the recycle pool.
+    fn recycle_event_buf(&mut self, mut buf: Vec<Event<P>>) {
+        if self.free_event_bufs.len() < FREE_BUF_POOL_CAP {
+            buf.clear();
+            self.free_event_bufs.push(buf);
+        }
     }
 
     /// Apply one LP's buffered actions: route emitted events, forward

@@ -6,14 +6,29 @@
 //! is used in order to keep track of current dependencies between the values
 //! of LVT on various running nodes."
 //!
-//! Implementation note: we keep one min-heap for *all* pending events (the
-//! per-source split of fig. 6 survives as per-source counters).  An agent
-//! hosting many LPs emits events whose timestamps are **not** monotone per
-//! destination channel (two LPs handled in one step may schedule with very
-//! different delays), so — unlike classic per-link CMB — a queued event's
-//! timestamp is *not* a promise of channel silence below it.  All safety
-//! information therefore lives in the [`LvtTable`], which is fed only by
-//! explicit peer promises (`LvtAnnounce` / request piggybacks).
+//! Implementation note: we keep one pending-event store for *all* events
+//! (the per-source split of fig. 6 survives as per-source counters).  An
+//! agent hosting many LPs emits events whose timestamps are **not** monotone
+//! per destination channel (two LPs handled in one step may schedule with
+//! very different delays), so — unlike classic per-link CMB — a queued
+//! event's timestamp is *not* a promise of channel silence below it.  All
+//! safety information therefore lives in the [`LvtTable`], which is fed only
+//! by explicit peer promises (`LvtAnnounce` / request piggybacks).
+//!
+//! Two interchangeable stores sit behind the same API:
+//!
+//! * [`EventQueueKind::Heap`] — the original global `BinaryHeap`.  O(log n)
+//!   per operation; the equivalence baseline.
+//! * [`EventQueueKind::Ladder`] — a ladder/calendar queue: a small sorted
+//!   `bottom` working set, a stack of bucket rungs spilled lazily from an
+//!   unsorted far-future `top`.  Pushes are O(1) amortized (append to `top`
+//!   or a bucket), pops amortize the sort over whole buckets, so the cost
+//!   per event stays flat as the pending set grows to 10⁵–10⁶ events.
+//!
+//! Event keys `(time, (agent, seq))` are unique, so *any* correct priority
+//! queue yields the same pop order — which is what lets `event_queue: ladder`
+//! reproduce every fingerprint bit-identically (see the property test below
+//! and the `window_equivalence` / `adaptive_equivalence` matrices).
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap};
@@ -21,8 +36,38 @@ use std::collections::{BTreeMap, BinaryHeap};
 use super::{Event, SimTime};
 use crate::util::AgentId;
 
-/// Key ordering for the heap.
+/// Key ordering for the store.
 type Key = (SimTime, (u64, u64));
+
+/// Which pending-event store an engine uses (`event_queue` config knob).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EventQueueKind {
+    /// Global binary min-heap (baseline).
+    #[default]
+    Heap,
+    /// Ladder queue: lazily-spilled bucket rungs over a sorted bottom.
+    Ladder,
+}
+
+impl std::str::FromStr for EventQueueKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "heap" => Ok(EventQueueKind::Heap),
+            "ladder" => Ok(EventQueueKind::Ladder),
+            other => Err(format!("unknown event_queue '{other}' (heap|ladder)")),
+        }
+    }
+}
+
+impl std::fmt::Display for EventQueueKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            EventQueueKind::Heap => "heap",
+            EventQueueKind::Ladder => "ladder",
+        })
+    }
+}
 
 struct HeapItem<P>(Event<P>);
 
@@ -43,31 +88,384 @@ impl<P> Ord for HeapItem<P> {
     }
 }
 
-/// Pending-event store: one min-heap + per-source statistics.
+/// Buckets per rung.
+const RUNG_BUCKETS: usize = 64;
+/// A promoted bucket larger than this spawns a finer rung instead of being
+/// sorted wholesale (unless it cannot be split further).
+const SPAWN_THRESHOLD: usize = 64;
+/// Rung-stack depth cap; beyond it oversized buckets are just sorted.
+const MAX_RUNGS: usize = 12;
+
+/// One rung: `RUNG_BUCKETS` equal-width buckets covering `[start, end)`.
+/// `cur` is the first unconsumed bucket; consumed buckets have left the
+/// rung wholesale (promoted into `bottom` or respread into a child rung).
+struct Rung<P> {
+    start: f64,
+    width: f64,
+    end: f64,
+    cur: usize,
+    buckets: Vec<Vec<Event<P>>>,
+    /// Cached min key per bucket (None = empty) and over the whole rung:
+    /// keeps `min_key` O(1) without touching bucket contents.
+    mins: Vec<Option<Key>>,
+    rung_min: Option<Key>,
+    count: usize,
+}
+
+impl<P> Rung<P> {
+    fn new(start: f64, end: f64) -> Self {
+        Rung {
+            start,
+            width: ((end - start) / RUNG_BUCKETS as f64).max(f64::MIN_POSITIVE),
+            end,
+            cur: 0,
+            buckets: (0..RUNG_BUCKETS).map(|_| Vec::new()).collect(),
+            mins: vec![None; RUNG_BUCKETS],
+            rung_min: None,
+            count: 0,
+        }
+    }
+
+    /// Bucket index for a timestamp.  Clamped into the unconsumed range:
+    /// float-boundary stragglers land in the current bucket, which is safe
+    /// because promotion sorts whole buckets by full key (and the pop path
+    /// merges across structures whenever caches say order could invert).
+    fn index_of(&self, t: f64) -> usize {
+        let raw = ((t - self.start) / self.width).floor();
+        let idx = if raw.is_finite() && raw >= 0.0 {
+            (raw as usize).min(RUNG_BUCKETS - 1)
+        } else if raw < 0.0 {
+            0
+        } else {
+            RUNG_BUCKETS - 1
+        };
+        idx.max(self.cur)
+    }
+
+    fn push(&mut self, ev: Event<P>) {
+        let key = ev.key();
+        let idx = self.index_of(ev.time.0);
+        if self.mins[idx].map_or(true, |m| key < m) {
+            self.mins[idx] = Some(key);
+        }
+        if self.rung_min.map_or(true, |m| key < m) {
+            self.rung_min = Some(key);
+        }
+        self.buckets[idx].push(ev);
+        self.count += 1;
+    }
+
+    /// Remove and return the first non-empty bucket, advancing `cur`.
+    /// `None` means the rung is exhausted.
+    fn take_next_bucket(&mut self) -> Option<Vec<Event<P>>> {
+        while self.cur < RUNG_BUCKETS {
+            let i = self.cur;
+            self.cur += 1;
+            if !self.buckets[i].is_empty() {
+                let b = std::mem::take(&mut self.buckets[i]);
+                self.mins[i] = None;
+                self.count -= b.len();
+                self.rung_min = self.mins[self.cur..].iter().flatten().copied().min();
+                return Some(b);
+            }
+        }
+        None
+    }
+}
+
+/// The ladder store.  Invariants:
+///
+/// * `bottom` is sorted descending by key — the min pops from the end.
+/// * `upper_min` caches the smallest key anywhere in `rungs` + `top`.
+/// * `ensure_head` promotes buckets until `bottom`'s tail is the global
+///   minimum, so pops never need to look past `bottom`.
+struct Ladder<P> {
+    bottom: Vec<Event<P>>,
+    /// Stack of rungs; `last()` is the finest / lowest-range rung.
+    rungs: Vec<Rung<P>>,
+    top: Vec<Event<P>>,
+    top_min: Option<Key>,
+    upper_min: Option<Key>,
+    count: usize,
+}
+
+impl<P> Ladder<P> {
+    fn new() -> Self {
+        Ladder {
+            bottom: Vec::new(),
+            rungs: Vec::new(),
+            top: Vec::new(),
+            top_min: None,
+            upper_min: None,
+            count: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.count
+    }
+
+    fn min_key(&self) -> Option<Key> {
+        let b = self.bottom.last().map(|e| e.key());
+        match (b, self.upper_min) {
+            (Some(a), Some(u)) => Some(a.min(u)),
+            (a, u) => a.or(u),
+        }
+    }
+
+    fn push(&mut self, ev: Event<P>) {
+        self.count += 1;
+        let key = ev.key();
+        // Bottom is authoritative for its own time range: equal-or-lower
+        // timestamps must merge into it so tie order survives.
+        if self.bottom.first().map_or(false, |hi| ev.time <= hi.time) {
+            let pos = self
+                .bottom
+                .partition_point(|e| e.key() > key);
+            self.bottom.insert(pos, ev);
+            return;
+        }
+        if self.upper_min.map_or(true, |m| key < m) {
+            self.upper_min = Some(key);
+        }
+        // Lowest rung first; each rung owns everything below its `end`
+        // that the finer rungs (and bottom) did not claim.
+        for r in self.rungs.iter_mut().rev() {
+            if ev.time.0 < r.end {
+                r.push(ev);
+                return;
+            }
+        }
+        if self.top_min.map_or(true, |m| key < m) {
+            self.top_min = Some(key);
+        }
+        self.top.push(ev);
+    }
+
+    fn recompute_upper_min(&mut self) {
+        self.upper_min = self
+            .rungs
+            .iter()
+            .filter_map(|r| r.rung_min)
+            .chain(self.top_min)
+            .min();
+    }
+
+    /// Merge a batch (any order) into the sorted-descending `bottom`.
+    fn merge_into_bottom(&mut self, mut batch: Vec<Event<P>>) {
+        batch.sort_unstable_by(|a, b| b.key().cmp(&a.key()));
+        if self.bottom.is_empty() {
+            self.bottom = batch;
+            return;
+        }
+        // Rare path (float-boundary stragglers): classic two-way merge.
+        let old = std::mem::replace(
+            &mut self.bottom,
+            Vec::with_capacity(batch.len() + self.bottom.len()),
+        );
+        let (mut a, mut b) = (old.into_iter().peekable(), batch.into_iter().peekable());
+        loop {
+            match (a.peek(), b.peek()) {
+                (Some(x), Some(y)) => {
+                    if x.key() > y.key() {
+                        self.bottom.push(a.next().unwrap());
+                    } else {
+                        self.bottom.push(b.next().unwrap());
+                    }
+                }
+                (Some(_), None) => self.bottom.push(a.next().unwrap()),
+                (None, Some(_)) => self.bottom.push(b.next().unwrap()),
+                (None, None) => break,
+            }
+        }
+    }
+
+    /// One promotion step: move the next bucket (or `top`) downward.
+    /// Returns `false` when there was nothing above to promote.
+    fn promote_once(&mut self) -> bool {
+        if let Some(rung) = self.rungs.last_mut() {
+            match rung.take_next_bucket() {
+                None => {
+                    self.rungs.pop();
+                    self.recompute_upper_min();
+                }
+                Some(bucket) => {
+                    let (lo, hi) = time_span(&bucket);
+                    if bucket.len() > SPAWN_THRESHOLD
+                        && hi > lo
+                        && self.rungs.len() < MAX_RUNGS
+                    {
+                        // Respread into a finer child rung, bounded by the
+                        // parent bucket's remaining-coverage boundary.
+                        let mut child = Rung::new(lo, hi_boundary(lo, hi));
+                        for ev in bucket {
+                            child.push(ev);
+                        }
+                        self.rungs.push(child);
+                    } else {
+                        self.merge_into_bottom(bucket);
+                    }
+                    self.recompute_upper_min();
+                }
+            }
+            true
+        } else if !self.top.is_empty() {
+            let spill = std::mem::take(&mut self.top);
+            self.top_min = None;
+            let (lo, hi) = time_span(&spill);
+            if spill.len() > SPAWN_THRESHOLD && hi > lo {
+                let mut rung = Rung::new(lo, hi_boundary(lo, hi));
+                for ev in spill {
+                    rung.push(ev);
+                }
+                self.rungs.push(rung);
+            } else {
+                self.merge_into_bottom(spill);
+            }
+            self.recompute_upper_min();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Promote until `bottom.last()` is the global minimum (or the ladder
+    /// is empty above).  Terminates: every step strictly shrinks the upper
+    /// structure (bucket taken, rung popped, or top spilled).
+    fn ensure_head(&mut self) {
+        loop {
+            let upper = self.upper_min;
+            match (self.bottom.last(), upper) {
+                (_, None) => return,
+                (Some(b), Some(u)) if b.key() <= u => return,
+                _ => {
+                    if !self.promote_once() {
+                        debug_assert!(false, "stale upper_min cache with empty upper ladder");
+                        self.upper_min = None;
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Append every event at exactly `ts` to `out`, in key order.
+    fn pop_at_into(&mut self, ts: SimTime, out: &mut Vec<Event<P>>) {
+        loop {
+            self.ensure_head();
+            match self.bottom.last() {
+                Some(e) if e.time == ts => {
+                    out.push(self.bottom.pop().unwrap());
+                    self.count -= 1;
+                }
+                _ => return,
+            }
+        }
+    }
+}
+
+fn time_span<P>(batch: &[Event<P>]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for e in batch {
+        lo = lo.min(e.time.0);
+        hi = hi.max(e.time.0);
+    }
+    (lo, hi)
+}
+
+/// Exclusive-ish upper boundary for a new rung: must be finite arithmetic
+/// even when timestamps touch infinity (clamped by `index_of` anyway).
+fn hi_boundary(lo: f64, hi: f64) -> f64 {
+    if hi.is_finite() {
+        hi
+    } else {
+        lo.max(0.0) * 2.0 + 1.0
+    }
+}
+
+enum Store<P> {
+    Heap(BinaryHeap<Reverse<HeapItem<P>>>),
+    Ladder(Ladder<P>),
+}
+
+impl<P> Store<P> {
+    fn len(&self) -> usize {
+        match self {
+            Store::Heap(h) => h.len(),
+            Store::Ladder(l) => l.len(),
+        }
+    }
+
+    fn push(&mut self, ev: Event<P>) {
+        match self {
+            Store::Heap(h) => h.push(Reverse(HeapItem(ev))),
+            Store::Ladder(l) => l.push(ev),
+        }
+    }
+
+    fn min_key(&self) -> Option<Key> {
+        match self {
+            Store::Heap(h) => h.peek().map(|Reverse(i)| i.0.key()),
+            Store::Ladder(l) => l.min_key(),
+        }
+    }
+
+    fn pop_at_into(&mut self, ts: SimTime, out: &mut Vec<Event<P>>) {
+        match self {
+            Store::Heap(h) => {
+                while let Some(Reverse(i)) = h.peek() {
+                    if i.0.time == ts {
+                        out.push(h.pop().unwrap().0 .0);
+                    } else {
+                        break;
+                    }
+                }
+            }
+            Store::Ladder(l) => l.pop_at_into(ts, out),
+        }
+    }
+}
+
+/// Pending-event store: heap or ladder + per-source statistics.
 pub struct EventQueues<P> {
-    heap: BinaryHeap<Reverse<HeapItem<P>>>,
+    store: Store<P>,
     /// Events received per source agent (fig. 6's per-channel view).
     per_source: BTreeMap<AgentId, u64>,
 }
 
 impl<P> EventQueues<P> {
     pub fn new(peers: impl Iterator<Item = AgentId>) -> Self {
+        Self::with_kind(EventQueueKind::Heap, peers)
+    }
+
+    pub fn with_kind(kind: EventQueueKind, peers: impl Iterator<Item = AgentId>) -> Self {
         EventQueues {
-            heap: BinaryHeap::new(),
+            store: match kind {
+                EventQueueKind::Heap => Store::Heap(BinaryHeap::new()),
+                EventQueueKind::Ladder => Store::Ladder(Ladder::new()),
+            },
             per_source: peers.map(|p| (p, 0)).collect(),
         }
     }
 
+    pub fn kind(&self) -> EventQueueKind {
+        match self.store {
+            Store::Heap(_) => EventQueueKind::Heap,
+            Store::Ladder(_) => EventQueueKind::Ladder,
+        }
+    }
+
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.store.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.store.len() == 0
     }
 
     pub fn push_local(&mut self, ev: Event<P>) {
-        self.heap.push(Reverse(HeapItem(ev)));
+        self.store.push(ev);
     }
 
     /// Accept an event from a peer agent.  Returns `false` — and leaves the
@@ -81,7 +479,7 @@ impl<P> EventQueues<P> {
         match self.per_source.get_mut(&ev.src_agent) {
             Some(n) => {
                 *n += 1;
-                self.heap.push(Reverse(HeapItem(ev)));
+                self.store.push(ev);
                 true
             }
             None => false,
@@ -95,29 +493,31 @@ impl<P> EventQueues<P> {
 
     /// The smallest (time, tie) key across all pending events.
     pub fn min_key(&self) -> Option<Key> {
-        self.heap.peek().map(|Reverse(h)| h.0.key())
+        self.store.min_key()
     }
 
     /// Pop every event with timestamp exactly `ts` (one simulation step),
-    /// in deterministic key order.
+    /// appending to `out` in deterministic key order.  The scratch-buffer
+    /// form of [`EventQueues::pop_at`]: the engine reuses one `Vec` across
+    /// windows instead of allocating per batch.
+    pub fn pop_at_into(&mut self, ts: SimTime, out: &mut Vec<Event<P>>) {
+        let start = out.len();
+        self.store.pop_at_into(ts, out);
+        // Pops are already key-ordered; keep the check as a guard for
+        // equal keys (cannot happen — keys are unique — but cheap).
+        debug_assert!(out[start..].windows(2).all(|w| w[0].key() <= w[1].key()));
+    }
+
+    /// Allocating convenience form of [`EventQueues::pop_at_into`].
     pub fn pop_at(&mut self, ts: SimTime) -> Vec<Event<P>> {
         let mut out = Vec::new();
-        while let Some(Reverse(h)) = self.heap.peek() {
-            if h.0.time == ts {
-                out.push(self.heap.pop().unwrap().0 .0);
-            } else {
-                break;
-            }
-        }
-        // Heap pops are already key-ordered; keep the sort as a guard for
-        // equal keys (cannot happen — keys are unique — but cheap).
-        debug_assert!(out.windows(2).all(|w| w[0].key() <= w[1].key()));
+        self.pop_at_into(ts, &mut out);
         out
     }
 
-    /// Pop the complete lowest-timestamp batch, provided that timestamp
-    /// lies within `horizon` (inclusive — an event at exactly the horizon
-    /// is safe, matching the per-peer `bound < ts` blocking rule).
+    /// Pop the complete lowest-timestamp batch into `out`, provided that
+    /// timestamp lies within `horizon` (inclusive — an event at exactly the
+    /// horizon is safe, matching the per-peer `bound < ts` blocking rule).
     ///
     /// This is the safe-window drain primitive: the engine calls it in a
     /// loop, executing each returned batch before the next call, so events
@@ -126,12 +526,24 @@ impl<P> EventQueues<P> {
     /// therefore identical to per-timestamp stepping: batches come out in
     /// strictly increasing timestamp order, each batch internally in
     /// deterministic `(time, tie)` order.
-    pub fn pop_window(&mut self, horizon: SimTime) -> Option<(SimTime, Vec<Event<P>>)> {
+    pub fn pop_window_into(
+        &mut self,
+        horizon: SimTime,
+        out: &mut Vec<Event<P>>,
+    ) -> Option<SimTime> {
         let (ts, _) = self.min_key()?;
         if ts > horizon {
             return None;
         }
-        Some((ts, self.pop_at(ts)))
+        self.pop_at_into(ts, out);
+        Some(ts)
+    }
+
+    /// Allocating convenience form of [`EventQueues::pop_window_into`].
+    pub fn pop_window(&mut self, horizon: SimTime) -> Option<(SimTime, Vec<Event<P>>)> {
+        let mut out = Vec::new();
+        let ts = self.pop_window_into(horizon, &mut out)?;
+        Some((ts, out))
     }
 }
 
@@ -179,6 +591,8 @@ mod tests {
     use super::*;
     use crate::util::LpId;
 
+    const KINDS: [EventQueueKind; 2] = [EventQueueKind::Heap, EventQueueKind::Ladder];
+
     fn ev(t: f64, tie: (u64, u64), src: u64) -> Event<u32> {
         Event {
             time: SimTime::new(t),
@@ -191,98 +605,225 @@ mod tests {
     }
 
     #[test]
+    fn kind_parses_and_displays() {
+        assert_eq!("heap".parse::<EventQueueKind>().unwrap(), EventQueueKind::Heap);
+        assert_eq!(
+            "ladder".parse::<EventQueueKind>().unwrap(),
+            EventQueueKind::Ladder
+        );
+        assert!("calendar".parse::<EventQueueKind>().is_err());
+        assert_eq!(EventQueueKind::Ladder.to_string(), "ladder");
+        assert_eq!(EventQueueKind::default(), EventQueueKind::Heap);
+    }
+
+    #[test]
     fn min_key_across_local_and_remote() {
-        let mut q = EventQueues::new([AgentId(2), AgentId(3)].into_iter());
-        q.push_local(ev(5.0, (1, 1), 1));
-        assert!(q.push_remote(ev(3.0, (2, 1), 2)));
-        assert!(q.push_remote(ev(4.0, (3, 1), 3)));
-        assert_eq!(q.min_key().unwrap().0, SimTime::new(3.0));
-        assert_eq!(q.len(), 3);
-        assert_eq!(q.received_from(AgentId(2)), 1);
+        for kind in KINDS {
+            let mut q = EventQueues::with_kind(kind, [AgentId(2), AgentId(3)].into_iter());
+            q.push_local(ev(5.0, (1, 1), 1));
+            assert!(q.push_remote(ev(3.0, (2, 1), 2)));
+            assert!(q.push_remote(ev(4.0, (3, 1), 3)));
+            assert_eq!(q.min_key().unwrap().0, SimTime::new(3.0));
+            assert_eq!(q.len(), 3);
+            assert_eq!(q.received_from(AgentId(2)), 1);
+        }
     }
 
     #[test]
     fn pop_at_takes_whole_timestep_sorted() {
-        let mut q = EventQueues::new([AgentId(2)].into_iter());
-        q.push_local(ev(1.0, (1, 2), 1));
-        q.push_local(ev(1.0, (1, 1), 1));
-        assert!(q.push_remote(ev(1.0, (2, 1), 2)));
-        q.push_local(ev(2.0, (1, 3), 1));
-        let batch = q.pop_at(SimTime::new(1.0));
-        assert_eq!(batch.len(), 3);
-        let ties: Vec<_> = batch.iter().map(|e| e.tie).collect();
-        assert_eq!(ties, vec![(1, 1), (1, 2), (2, 1)]);
-        assert_eq!(q.len(), 1);
+        for kind in KINDS {
+            let mut q = EventQueues::with_kind(kind, [AgentId(2)].into_iter());
+            q.push_local(ev(1.0, (1, 2), 1));
+            q.push_local(ev(1.0, (1, 1), 1));
+            assert!(q.push_remote(ev(1.0, (2, 1), 2)));
+            q.push_local(ev(2.0, (1, 3), 1));
+            let batch = q.pop_at(SimTime::new(1.0));
+            assert_eq!(batch.len(), 3);
+            let ties: Vec<_> = batch.iter().map(|e| e.tie).collect();
+            assert_eq!(ties, vec![(1, 1), (1, 2), (2, 1)]);
+            assert_eq!(q.len(), 1);
+        }
     }
 
     #[test]
     fn out_of_order_remote_timestamps_accepted() {
         // Aggregated channels are NOT timestamp-monotone; the queue must
         // accept t=7 after t=9 from the same source.
-        let mut q = EventQueues::new([AgentId(2)].into_iter());
-        assert!(q.push_remote(ev(9.0, (2, 1), 2)));
-        assert!(q.push_remote(ev(7.0, (2, 2), 2)));
-        assert_eq!(q.min_key().unwrap().0, SimTime::new(7.0));
-        assert_eq!(q.received_from(AgentId(2)), 2);
+        for kind in KINDS {
+            let mut q = EventQueues::with_kind(kind, [AgentId(2)].into_iter());
+            assert!(q.push_remote(ev(9.0, (2, 1), 2)));
+            assert!(q.push_remote(ev(7.0, (2, 2), 2)));
+            assert_eq!(q.min_key().unwrap().0, SimTime::new(7.0));
+            assert_eq!(q.received_from(AgentId(2)), 2);
+        }
     }
 
     #[test]
     fn unknown_peer_events_rejected_consistently() {
-        let mut q = EventQueues::new([AgentId(2)].into_iter());
-        assert!(!q.push_remote(ev(1.0, (9, 1), 9)));
-        // Rejection leaves both the heap and the counters untouched.
-        assert!(q.is_empty());
-        assert_eq!(q.received_from(AgentId(9)), 0);
+        for kind in KINDS {
+            let mut q = EventQueues::with_kind(kind, [AgentId(2)].into_iter());
+            assert!(!q.push_remote(ev(1.0, (9, 1), 9)));
+            // Rejection leaves both the store and the counters untouched.
+            assert!(q.is_empty());
+            assert_eq!(q.received_from(AgentId(9)), 0);
+        }
     }
 
     #[test]
     fn pop_window_respects_horizon_inclusive() {
-        let mut q = EventQueues::new(std::iter::empty());
-        q.push_local(ev(1.0, (1, 1), 1));
-        q.push_local(ev(2.0, (1, 2), 1));
-        q.push_local(ev(3.0, (1, 3), 1));
-        // Horizon below the head: nothing is safe.
-        assert!(q.pop_window(SimTime::new(0.5)).is_none());
-        // Inclusive at the horizon.
-        let (ts, batch) = q.pop_window(SimTime::new(1.0)).unwrap();
-        assert_eq!(ts, SimTime::new(1.0));
-        assert_eq!(batch.len(), 1);
-        // Next head (t=2) is beyond the same horizon.
-        assert!(q.pop_window(SimTime::new(1.0)).is_none());
-        assert_eq!(q.len(), 2);
+        for kind in KINDS {
+            let mut q = EventQueues::with_kind(kind, std::iter::empty());
+            q.push_local(ev(1.0, (1, 1), 1));
+            q.push_local(ev(2.0, (1, 2), 1));
+            q.push_local(ev(3.0, (1, 3), 1));
+            // Horizon below the head: nothing is safe.
+            assert!(q.pop_window(SimTime::new(0.5)).is_none());
+            // Inclusive at the horizon.
+            let (ts, batch) = q.pop_window(SimTime::new(1.0)).unwrap();
+            assert_eq!(ts, SimTime::new(1.0));
+            assert_eq!(batch.len(), 1);
+            // Next head (t=2) is beyond the same horizon.
+            assert!(q.pop_window(SimTime::new(1.0)).is_none());
+            assert_eq!(q.len(), 2);
+        }
     }
 
     #[test]
     fn pop_window_picks_up_mid_window_insertions() {
-        let mut q = EventQueues::new([AgentId(2)].into_iter());
-        q.push_local(ev(1.0, (1, 1), 1));
-        q.push_local(ev(3.0, (1, 2), 1));
-        let horizon = SimTime::new(5.0);
+        for kind in KINDS {
+            let mut q = EventQueues::with_kind(kind, [AgentId(2)].into_iter());
+            q.push_local(ev(1.0, (1, 1), 1));
+            q.push_local(ev(3.0, (1, 2), 1));
+            let horizon = SimTime::new(5.0);
 
-        let (ts, _) = q.pop_window(horizon).unwrap();
-        assert_eq!(ts, SimTime::new(1.0));
-        // A handler at t=1 schedules new work at t=2 — inside the window,
-        // *before* the already-queued t=3 event.
-        q.push_local(ev(2.0, (1, 3), 1));
+            let (ts, _) = q.pop_window(horizon).unwrap();
+            assert_eq!(ts, SimTime::new(1.0));
+            // A handler at t=1 schedules new work at t=2 — inside the
+            // window, *before* the already-queued t=3 event.
+            q.push_local(ev(2.0, (1, 3), 1));
 
-        let (ts, batch) = q.pop_window(horizon).unwrap();
-        assert_eq!(ts, SimTime::new(2.0));
-        assert_eq!(batch[0].tie, (1, 3));
-        let (ts, _) = q.pop_window(horizon).unwrap();
-        assert_eq!(ts, SimTime::new(3.0));
-        assert!(q.pop_window(horizon).is_none());
+            let (ts, batch) = q.pop_window(horizon).unwrap();
+            assert_eq!(ts, SimTime::new(2.0));
+            assert_eq!(batch[0].tie, (1, 3));
+            let (ts, _) = q.pop_window(horizon).unwrap();
+            assert_eq!(ts, SimTime::new(3.0));
+            assert!(q.pop_window(horizon).is_none());
+        }
     }
 
     #[test]
     fn pop_window_batches_equal_timestamps_in_tie_order() {
-        let mut q = EventQueues::new([AgentId(2)].into_iter());
-        q.push_local(ev(1.0, (1, 2), 1));
-        assert!(q.push_remote(ev(1.0, (2, 1), 2)));
-        q.push_local(ev(1.0, (1, 1), 1));
-        let (ts, batch) = q.pop_window(SimTime::INF).unwrap();
-        assert_eq!(ts, SimTime::new(1.0));
-        let ties: Vec<_> = batch.iter().map(|e| e.tie).collect();
-        assert_eq!(ties, vec![(1, 1), (1, 2), (2, 1)]);
+        for kind in KINDS {
+            let mut q = EventQueues::with_kind(kind, [AgentId(2)].into_iter());
+            q.push_local(ev(1.0, (1, 2), 1));
+            assert!(q.push_remote(ev(1.0, (2, 1), 2)));
+            q.push_local(ev(1.0, (1, 1), 1));
+            let (ts, batch) = q.pop_window(SimTime::INF).unwrap();
+            assert_eq!(ts, SimTime::new(1.0));
+            let ties: Vec<_> = batch.iter().map(|e| e.tie).collect();
+            assert_eq!(ties, vec![(1, 1), (1, 2), (2, 1)]);
+        }
+    }
+
+    #[test]
+    fn ladder_spills_large_bursts_through_rungs() {
+        // Enough events (with duplicate timestamps and a wide range) to
+        // force top spill, rung spawning, and bucket promotion; drain must
+        // come out fully sorted.
+        let mut q = EventQueues::with_kind(EventQueueKind::Ladder, std::iter::empty());
+        let mut seq = 0u64;
+        for i in 0..10_000u64 {
+            seq += 1;
+            let t = ((i * 2_654_435_761) % 997) as f64 * 0.5;
+            q.push_local(ev(t, (1, seq), 1));
+        }
+        assert_eq!(q.len(), 10_000);
+        let mut last: Option<Key> = None;
+        let mut n = 0;
+        while let Some((_, batch)) = q.pop_window(SimTime::INF) {
+            for e in &batch {
+                assert!(last.map_or(true, |l| l < e.key()), "pop order inverted");
+                last = Some(e.key());
+                n += 1;
+            }
+        }
+        assert_eq!(n, 10_000);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ladder_matches_heap_on_random_interleavings() {
+        // Property test: randomized push/pop_window interleavings must pop
+        // the exact same event sequence from both stores.
+        crate::testkit::check("ladder_vs_heap", 40, |rng| {
+            let mut heap = EventQueues::with_kind(EventQueueKind::Heap, [AgentId(2)].into_iter());
+            let mut ladder =
+                EventQueues::with_kind(EventQueueKind::Ladder, [AgentId(2)].into_iter());
+            let mut seq = 0u64;
+            let mut now = 0.0f64;
+            for _ in 0..rng.below(400) + 50 {
+                match rng.below(10) {
+                    // Mostly pushes, around and after `now`; duplicate
+                    // timestamps are common by construction.
+                    0..=6 => {
+                        for _ in 0..rng.below(8) + 1 {
+                            seq += 1;
+                            let t = now + (rng.below(64) as f64) * 0.25;
+                            let e = ev(t, (1, seq), 1);
+                            heap.push_local(e.clone());
+                            ladder.push_local(e);
+                        }
+                    }
+                    7 => {
+                        seq += 1;
+                        let t = now + (rng.below(16) as f64) * 0.5;
+                        let a = ev(t, (2, seq), 2);
+                        assert!(heap.push_remote(a.clone()));
+                        assert!(ladder.push_remote(a));
+                    }
+                    // Pop a window at a randomized horizon.
+                    _ => {
+                        let horizon = SimTime::new(now + rng.below(32) as f64);
+                        loop {
+                            let h = heap.pop_window(horizon);
+                            let l = ladder.pop_window(horizon);
+                            match (&h, &l) {
+                                (Some((ht, hb)), Some((lt, lb))) => {
+                                    assert_eq!(ht, lt, "window timestamps diverged");
+                                    assert_eq!(
+                                        hb.iter().map(|e| e.key()).collect::<Vec<_>>(),
+                                        lb.iter().map(|e| e.key()).collect::<Vec<_>>(),
+                                        "batch order diverged at t={ht:?}"
+                                    );
+                                    now = ht.0;
+                                }
+                                (None, None) => break,
+                                _ => panic!("one store had a window, the other did not"),
+                            }
+                        }
+                    }
+                }
+            }
+            // Full drain must agree too.
+            loop {
+                let h = heap.pop_window(SimTime::INF);
+                let l = ladder.pop_window(SimTime::INF);
+                match (&h, &l) {
+                    (Some((ht, hb)), Some((lt, lb))) => {
+                        assert_eq!(ht, lt);
+                        assert_eq!(
+                            hb.iter().map(|e| e.key()).collect::<Vec<_>>(),
+                            lb.iter().map(|e| e.key()).collect::<Vec<_>>()
+                        );
+                    }
+                    (None, None) => break,
+                    _ => panic!("drain length diverged"),
+                }
+            }
+            assert_eq!(heap.len(), 0);
+            assert_eq!(ladder.len(), 0);
+            Ok(())
+        });
     }
 
     #[test]
@@ -297,8 +838,10 @@ mod tests {
 
     #[test]
     fn empty_queues_have_no_key() {
-        let q: EventQueues<u32> = EventQueues::new(std::iter::empty());
-        assert!(q.min_key().is_none());
-        assert!(q.is_empty());
+        for kind in KINDS {
+            let q: EventQueues<u32> = EventQueues::with_kind(kind, std::iter::empty());
+            assert!(q.min_key().is_none());
+            assert!(q.is_empty());
+        }
     }
 }

@@ -61,6 +61,7 @@ USAGE:
   dsim sweep-bandwidth <mbps> [<mbps> ...]
   dsim agent --me <id> --bind <addr> --peers <id=addr,id=addr,...>
              [--lookahead s] [--workers n] [--exec window|step]
+             [--event-queue heap|ladder]
              [--max-frame-mib n] [--no-wire-batch]
              [--wire-codec binary|json]
              [--writer-queue-frames adaptive|fixed(N)|n]
@@ -97,7 +98,7 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     // Budget trajectory + wire backlog: the compute-bound vs wire-bound
     // signal (constant trajectory under the default fixed budget).
     println!(
-        "  budget: min={} max={} last={} grows={} shrinks={} truncated={} queue_hw={} queue_grows={} blocked_us={}",
+        "  budget: min={} max={} last={} grows={} shrinks={} truncated={} queue_hw={} queue_grows={} queue_shrinks={} blocked_us={}",
         report.budget_min,
         report.budget_max,
         report.budget_last,
@@ -106,6 +107,7 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         report.windows_truncated,
         report.queue_highwater,
         report.queue_grows,
+        report.queue_shrinks,
         report.send_block_us
     );
     if let Some(i) = args.iter().position(|a| a == "--results") {
@@ -312,6 +314,11 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         .map(|s| s.parse().map_err(anyhow::Error::msg))
         .transpose()?
         .unwrap_or_default();
+    // Future-event-set implementation: heap baseline or ladder queue.
+    let event_queue: dsim::engine::EventQueueKind = get("--event-queue")
+        .map(|s| s.parse().map_err(anyhow::Error::msg))
+        .transpose()?
+        .unwrap_or_default();
     let max_frame_mib: usize = get("--max-frame-mib")
         .map(|s| s.parse())
         .transpose()?
@@ -369,6 +376,7 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         protocol: Default::default(),
         workers,
         exec,
+        event_queue,
         wire_batch,
         budget,
     };

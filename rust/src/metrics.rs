@@ -4,7 +4,7 @@
 //! later evaluation without re-running, and feeding results into further
 //! simulation runs).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::Write;
 use std::path::Path;
 use std::sync::Mutex;
@@ -20,27 +20,55 @@ pub struct Record {
     pub data: Json,
 }
 
+/// Kind-interned record store: each distinct kind string lives once in
+/// `kinds`, and every record carries only its index.  At 10^5+ LPs the
+/// pool sees one push per published record with a handful of distinct
+/// kinds, so the old per-record `String` clone was pure allocator churn.
+struct PoolInner {
+    kinds: Vec<String>,
+    index: HashMap<String, u32>,
+    records: Vec<(u32, Json)>,
+}
+
+impl PoolInner {
+    /// Intern `kind`, allocating only on its first appearance.
+    fn kind_id(&mut self, kind: &str) -> u32 {
+        match self.index.get(kind) {
+            Some(&i) => i,
+            None => {
+                let i = self.kinds.len() as u32;
+                self.kinds.push(kind.to_string());
+                self.index.insert(kind.to_string(), i);
+                i
+            }
+        }
+    }
+}
+
 /// Client-side collector of simulation results.
 pub struct ResultPool {
-    records: Mutex<Vec<Record>>,
+    inner: Mutex<PoolInner>,
 }
 
 impl ResultPool {
     pub fn new() -> Self {
         ResultPool {
-            records: Mutex::new(Vec::new()),
+            inner: Mutex::new(PoolInner {
+                kinds: Vec::new(),
+                index: HashMap::new(),
+                records: Vec::new(),
+            }),
         }
     }
 
     pub fn push(&self, kind: &str, data: Json) {
-        self.records.lock().unwrap().push(Record {
-            kind: kind.to_string(),
-            data,
-        });
+        let mut g = self.inner.lock().unwrap();
+        let id = g.kind_id(kind);
+        g.records.push((id, data));
     }
 
     pub fn len(&self) -> usize {
-        self.records.lock().unwrap().len()
+        self.inner.lock().unwrap().records.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -49,29 +77,50 @@ impl ResultPool {
 
     /// All records of one kind.
     pub fn of_kind(&self, kind: &str) -> Vec<Record> {
-        self.records
-            .lock()
-            .unwrap()
+        let g = self.inner.lock().unwrap();
+        let Some(&id) = g.index.get(kind) else {
+            return Vec::new();
+        };
+        g.records
             .iter()
-            .filter(|r| r.kind == kind)
-            .cloned()
+            .filter(|(k, _)| *k == id)
+            .map(|(_, data)| Record {
+                kind: kind.to_string(),
+                data: data.clone(),
+            })
             .collect()
     }
 
     /// Append every record of `other` (aggregating multi-context runs
     /// into one saved file).
     pub fn merge_from(&self, other: &ResultPool) {
-        let theirs: Vec<Record> = other.records.lock().unwrap().clone();
-        self.records.lock().unwrap().extend(theirs);
+        let theirs: Vec<(String, Json)> = {
+            let g = other.inner.lock().unwrap();
+            g.records
+                .iter()
+                .map(|(k, data)| (g.kinds[*k as usize].clone(), data.clone()))
+                .collect()
+        };
+        let mut g = self.inner.lock().unwrap();
+        for (kind, data) in theirs {
+            let id = g.kind_id(&kind);
+            g.records.push((id, data));
+        }
     }
 
     /// Record count per kind.
     pub fn kind_counts(&self) -> BTreeMap<String, usize> {
-        let mut out = BTreeMap::new();
-        for r in self.records.lock().unwrap().iter() {
-            *out.entry(r.kind.clone()).or_insert(0) += 1;
+        let g = self.inner.lock().unwrap();
+        let mut per_id = vec![0usize; g.kinds.len()];
+        for (k, _) in &g.records {
+            per_id[*k as usize] += 1;
         }
-        out
+        g.kinds
+            .iter()
+            .zip(per_id)
+            .filter(|(_, n)| *n > 0)
+            .map(|(k, n)| (k.clone(), n))
+            .collect()
     }
 
     /// Numeric field extractor: values of `field` across records of `kind`.
@@ -87,8 +136,12 @@ impl ResultPool {
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut f =
             std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
-        for r in self.records.lock().unwrap().iter() {
-            let line = Json::obj(vec![("kind", Json::str(r.kind.clone())), ("data", r.data.clone())]);
+        let g = self.inner.lock().unwrap();
+        for (k, data) in &g.records {
+            let line = Json::obj(vec![
+                ("kind", Json::str(g.kinds[*k as usize].clone())),
+                ("data", data.clone()),
+            ]);
             writeln!(f, "{line}")?;
         }
         Ok(())
@@ -169,6 +222,27 @@ mod tests {
         assert_eq!(p.of_kind("job").len(), 2);
         assert_eq!(p.kind_counts()["transfer"], 1);
         assert_eq!(p.values("job", "dur"), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn kinds_are_interned_once() {
+        let p = ResultPool::new();
+        for i in 0..1000 {
+            p.push("job", Json::num(i as f64));
+        }
+        p.push("transfer", Json::num(1.0));
+        let g = p.inner.lock().unwrap();
+        assert_eq!(g.kinds.len(), 2, "one table entry per distinct kind");
+        assert_eq!(g.records.len(), 1001);
+        drop(g);
+        assert_eq!(p.kind_counts()["job"], 1000);
+        // merge_from preserves counts across differently-interned pools.
+        let q = ResultPool::new();
+        q.push("transfer", Json::num(2.0));
+        q.push("job", Json::num(3.0));
+        p.merge_from(&q);
+        assert_eq!(p.kind_counts()["transfer"], 2);
+        assert_eq!(p.kind_counts()["job"], 1001);
     }
 
     #[test]

@@ -239,12 +239,13 @@ fn substitute(
 // Section parsers
 // ---------------------------------------------------------------------------
 
-const DEPLOY_KEYS: [&str; 17] = [
+const DEPLOY_KEYS: [&str; 18] = [
     "transport",
     "agents",
     "workers",
     "protocol",
     "exec",
+    "event_queue",
     "placement",
     "backend",
     "lookahead",
@@ -286,6 +287,9 @@ fn parse_deploy(j: &Json, path: &str) -> Result<(RunTransport, DeployConfig)> {
         exec: str_knob("exec", "window")?
             .parse()
             .map_err(|e| anyhow!("at {path}.exec: {e}"))?,
+        event_queue: str_knob("event_queue", &d.event_queue.to_string())?
+            .parse()
+            .map_err(|e| anyhow!("at {path}.event_queue: {e}"))?,
         placement: str_knob("placement", "perf")?
             .parse()
             .map_err(|e| anyhow!("at {path}.placement: {e}"))?,
@@ -345,10 +349,10 @@ fn parse_grid(j: &Json, path: &str) -> Result<WorkloadConfig> {
         None => "t0t1".to_string(),
         Some(v) => as_str_at(v, &format!("{path}.preset"))?.to_string(),
     };
-    if !["t0t1", "farm", "two-center"].contains(&preset.as_str()) {
+    if !["t0t1", "farm", "two-center", "large_grid"].contains(&preset.as_str()) {
         return err_at(
             &format!("{path}.preset"),
-            format!("unknown preset '{preset}' (t0t1|farm|two-center)"),
+            format!("unknown preset '{preset}' (t0t1|farm|two-center|large_grid)"),
         );
     }
     if preset == "two-center" {

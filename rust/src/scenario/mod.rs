@@ -369,6 +369,7 @@ impl CompiledScenario {
             protocol: deploy.protocol,
             workers: deploy.workers,
             exec: deploy.exec,
+            event_queue: deploy.event_queue,
             wire_batch: deploy.wire_batch,
             budget: deploy.budget_spec(),
         });

@@ -345,6 +345,9 @@ pub struct TransportTelemetry {
     /// Adaptive-depth doubling steps taken across all writer queues
     /// (0 under a fixed [`WriterQueue`] policy).
     pub queue_grows: u64,
+    /// Adaptive-depth halving steps taken across all writer queues once
+    /// occupancy high-water subsided (0 under a fixed policy).
+    pub queue_shrinks: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -1942,8 +1945,12 @@ struct FrameQueueState<P> {
     buf: VecDeque<NetMsg<P>>,
     /// Current bound; fixed policies never move it, adaptive ones double
     /// it (up to `FrameQueue::max_cap`) instead of blocking a saturated
-    /// sender.
+    /// sender, and decay it back toward `FrameQueue::min_cap` once the
+    /// pressure subsides.
     cap: usize,
+    /// Consecutive pops that found occupancy at a quarter of the depth or
+    /// less — the calm streak that triggers a decay step.
+    calm: u64,
     closed: bool,
 }
 
@@ -1961,22 +1968,35 @@ struct FrameQueue<P> {
     can_pop: Condvar,
     /// Depth ceiling (== initial cap for fixed policies).
     max_cap: usize,
+    /// Depth floor the decay steps never cross (== the configured start
+    /// depth; == ceiling for fixed policies, so they never move).
+    min_cap: usize,
     /// Doubling steps taken (adaptive depth telemetry).
     grows: AtomicU64,
+    /// Halving steps taken once occupancy subsided (decay telemetry).
+    shrinks: AtomicU64,
 }
 
 impl<P> FrameQueue<P> {
+    /// Consecutive calm pops before one decay (halving) step.  High
+    /// enough that a transient dip cannot flap the depth, low enough
+    /// that a burst's grown capacity is returned within one drain.
+    const CALM_POPS_PER_SHRINK: u64 = 32;
+
     fn new(spec: WriterQueue) -> Self {
         FrameQueue {
             state: Mutex::new(FrameQueueState {
                 buf: VecDeque::new(),
                 cap: spec.initial().max(1),
+                calm: 0,
                 closed: false,
             }),
             can_push: Condvar::new(),
             can_pop: Condvar::new(),
             max_cap: spec.ceiling().max(1),
+            min_cap: spec.initial().max(1),
             grows: AtomicU64::new(0),
+            shrinks: AtomicU64::new(0),
         }
     }
 
@@ -1993,6 +2013,7 @@ impl<P> FrameQueue<P> {
             }
             if st.cap < self.max_cap {
                 st.cap = st.cap.saturating_mul(2).min(self.max_cap);
+                st.calm = 0;
                 self.grows.fetch_add(1, Ordering::Relaxed);
                 break;
             }
@@ -2016,11 +2037,24 @@ impl<P> FrameQueue<P> {
     }
 
     /// Dequeue the next message; `None` once the queue is closed *and*
-    /// drained — close flushes, never truncates.
+    /// drained — close flushes, never truncates.  Each pop is also the
+    /// decay probe: a long enough streak of low-occupancy pops halves a
+    /// grown depth back toward the configured floor, so a burst's extra
+    /// capacity is not held forever.
     fn pop(&self) -> Option<NetMsg<P>> {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(m) = st.buf.pop_front() {
+                if st.cap > self.min_cap && st.buf.len() <= st.cap / 4 {
+                    st.calm += 1;
+                    if st.calm >= Self::CALM_POPS_PER_SHRINK {
+                        st.cap = (st.cap / 2).max(self.min_cap);
+                        st.calm = 0;
+                        self.shrinks.fetch_add(1, Ordering::Relaxed);
+                    }
+                } else {
+                    st.calm = 0;
+                }
                 drop(st);
                 self.can_push.notify_one();
                 return Some(m);
@@ -2040,13 +2074,15 @@ impl<P> FrameQueue<P> {
         self.can_push.notify_all();
     }
 
-    /// (frames queued, current depth, doubling steps) for telemetry.
-    fn snapshot(&self) -> (u64, u64, u64) {
+    /// (frames queued, current depth, doubling steps, halving steps) for
+    /// telemetry.
+    fn snapshot(&self) -> (u64, u64, u64, u64) {
         let st = self.state.lock().unwrap();
         (
             st.buf.len() as u64,
             st.cap as u64,
             self.grows.load(Ordering::Relaxed),
+            self.shrinks.load(Ordering::Relaxed),
         )
     }
 }
@@ -2378,18 +2414,20 @@ impl<P: Wire + Clone + Send + 'static> Transport<P> for TcpTransport<P> {
     fn telemetry(&self) -> TransportTelemetry {
         // Depth is live per peer under an adaptive policy: report the
         // deepest queue (the initial depth before any writer exists).
-        let (occupancy, depth, grows) = {
+        let (occupancy, depth, grows, shrinks) = {
             let writers = self.writers.lock().unwrap();
             let mut occ = 0;
             let mut depth = self.opts.writer_queue.initial() as u64;
             let mut grows = 0;
+            let mut shrinks = 0;
             for w in writers.values() {
-                let (o, c, g) = w.queue.snapshot();
+                let (o, c, g, s) = w.queue.snapshot();
                 occ = occ.max(o);
                 depth = depth.max(c);
                 grows += g;
+                shrinks += s;
             }
-            (occ, depth, grows)
+            (occ, depth, grows, shrinks)
         };
         TransportTelemetry {
             queue_depth: depth,
@@ -2397,6 +2435,7 @@ impl<P: Wire + Clone + Send + 'static> Transport<P> for TcpTransport<P> {
             queue_highwater: self.queue_highwater.load(Ordering::Relaxed),
             send_block_us: self.send_block_us.load(Ordering::Relaxed),
             queue_grows: grows,
+            queue_shrinks: shrinks,
         }
     }
 }
@@ -2625,6 +2664,7 @@ mod tests {
                     budget_last: rng.below(1 << 16),
                     queue_highwater: rng.below(256),
                     queue_grows: rng.below(8),
+                    queue_shrinks: rng.below(8),
                     events_rejected: rng.below(4),
                     lvt_s: rng.uniform(0.0, 1e5),
                     ..HostStatsView::default()
@@ -3183,10 +3223,11 @@ mod tests {
                 .expect("queue open");
             assert_eq!(p.blocked_us, 0, "grew instead of blocking");
         }
-        let (occ, cap, grows) = q.snapshot();
+        let (occ, cap, grows, shrinks) = q.snapshot();
         assert_eq!(occ, 4);
         assert_eq!(cap, 4, "1 -> 2 -> 4");
         assert_eq!(grows, 2);
+        assert_eq!(shrinks, 0, "nothing drained yet");
         // FIFO drain, then close -> pop None, push Err.
         for i in 0..4u64 {
             match q.pop().unwrap() {
@@ -3199,6 +3240,41 @@ mod tests {
         q.close();
         assert!(q.pop().is_none());
         assert!(q.push(NetMsg::Control(ControlMsg::Shutdown)).is_err());
+    }
+
+    #[test]
+    fn adaptive_frame_queue_decays_after_drain() {
+        // Grow a depth-1 queue to its ceiling of 4, then run a long calm
+        // push/pop alternation: every pop observes occupancy <= cap/4, so
+        // the decay streak halves the depth back to the floor (4 -> 2 ->
+        // 1) and the shrink counter records both steps.
+        let q: FrameQueue<u32> =
+            FrameQueue::new(WriterQueue::Adaptive { start: 1, max: 4 });
+        for i in 0..4u64 {
+            q.push(NetMsg::Control(ControlMsg::Probe { context: ContextId(i), round: i }))
+                .expect("queue open");
+        }
+        let (_, cap, grows, _) = q.snapshot();
+        assert_eq!((cap, grows), (4, 2), "burst grew to the ceiling");
+        for _ in 0..4 {
+            q.pop().unwrap();
+        }
+        for i in 0..80u64 {
+            q.push(NetMsg::Control(ControlMsg::Probe { context: ContextId(i), round: i }))
+                .expect("queue open");
+            q.pop().unwrap();
+        }
+        let (_, cap, _, shrinks) = q.snapshot();
+        assert_eq!(cap, 1, "depth decayed back to the configured floor");
+        assert_eq!(shrinks, 2, "4 -> 2 -> 1");
+        // The floor holds: further calm pops must not shrink below it.
+        for i in 0..80u64 {
+            q.push(NetMsg::Control(ControlMsg::Probe { context: ContextId(i), round: i }))
+                .expect("queue open");
+            q.pop().unwrap();
+        }
+        let (_, cap, _, shrinks) = q.snapshot();
+        assert_eq!((cap, shrinks), (1, 2));
     }
 
     #[test]
@@ -3219,8 +3295,9 @@ mod tests {
             q.push(NetMsg::Control(ControlMsg::Probe { context: ContextId(i), round: i }))
                 .expect("queue open");
         }
-        let (_, cap, grows) = q.snapshot();
+        let (_, cap, grows, shrinks) = q.snapshot();
         assert_eq!((cap, grows), (2, 0), "fixed queue must not grow");
+        assert_eq!(shrinks, 0, "fixed queue must not shrink");
         q.close();
         assert_eq!(consumer.join().unwrap(), (0..6).collect::<Vec<_>>());
     }
@@ -3246,7 +3323,15 @@ mod tests {
         }
         let t = t1.telemetry();
         assert!(t.queue_depth >= 1 && t.queue_depth <= 64);
-        assert!(t.queue_grows <= 6, "1 -> 64 is six doublings at most");
+        // 1 -> 64 is six doublings; any further grow needs a decay step
+        // first (the writer draining fast enough to trigger the calm
+        // streak), so the step counts bound each other.
+        assert!(
+            t.queue_grows <= 6 + t.queue_shrinks,
+            "grows {} > 6 + shrinks {}",
+            t.queue_grows,
+            t.queue_shrinks
+        );
         for i in 0..N {
             match t2.recv_timeout(Duration::from_secs(5)).expect("frame") {
                 NetMsg::Control(ControlMsg::Probe { context, .. }) => {

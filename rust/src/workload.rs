@@ -198,11 +198,97 @@ pub fn two_center_demo() -> GeneratedScenario {
     t0t1(&cfg)
 }
 
+/// Scale-stress scenario: `centers` independent (farm, driver) pairs and
+/// nothing else, so LP count is `2 * centers + 2` and every event is a
+/// pure-CPU job arrival/submit/done exchange inside one affinity group.
+///
+/// This is the CLAIM-SCALE workload: at `centers = 50_000` it instantiates
+/// 10^5 LPs, at `centers = 500_000` it reaches 10^6.  Drivers run with
+/// `expected_datasets = 0`, which takes the pure-CPU path in
+/// [`crate::components::driver::T1DriverLp`]: the db/catalog/wan handles are
+/// wired (the component requires them) but never messaged, so the event
+/// population exercises the engine core — queue + dispatch — rather than the
+/// storage model.
+pub fn large_grid(cfg: &WorkloadConfig) -> GeneratedScenario {
+    let mut sc = Scenario::new("large_grid", cfg.wan_latency_s);
+
+    // Shared infrastructure LPs exist only so driver params have real ids
+    // to point at; no traffic ever reaches them, so the WAN is a fixed
+    // one-port stub rather than a `centers`-sized table.
+    let wan = sc.add_lp(
+        "wan",
+        Json::obj(vec![
+            ("centers", Json::num(1.0)),
+            ("uplink_mbps", Json::arr([Json::num(cfg.wan_bandwidth_mbps)])),
+            (
+                "downlink_mbps",
+                Json::arr([Json::num(cfg.wan_bandwidth_mbps)]),
+            ),
+            ("per_transfer_wakes", Json::Bool(false)),
+        ]),
+        0,
+    );
+    let catalog = sc.add_lp("catalog", Json::obj(vec![]), 1);
+
+    let first_center_lp = 3u64; // wan=1, catalog=2
+    let lp_of = |center: usize, slot: u64| LpId(first_center_lp + 2 * center as u64 + slot);
+
+    let mut centers = Vec::with_capacity(cfg.centers);
+    for c in 0..cfg.centers {
+        let group = 2 + c;
+        let farm = sc.add_lp(
+            "farm",
+            Json::obj(vec![
+                ("center", Json::num(c as f64)),
+                ("units", Json::num(cfg.cpus_per_center as f64)),
+                ("power", Json::num(1.0)),
+            ]),
+            group,
+        );
+        let driver = sc.add_lp(
+            "t1-driver",
+            Json::obj(vec![
+                ("center", Json::num(c as f64)),
+                ("wan", Json::num(wan.raw() as f64)),
+                // No storage tier: the pure-CPU path never consults the db,
+                // so the handle points back at the farm.
+                ("db", Json::num(farm.raw() as f64)),
+                ("catalog", Json::num(catalog.raw() as f64)),
+                ("farm", Json::num(farm.raw() as f64)),
+                ("jobs", Json::num(cfg.jobs_per_center as f64)),
+                ("job_cpu_s", Json::num(10.0)),
+                ("expected_datasets", Json::num(0.0)),
+                ("arrival_mean_s", Json::num(2.0)),
+                ("seed", Json::num(cfg.seed as f64)),
+            ]),
+            group,
+        );
+        debug_assert_eq!(farm, lp_of(c, 0));
+        debug_assert_eq!(driver, lp_of(c, 1));
+        centers.push(RegionalCenter {
+            center: c,
+            farm,
+            db: farm,
+            mass_storage: farm,
+            driver,
+        });
+        sc.bootstrap(0.0, driver, Payload::Start);
+    }
+
+    GeneratedScenario {
+        scenario: sc,
+        wan,
+        catalog,
+        centers,
+    }
+}
+
 /// Dispatch by `cfg.name`.
 pub fn generate(cfg: &WorkloadConfig) -> GeneratedScenario {
     match cfg.name.as_str() {
         "farm" => farm(cfg),
         "two-center" => two_center_demo(),
+        "large_grid" => large_grid(cfg),
         _ => t0t1(cfg),
     }
 }
@@ -273,6 +359,35 @@ mod tests {
             t0.params.get("transfers_per_center").and_then(|v| v.as_u64()),
             Some(0)
         );
+    }
+
+    #[test]
+    fn large_grid_scales_lp_count_linearly() {
+        let cfg = WorkloadConfig {
+            name: "large_grid".into(),
+            centers: 100,
+            jobs_per_center: 2,
+            ..WorkloadConfig::default()
+        };
+        let g = large_grid(&cfg);
+        g.scenario.validate().unwrap();
+        assert_eq!(g.scenario.lps.len(), 2 * cfg.centers + 2);
+        assert_eq!(g.scenario.bootstrap.len(), cfg.centers);
+        // Every driver takes the pure-CPU path: no expected datasets.
+        for lp in g.scenario.lps.iter().filter(|l| l.kind == "t1-driver") {
+            assert_eq!(
+                lp.params.get("expected_datasets").and_then(|v| v.as_u64()),
+                Some(0)
+            );
+        }
+        // Farm and driver of a center share an affinity group, so the
+        // entire job exchange is agent-local under any placement.
+        for c in &g.centers {
+            let group_of = |id: LpId| {
+                g.scenario.lps.iter().find(|l| l.id == id).unwrap().group
+            };
+            assert_eq!(group_of(c.farm), group_of(c.driver));
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@ use std::time::Duration;
 
 use dsim::config::{PlacementPolicy, WorkloadConfig};
 use dsim::coordinator::{AgentConfig, Deployment, RunReport, WindowBudgetSpec};
-use dsim::engine::{ExecMode, SyncProtocol};
+use dsim::engine::{EventQueueKind, ExecMode, SyncProtocol};
 use dsim::model::Payload;
 use dsim::testkit::{drive_two_center, FleetOutcome, FLEET_AGENTS};
 use dsim::transport::{InProcEndpoint, TcpOptions, TcpTransport, WireCodec, WriterQueue};
@@ -40,6 +40,15 @@ fn adaptive_spec() -> WindowBudgetSpec {
 }
 
 fn agent_cfg(me: AgentId, workers: usize, budget: WindowBudgetSpec) -> AgentConfig {
+    agent_cfg_q(me, workers, budget, EventQueueKind::Heap)
+}
+
+fn agent_cfg_q(
+    me: AgentId,
+    workers: usize,
+    budget: WindowBudgetSpec,
+    event_queue: EventQueueKind,
+) -> AgentConfig {
     AgentConfig {
         me,
         peers: FLEET_AGENTS.to_vec(),
@@ -47,6 +56,7 @@ fn agent_cfg(me: AgentId, workers: usize, budget: WindowBudgetSpec) -> AgentConf
         protocol: SyncProtocol::NullMessagesByDemand,
         workers,
         exec: ExecMode::SafeWindow,
+        event_queue,
         wire_batch: true,
         budget,
     }
@@ -114,6 +124,47 @@ fn adaptive_matches_fixed_across_transports_and_codecs() {
             assert!(
                 total_grows(&out) > 0,
                 "controller never moved (codec={codec} workers={workers})"
+            );
+        }
+    }
+}
+
+#[test]
+fn ladder_queue_matches_heap_across_transports_and_codecs() {
+    // The full equivalence matrix on the ladder queue: {in-proc, TCP} x
+    // {json, binary} x workers {0, 4}, every cell against the heap
+    // baseline digest.  The future-event set is the one component swapped
+    // out; everything downstream (windowing, batching, codecs, worker
+    // dispatch) must be unable to tell.
+    let (l, a) = inproc_fleet(0, WindowBudgetSpec::default());
+    let baseline = drive_two_center(l, a).fingerprint;
+
+    // In-proc legs (codec axis is degenerate here; TCP carries it).
+    for workers in [0usize, 4] {
+        let (l, a) = dsim::testkit::inproc_fleet(|me| {
+            agent_cfg_q(me, workers, WindowBudgetSpec::default(), EventQueueKind::Ladder)
+        });
+        let out = drive_two_center(l, a);
+        assert_eq!(
+            out.fingerprint, baseline,
+            "in-proc ladder diverged: workers={workers}"
+        );
+    }
+
+    // TCP legs: {json, binary} x workers {0, 4}.
+    for codec in [WireCodec::Json, WireCodec::Binary] {
+        for workers in [0usize, 4] {
+            let opts = TcpOptions {
+                codec,
+                ..TcpOptions::default()
+            };
+            let (l, a) = dsim::testkit::tcp_fleet(opts, |me| {
+                agent_cfg_q(me, workers, WindowBudgetSpec::default(), EventQueueKind::Ladder)
+            });
+            let out = drive_two_center(l, a);
+            assert_eq!(
+                out.fingerprint, baseline,
+                "TCP ladder diverged: codec={codec} workers={workers}"
             );
         }
     }

@@ -248,6 +248,7 @@ fn unknown_peer_events_rejected_in_both_exec_modes() {
             protocol: Default::default(),
             workers: 0,
             exec,
+            event_queue: Default::default(),
             wire_batch: true,
             budget: Default::default(),
         };

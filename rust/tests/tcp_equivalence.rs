@@ -31,6 +31,7 @@ fn agent_cfg(me: AgentId, workers: usize, proto: SyncProtocol, wire_batch: bool)
         protocol: proto,
         workers,
         exec: ExecMode::SafeWindow,
+        event_queue: Default::default(),
         wire_batch,
         budget: WindowBudgetSpec::default(),
     }

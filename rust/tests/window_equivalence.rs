@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use dsim::config::{PlacementPolicy, WorkloadConfig};
 use dsim::coordinator::{Deployment, RunReport, WindowBudgetSpec};
-use dsim::engine::{ExecMode, SyncProtocol};
+use dsim::engine::{EventQueueKind, ExecMode, SyncProtocol};
 use dsim::workload;
 
 fn cfg(seed: u64) -> WorkloadConfig {
@@ -129,6 +129,41 @@ fn adaptive_budget_matches_step_baseline() {
         adaptive.budget_grows > 0,
         "controller never moved — the adaptive equivalence was vacuous"
     );
+}
+
+#[test]
+fn ladder_queue_matches_heap_across_modes_and_workers() {
+    // The future-event-set swap must be invisible to results: every
+    // (exec mode, worker count) cell run on the ladder queue must land on
+    // the heap baseline's fingerprint.  Event keys are unique, so any
+    // correct priority queue pops the same order — this pins the ladder's
+    // rung spill/merge machinery to that contract on a real workload.
+    let baseline = run(
+        ExecMode::PerTimestamp,
+        0,
+        SyncProtocol::NullMessagesByDemand,
+        27,
+    )
+    .determinism_fingerprint();
+    for workers in [0usize, 4] {
+        for mode in [ExecMode::PerTimestamp, ExecMode::SafeWindow] {
+            let report = Deployment::in_process(3)
+                .event_queue(EventQueueKind::Ladder)
+                .exec_mode(mode)
+                .workers(workers)
+                .protocol(SyncProtocol::NullMessagesByDemand)
+                .placement(PlacementPolicy::RoundRobin)
+                .seed(27)
+                .max_wall(Duration::from_secs(120))
+                .run(workload::generate(&cfg(27)))
+                .expect("run failed");
+            assert_eq!(
+                report.determinism_fingerprint(),
+                baseline,
+                "ladder diverged from heap: mode={mode} workers={workers}"
+            );
+        }
+    }
 }
 
 #[test]
