@@ -52,16 +52,21 @@ fn main() -> anyhow::Result<()> {
             protocol: Default::default(),
             workers: 0,
             exec: Default::default(),
+            event_queue: Default::default(),
             // Window-batched wire protocol: one frame per peer per window
             // plus one per-window WindowReport to the leader.
             wire_batch: true,
             // Fixed window budget (the default); `adaptive` would size it
             // from this endpoint's writer-queue telemetry.
             budget: Default::default(),
+            // No liveness heartbeats: these agents share our fate anyway.
+            heartbeat_ms: 0,
         };
         let backend = Arc::new(ComputeBackend::auto(Path::new("artifacts")));
         handles.push(std::thread::spawn(move || {
-            AgentRuntime::new(cfg, transport, backend).run();
+            if let Err(e) = AgentRuntime::new(cfg, transport, backend).run() {
+                eprintln!("agent {a} failed: {e:#}");
+            }
         }));
     }
 

@@ -503,6 +503,7 @@ fn tcp_budget_fleet(
         event_queue: Default::default(),
         wire_batch: true,
         budget,
+        heartbeat_ms: 0,
     })
 }
 

@@ -128,6 +128,14 @@ pub struct DeployConfig {
     /// trigger on window-completion notifications; this timer only retries
     /// lost replies and bounds termination latency on a quiet fleet.
     pub probe_fallback_ms: u64,
+    /// Agent liveness heartbeat period in milliseconds, 0 = off (the
+    /// in-process default — threads in one process fail together, so the
+    /// control plane has nothing extra to watch).  `dsim scenario launch`
+    /// turns heartbeats on for its subprocess fleets (default 250 when
+    /// unset) and aborts the run when an agent stays silent past the
+    /// leader's deadline (8x the period, >= 2s).  Heartbeats are
+    /// control-plane only and never perturb simulation results.
+    pub heartbeat_ms: u64,
     /// Directory holding the AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -197,6 +205,7 @@ impl Default for DeployConfig {
             window_budget_min: WindowBudgetSpec::default().min,
             window_budget_max: WindowBudgetSpec::default().max,
             probe_fallback_ms: 2,
+            heartbeat_ms: 0,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -330,6 +339,7 @@ impl ScenarioConfig {
             window_budget_max: get_usize(&d, "window_budget_max", dd.window_budget_max)?,
             probe_fallback_ms: get_usize(&d, "probe_fallback_ms", dd.probe_fallback_ms as usize)?
                 as u64,
+            heartbeat_ms: get_usize(&d, "heartbeat_ms", dd.heartbeat_ms as usize)? as u64,
             artifacts_dir: get_str(&d, "artifacts_dir", &dd.artifacts_dir)?,
         };
         let workload = WorkloadConfig {
@@ -453,6 +463,7 @@ impl ScenarioConfig {
                         "probe_fallback_ms",
                         Json::num(self.deploy.probe_fallback_ms as f64),
                     ),
+                    ("heartbeat_ms", Json::num(self.deploy.heartbeat_ms as f64)),
                     ("artifacts_dir", Json::str(self.deploy.artifacts_dir.clone())),
                 ]),
             ),

@@ -75,6 +75,11 @@ pub struct AgentConfig {
     /// [`crate::coordinator::adaptive`]).  Windows resume where they left
     /// off, so the budget only shapes transport latency, never results.
     pub budget: WindowBudgetSpec,
+    /// Liveness beacon period toward the leader, in milliseconds (0 =
+    /// off, the in-process default).  Multi-process fleets run with this
+    /// on so the leader can tell a dead agent from a slow one; heartbeats
+    /// are control-plane only and never touch simulation results.
+    pub heartbeat_ms: u64,
 }
 
 /// Runs an agent until `Shutdown`.  Generic over the transport so the same
@@ -102,6 +107,10 @@ pub struct AgentRuntime<T: Transport<Payload>> {
     /// `FinalStats` (delta reporting, same scheme as
     /// `wire_bytes_reported`).
     send_block_reported: u64,
+    /// Fatal faults raised by this runtime's own send path (writer
+    /// already dead); checked alongside `Transport::take_failures` each
+    /// loop turn.
+    local_fatal: Vec<String>,
 }
 
 impl<T: Transport<Payload>> AgentRuntime<T> {
@@ -124,6 +133,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             wire_bytes_reported: 0,
             send_block_seen: 0,
             send_block_reported: 0,
+            local_fatal: Vec::new(),
         }
     }
 
@@ -140,16 +150,54 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
         &self.space
     }
 
-    /// Main loop; returns on `Shutdown`.
-    pub fn run(&mut self) {
+    /// Main loop; returns `Ok(())` on `Shutdown`.  A fatal transport
+    /// fault — a dead per-peer writer, a poisoned inbound connection —
+    /// aborts the loop with an error after a best-effort `AgentFailed`
+    /// report to the leader: the old behavior (log "run will stall" and
+    /// keep looping) hung the whole fleet.
+    pub fn run(&mut self) -> anyhow::Result<()> {
         self.publish_perf();
+        let heartbeat = Duration::from_millis(self.cfg.heartbeat_ms);
+        let mut last_beat = std::time::Instant::now();
+        let mut beat_seq: u64 = 0;
         loop {
+            // 0. Liveness: fail fast on any fatal transport fault, and
+            //    beat toward the leader on schedule.  Wall-clock reads
+            //    stay off the simulation path — heartbeats are
+            //    control-plane only.
+            let mut faults: Vec<String> = std::mem::take(&mut self.local_fatal);
+            faults.extend(self.transport.take_failures().iter().map(|f| f.to_string()));
+            if !faults.is_empty() {
+                let reason = faults.join("; ");
+                log::error!("{}: fatal transport failure: {reason}", self.cfg.me);
+                // Best-effort: the leader's channel may be the dead one.
+                let _ = self.transport.send(
+                    LEADER,
+                    NetMsg::Control(ControlMsg::AgentFailed {
+                        from: self.cfg.me,
+                        reason: reason.clone(),
+                    }),
+                );
+                anyhow::bail!("fatal transport failure: {reason}");
+            }
+            if !heartbeat.is_zero() && last_beat.elapsed() >= heartbeat {
+                last_beat = std::time::Instant::now();
+                beat_seq += 1;
+                let _ = self.transport.send(
+                    LEADER,
+                    NetMsg::Control(ControlMsg::Heartbeat {
+                        from: self.cfg.me,
+                        seq: beat_seq,
+                    }),
+                );
+            }
+
             // 1. Ingest everything queued on the transport.
             let mut got_any = false;
             for msg in self.transport.drain() {
                 got_any = true;
                 if !self.handle(msg) {
-                    return;
+                    return Ok(());
                 }
             }
 
@@ -182,7 +230,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 }
                 if let Some(m) = msg {
                     if !self.handle(m) {
-                        return;
+                        return Ok(());
                     }
                 }
             }
@@ -600,10 +648,11 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                         bound,
                     },
                 ) {
-                    // Undeliverable events keep sent != received, so the
-                    // run fails loudly at max_wall rather than silently
-                    // diverging.
-                    log::error!("{}: send batch to {to} (run will stall): {e:#}", self.cfg.me);
+                    // A lost WindowBatch means promises this agent already
+                    // made can no longer be kept: fatal.  The main loop
+                    // reports to the leader and exits on the next turn.
+                    log::error!("{}: send batch to {to} (aborting run): {e:#}", self.cfg.me);
+                    self.local_fatal.push(format!("send batch to {to}: {e:#}"));
                 }
             }
             // One leader frame per completed window (or result batch):
@@ -654,7 +703,8 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                         bound,
                     },
                 ) {
-                    log::error!("{}: send event to {to}: {e:#}", self.cfg.me);
+                    log::error!("{}: send event to {to} (aborting run): {e:#}", self.cfg.me);
+                    self.local_fatal.push(format!("send event to {to}: {e:#}"));
                 }
             }
             for (to, sync) in out.sync {
@@ -764,6 +814,10 @@ pub struct HostStatsView {
     /// Adaptive writer-queue halving steps — depth decayed after the
     /// occupancy high-water subsided (0 under a fixed policy).
     pub queue_shrinks: u64,
+    /// Oversized inbound frames this endpoint's readers drained and
+    /// discarded (non-zero means a frame-limit mismatch somewhere in the
+    /// fleet; data-plane skips additionally abort the run).
+    pub frames_skipped: u64,
     pub lvt_s: f64,
 }
 
@@ -809,6 +863,7 @@ impl HostStatsView {
             send_block_us: wire.send_block_us,
             queue_grows: wire.queue_grows,
             queue_shrinks: wire.queue_shrinks,
+            frames_skipped: wire.frames_skipped,
             lvt_s,
         }
     }
@@ -849,6 +904,7 @@ impl HostStatsView {
             ("send_block_us", Json::num(self.send_block_us as f64)),
             ("queue_grows", Json::num(self.queue_grows as f64)),
             ("queue_shrinks", Json::num(self.queue_shrinks as f64)),
+            ("frames_skipped", Json::num(self.frames_skipped as f64)),
             ("lvt", Json::num(self.lvt_s)),
         ])
     }
@@ -887,6 +943,7 @@ impl HostStatsView {
             send_block_us: opt("send_block_us"),
             queue_grows: opt("queue_grows"),
             queue_shrinks: opt("queue_shrinks"),
+            frames_skipped: opt("frames_skipped"),
             lvt_s: j.get("lvt")?.as_f64()?,
         })
     }
@@ -920,6 +977,7 @@ mod tests {
             event_queue: EventQueueKind::default(),
             wire_batch,
             budget: WindowBudgetSpec::default(),
+            heartbeat_ms: 0,
         };
         let backend = Arc::new(ComputeBackend::auto(Path::new("artifacts")));
         AgentRuntime::new(cfg, ep, backend)

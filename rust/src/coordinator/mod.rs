@@ -23,7 +23,7 @@ pub use adaptive::{
 };
 pub use agent::{AgentConfig, AgentRuntime, HostStatsView, LEADER};
 pub use scheduler::PlacementScheduler;
-pub use termination::{ProbeAnswer, TerminationDetector};
+pub use termination::{LivenessMonitor, ProbeAnswer, TerminationDetector};
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -97,6 +97,9 @@ pub struct RunReport {
     /// side of the controller, taken when occupancy high-water subsides
     /// (0 under the fixed policy and on in-proc runs).
     pub queue_shrinks: u64,
+    /// Oversized inbound frames the fleet's readers drained and discarded
+    /// (0 on healthy runs; non-zero flags a frame-limit mismatch).
+    pub frames_skipped: u64,
     /// Content fingerprint of the scenario file that produced this run
     /// (see [`crate::scenario`]); empty for runs assembled in code.  With
     /// it, any result row is reproducible from its scenario file alone.
@@ -386,6 +389,7 @@ impl Deployment {
                 event_queue: self.event_queue,
                 wire_batch: self.wire_batch,
                 budget: self.budget,
+                heartbeat_ms: 0,
             };
             let backend = Arc::clone(&backend);
             handles.push(
@@ -399,8 +403,10 @@ impl Deployment {
                                 AgentRuntime::new(cfg, ep, backend).run()
                             }),
                         );
-                        if let Err(p) = result {
-                            eprintln!("agent {a} PANICKED: {p:?}");
+                        match result {
+                            Err(p) => eprintln!("agent {a} PANICKED: {p:?}"),
+                            Ok(Err(e)) => eprintln!("agent {a} FAILED: {e:#}"),
+                            Ok(Ok(())) => {}
                         }
                     })
                     .context("spawn agent thread")?,
@@ -667,6 +673,7 @@ impl Deployment {
             let mut send_block_us = 0;
             let mut queue_grows = 0;
             let mut queue_shrinks = 0;
+            let mut frames_skipped = 0;
             let mut per_agent = Vec::new();
             for (a, s) in &st.final_stats {
                 events += s.events_processed;
@@ -691,6 +698,7 @@ impl Deployment {
                 send_block_us += s.send_block_us;
                 queue_grows += s.queue_grows;
                 queue_shrinks += s.queue_shrinks;
+                frames_skipped += s.frames_skipped;
                 per_agent.push((*a, *s));
             }
             if budget_min == u64::MAX {
@@ -722,6 +730,7 @@ impl Deployment {
                 send_block_us,
                 queue_grows,
                 queue_shrinks,
+                frames_skipped,
                 scenario_fingerprint: self.scenario_fp.clone(),
                 pool: st.pool,
                 per_agent,

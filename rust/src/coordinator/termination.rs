@@ -160,6 +160,44 @@ impl TerminationDetector {
     }
 }
 
+/// Leader-side agent liveness: tracks when each fleet member was last
+/// heard from (heartbeat, probe reply, window report, final stats — any
+/// control-plane sign of life counts) and flags the first agent silent
+/// past the deadline.  Purely wall-clock — liveness is about real time by
+/// definition — and leader-local, so it never touches simulation results.
+pub struct LivenessMonitor {
+    deadline: std::time::Duration,
+    last_seen: BTreeMap<AgentId, std::time::Instant>,
+}
+
+impl LivenessMonitor {
+    /// Start the clock for every agent in `fleet` now (agents get the
+    /// full deadline to produce their first sign of life).
+    pub fn new(fleet: &[AgentId], deadline: std::time::Duration) -> Self {
+        let now = std::time::Instant::now();
+        LivenessMonitor {
+            deadline,
+            last_seen: fleet.iter().map(|&a| (a, now)).collect(),
+        }
+    }
+
+    /// Record a sign of life from `agent`.
+    pub fn note(&mut self, agent: AgentId) {
+        if let Some(t) = self.last_seen.get_mut(&agent) {
+            *t = std::time::Instant::now();
+        }
+    }
+
+    /// The first agent silent past the deadline, if any.
+    pub fn overdue(&self) -> Option<AgentId> {
+        let now = std::time::Instant::now();
+        self.last_seen
+            .iter()
+            .find(|(_, &t)| now.duration_since(t) > self.deadline)
+            .map(|(&a, _)| a)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,5 +317,18 @@ mod tests {
         let _r2 = d.start_round();
         assert!(!d.ingest(r1, AgentId(1), ans(true, 0, 0)));
         assert_eq!(d.round(), 2);
+    }
+
+    #[test]
+    fn liveness_flags_silent_agent_and_recovers_on_note() {
+        let fleet = [AgentId(1), AgentId(2)];
+        let mut m = LivenessMonitor::new(&fleet, std::time::Duration::from_millis(50));
+        assert_eq!(m.overdue(), None, "fresh fleet gets the full deadline");
+        std::thread::sleep(std::time::Duration::from_millis(70));
+        // Agent 2 checks in; agent 1 stays silent.
+        m.note(AgentId(2));
+        assert_eq!(m.overdue(), Some(AgentId(1)));
+        m.note(AgentId(1));
+        assert_eq!(m.overdue(), None);
     }
 }

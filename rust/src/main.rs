@@ -4,12 +4,16 @@
 //!
 //! ```text
 //! dsim run <config.json> [--results out.jsonl]   run a workload from config
-//! dsim scenario validate|run|sweep <file>        declarative scenario front door
+//! dsim scenario validate|run|launch|sweep <file> declarative scenario front door
 //! dsim demo                                      run the two-center demo
 //! dsim sweep-bandwidth <mbps...>                 fig. 2 style sweep
 //! dsim agent --me N --bind ADDR --peers SPEC     TCP-mode agent process
 //! dsim check-artifacts [dir]                     verify AOT artifacts load
 //! ```
+//!
+//! `scenario launch` is `scenario run` with one OS process per agent:
+//! the leader spawns the fleet, heartbeats police it, and a dead agent
+//! aborts the run with a partial report instead of a hang.
 use std::path::Path;
 use std::process::ExitCode;
 
@@ -56,22 +60,27 @@ USAGE:
   dsim run <config.json> [--results out.jsonl]
   dsim scenario validate <file.json> [--set path=value ...]
   dsim scenario run      <file.json> [--set path=value ...] [--results out.jsonl]
+  dsim scenario launch   <file.json> [--set path=value ...] [--results out.jsonl]
   dsim scenario sweep    <file.json> [--set path=value ...]
   dsim demo
   dsim sweep-bandwidth <mbps> [<mbps> ...]
   dsim agent --me <id> --bind <addr> --peers <id=addr,id=addr,...>
-             [--lookahead s] [--workers n] [--exec window|step]
-             [--event-queue heap|ladder]
+             [--lookahead s] [--workers n] [--protocol demand|eager]
+             [--exec window|step] [--event-queue heap|ladder]
              [--max-frame-mib n] [--no-wire-batch]
              [--wire-codec binary|json]
              [--writer-queue-frames adaptive|fixed(N)|n]
              [--window-budget adaptive|fixed(N)|fixed(inf)]
              [--window-budget-min n] [--window-budget-max n]
+             [--heartbeat-ms n]
   dsim check-artifacts [dir]
 
 A scenario file declares everything a run needs — contexts, component
 graphs or grid presets, deploy knobs, vars and sweep axes — see
 examples/scenarios/ and the `dsim::scenario` module docs for the schema.
+`scenario launch` runs a tcp scenario as a real multi-process fleet
+(one `dsim agent` process per agent, leader-side liveness); its result
+fingerprint matches `scenario run` on the same file.
 "
     );
 }
@@ -98,7 +107,7 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     // Budget trajectory + wire backlog: the compute-bound vs wire-bound
     // signal (constant trajectory under the default fixed budget).
     println!(
-        "  budget: min={} max={} last={} grows={} shrinks={} truncated={} queue_hw={} queue_grows={} queue_shrinks={} blocked_us={}",
+        "  budget: min={} max={} last={} grows={} shrinks={} truncated={} queue_hw={} queue_grows={} queue_shrinks={} blocked_us={} frames_skipped={}",
         report.budget_min,
         report.budget_max,
         report.budget_last,
@@ -108,7 +117,8 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         report.queue_highwater,
         report.queue_grows,
         report.queue_shrinks,
-        report.send_block_us
+        report.send_block_us,
+        report.frames_skipped
     );
     if let Some(i) = args.iter().position(|a| a == "--results") {
         let out = args
@@ -126,10 +136,9 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
 fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
     use dsim::scenario;
 
-    let sub = args
-        .first()
-        .map(String::as_str)
-        .ok_or_else(|| anyhow::anyhow!("usage: dsim scenario validate|run|sweep <file.json>"))?;
+    let sub = args.first().map(String::as_str).ok_or_else(|| {
+        anyhow::anyhow!("usage: dsim scenario validate|run|launch|sweep <file.json>")
+    })?;
     let path = args
         .get(1)
         .ok_or_else(|| anyhow::anyhow!("usage: dsim scenario {sub} <file.json>"))?;
@@ -164,8 +173,8 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
             }
         }
     }
-    if results_path.is_some() && sub != "run" {
-        anyhow::bail!("--results only applies to `dsim scenario run`");
+    if results_path.is_some() && sub != "run" && sub != "launch" {
+        anyhow::bail!("--results only applies to `dsim scenario run` and `dsim scenario launch`");
     }
 
     match sub {
@@ -193,10 +202,15 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
             println!("{path}: {} sweep point(s) valid", points.len());
             Ok(())
         }
-        "run" => {
+        "run" | "launch" => {
             let doc = scenario::load_doc(Path::new(path), &sets)?;
             let compiled = scenario::compile(&scenario::without_sweep(&doc))?;
-            let outcomes = compiled.run()?;
+            let outcomes = if sub == "launch" {
+                // One real OS process per agent, leader-side liveness.
+                scenario::launch(&compiled, &scenario::LaunchOptions::default())?
+            } else {
+                compiled.run()?
+            };
             for o in &outcomes {
                 println!("{}", o.row());
             }
@@ -239,7 +253,7 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
             Ok(())
         }
         other => Err(anyhow::anyhow!(
-            "unknown scenario subcommand '{other}' (validate|run|sweep)"
+            "unknown scenario subcommand '{other}' (validate|run|launch|sweep)"
         )),
     }
 }
@@ -310,6 +324,17 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         .transpose()?
         .unwrap_or(0.05);
     let workers: usize = get("--workers").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    // Conservative-sync variant (demand-driven null messages by default).
+    let protocol: dsim::engine::SyncProtocol = get("--protocol")
+        .map(|s| s.parse().map_err(anyhow::Error::msg))
+        .transpose()?
+        .unwrap_or_default();
+    // Liveness heartbeat period toward the leader; 0 disables (the
+    // in-process default — `scenario launch` always sets it).
+    let heartbeat_ms: u64 = get("--heartbeat-ms")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0);
     let exec = get("--exec")
         .map(|s| s.parse().map_err(anyhow::Error::msg))
         .transpose()?
@@ -373,15 +398,20 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         me,
         peers: peer_ids,
         lookahead,
-        protocol: Default::default(),
+        protocol,
         workers,
         exec,
         event_queue,
         wire_batch,
         budget,
+        heartbeat_ms,
     };
     println!("agent {me} listening on {bind}");
-    AgentRuntime::new(cfg, transport, backend).run();
+    // A fatal transport failure exits nonzero so a supervising leader
+    // (or shell) sees the death instead of a silent stall.
+    AgentRuntime::new(cfg, transport, backend)
+        .run()
+        .map_err(|e| anyhow::anyhow!("agent {me}: {e:#}"))?;
     println!("agent {me} shut down");
     Ok(())
 }

@@ -88,6 +88,9 @@ pub struct ContextDecl {
     pub name: String,
     /// Explicit model lookahead override (virtual seconds).
     pub lookahead: Option<f64>,
+    /// Placement pins for tcp fleets: `(affinity group, agent id)` pairs
+    /// that override the default round-robin group -> agent mapping.
+    pub place: Vec<(usize, usize)>,
     pub model: ContextModel,
 }
 
@@ -98,6 +101,11 @@ pub struct ScenarioDoc {
     pub description: String,
     pub transport: RunTransport,
     pub deploy: DeployConfig,
+    /// Hosts eligible for multi-process placement (`dsim scenario
+    /// launch`).  Today only localhost entries are accepted at launch
+    /// time; the field is parsed here so remote placement can land
+    /// without a schema change.
+    pub hosts: Vec<String>,
     pub contexts: Vec<ContextDecl>,
 }
 
@@ -239,7 +247,8 @@ fn substitute(
 // Section parsers
 // ---------------------------------------------------------------------------
 
-const DEPLOY_KEYS: [&str; 18] = [
+const DEPLOY_KEYS: [&str; 19] = [
+    "heartbeat_ms",
     "transport",
     "agents",
     "workers",
@@ -321,6 +330,7 @@ fn parse_deploy(j: &Json, path: &str) -> Result<(RunTransport, DeployConfig)> {
         window_budget_min: usize_knob("window_budget_min", d.window_budget_min)?,
         window_budget_max: usize_knob("window_budget_max", d.window_budget_max)?,
         probe_fallback_ms: usize_knob("probe_fallback_ms", d.probe_fallback_ms as usize)? as u64,
+        heartbeat_ms: usize_knob("heartbeat_ms", d.heartbeat_ms as usize)? as u64,
         artifacts_dir: str_knob("artifacts_dir", &d.artifacts_dir)?,
     };
     deploy
@@ -447,7 +457,30 @@ fn resolve_refs(
     })
 }
 
-const CONTEXT_KEYS: [&str; 5] = ["name", "lookahead", "grid", "components", "bootstrap"];
+const CONTEXT_KEYS: [&str; 6] = ["name", "lookahead", "place", "grid", "components", "bootstrap"];
+const PLACE_KEYS: [&str; 2] = ["group", "agent"];
+
+/// Parse a `place` pin: one `{"group": G, "agent": A}` object, or an
+/// array of them.  Range/uniqueness checks against the deploy section
+/// happen in [`ScenarioDoc::parse`], which can see both.
+fn parse_place(j: &Json, path: &str) -> Result<Vec<(usize, usize)>> {
+    let one = |j: &Json, path: &str| -> Result<(usize, usize)> {
+        check_keys(j, path, &PLACE_KEYS)?;
+        let group = as_u64_at(req(j, path, "group")?, &format!("{path}.group"))? as usize;
+        let agent = as_u64_at(req(j, path, "agent")?, &format!("{path}.agent"))? as usize;
+        Ok((group, agent))
+    };
+    match j {
+        Json::Arr(items) => {
+            let mut out = Vec::with_capacity(items.len());
+            for (i, v) in items.iter().enumerate() {
+                out.push(one(v, &format!("{path}.{i}"))?);
+            }
+            Ok(out)
+        }
+        other => Ok(vec![one(other, path)?]),
+    }
+}
 const COMPONENT_KEYS: [&str; 4] = ["name", "kind", "group", "params"];
 const BOOTSTRAP_KEYS: [&str; 3] = ["time", "to", "payload"];
 
@@ -466,6 +499,10 @@ fn parse_context(j: &Json, path: &str) -> Result<ContextDecl> {
             }
             Some(l)
         }
+    };
+    let place = match j.get("place") {
+        None => Vec::new(),
+        Some(p) => parse_place(p, &format!("{path}.place"))?,
     };
     let model = match (j.get("grid"), j.get("components")) {
         (Some(_), Some(_)) => {
@@ -486,6 +523,7 @@ fn parse_context(j: &Json, path: &str) -> Result<ContextDecl> {
     Ok(ContextDecl {
         name,
         lookahead,
+        place,
         model,
     })
 }
@@ -579,7 +617,15 @@ fn parse_components(c: &Json, bootstrap: Option<&Json>, path: &str) -> Result<Co
     })
 }
 
-const TOP_KEYS: [&str; 6] = ["name", "description", "vars", "deploy", "contexts", "sweep"];
+const TOP_KEYS: [&str; 7] = [
+    "name",
+    "description",
+    "vars",
+    "deploy",
+    "hosts",
+    "contexts",
+    "sweep",
+];
 
 impl ScenarioDoc {
     /// Parse a raw (already `--set`-overridden) document: strict keys,
@@ -605,6 +651,31 @@ impl ScenarioDoc {
         let deploy_raw = doc.get("deploy").cloned().unwrap_or_else(|| Json::obj(vec![]));
         let deploy_sub = substitute(&deploy_raw, &vars, "deploy")?;
         let (transport, deploy) = parse_deploy(&deploy_sub, "deploy")?;
+
+        let hosts = match doc.get("hosts") {
+            None => Vec::new(),
+            Some(h) => {
+                let h = substitute(h, &vars, "hosts")?;
+                let list = h
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("at hosts: expected an array of host strings"))?;
+                let mut out = Vec::with_capacity(list.len());
+                for (i, v) in list.iter().enumerate() {
+                    let s = as_str_at(v, &format!("hosts.{i}"))?;
+                    if s.is_empty() {
+                        return err_at(&format!("hosts.{i}"), "must be non-empty");
+                    }
+                    out.push(s.to_string());
+                }
+                out
+            }
+        };
+        if !hosts.is_empty() && transport != RunTransport::Tcp {
+            return err_at(
+                "hosts",
+                "a host list only applies to transport=tcp fleets (dsim scenario launch)",
+            );
+        }
 
         let contexts_raw = req(doc, "<root>", "contexts")?;
         let list = contexts_raw
@@ -644,11 +715,43 @@ impl ScenarioDoc {
                  explicitly (or use transport=inproc for the perf-value scheduler)",
             );
         }
+        // Placement pins name real fleet agents, and only tcp fleets
+        // have agents to pin to.
+        for (i, ctx) in contexts.iter().enumerate() {
+            if ctx.place.is_empty() {
+                continue;
+            }
+            if transport != RunTransport::Tcp {
+                return err_at(
+                    &format!("contexts.{i}.place"),
+                    "placement pins only apply to transport=tcp fleets",
+                );
+            }
+            let mut pinned = std::collections::BTreeSet::new();
+            for (gi, (group, agent)) in ctx.place.iter().enumerate() {
+                if *agent == 0 || *agent > deploy.agents {
+                    return err_at(
+                        &format!("contexts.{i}.place.{gi}.agent"),
+                        format!(
+                            "agent {agent} is outside the fleet (1..={} from deploy.agents)",
+                            deploy.agents
+                        ),
+                    );
+                }
+                if !pinned.insert(*group) {
+                    return err_at(
+                        &format!("contexts.{i}.place.{gi}.group"),
+                        format!("group {group} is pinned more than once"),
+                    );
+                }
+            }
+        }
         Ok(ScenarioDoc {
             name,
             description,
             transport,
             deploy,
+            hosts,
             contexts,
         })
     }

@@ -12,14 +12,19 @@
 
 use crate::util::json::Json;
 
-/// Fingerprint a scenario document (see module docs).
-pub fn fingerprint(doc: &Json) -> String {
-    let text = doc.to_string();
+/// FNV-1a 64 of arbitrary text as 16 hex digits — the digest primitive
+/// behind content fingerprints and the CLI's compact result digests.
+pub fn fnv16(text: &str) -> String {
     let mut h = 0xcbf29ce484222325u64;
     for b in text.as_bytes() {
         h = (h ^ *b as u64).wrapping_mul(0x100000001b3);
     }
     format!("{h:016x}")
+}
+
+/// Fingerprint a scenario document (see module docs).
+pub fn fingerprint(doc: &Json) -> String {
+    fnv16(&doc.to_string())
 }
 
 #[cfg(test)]

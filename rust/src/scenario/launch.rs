@@ -1,0 +1,283 @@
+//! Multi-process fleet launch: `dsim scenario launch <file>`.
+//!
+//! The leader reserves one localhost port per fleet member, spawns one
+//! real `dsim agent` subprocess per agent with the full peer map and
+//! every deploy knob forwarded as CLI flags, then drives the run through
+//! the same generic leader the in-process TCP path uses
+//! ([`crate::testkit::drive_fleet_leader`]).  Because the deploy
+//! sequence and knobs are identical, a launched run's determinism
+//! fingerprint is bit-identical to `dsim scenario run` on the same file.
+//!
+//! Liveness: launched agents heartbeat over the control channel
+//! (`deploy.heartbeat_ms`, default 250 ms when unset); the leader aborts
+//! the run if any agent misses its deadline (8 heartbeat periods, at
+//! least 2 s), exits, or reports a fatal transport failure — carrying
+//! the partial report and the failed agent's identity instead of
+//! stalling forever.
+//!
+//! The scenario-level `hosts` list is parsed and validated here, but
+//! only localhost entries are accepted today: remote placement is a
+//! spawn-mechanism change (ssh/daemon), not a schema or driver change.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener};
+use std::process::{Child, Command};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::LEADER;
+use crate::model::Payload;
+use crate::testkit::{drive_fleet_leader, DriveOptions, FleetWatchdog};
+use crate::transport::{TcpOptions, TcpTransport};
+use crate::util::AgentId;
+
+use super::{CompiledScenario, RunTransport, ScenarioOutcome};
+
+/// Heartbeat period for launched fleets when the scenario leaves
+/// `deploy.heartbeat_ms` at 0 (the in-process default of "off").
+pub const DEFAULT_LAUNCH_HEARTBEAT_MS: u64 = 250;
+
+/// Knobs for [`spawn_fleet`].
+#[derive(Default)]
+pub struct LaunchOptions {
+    /// Binary to spawn agents with; defaults to the current executable.
+    pub agent_bin: Option<std::path::PathBuf>,
+    /// Liveness deadline override; defaults to 8 heartbeat periods,
+    /// clamped to at least 2 s.  Must exceed the longest wall-clock
+    /// window execution, or a busy agent reads as a dead one.
+    pub liveness_deadline: Option<Duration>,
+}
+
+/// A spawned-but-not-yet-driven fleet: the leader endpoint plus one OS
+/// process per agent.  [`run_launched`] drives it; tests can grab
+/// [`LaunchedFleet::process_handle`] first to kill agents mid-run.
+pub struct LaunchedFleet {
+    leader: TcpTransport<Payload>,
+    ids: Vec<AgentId>,
+    children: Arc<Mutex<Vec<(AgentId, Child)>>>,
+    deadline: Duration,
+}
+
+impl LaunchedFleet {
+    /// Shared handle to the agent processes, for concurrent process
+    /// control (the kill-an-agent integration test SIGKILLs through it
+    /// while [`run_launched`] is driving).
+    pub fn process_handle(&self) -> Arc<Mutex<Vec<(AgentId, Child)>>> {
+        Arc::clone(&self.children)
+    }
+
+    /// Per-iteration subprocess health probe for the drive loop: any
+    /// agent process that has exited mid-run fails the run by name.
+    fn watchdog(&self) -> FleetWatchdog {
+        let children = Arc::clone(&self.children);
+        Box::new(move || {
+            let mut kids = children.lock().unwrap();
+            for (id, child) in kids.iter_mut() {
+                if let Ok(Some(status)) = child.try_wait() {
+                    return Some((*id, format!("agent process exited mid-run ({status})")));
+                }
+            }
+            None
+        })
+    }
+
+    /// Collect the fleet: give agents a grace period to exit on the
+    /// shutdown broadcast, then kill whatever is left.
+    fn reap(&self) {
+        let mut kids = self.children.lock().unwrap();
+        let grace = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < grace {
+            if kids
+                .iter_mut()
+                .all(|(_, c)| matches!(c.try_wait(), Ok(Some(_))))
+            {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        for (_, c) in kids.iter_mut() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Reject anything but loopback in the `hosts` list — remote spawning
+/// is reserved schema, not yet a capability.
+fn check_hosts(hosts: &[String]) -> Result<()> {
+    for h in hosts {
+        // Strip a ":port" suffix; a second ':' means a bare IPv6 form.
+        let name = match h.split_once(':') {
+            Some((host, port)) if !port.contains(':') => host,
+            _ => h.as_str(),
+        };
+        if !matches!(name, "localhost" | "127.0.0.1" | "::1") {
+            bail!(
+                "hosts: '{h}' is not a localhost alias — remote agent placement is \
+                 not supported yet (the hosts list is reserved schema)"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Reserve localhost ports for the whole fleet, build the leader's
+/// endpoint, and spawn one `dsim agent` subprocess per agent with every
+/// deploy knob forwarded.  The agents' reserved listeners are dropped
+/// for the children to rebind; `TcpTransport`'s connect retry window
+/// (~5 s) covers the handover.
+pub fn spawn_fleet(sc: &CompiledScenario, opts: &LaunchOptions) -> Result<LaunchedFleet> {
+    if sc.transport != RunTransport::Tcp {
+        bail!("scenario launch needs deploy.transport = tcp (got {})", sc.transport);
+    }
+    if sc.deploy.agents == 0 {
+        bail!("deploy.agents must be >= 1");
+    }
+    check_hosts(&sc.hosts)?;
+    let ctx = sc
+        .contexts
+        .first()
+        .ok_or_else(|| anyhow!("scenario has no contexts"))?;
+
+    let heartbeat_ms = if sc.deploy.heartbeat_ms == 0 {
+        DEFAULT_LAUNCH_HEARTBEAT_MS
+    } else {
+        sc.deploy.heartbeat_ms
+    };
+    let deadline = opts
+        .liveness_deadline
+        .unwrap_or_else(|| Duration::from_millis(heartbeat_ms * 8).max(Duration::from_secs(2)));
+
+    // Reserve distinct ports by binding, keep the leader's listener
+    // alive, free the agents' for their processes to rebind.
+    let mut ids = vec![LEADER];
+    ids.extend((1..=sc.deploy.agents as u64).map(AgentId));
+    let mut listeners: Vec<TcpListener> = Vec::with_capacity(ids.len());
+    for _ in &ids {
+        listeners.push(TcpListener::bind("127.0.0.1:0").context("reserve fleet port")?);
+    }
+    let peers: HashMap<AgentId, SocketAddr> = ids
+        .iter()
+        .zip(&listeners)
+        .map(|(a, l)| Ok((*a, l.local_addr()?)))
+        .collect::<Result<_>>()?;
+    let leader_listener = listeners.remove(0);
+    drop(listeners);
+    let tcp_opts = TcpOptions {
+        max_frame: sc.deploy.max_frame_mib << 20,
+        codec: sc.deploy.wire_codec,
+        writer_queue: sc.deploy.writer_queue_frames,
+    };
+    let leader = TcpTransport::from_listener(LEADER, leader_listener, peers.clone(), tcp_opts)
+        .context("leader endpoint")?;
+
+    let peers_spec = ids
+        .iter()
+        .map(|a| format!("{}={}", a.raw(), peers[a]))
+        .collect::<Vec<_>>()
+        .join(",");
+    let bin = match &opts.agent_bin {
+        Some(p) => p.clone(),
+        None => std::env::current_exe().context("locate dsim binary for agent spawn")?,
+    };
+    let budget = sc.deploy.budget_spec();
+    let mut children = Vec::with_capacity(sc.deploy.agents);
+    for &a in &ids[1..] {
+        let mut cmd = Command::new(&bin);
+        cmd.arg("agent")
+            .args(["--me", &a.raw().to_string()])
+            .args(["--bind", &peers[&a].to_string()])
+            .args(["--peers", &peers_spec])
+            .args(["--lookahead", &ctx.generated.scenario.lookahead.to_string()])
+            .args(["--workers", &sc.deploy.workers.to_string()])
+            .args(["--protocol", &sc.deploy.protocol.to_string()])
+            .args(["--exec", &sc.deploy.exec.to_string()])
+            .args(["--event-queue", &sc.deploy.event_queue.to_string()])
+            .args(["--max-frame-mib", &sc.deploy.max_frame_mib.to_string()])
+            .args(["--wire-codec", &sc.deploy.wire_codec.to_string()])
+            .args([
+                "--writer-queue-frames",
+                &sc.deploy.writer_queue_frames.to_string(),
+            ])
+            .args(["--window-budget", &budget.mode.to_string()])
+            .args(["--window-budget-min", &budget.min.to_string()])
+            .args(["--window-budget-max", &budget.max.to_string()])
+            .args(["--heartbeat-ms", &heartbeat_ms.to_string()]);
+        if !sc.deploy.wire_batch {
+            cmd.arg("--no-wire-batch");
+        }
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("spawn agent {a} ({})", bin.display()))?;
+        children.push((a, child));
+    }
+
+    Ok(LaunchedFleet {
+        leader,
+        ids: ids[1..].to_vec(),
+        children: Arc::new(Mutex::new(children)),
+        deadline,
+    })
+}
+
+/// Drive an already-spawned fleet to completion (or to a clean abort
+/// naming the failed agent), then collect the processes.
+pub fn run_launched(sc: &CompiledScenario, fleet: &LaunchedFleet) -> Result<Vec<ScenarioOutcome>> {
+    let ctx = sc
+        .contexts
+        .first()
+        .ok_or_else(|| anyhow!("scenario has no contexts"))?;
+    let driven = ctx.placement_pins().map(|pins| {
+        drive_fleet_leader(
+            &fleet.leader,
+            &fleet.ids,
+            &ctx.generated,
+            DriveOptions {
+                pins,
+                liveness_deadline: Some(fleet.deadline),
+                run_timeout: Duration::from_secs(120),
+                watchdog: Some(fleet.watchdog()),
+            },
+        )
+    });
+    fleet.reap();
+    let out = driven?.map_err(|abort| anyhow!("{abort}"))?;
+    let windows: u64 = out.stats.iter().map(|(_, s)| s.windows).sum();
+    Ok(vec![ScenarioOutcome {
+        context: ctx.name.clone(),
+        wall_s: out.wall_s,
+        events: out.events,
+        remote_events: out.remote_events,
+        makespan_s: out.makespan_s,
+        jobs: out.jobs,
+        transfers: out.transfers,
+        windows,
+        fingerprint: out.fingerprint,
+        scenario_fingerprint: sc.fingerprint.clone(),
+        pool: Some(out.pool),
+    }])
+}
+
+/// [`spawn_fleet`] + [`run_launched`] in one call — what
+/// `dsim scenario launch <file>` executes.
+pub fn launch(sc: &CompiledScenario, opts: &LaunchOptions) -> Result<Vec<ScenarioOutcome>> {
+    sc.preflight()?;
+    let fleet = spawn_fleet(sc, opts)?;
+    run_launched(sc, &fleet)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn non_localhost_hosts_are_rejected() {
+        let hosts: Vec<String> =
+            vec!["localhost".into(), "127.0.0.1:9000".into(), "::1".into()];
+        check_hosts(&hosts).unwrap();
+        let err = check_hosts(&[String::from("db.internal:22")]).unwrap_err();
+        assert!(format!("{err:#}").contains("not supported yet"), "{err:#}");
+    }
+}

@@ -11,8 +11,11 @@
 //! machinery for in-proc *and* TCP fleets, and threads a content
 //! fingerprint into every [`RunReport`] so any result row is
 //! reproducible from its file.  Surfaced as
-//! `dsim scenario validate|run|sweep <file> [--set path=value]`; a
-//! bundled library lives in `examples/scenarios/`.
+//! `dsim scenario validate|run|launch|sweep <file> [--set path=value]`;
+//! a bundled library lives in `examples/scenarios/`.  `launch` runs the
+//! same tcp scenario as `run`, but with one real `dsim agent` OS process
+//! per agent and leader-side liveness (see [`launch`][crate::scenario::launch]) —
+//! the determinism fingerprint is bit-identical either way.
 //!
 //! # Schema reference
 //!
@@ -22,6 +25,7 @@
 //!   "description": "what this models",    // optional
 //!   "vars": {"band": 622.0},              // optional scalar table
 //!   "deploy": { ... },                    // optional, all knobs optional
+//!   "hosts": ["localhost"],               // optional, tcp launch placement
 //!   "contexts": [ { ... }, ... ],         // required, >= 1
 //!   "sweep": {"vars.band": [155, 622]}    // optional parameter grid
 //! }
@@ -51,11 +55,19 @@
 //! | `window_budget` | `fixed(N)` \| `fixed(inf)` \| `adaptive` (fixed(16384)) |
 //! | `window_budget_min` / `window_budget_max` | adaptive clamps (256 / 1M) |
 //! | `probe_fallback_ms` | GVT probe fallback cadence (2) |
+//! | `heartbeat_ms` | agent liveness heartbeat period toward the leader, 0 = off (0; `scenario launch` defaults its fleets to 250) |
 //! | `artifacts_dir` | AOT artifact directory ("artifacts") |
 //!
+//! **`hosts`** — host names eligible for `dsim scenario launch` agent
+//! placement (tcp only).  Parsed and validated today but restricted to
+//! localhost aliases; remote placement is reserved schema.
+//!
 //! **`contexts[i]`** — one isolated simulation (own engine, own
-//! results).  Each declares `name` (unique), optional `lookahead`, and
-//! exactly one model:
+//! results).  Each declares `name` (unique), optional `lookahead`,
+//! optional `place` (tcp only: `{"group": G, "agent": A}` or a list of
+//! such pins, overriding the round-robin assignment of affinity group
+//! `G` to fleet agent `A` in `1..=deploy.agents`), and exactly one
+//! model:
 //!
 //! * `"grid"` — a built-in generator preset with its knobs: `preset`
 //!   (`t0t1` default \| `farm` \| `two-center`), `centers`,
@@ -90,6 +102,7 @@
 
 mod doc;
 mod fingerprint;
+pub mod launch;
 mod sweep;
 
 use std::path::Path;
@@ -99,7 +112,8 @@ use anyhow::{anyhow, bail, Context, Result};
 pub use doc::{
     BootstrapDecl, ComponentDecl, ContextDecl, ContextModel, RunTransport, ScenarioDoc,
 };
-pub use fingerprint::fingerprint;
+pub use fingerprint::{fingerprint, fnv16};
+pub use launch::{launch, run_launched, spawn_fleet, LaunchOptions, LaunchedFleet};
 pub use sweep::{
     apply_sets, get_path, point_fingerprint, set_path, sweep_points, without_sweep, SweepPoint,
 };
@@ -119,7 +133,32 @@ use crate::workload::{self, GeneratedScenario};
 /// the coordinator deploys.
 pub struct NamedContext {
     pub name: String,
+    /// Placement pins from the context's `place` block: `(group, agent)`
+    /// overrides for tcp fleets (agent ids already range-checked against
+    /// the deploy section; group range is checked against the compiled
+    /// model at drive time).
+    pub place: Vec<(usize, usize)>,
     pub generated: GeneratedScenario,
+}
+
+impl NamedContext {
+    /// The context's placement pins as fleet agent ids, range-checked
+    /// against the compiled model's affinity-group count.
+    pub fn placement_pins(&self) -> Result<Vec<(usize, crate::util::AgentId)>> {
+        let n_groups = self.generated.scenario.group_count();
+        let mut pins = Vec::with_capacity(self.place.len());
+        for &(group, agent) in &self.place {
+            if group >= n_groups {
+                bail!(
+                    "context '{}': place pins group {group}, but the model has only \
+                     {n_groups} affinity group(s)",
+                    self.name
+                );
+            }
+            pins.push((group, crate::util::AgentId(agent as u64)));
+        }
+        Ok(pins)
+    }
 }
 
 /// A scenario compiled down to the deployment machinery: run it, hand it
@@ -129,6 +168,9 @@ pub struct CompiledScenario {
     pub description: String,
     pub transport: RunTransport,
     pub deploy: DeployConfig,
+    /// Hosts eligible for `dsim scenario launch` placement (localhost
+    /// only today; parsed so remote placement needs no schema change).
+    pub hosts: Vec<String>,
     pub contexts: Vec<NamedContext>,
     /// Content fingerprint of the compiled document (see module docs).
     pub fingerprint: String,
@@ -156,10 +198,14 @@ pub struct ScenarioOutcome {
 }
 
 impl ScenarioOutcome {
-    /// One human-readable result line for the CLI.
+    /// One human-readable result line for the CLI.  Carries a compact
+    /// form of the determinism digest so `scenario run` and
+    /// `scenario launch` output can be compared directly (the CI launch
+    /// smoke greps it).
     pub fn row(&self) -> String {
         format!(
-            "ctx={} wall={:.3}s makespan={:.1}s events={} remote={} jobs={} transfers={} windows={}",
+            "ctx={} wall={:.3}s makespan={:.1}s events={} remote={} jobs={} transfers={} \
+             windows={} fingerprint={}",
             self.context,
             self.wall_s,
             self.makespan_s,
@@ -167,7 +213,8 @@ impl ScenarioOutcome {
             self.remote_events,
             self.jobs,
             self.transfers,
-            self.windows
+            self.windows,
+            fingerprint::fnv16(&self.fingerprint)
         )
     }
 }
@@ -244,6 +291,7 @@ pub fn compile(doc: &Json) -> Result<CompiledScenario> {
             .map_err(|e| anyhow!("at contexts.{i}: {e:#}"))?;
         contexts.push(NamedContext {
             name: ctx.name.clone(),
+            place: ctx.place.clone(),
             generated,
         });
     }
@@ -252,6 +300,7 @@ pub fn compile(doc: &Json) -> Result<CompiledScenario> {
         description: parsed.description,
         transport: parsed.transport,
         deploy: parsed.deploy,
+        hosts: parsed.hosts,
         contexts,
         fingerprint: fp,
         seed: seed.unwrap_or(1),
@@ -343,9 +392,10 @@ impl CompiledScenario {
 
     /// One context over real localhost TCP sockets: the full wire path —
     /// codec, framing, writer queues, window batching — driven by the
-    /// shared generic leader ([`crate::testkit::drive_fleet`]).  The
-    /// driver places groups round-robin (the parser pins
-    /// `deploy.placement = rr` for tcp scenarios) and uses the
+    /// shared generic leader ([`crate::testkit::drive_fleet_leader`])
+    /// over in-process agent threads.  The driver places groups
+    /// round-robin, then applies the context's `place` pins (the parser
+    /// pins `deploy.placement = rr` for tcp scenarios) and uses the
     /// best-effort `ComputeBackend::auto` — `backend`, `artifacts_dir`
     /// and `probe_fallback_ms` are in-proc knobs.
     fn run_tcp(&self, ctx: &NamedContext) -> Result<ScenarioOutcome> {
@@ -362,6 +412,7 @@ impl CompiledScenario {
         let peer_ids: Vec<crate::util::AgentId> = (1..=deploy.agents as u64)
             .map(crate::util::AgentId)
             .collect();
+        let pins = ctx.placement_pins()?;
         let (leader, agents) = crate::testkit::tcp_fleet_n(deploy.agents, opts, |me| AgentConfig {
             me,
             peers: peer_ids.clone(),
@@ -372,8 +423,37 @@ impl CompiledScenario {
             event_queue: deploy.event_queue,
             wire_batch: deploy.wire_batch,
             budget: deploy.budget_spec(),
+            // In-process agent threads share the leader's fate; the
+            // heartbeat channel is for subprocess fleets (`launch`).
+            heartbeat_ms: 0,
         });
-        let out = crate::testkit::drive_fleet(leader, agents, &ctx.generated);
+        let ids = peer_ids.clone();
+        let backend = std::sync::Arc::new(ComputeBackend::auto(Path::new("artifacts")));
+        let mut handles = Vec::new();
+        for (cfg, transport) in agents {
+            let backend = std::sync::Arc::clone(&backend);
+            let me = cfg.me;
+            handles.push(std::thread::spawn(move || {
+                if let Err(e) =
+                    crate::coordinator::AgentRuntime::new(cfg, transport, backend).run()
+                {
+                    eprintln!("agent {me} failed: {e:#}");
+                }
+            }));
+        }
+        let driven = crate::testkit::drive_fleet_leader(
+            &leader,
+            &ids,
+            &ctx.generated,
+            crate::testkit::DriveOptions {
+                pins,
+                ..Default::default()
+            },
+        );
+        for h in handles {
+            let _ = h.join();
+        }
+        let out = driven.map_err(|abort| anyhow!("{abort}"))?;
         let windows: u64 = out.stats.iter().map(|(_, s)| s.windows).sum();
         Ok(ScenarioOutcome {
             context: ctx.name.clone(),

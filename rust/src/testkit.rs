@@ -33,7 +33,7 @@ use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener};
 
 use crate::coordinator::{
-    fingerprint_parts, AgentConfig, AgentRuntime, HostStatsView, ProbeAnswer,
+    fingerprint_parts, AgentConfig, AgentRuntime, HostStatsView, LivenessMonitor, ProbeAnswer,
     TerminationDetector, LEADER,
 };
 use crate::engine::SimTime;
@@ -185,6 +185,89 @@ pub struct FleetOutcome {
     pub stats: Vec<(AgentId, HostStatsView)>,
 }
 
+/// External per-iteration health probe for [`drive_fleet_leader`] —
+/// `Some((agent, reason))` aborts the run.  The multi-process launcher
+/// plugs `Child::try_wait` polling in here.
+pub type FleetWatchdog = Box<dyn FnMut() -> Option<(AgentId, String)> + Send>;
+
+/// Knobs for [`drive_fleet_leader`]; `Default` reproduces the historical
+/// test-driver behaviour (round-robin placement, no liveness, 120 s cap).
+pub struct DriveOptions {
+    /// Placement pins: `(affinity group, agent)` overrides applied on
+    /// top of the default round-robin `group i -> ids[i % n]` mapping.
+    pub pins: Vec<(usize, AgentId)>,
+    /// Abort if an agent goes silent for this long (`None` disables the
+    /// monitor — right for in-process fleets that do not heartbeat).
+    pub liveness_deadline: Option<Duration>,
+    /// Hard wall-clock cap on the whole run.
+    pub run_timeout: Duration,
+    /// Extra per-iteration health check (subprocess exit polling).
+    pub watchdog: Option<FleetWatchdog>,
+}
+
+impl Default for DriveOptions {
+    fn default() -> Self {
+        DriveOptions {
+            pins: Vec::new(),
+            liveness_deadline: None,
+            run_timeout: Duration::from_secs(120),
+            watchdog: None,
+        }
+    }
+}
+
+/// Why a leader-driven run aborted instead of completing.
+pub struct FleetAbort {
+    /// The agent the leader blames, when one is identifiable (missed
+    /// heartbeat, dead subprocess, reported failure, dead writer).
+    pub agent: Option<AgentId>,
+    pub reason: String,
+    /// Everything the leader had collected when it gave up — the
+    /// partial report the abort carries.
+    pub partial: FleetOutcome,
+}
+
+impl std::fmt::Display for FleetAbort {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.agent {
+            Some(a) => write!(f, "run aborted: {a}: {}", self.reason),
+            None => write!(f, "run aborted: {}", self.reason),
+        }?;
+        write!(
+            f,
+            " (partial report: events={} jobs={} transfers={} makespan={:.2}s, {} of the fleet reported final stats)",
+            self.partial.events,
+            self.partial.jobs,
+            self.partial.transfers,
+            self.partial.makespan_s,
+            self.partial.stats.len(),
+        )
+    }
+}
+
+/// One health-check tick: external watchdog, heartbeat deadline,
+/// leader-side writer failures.
+fn fleet_check<T: Transport<Payload>>(
+    leader: &T,
+    watchdog: &mut Option<FleetWatchdog>,
+    monitor: &Option<LivenessMonitor>,
+) -> Result<(), (Option<AgentId>, String)> {
+    if let Some(w) = watchdog.as_mut() {
+        if let Some((agent, reason)) = w() {
+            return Err((Some(agent), reason));
+        }
+    }
+    if let Some(m) = monitor {
+        if let Some(a) = m.overdue() {
+            return Err((Some(a), "missed its liveness deadline (no heartbeat)".into()));
+        }
+    }
+    if let Some(f) = leader.take_failures().into_iter().next() {
+        return Err((f.peer, format!("leader transport failure: {f}")));
+    }
+    Ok(())
+}
+
 /// Drive the two-center demo over an arbitrary transport (the historical
 /// entry point of the equivalence suites).
 pub fn drive_two_center<T: Transport<Payload> + Send + 'static>(
@@ -200,139 +283,229 @@ pub fn drive_two_center<T: Transport<Payload> + Send + 'static>(
 /// termination with GVT broadcast, collect results and final statistics.
 /// Panics (failing the calling test) if the run does not terminate or an
 /// agent never reports.
+///
+/// This spawns the agents as in-process threads; the multi-process
+/// launcher (`dsim scenario launch`) drives already-running agent
+/// processes through [`drive_fleet_leader`] directly.
 pub fn drive_fleet<T: Transport<Payload> + Send + 'static>(
     leader: T,
     agents: Vec<(AgentConfig, T)>,
     g: &GeneratedScenario,
 ) -> FleetOutcome {
     let ids: Vec<AgentId> = agents.iter().map(|(cfg, _)| cfg.me).collect();
-    let ctx = crate::util::ContextId(1);
     let backend = Arc::new(ComputeBackend::auto(std::path::Path::new("artifacts")));
-
     let mut handles = Vec::new();
     for (cfg, transport) in agents {
         let backend = Arc::clone(&backend);
+        let me = cfg.me;
         handles.push(std::thread::spawn(move || {
-            AgentRuntime::new(cfg, transport, backend).run();
+            if let Err(e) = AgentRuntime::new(cfg, transport, backend).run() {
+                eprintln!("agent {me} failed: {e:#}");
+            }
         }));
     }
+    let out = drive_fleet_leader(&leader, &ids, g, DriveOptions::default());
+    for h in handles {
+        let _ = h.join();
+    }
+    match out {
+        Ok(o) => o,
+        Err(abort) => panic!("{abort}"),
+    }
+}
 
-    // --- deploy -----------------------------------------------------------
-    let n_groups = g.scenario.group_count();
-    let group_agent: Vec<AgentId> = (0..n_groups).map(|i| ids[i % ids.len()]).collect();
-    let routes: Vec<_> = g
-        .scenario
-        .lps
-        .iter()
-        .map(|l| (l.id, group_agent[l.group]))
-        .collect();
-    for &a in &ids {
-        leader
-            .send(
+/// The leader half of a fleet run, over agents that are already running
+/// somewhere else (threads or processes): deploy, probe-driven
+/// termination with GVT broadcast, result + final-stats collection,
+/// shutdown broadcast.  Liveness (heartbeats + watchdog + leader-side
+/// writer failures, per [`DriveOptions`]) turns a dead or silent agent
+/// into a clean [`FleetAbort`] carrying the partial report instead of a
+/// hung run.
+pub fn drive_fleet_leader<T: Transport<Payload>>(
+    leader: &T,
+    ids: &[AgentId],
+    g: &GeneratedScenario,
+    mut opts: DriveOptions,
+) -> Result<FleetOutcome, FleetAbort> {
+    let ctx = crate::util::ContextId(1);
+    let started = Instant::now();
+    let pool = ResultPool::new();
+    let mut detector = TerminationDetector::new(ids.len());
+    let mut monitor = opts.liveness_deadline.map(|d| LivenessMonitor::new(ids, d));
+    let mut watchdog = opts.watchdog.take();
+    let mut events = 0u64;
+    let mut remote = 0u64;
+    let mut makespan = 0.0f64;
+    let mut stats: Vec<(AgentId, HostStatsView)> = Vec::new();
+
+    // The whole drive runs inside one closure so any failure path can
+    // fall through to the common teardown below with the state collected
+    // so far (the partial report an abort carries).
+    let mut drive = || -> Result<(), (Option<AgentId>, String)> {
+        let send = |a: AgentId, m: ControlMsg| -> Result<(), (Option<AgentId>, String)> {
+            leader
+                .send(a, NetMsg::Control(m))
+                .map_err(|e| (Some(a), format!("leader send failed: {e:#}")))
+        };
+
+        // --- deploy: routes, LPs, bootstrap events, start ---------------
+        let n_groups = g.scenario.group_count();
+        let mut group_agent: Vec<AgentId> = (0..n_groups).map(|i| ids[i % ids.len()]).collect();
+        for &(group, agent) in &opts.pins {
+            group_agent[group] = agent;
+        }
+        let routes: Vec<_> = g
+            .scenario
+            .lps
+            .iter()
+            .map(|l| (l.id, group_agent[l.group]))
+            .collect();
+        for &a in ids {
+            send(
                 a,
-                NetMsg::Control(ControlMsg::RoutingTable {
+                ControlMsg::RoutingTable {
                     context: ctx,
                     routes: routes.clone(),
-                }),
-            )
-            .unwrap();
-    }
-    for l in &g.scenario.lps {
-        leader
-            .send(
+                },
+            )?;
+        }
+        for l in &g.scenario.lps {
+            send(
                 group_agent[l.group],
-                NetMsg::Control(ControlMsg::DeployLp {
+                ControlMsg::DeployLp {
                     context: ctx,
                     lp: l.id,
                     kind: l.kind.clone(),
                     params: l.params.clone(),
-                }),
-            )
-            .unwrap();
-    }
-    for (time, dst, payload) in &g.scenario.bootstrap {
-        let group = g.scenario.lps.iter().find(|l| l.id == *dst).unwrap().group;
-        leader
-            .send(
+                },
+            )?;
+        }
+        for (time, dst, payload) in &g.scenario.bootstrap {
+            let group = g.scenario.lps.iter().find(|l| l.id == *dst).unwrap().group;
+            send(
                 group_agent[group],
-                NetMsg::Control(ControlMsg::Bootstrap {
+                ControlMsg::Bootstrap {
                     context: ctx,
                     time: *time,
                     dst: *dst,
                     payload: payload.to_json(),
-                }),
-            )
-            .unwrap();
-    }
-    for &a in &ids {
-        leader
-            .send(
-                a,
-                NetMsg::Control(ControlMsg::StartRun {
-                    context: ctx,
-                    participants: ids.clone(),
-                }),
-            )
-            .unwrap();
-    }
-
-    // --- run: probe rounds + GVT broadcast + result collection -----------
-    let pool = ResultPool::new();
-    let mut detector = TerminationDetector::new(ids.len());
-    let started = Instant::now();
-    'outer: loop {
-        assert!(
-            started.elapsed() < Duration::from_secs(120),
-            "run did not terminate"
-        );
-        let round = detector.start_round();
-        for &a in &ids {
-            leader
-                .send(a, NetMsg::Control(ControlMsg::Probe { context: ctx, round }))
-                .unwrap();
+                },
+            )?;
         }
-        let deadline = Instant::now() + Duration::from_millis(100);
-        while Instant::now() < deadline && !detector.round_complete() {
-            match leader.recv_timeout(Duration::from_millis(5)) {
-                Some(NetMsg::Control(ControlMsg::ProbeReply {
-                    round: r,
-                    from,
-                    idle,
-                    sent,
-                    received,
-                    lvt,
-                    next_event,
-                    windows,
-                    ..
-                })) => {
-                    let done = detector.ingest(
-                        r,
+        for &a in ids {
+            send(
+                a,
+                ControlMsg::StartRun {
+                    context: ctx,
+                    participants: ids.to_vec(),
+                },
+            )?;
+        }
+
+        // --- run: probe rounds + GVT broadcast + result collection ------
+        'outer: loop {
+            if started.elapsed() > opts.run_timeout {
+                return Err((None, format!("run did not terminate within {:?}", opts.run_timeout)));
+            }
+            fleet_check(leader, &mut watchdog, &monitor)?;
+            let round = detector.start_round();
+            for &a in ids {
+                send(a, ControlMsg::Probe { context: ctx, round })?;
+            }
+            let deadline = Instant::now() + Duration::from_millis(100);
+            while Instant::now() < deadline && !detector.round_complete() {
+                fleet_check(leader, &mut watchdog, &monitor)?;
+                match leader.recv_timeout(Duration::from_millis(5)) {
+                    Some(NetMsg::Control(ControlMsg::ProbeReply {
+                        round: r,
                         from,
-                        ProbeAnswer {
-                            idle,
-                            sent,
-                            received,
-                            lvt_s: lvt.secs(),
-                            next_event_s: next_event.secs(),
-                            windows,
-                        },
-                    );
-                    if let Some(gvt) = detector.take_gvt() {
-                        for &a in &ids {
-                            leader
-                                .send(
+                        idle,
+                        sent,
+                        received,
+                        lvt,
+                        next_event,
+                        windows,
+                        ..
+                    })) => {
+                        if let Some(m) = monitor.as_mut() {
+                            m.note(from);
+                        }
+                        let done = detector.ingest(
+                            r,
+                            from,
+                            ProbeAnswer {
+                                idle,
+                                sent,
+                                received,
+                                lvt_s: lvt.secs(),
+                                next_event_s: next_event.secs(),
+                                windows,
+                            },
+                        );
+                        if let Some(gvt) = detector.take_gvt() {
+                            for &a in ids {
+                                send(
                                     a,
-                                    NetMsg::Control(ControlMsg::GvtUpdate {
+                                    ControlMsg::GvtUpdate {
                                         context: ctx,
                                         gvt: SimTime::new(gvt),
-                                    }),
-                                )
-                                .unwrap();
+                                    },
+                                )?;
+                            }
+                        }
+                        if done {
+                            break 'outer;
                         }
                     }
-                    if done {
-                        break 'outer;
+                    Some(NetMsg::Control(ControlMsg::Heartbeat { from, .. })) => {
+                        if let Some(m) = monitor.as_mut() {
+                            m.note(from);
+                        }
                     }
+                    Some(NetMsg::Control(ControlMsg::AgentFailed { from, reason })) => {
+                        return Err((Some(from), format!("reported fatal failure: {reason}")));
+                    }
+                    Some(NetMsg::Control(ControlMsg::WindowReport { records, .. })) => {
+                        for (kind, record) in records {
+                            pool.push(&kind, record);
+                        }
+                    }
+                    Some(NetMsg::Control(ControlMsg::Result { kind, record, .. })) => {
+                        pool.push(&kind, record);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        makespan = detector.max_lvt();
+
+        // --- teardown: final stats + trailing records --------------------
+        for &a in ids {
+            send(a, ControlMsg::EndRun { context: ctx })?;
+        }
+        let stats_deadline = Instant::now() + Duration::from_secs(10);
+        while stats.len() < ids.len() {
+            if Instant::now() > stats_deadline {
+                return Err((None, "timed out waiting for final stats".into()));
+            }
+            fleet_check(leader, &mut watchdog, &monitor)?;
+            match leader.recv_timeout(Duration::from_millis(100)) {
+                Some(NetMsg::Control(ControlMsg::FinalStats { stats: v, from, .. })) => {
+                    if let Some(m) = monitor.as_mut() {
+                        m.note(from);
+                    }
+                    events += v.events_processed;
+                    remote += v.events_sent_remote;
+                    makespan = makespan.max(v.lvt_s);
+                    stats.push((from, v));
+                }
+                Some(NetMsg::Control(ControlMsg::Heartbeat { from, .. })) => {
+                    if let Some(m) = monitor.as_mut() {
+                        m.note(from);
+                    }
+                }
+                Some(NetMsg::Control(ControlMsg::AgentFailed { from, reason })) => {
+                    return Err((Some(from), format!("reported fatal failure: {reason}")));
                 }
                 Some(NetMsg::Control(ControlMsg::WindowReport { records, .. })) => {
                     for (kind, record) in records {
@@ -345,50 +518,21 @@ pub fn drive_fleet<T: Transport<Payload> + Send + 'static>(
                 _ => {}
             }
         }
-    }
-    let mut makespan = detector.max_lvt();
+        Ok(())
+    };
+    let result = drive();
 
-    // --- teardown: final stats, trailing records, shutdown ----------------
-    for &a in &ids {
-        leader
-            .send(a, NetMsg::Control(ControlMsg::EndRun { context: ctx }))
-            .unwrap();
-    }
-    let mut events = 0u64;
-    let mut remote = 0u64;
-    let mut stats: Vec<(AgentId, HostStatsView)> = Vec::new();
-    while stats.len() < ids.len() {
-        match leader.recv_timeout(Duration::from_secs(10)) {
-            Some(NetMsg::Control(ControlMsg::FinalStats { stats: v, from, .. })) => {
-                events += v.events_processed;
-                remote += v.events_sent_remote;
-                makespan = makespan.max(v.lvt_s);
-                stats.push((from, v));
-            }
-            Some(NetMsg::Control(ControlMsg::WindowReport { records, .. })) => {
-                for (kind, record) in records {
-                    pool.push(&kind, record);
-                }
-            }
-            Some(NetMsg::Control(ControlMsg::Result { kind, record, .. })) => {
-                pool.push(&kind, record);
-            }
-            Some(_) => {}
-            None => panic!("timed out waiting for final stats"),
-        }
-    }
-    for &a in &ids {
+    // Common teardown: best-effort shutdown broadcast (also on abort, so
+    // surviving agents exit instead of spinning on a dead fleet).
+    for &a in ids {
         let _ = leader.send(a, NetMsg::Control(ControlMsg::Shutdown));
-    }
-    for h in handles {
-        let _ = h.join();
     }
 
     let jobs = pool.of_kind("job").len();
     let transfers = pool.of_kind("transfer").len();
     let fingerprint =
         fingerprint_parts(events, remote, jobs, transfers, makespan, &pool.kind_counts());
-    FleetOutcome {
+    let outcome = FleetOutcome {
         fingerprint,
         events,
         remote_events: remote,
@@ -398,6 +542,14 @@ pub fn drive_fleet<T: Transport<Payload> + Send + 'static>(
         wall_s: started.elapsed().as_secs_f64(),
         pool,
         stats,
+    };
+    match result {
+        Ok(()) => Ok(outcome),
+        Err((agent, reason)) => Err(FleetAbort {
+            agent,
+            reason,
+            partial: outcome,
+        }),
     }
 }
 

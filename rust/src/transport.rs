@@ -220,6 +220,14 @@ pub enum ControlMsg {
     PerfSample { from: AgentId, value: f64, load: Json },
     /// Graceful process shutdown (TCP mode).
     Shutdown,
+    /// Agent -> leader: periodic liveness beacon (multi-process fleets).
+    /// `seq` increments monotonically per agent, so the leader can tell a
+    /// stalled sender from a slow control channel.
+    Heartbeat { from: AgentId, seq: u64 },
+    /// Agent -> leader: the agent hit a fatal local error (writer death,
+    /// poisoned connection) and is exiting.  Carries the reason so the
+    /// leader's abort report names the first failure, not a symptom.
+    AgentFailed { from: AgentId, reason: String },
 }
 
 /// Everything that can travel between agents.
@@ -326,6 +334,36 @@ pub trait Transport<P>: Send {
     fn telemetry(&self) -> TransportTelemetry {
         TransportTelemetry::default()
     }
+
+    /// Drain fatal transport failures observed since the last call: a
+    /// per-peer writer thread that died (connect failure, double write
+    /// failure, undeliverable frame) or an inbound connection poisoned by
+    /// a skipped sync-bearing frame.  A non-empty result means this
+    /// endpoint can no longer uphold FIFO delivery — the run must abort,
+    /// not stall.  Transports without failure modes return nothing.
+    fn take_failures(&self) -> Vec<TransportFailure> {
+        Vec::new()
+    }
+}
+
+/// A fatal, unrecoverable fault on one endpoint's wire (see
+/// [`Transport::take_failures`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransportFailure {
+    /// The peer whose channel died, when attributable (writer deaths are;
+    /// inbound reader faults are anonymous until decoded).
+    pub peer: Option<AgentId>,
+    /// Human-readable first cause.
+    pub reason: String,
+}
+
+impl std::fmt::Display for TransportFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.peer {
+            Some(p) => write!(f, "peer {}: {}", p.raw(), self.reason),
+            None => write!(f, "{}", self.reason),
+        }
+    }
 }
 
 /// Snapshot of an endpoint's writer-queue backpressure counters (see
@@ -348,6 +386,11 @@ pub struct TransportTelemetry {
     /// Adaptive-depth halving steps taken across all writer queues once
     /// occupancy high-water subsided (0 under a fixed policy).
     pub queue_shrinks: u64,
+    /// Oversized inbound frames skipped (drained and discarded) by this
+    /// endpoint's readers.  Non-zero is always worth investigating: a
+    /// skipped data-plane frame is connection-fatal, and even a skipped
+    /// control/space frame means a peer's `max_frame` disagrees with ours.
+    pub frames_skipped: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -776,6 +819,16 @@ fn control_to_json(c: &ControlMsg) -> Json {
             ("load", load.clone()),
         ]),
         Shutdown => Json::obj(vec![("k", Json::str("shutdown"))]),
+        Heartbeat { from, seq } => Json::obj(vec![
+            ("k", Json::str("hb")),
+            ("from", Json::num(from.raw() as f64)),
+            ("seq", Json::num(*seq as f64)),
+        ]),
+        AgentFailed { from, reason } => Json::obj(vec![
+            ("k", Json::str("agent-failed")),
+            ("from", Json::num(from.raw() as f64)),
+            ("reason", Json::str(reason.clone())),
+        ]),
     }
 }
 
@@ -890,6 +943,18 @@ fn control_from_json(j: &Json) -> Result<ControlMsg> {
             load: j.get("load").context("load")?.clone(),
         }),
         Some("shutdown") => Ok(ControlMsg::Shutdown),
+        Some("hb") => Ok(ControlMsg::Heartbeat {
+            from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+            seq: j.get("seq").and_then(Json::as_u64).context("seq")?,
+        }),
+        Some("agent-failed") => Ok(ControlMsg::AgentFailed {
+            from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+            reason: j
+                .get("reason")
+                .and_then(Json::as_str)
+                .context("reason")?
+                .to_string(),
+        }),
         _ => bail!("bad control msg {j}"),
     }
 }
@@ -1223,6 +1288,16 @@ fn control_to_bin(out: &mut Vec<u8>, c: &ControlMsg) {
             load.encode_bin(out);
         }
         Shutdown => out.push(13),
+        Heartbeat { from, seq } => {
+            out.push(14);
+            bin::put_u64(out, from.raw());
+            bin::put_u64(out, *seq);
+        }
+        AgentFailed { from, reason } => {
+            out.push(15);
+            bin::put_u64(out, from.raw());
+            bin::put_str(out, reason);
+        }
     }
 }
 
@@ -1322,6 +1397,14 @@ fn control_from_bin(r: &mut bin::Reader) -> Result<ControlMsg> {
             load: Json::decode_bin(r)?,
         },
         13 => ControlMsg::Shutdown,
+        14 => ControlMsg::Heartbeat {
+            from: AgentId(r.u64()?),
+            seq: r.u64()?,
+        },
+        15 => ControlMsg::AgentFailed {
+            from: AgentId(r.u64()?),
+            reason: r.str()?,
+        },
         t => bail!("bad control tag {t}"),
     })
 }
@@ -1650,48 +1733,83 @@ fn write_frame(stream: &mut TcpStream, bytes: &[u8]) -> Result<()> {
     Ok(())
 }
 
-/// Read one frame, enforcing `max_bytes`.  An oversized frame is *skipped*,
-/// not fatal: its body is drained from the stream (keeping frame alignment)
-/// and `Ok(None)` is returned, so one bad frame costs its own payload but
-/// never poisons the reader thread or the connection behind it.
+/// Read one frame, enforcing `max_bytes`.  An oversized frame is drained
+/// from the stream (keeping frame alignment) and reported as
+/// [`ReadFrame::Skipped`] with a retained prefix, so the caller can
+/// classify what was lost: the reader loop keeps the connection for a
+/// dropped control/space frame and poisons it for anything data-plane
+/// (see [`skipped_frame_is_fatal`] — a silently dropped `WindowBatch` can
+/// swallow the window's only trailing promise and deadlock the receiver).
 ///
 /// A skipped frame can only occur with mismatched per-agent limits (the
-/// sender splits against its *own* limit) or a corrupt peer.  Dropped
-/// event frames are not silent corruption: the double-count termination
-/// protocol sees sent != received forever and the run fails loudly at
-/// `max_wall` instead of terminating with wrong results.
-fn read_frame(stream: &mut TcpStream, max_bytes: usize) -> Result<Option<Vec<u8>>> {
+/// sender splits against its *own* limit) or a corrupt peer.
+fn read_frame(stream: &mut TcpStream, max_bytes: usize) -> Result<ReadFrame> {
     let mut len = [0u8; 4];
     stream.read_exact(&mut len)?;
     read_frame_body(stream, len, max_bytes)
 }
 
+/// One inbound frame read: either a complete body, or an over-limit frame
+/// that was drained off the stream with only a prefix retained for
+/// classification (see [`skipped_frame_is_fatal`]).
+enum ReadFrame {
+    Frame(Vec<u8>),
+    Skipped { prefix: Vec<u8>, len: usize },
+}
+
+/// How many drained bytes a skip retains: enough to classify the frame
+/// kind under either codec (`{"k":"space"` is 12 bytes; binary needs 1).
+const SKIP_PREFIX: usize = 16;
+
 /// [`read_frame`] with the 4 length bytes already consumed (the preamble
 /// sniff reads them to distinguish magic from a frame length).
-fn read_frame_body(
-    stream: &mut TcpStream,
-    len: [u8; 4],
-    max_bytes: usize,
-) -> Result<Option<Vec<u8>>> {
+fn read_frame_body(stream: &mut TcpStream, len: [u8; 4], max_bytes: usize) -> Result<ReadFrame> {
     let n = u32::from_be_bytes(len) as usize;
     if n > max_bytes {
         log::error!(
             "skipping oversized frame: {n} bytes > {max_bytes} limit \
-             (mismatched --max-frame-mib across the fleet? dropped events \
-             will stall termination)"
+             (mismatched --max-frame-mib across the fleet?)"
         );
         let mut chunk = [0u8; 8192];
         let mut remaining = n;
+        let mut prefix = Vec::with_capacity(SKIP_PREFIX);
         while remaining > 0 {
             let take = remaining.min(chunk.len());
             stream.read_exact(&mut chunk[..take])?;
+            if prefix.len() < SKIP_PREFIX {
+                let want = (SKIP_PREFIX - prefix.len()).min(take);
+                prefix.extend_from_slice(&chunk[..want]);
+            }
             remaining -= take;
         }
-        return Ok(None);
+        return Ok(ReadFrame::Skipped { prefix, len: n });
     }
     let mut buf = vec![0u8; n];
     stream.read_exact(&mut buf)?;
-    Ok(Some(buf))
+    Ok(ReadFrame::Frame(buf))
+}
+
+/// Classify a skipped frame by its retained prefix: dropping a `Space` op
+/// (versioned LWW, resent) or a `Control` frame (the control plane has
+/// its own timeouts) degrades the run but cannot wedge it, so the
+/// connection survives.  Dropping an `Event`/`WindowBatch`/`Sync` frame
+/// can swallow the window's only trailing promise — the receiver would
+/// deadlock waiting for a bound that never arrives — so it is
+/// connection-fatal.  Unrecognizable prefixes are treated as fatal.
+fn skipped_frame_is_fatal(codec: WireCodec, prefix: &[u8]) -> bool {
+    match codec {
+        // Binary msg tags: Event=1, WindowBatch=2, Sync=3, Space=4,
+        // Control=5.
+        WireCodec::Binary => !matches!(prefix.first(), Some(4) | Some(5)),
+        // JSON objects serialize with *sorted* keys, so each frame kind
+        // has a fixed leading key: Control is `{"c":` ("c" < "k"), Space
+        // is `{"k":"space"` ("k" < "op"); the data-plane frames lead with
+        // `{"b":` (Event) or `{"ctx":` (WindowBatch/Sync) and the
+        // hand-assembled batch chunk with `{"k":"batch"` — none collide.
+        WireCodec::Json => {
+            !(prefix.starts_with(b"{\"c\":") || prefix.starts_with(b"{\"k\":\"space\""))
+        }
+    }
 }
 
 /// Sniff a new inbound connection: a binary sender opens with
@@ -1842,7 +1960,7 @@ fn encode_batch_chunks<P: Wire>(
     let mut chunk_bytes = 0usize;
     for (i, enc) in encoded.iter().enumerate() {
         if !chunk.is_empty() && chunk_bytes + 1 + enc.len() > budget {
-            out.push(assemble_event_chunk(codec, context, from, &chunk, &encoded));
+            out.push(assemble_event_chunk(codec, context, from, &chunk, &encoded)?);
             chunk.clear();
             chunk_bytes = 0;
         }
@@ -1857,7 +1975,7 @@ fn encode_batch_chunks<P: Wire>(
         chunk.push(i);
     }
     if !chunk.is_empty() {
-        out.push(assemble_event_chunk(codec, context, from, &chunk, &encoded));
+        out.push(assemble_event_chunk(codec, context, from, &chunk, &encoded)?);
     }
     // The final chunk ships the window's sync flush, replication ops and
     // the single trailing promise — after every event chunk, so the bound
@@ -1885,16 +2003,19 @@ fn encode_batch_chunks<P: Wire>(
 /// Assemble one event-only `WindowBatch` frame body from pre-encoded
 /// events (no sync flush, no space ops, no bound).  The hand-assembled
 /// JSON parses to exactly what [`msg_to_json`] would produce for the
-/// same chunk — key order is irrelevant to the parser.
+/// same chunk — key order is irrelevant to the parser.  A non-UTF-8
+/// event encoding under the JSON codec is a codec error, not a panic:
+/// it flows back through [`encode_split`]'s error path so the sender's
+/// writer survives and the send fails loudly.
 fn assemble_event_chunk(
     codec: WireCodec,
     context: ContextId,
     from: AgentId,
     chunk: &[usize],
     encoded: &[Vec<u8>],
-) -> Vec<u8> {
+) -> Result<Vec<u8>> {
     let events_len: usize = chunk.iter().map(|&i| encoded[i].len()).sum();
-    match codec {
+    Ok(match codec {
         WireCodec::Binary => {
             let mut b = Vec::with_capacity(events_len + 40);
             b.push(2); // WindowBatch msg tag
@@ -1920,12 +2041,15 @@ fn assemble_event_chunk(
                 if n > 0 {
                     s.push(',');
                 }
-                s.push_str(std::str::from_utf8(&encoded[i]).expect("event json is utf8"));
+                s.push_str(
+                    std::str::from_utf8(&encoded[i])
+                        .map_err(|e| anyhow!("event encoding is not valid JSON text: {e}"))?,
+                );
             }
             s.push_str("],\"sync\":[]}");
             s.into_bytes()
         }
-    }
+    })
 }
 
 /// What one [`FrameQueue::push`] observed, for the sender's telemetry
@@ -2114,6 +2238,11 @@ pub struct TcpTransport<P> {
     /// queue (backpressure stalls; telemetry only — never consulted for
     /// protocol decisions).
     send_block_us: AtomicU64,
+    /// Oversized inbound frames drained and discarded by the readers.
+    frames_skipped: Arc<AtomicU64>,
+    /// Fatal faults recorded by writer and reader threads, drained by
+    /// [`Transport::take_failures`].
+    failures: Arc<Mutex<Vec<TransportFailure>>>,
     _listener: std::thread::JoinHandle<()>,
 }
 
@@ -2154,12 +2283,18 @@ impl<P: Wire + Send + 'static> TcpTransport<P> {
         let (tx, rx) = channel();
         let tx_accept = tx.clone();
         let max_frame = opts.max_frame;
+        let frames_skipped = Arc::new(AtomicU64::new(0));
+        let failures: Arc<Mutex<Vec<TransportFailure>>> = Arc::new(Mutex::new(Vec::new()));
+        let skipped_accept = Arc::clone(&frames_skipped);
+        let failures_accept = Arc::clone(&failures);
         let handle = std::thread::Builder::new()
             .name(format!("dsim-tcp-accept-{me}"))
             .spawn(move || {
                 for stream in listener.incoming() {
                     let Ok(mut stream) = stream else { break };
                     let tx = tx_accept.clone();
+                    let skipped = Arc::clone(&skipped_accept);
+                    let failures = Arc::clone(&failures_accept);
                     std::thread::spawn(move || {
                         // Sniff the optional preamble; a bare stream is
                         // JSON text (new json-codec peer or pre-codec
@@ -2176,19 +2311,44 @@ impl<P: Wire + Send + 'static> TcpTransport<P> {
                                 None => read_frame(&mut stream, max_frame),
                             };
                             match frame {
-                                // Oversized frame skipped; connection still good.
-                                Ok(None) => continue,
-                                Ok(Some(bytes)) => match decode_msg::<P>(codec, &bytes) {
-                                    Ok(msg) => {
-                                        if tx.send(msg).is_err() {
+                                Ok(ReadFrame::Skipped { prefix, len }) => {
+                                    skipped.fetch_add(1, Ordering::Relaxed);
+                                    if skipped_frame_is_fatal(codec, &prefix) {
+                                        // The drained frame may have carried
+                                        // the window's only trailing promise:
+                                        // the conservative receiver would wait
+                                        // on it forever.  Poison the
+                                        // connection so the run aborts loudly
+                                        // instead of deadlocking.
+                                        let reason = format!(
+                                            "oversized {len}-byte inbound frame carried \
+                                             data-plane traffic (events/sync promise lost); \
+                                             dropping connection"
+                                        );
+                                        log::error!("{reason}");
+                                        failures
+                                            .lock()
+                                            .unwrap()
+                                            .push(TransportFailure { peer: None, reason });
+                                        break;
+                                    }
+                                    // Control/space frames have their own
+                                    // recovery paths; connection still good.
+                                    continue;
+                                }
+                                Ok(ReadFrame::Frame(bytes)) => {
+                                    match decode_msg::<P>(codec, &bytes) {
+                                        Ok(msg) => {
+                                            if tx.send(msg).is_err() {
+                                                break;
+                                            }
+                                        }
+                                        Err(e) => {
+                                            log::error!("bad {codec} frame: {e:#}");
                                             break;
                                         }
                                     }
-                                    Err(e) => {
-                                        log::error!("bad {codec} frame: {e:#}");
-                                        break;
-                                    }
-                                },
+                                }
                                 Err(_) => break,
                             }
                         }
@@ -2205,6 +2365,8 @@ impl<P: Wire + Send + 'static> TcpTransport<P> {
             bytes_sent: Arc::new(AtomicU64::new(0)),
             queue_highwater: AtomicU64::new(0),
             send_block_us: AtomicU64::new(0),
+            frames_skipped,
+            failures,
             _listener: handle,
         })
     }
@@ -2219,10 +2381,11 @@ impl<P: Wire + Send + 'static> TcpTransport<P> {
         let me = self.me;
         let opts = self.opts;
         let bytes = Arc::clone(&self.bytes_sent);
+        let failures = Arc::clone(&self.failures);
         let q = Arc::clone(&queue);
         let handle = std::thread::Builder::new()
             .name(format!("dsim-tcp-writer-{me}-{to}"))
-            .spawn(move || writer_loop::<P>(me, to, addr, opts, q, bytes))?;
+            .spawn(move || writer_loop::<P>(me, to, addr, opts, q, bytes, failures))?;
         Ok(PeerWriter { queue, handle })
     }
 }
@@ -2270,10 +2433,11 @@ fn connect_peer(
 /// drains everything already queued before observing close, so a dropped
 /// transport flushes rather than truncates.  Any frame that cannot be
 /// transmitted — a hard connection failure, or an unsplittable over-limit
-/// message — ends the writer, which closes its queue: the channel to that
-/// peer is compromised either way (the synchronous path surfaced these as
-/// send errors), and a dead writer turns every *subsequent* send into a
-/// loud error instead of a silently incomplete run.
+/// message — ends the writer, which closes its queue *and* records a
+/// [`TransportFailure`]: a dead writer turns every subsequent send into a
+/// loud error, and the recorded failure lets the agent loop abort the run
+/// (reporting to the leader) even if it never sends to that peer again.
+#[allow(clippy::too_many_arguments)]
 fn writer_loop<P: Wire>(
     me: AgentId,
     to: AgentId,
@@ -2281,13 +2445,16 @@ fn writer_loop<P: Wire>(
     opts: TcpOptions,
     queue: Arc<FrameQueue<P>>,
     bytes: Arc<AtomicU64>,
+    failures: Arc<Mutex<Vec<TransportFailure>>>,
 ) {
+    let mut fatal: Option<String> = None;
     let mut stream: Option<TcpStream> = None;
     let mut frames: Vec<Vec<u8>> = Vec::new();
     'outer: while let Some(msg) = queue.pop() {
         frames.clear();
         if let Err(e) = encode_split(opts.codec, opts.max_frame, msg, &mut frames) {
             log::error!("{me}: writer to {to} exiting on undeliverable frame: {e:#}");
+            fatal = Some(format!("undeliverable frame to {to}: {e:#}"));
             break 'outer;
         }
         for frame in &frames {
@@ -2295,7 +2462,8 @@ fn writer_loop<P: Wire>(
                 match connect_peer(to, addr, opts.codec, &bytes) {
                     Ok(s) => stream = Some(s),
                     Err(e) => {
-                        log::error!("{me}: writer to {to} exiting (run will stall): {e:#}");
+                        log::error!("{me}: writer to {to} exiting: {e:#}");
+                        fatal = Some(format!("connect to {to} failed: {e:#}"));
                         break 'outer;
                     }
                 }
@@ -2310,13 +2478,23 @@ fn writer_loop<P: Wire>(
                 match retried {
                     Ok(s) => stream = Some(s),
                     Err(e) => {
-                        log::error!("{me}: writer to {to} exiting (run will stall): {e:#}");
+                        log::error!("{me}: writer to {to} exiting: {e:#}");
+                        fatal = Some(format!("write to {to} failed twice: {e:#}"));
                         break 'outer;
                     }
                 }
             }
             bytes.fetch_add(frame.len() as u64 + 4, Ordering::Relaxed);
         }
+    }
+    // A failure exit (as opposed to a normal close-initiated drain) is
+    // fatal for the whole run: FIFO delivery to `to` can no longer be
+    // upheld.  Record it where the agent loop will see it.
+    if let Some(reason) = fatal {
+        failures.lock().unwrap().push(TransportFailure {
+            peer: Some(to),
+            reason,
+        });
     }
     // Whether close() initiated this exit or a failure did, mark the
     // queue closed so blocked and future senders fail loudly instead of
@@ -2436,7 +2614,12 @@ impl<P: Wire + Clone + Send + 'static> Transport<P> for TcpTransport<P> {
             send_block_us: self.send_block_us.load(Ordering::Relaxed),
             queue_grows: grows,
             queue_shrinks: shrinks,
+            frames_skipped: self.frames_skipped.load(Ordering::Relaxed),
         }
+    }
+
+    fn take_failures(&self) -> Vec<TransportFailure> {
+        std::mem::take(&mut *self.failures.lock().unwrap())
     }
 }
 
@@ -2608,7 +2791,7 @@ mod tests {
 
     fn rand_control(rng: &mut Pcg32) -> ControlMsg {
         let ctx = ContextId(rng.below(4));
-        match rng.below(13) {
+        match rng.below(15) {
             0 => ControlMsg::DeployLp {
                 context: ctx,
                 lp: LpId(rng.below(64)),
@@ -2687,6 +2870,14 @@ mod tests {
                 from: AgentId(rng.below(8)),
                 value: rng.uniform(0.0, 10.0),
                 load: rand_json(rng),
+            },
+            12 => ControlMsg::Heartbeat {
+                from: AgentId(rng.below(8)),
+                seq: rng.below(100_000),
+            },
+            13 => ControlMsg::AgentFailed {
+                from: AgentId(rng.below(8)),
+                reason: format!("reason{}", rng.below(4)),
             },
             _ => ControlMsg::Shutdown,
         }
@@ -2893,14 +3084,46 @@ mod tests {
         let (mut server, _) = listener.accept().unwrap();
         write_frame(&mut client, &[b'x'; 100]).unwrap();
         write_frame(&mut client, b"ok").unwrap();
-        // The 100-byte frame exceeds the limit: skipped (drained), and the
-        // next frame on the same stream still reads correctly.
-        assert!(read_frame(&mut server, 16).unwrap().is_none());
-        assert_eq!(read_frame(&mut server, 16).unwrap().unwrap(), b"ok");
+        // The 100-byte frame exceeds the limit: skipped (drained, with its
+        // head retained for classification), and the next frame on the
+        // same stream still reads correctly.
+        match read_frame(&mut server, 16).unwrap() {
+            ReadFrame::Skipped { prefix, len } => {
+                assert_eq!(len, 100);
+                assert_eq!(prefix, vec![b'x'; SKIP_PREFIX]);
+            }
+            ReadFrame::Frame(_) => panic!("oversized frame not skipped"),
+        }
+        match read_frame(&mut server, 16).unwrap() {
+            ReadFrame::Frame(bytes) => assert_eq!(bytes, b"ok"),
+            ReadFrame::Skipped { .. } => panic!("valid frame skipped"),
+        }
     }
 
     #[test]
-    fn oversized_inbound_frame_does_not_poison_reader() {
+    fn skipped_frame_classification() {
+        // Binary msg tags: Space (4) and Control (5) survive; data-plane
+        // tags and garbage are fatal.
+        assert!(!skipped_frame_is_fatal(WireCodec::Binary, &[4]));
+        assert!(!skipped_frame_is_fatal(WireCodec::Binary, &[5]));
+        assert!(skipped_frame_is_fatal(WireCodec::Binary, &[2]));
+        assert!(skipped_frame_is_fatal(WireCodec::Binary, &[]));
+        // JSON prefixes follow sorted-key serialization: Control leads
+        // with its "c" payload, Space with `"k":"space"` (k < op); the
+        // sorted batch (`{"ctx":`), the hand-assembled batch chunk
+        // (`{"k":"batch"`), and garbage are all fatal.
+        let ctl = NetMsg::<u32>::Control(ControlMsg::Heartbeat { from: AgentId(3), seq: 7 });
+        let ctl_text = msg_to_json(&ctl).to_string();
+        assert!(ctl_text.starts_with("{\"c\":"), "got {ctl_text}");
+        assert!(!skipped_frame_is_fatal(WireCodec::Json, &ctl_text.as_bytes()[..SKIP_PREFIX]));
+        assert!(!skipped_frame_is_fatal(WireCodec::Json, b"{\"k\":\"space\",\"op\":"));
+        assert!(skipped_frame_is_fatal(WireCodec::Json, b"{\"ctx\":4,\"evs\":["));
+        assert!(skipped_frame_is_fatal(WireCodec::Json, b"{\"k\":\"batch\",\"ctx\""));
+        assert!(skipped_frame_is_fatal(WireCodec::Json, b"xxxxxxxx"));
+    }
+
+    #[test]
+    fn oversized_control_frame_does_not_poison_reader() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let peers: HashMap<AgentId, SocketAddr> = [(AgentId(1), addr)].into_iter().collect();
@@ -2910,17 +3133,65 @@ mod tests {
         };
         let t: TcpTransport<u32> =
             TcpTransport::from_listener(AgentId(1), listener, peers, opts).unwrap();
-        // A rogue peer writes an oversized frame, then a valid one, on the
-        // same connection: the reader thread must survive and deliver the
-        // valid message.
+        // A peer with a larger frame limit writes an oversized *control*
+        // frame, then a valid one, on the same connection: the control
+        // plane has its own recovery, so the reader survives, counts the
+        // skip, and delivers the valid message.
         let mut rogue = TcpStream::connect(addr).unwrap();
-        write_frame(&mut rogue, &[b'x'; 4096]).unwrap();
+        let big: NetMsg<u32> = NetMsg::Control(ControlMsg::Result {
+            context: ContextId(1),
+            kind: "x".repeat(4096),
+            record: Json::Null,
+        });
+        write_frame(&mut rogue, msg_to_json(&big).to_string().as_bytes()).unwrap();
         let valid: NetMsg<u32> = NetMsg::Control(ControlMsg::Shutdown);
         write_frame(&mut rogue, msg_to_json(&valid).to_string().as_bytes()).unwrap();
         assert!(matches!(
             t.recv_timeout(Duration::from_secs(5)).unwrap(),
             NetMsg::Control(ControlMsg::Shutdown)
         ));
+        assert_eq!(t.telemetry().frames_skipped, 1);
+        assert!(t.take_failures().is_empty(), "control skip is not fatal");
+    }
+
+    #[test]
+    fn oversized_data_frame_poisons_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peers: HashMap<AgentId, SocketAddr> = [(AgentId(1), addr)].into_iter().collect();
+        let opts = TcpOptions {
+            max_frame: 1024,
+            ..TcpOptions::default()
+        };
+        let t: TcpTransport<u32> =
+            TcpTransport::from_listener(AgentId(1), listener, peers, opts).unwrap();
+        // An oversized WindowBatch may have carried the window's only
+        // trailing promise: the connection is poisoned (a later frame on
+        // it is NOT delivered) and the failure is recorded for the agent
+        // loop to abort on, instead of the old silent skip-and-deadlock.
+        let mut rogue = TcpStream::connect(addr).unwrap();
+        let big: NetMsg<u32> = NetMsg::WindowBatch {
+            context: ContextId(1),
+            from: AgentId(2),
+            events: Vec::new(),
+            sync: vec![SyncMsg::LvtAnnounce { bound: SimTime::new(9.0) }],
+            space: vec![SpaceMsg::Remove {
+                key: "k".repeat(4096),
+                version: 1,
+            }],
+            bound: Some(SimTime::new(9.0)),
+        };
+        write_frame(&mut rogue, msg_to_json(&big).to_string().as_bytes()).unwrap();
+        let valid: NetMsg<u32> = NetMsg::Control(ControlMsg::Shutdown);
+        write_frame(&mut rogue, msg_to_json(&valid).to_string().as_bytes()).unwrap();
+        assert!(
+            t.recv_timeout(Duration::from_millis(500)).is_none(),
+            "poisoned connection must not deliver later frames"
+        );
+        assert_eq!(t.telemetry().frames_skipped, 1);
+        let failures = t.take_failures();
+        assert_eq!(failures.len(), 1, "data-plane skip must be recorded as fatal");
+        assert!(failures[0].reason.contains("data-plane"));
     }
 
     #[test]
@@ -3032,6 +3303,56 @@ mod tests {
             t2.recv_timeout(Duration::from_millis(200)),
             Some(NetMsg::Control(ControlMsg::Result { .. }))
         ));
+    }
+
+    #[test]
+    fn writer_death_is_recorded_as_transport_failure() {
+        // A writer that dies (here: on an undeliverable frame) must leave
+        // a TransportFailure behind for the agent loop to abort on — not
+        // just close its queue into the void.  The death is asynchronous:
+        // poll.
+        let opts = TcpOptions {
+            max_frame: 64,
+            ..TcpOptions::default()
+        };
+        let (t1, _t2) = tcp_pair(opts, opts);
+        let big = ControlMsg::Result {
+            context: ContextId(1),
+            kind: "x".repeat(128),
+            record: Json::Null,
+        };
+        t1.send(AgentId(2), NetMsg::Control(big)).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let failures = loop {
+            let f = t1.take_failures();
+            if !f.is_empty() {
+                break f;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "writer death never surfaced via take_failures"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        };
+        assert_eq!(failures[0].peer, Some(AgentId(2)));
+        assert!(failures[0].reason.contains("undeliverable"));
+        // Drained: a second take returns nothing new.
+        assert!(t1.take_failures().is_empty());
+    }
+
+    #[test]
+    fn non_utf8_event_encoding_is_a_codec_error_not_a_panic() {
+        // A malformed pre-encoded event under the JSON codec flows back
+        // through the encode_split error path instead of panicking the
+        // writer thread.
+        let bad = vec![vec![0xff, 0xfe, 0xfd]];
+        let err = assemble_event_chunk(WireCodec::Json, ContextId(1), AgentId(1), &[0], &bad)
+            .expect_err("invalid utf8 must be an error");
+        assert!(err.to_string().contains("not valid JSON text"));
+        // The binary codec is byte-oriented: the same input is fine.
+        assert!(
+            assemble_event_chunk(WireCodec::Binary, ContextId(1), AgentId(1), &[0], &bad).is_ok()
+        );
     }
 
     /// Two connected endpoints on OS-assigned ports.

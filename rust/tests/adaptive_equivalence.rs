@@ -59,6 +59,7 @@ fn agent_cfg_q(
         event_queue,
         wire_batch: true,
         budget,
+        heartbeat_ms: 0,
     }
 }
 

@@ -251,9 +251,10 @@ fn unknown_peer_events_rejected_in_both_exec_modes() {
             event_queue: Default::default(),
             wire_batch: true,
             budget: Default::default(),
+            heartbeat_ms: 0,
         };
         let handle = std::thread::spawn(move || {
-            AgentRuntime::new(cfg, ep, backend).run();
+            let _ = AgentRuntime::new(cfg, ep, backend).run();
         });
 
         let ctx = ContextId(1);

@@ -1,0 +1,74 @@
+//! Multi-process `scenario launch` integration: a real fleet of `dsim
+//! agent` subprocesses produces the same determinism fingerprint as the
+//! in-process TCP path, and a SIGKILLed agent turns into a clean,
+//! named, partial-report-carrying abort instead of a hung run.
+
+use std::time::{Duration, Instant};
+
+use dsim::scenario::{self, LaunchOptions};
+use dsim::util::json::Json;
+
+fn doc(heartbeat_ms: u64) -> Json {
+    Json::parse(&format!(
+        r#"{{"name": "launch-it",
+             "deploy": {{"agents": 3, "transport": "tcp", "placement": "rr",
+                        "heartbeat_ms": {heartbeat_ms}}},
+             "contexts": [{{"name": "c", "grid": {{"preset": "two-center"}}}}]}}"#
+    ))
+    .unwrap()
+}
+
+/// The test binary is not the `dsim` CLI, so point the launcher at the
+/// real one cargo built for this test run.
+fn opts() -> LaunchOptions {
+    LaunchOptions {
+        agent_bin: Some(env!("CARGO_BIN_EXE_dsim").into()),
+        liveness_deadline: Some(Duration::from_secs(2)),
+    }
+}
+
+#[test]
+fn launched_fleet_matches_in_process_tcp_fingerprint() {
+    let compiled = scenario::compile(&doc(0)).unwrap();
+    let launched = scenario::launch(&compiled, &opts()).unwrap();
+    let run = compiled.run().unwrap();
+    assert_eq!(launched.len(), 1);
+    assert!(launched[0].events > 0);
+    assert_eq!(
+        launched[0].fingerprint, run[0].fingerprint,
+        "subprocess fleet must reproduce the in-process result bit-for-bit"
+    );
+}
+
+#[test]
+fn killed_agent_aborts_the_run_naming_it() {
+    let compiled = scenario::compile(&doc(100)).unwrap();
+    let fleet = scenario::spawn_fleet(&compiled, &opts()).unwrap();
+    // SIGKILL agent 2 shortly after the drive starts, from a side
+    // thread, through the fleet's shared process handle.
+    let kids = fleet.process_handle();
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(100));
+        let mut kids = kids.lock().unwrap();
+        let (_, child) = kids
+            .iter_mut()
+            .find(|(id, _)| id.raw() == 2)
+            .expect("agent 2 was spawned");
+        child.kill().expect("SIGKILL agent 2");
+    });
+    let started = Instant::now();
+    let err = scenario::run_launched(&compiled, &fleet)
+        .expect_err("a run with a dead agent must abort, not hang");
+    let elapsed = started.elapsed();
+    killer.join().unwrap();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("agent-2"), "abort must name the dead agent: {msg}");
+    assert!(
+        msg.contains("partial report"),
+        "abort must carry the partial report: {msg}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "abort must land within the liveness bound, took {elapsed:?}"
+    );
+}

@@ -34,6 +34,7 @@ fn agent_cfg(me: AgentId, workers: usize, proto: SyncProtocol, wire_batch: bool)
         event_queue: Default::default(),
         wire_batch,
         budget: WindowBudgetSpec::default(),
+        heartbeat_ms: 0,
     }
 }
 
