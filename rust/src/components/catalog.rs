@@ -8,7 +8,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::engine::{Event, LogicalProcess, LpApi};
 use crate::model::Payload;
@@ -81,6 +81,55 @@ impl LogicalProcess<Payload> for CatalogLp {
 
     fn kind(&self) -> &'static str {
         "catalog"
+    }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            (
+                "entries",
+                Json::arr(self.entries.iter().map(|(ds, (mb, centers))| {
+                    Json::obj(vec![
+                        ("ds", Json::str(ds.clone())),
+                        ("mb", Json::num(*mb)),
+                        (
+                            "centers",
+                            Json::arr(centers.iter().map(|c| Json::num(*c as f64))),
+                        ),
+                    ])
+                })),
+            ),
+            ("queries", Json::num(self.queries as f64)),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<()> {
+        self.entries = snap
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("entries")?
+            .iter()
+            .map(|e| {
+                let centers = e
+                    .get("centers")
+                    .and_then(Json::as_arr)
+                    .context("centers")?
+                    .iter()
+                    .map(|c| Ok(c.as_u64().context("center")? as usize))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((
+                    e.get("ds")
+                        .and_then(Json::as_str)
+                        .context("ds")?
+                        .to_string(),
+                    (e.get("mb").and_then(Json::as_f64).context("mb")?, centers),
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        self.queries = snap
+            .get("queries")
+            .and_then(Json::as_u64)
+            .context("queries")?;
+        Ok(())
     }
 }
 

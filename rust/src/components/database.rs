@@ -126,6 +126,49 @@ impl LogicalProcess<Payload> for DbLp {
     fn kind(&self) -> &'static str {
         "db"
     }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            (
+                "resident",
+                Json::arr(self.resident.iter().map(|(name, size)| {
+                    Json::obj(vec![
+                        ("ds", Json::str(name.clone())),
+                        ("mb", Json::num(*size)),
+                    ])
+                })),
+            ),
+            ("used_mb", Json::num(self.used_mb)),
+            ("migrations", Json::num(self.migrations as f64)),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<()> {
+        self.resident = snap
+            .get("resident")
+            .and_then(Json::as_arr)
+            .context("resident")?
+            .iter()
+            .map(|r| {
+                Ok((
+                    r.get("ds")
+                        .and_then(Json::as_str)
+                        .context("ds")?
+                        .to_string(),
+                    r.get("mb").and_then(Json::as_f64).context("mb")?,
+                ))
+            })
+            .collect::<Result<VecDeque<_>>>()?;
+        self.used_mb = snap
+            .get("used_mb")
+            .and_then(Json::as_f64)
+            .context("used_mb")?;
+        self.migrations = snap
+            .get("migrations")
+            .and_then(Json::as_u64)
+            .context("migrations")?;
+        Ok(())
+    }
 }
 
 /// Tape-backed mass storage center: unbounded capacity, records archive
@@ -174,6 +217,25 @@ impl LogicalProcess<Payload> for MassStorageLp {
 
     fn kind(&self) -> &'static str {
         "mass-storage"
+    }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("archived_mb", Json::num(self.archived_mb)),
+            ("archived_count", Json::num(self.archived_count as f64)),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<()> {
+        self.archived_mb = snap
+            .get("archived_mb")
+            .and_then(Json::as_f64)
+            .context("archived_mb")?;
+        self.archived_count = snap
+            .get("archived_count")
+            .and_then(Json::as_u64)
+            .context("archived_count")?;
+        Ok(())
     }
 }
 

@@ -22,6 +22,7 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{Context, Result};
 
+use super::{rng_field, rng_json};
 use crate::engine::{Event, LogicalProcess, LpApi};
 use crate::model::{JobSpec, Payload, TransferSpec};
 use crate::util::json::Json;
@@ -192,6 +193,26 @@ impl LogicalProcess<Payload> for T0DriverLp {
 
     fn kind(&self) -> &'static str {
         "t0-driver"
+    }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("rng", rng_json(&self.rng)),
+            ("next_xfer_id", Json::num(self.next_xfer_id as f64)),
+            ("jobs_done", Json::num(self.jobs_done as f64)),
+            ("produced", Json::num(self.produced as f64)),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<()> {
+        self.rng = rng_field(snap, "rng")?;
+        self.next_xfer_id = snap
+            .get("next_xfer_id")
+            .and_then(Json::as_u64)
+            .context("next_xfer_id")?;
+        self.jobs_done = snap.get("jobs_done").and_then(Json::as_u64).context("jobs_done")? as usize;
+        self.produced = snap.get("produced").and_then(Json::as_u64).context("produced")? as usize;
+        Ok(())
     }
 }
 
@@ -486,6 +507,129 @@ impl LogicalProcess<Payload> for T1DriverLp {
 
     fn kind(&self) -> &'static str {
         "t1-driver"
+    }
+
+    fn snapshot(&self) -> Json {
+        let state_str = |s: &JobState| match s {
+            JobState::Parked => "parked",
+            JobState::Submitted => "submitted",
+            JobState::Done => "done",
+        };
+        Json::obj(vec![
+            ("rng", rng_json(&self.rng)),
+            (
+                "available",
+                Json::arr(self.available.iter().map(|d| Json::str(d.clone()))),
+            ),
+            (
+                "parked",
+                Json::arr(self.parked.iter().map(|(ds, jobs)| {
+                    Json::obj(vec![
+                        ("ds", Json::str(ds.clone())),
+                        (
+                            "jobs",
+                            Json::arr(jobs.iter().map(|j| Json::num(*j as f64))),
+                        ),
+                    ])
+                })),
+            ),
+            (
+                "states",
+                Json::arr(self.states.iter().map(|(job, st)| {
+                    Json::obj(vec![
+                        ("job", Json::num(*job as f64)),
+                        ("st", Json::str(state_str(st))),
+                    ])
+                })),
+            ),
+            (
+                "meta",
+                Json::arr(self.job_meta.iter().map(|(job, (at, ds))| {
+                    Json::obj(vec![
+                        ("job", Json::num(*job as f64)),
+                        ("at", Json::num(*at)),
+                        ("ds", Json::str(ds.clone())),
+                    ])
+                })),
+            ),
+            ("replicas_received", Json::num(self.replicas_received as f64)),
+            ("jobs_done", Json::num(self.jobs_done as f64)),
+            (
+                "first_arrival",
+                self.first_arrival.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("summary_published", Json::Bool(self.summary_published)),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<()> {
+        self.rng = rng_field(snap, "rng")?;
+        self.available = snap
+            .get("available")
+            .and_then(Json::as_arr)
+            .context("available")?
+            .iter()
+            .map(|d| d.as_str().map(str::to_string).context("available entry"))
+            .collect::<Result<BTreeSet<_>>>()?;
+        self.parked = snap
+            .get("parked")
+            .and_then(Json::as_arr)
+            .context("parked")?
+            .iter()
+            .map(|p| {
+                let ds = p.get("ds").and_then(Json::as_str).context("ds")?.to_string();
+                let jobs = p
+                    .get("jobs")
+                    .and_then(Json::as_arr)
+                    .context("jobs")?
+                    .iter()
+                    .map(|j| j.as_u64().context("job id"))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((ds, jobs))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        self.states = snap
+            .get("states")
+            .and_then(Json::as_arr)
+            .context("states")?
+            .iter()
+            .map(|s| {
+                let job = s.get("job").and_then(Json::as_u64).context("job")?;
+                let st = match s.get("st").and_then(Json::as_str).context("st")? {
+                    "parked" => JobState::Parked,
+                    "submitted" => JobState::Submitted,
+                    "done" => JobState::Done,
+                    other => anyhow::bail!("unknown job state {other:?}"),
+                };
+                Ok((job, st))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        self.job_meta = snap
+            .get("meta")
+            .and_then(Json::as_arr)
+            .context("meta")?
+            .iter()
+            .map(|m| {
+                Ok((
+                    m.get("job").and_then(Json::as_u64).context("job")?,
+                    (
+                        m.get("at").and_then(Json::as_f64).context("at")?,
+                        m.get("ds").and_then(Json::as_str).context("ds")?.to_string(),
+                    ),
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        self.replicas_received = snap
+            .get("replicas_received")
+            .and_then(Json::as_u64)
+            .context("replicas_received")? as usize;
+        self.jobs_done = snap.get("jobs_done").and_then(Json::as_u64).context("jobs_done")? as usize;
+        self.first_arrival = snap.get("first_arrival").and_then(Json::as_f64);
+        self.summary_published = snap
+            .get("summary_published")
+            .and_then(Json::as_bool)
+            .context("summary_published")?;
+        Ok(())
     }
 }
 

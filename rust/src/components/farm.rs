@@ -124,6 +124,88 @@ impl LogicalProcess<Payload> for FarmLp {
     fn kind(&self) -> &'static str {
         "farm"
     }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            (
+                "units",
+                Json::arr(self.units.iter().map(|u| match u {
+                    Some(job) => Json::num(*job as f64),
+                    None => Json::Null,
+                })),
+            ),
+            (
+                "queue",
+                Json::arr(self.queue.iter().map(|q| {
+                    Json::obj(vec![
+                        ("spec", q.spec.to_json()),
+                        ("queued_at", Json::num(q.queued_at)),
+                    ])
+                })),
+            ),
+            (
+                "running",
+                Json::arr(self.running.iter().map(|(unit, job, queued, started, notify)| {
+                    Json::obj(vec![
+                        ("unit", Json::num(*unit as f64)),
+                        ("job", Json::num(*job as f64)),
+                        ("queued_at", Json::num(*queued)),
+                        ("started_at", Json::num(*started)),
+                        ("notify", Json::num(notify.raw() as f64)),
+                    ])
+                })),
+            ),
+            ("jobs_completed", Json::num(self.jobs_completed as f64)),
+            ("max_queue", Json::num(self.max_queue as f64)),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<()> {
+        let units = snap.get("units").and_then(Json::as_arr).context("units")?;
+        anyhow::ensure!(
+            units.len() == self.units.len(),
+            "farm unit count changed ({} vs {})",
+            units.len(),
+            self.units.len()
+        );
+        self.units = units.iter().map(Json::as_u64).collect();
+        self.queue = snap
+            .get("queue")
+            .and_then(Json::as_arr)
+            .context("queue")?
+            .iter()
+            .map(|q| {
+                Ok(QueuedJob {
+                    spec: JobSpec::from_json(q.get("spec").context("spec")?)?,
+                    queued_at: q.get("queued_at").and_then(Json::as_f64).context("queued_at")?,
+                })
+            })
+            .collect::<Result<VecDeque<_>>>()?;
+        self.running = snap
+            .get("running")
+            .and_then(Json::as_arr)
+            .context("running")?
+            .iter()
+            .map(|r| {
+                Ok((
+                    r.get("unit").and_then(Json::as_u64).context("unit")? as usize,
+                    r.get("job").and_then(Json::as_u64).context("job")?,
+                    r.get("queued_at").and_then(Json::as_f64).context("queued_at")?,
+                    r.get("started_at").and_then(Json::as_f64).context("started_at")?,
+                    LpId(r.get("notify").and_then(Json::as_u64).context("notify")?),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.jobs_completed = snap
+            .get("jobs_completed")
+            .and_then(Json::as_u64)
+            .context("jobs_completed")?;
+        self.max_queue = snap
+            .get("max_queue")
+            .and_then(Json::as_u64)
+            .context("max_queue")? as usize;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -37,7 +37,45 @@ use crate::engine::LogicalProcess;
 use crate::model::Payload;
 use crate::runtime::ComputeBackend;
 use crate::util::json::Json;
-use crate::util::LpId;
+use crate::util::{LpId, Pcg32};
+
+// ---------------------------------------------------------------------------
+// Checkpoint helpers shared by the component snapshot/restore impls
+// ---------------------------------------------------------------------------
+
+/// Exact u64 -> JSON for checkpoint state.  `Json::Num` is an f64 and
+/// cannot represent values above 2^53 — PRNG state words are full-range —
+/// so wide integers travel as decimal strings.
+pub(crate) fn u64_json(v: u64) -> Json {
+    Json::str(v.to_string())
+}
+
+/// Parse a [`u64_json`]-encoded field.
+pub(crate) fn u64_field(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("missing checkpoint field {key}"))?
+        .parse()
+        .with_context(|| format!("bad checkpoint field {key}"))
+}
+
+/// Serialize a PRNG's full position so a restored component resumes the
+/// exact stream.
+pub(crate) fn rng_json(rng: &Pcg32) -> Json {
+    let (state, inc) = rng.state_parts();
+    Json::obj(vec![("state", u64_json(state)), ("inc", u64_json(inc))])
+}
+
+/// Parse [`rng_json`] output.
+pub(crate) fn rng_field(j: &Json, key: &str) -> Result<Pcg32> {
+    let r = j
+        .get(key)
+        .with_context(|| format!("missing checkpoint field {key}"))?;
+    Ok(Pcg32::from_state(
+        u64_field(r, "state")?,
+        u64_field(r, "inc")?,
+    ))
+}
 
 /// Everything a component may need from its environment at build time.
 pub struct BuildCtx {

@@ -309,6 +309,77 @@ impl LogicalProcess<Payload> for WanLp {
     fn kind(&self) -> &'static str {
         "wan"
     }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            (
+                "active",
+                Json::arr(self.active.iter().map(|fl| {
+                    Json::obj(vec![
+                        ("spec", fl.spec.to_json()),
+                        ("remaining_mb", Json::num(fl.remaining_mb)),
+                        ("rate_mbs", Json::num(fl.rate_mbs)),
+                        ("started_at", Json::num(fl.started_at)),
+                    ])
+                })),
+            ),
+            (
+                "waiting",
+                Json::arr(self.waiting.iter().map(TransferSpec::to_json)),
+            ),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("last_progress_at", Json::num(self.last_progress_at)),
+            ("interrupts", Json::num(self.interrupts as f64)),
+            (
+                "transfers_completed",
+                Json::num(self.transfers_completed as f64),
+            ),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<()> {
+        self.active = snap
+            .get("active")
+            .and_then(Json::as_arr)
+            .context("active")?
+            .iter()
+            .map(|f| {
+                Ok(Flow {
+                    spec: TransferSpec::from_json(f.get("spec").context("spec")?)?,
+                    remaining_mb: f
+                        .get("remaining_mb")
+                        .and_then(Json::as_f64)
+                        .context("remaining_mb")?,
+                    rate_mbs: f.get("rate_mbs").and_then(Json::as_f64).context("rate_mbs")?,
+                    started_at: f
+                        .get("started_at")
+                        .and_then(Json::as_f64)
+                        .context("started_at")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.waiting = snap
+            .get("waiting")
+            .and_then(Json::as_arr)
+            .context("waiting")?
+            .iter()
+            .map(TransferSpec::from_json)
+            .collect::<Result<VecDeque<_>>>()?;
+        self.epoch = snap.get("epoch").and_then(Json::as_u64).context("epoch")?;
+        self.last_progress_at = snap
+            .get("last_progress_at")
+            .and_then(Json::as_f64)
+            .context("last_progress_at")?;
+        self.interrupts = snap
+            .get("interrupts")
+            .and_then(Json::as_u64)
+            .context("interrupts")?;
+        self.transfers_completed = snap
+            .get("transfers_completed")
+            .and_then(Json::as_u64)
+            .context("transfers_completed")?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

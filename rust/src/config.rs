@@ -15,6 +15,7 @@ use crate::coordinator::adaptive::{WindowBudgetMode, WindowBudgetSpec};
 use crate::engine::{EventQueueKind, ExecMode, SyncProtocol};
 use crate::transport::{WireCodec, WriterQueue};
 use crate::util::json::Json;
+use crate::util::AgentId;
 
 /// How the placement scheduler and network model evaluate their numeric
 /// hot spots.
@@ -60,6 +61,177 @@ impl FromStr for PlacementPolicy {
                 "unknown placement policy '{other}' (perf|rr|random)"
             )),
         }
+    }
+}
+
+/// What the launch leader does when a fleet member fails mid-run
+/// (`deploy.on_failure`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OnFailure {
+    /// Tear the fleet down and abort the run (the default, and the only
+    /// behavior before checkpoints existed).
+    #[default]
+    Abort,
+    /// Respawn the fleet and roll every member back to the latest
+    /// committed coordinated checkpoint (from scratch if none committed
+    /// yet), then resume.  Requires `deploy.checkpoint_windows > 0` to
+    /// resume from anywhere but the start.
+    Restart,
+}
+
+impl std::fmt::Display for OnFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OnFailure::Abort => write!(f, "abort"),
+            OnFailure::Restart => write!(f, "restart"),
+        }
+    }
+}
+
+impl FromStr for OnFailure {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "abort" => Ok(OnFailure::Abort),
+            "restart" => Ok(OnFailure::Restart),
+            other => Err(format!("unknown on_failure '{other}' (abort|restart)")),
+        }
+    }
+}
+
+/// One scheduled fault in a [`FaultPlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The agent process exits hard (no AgentFailed frame, no cleanup) —
+    /// equivalent to an external SIGKILL.
+    KillAgent,
+    /// The agent drops one inbound transport frame and treats the loss as
+    /// a fatal local error (a poisoned connection).
+    DropFrame,
+    /// The agent sleeps `count` milliseconds before each outbound flush
+    /// for one window — a slow writer, not a failure.
+    DelayWriter,
+    /// The agent skips its next `count` heartbeats — a silent-but-alive
+    /// member the liveness monitor must flag.
+    StallHeartbeat,
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            FaultKind::KillAgent => "kill_agent",
+            FaultKind::DropFrame => "drop_frame",
+            FaultKind::DelayWriter => "delay_writer",
+            FaultKind::StallHeartbeat => "stall_heartbeat",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl FromStr for FaultKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "kill_agent" => Ok(FaultKind::KillAgent),
+            "drop_frame" => Ok(FaultKind::DropFrame),
+            "delay_writer" => Ok(FaultKind::DelayWriter),
+            "stall_heartbeat" => Ok(FaultKind::StallHeartbeat),
+            other => Err(format!(
+                "unknown fault kind '{other}' \
+                 (kill_agent|drop_frame|delay_writer|stall_heartbeat)"
+            )),
+        }
+    }
+}
+
+/// One entry of a fault schedule: `kind` fires on `agent` when that
+/// agent's executed-window counter reaches `at_window`, but only on fleet
+/// launch attempt `on_attempt` (1 = the first launch; a restarted fleet
+/// runs as attempt 2, so a kill scheduled for attempt 1 cannot re-fire
+/// and wedge the recovery in a loop).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    pub agent: AgentId,
+    pub at_window: u64,
+    /// Kind-specific magnitude: heartbeats to skip (`stall_heartbeat`),
+    /// milliseconds of delay (`delay_writer`); ignored otherwise.
+    pub count: u64,
+    pub on_attempt: u64,
+}
+
+impl FaultSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.to_string())),
+            ("agent", Json::num(self.agent.raw() as f64)),
+            ("at_window", Json::num(self.at_window as f64)),
+            ("count", Json::num(self.count as f64)),
+            ("on_attempt", Json::num(self.on_attempt as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultSpec> {
+        Ok(FaultSpec {
+            kind: j
+                .get("kind")
+                .and_then(Json::as_str)
+                .context("fault kind")?
+                .parse()
+                .map_err(anyhow::Error::msg)?,
+            agent: AgentId(j.get("agent").and_then(Json::as_u64).context("fault agent")?),
+            at_window: j
+                .get("at_window")
+                .and_then(Json::as_u64)
+                .context("fault at_window")?,
+            count: j.get("count").and_then(Json::as_u64).unwrap_or(1),
+            on_attempt: j.get("on_attempt").and_then(Json::as_u64).unwrap_or(1),
+        })
+    }
+}
+
+/// A deterministic, replayable fault-injection schedule (the `faults`
+/// scenario block).  Faults fire at *virtual* trigger points — an agent's
+/// executed-window counter — never wall-clock timers, so a given scenario
+/// file reproduces the same failure at the same point in every run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Reserved for future randomized schedules; recorded so two runs of
+    /// the same plan can be compared.
+    pub seed: u64,
+    pub schedule: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.schedule.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "schedule",
+                Json::arr(self.schedule.iter().map(FaultSpec::to_json)),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultPlan> {
+        Ok(FaultPlan {
+            seed: j.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            schedule: j
+                .get("schedule")
+                .and_then(Json::as_arr)
+                .context("faults.schedule")?
+                .iter()
+                .map(FaultSpec::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    pub fn from_json_text(text: &str) -> Result<FaultPlan> {
+        Self::from_json(&Json::parse(text).context("fault plan is not valid JSON")?)
     }
 }
 
@@ -136,6 +308,20 @@ pub struct DeployConfig {
     /// leader's deadline (8x the period, >= 2s).  Heartbeats are
     /// control-plane only and never perturb simulation results.
     pub heartbeat_ms: u64,
+    /// Coordinated-checkpoint cadence for `dsim scenario launch` fleets:
+    /// every N executed windows the leader drives a quiescent barrier and
+    /// every agent writes its full engine state to disk.  0 (default) =
+    /// checkpoints off.  In-process deployments ignore it.
+    pub checkpoint_windows: u64,
+    /// Leader policy when a fleet member fails mid-run: `abort` (default)
+    /// or `restart` (respawn + roll back to the latest checkpoint).
+    pub on_failure: OnFailure,
+    /// Total time a TCP writer keeps retrying a refused connection before
+    /// declaring the peer unreachable, in milliseconds.
+    pub connect_timeout_ms: u64,
+    /// First TCP connect-retry delay, in milliseconds (doubles per
+    /// attempt, capped at 1 s).
+    pub connect_backoff_ms: u64,
     /// Directory holding the AOT artifacts.
     pub artifacts_dir: String,
 }
@@ -182,6 +368,12 @@ impl DeployConfig {
         if self.probe_fallback_ms == 0 {
             bail!("deploy.probe_fallback_ms must be >= 1");
         }
+        if self.connect_timeout_ms == 0 {
+            bail!("deploy.connect_timeout_ms must be >= 1");
+        }
+        if self.connect_backoff_ms == 0 {
+            bail!("deploy.connect_backoff_ms must be >= 1");
+        }
         Ok(())
     }
 }
@@ -206,6 +398,10 @@ impl Default for DeployConfig {
             window_budget_max: WindowBudgetSpec::default().max,
             probe_fallback_ms: 2,
             heartbeat_ms: 0,
+            checkpoint_windows: 0,
+            on_failure: OnFailure::Abort,
+            connect_timeout_ms: crate::transport::DEFAULT_CONNECT_TIMEOUT_MS,
+            connect_backoff_ms: crate::transport::DEFAULT_CONNECT_BACKOFF_MS,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -340,6 +536,15 @@ impl ScenarioConfig {
             probe_fallback_ms: get_usize(&d, "probe_fallback_ms", dd.probe_fallback_ms as usize)?
                 as u64,
             heartbeat_ms: get_usize(&d, "heartbeat_ms", dd.heartbeat_ms as usize)? as u64,
+            checkpoint_windows: get_usize(&d, "checkpoint_windows", dd.checkpoint_windows as usize)?
+                as u64,
+            on_failure: get_str(&d, "on_failure", &dd.on_failure.to_string())?
+                .parse()
+                .map_err(anyhow::Error::msg)?,
+            connect_timeout_ms: get_usize(&d, "connect_timeout_ms", dd.connect_timeout_ms as usize)?
+                as u64,
+            connect_backoff_ms: get_usize(&d, "connect_backoff_ms", dd.connect_backoff_ms as usize)?
+                as u64,
             artifacts_dir: get_str(&d, "artifacts_dir", &dd.artifacts_dir)?,
         };
         let workload = WorkloadConfig {
@@ -464,6 +669,19 @@ impl ScenarioConfig {
                         Json::num(self.deploy.probe_fallback_ms as f64),
                     ),
                     ("heartbeat_ms", Json::num(self.deploy.heartbeat_ms as f64)),
+                    (
+                        "checkpoint_windows",
+                        Json::num(self.deploy.checkpoint_windows as f64),
+                    ),
+                    ("on_failure", Json::str(self.deploy.on_failure.to_string())),
+                    (
+                        "connect_timeout_ms",
+                        Json::num(self.deploy.connect_timeout_ms as f64),
+                    ),
+                    (
+                        "connect_backoff_ms",
+                        Json::num(self.deploy.connect_backoff_ms as f64),
+                    ),
                     ("artifacts_dir", Json::str(self.deploy.artifacts_dir.clone())),
                 ]),
             ),
@@ -696,5 +914,67 @@ mod tests {
     fn lookahead_defaults_to_wan_latency() {
         let cfg = ScenarioConfig::default();
         assert_eq!(cfg.lookahead(), cfg.workload.wan_latency_s);
+    }
+
+    #[test]
+    fn robustness_knobs_parse_and_default() {
+        // Defaults: checkpoints off, abort on failure, 5 s / 100 ms
+        // connect retry budget.
+        let cfg = ScenarioConfig::from_json_text("{}").unwrap();
+        assert_eq!(cfg.deploy.checkpoint_windows, 0);
+        assert_eq!(cfg.deploy.on_failure, OnFailure::Abort);
+        assert_eq!(cfg.deploy.connect_timeout_ms, 5_000);
+        assert_eq!(cfg.deploy.connect_backoff_ms, 100);
+        let cfg = ScenarioConfig::from_json_text(
+            r#"{"deploy": {"checkpoint_windows": 32, "on_failure": "restart",
+                           "connect_timeout_ms": 800, "connect_backoff_ms": 25}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.deploy.checkpoint_windows, 32);
+        assert_eq!(cfg.deploy.on_failure, OnFailure::Restart);
+        assert_eq!(cfg.deploy.connect_timeout_ms, 800);
+        assert_eq!(cfg.deploy.connect_backoff_ms, 25);
+        // Round-trips through to_json.
+        let back = ScenarioConfig::from_json_text(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(back.deploy.checkpoint_windows, 32);
+        assert_eq!(back.deploy.on_failure, OnFailure::Restart);
+        // Rejections.
+        for bad in [
+            r#"{"deploy": {"on_failure": "retry"}}"#,
+            r#"{"deploy": {"connect_timeout_ms": 0}}"#,
+            r#"{"deploy": {"connect_backoff_ms": 0}}"#,
+        ] {
+            assert!(ScenarioConfig::from_json_text(bad).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn fault_plan_roundtrip_and_defaults() {
+        let plan = FaultPlan::from_json_text(
+            r#"{"seed": 7, "schedule": [
+                {"kind": "kill_agent", "agent": 2, "at_window": 40},
+                {"kind": "stall_heartbeat", "agent": 1, "at_window": 10,
+                 "count": 5, "on_attempt": 2}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.schedule.len(), 2);
+        // Omitted count / on_attempt default to 1.
+        assert_eq!(plan.schedule[0].count, 1);
+        assert_eq!(plan.schedule[0].on_attempt, 1);
+        assert_eq!(plan.schedule[0].kind, FaultKind::KillAgent);
+        assert_eq!(plan.schedule[1].count, 5);
+        assert_eq!(plan.schedule[1].on_attempt, 2);
+        let back = FaultPlan::from_json_text(&plan.to_json().to_string()).unwrap();
+        assert_eq!(back, plan);
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::default().is_empty());
+        // Unknown kinds and a missing schedule are rejected.
+        assert!(FaultPlan::from_json_text(
+            r#"{"schedule": [{"kind": "meteor", "agent": 1, "at_window": 0}]}"#
+        )
+        .is_err());
+        assert!(FaultPlan::from_json_text(r#"{"seed": 3}"#).is_err());
     }
 }

@@ -81,6 +81,11 @@
 
 use std::str::FromStr;
 
+use anyhow::Result;
+
+use crate::components::{u64_field, u64_json};
+use crate::util::json::Json;
+
 /// The historical fixed budget: upper bound on timestamps one
 /// `advance_window` call may execute before control returns to the
 /// transport drain.  Windows resume where they left off, so this only
@@ -301,6 +306,34 @@ impl WindowController {
     /// Trajectory so far.
     pub fn telemetry(&self) -> BudgetTelemetry {
         self.telemetry
+    }
+
+    /// Serialize the controller's dynamic state (budget + trajectory) for
+    /// a checkpoint.  The spec is config, not state — a restored run gets
+    /// it from the scenario again.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("budget", u64_json(self.budget as u64)),
+            ("min", u64_json(self.telemetry.min)),
+            ("max", u64_json(self.telemetry.max)),
+            ("last", u64_json(self.telemetry.last)),
+            ("grows", u64_json(self.telemetry.grows)),
+            ("shrinks", u64_json(self.telemetry.shrinks)),
+        ])
+    }
+
+    /// Resume from a [`snapshot`](Self::snapshot) taken under the same
+    /// spec.
+    pub fn restore(&mut self, snap: &Json) -> Result<()> {
+        self.budget = u64_field(snap, "budget")? as usize;
+        self.telemetry = BudgetTelemetry {
+            min: u64_field(snap, "min")?,
+            max: u64_field(snap, "max")?,
+            last: u64_field(snap, "last")?,
+            grows: u64_field(snap, "grows")?,
+            shrinks: u64_field(snap, "shrinks")?,
+        };
+        Ok(())
     }
 
     /// One controller step after a completed window that executed

@@ -11,11 +11,15 @@
 //! wire batching — answer termination probes, publish monitoring samples.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
+use anyhow::Context as _;
+
 use super::adaptive::{BudgetTelemetry, WindowBudgetSpec, WindowController, WirePressure};
 use crate::components::{build_component, BuildCtx};
+use crate::config::{FaultKind, FaultPlan};
 use crate::engine::{
     Engine, EngineStats, EventQueueKind, ExecMode, SimTime, StepOutcome, WindowOutcome,
     WorkerPool,
@@ -47,6 +51,11 @@ struct ContextSlot {
     /// Engine window count already reported to the leader via
     /// `WindowReport` (so each completed window is announced exactly once).
     reported_windows: u64,
+    /// `Some(ckpt)` while the context is held at a checkpoint barrier:
+    /// stepping stops at the current window boundary, transport ingest
+    /// continues (the barrier needs in-flight frames drained), and the
+    /// engine emits nothing new until `CheckpointCommit` unpauses.
+    paused: Option<u64>,
 }
 
 /// Per-agent configuration.
@@ -111,6 +120,26 @@ pub struct AgentRuntime<T: Transport<Payload>> {
     /// already dead); checked alongside `Transport::take_failures` each
     /// loop turn.
     local_fatal: Vec<String>,
+    /// Where this agent's coordinated checkpoints live (None = the
+    /// checkpoint control messages fail loudly).  Set by
+    /// [`with_checkpoint_dir`](Self::with_checkpoint_dir).
+    ckpt_dir: Option<PathBuf>,
+    /// Checkpoint id the launcher said a `Rollback` will target (advisory
+    /// cross-check; the rollback message itself is authoritative).
+    expected_restore: Option<u64>,
+    /// Deterministic fault-injection schedule (empty = no faults) and
+    /// the fleet launch attempt it is filtered against.
+    faults: FaultPlan,
+    attempt: u64,
+    fault_fired: Vec<bool>,
+    /// Heartbeats still to suppress (`stall_heartbeat` fault).
+    skip_beats: u64,
+    /// Next inbound data frame is dropped + treated as a poisoned
+    /// connection (`drop_frame` fault).
+    drop_frame_armed: bool,
+    /// Milliseconds the next outbox flush sleeps first (`delay_writer`
+    /// fault; wall-clock only, results untouched).
+    flush_delay_ms: u64,
 }
 
 impl<T: Transport<Payload>> AgentRuntime<T> {
@@ -134,7 +163,46 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             send_block_seen: 0,
             send_block_reported: 0,
             local_fatal: Vec::new(),
+            ckpt_dir: None,
+            expected_restore: None,
+            faults: FaultPlan::default(),
+            attempt: 1,
+            fault_fired: Vec::new(),
+            skip_beats: 0,
+            drop_frame_armed: false,
+            flush_delay_ms: 0,
         }
+    }
+
+    /// Enable coordinated checkpoints: barrier commits write to (and
+    /// rollbacks read from) per-agent files under `dir`.
+    pub fn with_checkpoint_dir(mut self, dir: PathBuf) -> Self {
+        self.ckpt_dir = Some(dir);
+        self
+    }
+
+    /// Record the checkpoint id the launcher expects the leader to roll
+    /// this agent back to (logged on mismatch; the `Rollback` message is
+    /// authoritative).
+    pub fn with_restore(mut self, ckpt: u64) -> Self {
+        self.expected_restore = Some(ckpt);
+        self
+    }
+
+    /// Install a deterministic fault-injection schedule, filtered to
+    /// entries targeting this fleet launch `attempt`.
+    pub fn with_faults(mut self, plan: FaultPlan, attempt: u64) -> Self {
+        self.fault_fired = vec![false; plan.schedule.len()];
+        self.faults = plan;
+        self.attempt = attempt;
+        self
+    }
+
+    /// This agent's checkpoint file for barrier `ckpt`.
+    fn ckpt_path(&self, ckpt: u64) -> Option<PathBuf> {
+        self.ckpt_dir
+            .as_ref()
+            .map(|d| d.join(format!("ckpt_{ckpt}_agent_{}.json", self.cfg.me.raw())))
     }
 
     /// Wire bytes emitted since the last `FinalStats` report.
@@ -182,14 +250,21 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             }
             if !heartbeat.is_zero() && last_beat.elapsed() >= heartbeat {
                 last_beat = std::time::Instant::now();
-                beat_seq += 1;
-                let _ = self.transport.send(
-                    LEADER,
-                    NetMsg::Control(ControlMsg::Heartbeat {
-                        from: self.cfg.me,
-                        seq: beat_seq,
-                    }),
-                );
+                if self.skip_beats > 0 {
+                    // stall_heartbeat fault: stay silent this period (the
+                    // cadence clock keeps running, so `count` beats skip
+                    // exactly `count` periods).
+                    self.skip_beats -= 1;
+                } else {
+                    beat_seq += 1;
+                    let _ = self.transport.send(
+                        LEADER,
+                        NetMsg::Control(ControlMsg::Heartbeat {
+                            from: self.cfg.me,
+                            seq: beat_seq,
+                        }),
+                    );
+                }
             }
 
             // 1. Ingest everything queued on the transport.
@@ -239,6 +314,18 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
 
     /// Returns false on shutdown.
     fn handle(&mut self, msg: NetMsg<Payload>) -> bool {
+        if self.drop_frame_armed {
+            if let NetMsg::Event { .. } | NetMsg::WindowBatch { .. } = &msg {
+                // drop_frame fault: lose one inbound data frame.  A skipped
+                // frame breaks the channel's FIFO promise chain, so it gets
+                // the same treatment as a poisoned connection — fatal.
+                self.drop_frame_armed = false;
+                log::warn!("{}: injected fault: dropping inbound data frame", self.cfg.me);
+                self.local_fatal
+                    .push("injected fault: inbound data frame dropped".to_string());
+                return true;
+            }
+        }
         match msg {
             NetMsg::Event {
                 context,
@@ -471,6 +558,80 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 }
                 self.publish_perf();
             }
+            ControlMsg::CheckpointStart { context, ckpt }
+            | ControlMsg::CheckpointPoll { context, ckpt } => {
+                // Hold the context at its current window boundary and
+                // report the event counters; the leader polls until the
+                // fleet-wide sent/received sums match (global quiescence:
+                // once every participant is paused the sent sum is frozen,
+                // so received can only climb to meet it).  Non-participants
+                // have no slot and answer zeros immediately.
+                let (sent, received) = match self.contexts.get_mut(&context) {
+                    Some(slot) => {
+                        slot.paused = Some(ckpt);
+                        (slot.sent, slot.received)
+                    }
+                    None => (0, 0),
+                };
+                self.flush_outbox(context);
+                let _ = self.transport.send(
+                    LEADER,
+                    NetMsg::Control(ControlMsg::CheckpointReply {
+                        context,
+                        ckpt,
+                        from: self.cfg.me,
+                        sent,
+                        received,
+                    }),
+                );
+            }
+            ControlMsg::CheckpointCommit { context, ckpt } => {
+                let err = match self.write_checkpoint(context, ckpt) {
+                    Ok(()) => String::new(),
+                    Err(e) => {
+                        log::error!("{}: checkpoint {ckpt} failed: {e:#}", self.cfg.me);
+                        format!("{e:#}")
+                    }
+                };
+                if let Some(slot) = self.contexts.get_mut(&context) {
+                    slot.paused = None;
+                }
+                let _ = self.transport.send(
+                    LEADER,
+                    NetMsg::Control(ControlMsg::CheckpointDone {
+                        context,
+                        ckpt,
+                        from: self.cfg.me,
+                        err,
+                    }),
+                );
+            }
+            ControlMsg::Rollback { context, ckpt } => {
+                if let Some(expect) = self.expected_restore {
+                    if expect != ckpt {
+                        log::warn!(
+                            "{}: rolling back to checkpoint {ckpt}, launched expecting {expect}",
+                            self.cfg.me
+                        );
+                    }
+                }
+                let err = match self.load_checkpoint(context, ckpt) {
+                    Ok(()) => String::new(),
+                    Err(e) => {
+                        log::error!("{}: rollback to {ckpt} failed: {e:#}", self.cfg.me);
+                        format!("{e:#}")
+                    }
+                };
+                let _ = self.transport.send(
+                    LEADER,
+                    NetMsg::Control(ControlMsg::RollbackDone {
+                        context,
+                        ckpt,
+                        from: self.cfg.me,
+                        err,
+                    }),
+                );
+            }
             ControlMsg::Shutdown => return false,
             other => log::warn!("{}: unexpected control {other:?}", self.cfg.me),
         }
@@ -507,6 +668,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 received: 0,
                 frames: 0,
                 reported_windows: 0,
+                paused: None,
             }
         })
     }
@@ -516,7 +678,9 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
     /// processed.
     fn step_context(&mut self, ctx: ContextId) -> bool {
         let started = match self.contexts.get(&ctx) {
-            Some(s) => s.started,
+            // A paused context sits at its window boundary until the
+            // checkpoint barrier commits; ingest continues in `handle`.
+            Some(s) => s.started && s.paused.is_none(),
             None => return false,
         };
         if !started {
@@ -542,6 +706,12 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 match outcome {
                     WindowOutcome::Processed { timestamps, .. } => {
                         self.tune_budget(ctx, timestamps);
+                        let windows = self
+                            .contexts
+                            .get(&ctx)
+                            .map(|s| s.engine.stats().windows)
+                            .unwrap_or(0);
+                        self.trigger_faults(windows);
                         true
                     }
                     _ => false,
@@ -610,6 +780,12 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
     /// per-event bound by the suffix-minimum of later event times on the
     /// same channel, since there each event travels as its own frame.)
     fn flush_outbox(&mut self, ctx: ContextId) {
+        if self.flush_delay_ms > 0 {
+            // delay_writer fault: a wall-clock stall on the send path only
+            // — virtual-time results are untouched by construction.
+            let ms = std::mem::take(&mut self.flush_delay_ms);
+            std::thread::sleep(Duration::from_millis(ms));
+        }
         let Some(slot) = self.contexts.get_mut(&ctx) else { return };
         let out = slot.engine.drain_outbox();
         let space_ops = self.space.drain_outbox();
@@ -737,6 +913,126 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                         let _ = self.transport.send(peer, NetMsg::Space(op.clone()));
                     }
                 }
+            }
+        }
+    }
+
+    /// Serialize the full engine + controller + counter state of `context`
+    /// to this agent's checkpoint file for barrier `ckpt`.  Called only at
+    /// global quiescence (the barrier proved every in-flight event
+    /// ingested), so the snapshot is a consistent fleet-wide cut.
+    /// Non-participants have nothing to persist and succeed trivially.
+    fn write_checkpoint(&mut self, context: ContextId, ckpt: u64) -> anyhow::Result<()> {
+        if !self.contexts.contains_key(&context) {
+            return Ok(());
+        }
+        let path = self
+            .ckpt_path(ckpt)
+            .ok_or_else(|| anyhow::anyhow!("no checkpoint directory configured"))?;
+        let slot = self.contexts.get_mut(&context).unwrap();
+        let body = Json::obj(vec![
+            ("ckpt", Json::num(ckpt as f64)),
+            ("context", Json::num(context.raw() as f64)),
+            ("engine", slot.engine.snapshot()),
+            ("controller", slot.controller.snapshot()),
+            ("sent", Json::num(slot.sent as f64)),
+            ("received", Json::num(slot.received as f64)),
+            ("frames", Json::num(slot.frames as f64)),
+            ("reported_windows", Json::num(slot.reported_windows as f64)),
+        ]);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create {}", parent.display()))?;
+        }
+        // Write-then-rename: a crash mid-write can never leave a torn
+        // file where the next recovery expects a checkpoint.
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, format!("{body}\n"))
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("commit {}", path.display()))?;
+        log::info!("{}: committed checkpoint {}", self.cfg.me, path.display());
+        Ok(())
+    }
+
+    /// Restore `context` from this agent's checkpoint file for barrier
+    /// `ckpt`, leaving the slot stopped (the leader's `StartRun` follows
+    /// the rollback round).  The slot must already exist with its LPs
+    /// deployed — the resume drive replays RoutingTable + DeployLp first,
+    /// exactly like a fresh launch.
+    fn load_checkpoint(&mut self, context: ContextId, ckpt: u64) -> anyhow::Result<()> {
+        if !self.contexts.contains_key(&context) {
+            // Non-participant in this context: nothing to restore.
+            return Ok(());
+        }
+        let path = self
+            .ckpt_path(ckpt)
+            .ok_or_else(|| anyhow::anyhow!("no checkpoint directory configured"))?;
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read checkpoint {}", path.display()))?;
+        let snap = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("checkpoint {} is not valid JSON: {e}", path.display()))?;
+        anyhow::ensure!(
+            snap.get("ckpt").and_then(Json::as_u64) == Some(ckpt),
+            "checkpoint id mismatch in {}",
+            path.display()
+        );
+        let slot = self.contexts.get_mut(&context).unwrap();
+        slot.engine
+            .restore(snap.get("engine").context("checkpoint missing engine")?)
+            .context("restore engine")?;
+        slot.controller
+            .restore(snap.get("controller").context("checkpoint missing controller")?)
+            .context("restore controller")?;
+        slot.sent = snap.get("sent").and_then(Json::as_u64).context("sent")?;
+        slot.received = snap
+            .get("received")
+            .and_then(Json::as_u64)
+            .context("received")?;
+        slot.frames = snap.get("frames").and_then(Json::as_u64).context("frames")?;
+        slot.reported_windows = snap
+            .get("reported_windows")
+            .and_then(Json::as_u64)
+            .context("reported_windows")?;
+        slot.paused = None;
+        slot.started = false;
+        log::info!("{}: restored checkpoint {}", self.cfg.me, path.display());
+        Ok(())
+    }
+
+    /// Fire every scheduled fault targeting this agent + launch attempt
+    /// whose window trigger has been reached.  Trigger points are virtual
+    /// (executed-window counters), never wall clock, so a given plan
+    /// reproduces the same failure at the same point run after run.
+    fn trigger_faults(&mut self, windows: u64) {
+        if self.faults.schedule.is_empty() {
+            return;
+        }
+        for i in 0..self.faults.schedule.len() {
+            let f = self.faults.schedule[i].clone();
+            if self.fault_fired[i]
+                || f.agent != self.cfg.me
+                || f.on_attempt != self.attempt
+                || windows < f.at_window
+            {
+                continue;
+            }
+            self.fault_fired[i] = true;
+            log::warn!(
+                "{}: injecting fault {} at window {windows} (attempt {})",
+                self.cfg.me,
+                f.kind,
+                self.attempt
+            );
+            match f.kind {
+                FaultKind::KillAgent => {
+                    // A hard exit: no AgentFailed frame, no teardown — the
+                    // same failure signature as an external SIGKILL.
+                    std::process::exit(101);
+                }
+                FaultKind::DropFrame => self.drop_frame_armed = true,
+                FaultKind::DelayWriter => self.flush_delay_ms = f.count,
+                FaultKind::StallHeartbeat => self.skip_beats += f.count,
             }
         }
     }

@@ -208,6 +208,22 @@ pub trait LogicalProcess<P>: Send {
     fn kind(&self) -> &'static str {
         "lp"
     }
+
+    /// Serialize this LP's mutable state for a coordinated checkpoint.
+    /// The default (`Json::Null`) is correct only for stateless LPs —
+    /// every stateful component must override both this and
+    /// [`restore`](Self::restore), capturing *all* state that influences
+    /// future behavior (including PRNG positions), or restored runs lose
+    /// the bit-identical-fingerprint guarantee.
+    fn snapshot(&self) -> Json {
+        Json::Null
+    }
+
+    /// Restore state captured by [`snapshot`](Self::snapshot) onto a
+    /// freshly-constructed instance of the same LP.
+    fn restore(&mut self, _snap: &Json) -> anyhow::Result<()> {
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -250,6 +266,57 @@ impl EngineStats {
     /// Total synchronization messages this engine emitted.
     pub fn sync_messages(&self) -> u64 {
         self.null_messages_sent + self.lvt_requests_sent
+    }
+
+    /// JSON form for checkpoints.  Every field is included: several
+    /// (`events_processed` in particular) feed the determinism
+    /// fingerprint, so a restored run must resume the exact counters.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("events_processed", Json::num(self.events_processed as f64)),
+            ("events_sent_local", Json::num(self.events_sent_local as f64)),
+            ("events_sent_remote", Json::num(self.events_sent_remote as f64)),
+            ("null_messages_sent", Json::num(self.null_messages_sent as f64)),
+            ("lvt_requests_sent", Json::num(self.lvt_requests_sent as f64)),
+            ("lvt_requests_received", Json::num(self.lvt_requests_received as f64)),
+            ("blocked_steps", Json::num(self.blocked_steps as f64)),
+            ("lookahead_clamps", Json::num(self.lookahead_clamps as f64)),
+            ("max_queue_len", Json::num(self.max_queue_len as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("lps_finished", Json::num(self.lps_finished as f64)),
+            ("windows", Json::num(self.windows as f64)),
+            ("window_timestamps", Json::num(self.window_timestamps as f64)),
+            ("max_window_events", Json::num(self.max_window_events as f64)),
+            ("windows_truncated", Json::num(self.windows_truncated as f64)),
+            ("events_rejected", Json::num(self.events_rejected as f64)),
+        ])
+    }
+
+    /// Parse [`EngineStats::to_json`] output.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let get = |k: &str| -> anyhow::Result<u64> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("stats field {k} missing or not a count"))
+        };
+        Ok(EngineStats {
+            events_processed: get("events_processed")?,
+            events_sent_local: get("events_sent_local")?,
+            events_sent_remote: get("events_sent_remote")?,
+            null_messages_sent: get("null_messages_sent")?,
+            lvt_requests_sent: get("lvt_requests_sent")?,
+            lvt_requests_received: get("lvt_requests_received")?,
+            blocked_steps: get("blocked_steps")?,
+            lookahead_clamps: get("lookahead_clamps")?,
+            max_queue_len: get("max_queue_len")? as usize,
+            steps: get("steps")?,
+            lps_finished: get("lps_finished")?,
+            windows: get("windows")?,
+            window_timestamps: get("window_timestamps")?,
+            max_window_events: get("max_window_events")? as usize,
+            windows_truncated: get("windows_truncated")?,
+            events_rejected: get("events_rejected")?,
+        })
     }
 }
 
@@ -1110,6 +1177,206 @@ impl<P: Clone + Send + 'static> Engine<P> {
 
     fn note_queue_len(&mut self) {
         self.stats.max_queue_len = self.stats.max_queue_len.max(self.queues.len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint / restore
+// ---------------------------------------------------------------------------
+
+fn lp_state_str(s: LpState) -> &'static str {
+    match s {
+        LpState::Created => "created",
+        LpState::Ready => "ready",
+        LpState::Running => "running",
+        LpState::Waiting => "waiting",
+        LpState::Finished => "finished",
+    }
+}
+
+fn lp_state_from_str(s: &str) -> anyhow::Result<LpState> {
+    Ok(match s {
+        "created" => LpState::Created,
+        "ready" => LpState::Ready,
+        "running" => LpState::Running,
+        "waiting" => LpState::Waiting,
+        "finished" => LpState::Finished,
+        other => anyhow::bail!("unknown lp state {other:?}"),
+    })
+}
+
+fn agent_time_list(xs: impl IntoIterator<Item = (AgentId, SimTime)>) -> Json {
+    Json::arr(xs.into_iter().map(|(a, t)| {
+        Json::obj(vec![
+            ("a", Json::num(a.raw() as f64)),
+            ("t", crate::transport::time_to_json(t)),
+        ])
+    }))
+}
+
+fn agent_time_entries(j: &Json, key: &str) -> anyhow::Result<Vec<(AgentId, SimTime)>> {
+    use anyhow::Context;
+    let arr = j.get(key).and_then(Json::as_arr).with_context(|| format!("{key} missing"))?;
+    arr.iter()
+        .map(|e| {
+            let a = e
+                .get("a")
+                .and_then(Json::as_u64)
+                .with_context(|| format!("{key}: agent id"))?;
+            let t = crate::transport::time_from_json(
+                e.get("t").with_context(|| format!("{key}: time"))?,
+            )?;
+            Ok((AgentId(a), t))
+        })
+        .collect()
+}
+
+/// Checkpoint support.  Requires `P: Wire` because pending events carry
+/// payloads that must round-trip through the JSON tree.
+impl<P: Clone + Send + 'static + crate::transport::Wire> Engine<P> {
+    /// Serialize the engine's complete mutable state as a JSON tree.
+    ///
+    /// Meant to be taken at a globally quiescent window boundary: the
+    /// outboxes must be drained (flushed to the wire) first — the snapshot
+    /// asserts they are empty rather than trying to capture in-flight
+    /// traffic.  Takes `&mut self` because enumerating the pending-event
+    /// store drains and rebuilds it (contents are unchanged).
+    ///
+    /// Not captured, by design:
+    /// - the routing `directory` — rebuilt by the leader's `RoutingTable`
+    ///   round before restore (local finished-LP removals are replayed by
+    ///   [`restore`](Self::restore));
+    /// - scratch/recycle buffers — pure capacity caches.
+    pub fn snapshot(&mut self) -> Json {
+        use crate::transport::{event_to_json, time_to_json};
+        debug_assert!(
+            self.outbox_events.is_empty() && self.outbox_sync.is_empty(),
+            "snapshot requires a flushed outbox"
+        );
+        let events = Json::arr(self.queues.snapshot_events().iter().map(event_to_json));
+        let per_source = Json::arr(self.queues.per_source_counts().iter().map(|(a, n)| {
+            Json::obj(vec![
+                ("a", Json::num(a.raw() as f64)),
+                ("n", Json::num(*n as f64)),
+            ])
+        }));
+        let bounds = agent_time_list(
+            self.lvt_table
+                .peers()
+                .into_iter()
+                .map(|p| (p, self.lvt_table.bound(p))),
+        );
+        // Sort LP records by id so the serialized form is deterministic
+        // (lp_index is a HashMap; checkpoint files must be byte-stable).
+        let mut lp_ids: Vec<(LpId, usize)> =
+            self.lp_index.iter().map(|(id, i)| (*id, *i)).collect();
+        lp_ids.sort_unstable_by_key(|(id, _)| *id);
+        let lps = Json::arr(lp_ids.iter().filter_map(|(id, i)| {
+            self.lp_slots[*i].as_ref().map(|slot| {
+                Json::obj(vec![
+                    ("id", Json::num(id.raw() as f64)),
+                    ("state", Json::str(lp_state_str(slot.state))),
+                    ("handled", Json::num(slot.events_handled as f64)),
+                    ("comp", slot.lp.snapshot()),
+                ])
+            })
+        }));
+        Json::obj(vec![
+            ("lvt", time_to_json(self.lvt)),
+            ("seq", Json::num(self.seq as f64)),
+            ("stats", self.stats.to_json()),
+            ("events", events),
+            ("per_source", per_source),
+            ("bounds", bounds),
+            ("parked", agent_time_list(self.parked_demands.iter().copied())),
+            (
+                "announced",
+                agent_time_list(self.last_announced.iter().map(|(a, t)| (*a, *t))),
+            ),
+            (
+                "demanded",
+                agent_time_list(self.outstanding_demands.iter().map(|(a, t)| (*a, *t))),
+            ),
+            ("lps", lps),
+        ])
+    }
+
+    /// Restore state captured by [`snapshot`](Self::snapshot) onto an
+    /// engine that has been freshly constructed and re-deployed (same
+    /// peers, same LPs installed via [`add_lp`](Self::add_lp), routes
+    /// re-sent).  LPs that were deployed but are absent from the snapshot
+    /// finished before the checkpoint — their slots are vacated exactly as
+    /// the live finish path does.
+    pub fn restore(&mut self, snap: &Json) -> anyhow::Result<()> {
+        use crate::transport::{event_from_json, time_from_json};
+        use anyhow::Context;
+        self.lvt = time_from_json(snap.get("lvt").context("lvt")?)?;
+        self.seq = snap.get("seq").and_then(Json::as_u64).context("seq")?;
+        self.stats = EngineStats::from_json(snap.get("stats").context("stats")?)?;
+
+        let peers = self.lvt_table.peers();
+        self.queues = EventQueues::with_kind(self.queues.kind(), peers.iter().copied());
+        for ej in snap.get("events").and_then(Json::as_arr).context("events")? {
+            self.queues.restore_event(event_from_json(ej)?);
+        }
+        for pj in snap
+            .get("per_source")
+            .and_then(Json::as_arr)
+            .context("per_source")?
+        {
+            let a = pj.get("a").and_then(Json::as_u64).context("per_source: agent")?;
+            let n = pj.get("n").and_then(Json::as_u64).context("per_source: count")?;
+            self.queues.set_received_from(AgentId(a), n);
+        }
+
+        self.lvt_table = LvtTable::new(peers.iter().copied());
+        for (a, t) in agent_time_entries(snap, "bounds")? {
+            self.lvt_table.observe(a, t);
+        }
+        self.parked_demands = agent_time_entries(snap, "parked")?;
+        self.last_announced = agent_time_entries(snap, "announced")?.into_iter().collect();
+        self.outstanding_demands = agent_time_entries(snap, "demanded")?.into_iter().collect();
+        self.outbox_events.clear();
+        self.outbox_sync.clear();
+        self.outbox_results.clear();
+
+        let mut by_id: BTreeMap<LpId, &Json> = BTreeMap::new();
+        for lj in snap.get("lps").and_then(Json::as_arr).context("lps")? {
+            let id = LpId(lj.get("id").and_then(Json::as_u64).context("lp id")?);
+            by_id.insert(id, lj);
+        }
+        let deployed: Vec<LpId> = self.lp_index.keys().copied().collect();
+        for id in deployed {
+            let i = self.lp_index[&id];
+            match by_id.remove(&id) {
+                Some(lj) => {
+                    let slot = self.lp_slots[i]
+                        .as_mut()
+                        .with_context(|| format!("{id} deployed but vacated"))?;
+                    slot.state = lp_state_from_str(
+                        lj.get("state").and_then(Json::as_str).context("lp state")?,
+                    )?;
+                    slot.events_handled =
+                        lj.get("handled").and_then(Json::as_u64).context("lp handled")?;
+                    slot.lp
+                        .restore(lj.get("comp").context("lp comp")?)
+                        .with_context(|| format!("restoring {id}"))?;
+                }
+                None => {
+                    // Finished before the checkpoint: vacate the slot,
+                    // mirroring execute_batch's finish path (lps_finished
+                    // already counted via the restored stats).
+                    if self.lp_slots[i].take().is_some() {
+                        self.lp_live -= 1;
+                        self.directory.remove(&id);
+                    }
+                }
+            }
+        }
+        if let Some((id, _)) = by_id.into_iter().next() {
+            anyhow::bail!("checkpoint contains {id} which is not deployed here");
+        }
+        Ok(())
     }
 }
 

@@ -425,6 +425,14 @@ impl<P> Store<P> {
             Store::Ladder(l) => l.pop_at_into(ts, out),
         }
     }
+
+    /// Pop the lowest-timestamp batch unconditionally (drain primitive for
+    /// checkpoint snapshots); `None` when empty.
+    fn pop_at_into_next(&mut self, out: &mut Vec<Event<P>>) -> Option<SimTime> {
+        let (ts, _) = self.min_key()?;
+        self.pop_at_into(ts, out);
+        Some(ts)
+    }
 }
 
 /// Pending-event store: heap or ladder + per-source statistics.
@@ -544,6 +552,47 @@ impl<P> EventQueues<P> {
         let mut out = Vec::new();
         let ts = self.pop_window_into(horizon, &mut out)?;
         Some((ts, out))
+    }
+
+    /// Every pending event in deterministic key order, for checkpoint
+    /// serialization.  Neither store supports non-destructive iteration,
+    /// so the store is drained and rebuilt; contents and the per-source
+    /// counters are unchanged afterwards.
+    pub fn snapshot_events(&mut self) -> Vec<Event<P>>
+    where
+        P: Clone,
+    {
+        let mut all = Vec::with_capacity(self.len());
+        while self
+            .store
+            .pop_at_into_next(&mut all)
+            .is_some()
+        {}
+        for ev in &all {
+            self.store.push(ev.clone());
+        }
+        all
+    }
+
+    /// Re-insert an event during checkpoint restore.  Unlike
+    /// [`EventQueues::push_remote`] this never touches the per-source
+    /// receive counters — they are historical totals, restored explicitly
+    /// via [`EventQueues::set_received_from`].
+    pub fn restore_event(&mut self, ev: Event<P>) {
+        self.store.push(ev);
+    }
+
+    /// The per-source receive totals (fig. 6's per-channel counters), for
+    /// checkpoint serialization.
+    pub fn per_source_counts(&self) -> &BTreeMap<AgentId, u64> {
+        &self.per_source
+    }
+
+    /// Overwrite one per-source receive counter during checkpoint restore.
+    pub fn set_received_from(&mut self, peer: AgentId, n: u64) {
+        if let Some(c) = self.per_source.get_mut(&peer) {
+            *c = n;
+        }
     }
 }
 

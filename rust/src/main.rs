@@ -61,6 +61,7 @@ USAGE:
   dsim scenario validate <file.json> [--set path=value ...]
   dsim scenario run      <file.json> [--set path=value ...] [--results out.jsonl]
   dsim scenario launch   <file.json> [--set path=value ...] [--results out.jsonl]
+                         [--report-on-abort out.json]
   dsim scenario sweep    <file.json> [--set path=value ...]
   dsim demo
   dsim sweep-bandwidth <mbps> [<mbps> ...]
@@ -73,6 +74,9 @@ USAGE:
              [--window-budget adaptive|fixed(N)|fixed(inf)]
              [--window-budget-min n] [--window-budget-max n]
              [--heartbeat-ms n]
+             [--connect-timeout-ms n] [--connect-backoff-ms n]
+             [--ckpt-dir dir] [--restore ckpt] [--launch-attempt n]
+             [--faults json]
   dsim check-artifacts [dir]
 
 A scenario file declares everything a run needs — contexts, component
@@ -146,6 +150,7 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
     // as a silently ignored knob, so anything unrecognized is an error.
     let mut sets: Vec<(String, String)> = Vec::new();
     let mut results_path: Option<String> = None;
+    let mut abort_report: Option<String> = None;
     let mut i = 2;
     while i < args.len() {
         match args[i].as_str() {
@@ -166,15 +171,26 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
                 results_path = Some(out.clone());
                 i += 2;
             }
+            "--report-on-abort" => {
+                let out = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--report-on-abort needs a path"))?;
+                abort_report = Some(out.clone());
+                i += 2;
+            }
             other => {
                 return Err(anyhow::anyhow!(
-                    "unknown argument '{other}' (expected --set path=value or --results out.jsonl)"
+                    "unknown argument '{other}' (expected --set path=value, --results out.jsonl, \
+                     or --report-on-abort out.json)"
                 ))
             }
         }
     }
     if results_path.is_some() && sub != "run" && sub != "launch" {
         anyhow::bail!("--results only applies to `dsim scenario run` and `dsim scenario launch`");
+    }
+    if abort_report.is_some() && sub != "launch" {
+        anyhow::bail!("--report-on-abort only applies to `dsim scenario launch`");
     }
 
     match sub {
@@ -206,8 +222,13 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
             let doc = scenario::load_doc(Path::new(path), &sets)?;
             let compiled = scenario::compile(&scenario::without_sweep(&doc))?;
             let outcomes = if sub == "launch" {
-                // One real OS process per agent, leader-side liveness.
-                scenario::launch(&compiled, &scenario::LaunchOptions::default())?
+                // One real OS process per agent, leader-side liveness,
+                // coordinated checkpoints + restart per the deploy block.
+                let opts = scenario::LaunchOptions {
+                    report_on_abort: abort_report.as_deref().map(Into::into),
+                    ..Default::default()
+                };
+                scenario::launch(&compiled, &opts)?
             } else {
                 compiled.run()?
             };
@@ -385,12 +406,36 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
     budget.validate().map_err(anyhow::Error::msg)?;
     // Legacy one-frame-per-message wire protocol (mixed fleets, baselines).
     let wire_batch = !args.iter().any(|a| a == "--no-wire-batch");
+    // Fault-tolerance knobs forwarded by `scenario launch`: where
+    // coordinated checkpoints go, which committed checkpoint a restarted
+    // agent should expect to roll back to, and the seeded fault schedule
+    // with this launch's attempt number (faults filter on `on_attempt`).
+    let connect_timeout_ms: u64 = get("--connect-timeout-ms")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(dsim::transport::DEFAULT_CONNECT_TIMEOUT_MS);
+    let connect_backoff_ms: u64 = get("--connect-backoff-ms")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(dsim::transport::DEFAULT_CONNECT_BACKOFF_MS);
+    let launch_attempt: u64 = get("--launch-attempt")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1);
+    let ckpt_dir = get("--ckpt-dir").map(std::path::PathBuf::from);
+    let restore: Option<u64> = get("--restore").map(|s| s.parse()).transpose()?;
+    let faults = get("--faults")
+        .map(|s| dsim::config::FaultPlan::from_json_text(s))
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("--faults: {e:#}"))?;
     let peer_ids: Vec<AgentId> = peers.keys().copied().filter(|a| a.raw() != 0).collect();
 
     let opts = dsim::transport::TcpOptions {
         max_frame: max_frame_mib << 20,
         codec: wire_codec,
         writer_queue: writer_queue_frames,
+        connect_timeout: std::time::Duration::from_millis(connect_timeout_ms),
+        connect_backoff: std::time::Duration::from_millis(connect_backoff_ms),
     };
     let transport: TcpTransport<Payload> = TcpTransport::bind_with(me, bind, peers, opts)?;
     let backend = std::sync::Arc::new(ComputeBackend::auto(Path::new("artifacts")));
@@ -407,9 +452,19 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         heartbeat_ms,
     };
     println!("agent {me} listening on {bind}");
+    let mut runtime = AgentRuntime::new(cfg, transport, backend);
+    if let Some(dir) = ckpt_dir {
+        runtime = runtime.with_checkpoint_dir(dir);
+    }
+    if let Some(ckpt) = restore {
+        runtime = runtime.with_restore(ckpt);
+    }
+    if let Some(plan) = faults {
+        runtime = runtime.with_faults(plan, launch_attempt);
+    }
     // A fatal transport failure exits nonzero so a supervising leader
     // (or shell) sees the death instead of a silent stall.
-    AgentRuntime::new(cfg, transport, backend)
+    runtime
         .run()
         .map_err(|e| anyhow::anyhow!("agent {me}: {e:#}"))?;
     println!("agent {me} shut down");

@@ -108,6 +108,18 @@ impl ResultPool {
         }
     }
 
+    /// Drop every record past the first `mark` (the pool is append-only,
+    /// so a record count is a complete checkpoint cursor).  The launch
+    /// leader rewinds its pool with this when the fleet rolls back to a
+    /// coordinated checkpoint — records reported after the barrier will
+    /// be re-reported identically on replay.  Interned kind ids survive
+    /// (ids are never reused; [`kind_counts`](Self::kind_counts) skips
+    /// kinds with no records).
+    pub fn truncate(&self, mark: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.records.truncate(mark);
+    }
+
     /// Record count per kind.
     pub fn kind_counts(&self) -> BTreeMap<String, usize> {
         let g = self.inner.lock().unwrap();
@@ -243,6 +255,27 @@ mod tests {
         p.merge_from(&q);
         assert_eq!(p.kind_counts()["transfer"], 2);
         assert_eq!(p.kind_counts()["job"], 1001);
+    }
+
+    #[test]
+    fn truncate_rewinds_to_mark() {
+        let p = ResultPool::new();
+        p.push("job", Json::num(1.0));
+        p.push("job", Json::num(2.0));
+        let mark = p.len();
+        p.push("job", Json::num(3.0));
+        p.push("transfer", Json::num(4.0));
+        p.truncate(mark);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.values("job", ""), Vec::<f64>::new());
+        assert_eq!(p.of_kind("job").len(), 2);
+        assert_eq!(p.kind_counts().get("transfer"), None);
+        // Re-pushing after a rewind keeps interning consistent.
+        p.push("transfer", Json::num(5.0));
+        assert_eq!(p.kind_counts()["transfer"], 1);
+        // Truncating beyond the current length is a no-op.
+        p.truncate(100);
+        assert_eq!(p.len(), 3);
     }
 
     #[test]

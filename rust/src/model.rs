@@ -51,6 +51,64 @@ pub struct TransferSpec {
     pub dataset: Option<String>,
 }
 
+impl JobSpec {
+    /// Standalone JSON form for component checkpoints.  (The wire form
+    /// flattens these fields into `Payload::JobSubmit` frames and is
+    /// unchanged.)
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("cpu", Json::num(self.cpu_seconds)),
+            (
+                "ds",
+                self.dataset.clone().map(Json::str).unwrap_or(Json::Null),
+            ),
+            ("center", Json::num(self.center as f64)),
+            ("notify", Json::num(self.notify.raw() as f64)),
+        ])
+    }
+
+    /// Parse [`JobSpec::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        Ok(JobSpec {
+            id: j.get("id").and_then(Json::as_u64).context("id")?,
+            cpu_seconds: j.get("cpu").and_then(Json::as_f64).context("cpu")?,
+            dataset: opt_str(j.get("ds")),
+            center: j.get("center").and_then(Json::as_u64).context("center")? as usize,
+            notify: LpId(j.get("notify").and_then(Json::as_u64).context("notify")?),
+        })
+    }
+}
+
+impl TransferSpec {
+    /// Standalone JSON form for component checkpoints.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("src", Json::num(self.src_center as f64)),
+            ("dst", Json::num(self.dst_center as f64)),
+            ("mb", Json::num(self.size_mb)),
+            ("notify", Json::num(self.notify.raw() as f64)),
+            (
+                "ds",
+                self.dataset.clone().map(Json::str).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    /// Parse [`TransferSpec::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<TransferSpec> {
+        Ok(TransferSpec {
+            id: j.get("id").and_then(Json::as_u64).context("id")?,
+            src_center: j.get("src").and_then(Json::as_u64).context("src")? as usize,
+            dst_center: j.get("dst").and_then(Json::as_u64).context("dst")? as usize,
+            size_mb: j.get("mb").and_then(Json::as_f64).context("mb")?,
+            notify: LpId(j.get("notify").and_then(Json::as_u64).context("notify")?),
+            dataset: opt_str(j.get("ds")),
+        })
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Payload
 // ---------------------------------------------------------------------------

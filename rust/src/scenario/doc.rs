@@ -10,7 +10,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::components::KNOWN_KINDS;
-use crate::config::{DeployConfig, PlacementPolicy, WorkloadConfig};
+use crate::config::{DeployConfig, FaultPlan, PlacementPolicy, WorkloadConfig};
 use crate::engine::SimTime;
 use crate::model::Payload;
 use crate::transport::{Wire, WriterQueue};
@@ -107,6 +107,10 @@ pub struct ScenarioDoc {
     /// without a schema change.
     pub hosts: Vec<String>,
     pub contexts: Vec<ContextDecl>,
+    /// Deterministic fault-injection schedule (the top-level `faults`
+    /// block; empty = none).  Threaded to every agent of a `scenario
+    /// launch` fleet so a failure scenario replays from the file alone.
+    pub faults: FaultPlan,
 }
 
 fn err_at<T>(path: &str, msg: impl std::fmt::Display) -> Result<T> {
@@ -247,8 +251,12 @@ fn substitute(
 // Section parsers
 // ---------------------------------------------------------------------------
 
-const DEPLOY_KEYS: [&str; 19] = [
+const DEPLOY_KEYS: [&str; 23] = [
     "heartbeat_ms",
+    "checkpoint_windows",
+    "on_failure",
+    "connect_timeout_ms",
+    "connect_backoff_ms",
     "transport",
     "agents",
     "workers",
@@ -331,6 +339,15 @@ fn parse_deploy(j: &Json, path: &str) -> Result<(RunTransport, DeployConfig)> {
         window_budget_max: usize_knob("window_budget_max", d.window_budget_max)?,
         probe_fallback_ms: usize_knob("probe_fallback_ms", d.probe_fallback_ms as usize)? as u64,
         heartbeat_ms: usize_knob("heartbeat_ms", d.heartbeat_ms as usize)? as u64,
+        checkpoint_windows: usize_knob("checkpoint_windows", d.checkpoint_windows as usize)?
+            as u64,
+        on_failure: str_knob("on_failure", &d.on_failure.to_string())?
+            .parse()
+            .map_err(|e| anyhow!("at {path}.on_failure: {e}"))?,
+        connect_timeout_ms: usize_knob("connect_timeout_ms", d.connect_timeout_ms as usize)?
+            as u64,
+        connect_backoff_ms: usize_knob("connect_backoff_ms", d.connect_backoff_ms as usize)?
+            as u64,
         artifacts_dir: str_knob("artifacts_dir", &d.artifacts_dir)?,
     };
     deploy
@@ -617,13 +634,14 @@ fn parse_components(c: &Json, bootstrap: Option<&Json>, path: &str) -> Result<Co
     })
 }
 
-const TOP_KEYS: [&str; 7] = [
+const TOP_KEYS: [&str; 8] = [
     "name",
     "description",
     "vars",
     "deploy",
     "hosts",
     "contexts",
+    "faults",
     "sweep",
 ];
 
@@ -676,6 +694,42 @@ impl ScenarioDoc {
                 "a host list only applies to transport=tcp fleets (dsim scenario launch)",
             );
         }
+
+        let faults = match doc.get("faults") {
+            None => FaultPlan::default(),
+            Some(f) => {
+                let f = substitute(f, &vars, "faults")?;
+                check_keys(&f, "faults", &["seed", "schedule"])?;
+                let plan =
+                    FaultPlan::from_json(&f).map_err(|e| anyhow!("at faults: {e:#}"))?;
+                if transport != RunTransport::Tcp && !plan.is_empty() {
+                    return err_at(
+                        "faults",
+                        "fault injection targets tcp fleets (dsim scenario launch); \
+                         set deploy.transport = tcp",
+                    );
+                }
+                for (i, spec) in plan.schedule.iter().enumerate() {
+                    let a = spec.agent.raw();
+                    if a == 0 || a > deploy.agents as u64 {
+                        return err_at(
+                            &format!("faults.schedule.{i}.agent"),
+                            format!(
+                                "agent {a} is outside the fleet (1..={} from deploy.agents)",
+                                deploy.agents
+                            ),
+                        );
+                    }
+                    if spec.on_attempt == 0 {
+                        return err_at(
+                            &format!("faults.schedule.{i}.on_attempt"),
+                            "launch attempts are numbered from 1",
+                        );
+                    }
+                }
+                plan
+            }
+        };
 
         let contexts_raw = req(doc, "<root>", "contexts")?;
         let list = contexts_raw
@@ -753,6 +807,7 @@ impl ScenarioDoc {
             deploy,
             hosts,
             contexts,
+            faults,
         })
     }
 }

@@ -18,19 +18,36 @@
 //! The scenario-level `hosts` list is parsed and validated here, but
 //! only localhost entries are accepted today: remote placement is a
 //! spawn-mechanism change (ssh/daemon), not a schema or driver change.
+//!
+//! Fault tolerance: with `deploy.checkpoint_windows > 0` the leader
+//! drives a coordinated checkpoint barrier each time the fleet crosses
+//! another multiple of that many executed windows, and every agent
+//! serializes its full engine state to a per-agent file under a
+//! directory keyed by the scenario fingerprint.  With `deploy.on_failure
+//! = restart`, an aborted fleet is torn down, respawned (up to
+//! [`MAX_RESTART_ATTEMPTS`] total attempts), rolled back to the last
+//! committed checkpoint, and resumed — and because checkpoints capture
+//! every source of nondeterminism, the recovered run's fingerprint is
+//! bit-identical to a fault-free run of the same scenario.  A scenario
+//! `faults` block is forwarded to every agent verbatim for seeded,
+//! window-indexed fault injection (see [`crate::config::FaultPlan`]).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::net::{SocketAddr, TcpListener};
+use std::ops::{Deref, DerefMut};
+use std::path::{Path, PathBuf};
 use std::process::{Child, Command};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::config::OnFailure;
 use crate::coordinator::LEADER;
 use crate::model::Payload;
-use crate::testkit::{drive_fleet_leader, DriveOptions, FleetWatchdog};
+use crate::testkit::{drive_fleet_leader, CheckpointLog, DriveOptions, FleetAbort, FleetWatchdog};
 use crate::transport::{TcpOptions, TcpTransport};
+use crate::util::json::Json;
 use crate::util::AgentId;
 
 use super::{CompiledScenario, RunTransport, ScenarioOutcome};
@@ -38,6 +55,12 @@ use super::{CompiledScenario, RunTransport, ScenarioOutcome};
 /// Heartbeat period for launched fleets when the scenario leaves
 /// `deploy.heartbeat_ms` at 0 (the in-process default of "off").
 pub const DEFAULT_LAUNCH_HEARTBEAT_MS: u64 = 250;
+
+/// Total launch attempts under `deploy.on_failure = restart` — the
+/// first run plus up to two respawns — before the abort becomes final.
+/// Bounds the worst case when the failure is not transient (e.g. a
+/// scenario whose fault schedule kills an agent on every attempt).
+pub const MAX_RESTART_ATTEMPTS: u64 = 3;
 
 /// Knobs for [`spawn_fleet`].
 #[derive(Default)]
@@ -48,6 +71,40 @@ pub struct LaunchOptions {
     /// clamped to at least 2 s.  Must exceed the longest wall-clock
     /// window execution, or a busy agent reads as a dead one.
     pub liveness_deadline: Option<Duration>,
+    /// Root directory for coordinated checkpoints; the fleet writes
+    /// under `<root>/<scenario fingerprint>/`.  Defaults to
+    /// `$TMPDIR/dsim-ckpt`.
+    pub ckpt_root: Option<PathBuf>,
+    /// Write the partial [`FleetAbort`] report as JSON here when the
+    /// run aborts for good (`--report-on-abort`).  Best-effort: a write
+    /// failure is logged, never masks the abort itself.
+    pub report_on_abort: Option<PathBuf>,
+}
+
+/// Owns a spawned agent process and guarantees it dies with the handle:
+/// if the leader errors or a restart drops the old fleet, no orphan
+/// `dsim agent` keeps running (and holding ports) behind the user's
+/// back.  Derefs to [`Child`] so process control reads naturally.
+pub struct KillOnDrop(pub Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+impl Deref for KillOnDrop {
+    type Target = Child;
+    fn deref(&self) -> &Child {
+        &self.0
+    }
+}
+
+impl DerefMut for KillOnDrop {
+    fn deref_mut(&mut self) -> &mut Child {
+        &mut self.0
+    }
 }
 
 /// A spawned-but-not-yet-driven fleet: the leader endpoint plus one OS
@@ -56,7 +113,7 @@ pub struct LaunchOptions {
 pub struct LaunchedFleet {
     leader: TcpTransport<Payload>,
     ids: Vec<AgentId>,
-    children: Arc<Mutex<Vec<(AgentId, Child)>>>,
+    children: Arc<Mutex<Vec<(AgentId, KillOnDrop)>>>,
     deadline: Duration,
 }
 
@@ -64,7 +121,7 @@ impl LaunchedFleet {
     /// Shared handle to the agent processes, for concurrent process
     /// control (the kill-an-agent integration test SIGKILLs through it
     /// while [`run_launched`] is driving).
-    pub fn process_handle(&self) -> Arc<Mutex<Vec<(AgentId, Child)>>> {
+    pub fn process_handle(&self) -> Arc<Mutex<Vec<(AgentId, KillOnDrop)>>> {
         Arc::clone(&self.children)
     }
 
@@ -123,12 +180,35 @@ fn check_hosts(hosts: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Where a fleet's coordinated checkpoints live: a per-scenario
+/// directory keyed by the scenario fingerprint, so a restarted fleet
+/// finds its own files and different scenarios never collide.
+fn checkpoint_dir(sc: &CompiledScenario, opts: &LaunchOptions) -> PathBuf {
+    opts.ckpt_root
+        .clone()
+        .unwrap_or_else(|| std::env::temp_dir().join("dsim-ckpt"))
+        .join(&sc.fingerprint)
+}
+
 /// Reserve localhost ports for the whole fleet, build the leader's
 /// endpoint, and spawn one `dsim agent` subprocess per agent with every
 /// deploy knob forwarded.  The agents' reserved listeners are dropped
-/// for the children to rebind; `TcpTransport`'s connect retry window
-/// (~5 s) covers the handover.
+/// for the children to rebind; the configurable connect retry window
+/// (`deploy.connect_timeout_ms`) covers the handover.
 pub fn spawn_fleet(sc: &CompiledScenario, opts: &LaunchOptions) -> Result<LaunchedFleet> {
+    spawn_fleet_attempt(sc, opts, 1, None)
+}
+
+/// [`spawn_fleet`] parameterized for restarts: `attempt` numbers the
+/// launch (1-based, forwarded so agents can filter `on_attempt` fault
+/// specs), and `restore` tells agents which committed checkpoint the
+/// leader is about to roll them back to.
+fn spawn_fleet_attempt(
+    sc: &CompiledScenario,
+    opts: &LaunchOptions,
+    attempt: u64,
+    restore: Option<u64>,
+) -> Result<LaunchedFleet> {
     if sc.transport != RunTransport::Tcp {
         bail!("scenario launch needs deploy.transport = tcp (got {})", sc.transport);
     }
@@ -169,6 +249,8 @@ pub fn spawn_fleet(sc: &CompiledScenario, opts: &LaunchOptions) -> Result<Launch
         max_frame: sc.deploy.max_frame_mib << 20,
         codec: sc.deploy.wire_codec,
         writer_queue: sc.deploy.writer_queue_frames,
+        connect_timeout: Duration::from_millis(sc.deploy.connect_timeout_ms),
+        connect_backoff: Duration::from_millis(sc.deploy.connect_backoff_ms),
     };
     let leader = TcpTransport::from_listener(LEADER, leader_listener, peers.clone(), tcp_opts)
         .context("leader endpoint")?;
@@ -183,6 +265,8 @@ pub fn spawn_fleet(sc: &CompiledScenario, opts: &LaunchOptions) -> Result<Launch
         None => std::env::current_exe().context("locate dsim binary for agent spawn")?,
     };
     let budget = sc.deploy.budget_spec();
+    let ckpt_dir = checkpoint_dir(sc, opts);
+    let faults_json = (!sc.faults.is_empty()).then(|| sc.faults.to_json().to_string());
     let mut children = Vec::with_capacity(sc.deploy.agents);
     for &a in &ids[1..] {
         let mut cmd = Command::new(&bin);
@@ -204,14 +288,26 @@ pub fn spawn_fleet(sc: &CompiledScenario, opts: &LaunchOptions) -> Result<Launch
             .args(["--window-budget", &budget.mode.to_string()])
             .args(["--window-budget-min", &budget.min.to_string()])
             .args(["--window-budget-max", &budget.max.to_string()])
-            .args(["--heartbeat-ms", &heartbeat_ms.to_string()]);
+            .args(["--heartbeat-ms", &heartbeat_ms.to_string()])
+            .args(["--connect-timeout-ms", &sc.deploy.connect_timeout_ms.to_string()])
+            .args(["--connect-backoff-ms", &sc.deploy.connect_backoff_ms.to_string()])
+            .args(["--launch-attempt", &attempt.to_string()]);
         if !sc.deploy.wire_batch {
             cmd.arg("--no-wire-batch");
+        }
+        if sc.deploy.checkpoint_windows > 0 || restore.is_some() {
+            cmd.arg("--ckpt-dir").arg(&ckpt_dir);
+        }
+        if let Some(c) = restore {
+            cmd.args(["--restore", &c.to_string()]);
+        }
+        if let Some(f) = &faults_json {
+            cmd.args(["--faults", f]);
         }
         let child = cmd
             .spawn()
             .with_context(|| format!("spawn agent {a} ({})", bin.display()))?;
-        children.push((a, child));
+        children.push((a, KillOnDrop(child)));
     }
 
     Ok(LaunchedFleet {
@@ -222,42 +318,132 @@ pub fn spawn_fleet(sc: &CompiledScenario, opts: &LaunchOptions) -> Result<Launch
     })
 }
 
+/// Serialize the partial report a final [`FleetAbort`] carries to
+/// `path` as one JSON object (`--report-on-abort`): everything the
+/// leader had collected when it gave up, machine-readable for
+/// postmortems and CI triage.
+fn write_abort_report(sc: &CompiledScenario, abort: &FleetAbort, path: &Path) -> Result<()> {
+    let p = &abort.partial;
+    let mut record_counts = BTreeMap::new();
+    for (kind, n) in p.pool.kind_counts() {
+        record_counts.insert(kind, Json::num(n as f64));
+    }
+    let body = Json::obj(vec![
+        ("scenario", Json::str(sc.name.clone())),
+        ("scenario_fingerprint", Json::str(sc.fingerprint.clone())),
+        ("aborted", Json::Bool(true)),
+        (
+            "agent",
+            match abort.agent {
+                Some(a) => Json::num(a.raw() as f64),
+                None => Json::Null,
+            },
+        ),
+        ("reason", Json::str(abort.reason.clone())),
+        ("events", Json::num(p.events as f64)),
+        ("remote_events", Json::num(p.remote_events as f64)),
+        ("jobs", Json::num(p.jobs as f64)),
+        ("transfers", Json::num(p.transfers as f64)),
+        ("makespan_s", Json::num(p.makespan_s)),
+        ("fingerprint", Json::str(p.fingerprint.clone())),
+        ("final_stats_reported", Json::num(p.stats.len() as f64)),
+        ("record_counts", Json::Obj(record_counts)),
+    ]);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create {}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, format!("{body}\n")).with_context(|| format!("write {}", path.display()))
+}
+
 /// Drive an already-spawned fleet to completion (or to a clean abort
-/// naming the failed agent), then collect the processes.
-pub fn run_launched(sc: &CompiledScenario, fleet: &LaunchedFleet) -> Result<Vec<ScenarioOutcome>> {
+/// naming the failed agent), then collect the processes.  Under
+/// `deploy.on_failure = restart` an abort instead tears the fleet down,
+/// respawns it, and resumes from the last committed checkpoint — which
+/// is why this takes the fleet by value: a restart replaces it with a
+/// fresh one on fresh ports.
+pub fn run_launched(
+    sc: &CompiledScenario,
+    fleet: LaunchedFleet,
+    opts: &LaunchOptions,
+) -> Result<Vec<ScenarioOutcome>> {
     let ctx = sc
         .contexts
         .first()
         .ok_or_else(|| anyhow!("scenario has no contexts"))?;
-    let driven = ctx.placement_pins().map(|pins| {
-        drive_fleet_leader(
-            &fleet.leader,
-            &fleet.ids,
-            &ctx.generated,
-            DriveOptions {
-                pins,
-                liveness_deadline: Some(fleet.deadline),
-                run_timeout: Duration::from_secs(120),
-                watchdog: Some(fleet.watchdog()),
-            },
-        )
-    });
-    fleet.reap();
-    let out = driven?.map_err(|abort| anyhow!("{abort}"))?;
-    let windows: u64 = out.stats.iter().map(|(_, s)| s.windows).sum();
-    Ok(vec![ScenarioOutcome {
-        context: ctx.name.clone(),
-        wall_s: out.wall_s,
-        events: out.events,
-        remote_events: out.remote_events,
-        makespan_s: out.makespan_s,
-        jobs: out.jobs,
-        transfers: out.transfers,
-        windows,
-        fingerprint: out.fingerprint,
-        scenario_fingerprint: sc.fingerprint.clone(),
-        pool: Some(out.pool),
-    }])
+    let ckpt_log = Arc::new(Mutex::new(CheckpointLog::default()));
+    let mut fleet = fleet;
+    let mut attempt: u64 = 1;
+    loop {
+        let resume_from = {
+            let g = ckpt_log.lock().unwrap();
+            (g.ckpt > 0).then_some(g.ckpt)
+        };
+        let driven = ctx.placement_pins().map(|pins| {
+            drive_fleet_leader(
+                &fleet.leader,
+                &fleet.ids,
+                &ctx.generated,
+                DriveOptions {
+                    pins,
+                    liveness_deadline: Some(fleet.deadline),
+                    run_timeout: Duration::from_secs(120),
+                    watchdog: Some(fleet.watchdog()),
+                    checkpoint_windows: sc.deploy.checkpoint_windows,
+                    ckpt_log: Some(Arc::clone(&ckpt_log)),
+                    resume_from,
+                },
+            )
+        });
+        fleet.reap();
+        let out = match driven? {
+            Ok(out) => out,
+            Err(abort)
+                if sc.deploy.on_failure == OnFailure::Restart
+                    && attempt < MAX_RESTART_ATTEMPTS =>
+            {
+                attempt += 1;
+                let restore = {
+                    let g = ckpt_log.lock().unwrap();
+                    (g.ckpt > 0).then_some(g.ckpt)
+                };
+                log::warn!(
+                    "{abort}; restarting fleet (attempt {attempt}/{MAX_RESTART_ATTEMPTS}, {})",
+                    match restore {
+                        Some(c) => format!("resuming from checkpoint {c}"),
+                        None => "no committed checkpoint — from the beginning".to_string(),
+                    }
+                );
+                fleet = spawn_fleet_attempt(sc, opts, attempt, restore)?;
+                continue;
+            }
+            Err(abort) => {
+                if let Some(path) = &opts.report_on_abort {
+                    match write_abort_report(sc, &abort, path) {
+                        Ok(()) => log::info!("abort report written to {}", path.display()),
+                        Err(e) => log::warn!("abort report not written: {e:#}"),
+                    }
+                }
+                return Err(anyhow!("{abort}"));
+            }
+        };
+        let windows: u64 = out.stats.iter().map(|(_, s)| s.windows).sum();
+        return Ok(vec![ScenarioOutcome {
+            context: ctx.name.clone(),
+            wall_s: out.wall_s,
+            events: out.events,
+            remote_events: out.remote_events,
+            makespan_s: out.makespan_s,
+            jobs: out.jobs,
+            transfers: out.transfers,
+            windows,
+            fingerprint: out.fingerprint,
+            scenario_fingerprint: sc.fingerprint.clone(),
+            pool: Some(out.pool),
+        }]);
+    }
 }
 
 /// [`spawn_fleet`] + [`run_launched`] in one call — what
@@ -265,7 +451,7 @@ pub fn run_launched(sc: &CompiledScenario, fleet: &LaunchedFleet) -> Result<Vec<
 pub fn launch(sc: &CompiledScenario, opts: &LaunchOptions) -> Result<Vec<ScenarioOutcome>> {
     sc.preflight()?;
     let fleet = spawn_fleet(sc, opts)?;
-    run_launched(sc, &fleet)
+    run_launched(sc, fleet, opts)
 }
 
 #[cfg(test)]

@@ -56,11 +56,47 @@
 //! | `window_budget_min` / `window_budget_max` | adaptive clamps (256 / 1M) |
 //! | `probe_fallback_ms` | GVT probe fallback cadence (2) |
 //! | `heartbeat_ms` | agent liveness heartbeat period toward the leader, 0 = off (0; `scenario launch` defaults its fleets to 250) |
+//! | `checkpoint_windows` | coordinated checkpoint cadence for `scenario launch` fleets, in executed windows — every time any agent's window count crosses another multiple, the leader drives a barrier at a globally quiescent window boundary and every agent serializes its full engine state to disk; 0 = off (0) |
+//! | `on_failure` | `abort` \| `restart` — what the launch leader does when a fleet member dies mid-run: tear the fleet down (default), or respawn it, roll every member back to the latest committed checkpoint (from scratch if none), and resume (abort) |
+//! | `connect_timeout_ms` | total time an agent retries a TCP connect to an unreachable peer, with exponential backoff (5000) |
+//! | `connect_backoff_ms` | initial connect-retry backoff, doubling per attempt up to 1 s (100) |
 //! | `artifacts_dir` | AOT artifact directory ("artifacts") |
 //!
 //! **`hosts`** — host names eligible for `dsim scenario launch` agent
 //! placement (tcp only).  Parsed and validated today but restricted to
 //! localhost aliases; remote placement is reserved schema.
+//!
+//! **`faults`** — a deterministic, replayable fault-injection schedule
+//! (tcp fleets only):
+//!
+//! ```json
+//! "faults": {
+//!   "seed": 7,
+//!   "schedule": [
+//!     {"kind": "kill_agent", "agent": 2, "at_window": 40, "on_attempt": 1}
+//!   ]
+//! }
+//! ```
+//!
+//! Each entry fires `kind` (`kill_agent` — hard process exit, the
+//! SIGKILL signature | `drop_frame` — lose one inbound data frame, a
+//! poisoned connection | `delay_writer` — sleep `count` ms before the
+//! next outbound flush | `stall_heartbeat` — skip the next `count`
+//! heartbeats) on `agent` when that agent's executed-window counter
+//! reaches `at_window`, but only on fleet launch attempt `on_attempt`
+//! (default 1; a restarted fleet runs as attempt 2, so a kill cannot
+//! re-fire and wedge recovery in a loop).  Trigger points are *virtual*
+//! — window counters, never wall-clock timers — so the same file
+//! reproduces the same failure at the same point in every run.
+//!
+//! **The determinism contract:** a run that fails and recovers through
+//! `checkpoint_windows` + `on_failure = restart` finishes with a
+//! determinism fingerprint bit-identical to the fault-free run of the
+//! same scenario.  Checkpoints are taken at globally quiescent window
+//! boundaries (event-counter barrier), the engine state round-trips
+//! exactly (event keys, RNG words, adaptive-controller state), and the
+//! leader rewinds its result pool to the barrier record count, so the
+//! replayed suffix re-reports byte-identical records.
 //!
 //! **`contexts[i]`** — one isolated simulation (own engine, own
 //! results).  Each declares `name` (unique), optional `lookahead`,
@@ -113,13 +149,16 @@ pub use doc::{
     BootstrapDecl, ComponentDecl, ContextDecl, ContextModel, RunTransport, ScenarioDoc,
 };
 pub use fingerprint::{fingerprint, fnv16};
-pub use launch::{launch, run_launched, spawn_fleet, LaunchOptions, LaunchedFleet};
+pub use launch::{
+    launch, run_launched, spawn_fleet, KillOnDrop, LaunchOptions, LaunchedFleet,
+    DEFAULT_LAUNCH_HEARTBEAT_MS, MAX_RESTART_ATTEMPTS,
+};
 pub use sweep::{
     apply_sets, get_path, point_fingerprint, set_path, sweep_points, without_sweep, SweepPoint,
 };
 
 use crate::components::{build_component, BuildCtx};
-use crate::config::DeployConfig;
+use crate::config::{DeployConfig, FaultPlan};
 use crate::coordinator::{AgentConfig, Deployment, RunReport};
 use crate::metrics::ResultPool;
 use crate::model::Scenario;
@@ -172,6 +211,9 @@ pub struct CompiledScenario {
     /// only today; parsed so remote placement needs no schema change).
     pub hosts: Vec<String>,
     pub contexts: Vec<NamedContext>,
+    /// Deterministic fault-injection schedule (empty = none); forwarded
+    /// to every agent of a `scenario launch` fleet.
+    pub faults: FaultPlan,
     /// Content fingerprint of the compiled document (see module docs).
     pub fingerprint: String,
     /// Placement-scheduler seed (first grid context's seed, else 1).
@@ -302,6 +344,7 @@ pub fn compile(doc: &Json) -> Result<CompiledScenario> {
         deploy: parsed.deploy,
         hosts: parsed.hosts,
         contexts,
+        faults: parsed.faults,
         fingerprint: fp,
         seed: seed.unwrap_or(1),
     })
@@ -406,6 +449,8 @@ impl CompiledScenario {
             max_frame: self.deploy.max_frame_mib << 20,
             codec: self.deploy.wire_codec,
             writer_queue: self.deploy.writer_queue_frames,
+            connect_timeout: std::time::Duration::from_millis(self.deploy.connect_timeout_ms),
+            connect_backoff: std::time::Duration::from_millis(self.deploy.connect_backoff_ms),
         };
         let lookahead = ctx.generated.scenario.lookahead;
         let deploy = &self.deploy;

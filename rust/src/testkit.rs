@@ -26,10 +26,10 @@
 //! fleet configuration under test.  [`drive_two_center`] specializes it
 //! to the two-center demo.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::net::{SocketAddr, TcpListener};
 
 use crate::coordinator::{
@@ -190,8 +190,24 @@ pub struct FleetOutcome {
 /// plugs `Child::try_wait` polling in here.
 pub type FleetWatchdog = Box<dyn FnMut() -> Option<(AgentId, String)> + Send>;
 
+/// The leader half of a committed coordinated checkpoint: the barrier id
+/// and the result-pool contents at the barrier.  Shared between
+/// [`drive_fleet_leader`] and the multi-process launcher (via
+/// [`DriveOptions::ckpt_log`]) so a restarted fleet resumes with the
+/// leader's collected records rewound to exactly the barrier point.  The
+/// pool is a complete leader checkpoint: everything else the leader
+/// accumulates (final stats, makespan) is only collected at teardown.
+#[derive(Default)]
+pub struct CheckpointLog {
+    /// Latest committed barrier id (0 = none committed yet).
+    pub ckpt: u64,
+    /// Every record the leader had collected when the barrier committed.
+    pub pool: ResultPool,
+}
+
 /// Knobs for [`drive_fleet_leader`]; `Default` reproduces the historical
-/// test-driver behaviour (round-robin placement, no liveness, 120 s cap).
+/// test-driver behaviour (round-robin placement, no liveness, 120 s cap,
+/// no checkpoints).
 pub struct DriveOptions {
     /// Placement pins: `(affinity group, agent)` overrides applied on
     /// top of the default round-robin `group i -> ids[i % n]` mapping.
@@ -203,6 +219,19 @@ pub struct DriveOptions {
     pub run_timeout: Duration,
     /// Extra per-iteration health check (subprocess exit polling).
     pub watchdog: Option<FleetWatchdog>,
+    /// Drive a coordinated checkpoint barrier each time the fleet's
+    /// maximum executed-window count crosses another multiple of this
+    /// (0 = checkpoints off).  Every agent must be running with a
+    /// checkpoint directory (`AgentRuntime::with_checkpoint_dir`).
+    pub checkpoint_windows: u64,
+    /// Leader-side checkpoint journal: each committed barrier records
+    /// its id and the pool contents at the barrier here, and a resumed
+    /// drive reads its starting records back out.
+    pub ckpt_log: Option<Arc<Mutex<CheckpointLog>>>,
+    /// Resume a restarted fleet from this committed barrier: deploy
+    /// routes + LPs as usual, skip bootstrap (the restored event queues
+    /// already contain it), roll every member back, then start.
+    pub resume_from: Option<u64>,
 }
 
 impl Default for DriveOptions {
@@ -212,6 +241,9 @@ impl Default for DriveOptions {
             liveness_deadline: None,
             run_timeout: Duration::from_secs(120),
             watchdog: None,
+            checkpoint_windows: 0,
+            ckpt_log: None,
+            resume_from: None,
         }
     }
 }
@@ -330,9 +362,18 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
     let ctx = crate::util::ContextId(1);
     let started = Instant::now();
     let pool = ResultPool::new();
+    // A resumed drive starts from the leader half of the checkpoint: the
+    // records collected up to the barrier (post-barrier records were
+    // rewound with the fleet and will be re-reported identically).
+    if opts.resume_from.is_some() {
+        if let Some(log) = opts.ckpt_log.as_ref() {
+            pool.merge_from(&log.lock().unwrap().pool);
+        }
+    }
     let mut detector = TerminationDetector::new(ids.len());
     let mut monitor = opts.liveness_deadline.map(|d| LivenessMonitor::new(ids, d));
     let mut watchdog = opts.watchdog.take();
+    let ckpt_log = opts.ckpt_log.clone();
     let mut events = 0u64;
     let mut remote = 0u64;
     let mut makespan = 0.0f64;
@@ -380,17 +421,63 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
                 },
             )?;
         }
-        for (time, dst, payload) in &g.scenario.bootstrap {
-            let group = g.scenario.lps.iter().find(|l| l.id == *dst).unwrap().group;
-            send(
-                group_agent[group],
-                ControlMsg::Bootstrap {
-                    context: ctx,
-                    time: *time,
-                    dst: *dst,
-                    payload: payload.to_json(),
-                },
-            )?;
+        if let Some(ckpt) = opts.resume_from {
+            // Resume drive: the restored event queues already contain
+            // everything bootstrap would schedule, so instead of
+            // re-bootstrapping, roll every member back to the committed
+            // barrier before starting.
+            for &a in ids {
+                send(a, ControlMsg::Rollback { context: ctx, ckpt })?;
+            }
+            let deadline = Instant::now() + Duration::from_secs(30);
+            let mut done: BTreeSet<AgentId> = BTreeSet::new();
+            while done.len() < ids.len() {
+                if Instant::now() > deadline {
+                    return Err((None, format!("rollback to checkpoint {ckpt} timed out")));
+                }
+                fleet_check(leader, &mut watchdog, &monitor)?;
+                match leader.recv_timeout(Duration::from_millis(20)) {
+                    Some(NetMsg::Control(ControlMsg::RollbackDone {
+                        ckpt: c,
+                        from,
+                        err,
+                        ..
+                    })) if c == ckpt => {
+                        if !err.is_empty() {
+                            return Err((
+                                Some(from),
+                                format!("rollback to checkpoint {ckpt} failed: {err}"),
+                            ));
+                        }
+                        if let Some(m) = monitor.as_mut() {
+                            m.note(from);
+                        }
+                        done.insert(from);
+                    }
+                    Some(NetMsg::Control(ControlMsg::Heartbeat { from, .. })) => {
+                        if let Some(m) = monitor.as_mut() {
+                            m.note(from);
+                        }
+                    }
+                    Some(NetMsg::Control(ControlMsg::AgentFailed { from, reason })) => {
+                        return Err((Some(from), format!("reported fatal failure: {reason}")));
+                    }
+                    _ => {}
+                }
+            }
+        } else {
+            for (time, dst, payload) in &g.scenario.bootstrap {
+                let group = g.scenario.lps.iter().find(|l| l.id == *dst).unwrap().group;
+                send(
+                    group_agent[group],
+                    ControlMsg::Bootstrap {
+                        context: ctx,
+                        time: *time,
+                        dst: *dst,
+                        payload: payload.to_json(),
+                    },
+                )?;
+            }
         }
         for &a in ids {
             send(
@@ -403,6 +490,12 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
         }
 
         // --- run: probe rounds + GVT broadcast + result collection ------
+        // Checkpoint cadence: barrier `k` fires when any agent's
+        // executed-window count reaches `k * checkpoint_windows`.  The
+        // window counters are restored on rollback, so a resumed fleet
+        // picks the numbering up where the original left off.
+        let mut fleet_windows: u64 = 0;
+        let mut next_ckpt: u64 = opts.resume_from.unwrap_or(0);
         'outer: loop {
             if started.elapsed() > opts.run_timeout {
                 return Err((None, format!("run did not terminate within {:?}", opts.run_timeout)));
@@ -430,6 +523,7 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
                         if let Some(m) = monitor.as_mut() {
                             m.note(from);
                         }
+                        fleet_windows = fleet_windows.max(windows);
                         let done = detector.ingest(
                             r,
                             from,
@@ -465,7 +559,10 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
                     Some(NetMsg::Control(ControlMsg::AgentFailed { from, reason })) => {
                         return Err((Some(from), format!("reported fatal failure: {reason}")));
                     }
-                    Some(NetMsg::Control(ControlMsg::WindowReport { records, .. })) => {
+                    Some(NetMsg::Control(ControlMsg::WindowReport {
+                        windows, records, ..
+                    })) => {
+                        fleet_windows = fleet_windows.max(windows);
                         for (kind, record) in records {
                             pool.push(&kind, record);
                         }
@@ -475,6 +572,139 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
                     }
                     _ => {}
                 }
+            }
+
+            // --- coordinated checkpoint barrier -------------------------
+            if opts.checkpoint_windows > 0
+                && fleet_windows >= (next_ckpt + 1) * opts.checkpoint_windows
+            {
+                let ckpt = next_ckpt + 1;
+                // Pause everyone at their current window boundary and poll
+                // until the fleet is globally quiescent: once every member
+                // is paused the sent sum is frozen, so the received sum
+                // can only climb to meet it — equality means every
+                // in-flight event frame has been ingested.
+                for &a in ids {
+                    send(a, ControlMsg::CheckpointStart { context: ctx, ckpt })?;
+                }
+                let barrier_deadline = Instant::now() + Duration::from_secs(30);
+                let mut counts: BTreeMap<AgentId, (u64, u64)> = BTreeMap::new();
+                loop {
+                    if Instant::now() > barrier_deadline {
+                        return Err((
+                            None,
+                            format!("checkpoint {ckpt} barrier did not quiesce in time"),
+                        ));
+                    }
+                    fleet_check(leader, &mut watchdog, &monitor)?;
+                    match leader.recv_timeout(Duration::from_millis(5)) {
+                        Some(NetMsg::Control(ControlMsg::CheckpointReply {
+                            ckpt: c,
+                            from,
+                            sent,
+                            received,
+                            ..
+                        })) if c == ckpt => {
+                            if let Some(m) = monitor.as_mut() {
+                                m.note(from);
+                            }
+                            counts.insert(from, (sent, received));
+                        }
+                        Some(NetMsg::Control(ControlMsg::Heartbeat { from, .. })) => {
+                            if let Some(m) = monitor.as_mut() {
+                                m.note(from);
+                            }
+                        }
+                        Some(NetMsg::Control(ControlMsg::AgentFailed { from, reason })) => {
+                            return Err((Some(from), format!("reported fatal failure: {reason}")));
+                        }
+                        Some(NetMsg::Control(ControlMsg::WindowReport {
+                            windows, records, ..
+                        })) => {
+                            // Reports raced ahead of the pause ride the
+                            // same FIFO channel as the replies, so by the
+                            // time an agent's reply is seen its pre-barrier
+                            // records are all in the pool.
+                            fleet_windows = fleet_windows.max(windows);
+                            for (kind, record) in records {
+                                pool.push(&kind, record);
+                            }
+                        }
+                        Some(NetMsg::Control(ControlMsg::Result { kind, record, .. })) => {
+                            pool.push(&kind, record);
+                        }
+                        _ => {}
+                    }
+                    if counts.len() == ids.len() {
+                        let s: u64 = counts.values().map(|(s, _)| *s).sum();
+                        let r: u64 = counts.values().map(|(_, r)| *r).sum();
+                        if s == r {
+                            break;
+                        }
+                        // Frames still in flight: ask again shortly.
+                        counts.clear();
+                        std::thread::sleep(Duration::from_millis(20));
+                        for &a in ids {
+                            send(a, ControlMsg::CheckpointPoll { context: ctx, ckpt })?;
+                        }
+                    }
+                }
+                // Quiescent: every member serializes its half of the cut.
+                for &a in ids {
+                    send(a, ControlMsg::CheckpointCommit { context: ctx, ckpt })?;
+                }
+                let mut done: BTreeSet<AgentId> = BTreeSet::new();
+                while done.len() < ids.len() {
+                    if Instant::now() > barrier_deadline {
+                        return Err((None, format!("checkpoint {ckpt} commit timed out")));
+                    }
+                    fleet_check(leader, &mut watchdog, &monitor)?;
+                    match leader.recv_timeout(Duration::from_millis(20)) {
+                        Some(NetMsg::Control(ControlMsg::CheckpointDone {
+                            ckpt: c,
+                            from,
+                            err,
+                            ..
+                        })) if c == ckpt => {
+                            if !err.is_empty() {
+                                return Err((
+                                    Some(from),
+                                    format!("checkpoint {ckpt} failed: {err}"),
+                                ));
+                            }
+                            if let Some(m) = monitor.as_mut() {
+                                m.note(from);
+                            }
+                            done.insert(from);
+                        }
+                        Some(NetMsg::Control(ControlMsg::Heartbeat { from, .. })) => {
+                            if let Some(m) = monitor.as_mut() {
+                                m.note(from);
+                            }
+                        }
+                        Some(NetMsg::Control(ControlMsg::AgentFailed { from, reason })) => {
+                            return Err((Some(from), format!("reported fatal failure: {reason}")));
+                        }
+                        Some(NetMsg::Control(ControlMsg::WindowReport { records, .. })) => {
+                            for (kind, record) in records {
+                                pool.push(&kind, record);
+                            }
+                        }
+                        Some(NetMsg::Control(ControlMsg::Result { kind, record, .. })) => {
+                            pool.push(&kind, record);
+                        }
+                        _ => {}
+                    }
+                }
+                // Leader half: journal the barrier id and the pool
+                // contents at the cut for a future resumed drive.
+                if let Some(log) = ckpt_log.as_ref() {
+                    let mut g = log.lock().unwrap();
+                    g.ckpt = ckpt;
+                    g.pool = ResultPool::new();
+                    g.pool.merge_from(&pool);
+                }
+                next_ckpt = ckpt;
             }
         }
         makespan = detector.max_lvt();

@@ -228,6 +228,47 @@ pub enum ControlMsg {
     /// poisoned connection) and is exiting.  Carries the reason so the
     /// leader's abort report names the first failure, not a symptom.
     AgentFailed { from: AgentId, reason: String },
+    /// Leader -> agents: begin checkpoint barrier `ckpt` for `context`.
+    /// The agent pauses stepping at its current window boundary, flushes
+    /// its outbox, and answers with [`ControlMsg::CheckpointReply`].
+    CheckpointStart { context: ContextId, ckpt: u64 },
+    /// Agent -> leader: paused for checkpoint `ckpt`, with the agent's
+    /// cumulative event-message counters.  The leader declares the fleet
+    /// quiescent when sum(sent) == sum(received) across one poll round's
+    /// replies — no event frame still in flight anywhere.
+    CheckpointReply {
+        context: ContextId,
+        ckpt: u64,
+        from: AgentId,
+        sent: u64,
+        received: u64,
+    },
+    /// Leader -> agents: re-request [`ControlMsg::CheckpointReply`] while
+    /// the barrier waits for in-flight frames to drain.
+    CheckpointPoll { context: ContextId, ckpt: u64 },
+    /// Leader -> agents: the fleet is quiescent at the barrier; write
+    /// checkpoint `ckpt` to disk, answer [`ControlMsg::CheckpointDone`],
+    /// and resume stepping.
+    CheckpointCommit { context: ContextId, ckpt: u64 },
+    /// Agent -> leader: checkpoint `ckpt` written (`err` empty) or failed
+    /// (`err` names the cause).
+    CheckpointDone {
+        context: ContextId,
+        ckpt: u64,
+        from: AgentId,
+        err: String,
+    },
+    /// Leader -> agents: load checkpoint `ckpt` from disk and restore the
+    /// context's engine to it (recovery after an agent failure).
+    Rollback { context: ContextId, ckpt: u64 },
+    /// Agent -> leader: rollback to `ckpt` finished (`err` empty) or
+    /// failed (`err` names the cause).
+    RollbackDone {
+        context: ContextId,
+        ckpt: u64,
+        from: AgentId,
+        err: String,
+    },
 }
 
 /// Everything that can travel between agents.
@@ -638,7 +679,7 @@ pub(crate) fn time_from_json(j: &Json) -> Result<SimTime> {
     }
 }
 
-fn event_to_json<P: Wire>(e: &Event<P>) -> Json {
+pub(crate) fn event_to_json<P: Wire>(e: &Event<P>) -> Json {
     Json::obj(vec![
         ("t", time_to_json(e.time)),
         ("tie0", Json::num(e.tie.0 as f64)),
@@ -650,7 +691,7 @@ fn event_to_json<P: Wire>(e: &Event<P>) -> Json {
     ])
 }
 
-fn event_from_json<P: Wire>(j: &Json) -> Result<Event<P>> {
+pub(crate) fn event_from_json<P: Wire>(j: &Json) -> Result<Event<P>> {
     Ok(Event {
         time: time_from_json(j.get("t").context("t")?)?,
         tie: (
@@ -829,6 +870,64 @@ fn control_to_json(c: &ControlMsg) -> Json {
             ("from", Json::num(from.raw() as f64)),
             ("reason", Json::str(reason.clone())),
         ]),
+        CheckpointStart { context, ckpt } => Json::obj(vec![
+            ("k", Json::str("ckpt-start")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("ckpt", Json::num(*ckpt as f64)),
+        ]),
+        CheckpointReply {
+            context,
+            ckpt,
+            from,
+            sent,
+            received,
+        } => Json::obj(vec![
+            ("k", Json::str("ckpt-reply")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("ckpt", Json::num(*ckpt as f64)),
+            ("from", Json::num(from.raw() as f64)),
+            ("sent", Json::num(*sent as f64)),
+            ("received", Json::num(*received as f64)),
+        ]),
+        CheckpointPoll { context, ckpt } => Json::obj(vec![
+            ("k", Json::str("ckpt-poll")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("ckpt", Json::num(*ckpt as f64)),
+        ]),
+        CheckpointCommit { context, ckpt } => Json::obj(vec![
+            ("k", Json::str("ckpt-commit")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("ckpt", Json::num(*ckpt as f64)),
+        ]),
+        CheckpointDone {
+            context,
+            ckpt,
+            from,
+            err,
+        } => Json::obj(vec![
+            ("k", Json::str("ckpt-done")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("ckpt", Json::num(*ckpt as f64)),
+            ("from", Json::num(from.raw() as f64)),
+            ("err", Json::str(err.clone())),
+        ]),
+        Rollback { context, ckpt } => Json::obj(vec![
+            ("k", Json::str("rollback")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("ckpt", Json::num(*ckpt as f64)),
+        ]),
+        RollbackDone {
+            context,
+            ckpt,
+            from,
+            err,
+        } => Json::obj(vec![
+            ("k", Json::str("rollback-done")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("ckpt", Json::num(*ckpt as f64)),
+            ("from", Json::num(from.raw() as f64)),
+            ("err", Json::str(err.clone())),
+        ]),
     }
 }
 
@@ -953,6 +1052,52 @@ fn control_from_json(j: &Json) -> Result<ControlMsg> {
                 .get("reason")
                 .and_then(Json::as_str)
                 .context("reason")?
+                .to_string(),
+        }),
+        Some("ckpt-start") => Ok(ControlMsg::CheckpointStart {
+            context: ctx()?,
+            ckpt: j.get("ckpt").and_then(Json::as_u64).context("ckpt")?,
+        }),
+        Some("ckpt-reply") => Ok(ControlMsg::CheckpointReply {
+            context: ctx()?,
+            ckpt: j.get("ckpt").and_then(Json::as_u64).context("ckpt")?,
+            from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+            sent: j.get("sent").and_then(Json::as_u64).context("sent")?,
+            received: j
+                .get("received")
+                .and_then(Json::as_u64)
+                .context("received")?,
+        }),
+        Some("ckpt-poll") => Ok(ControlMsg::CheckpointPoll {
+            context: ctx()?,
+            ckpt: j.get("ckpt").and_then(Json::as_u64).context("ckpt")?,
+        }),
+        Some("ckpt-commit") => Ok(ControlMsg::CheckpointCommit {
+            context: ctx()?,
+            ckpt: j.get("ckpt").and_then(Json::as_u64).context("ckpt")?,
+        }),
+        Some("ckpt-done") => Ok(ControlMsg::CheckpointDone {
+            context: ctx()?,
+            ckpt: j.get("ckpt").and_then(Json::as_u64).context("ckpt")?,
+            from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+            err: j
+                .get("err")
+                .and_then(Json::as_str)
+                .context("err")?
+                .to_string(),
+        }),
+        Some("rollback") => Ok(ControlMsg::Rollback {
+            context: ctx()?,
+            ckpt: j.get("ckpt").and_then(Json::as_u64).context("ckpt")?,
+        }),
+        Some("rollback-done") => Ok(ControlMsg::RollbackDone {
+            context: ctx()?,
+            ckpt: j.get("ckpt").and_then(Json::as_u64).context("ckpt")?,
+            from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+            err: j
+                .get("err")
+                .and_then(Json::as_str)
+                .context("err")?
                 .to_string(),
         }),
         _ => bail!("bad control msg {j}"),
@@ -1298,6 +1443,64 @@ fn control_to_bin(out: &mut Vec<u8>, c: &ControlMsg) {
             bin::put_u64(out, from.raw());
             bin::put_str(out, reason);
         }
+        CheckpointStart { context, ckpt } => {
+            out.push(16);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, *ckpt);
+        }
+        CheckpointReply {
+            context,
+            ckpt,
+            from,
+            sent,
+            received,
+        } => {
+            out.push(17);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, *ckpt);
+            bin::put_u64(out, from.raw());
+            bin::put_u64(out, *sent);
+            bin::put_u64(out, *received);
+        }
+        CheckpointPoll { context, ckpt } => {
+            out.push(18);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, *ckpt);
+        }
+        CheckpointCommit { context, ckpt } => {
+            out.push(19);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, *ckpt);
+        }
+        CheckpointDone {
+            context,
+            ckpt,
+            from,
+            err,
+        } => {
+            out.push(20);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, *ckpt);
+            bin::put_u64(out, from.raw());
+            bin::put_str(out, err);
+        }
+        Rollback { context, ckpt } => {
+            out.push(21);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, *ckpt);
+        }
+        RollbackDone {
+            context,
+            ckpt,
+            from,
+            err,
+        } => {
+            out.push(22);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, *ckpt);
+            bin::put_u64(out, from.raw());
+            bin::put_str(out, err);
+        }
     }
 }
 
@@ -1404,6 +1607,41 @@ fn control_from_bin(r: &mut bin::Reader) -> Result<ControlMsg> {
         15 => ControlMsg::AgentFailed {
             from: AgentId(r.u64()?),
             reason: r.str()?,
+        },
+        16 => ControlMsg::CheckpointStart {
+            context: ContextId(r.u64()?),
+            ckpt: r.u64()?,
+        },
+        17 => ControlMsg::CheckpointReply {
+            context: ContextId(r.u64()?),
+            ckpt: r.u64()?,
+            from: AgentId(r.u64()?),
+            sent: r.u64()?,
+            received: r.u64()?,
+        },
+        18 => ControlMsg::CheckpointPoll {
+            context: ContextId(r.u64()?),
+            ckpt: r.u64()?,
+        },
+        19 => ControlMsg::CheckpointCommit {
+            context: ContextId(r.u64()?),
+            ckpt: r.u64()?,
+        },
+        20 => ControlMsg::CheckpointDone {
+            context: ContextId(r.u64()?),
+            ckpt: r.u64()?,
+            from: AgentId(r.u64()?),
+            err: r.str()?,
+        },
+        21 => ControlMsg::Rollback {
+            context: ContextId(r.u64()?),
+            ckpt: r.u64()?,
+        },
+        22 => ControlMsg::RollbackDone {
+            context: ContextId(r.u64()?),
+            ckpt: r.u64()?,
+            from: AgentId(r.u64()?),
+            err: r.str()?,
         },
         t => bail!("bad control tag {t}"),
     })
@@ -1712,6 +1950,14 @@ pub struct TcpOptions {
     /// Per-peer writer-queue sizing policy ([`WriterQueue`]).  A full
     /// queue blocks the sender — backpressure, never loss.
     pub writer_queue: WriterQueue,
+    /// Total time a writer keeps retrying a refused connection before
+    /// declaring the peer unreachable (`deploy.connect_timeout_ms`).
+    /// Fleet members race to bind their listeners, and a launch handover
+    /// re-binds a port, so refusals during startup are normal.
+    pub connect_timeout: Duration,
+    /// First retry delay after a refused connection
+    /// (`deploy.connect_backoff_ms`); doubles per attempt, capped at 1 s.
+    pub connect_backoff: Duration,
 }
 
 impl Default for TcpOptions {
@@ -1720,9 +1966,19 @@ impl Default for TcpOptions {
             max_frame: DEFAULT_MAX_FRAME_BYTES,
             codec: WireCodec::default(),
             writer_queue: WriterQueue::default(),
+            connect_timeout: Duration::from_millis(DEFAULT_CONNECT_TIMEOUT_MS),
+            connect_backoff: Duration::from_millis(DEFAULT_CONNECT_BACKOFF_MS),
         }
     }
 }
+
+/// Default total connect-retry budget per peer, ms.  Covers the slowest
+/// observed startup races (fleet-wide bind + launch listener handover)
+/// with a wide margin.
+pub const DEFAULT_CONNECT_TIMEOUT_MS: u64 = 5_000;
+
+/// Default first connect-retry delay, ms (exponential, capped at 1 s).
+pub const DEFAULT_CONNECT_BACKOFF_MS: u64 = 100;
 
 /// Length-prefixed frame I/O.
 fn write_frame(stream: &mut TcpStream, bytes: &[u8]) -> Result<()> {
@@ -2391,19 +2647,25 @@ impl<P: Wire + Send + 'static> TcpTransport<P> {
 }
 
 /// Connect with startup retry (peers race to bind) and send the binary
-/// preamble when due; counts preamble bytes.
+/// preamble when due; counts preamble bytes.  Retries with exponential
+/// backoff — `opts.connect_backoff` doubling per attempt, capped at 1 s —
+/// until `opts.connect_timeout` of retry budget is spent, then names the
+/// unreachable peer and address in the error.
 fn connect_peer(
     to: AgentId,
     addr: SocketAddr,
-    codec: WireCodec,
+    opts: &TcpOptions,
     bytes: &AtomicU64,
 ) -> Result<TcpStream> {
-    let mut last = None;
-    for _ in 0..50 {
+    const BACKOFF_CAP: Duration = Duration::from_secs(1);
+    let mut backoff = opts.connect_backoff.max(Duration::from_millis(1));
+    let mut spent = Duration::ZERO;
+    let mut attempts = 0u32;
+    loop {
         match TcpStream::connect(addr) {
             Ok(mut s) => {
                 s.set_nodelay(true).ok();
-                if codec != WireCodec::Json {
+                if opts.codec != WireCodec::Json {
                     // JSON connections stay preamble-less — byte-compatible
                     // with pre-codec receivers (module docs).
                     let preamble = [
@@ -2412,20 +2674,33 @@ fn connect_peer(
                         WIRE_MAGIC[2],
                         WIRE_MAGIC[3],
                         WIRE_VERSION,
-                        codec.tag(),
+                        opts.codec.tag(),
                     ];
                     s.write_all(&preamble)?;
                     bytes.fetch_add(preamble.len() as u64, Ordering::Relaxed);
                 }
                 return Ok(s);
             }
+            Err(e) if spent < opts.connect_timeout => {
+                attempts += 1;
+                let wait = backoff.min(opts.connect_timeout - spent);
+                log::debug!(
+                    "connect to agent {to} at {addr} refused (attempt {attempts}): {e}; \
+                     retrying in {wait:?}"
+                );
+                std::thread::sleep(wait);
+                spent += wait;
+                backoff = (backoff * 2).min(BACKOFF_CAP);
+            }
             Err(e) => {
-                last = Some(e);
-                std::thread::sleep(Duration::from_millis(100));
+                return Err(anyhow!(
+                    "agent {to} unreachable at {addr} after {attempts} attempts \
+                     over {:?}: {e}",
+                    spent
+                ));
             }
         }
     }
-    Err(anyhow!("connect {to} at {addr}: {last:?}"))
 }
 
 /// The per-peer writer: encodes (and size-splits) each queued message and
@@ -2459,7 +2734,7 @@ fn writer_loop<P: Wire>(
         }
         for frame in &frames {
             if stream.is_none() {
-                match connect_peer(to, addr, opts.codec, &bytes) {
+                match connect_peer(to, addr, &opts, &bytes) {
                     Ok(s) => stream = Some(s),
                     Err(e) => {
                         log::error!("{me}: writer to {to} exiting: {e:#}");
@@ -2473,7 +2748,7 @@ fn writer_loop<P: Wire>(
                 // One reconnect attempt on a stale socket.
                 log::warn!("{me}: resend to {to} after {e}");
                 stream = None;
-                let retried = connect_peer(to, addr, opts.codec, &bytes)
+                let retried = connect_peer(to, addr, &opts, &bytes)
                     .and_then(|mut s| write_frame(&mut s, frame).map(|()| s));
                 match retried {
                     Ok(s) => stream = Some(s),
@@ -2737,6 +3012,41 @@ mod tests {
                 records: vec![], // progress-only notification
             },
             ControlMsg::Shutdown,
+            ControlMsg::CheckpointStart {
+                context: ContextId(1),
+                ckpt: 3,
+            },
+            ControlMsg::CheckpointReply {
+                context: ContextId(1),
+                ckpt: 3,
+                from: AgentId(2),
+                sent: 120,
+                received: 118,
+            },
+            ControlMsg::CheckpointPoll {
+                context: ContextId(1),
+                ckpt: 3,
+            },
+            ControlMsg::CheckpointCommit {
+                context: ContextId(1),
+                ckpt: 3,
+            },
+            ControlMsg::CheckpointDone {
+                context: ContextId(1),
+                ckpt: 3,
+                from: AgentId(2),
+                err: String::new(),
+            },
+            ControlMsg::Rollback {
+                context: ContextId(1),
+                ckpt: 3,
+            },
+            ControlMsg::RollbackDone {
+                context: ContextId(1),
+                ckpt: 3,
+                from: AgentId(2),
+                err: "no such checkpoint".into(),
+            },
         ];
         for m in msgs {
             let j = control_to_json(&m);
@@ -2791,7 +3101,7 @@ mod tests {
 
     fn rand_control(rng: &mut Pcg32) -> ControlMsg {
         let ctx = ContextId(rng.below(4));
-        match rng.below(15) {
+        match rng.below(22) {
             0 => ControlMsg::DeployLp {
                 context: ctx,
                 lp: LpId(rng.below(64)),
@@ -2878,6 +3188,49 @@ mod tests {
             13 => ControlMsg::AgentFailed {
                 from: AgentId(rng.below(8)),
                 reason: format!("reason{}", rng.below(4)),
+            },
+            14 => ControlMsg::CheckpointStart {
+                context: ctx,
+                ckpt: rng.below(16),
+            },
+            15 => ControlMsg::CheckpointReply {
+                context: ctx,
+                ckpt: rng.below(16),
+                from: AgentId(rng.below(8)),
+                sent: rng.below(10_000),
+                received: rng.below(10_000),
+            },
+            16 => ControlMsg::CheckpointPoll {
+                context: ctx,
+                ckpt: rng.below(16),
+            },
+            17 => ControlMsg::CheckpointCommit {
+                context: ctx,
+                ckpt: rng.below(16),
+            },
+            18 => ControlMsg::CheckpointDone {
+                context: ctx,
+                ckpt: rng.below(16),
+                from: AgentId(rng.below(8)),
+                err: if rng.chance(0.5) {
+                    String::new()
+                } else {
+                    format!("err{}", rng.below(4))
+                },
+            },
+            19 => ControlMsg::Rollback {
+                context: ctx,
+                ckpt: rng.below(16),
+            },
+            20 => ControlMsg::RollbackDone {
+                context: ctx,
+                ckpt: rng.below(16),
+                from: AgentId(rng.below(8)),
+                err: if rng.chance(0.5) {
+                    String::new()
+                } else {
+                    format!("err{}", rng.below(4))
+                },
             },
             _ => ControlMsg::Shutdown,
         }

@@ -95,6 +95,17 @@ impl Pcg32 {
         weights.len() - 1
     }
 
+    /// The generator's full internal state, for checkpointing.  Restoring
+    /// via [`Pcg32::from_state`] resumes the exact stream.
+    pub fn state_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Pcg32::state_parts`] output.
+    pub fn from_state(state: u64, inc: u64) -> Self {
+        Pcg32 { state, inc }
+    }
+
     /// Fisher-Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {

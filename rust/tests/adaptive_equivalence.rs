@@ -239,6 +239,7 @@ fn backpressure_stress_no_deadlock_no_drops() {
         writer_queue: WriterQueue::Fixed(1),
         max_frame: 4096,
         codec: WireCodec::Binary,
+        ..TcpOptions::default()
     };
     let (l, a) = tcp_fleet(0, adaptive_spec(), opts);
     let out = drive_two_center(l, a);

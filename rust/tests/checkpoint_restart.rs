@@ -1,0 +1,88 @@
+//! Coordinated checkpoint barrier, in-process: the leader pauses the
+//! fleet at a quiescent window boundary, every agent serializes its full
+//! engine state to disk, and the run resumes — with a determinism
+//! fingerprint bit-identical to a run that never checkpointed.  (The
+//! multi-process restart path on top of these files is covered in
+//! `launch_liveness.rs`.)
+
+use std::sync::{Arc, Mutex};
+
+use dsim::coordinator::{AgentConfig, AgentRuntime, WindowBudgetSpec};
+use dsim::engine::{EventQueueKind, ExecMode, SyncProtocol};
+use dsim::runtime::ComputeBackend;
+use dsim::testkit::{
+    drive_fleet_leader, drive_two_center, inproc_fleet, CheckpointLog, DriveOptions, FLEET_AGENTS,
+};
+use dsim::util::json::Json;
+use dsim::util::AgentId;
+use dsim::workload;
+
+fn cfg(me: AgentId) -> AgentConfig {
+    AgentConfig {
+        me,
+        peers: FLEET_AGENTS.to_vec(),
+        lookahead: 0.05,
+        protocol: SyncProtocol::NullMessagesByDemand,
+        workers: 0,
+        exec: ExecMode::SafeWindow,
+        event_queue: EventQueueKind::Heap,
+        wire_batch: true,
+        budget: WindowBudgetSpec::default(),
+        heartbeat_ms: 0,
+    }
+}
+
+#[test]
+fn checkpoint_barrier_preserves_fingerprint_and_writes_state() {
+    let (l, a) = inproc_fleet(cfg);
+    let baseline = drive_two_center(l, a).fingerprint;
+
+    let dir = std::env::temp_dir().join(format!("dsim-ckpt-barrier-{}", std::process::id()));
+    let (leader, agents) = inproc_fleet(cfg);
+    let ids: Vec<AgentId> = agents.iter().map(|(c, _)| c.me).collect();
+    let backend = Arc::new(ComputeBackend::auto(std::path::Path::new("artifacts")));
+    let mut handles = Vec::new();
+    for (c, t) in agents {
+        let backend = Arc::clone(&backend);
+        let dir = dir.clone();
+        let me = c.me;
+        handles.push(std::thread::spawn(move || {
+            if let Err(e) = AgentRuntime::new(c, t, backend).with_checkpoint_dir(dir).run() {
+                eprintln!("agent {me} failed: {e:#}");
+            }
+        }));
+    }
+    let log = Arc::new(Mutex::new(CheckpointLog::default()));
+    let out = drive_fleet_leader(
+        &leader,
+        &ids,
+        &workload::two_center_demo(),
+        DriveOptions {
+            checkpoint_windows: 2,
+            ckpt_log: Some(Arc::clone(&log)),
+            ..DriveOptions::default()
+        },
+    )
+    .unwrap_or_else(|abort| panic!("{abort}"));
+    for h in handles {
+        let _ = h.join();
+    }
+    assert_eq!(
+        out.fingerprint, baseline,
+        "a checkpointing run must stay bit-identical to a checkpoint-free one"
+    );
+
+    // The leader journaled at least one committed barrier, and every
+    // fleet member persisted a parseable full-state snapshot for it.
+    let committed = log.lock().unwrap().ckpt;
+    assert!(committed > 0, "no barrier committed over a whole run");
+    for a in &ids {
+        let path = dir.join(format!("ckpt_{committed}_agent_{}.json", a.raw()));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("checkpoint {} unreadable: {e}", path.display()));
+        let snap = Json::parse(&text).expect("checkpoint must be valid JSON");
+        assert_eq!(snap.get("ckpt").and_then(Json::as_u64), Some(committed));
+        assert!(snap.get("engine").is_some(), "snapshot must embed engine state");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,12 +1,17 @@
 //! Multi-process `scenario launch` integration: a real fleet of `dsim
 //! agent` subprocesses produces the same determinism fingerprint as the
-//! in-process TCP path, and a SIGKILLed agent turns into a clean,
-//! named, partial-report-carrying abort instead of a hung run.
+//! in-process TCP path; a SIGKILLed agent turns into a clean, named,
+//! partial-report-carrying abort instead of a hung run; and under
+//! `on_failure: restart` the fleet respawns, rolls back to the last
+//! coordinated checkpoint, and still lands bit-identical to a
+//! fault-free run.
 
 use std::time::{Duration, Instant};
 
+use dsim::coordinator::LivenessMonitor;
 use dsim::scenario::{self, LaunchOptions};
 use dsim::util::json::Json;
+use dsim::util::AgentId;
 
 fn doc(heartbeat_ms: u64) -> Json {
     Json::parse(&format!(
@@ -18,13 +23,41 @@ fn doc(heartbeat_ms: u64) -> Json {
     .unwrap()
 }
 
+/// Same fleet and grid as [`doc`], with coordinated checkpoints every 2
+/// windows and the restart-on-failure policy; `faults` is spliced in
+/// verbatim when non-empty.
+fn restart_doc(faults: &str) -> Json {
+    let faults_block = if faults.is_empty() {
+        String::new()
+    } else {
+        format!(r#""faults": {faults},"#)
+    };
+    Json::parse(&format!(
+        r#"{{"name": "launch-it",
+             {faults_block}
+             "deploy": {{"agents": 3, "transport": "tcp", "placement": "rr",
+                        "heartbeat_ms": 100, "checkpoint_windows": 2,
+                        "on_failure": "restart"}},
+             "contexts": [{{"name": "c", "grid": {{"preset": "two-center"}}}}]}}"#
+    ))
+    .unwrap()
+}
+
 /// The test binary is not the `dsim` CLI, so point the launcher at the
 /// real one cargo built for this test run.
 fn opts() -> LaunchOptions {
     LaunchOptions {
         agent_bin: Some(env!("CARGO_BIN_EXE_dsim").into()),
         liveness_deadline: Some(Duration::from_secs(2)),
+        ..Default::default()
     }
+}
+
+/// The fault-free reference fingerprint: the in-process run of the same
+/// contexts (checkpoint / restart / heartbeat knobs must not change it).
+fn fault_free_fingerprint() -> String {
+    let compiled = scenario::compile(&doc(0)).unwrap();
+    compiled.run().unwrap()[0].fingerprint.clone()
 }
 
 #[test]
@@ -57,7 +90,7 @@ fn killed_agent_aborts_the_run_naming_it() {
         child.kill().expect("SIGKILL agent 2");
     });
     let started = Instant::now();
-    let err = scenario::run_launched(&compiled, &fleet)
+    let err = scenario::run_launched(&compiled, fleet, &opts())
         .expect_err("a run with a dead agent must abort, not hang");
     let elapsed = started.elapsed();
     killer.join().unwrap();
@@ -71,4 +104,94 @@ fn killed_agent_aborts_the_run_naming_it() {
         elapsed < Duration::from_secs(30),
         "abort must land within the liveness bound, took {elapsed:?}"
     );
+}
+
+#[test]
+fn sigkilled_agent_under_restart_policy_recovers_bit_identical() {
+    let baseline = fault_free_fingerprint();
+    let compiled = scenario::compile(&restart_doc("")).unwrap();
+    let fleet = scenario::spawn_fleet(&compiled, &opts()).unwrap();
+    let kids = fleet.process_handle();
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        let mut kids = kids.lock().unwrap();
+        // The run may already be over; a kill of an exited process is
+        // fine — the point is that a mid-run kill must be survivable.
+        if let Some((_, child)) = kids.iter_mut().find(|(id, _)| id.raw() == 2) {
+            let _ = child.kill();
+        }
+    });
+    let out = scenario::run_launched(&compiled, fleet, &opts())
+        .expect("on_failure: restart must recover from a SIGKILLed agent");
+    killer.join().unwrap();
+    assert_eq!(
+        out[0].fingerprint, baseline,
+        "recovered run must be bit-identical to the fault-free run"
+    );
+}
+
+#[test]
+fn seeded_kill_fault_recovers_and_replays_identically() {
+    // The scenario's own fault schedule kills agent 2 the first time it
+    // finishes window 4, on launch attempt 1 only — a deterministic,
+    // replayable failure with no external kill thread.
+    let faults = r#"{"seed": 7, "schedule": [
+        {"kind": "kill_agent", "agent": 2, "at_window": 4, "on_attempt": 1}]}"#;
+    let compiled = scenario::compile(&restart_doc(faults)).unwrap();
+    let first = scenario::launch(&compiled, &opts())
+        .expect("seeded kill under on_failure: restart must recover");
+    assert_eq!(
+        first[0].fingerprint,
+        fault_free_fingerprint(),
+        "faulty-but-recovered run must match the fault-free fingerprint"
+    );
+    let second = scenario::launch(&compiled, &opts()).unwrap();
+    assert_eq!(
+        first[0].fingerprint, second[0].fingerprint,
+        "the same fault schedule must reproduce the same recovery"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// LivenessMonitor edge cases (leader-side wall-clock liveness)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn liveness_zero_heartbeat_floor_never_flags_instantly() {
+    // deploy.heartbeat_ms = 0 means "heartbeats off" in-process; the
+    // launcher substitutes its 250 ms default, and the derived deadline
+    // (8 periods, clamped to >= 2 s) lands exactly on the 2 s floor —
+    // never a zero deadline that would flag a fresh fleet on the spot.
+    let hb = scenario::DEFAULT_LAUNCH_HEARTBEAT_MS;
+    let deadline = Duration::from_millis(hb * 8).max(Duration::from_secs(2));
+    assert_eq!(deadline, Duration::from_secs(2), "250 ms * 8 clamps to the floor");
+    let m = LivenessMonitor::new(&[AgentId(1), AgentId(2)], deadline);
+    assert_eq!(m.overdue(), None, "a fresh monitor must not flag anyone");
+}
+
+#[test]
+fn liveness_flags_only_the_agent_past_the_deadline() {
+    let mut m = LivenessMonitor::new(&[AgentId(1), AgentId(2)], Duration::from_millis(400));
+    assert_eq!(m.overdue(), None);
+    std::thread::sleep(Duration::from_millis(100));
+    m.note(AgentId(1));
+    std::thread::sleep(Duration::from_millis(350));
+    // Agent 1 was heard ~350 ms ago (inside the deadline); agent 2 has
+    // been silent ~450 ms (past it).
+    assert_eq!(m.overdue(), Some(AgentId(2)));
+}
+
+#[test]
+fn liveness_heartbeats_alone_keep_an_agent_alive() {
+    // An agent that heartbeats but never sends a WindowReport is alive,
+    // not overdue: any control-plane sign of life counts.
+    let mut m = LivenessMonitor::new(&[AgentId(1)], Duration::from_millis(500));
+    let start = Instant::now();
+    while start.elapsed() < Duration::from_millis(700) {
+        std::thread::sleep(Duration::from_millis(100));
+        m.note(AgentId(1));
+        assert_eq!(m.overdue(), None, "a heartbeating agent must never be flagged");
+    }
+    std::thread::sleep(Duration::from_millis(600));
+    assert_eq!(m.overdue(), Some(AgentId(1)), "silence past the deadline flags it");
 }
