@@ -124,6 +124,11 @@ fn queue_scaling() {
         .unwrap_or_else(|_| "../BENCH_SCALE.json".to_string());
 
     println!("# CLAIM-SCALE: large_grid LP scaling, heap vs ladder event queue");
+    if peak_rss_bytes() == 0 {
+        // Non-Linux: /proc VmHWM is unavailable, so every rss-derived
+        // column below is 0 meaning "no measurement", not "zero bytes".
+        println!("# NOTE: peak rss unavailable on this platform; peak_rss_bytes/bytes_per_lp are 0 (not a measurement)");
+    }
     let mut rows: Vec<ScaleRow> = Vec::new();
     // Increasing LP order: peak RSS is process-monotone, so each scale's
     // reading is dominated by the largest model seen so far — its own.

@@ -504,6 +504,7 @@ fn tcp_budget_fleet(
         wire_batch: true,
         budget,
         heartbeat_ms: 0,
+        telemetry_windows: 0,
     })
 }
 

@@ -65,9 +65,16 @@ impl Bench {
     }
 }
 
-/// Peak resident set size of this process in bytes (Linux `VmHWM`; 0
-/// where `/proc` is unavailable).  Process-monotone: it never decreases,
-/// so callers comparing scales should measure in increasing-size order.
+/// Peak resident set size of this process in bytes (Linux `VmHWM`).
+/// Process-monotone: it never decreases, so callers comparing scales
+/// should measure in increasing-size order.
+///
+/// Returns **0 where `/proc` is unavailable (non-Linux)** — that zero is
+/// "no measurement", not "zero bytes".  Consumers deriving ratios from
+/// it (bytes/LP and the like) must treat a 0 reading as absent rather
+/// than reporting a ratio of 0; the bench binaries print an explicit
+/// "rss unavailable" note in that case so rows are never mistaken for
+/// real measurements.
 pub fn peak_rss_bytes() -> u64 {
     std::fs::read_to_string("/proc/self/status")
         .ok()

@@ -313,6 +313,13 @@ pub struct DeployConfig {
     /// every agent writes its full engine state to disk.  0 (default) =
     /// checkpoints off.  In-process deployments ignore it.
     pub checkpoint_windows: u64,
+    /// Live-telemetry cadence: every N *executed windows* each agent
+    /// streams one `Telemetry` snapshot (LVT, window budget, writer-queue
+    /// occupancy, wire traffic, event-queue depth) to the leader, which
+    /// folds them into per-agent time-series in the run report (and the
+    /// `--watch` view).  0 (default) = off.  The trigger is virtual
+    /// progress, never wall clock, so results are identical either way.
+    pub telemetry_windows: u64,
     /// Leader policy when a fleet member fails mid-run: `abort` (default)
     /// or `restart` (respawn + roll back to the latest checkpoint).
     pub on_failure: OnFailure,
@@ -399,6 +406,7 @@ impl Default for DeployConfig {
             probe_fallback_ms: 2,
             heartbeat_ms: 0,
             checkpoint_windows: 0,
+            telemetry_windows: 0,
             on_failure: OnFailure::Abort,
             connect_timeout_ms: crate::transport::DEFAULT_CONNECT_TIMEOUT_MS,
             connect_backoff_ms: crate::transport::DEFAULT_CONNECT_BACKOFF_MS,
@@ -538,6 +546,8 @@ impl ScenarioConfig {
             heartbeat_ms: get_usize(&d, "heartbeat_ms", dd.heartbeat_ms as usize)? as u64,
             checkpoint_windows: get_usize(&d, "checkpoint_windows", dd.checkpoint_windows as usize)?
                 as u64,
+            telemetry_windows: get_usize(&d, "telemetry_windows", dd.telemetry_windows as usize)?
+                as u64,
             on_failure: get_str(&d, "on_failure", &dd.on_failure.to_string())?
                 .parse()
                 .map_err(anyhow::Error::msg)?,
@@ -672,6 +682,10 @@ impl ScenarioConfig {
                     (
                         "checkpoint_windows",
                         Json::num(self.deploy.checkpoint_windows as f64),
+                    ),
+                    (
+                        "telemetry_windows",
+                        Json::num(self.deploy.telemetry_windows as f64),
                     ),
                     ("on_failure", Json::str(self.deploy.on_failure.to_string())),
                     (

@@ -28,7 +28,7 @@ use crate::model::Payload;
 use crate::monitor::{HostSample, HostSampler, PerfWeights};
 use crate::runtime::ComputeBackend;
 use crate::space::Space;
-use crate::transport::{ControlMsg, NetMsg, Transport, TransportTelemetry};
+use crate::transport::{ControlMsg, NetMsg, TelemetrySnapshot, Transport, TransportTelemetry};
 use crate::util::json::Json;
 use crate::util::{AgentId, ContextId};
 
@@ -56,6 +56,10 @@ struct ContextSlot {
     /// continues (the barrier needs in-flight frames drained), and the
     /// engine emits nothing new until `CheckpointCommit` unpauses.
     paused: Option<u64>,
+    /// Executed-window count at the last emitted telemetry snapshot
+    /// (rounded down to the cadence), so each `telemetry_windows`
+    /// crossing emits exactly one frame.
+    telemetry_mark: u64,
 }
 
 /// Per-agent configuration.
@@ -89,6 +93,12 @@ pub struct AgentConfig {
     /// on so the leader can tell a dead agent from a slow one; heartbeats
     /// are control-plane only and never touch simulation results.
     pub heartbeat_ms: u64,
+    /// Live-telemetry cadence in *executed windows* (0 = off, the
+    /// default).  Every `telemetry_windows` windows the agent streams one
+    /// [`ControlMsg::Telemetry`] snapshot to the leader.  The trigger is
+    /// virtual progress, never wall clock, so enabling telemetry cannot
+    /// perturb the determinism fingerprint.
+    pub telemetry_windows: u64,
 }
 
 /// Runs an agent until `Shutdown`.  Generic over the transport so the same
@@ -669,6 +679,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 frames: 0,
                 reported_windows: 0,
                 paused: None,
+                telemetry_mark: 0,
             }
         })
     }
@@ -697,10 +708,20 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 // timestamp budget comes from the per-context controller:
                 // the historical fixed 16 384 by default, or the adaptive
                 // feedback loop.
-                let outcome = {
-                    let slot = self.contexts.get_mut(&ctx).unwrap();
-                    let budget = slot.controller.budget();
-                    slot.engine.advance_window(budget)
+                let outcome = match self.contexts.get_mut(&ctx) {
+                    Some(slot) => {
+                        let budget = slot.controller.budget();
+                        slot.engine.advance_window(budget)
+                    }
+                    // A vanished slot here means something named a context
+                    // this agent never deployed: route it through the
+                    // fatal path (AgentFailed + nonzero exit) so the
+                    // leader blames this agent instead of seeing a silent
+                    // process abort.
+                    None => {
+                        self.local_fatal.push(format!("window step on unknown {ctx}"));
+                        return false;
+                    }
                 };
                 self.flush_outbox(ctx);
                 match outcome {
@@ -712,6 +733,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                             .map(|s| s.engine.stats().windows)
                             .unwrap_or(0);
                         self.trigger_faults(windows);
+                        self.maybe_emit_telemetry(ctx, windows);
                         true
                     }
                     _ => false,
@@ -723,9 +745,12 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 // steps is plenty per outer loop (each step can process
                 // many events).
                 for _ in 0..256 {
-                    let outcome = {
-                        let slot = self.contexts.get_mut(&ctx).unwrap();
-                        slot.engine.step()
+                    let outcome = match self.contexts.get_mut(&ctx) {
+                        Some(slot) => slot.engine.step(),
+                        None => {
+                            self.local_fatal.push(format!("step on unknown {ctx}"));
+                            return progressed;
+                        }
                     };
                     self.flush_outbox(ctx);
                     match outcome {
@@ -929,7 +954,10 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
         let path = self
             .ckpt_path(ckpt)
             .ok_or_else(|| anyhow::anyhow!("no checkpoint directory configured"))?;
-        let slot = self.contexts.get_mut(&context).unwrap();
+        let slot = self
+            .contexts
+            .get_mut(&context)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint commit for unknown {context}"))?;
         let body = Json::obj(vec![
             ("ckpt", Json::num(ckpt as f64)),
             ("context", Json::num(context.raw() as f64)),
@@ -977,7 +1005,10 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             "checkpoint id mismatch in {}",
             path.display()
         );
-        let slot = self.contexts.get_mut(&context).unwrap();
+        let slot = self
+            .contexts
+            .get_mut(&context)
+            .ok_or_else(|| anyhow::anyhow!("rollback for unknown {context}"))?;
         slot.engine
             .restore(snap.get("engine").context("checkpoint missing engine")?)
             .context("restore engine")?;
@@ -998,6 +1029,44 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
         slot.started = false;
         log::info!("{}: restored checkpoint {}", self.cfg.me, path.display());
         Ok(())
+    }
+
+    /// Emit one [`ControlMsg::Telemetry`] snapshot when `ctx`'s
+    /// executed-window counter crosses another `telemetry_windows`
+    /// multiple.  Control-plane only: the snapshot reads state, sends one
+    /// leader frame, and touches nothing the simulation consumes — so a
+    /// telemetry-on run emits byte-identical data-plane traffic to a
+    /// telemetry-off run.
+    fn maybe_emit_telemetry(&mut self, ctx: ContextId, windows: u64) {
+        let cadence = self.cfg.telemetry_windows;
+        if cadence == 0 {
+            return;
+        }
+        let wire = self.transport.telemetry();
+        let wire_bytes = self.transport.wire_bytes();
+        let Some(slot) = self.contexts.get_mut(&ctx) else { return };
+        if windows < slot.telemetry_mark + cadence {
+            return;
+        }
+        slot.telemetry_mark = windows - windows % cadence;
+        let snap = TelemetrySnapshot {
+            windows,
+            lvt_s: slot.engine.lvt().secs(),
+            budget: slot.controller.budget() as u64,
+            queue_depth: wire.queue_occupancy,
+            queue_highwater: wire.queue_highwater,
+            wire_bytes,
+            wire_frames: slot.frames,
+            events_queued: slot.engine.queue_len() as u64,
+        };
+        let _ = self.transport.send(
+            LEADER,
+            NetMsg::Control(ControlMsg::Telemetry {
+                context: ctx,
+                from: self.cfg.me,
+                snap,
+            }),
+        );
     }
 
     /// Fire every scheduled fault targeting this agent + launch attempt
@@ -1274,6 +1343,7 @@ mod tests {
             wire_batch,
             budget: WindowBudgetSpec::default(),
             heartbeat_ms: 0,
+            telemetry_windows: 0,
         };
         let backend = Arc::new(ComputeBackend::auto(Path::new("artifacts")));
         AgentRuntime::new(cfg, ep, backend)
@@ -1335,6 +1405,72 @@ mod tests {
             bound: None,
         });
         assert_eq!(a2.space().read("db/x").unwrap().fields, Json::num(2.0));
+    }
+
+    #[test]
+    fn unknown_context_frames_fail_cleanly_instead_of_panicking() {
+        // Regression: control traffic naming a context this agent never
+        // deployed used to die on `contexts.get_mut(..).unwrap()`,
+        // aborting the process with no AgentFailed report.  Every such
+        // path now either answers the leader or raises a local fatal.
+        let net: InProcNetwork<Payload> = InProcNetwork::new();
+        let leader = net.endpoint(LEADER);
+        let mut a1 = runtime(1, net.endpoint(AgentId(1)), true);
+        let ghost = ContextId(77);
+
+        // A window step on an unknown context raises a local fatal (the
+        // main loop turns it into AgentFailed + nonzero exit) instead of
+        // panicking.
+        assert!(!a1.step_context(ghost));
+        assert!(
+            a1.local_fatal.iter().any(|f| f.contains("unknown")),
+            "step on unknown context must record a fatal: {:?}",
+            a1.local_fatal
+        );
+        a1.local_fatal.clear();
+
+        // Unknown-context control frames are answered (or ignored)
+        // without creating a slot and without panicking.
+        assert!(a1.handle(NetMsg::Control(ControlMsg::StartRun {
+            context: ghost,
+            participants: vec![AgentId(1), AgentId(2)],
+        })));
+        assert!(a1.handle(NetMsg::Control(ControlMsg::GvtUpdate {
+            context: ghost,
+            gvt: crate::engine::SimTime::ZERO,
+        })));
+        assert!(a1.handle(NetMsg::Control(ControlMsg::Probe {
+            context: ghost,
+            round: 1,
+        })));
+        assert!(a1.handle(NetMsg::Control(ControlMsg::CheckpointCommit {
+            context: ghost,
+            ckpt: 1,
+        })));
+        assert!(a1.local_fatal.is_empty(), "{:?}", a1.local_fatal);
+
+        // The probe answered idle-with-zeros, and the commit reported
+        // done (a non-participant has nothing to write) — the leader's
+        // collection loops complete instead of hanging on a dead agent.
+        let mut probe_replied = false;
+        let mut ckpt_done = false;
+        while let Some(msg) = leader.recv_timeout(Duration::ZERO) {
+            match msg {
+                NetMsg::Control(ControlMsg::ProbeReply { context, idle, .. }) => {
+                    assert_eq!(context, ghost);
+                    assert!(idle);
+                    probe_replied = true;
+                }
+                NetMsg::Control(ControlMsg::CheckpointDone { context, err, .. }) => {
+                    assert_eq!(context, ghost);
+                    assert!(err.is_empty(), "{err}");
+                    ckpt_done = true;
+                }
+                _ => {}
+            }
+        }
+        assert!(probe_replied, "probe on unknown context must still answer");
+        assert!(ckpt_done, "checkpoint commit on unknown context must still answer");
     }
 
     #[test]

@@ -39,7 +39,8 @@ use crate::metrics::ResultPool;
 use crate::model::Payload;
 use crate::monitor::{MonitorHub, PerfWeights};
 use crate::runtime::ComputeBackend;
-use crate::transport::{ControlMsg, InProcNetwork, NetMsg, Transport, Wire};
+use crate::metrics::TelemetryWatch;
+use crate::transport::{ControlMsg, InProcNetwork, NetMsg, TelemetrySnapshot, Transport, Wire};
 use crate::util::json::Json;
 use crate::util::{AgentId, ContextId};
 use crate::workload::GeneratedScenario;
@@ -110,6 +111,10 @@ pub struct RunReport {
     pub per_agent: Vec<(AgentId, HostStatsView)>,
     /// group index -> agent chosen by the placement scheduler.
     pub placements: Vec<(usize, AgentId)>,
+    /// Per-agent live-telemetry time-series, in emission order (empty
+    /// unless `deploy.telemetry_windows > 0`).  Each entry is one
+    /// virtual-cadence snapshot the agent streamed mid-run.
+    pub telemetry: Vec<(AgentId, Vec<TelemetrySnapshot>)>,
 }
 
 impl RunReport {
@@ -198,6 +203,13 @@ pub struct Deployment {
     /// window-completion notifications; the timer only retries lost
     /// replies and bounds termination latency once the fleet goes quiet.
     probe_every: Duration,
+    /// Live-telemetry cadence in executed windows (0 = off); see
+    /// [`crate::config::DeployConfig::telemetry_windows`].
+    telemetry_windows: u64,
+    /// Render the live `--watch` view (GVT progress, per-agent LVT lag,
+    /// wire rates) to stderr as telemetry arrives.  Display only — it
+    /// reads folded snapshots and never feeds anything back into the run.
+    watch: bool,
 }
 
 impl Deployment {
@@ -219,6 +231,8 @@ impl Deployment {
             scenario_fp: String::new(),
             max_wall: Duration::from_secs(600),
             probe_every: Duration::from_millis(2),
+            telemetry_windows: 0,
+            watch: false,
         }
     }
 
@@ -241,6 +255,8 @@ impl Deployment {
             scenario_fp: String::new(),
             max_wall: Duration::from_secs(600),
             probe_every: Duration::from_millis(d.probe_fallback_ms.max(1)),
+            telemetry_windows: d.telemetry_windows,
+            watch: false,
         }
     }
 
@@ -323,6 +339,18 @@ impl Deployment {
         self
     }
 
+    /// Live-telemetry cadence in executed windows (0 = off, the default).
+    pub fn telemetry_windows(mut self, n: u64) -> Self {
+        self.telemetry_windows = n;
+        self
+    }
+
+    /// Render the live watch view to stderr while the run executes.
+    pub fn watch(mut self, on: bool) -> Self {
+        self.watch = on;
+        self
+    }
+
     /// Thread a scenario content fingerprint into every [`RunReport`]
     /// this deployment produces (see [`crate::scenario`]).
     pub fn scenario_fingerprint(mut self, fp: impl Into<String>) -> Self {
@@ -390,6 +418,7 @@ impl Deployment {
                 wire_batch: self.wire_batch,
                 budget: self.budget,
                 heartbeat_ms: 0,
+                telemetry_windows: self.telemetry_windows,
             };
             let backend = Arc::clone(&backend);
             handles.push(
@@ -531,13 +560,15 @@ impl Deployment {
                     final_stats: BTreeMap::new(),
                     ended: false,
                     pending_gvt: None,
+                    telemetry: BTreeMap::new(),
                 },
             );
         }
 
         // Replay any messages that arrived during the monitor bootstrap.
+        let mut watch_view = self.watch.then(TelemetryWatch::new);
         for m in pending_msgs {
-            Self::leader_ingest(&hub, &mut runs, m);
+            Self::leader_ingest(&hub, &mut runs, &mut watch_view, m);
         }
 
         // --- leader loop ------------------------------------------------------
@@ -590,7 +621,7 @@ impl Deployment {
             // responsiveness paces probe rounds and thus GVT latency.
             let mut got = false;
             while let Some(msg) = leader_ep.recv_timeout(Duration::ZERO) {
-                Self::leader_ingest(&hub, &mut runs, msg);
+                Self::leader_ingest(&hub, &mut runs, &mut watch_view, msg);
                 got = true;
             }
             if !got {
@@ -613,13 +644,16 @@ impl Deployment {
                     msg = leader_ep.recv_timeout(park);
                 }
                 if let Some(m) = msg {
-                    Self::leader_ingest(&hub, &mut runs, m);
+                    Self::leader_ingest(&hub, &mut runs, &mut watch_view, m);
                 }
             }
             // Broadcast freshly-proven GVT bounds (unblocks demand chains
             // that are stuck behind fully-idle spectator agents).
             for (ctx, st) in runs.iter_mut() {
                 if let Some(gvt) = st.pending_gvt.take() {
+                    if let Some(w) = &mut watch_view {
+                        w.on_gvt(*ctx, gvt);
+                    }
                     for &a in &agent_ids {
                         let _ = leader_ep.send(
                             a,
@@ -732,6 +766,7 @@ impl Deployment {
                 queue_shrinks,
                 frames_skipped,
                 scenario_fingerprint: self.scenario_fp.clone(),
+                telemetry: st.telemetry.into_iter().collect(),
                 pool: st.pool,
                 per_agent,
                 placements: placements_all[i]
@@ -747,9 +782,18 @@ impl Deployment {
     fn leader_ingest(
         hub: &MonitorHub,
         runs: &mut BTreeMap<ContextId, RunState>,
+        watch: &mut Option<TelemetryWatch>,
         msg: NetMsg<Payload>,
     ) {
         match msg {
+            NetMsg::Control(ControlMsg::Telemetry { context, from, snap }) => {
+                if let Some(st) = runs.get_mut(&context) {
+                    if let Some(w) = watch {
+                        w.on_snapshot(context, from, &snap);
+                    }
+                    st.telemetry.entry(from).or_default().push(snap);
+                }
+            }
             NetMsg::Control(ControlMsg::Result { context, kind, record }) => {
                 // Legacy per-record frame (wire batching off / old agents).
                 if let Some(st) = runs.get_mut(&context) {
@@ -827,6 +871,9 @@ struct RunState {
     ended: bool,
     /// GVT proven by the last quiescent probe round, awaiting broadcast.
     pending_gvt: Option<f64>,
+    /// Per-agent telemetry snapshots in arrival order (the control
+    /// channel is FIFO per agent, so arrival order is emission order).
+    telemetry: BTreeMap<AgentId, Vec<TelemetrySnapshot>>,
 }
 
 #[cfg(test)]

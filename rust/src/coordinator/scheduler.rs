@@ -89,12 +89,25 @@ impl<'a> PlacementScheduler<'a> {
                 let scores =
                     self.backend
                         .placement_scores(&self.perf, &valid, &self.member)?;
-                scores
+                // Total-order fold that skips NaN scores: `partial_cmp`
+                // unwraps would abort the leader on a single poisoned
+                // performance value (0/0 in the APSP mean), and an empty
+                // score vector must be an error, not a panic.
+                let best = scores
                     .iter()
                     .enumerate()
-                    .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap()
+                    .filter(|(_, s)| !s.is_nan())
+                    .fold(None::<(usize, f32)>, |acc, (i, &s)| match acc {
+                        Some((_, cur)) if cur <= s => acc,
+                        _ => Some((i, s)),
+                    });
+                match best {
+                    Some((i, _)) => i,
+                    None => bail!(
+                        "no valid placement score ({} agents, all scores NaN or none returned)",
+                        self.agents.len()
+                    ),
+                }
             }
         };
         self.member[choice] = 1.0;
@@ -203,5 +216,38 @@ mod tests {
         let b = backend();
         let mut s = PlacementScheduler::new(&b, PlacementPolicy::PerfValue, &[], 1);
         assert!(s.place().is_err());
+    }
+
+    #[test]
+    fn perf_value_skips_nan_scores() {
+        // A poisoned monitor sample (NaN perf value) contaminates the
+        // NaN agent's own score through the APSP mean.  Before the
+        // total-order fold this panicked in `partial_cmp().unwrap()`;
+        // now the NaN agent is skipped and a valid one wins.
+        let b = backend();
+        let mut s = PlacementScheduler::new(
+            &b,
+            PlacementPolicy::PerfValue,
+            &agents(&[f64::NAN, 2.0, 3.0]),
+            1,
+        );
+        s.seed_member(AgentId(2));
+        let a = s.place().unwrap();
+        assert_ne!(a, AgentId(1), "NaN-scored agent must never win placement");
+    }
+
+    #[test]
+    fn perf_value_all_nan_errors_instead_of_panicking() {
+        // Every score NaN (no members, so each score sums a NaN path):
+        // a proper error naming the condition, not a process abort.
+        let b = backend();
+        let mut s = PlacementScheduler::new(
+            &b,
+            PlacementPolicy::PerfValue,
+            &agents(&[f64::NAN, f64::NAN]),
+            1,
+        );
+        let err = s.place().expect_err("all-NaN scores must error");
+        assert!(format!("{err:#}").contains("NaN"), "{err:#}");
     }
 }

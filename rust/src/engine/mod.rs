@@ -554,6 +554,12 @@ impl<P: Clone + Send + 'static> Engine<P> {
         self.queues.is_empty()
     }
 
+    /// Pending event-queue depth (local + remote), the live counterpart
+    /// of the `max_queue_len` stat — telemetry reads it per window.
+    pub fn queue_len(&self) -> usize {
+        self.queues.len()
+    }
+
     /// Lifecycle state of a hosted LP (None if not hosted here).
     pub fn lp_state(&self, lp: LpId) -> Option<LpState> {
         self.lp_index

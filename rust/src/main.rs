@@ -59,10 +59,10 @@ fn print_help() {
 USAGE:
   dsim run <config.json> [--results out.jsonl]
   dsim scenario validate <file.json> [--set path=value ...]
-  dsim scenario run      <file.json> [--set path=value ...] [--results out.jsonl]
-  dsim scenario launch   <file.json> [--set path=value ...] [--results out.jsonl]
+  dsim scenario run      <file.json> [--set path=value ...] [--results out.jsonl] [--watch]
+  dsim scenario launch   <file.json> [--set path=value ...] [--results out.jsonl] [--watch]
                          [--report-on-abort out.json]
-  dsim scenario sweep    <file.json> [--set path=value ...]
+  dsim scenario sweep    <file.json> [--set path=value ...] [--parallel n] [--out corpus.json|.csv]
   dsim demo
   dsim sweep-bandwidth <mbps> [<mbps> ...]
   dsim agent --me <id> --bind <addr> --peers <id=addr,id=addr,...>
@@ -73,7 +73,7 @@ USAGE:
              [--writer-queue-frames adaptive|fixed(N)|n]
              [--window-budget adaptive|fixed(N)|fixed(inf)]
              [--window-budget-min n] [--window-budget-max n]
-             [--heartbeat-ms n]
+             [--heartbeat-ms n] [--telemetry-windows n]
              [--connect-timeout-ms n] [--connect-backoff-ms n]
              [--ckpt-dir dir] [--restore ckpt] [--launch-attempt n]
              [--faults json]
@@ -85,6 +85,15 @@ examples/scenarios/ and the `dsim::scenario` module docs for the schema.
 `scenario launch` runs a tcp scenario as a real multi-process fleet
 (one `dsim agent` process per agent, leader-side liveness); its result
 fingerprint matches `scenario run` on the same file.
+
+With `deploy.telemetry_windows > 0`, agents stream live telemetry
+snapshots to the leader every N executed windows; `--watch` renders
+them as a GVT/LVT-lag/wire-rate status line on stderr.  `scenario
+sweep --parallel n` runs independent sweep points on a worker pool;
+`--out` writes the grid as a machine-readable corpus (JSON, or CSV if
+the path ends in .csv) keyed by scenario + point fingerprint, with no
+wall-clock fields — a parallel sweep's corpus is byte-identical to a
+sequential one.
 "
     );
 }
@@ -151,9 +160,33 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
     let mut sets: Vec<(String, String)> = Vec::new();
     let mut results_path: Option<String> = None;
     let mut abort_report: Option<String> = None;
+    let mut watch = false;
+    let mut parallel: usize = 1;
+    let mut corpus_path: Option<String> = None;
     let mut i = 2;
     while i < args.len() {
         match args[i].as_str() {
+            "--watch" => {
+                watch = true;
+                i += 1;
+            }
+            "--parallel" => {
+                let n = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--parallel needs a worker count"))?;
+                parallel = n
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--parallel expects a number, got '{n}'"))?;
+                anyhow::ensure!(parallel >= 1, "--parallel needs at least 1 worker");
+                i += 2;
+            }
+            "--out" => {
+                let out = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--out needs a path"))?;
+                corpus_path = Some(out.clone());
+                i += 2;
+            }
             "--set" => {
                 let kv = args
                     .get(i + 1)
@@ -181,7 +214,7 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
             other => {
                 return Err(anyhow::anyhow!(
                     "unknown argument '{other}' (expected --set path=value, --results out.jsonl, \
-                     or --report-on-abort out.json)"
+                     --report-on-abort out.json, --watch, --parallel n, or --out corpus.json)"
                 ))
             }
         }
@@ -191,6 +224,12 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
     }
     if abort_report.is_some() && sub != "launch" {
         anyhow::bail!("--report-on-abort only applies to `dsim scenario launch`");
+    }
+    if watch && sub != "run" && sub != "launch" {
+        anyhow::bail!("--watch only applies to `dsim scenario run` and `dsim scenario launch`");
+    }
+    if (parallel != 1 || corpus_path.is_some()) && sub != "sweep" {
+        anyhow::bail!("--parallel and --out only apply to `dsim scenario sweep`");
     }
 
     match sub {
@@ -226,11 +265,12 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
                 // coordinated checkpoints + restart per the deploy block.
                 let opts = scenario::LaunchOptions {
                     report_on_abort: abort_report.as_deref().map(Into::into),
+                    watch,
                     ..Default::default()
                 };
                 scenario::launch(&compiled, &opts)?
             } else {
-                compiled.run()?
+                compiled.run_with(watch)?
             };
             for o in &outcomes {
                 println!("{}", o.row());
@@ -253,23 +293,40 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
         "sweep" => {
             let doc = scenario::load_doc(Path::new(path), &sets)?;
             let points = scenario::sweep_points(&doc)?;
+            let name = doc
+                .get("name")
+                .and_then(dsim::util::json::Json::as_str)
+                .unwrap_or("scenario")
+                .to_string();
+            let results = scenario::run_points(&points, parallel)?;
             println!("point,context,wall_s,events,makespan_s,jobs,transfers,fingerprint");
-            for point in points {
-                let compiled = scenario::compile(&point.doc)
-                    .map_err(|e| anyhow::anyhow!("point '{}': {e:#}", point.label))?;
-                for o in compiled.run()? {
+            for r in &results {
+                for o in &r.outcomes {
                     println!(
                         "{label},{ctx},{wall:.4},{events},{makespan:.2},{jobs},{transfers},{fp}",
-                        label = point.label,
+                        label = r.label,
                         ctx = o.context,
                         wall = o.wall_s,
                         events = o.events,
                         makespan = o.makespan_s,
                         jobs = o.jobs,
                         transfers = o.transfers,
-                        fp = compiled.fingerprint,
+                        fp = r.point_fingerprint,
                     );
                 }
+            }
+            if let Some(out) = &corpus_path {
+                // Machine-readable corpus, keyed by scenario + point
+                // fingerprint; no wall-clock fields, so `--parallel N`
+                // writes the same bytes a sequential sweep does.
+                let text = if out.ends_with(".csv") {
+                    scenario::corpus_csv(&name, &results)
+                } else {
+                    format!("{}\n", scenario::corpus_json(&name, &results))
+                };
+                std::fs::write(Path::new(out), text)
+                    .map_err(|e| anyhow::anyhow!("write {out}: {e}"))?;
+                println!("sweep corpus ({} points) saved to {out}", results.len());
             }
             Ok(())
         }
@@ -353,6 +410,12 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
     // Liveness heartbeat period toward the leader; 0 disables (the
     // in-process default — `scenario launch` always sets it).
     let heartbeat_ms: u64 = get("--heartbeat-ms")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0);
+    // Live-telemetry cadence in executed windows (0 disables; forwarded
+    // by `scenario launch` when the deploy enables it).
+    let telemetry_windows: u64 = get("--telemetry-windows")
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(0);
@@ -450,6 +513,7 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         wire_batch,
         budget,
         heartbeat_ms,
+        telemetry_windows,
     };
     println!("agent {me} listening on {bind}");
     let mut runtime = AgentRuntime::new(cfg, transport, backend);

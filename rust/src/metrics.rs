@@ -8,10 +8,13 @@ use std::collections::{BTreeMap, HashMap};
 use std::io::Write;
 use std::path::Path;
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::transport::TelemetrySnapshot;
 use crate::util::json::Json;
+use crate::util::{AgentId, ContextId};
 
 /// A typed record published by an LP during a run.
 #[derive(Clone, Debug, PartialEq)]
@@ -183,6 +186,130 @@ impl Default for ResultPool {
 }
 
 // ---------------------------------------------------------------------------
+// Live fleet watch view
+// ---------------------------------------------------------------------------
+
+/// Leader-side renderer for the `--watch` view: folds the fleet's
+/// [`TelemetrySnapshot`] stream and proven-GVT updates into a compact
+/// stderr line (GVT progress, per-agent LVT lag, wire rates), throttled
+/// so a chatty fleet cannot flood the terminal.  Display only — it never
+/// feeds back into the run, so fingerprints are unaffected.
+pub struct TelemetryWatch {
+    started: Instant,
+    last_render: Option<Instant>,
+    gvt: BTreeMap<ContextId, f64>,
+    agents: BTreeMap<AgentId, (Instant, TelemetrySnapshot)>,
+    /// Previous `(arrival, wire_bytes, wire_frames)` per agent, for rates.
+    prev_wire: BTreeMap<AgentId, (Instant, u64, u64)>,
+}
+
+const WATCH_RENDER_EVERY: Duration = Duration::from_millis(200);
+
+impl TelemetryWatch {
+    pub fn new() -> Self {
+        TelemetryWatch {
+            started: Instant::now(),
+            last_render: None,
+            gvt: BTreeMap::new(),
+            agents: BTreeMap::new(),
+            prev_wire: BTreeMap::new(),
+        }
+    }
+
+    /// Fold one agent snapshot into the view and maybe refresh the line.
+    pub fn on_snapshot(&mut self, _ctx: ContextId, from: AgentId, snap: &TelemetrySnapshot) {
+        let now = Instant::now();
+        if let Some((at, prev)) = self.agents.get(&from) {
+            self.prev_wire
+                .insert(from, (*at, prev.wire_bytes, prev.wire_frames));
+        }
+        self.agents.insert(from, (now, snap.clone()));
+        self.maybe_render(now);
+    }
+
+    /// Record a freshly-proven GVT bound and maybe refresh the line.
+    pub fn on_gvt(&mut self, ctx: ContextId, gvt: f64) {
+        self.gvt.insert(ctx, gvt);
+        self.maybe_render(Instant::now());
+    }
+
+    fn maybe_render(&mut self, now: Instant) {
+        if let Some(last) = self.last_render {
+            if now.duration_since(last) < WATCH_RENDER_EVERY {
+                return;
+            }
+        }
+        self.last_render = Some(now);
+        eprintln!("{}", self.render_line(now));
+    }
+
+    /// One compact status line; factored out so tests can exercise the
+    /// formatting without a terminal.
+    fn render_line(&self, now: Instant) -> String {
+        let gvt_max = self.gvt.values().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut lvt_min = f64::INFINITY;
+        let mut lvt_max = f64::NEG_INFINITY;
+        let mut queued = 0u64;
+        let mut qd = 0u64;
+        let mut qh = 0u64;
+        let mut bytes_rate = 0.0f64;
+        let mut frames_rate = 0.0f64;
+        for (a, (at, s)) in &self.agents {
+            lvt_min = lvt_min.min(s.lvt_s);
+            lvt_max = lvt_max.max(s.lvt_s);
+            queued += s.events_queued;
+            qd = qd.max(s.queue_depth);
+            qh = qh.max(s.queue_highwater);
+            if let Some((prev_at, prev_bytes, prev_frames)) = self.prev_wire.get(a) {
+                let dt = at.duration_since(*prev_at).as_secs_f64();
+                if dt > 0.0 {
+                    bytes_rate += (s.wire_bytes.saturating_sub(*prev_bytes)) as f64 / dt;
+                    frames_rate += (s.wire_frames.saturating_sub(*prev_frames)) as f64 / dt;
+                }
+            }
+        }
+        let mut line = format!("watch +{:5.1}s", now.duration_since(self.started).as_secs_f64());
+        if gvt_max.is_finite() {
+            line.push_str(&format!(" gvt={gvt_max:.3}s"));
+        }
+        if !self.agents.is_empty() {
+            line.push_str(&format!(
+                " agents={} lvt={:.3}..{:.3}s",
+                self.agents.len(),
+                lvt_min,
+                lvt_max
+            ));
+            if gvt_max.is_finite() {
+                line.push_str(&format!(" lag={:.3}s", (lvt_max - gvt_max).max(0.0)));
+            }
+            line.push_str(&format!(" queued={queued} q={qd}/{qh}"));
+            line.push_str(&format!(
+                " wire={}/s {:.0}fr/s",
+                fmt_bytes(bytes_rate),
+                frames_rate
+            ));
+        }
+        line
+    }
+}
+
+impl Default for TelemetryWatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn fmt_bytes(b: f64) -> String {
+    if b >= 1_048_576.0 {
+        format!("{:.1}MiB", b / 1_048_576.0)
+    } else if b >= 1024.0 {
+        format!("{:.1}KiB", b / 1024.0)
+    } else {
+        format!("{b:.0}B")
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Summary statistics helpers (bench reporting)
 // ---------------------------------------------------------------------------
 
@@ -291,6 +418,30 @@ mod tests {
         assert_eq!(q.len(), 2);
         assert_eq!(q.of_kind("a")[0].data.get("x").unwrap().as_f64(), Some(1.5));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn watch_line_folds_fleet_state() {
+        let mut w = TelemetryWatch::new();
+        let mk = |lvt: f64, bytes: u64, frames: u64| TelemetrySnapshot {
+            windows: 4,
+            lvt_s: lvt,
+            budget: 64,
+            queue_depth: 1,
+            queue_highwater: 3,
+            wire_bytes: bytes,
+            wire_frames: frames,
+            events_queued: 5,
+        };
+        w.on_snapshot(ContextId(0), AgentId(1), &mk(2.0, 1024, 4));
+        w.on_snapshot(ContextId(0), AgentId(2), &mk(2.5, 2048, 8));
+        w.on_gvt(ContextId(0), 1.5);
+        let line = w.render_line(Instant::now());
+        assert!(line.contains("agents=2"), "{line}");
+        assert!(line.contains("gvt=1.500s"), "{line}");
+        assert!(line.contains("lvt=2.000..2.500s"), "{line}");
+        assert!(line.contains("lag=1.000s"), "{line}");
+        assert!(line.contains("queued=10 q=1/3"), "{line}");
     }
 
     #[test]

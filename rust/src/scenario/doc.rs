@@ -251,9 +251,10 @@ fn substitute(
 // Section parsers
 // ---------------------------------------------------------------------------
 
-const DEPLOY_KEYS: [&str; 23] = [
+const DEPLOY_KEYS: [&str; 24] = [
     "heartbeat_ms",
     "checkpoint_windows",
+    "telemetry_windows",
     "on_failure",
     "connect_timeout_ms",
     "connect_backoff_ms",
@@ -341,6 +342,7 @@ fn parse_deploy(j: &Json, path: &str) -> Result<(RunTransport, DeployConfig)> {
         heartbeat_ms: usize_knob("heartbeat_ms", d.heartbeat_ms as usize)? as u64,
         checkpoint_windows: usize_knob("checkpoint_windows", d.checkpoint_windows as usize)?
             as u64,
+        telemetry_windows: usize_knob("telemetry_windows", d.telemetry_windows as usize)? as u64,
         on_failure: str_knob("on_failure", &d.on_failure.to_string())?
             .parse()
             .map_err(|e| anyhow!("at {path}.on_failure: {e}"))?,

@@ -72,13 +72,16 @@ pub struct LaunchOptions {
     /// window execution, or a busy agent reads as a dead one.
     pub liveness_deadline: Option<Duration>,
     /// Root directory for coordinated checkpoints; the fleet writes
-    /// under `<root>/<scenario fingerprint>/`.  Defaults to
+    /// under `<root>/<scenario fingerprint>-<run id>/`.  Defaults to
     /// `$TMPDIR/dsim-ckpt`.
     pub ckpt_root: Option<PathBuf>,
     /// Write the partial [`FleetAbort`] report as JSON here when the
     /// run aborts for good (`--report-on-abort`).  Best-effort: a write
     /// failure is logged, never masks the abort itself.
     pub report_on_abort: Option<PathBuf>,
+    /// Render the live watch view to stderr while the fleet runs
+    /// (`--watch`).  Display only — fingerprints are unaffected.
+    pub watch: bool,
 }
 
 /// Owns a spawned agent process and guarantees it dies with the handle:
@@ -115,6 +118,10 @@ pub struct LaunchedFleet {
     ids: Vec<AgentId>,
     children: Arc<Mutex<Vec<(AgentId, KillOnDrop)>>>,
     deadline: Duration,
+    /// Launch-unique id keying the checkpoint directory; restart
+    /// attempts reuse it so a respawned fleet finds the snapshots the
+    /// previous attempt committed.
+    run_id: String,
 }
 
 impl LaunchedFleet {
@@ -180,14 +187,26 @@ fn check_hosts(hosts: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Where a fleet's coordinated checkpoints live: a per-scenario
-/// directory keyed by the scenario fingerprint, so a restarted fleet
-/// finds its own files and different scenarios never collide.
-fn checkpoint_dir(sc: &CompiledScenario, opts: &LaunchOptions) -> PathBuf {
+/// Where a fleet's coordinated checkpoints live: a directory keyed by
+/// the scenario fingerprint *and* a per-launch unique run id.  The
+/// fingerprint alone is not enough — two concurrent launches of the
+/// same scenario would read each other's snapshots and restore a
+/// mixed-provenance state.  The leader picks the run id once per
+/// launch and reuses it across restart attempts (a restarted fleet
+/// must find the files the previous attempt committed).
+fn checkpoint_dir(sc: &CompiledScenario, opts: &LaunchOptions, run_id: &str) -> PathBuf {
     opts.ckpt_root
         .clone()
         .unwrap_or_else(|| std::env::temp_dir().join("dsim-ckpt"))
-        .join(&sc.fingerprint)
+        .join(format!("{}-{run_id}", sc.fingerprint))
+}
+
+/// Fresh launch-unique run id: pid + process-wide counter, so
+/// concurrent launches never collide whether they share a leader
+/// process or not.
+fn fresh_run_id() -> String {
+    static NEXT: crate::util::ids::IdGen = crate::util::ids::IdGen::new();
+    format!("{}-{}", std::process::id(), NEXT.next())
 }
 
 /// Reserve localhost ports for the whole fleet, build the leader's
@@ -196,7 +215,7 @@ fn checkpoint_dir(sc: &CompiledScenario, opts: &LaunchOptions) -> PathBuf {
 /// for the children to rebind; the configurable connect retry window
 /// (`deploy.connect_timeout_ms`) covers the handover.
 pub fn spawn_fleet(sc: &CompiledScenario, opts: &LaunchOptions) -> Result<LaunchedFleet> {
-    spawn_fleet_attempt(sc, opts, 1, None)
+    spawn_fleet_attempt(sc, opts, 1, None, fresh_run_id())
 }
 
 /// [`spawn_fleet`] parameterized for restarts: `attempt` numbers the
@@ -208,6 +227,7 @@ fn spawn_fleet_attempt(
     opts: &LaunchOptions,
     attempt: u64,
     restore: Option<u64>,
+    run_id: String,
 ) -> Result<LaunchedFleet> {
     if sc.transport != RunTransport::Tcp {
         bail!("scenario launch needs deploy.transport = tcp (got {})", sc.transport);
@@ -265,7 +285,7 @@ fn spawn_fleet_attempt(
         None => std::env::current_exe().context("locate dsim binary for agent spawn")?,
     };
     let budget = sc.deploy.budget_spec();
-    let ckpt_dir = checkpoint_dir(sc, opts);
+    let ckpt_dir = checkpoint_dir(sc, opts, &run_id);
     let faults_json = (!sc.faults.is_empty()).then(|| sc.faults.to_json().to_string());
     let mut children = Vec::with_capacity(sc.deploy.agents);
     for &a in &ids[1..] {
@@ -295,6 +315,9 @@ fn spawn_fleet_attempt(
         if !sc.deploy.wire_batch {
             cmd.arg("--no-wire-batch");
         }
+        if sc.deploy.telemetry_windows > 0 {
+            cmd.args(["--telemetry-windows", &sc.deploy.telemetry_windows.to_string()]);
+        }
         if sc.deploy.checkpoint_windows > 0 || restore.is_some() {
             cmd.arg("--ckpt-dir").arg(&ckpt_dir);
         }
@@ -315,6 +338,7 @@ fn spawn_fleet_attempt(
         ids: ids[1..].to_vec(),
         children: Arc::new(Mutex::new(children)),
         deadline,
+        run_id,
     })
 }
 
@@ -394,6 +418,7 @@ pub fn run_launched(
                     checkpoint_windows: sc.deploy.checkpoint_windows,
                     ckpt_log: Some(Arc::clone(&ckpt_log)),
                     resume_from,
+                    watch: opts.watch,
                 },
             )
         });
@@ -416,7 +441,7 @@ pub fn run_launched(
                         None => "no committed checkpoint — from the beginning".to_string(),
                     }
                 );
-                fleet = spawn_fleet_attempt(sc, opts, attempt, restore)?;
+                fleet = spawn_fleet_attempt(sc, opts, attempt, restore, fleet.run_id.clone())?;
                 continue;
             }
             Err(abort) => {
@@ -429,6 +454,11 @@ pub fn run_launched(
                 return Err(anyhow!("{abort}"));
             }
         };
+        // The run completed: its checkpoints can never be resumed from
+        // again, so reclaim the per-launch directory.
+        if sc.deploy.checkpoint_windows > 0 {
+            let _ = std::fs::remove_dir_all(checkpoint_dir(sc, opts, &fleet.run_id));
+        }
         let windows: u64 = out.stats.iter().map(|(_, s)| s.windows).sum();
         return Ok(vec![ScenarioOutcome {
             context: ctx.name.clone(),
@@ -442,6 +472,7 @@ pub fn run_launched(
             fingerprint: out.fingerprint,
             scenario_fingerprint: sc.fingerprint.clone(),
             pool: Some(out.pool),
+            telemetry: out.telemetry,
         }]);
     }
 }
@@ -465,5 +496,41 @@ mod tests {
         check_hosts(&hosts).unwrap();
         let err = check_hosts(&[String::from("db.internal:22")]).unwrap_err();
         assert!(format!("{err:#}").contains("not supported yet"), "{err:#}");
+    }
+
+    #[test]
+    fn concurrent_launches_get_distinct_checkpoint_dirs() {
+        // Regression: two concurrent launches of the *same* scenario used
+        // to share `<root>/<scenario fingerprint>/` and overwrite each
+        // other's snapshots; the per-launch run id now keeps them apart
+        // while restart attempts (which reuse the id) still find theirs.
+        let doc = crate::util::json::Json::parse(
+            r#"{"name": "t", "deploy": {"agents": 2},
+                "contexts": [{"name": "c", "grid": {"preset": "two-center"}}]}"#,
+        )
+        .unwrap();
+        let sc = super::super::compile(&doc).unwrap();
+        let opts = LaunchOptions::default();
+        let a = fresh_run_id();
+        let b = fresh_run_id();
+        assert_ne!(a, b, "run ids must be launch-unique within a process");
+        let da = checkpoint_dir(&sc, &opts, &a);
+        let db = checkpoint_dir(&sc, &opts, &b);
+        assert_ne!(
+            da, db,
+            "same-scenario launches must not share a checkpoint directory"
+        );
+        assert_eq!(
+            checkpoint_dir(&sc, &opts, &a),
+            da,
+            "restart attempts reusing the run id must resolve the same directory"
+        );
+        for d in [&da, &db] {
+            let name = d.file_name().unwrap().to_string_lossy();
+            assert!(
+                name.starts_with(&format!("{}-", sc.fingerprint)),
+                "directory must stay keyed by scenario fingerprint: {name}"
+            );
+        }
     }
 }

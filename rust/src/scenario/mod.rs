@@ -57,6 +57,7 @@
 //! | `probe_fallback_ms` | GVT probe fallback cadence (2) |
 //! | `heartbeat_ms` | agent liveness heartbeat period toward the leader, 0 = off (0; `scenario launch` defaults its fleets to 250) |
 //! | `checkpoint_windows` | coordinated checkpoint cadence for `scenario launch` fleets, in executed windows — every time any agent's window count crosses another multiple, the leader drives a barrier at a globally quiescent window boundary and every agent serializes its full engine state to disk; 0 = off (0) |
+//! | `telemetry_windows` | live-telemetry cadence, in executed windows — every time an agent's window count crosses another multiple, it streams one snapshot (LVT, window budget, writer-queue occupancy, wire bytes/frames, event-queue depth) to the leader, which folds the per-agent time-series into the run report and renders `--watch` from it; virtual cadence, so fingerprints are bit-identical with telemetry on or off; 0 = off (0) |
 //! | `on_failure` | `abort` \| `restart` — what the launch leader does when a fleet member dies mid-run: tear the fleet down (default), or respawn it, roll every member back to the latest committed checkpoint (from scratch if none), and resume (abort) |
 //! | `connect_timeout_ms` | total time an agent retries a TCP connect to an unreachable peer, with exponential backoff (5000) |
 //! | `connect_backoff_ms` | initial connect-retry backoff, doubling per attempt up to 1 s (100) |
@@ -154,7 +155,8 @@ pub use launch::{
     DEFAULT_LAUNCH_HEARTBEAT_MS, MAX_RESTART_ATTEMPTS,
 };
 pub use sweep::{
-    apply_sets, get_path, point_fingerprint, set_path, sweep_points, without_sweep, SweepPoint,
+    apply_sets, corpus_csv, corpus_json, get_path, point_fingerprint, run_points, set_path,
+    sweep_points, without_sweep, PointResult, SweepPoint,
 };
 
 use crate::components::{build_component, BuildCtx};
@@ -237,6 +239,10 @@ pub struct ScenarioOutcome {
     pub scenario_fingerprint: String,
     /// Published records (both transports collect them).
     pub pool: Option<ResultPool>,
+    /// Per-agent live-telemetry series in emission order (empty unless
+    /// `deploy.telemetry_windows > 0`; in-proc and tcp fleets both
+    /// collect it).  Never part of the determinism fingerprint.
+    pub telemetry: Vec<(crate::util::AgentId, Vec<crate::transport::TelemetrySnapshot>)>,
 }
 
 impl ScenarioOutcome {
@@ -390,6 +396,14 @@ impl CompiledScenario {
     /// Run the scenario to completion on its declared transport and
     /// return one outcome per context.
     pub fn run(&self) -> Result<Vec<ScenarioOutcome>> {
+        self.run_with(false)
+    }
+
+    /// [`run`](Self::run) with the live watch view toggled (`--watch`):
+    /// the leader renders GVT progress, per-agent LVT lag and wire rates
+    /// to stderr as telemetry arrives.  Display only — results and
+    /// fingerprints are identical either way.
+    pub fn run_with(&self, watch: bool) -> Result<Vec<ScenarioOutcome>> {
         self.preflight()?;
         match self.transport {
             RunTransport::InProc => {
@@ -398,7 +412,7 @@ impl CompiledScenario {
                     .iter()
                     .map(|c| c.generated.clone())
                     .collect();
-                let reports = self.deployment().run_many(scenarios)?;
+                let reports = self.deployment().watch(watch).run_many(scenarios)?;
                 Ok(self
                     .contexts
                     .iter()
@@ -412,7 +426,7 @@ impl CompiledScenario {
                     .contexts
                     .first()
                     .ok_or_else(|| anyhow!("scenario has no contexts"))?;
-                Ok(vec![self.run_tcp(ctx)?])
+                Ok(vec![self.run_tcp(ctx, watch)?])
             }
         }
     }
@@ -429,6 +443,7 @@ impl CompiledScenario {
             windows: report.windows,
             fingerprint: report.determinism_fingerprint(),
             scenario_fingerprint: report.scenario_fingerprint.clone(),
+            telemetry: report.telemetry,
             pool: Some(report.pool),
         }
     }
@@ -441,7 +456,7 @@ impl CompiledScenario {
     /// pins `deploy.placement = rr` for tcp scenarios) and uses the
     /// best-effort `ComputeBackend::auto` — `backend`, `artifacts_dir`
     /// and `probe_fallback_ms` are in-proc knobs.
-    fn run_tcp(&self, ctx: &NamedContext) -> Result<ScenarioOutcome> {
+    fn run_tcp(&self, ctx: &NamedContext, watch: bool) -> Result<ScenarioOutcome> {
         if self.deploy.agents == 0 {
             bail!("deploy.agents must be >= 1");
         }
@@ -471,6 +486,7 @@ impl CompiledScenario {
             // In-process agent threads share the leader's fate; the
             // heartbeat channel is for subprocess fleets (`launch`).
             heartbeat_ms: 0,
+            telemetry_windows: deploy.telemetry_windows,
         });
         let ids = peer_ids.clone();
         let backend = std::sync::Arc::new(ComputeBackend::auto(Path::new("artifacts")));
@@ -492,6 +508,7 @@ impl CompiledScenario {
             &ctx.generated,
             crate::testkit::DriveOptions {
                 pins,
+                watch,
                 ..Default::default()
             },
         );
@@ -512,6 +529,7 @@ impl CompiledScenario {
             fingerprint: out.fingerprint,
             scenario_fingerprint: self.fingerprint.clone(),
             pool: Some(out.pool),
+            telemetry: out.telemetry,
         })
     }
 }

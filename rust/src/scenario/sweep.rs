@@ -177,6 +177,134 @@ pub fn point_fingerprint(point: &SweepPoint) -> String {
     fingerprint(&point.doc)
 }
 
+/// One sweep point's results, ready for the corpus writers: the point
+/// label, its document fingerprint, and the outcomes its run produced.
+pub struct PointResult {
+    pub label: String,
+    pub point_fingerprint: String,
+    pub outcomes: Vec<super::ScenarioOutcome>,
+}
+
+/// Run every sweep point and return results in grid order.  With
+/// `workers > 1` the points execute on a thread pool — each point is an
+/// independent fleet (in-proc deployments are isolated by construction;
+/// tcp fleets bind OS-assigned localhost ports, so concurrent points
+/// never share a port range) and each result is slotted back into its
+/// grid position, so the returned vector — and any corpus written from
+/// it — is identical to a sequential sweep's.
+pub fn run_points(points: &[SweepPoint], workers: usize) -> Result<Vec<PointResult>> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let run_point = |point: &SweepPoint| -> Result<PointResult> {
+        let compiled = super::compile(&point.doc)
+            .map_err(|e| anyhow::anyhow!("point '{}': {e:#}", point.label))?;
+        let outcomes = compiled
+            .run()
+            .map_err(|e| anyhow::anyhow!("point '{}': {e:#}", point.label))?;
+        Ok(PointResult {
+            label: point.label.clone(),
+            point_fingerprint: point_fingerprint(point),
+            outcomes,
+        })
+    };
+
+    let n = points.len();
+    let workers = workers.clamp(1, n.max(1));
+    if workers == 1 {
+        return points.iter().map(run_point).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<PointResult>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let res = run_point(&points[i]);
+                *slots[i].lock().unwrap() = Some(res);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| {
+            slot.into_inner()
+                .unwrap()
+                .unwrap_or_else(|| Err(anyhow::anyhow!("sweep point {i} produced no result")))
+        })
+        .collect()
+}
+
+/// The sweep grid as one machine-readable JSON document, keyed by
+/// scenario name + per-point document fingerprint.  Deliberately
+/// excludes every wall-clock field so the corpus is a pure function of
+/// the scenario file: `sweep --parallel N` emits a byte-identical
+/// corpus to a sequential sweep (CI asserts this).
+pub fn corpus_json(scenario: &str, results: &[PointResult]) -> Json {
+    let points = results
+        .iter()
+        .map(|r| {
+            let outcomes = r
+                .outcomes
+                .iter()
+                .map(|o| {
+                    Json::obj(vec![
+                        ("context", Json::str(o.context.clone())),
+                        ("events", Json::num(o.events as f64)),
+                        ("remote_events", Json::num(o.remote_events as f64)),
+                        ("jobs", Json::num(o.jobs as f64)),
+                        ("transfers", Json::num(o.transfers as f64)),
+                        ("windows", Json::num(o.windows as f64)),
+                        ("makespan_s", Json::num(o.makespan_s)),
+                        ("fingerprint", Json::str(o.fingerprint.clone())),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![
+                ("point", Json::str(r.label.clone())),
+                ("point_fingerprint", Json::str(r.point_fingerprint.clone())),
+                ("outcomes", Json::Arr(outcomes)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("scenario", Json::str(scenario)),
+        ("points", Json::Arr(points)),
+    ])
+}
+
+/// The same corpus as CSV — one row per (point, context), same
+/// wall-clock exclusion and therefore the same byte-identity guarantee.
+pub fn corpus_csv(scenario: &str, results: &[PointResult]) -> String {
+    let mut out = String::from(
+        "scenario,point,point_fingerprint,context,events,remote_events,jobs,transfers,\
+         windows,makespan_s,fingerprint\n",
+    );
+    for r in results {
+        for o in &r.outcomes {
+            out.push_str(&format!(
+                "{scenario},{},{},{},{},{},{},{},{},{},{}\n",
+                r.label,
+                r.point_fingerprint,
+                o.context,
+                o.events,
+                o.remote_events,
+                o.jobs,
+                o.transfers,
+                o.windows,
+                o.makespan_s,
+                o.fingerprint,
+            ));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

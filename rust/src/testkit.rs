@@ -37,11 +37,12 @@ use crate::coordinator::{
     TerminationDetector, LEADER,
 };
 use crate::engine::SimTime;
-use crate::metrics::ResultPool;
+use crate::metrics::{ResultPool, TelemetryWatch};
 use crate::model::Payload;
 use crate::runtime::ComputeBackend;
 use crate::transport::{
-    ControlMsg, InProcEndpoint, InProcNetwork, NetMsg, TcpOptions, TcpTransport, Transport, Wire,
+    ControlMsg, InProcEndpoint, InProcNetwork, NetMsg, TcpOptions, TcpTransport, TelemetrySnapshot,
+    Transport, Wire,
 };
 use crate::util::{AgentId, Pcg32};
 use crate::workload::{self, GeneratedScenario};
@@ -183,6 +184,9 @@ pub struct FleetOutcome {
     pub pool: ResultPool,
     /// Final per-agent statistics (FinalStats), in arrival order.
     pub stats: Vec<(AgentId, HostStatsView)>,
+    /// Per-agent live-telemetry time-series in emission order (empty
+    /// unless the fleet ran with `telemetry_windows > 0`).
+    pub telemetry: Vec<(AgentId, Vec<TelemetrySnapshot>)>,
 }
 
 /// External per-iteration health probe for [`drive_fleet_leader`] —
@@ -232,6 +236,9 @@ pub struct DriveOptions {
     /// routes + LPs as usual, skip bootstrap (the restored event queues
     /// already contain it), roll every member back, then start.
     pub resume_from: Option<u64>,
+    /// Render the live watch view (GVT progress, per-agent LVT lag, wire
+    /// rates) to stderr as telemetry arrives.  Display only.
+    pub watch: bool,
 }
 
 impl Default for DriveOptions {
@@ -244,6 +251,7 @@ impl Default for DriveOptions {
             checkpoint_windows: 0,
             ckpt_log: None,
             resume_from: None,
+            watch: false,
         }
     }
 }
@@ -378,6 +386,10 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
     let mut remote = 0u64;
     let mut makespan = 0.0f64;
     let mut stats: Vec<(AgentId, HostStatsView)> = Vec::new();
+    // Per-agent telemetry series; each agent's snapshots arrive FIFO on
+    // its control channel, so the per-agent order is emission order.
+    let mut telemetry: BTreeMap<AgentId, Vec<TelemetrySnapshot>> = BTreeMap::new();
+    let mut watch = opts.watch.then(TelemetryWatch::new);
 
     // The whole drive runs inside one closure so any failure path can
     // fall through to the common teardown below with the state collected
@@ -462,6 +474,12 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
                     Some(NetMsg::Control(ControlMsg::AgentFailed { from, reason })) => {
                         return Err((Some(from), format!("reported fatal failure: {reason}")));
                     }
+                    Some(NetMsg::Control(ControlMsg::Telemetry { from, snap, .. })) => {
+                        if let Some(w) = watch.as_mut() {
+                            w.on_snapshot(ctx, from, &snap);
+                        }
+                        telemetry.entry(from).or_default().push(snap);
+                    }
                     _ => {}
                 }
             }
@@ -537,6 +555,9 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
                             },
                         );
                         if let Some(gvt) = detector.take_gvt() {
+                            if let Some(w) = watch.as_mut() {
+                                w.on_gvt(ctx, gvt);
+                            }
                             for &a in ids {
                                 send(
                                     a,
@@ -569,6 +590,12 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
                     }
                     Some(NetMsg::Control(ControlMsg::Result { kind, record, .. })) => {
                         pool.push(&kind, record);
+                    }
+                    Some(NetMsg::Control(ControlMsg::Telemetry { from, snap, .. })) => {
+                        if let Some(w) = watch.as_mut() {
+                            w.on_snapshot(ctx, from, &snap);
+                        }
+                        telemetry.entry(from).or_default().push(snap);
                     }
                     _ => {}
                 }
@@ -633,6 +660,12 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
                         Some(NetMsg::Control(ControlMsg::Result { kind, record, .. })) => {
                             pool.push(&kind, record);
                         }
+                        Some(NetMsg::Control(ControlMsg::Telemetry { from, snap, .. })) => {
+                            if let Some(w) = watch.as_mut() {
+                                w.on_snapshot(ctx, from, &snap);
+                            }
+                            telemetry.entry(from).or_default().push(snap);
+                        }
                         _ => {}
                     }
                     if counts.len() == ids.len() {
@@ -693,6 +726,12 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
                         Some(NetMsg::Control(ControlMsg::Result { kind, record, .. })) => {
                             pool.push(&kind, record);
                         }
+                        Some(NetMsg::Control(ControlMsg::Telemetry { from, snap, .. })) => {
+                            if let Some(w) = watch.as_mut() {
+                                w.on_snapshot(ctx, from, &snap);
+                            }
+                            telemetry.entry(from).or_default().push(snap);
+                        }
                         _ => {}
                     }
                 }
@@ -745,6 +784,12 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
                 Some(NetMsg::Control(ControlMsg::Result { kind, record, .. })) => {
                     pool.push(&kind, record);
                 }
+                Some(NetMsg::Control(ControlMsg::Telemetry { from, snap, .. })) => {
+                    if let Some(w) = watch.as_mut() {
+                        w.on_snapshot(ctx, from, &snap);
+                    }
+                    telemetry.entry(from).or_default().push(snap);
+                }
                 _ => {}
             }
         }
@@ -772,6 +817,7 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
         wall_s: started.elapsed().as_secs_f64(),
         pool,
         stats,
+        telemetry: telemetry.into_iter().collect(),
     };
     match result {
         Ok(()) => Ok(outcome),

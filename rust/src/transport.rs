@@ -269,6 +269,57 @@ pub enum ControlMsg {
         from: AgentId,
         err: String,
     },
+    /// Agent -> leader: periodic live-telemetry snapshot.  Emitted every
+    /// `telemetry_windows` *executed windows* — a virtual-time cadence,
+    /// never a wall-clock timer — so enabling telemetry cannot perturb
+    /// the determinism fingerprint.  Pure monitoring: leaders fold these
+    /// into per-agent time-series; drive loops that predate the frame
+    /// ignore it via their catch-all arms.
+    Telemetry {
+        context: ContextId,
+        from: AgentId,
+        snap: TelemetrySnapshot,
+    },
+}
+
+/// One agent's live state at a window boundary (the payload of
+/// [`ControlMsg::Telemetry`]): virtual progress (LVT, executed windows),
+/// the adaptive window-budget trajectory, writer-queue occupancy, wire
+/// traffic, and pending event-queue depth.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TelemetrySnapshot {
+    /// Executed safe windows at emission time.
+    pub windows: u64,
+    /// Local virtual time in seconds.
+    pub lvt_s: f64,
+    /// Window budget (events per window) in force at emission.
+    pub budget: u64,
+    /// Writer-queue occupancy: frames currently queued across peers.
+    pub queue_depth: u64,
+    /// Writer-queue highwater mark since the run started.
+    pub queue_highwater: u64,
+    /// Cumulative wire bytes sent.
+    pub wire_bytes: u64,
+    /// Cumulative wire frames sent.
+    pub wire_frames: u64,
+    /// Pending event-queue depth (local + remote events).
+    pub events_queued: u64,
+}
+
+impl TelemetrySnapshot {
+    /// Report-side serialization (results files, `--results` JSON).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("windows", Json::num(self.windows as f64)),
+            ("lvt_s", Json::num(self.lvt_s)),
+            ("budget", Json::num(self.budget as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("queue_highwater", Json::num(self.queue_highwater as f64)),
+            ("wire_bytes", Json::num(self.wire_bytes as f64)),
+            ("wire_frames", Json::num(self.wire_frames as f64)),
+            ("events_queued", Json::num(self.events_queued as f64)),
+        ])
+    }
 }
 
 /// Everything that can travel between agents.
@@ -928,6 +979,19 @@ fn control_to_json(c: &ControlMsg) -> Json {
             ("from", Json::num(from.raw() as f64)),
             ("err", Json::str(err.clone())),
         ]),
+        Telemetry { context, from, snap } => Json::obj(vec![
+            ("k", Json::str("telem")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("from", Json::num(from.raw() as f64)),
+            ("win", Json::num(snap.windows as f64)),
+            ("lvt", Json::num(snap.lvt_s)),
+            ("budget", Json::num(snap.budget as f64)),
+            ("qd", Json::num(snap.queue_depth as f64)),
+            ("qh", Json::num(snap.queue_highwater as f64)),
+            ("wb", Json::num(snap.wire_bytes as f64)),
+            ("wf", Json::num(snap.wire_frames as f64)),
+            ("eq", Json::num(snap.events_queued as f64)),
+        ]),
     }
 }
 
@@ -1099,6 +1163,20 @@ fn control_from_json(j: &Json) -> Result<ControlMsg> {
                 .and_then(Json::as_str)
                 .context("err")?
                 .to_string(),
+        }),
+        Some("telem") => Ok(ControlMsg::Telemetry {
+            context: ctx()?,
+            from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+            snap: TelemetrySnapshot {
+                windows: j.get("win").and_then(Json::as_u64).context("win")?,
+                lvt_s: j.get("lvt").and_then(Json::as_f64).context("lvt")?,
+                budget: j.get("budget").and_then(Json::as_u64).context("budget")?,
+                queue_depth: j.get("qd").and_then(Json::as_u64).context("qd")?,
+                queue_highwater: j.get("qh").and_then(Json::as_u64).context("qh")?,
+                wire_bytes: j.get("wb").and_then(Json::as_u64).context("wb")?,
+                wire_frames: j.get("wf").and_then(Json::as_u64).context("wf")?,
+                events_queued: j.get("eq").and_then(Json::as_u64).context("eq")?,
+            },
         }),
         _ => bail!("bad control msg {j}"),
     }
@@ -1501,6 +1579,19 @@ fn control_to_bin(out: &mut Vec<u8>, c: &ControlMsg) {
             bin::put_u64(out, from.raw());
             bin::put_str(out, err);
         }
+        Telemetry { context, from, snap } => {
+            out.push(23);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, from.raw());
+            bin::put_u64(out, snap.windows);
+            bin::put_f64(out, snap.lvt_s);
+            bin::put_u64(out, snap.budget);
+            bin::put_u64(out, snap.queue_depth);
+            bin::put_u64(out, snap.queue_highwater);
+            bin::put_u64(out, snap.wire_bytes);
+            bin::put_u64(out, snap.wire_frames);
+            bin::put_u64(out, snap.events_queued);
+        }
     }
 }
 
@@ -1642,6 +1733,20 @@ fn control_from_bin(r: &mut bin::Reader) -> Result<ControlMsg> {
             ckpt: r.u64()?,
             from: AgentId(r.u64()?),
             err: r.str()?,
+        },
+        23 => ControlMsg::Telemetry {
+            context: ContextId(r.u64()?),
+            from: AgentId(r.u64()?),
+            snap: TelemetrySnapshot {
+                windows: r.u64()?,
+                lvt_s: r.f64()?,
+                budget: r.u64()?,
+                queue_depth: r.u64()?,
+                queue_highwater: r.u64()?,
+                wire_bytes: r.u64()?,
+                wire_frames: r.u64()?,
+                events_queued: r.u64()?,
+            },
         },
         t => bail!("bad control tag {t}"),
     })
@@ -3047,6 +3152,20 @@ mod tests {
                 from: AgentId(2),
                 err: "no such checkpoint".into(),
             },
+            ControlMsg::Telemetry {
+                context: ContextId(1),
+                from: AgentId(2),
+                snap: TelemetrySnapshot {
+                    windows: 8,
+                    lvt_s: 12.5,
+                    budget: 1024,
+                    queue_depth: 3,
+                    queue_highwater: 9,
+                    wire_bytes: 4096,
+                    wire_frames: 17,
+                    events_queued: 42,
+                },
+            },
         ];
         for m in msgs {
             let j = control_to_json(&m);
@@ -3101,7 +3220,7 @@ mod tests {
 
     fn rand_control(rng: &mut Pcg32) -> ControlMsg {
         let ctx = ContextId(rng.below(4));
-        match rng.below(22) {
+        match rng.below(23) {
             0 => ControlMsg::DeployLp {
                 context: ctx,
                 lp: LpId(rng.below(64)),
@@ -3230,6 +3349,20 @@ mod tests {
                     String::new()
                 } else {
                     format!("err{}", rng.below(4))
+                },
+            },
+            21 => ControlMsg::Telemetry {
+                context: ctx,
+                from: AgentId(rng.below(8)),
+                snap: TelemetrySnapshot {
+                    windows: rng.below(10_000),
+                    lvt_s: rng.uniform(0.0, 1e5),
+                    budget: rng.below(1 << 16),
+                    queue_depth: rng.below(256),
+                    queue_highwater: rng.below(256),
+                    wire_bytes: rng.below(1 << 20),
+                    wire_frames: rng.below(10_000),
+                    events_queued: rng.below(100_000),
                 },
             },
             _ => ControlMsg::Shutdown,

@@ -60,6 +60,7 @@ fn agent_cfg_q(
         wire_batch: true,
         budget,
         heartbeat_ms: 0,
+        telemetry_windows: 0,
     }
 }
 

@@ -29,6 +29,7 @@ fn cfg(me: AgentId) -> AgentConfig {
         wire_batch: true,
         budget: WindowBudgetSpec::default(),
         heartbeat_ms: 0,
+        telemetry_windows: 0,
     }
 }
 

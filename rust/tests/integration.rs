@@ -252,6 +252,7 @@ fn unknown_peer_events_rejected_in_both_exec_modes() {
             wire_batch: true,
             budget: Default::default(),
             heartbeat_ms: 0,
+            telemetry_windows: 0,
         };
         let handle = std::thread::spawn(move || {
             let _ = AgentRuntime::new(cfg, ep, backend).run();

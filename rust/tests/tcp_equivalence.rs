@@ -35,6 +35,7 @@ fn agent_cfg(me: AgentId, workers: usize, proto: SyncProtocol, wire_batch: bool)
         wire_batch,
         budget: WindowBudgetSpec::default(),
         heartbeat_ms: 0,
+        telemetry_windows: 0,
     }
 }
 

@@ -1,0 +1,128 @@
+//! Live-telemetry determinism and the parallel-sweep results corpus.
+//!
+//! Telemetry is a virtual-time cadence (`telemetry_windows` executed
+//! windows), so turning it on must not perturb a single simulation
+//! decision: the determinism fingerprint stays bit-identical with
+//! telemetry on or off, across {in-proc, tcp} x {json, binary}.  The
+//! sweep corpus excludes every wall-clock field, so `--parallel N`
+//! must emit bytes identical to a sequential sweep — asserted here at
+//! the library level (the CLI-level check lives in CI).
+
+use dsim::coordinator::{AgentConfig, WindowBudgetSpec};
+use dsim::engine::{ExecMode, SyncProtocol};
+use dsim::scenario::{corpus_csv, corpus_json, run_points, sweep_points};
+use dsim::testkit::{drive_two_center, inproc_fleet, tcp_fleet, FLEET_AGENTS};
+use dsim::transport::{TcpOptions, WireCodec};
+use dsim::util::json::Json;
+use dsim::util::AgentId;
+
+fn cfg(me: AgentId, telemetry_windows: u64) -> AgentConfig {
+    AgentConfig {
+        me,
+        peers: FLEET_AGENTS.to_vec(),
+        lookahead: 0.05,
+        protocol: SyncProtocol::NullMessagesByDemand,
+        workers: 0,
+        exec: ExecMode::SafeWindow,
+        event_queue: Default::default(),
+        wire_batch: true,
+        budget: WindowBudgetSpec::default(),
+        heartbeat_ms: 0,
+        telemetry_windows,
+    }
+}
+
+#[test]
+fn telemetry_on_keeps_fingerprints_bit_identical_across_codecs() {
+    // Baseline: telemetry off, in-proc.  No snapshots arrive.
+    let (l, a) = inproc_fleet(|me| cfg(me, 0));
+    let baseline = drive_two_center(l, a);
+    assert!(
+        baseline.telemetry.is_empty(),
+        "telemetry off must collect no snapshots"
+    );
+
+    // Telemetry on, in-proc: same digest, non-empty series.
+    let (l, a) = inproc_fleet(|me| cfg(me, 1));
+    let on = drive_two_center(l, a);
+    assert_eq!(
+        on.fingerprint, baseline.fingerprint,
+        "telemetry must not perturb the simulation"
+    );
+    assert!(!on.telemetry.is_empty(), "cadence 1 must stream snapshots");
+
+    // Telemetry on over real sockets, both wire codecs.
+    for codec in [WireCodec::Json, WireCodec::Binary] {
+        let opts = TcpOptions {
+            codec,
+            ..TcpOptions::default()
+        };
+        let (l, a) = tcp_fleet(opts, |me| cfg(me, 1));
+        let out = drive_two_center(l, a);
+        assert_eq!(
+            out.fingerprint, baseline.fingerprint,
+            "telemetry divergence under codec={codec}"
+        );
+        assert!(!out.telemetry.is_empty(), "no snapshots under codec={codec}");
+    }
+}
+
+#[test]
+fn telemetry_series_is_per_agent_ordered_and_cadenced() {
+    let cadence = 2;
+    let (l, a) = inproc_fleet(|me| cfg(me, cadence));
+    let out = drive_two_center(l, a);
+    assert!(!out.telemetry.is_empty());
+    for (agent, series) in &out.telemetry {
+        assert!(!series.is_empty(), "{agent}: empty series");
+        for snap in series {
+            // First emission happens once the window counter crosses the
+            // cadence; the budget gauge is always a live positive value.
+            assert!(snap.windows >= cadence, "{agent}: {} windows", snap.windows);
+            assert!(snap.budget > 0, "{agent}: zero window budget");
+        }
+        // Per-sender FIFO delivery + the emission mark make each agent's
+        // series strictly increasing in executed windows.
+        for pair in series.windows(2) {
+            assert!(
+                pair[0].windows < pair[1].windows,
+                "{agent}: series not strictly increasing ({} then {})",
+                pair[0].windows,
+                pair[1].windows
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_sweep_corpus_is_byte_identical_to_sequential() {
+    let doc = Json::parse(
+        r#"{"name": "t", "deploy": {"agents": 2, "workers": 0, "protocol": "demand"},
+            "contexts": [{"name": "c", "grid": {"preset": "two-center"}}],
+            "sweep": {"deploy.workers": [0, 2], "deploy.protocol": ["demand", "eager"]}}"#,
+    )
+    .unwrap();
+    let points = sweep_points(&doc).unwrap();
+    assert_eq!(points.len(), 4);
+
+    let seq = run_points(&points, 1).unwrap();
+    let par = run_points(&points, 4).unwrap();
+
+    // Grid order is preserved regardless of worker completion order.
+    let labels: Vec<&str> = points.iter().map(|p| p.label.as_str()).collect();
+    assert_eq!(seq.iter().map(|r| r.label.as_str()).collect::<Vec<_>>(), labels);
+    assert_eq!(par.iter().map(|r| r.label.as_str()).collect::<Vec<_>>(), labels);
+
+    // The corpus writers exclude wall-clock, so the two sweeps must
+    // serialize to the same bytes in both formats.
+    assert_eq!(
+        corpus_json("t", &seq).to_string(),
+        corpus_json("t", &par).to_string(),
+        "parallel sweep JSON corpus diverged from sequential"
+    );
+    assert_eq!(
+        corpus_csv("t", &seq),
+        corpus_csv("t", &par),
+        "parallel sweep CSV corpus diverged from sequential"
+    );
+}
