@@ -505,6 +505,8 @@ fn tcp_budget_fleet(
         budget,
         heartbeat_ms: 0,
         telemetry_windows: 0,
+        trace: Default::default(),
+        trace_buffer_spans: 65536,
     })
 }
 

@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::adaptive::{WindowBudgetMode, WindowBudgetSpec};
 use crate::engine::{EventQueueKind, ExecMode, SyncProtocol};
+use crate::trace::TraceMode;
 use crate::transport::{WireCodec, WriterQueue};
 use crate::util::json::Json;
 use crate::util::AgentId;
@@ -320,6 +321,17 @@ pub struct DeployConfig {
     /// `--watch` view).  0 (default) = off.  The trigger is virtual
     /// progress, never wall clock, so results are identical either way.
     pub telemetry_windows: u64,
+    /// Dual-clock tracing mode (see [`crate::trace`]): `off` (default),
+    /// `virtual` (deterministic causal event trace), `wall` (phase
+    /// profiler + scheduling spans) or `both`.  Capture is strictly
+    /// observational — fingerprints are bit-identical with tracing on or
+    /// off — and exports as Chrome trace-event JSON via
+    /// `dsim scenario run|launch --trace out.json`.
+    pub trace: TraceMode,
+    /// Per-context span ring-buffer capacity (>= 1): tracing a
+    /// million-LP run keeps the newest N spans and counts the dropped
+    /// prefix instead of growing without bound.
+    pub trace_buffer_spans: usize,
     /// Leader policy when a fleet member fails mid-run: `abort` (default)
     /// or `restart` (respawn + roll back to the latest checkpoint).
     pub on_failure: OnFailure,
@@ -375,6 +387,9 @@ impl DeployConfig {
         if self.probe_fallback_ms == 0 {
             bail!("deploy.probe_fallback_ms must be >= 1");
         }
+        if self.trace_buffer_spans == 0 {
+            bail!("deploy.trace_buffer_spans must be >= 1");
+        }
         if self.connect_timeout_ms == 0 {
             bail!("deploy.connect_timeout_ms must be >= 1");
         }
@@ -407,6 +422,8 @@ impl Default for DeployConfig {
             heartbeat_ms: 0,
             checkpoint_windows: 0,
             telemetry_windows: 0,
+            trace: TraceMode::Off,
+            trace_buffer_spans: 65536,
             on_failure: OnFailure::Abort,
             connect_timeout_ms: crate::transport::DEFAULT_CONNECT_TIMEOUT_MS,
             connect_backoff_ms: crate::transport::DEFAULT_CONNECT_BACKOFF_MS,
@@ -548,6 +565,10 @@ impl ScenarioConfig {
                 as u64,
             telemetry_windows: get_usize(&d, "telemetry_windows", dd.telemetry_windows as usize)?
                 as u64,
+            trace: get_str(&d, "trace", &dd.trace.to_string())?
+                .parse()
+                .map_err(anyhow::Error::msg)?,
+            trace_buffer_spans: get_usize(&d, "trace_buffer_spans", dd.trace_buffer_spans)?,
             on_failure: get_str(&d, "on_failure", &dd.on_failure.to_string())?
                 .parse()
                 .map_err(anyhow::Error::msg)?,
@@ -686,6 +707,11 @@ impl ScenarioConfig {
                     (
                         "telemetry_windows",
                         Json::num(self.deploy.telemetry_windows as f64),
+                    ),
+                    ("trace", Json::str(self.deploy.trace.to_string())),
+                    (
+                        "trace_buffer_spans",
+                        Json::num(self.deploy.trace_buffer_spans as f64),
                     ),
                     ("on_failure", Json::str(self.deploy.on_failure.to_string())),
                     (

@@ -28,12 +28,18 @@ use crate::model::Payload;
 use crate::monitor::{HostSample, HostSampler, PerfWeights};
 use crate::runtime::ComputeBackend;
 use crate::space::Space;
+use crate::trace::{Phase, PhaseProfile, SpanKind, TraceMode, TraceRing, TraceSpan};
 use crate::transport::{ControlMsg, NetMsg, TelemetrySnapshot, Transport, TransportTelemetry};
 use crate::util::json::Json;
 use crate::util::{AgentId, ContextId};
 
 /// Leader's agent id by convention.
 pub const LEADER: AgentId = AgentId(0);
+
+/// Spans per `TraceChunk` control frame: small enough that a chunk stays
+/// far below any frame limit, large enough that a million-span trace
+/// ships in a few hundred frames.
+const TRACE_CHUNK_SPANS: usize = 2048;
 
 struct ContextSlot {
     engine: Engine<Payload>,
@@ -60,6 +66,11 @@ struct ContextSlot {
     /// (rounded down to the cadence), so each `telemetry_windows`
     /// crossing emits exactly one frame.
     telemetry_mark: u64,
+    /// Virtual-time spans drained from the engine each turn, capped by
+    /// `trace_buffer_spans` (drop-oldest; the drop count rides the
+    /// `TraceChunk` frames).  Shipped to the leader at `EndRun`, before
+    /// `FinalStats` on the same FIFO channel.
+    trace: TraceRing,
 }
 
 /// Per-agent configuration.
@@ -99,6 +110,15 @@ pub struct AgentConfig {
     /// virtual progress, never wall clock, so enabling telemetry cannot
     /// perturb the determinism fingerprint.
     pub telemetry_windows: u64,
+    /// Dual-clock tracing mode (default off).  `virtual`/`both` turn on
+    /// the engine's causal span capture; `wall`/`both` turn on the
+    /// wall-clock phase profiler.  Capture is strictly observational —
+    /// spans ride dedicated control frames at teardown and never touch
+    /// the data plane, so fingerprints are identical with tracing on or
+    /// off.
+    pub trace: TraceMode,
+    /// Per-context span ring capacity (see `DeployConfig`).
+    pub trace_buffer_spans: usize,
 }
 
 /// Runs an agent until `Shutdown`.  Generic over the transport so the same
@@ -150,6 +170,11 @@ pub struct AgentRuntime<T: Transport<Payload>> {
     /// Milliseconds the next outbox flush sleeps first (`delay_writer`
     /// fault; wall-clock only, results untouched).
     flush_delay_ms: u64,
+    /// Wall-clock phase histograms (`Some` only when the wall profiler
+    /// is on, so the default path never reads the clock).  Endpoint-
+    /// global like the wire counters: reported (and reset) per `EndRun`,
+    /// the leader merges across agents and contexts.
+    phases: Option<PhaseProfile>,
 }
 
 impl<T: Transport<Payload>> AgentRuntime<T> {
@@ -160,6 +185,11 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             None
         };
         let me = cfg.me;
+        let phases = if cfg.trace.wall_on() {
+            Some(PhaseProfile::default())
+        } else {
+            None
+        };
         AgentRuntime {
             cfg,
             transport,
@@ -181,6 +211,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             skip_beats: 0,
             drop_frame_armed: false,
             flush_delay_ms: 0,
+            phases,
         }
     }
 
@@ -278,12 +309,16 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             }
 
             // 1. Ingest everything queued on the transport.
+            let qp0 = self.phases.as_ref().map(|_| std::time::Instant::now());
             let mut got_any = false;
             for msg in self.transport.drain() {
                 got_any = true;
                 if !self.handle(msg) {
                     return Ok(());
                 }
+            }
+            if let (Some(prof), Some(t0)) = (self.phases.as_mut(), qp0) {
+                prof.record(Phase::QueuePop, t0.elapsed().as_micros() as u64);
             }
 
             // 2. Step every started context until it blocks or goes idle
@@ -533,6 +568,42 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                             },
                         );
                     }
+                    // Ship the context's trace before FinalStats: the
+                    // leader channel is FIFO, so the whole trace is in
+                    // hand when the stats (the report trigger) arrive.
+                    slot.trace.extend(slot.engine.drain_trace());
+                    if !slot.trace.is_empty() {
+                        let dropped = slot.trace.dropped();
+                        let spans = slot.trace.drain();
+                        for (seq, chunk) in spans.chunks(TRACE_CHUNK_SPANS).enumerate() {
+                            let _ = self.transport.send(
+                                LEADER,
+                                NetMsg::Control(ControlMsg::TraceChunk {
+                                    context,
+                                    from: self.cfg.me,
+                                    seq: seq as u64,
+                                    dropped,
+                                    spans: chunk.to_vec(),
+                                }),
+                            );
+                        }
+                    }
+                    if let Some(prof) = self.phases.as_mut() {
+                        // Endpoint-global histograms: report-and-reset so
+                        // concurrent contexts split the wall time the same
+                        // way the wire counters do (fleet total exact).
+                        let profile = std::mem::take(prof);
+                        if !profile.is_empty() {
+                            let _ = self.transport.send(
+                                LEADER,
+                                NetMsg::Control(ControlMsg::PhaseReport {
+                                    context,
+                                    from: self.cfg.me,
+                                    profile,
+                                }),
+                            );
+                        }
+                    }
                     let wire_bytes = self.take_wire_bytes_delta();
                     // Budget trajectory is genuinely per-context.  The
                     // queue telemetry is endpoint-global: send-block time
@@ -605,6 +676,19 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 };
                 if let Some(slot) = self.contexts.get_mut(&context) {
                     slot.paused = None;
+                    // A barrier is a causal point of the run: at global
+                    // quiescence its virtual time is a pure function of
+                    // the checkpoint cadence, so the span is part of the
+                    // deterministic trace.
+                    if self.cfg.trace.virtual_on() && err.is_empty() {
+                        slot.trace.push(TraceSpan {
+                            kind: SpanKind::Checkpoint,
+                            t_s: slot.engine.lvt().secs(),
+                            dur_s: 0.0,
+                            lp: 0,
+                            aux: ckpt,
+                        });
+                    }
                 }
                 let _ = self.transport.send(
                     LEADER,
@@ -670,6 +754,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             if let Some(p) = pool {
                 engine = engine.with_workers(p);
             }
+            engine.set_trace(cfg.trace);
             ContextSlot {
                 engine,
                 controller: WindowController::new(cfg.budget),
@@ -680,6 +765,7 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 reported_windows: 0,
                 paused: None,
                 telemetry_mark: 0,
+                trace: TraceRing::new(cfg.trace_buffer_spans),
             }
         })
     }
@@ -708,10 +794,16 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 // timestamp budget comes from the per-context controller:
                 // the historical fixed 16 384 by default, or the adaptive
                 // feedback loop.
+                let lp0 = self.phases.as_ref().map(|_| std::time::Instant::now());
                 let outcome = match self.contexts.get_mut(&ctx) {
                     Some(slot) => {
                         let budget = slot.controller.budget();
-                        slot.engine.advance_window(budget)
+                        let outcome = slot.engine.advance_window(budget);
+                        let spans = slot.engine.drain_trace();
+                        if !spans.is_empty() {
+                            slot.trace.extend(spans);
+                        }
+                        outcome
                     }
                     // A vanished slot here means something named a context
                     // this agent never deployed: route it through the
@@ -723,6 +815,9 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                         return false;
                     }
                 };
+                if let (Some(prof), Some(t0)) = (self.phases.as_mut(), lp0) {
+                    prof.record(Phase::LpDispatch, t0.elapsed().as_micros() as u64);
+                }
                 self.flush_outbox(ctx);
                 match outcome {
                     WindowOutcome::Processed { timestamps, .. } => {
@@ -746,7 +841,14 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 // many events).
                 for _ in 0..256 {
                     let outcome = match self.contexts.get_mut(&ctx) {
-                        Some(slot) => slot.engine.step(),
+                        Some(slot) => {
+                            let o = slot.engine.step();
+                            let spans = slot.engine.drain_trace();
+                            if !spans.is_empty() {
+                                slot.trace.extend(spans);
+                            }
+                            o
+                        }
                         None => {
                             self.local_fatal.push(format!("step on unknown {ctx}"));
                             return progressed;
@@ -812,10 +914,15 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             std::thread::sleep(Duration::from_millis(ms));
         }
         let Some(slot) = self.contexts.get_mut(&ctx) else { return };
+        let enc0 = self.phases.as_ref().map(|_| std::time::Instant::now());
         let out = slot.engine.drain_outbox();
         let space_ops = self.space.drain_outbox();
         if self.cfg.wire_batch {
             let (mut batches, results) = out.into_peer_batches();
+            if let (Some(prof), Some(t0)) = (self.phases.as_mut(), enc0) {
+                prof.record(Phase::BatchEncode, t0.elapsed().as_micros() as u64);
+            }
+            let wf0 = self.phases.as_ref().map(|_| std::time::Instant::now());
             if !space_ops.is_empty() {
                 // Fold replication into the per-peer frames (previously
                 // one `Space` frame per op per peer).  Replication reaches
@@ -873,6 +980,9 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                     }),
                 );
             }
+            if let (Some(prof), Some(t0)) = (self.phases.as_mut(), wf0) {
+                prof.record(Phase::WriterFlush, t0.elapsed().as_micros() as u64);
+            }
         } else {
             // Legacy one-frame-per-message path.  The piggybacked promise
             // on each event frame must not exceed the timestamp of any
@@ -892,6 +1002,10 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                 caps[i] = later;
                 later_min.insert(*to, later.min(ev.time));
             }
+            if let (Some(prof), Some(t0)) = (self.phases.as_mut(), enc0) {
+                prof.record(Phase::BatchEncode, t0.elapsed().as_micros() as u64);
+            }
+            let wf0 = self.phases.as_ref().map(|_| std::time::Instant::now());
             for ((to, event), cap) in out.events.into_iter().zip(caps) {
                 slot.sent += 1;
                 slot.frames += 1;
@@ -938,6 +1052,9 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
                         let _ = self.transport.send(peer, NetMsg::Space(op.clone()));
                     }
                 }
+            }
+            if let (Some(prof), Some(t0)) = (self.phases.as_mut(), wf0) {
+                prof.record(Phase::WriterFlush, t0.elapsed().as_micros() as u64);
             }
         }
     }
@@ -1027,6 +1144,10 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             .context("reported_windows")?;
         slot.paused = None;
         slot.started = false;
+        // Spans captured since the checkpoint describe a timeline the
+        // rollback just erased; restart the ring so the replayed run's
+        // trace matches a from-scratch run of the same prefix.
+        slot.trace = TraceRing::new(self.cfg.trace_buffer_spans);
         log::info!("{}: restored checkpoint {}", self.cfg.me, path.display());
         Ok(())
     }
@@ -1049,6 +1170,10 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             return;
         }
         slot.telemetry_mark = windows - windows % cadence;
+        // Fold the LISA host sample into the stream (display-only: the
+        // leader's --watch line shows host load next to sim progress).
+        // In-proc runs charge the same nominal RTT as publish_perf.
+        let host = self.sampler.sample(slot.engine.lp_count(), 0.1);
         let snap = TelemetrySnapshot {
             windows,
             lvt_s: slot.engine.lvt().secs(),
@@ -1058,6 +1183,9 @@ impl<T: Transport<Payload>> AgentRuntime<T> {
             wire_bytes,
             wire_frames: slot.frames,
             events_queued: slot.engine.queue_len() as u64,
+            cpu_load: host.cpu_load,
+            mem_used: host.mem_used,
+            rtt_ms: host.rtt_ms,
         };
         let _ = self.transport.send(
             LEADER,
@@ -1344,6 +1472,8 @@ mod tests {
             budget: WindowBudgetSpec::default(),
             heartbeat_ms: 0,
             telemetry_windows: 0,
+            trace: TraceMode::Off,
+            trace_buffer_spans: 1024,
         };
         let backend = Arc::new(ComputeBackend::auto(Path::new("artifacts")));
         AgentRuntime::new(cfg, ep, backend)

@@ -40,6 +40,9 @@ use crate::model::Payload;
 use crate::monitor::{MonitorHub, PerfWeights};
 use crate::runtime::ComputeBackend;
 use crate::metrics::TelemetryWatch;
+use crate::trace::{
+    critical_path, CriticalPath, Phase, PhaseProfile, SpanKind, TraceData, TraceMode, TraceSpan,
+};
 use crate::transport::{ControlMsg, InProcNetwork, NetMsg, TelemetrySnapshot, Transport, Wire};
 use crate::util::json::Json;
 use crate::util::{AgentId, ContextId};
@@ -115,12 +118,20 @@ pub struct RunReport {
     /// unless `deploy.telemetry_windows > 0`).  Each entry is one
     /// virtual-cadence snapshot the agent streamed mid-run.
     pub telemetry: Vec<(AgentId, Vec<TelemetrySnapshot>)>,
+    /// Dual-clock trace collected at teardown (empty unless
+    /// `deploy.trace != off`): per-agent virtual-time spans plus
+    /// wall-clock phase histograms.  Export with
+    /// [`crate::trace::write_chrome_trace`].
+    pub trace: TraceData,
+    /// Longest causal LP chain through the virtual trace (None when the
+    /// run was untraced or produced no dispatch spans).
+    pub critical_path: Option<CriticalPath>,
 }
 
 impl RunReport {
     /// One-line human summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "ctx={} wall={:.3}s makespan={:.1}s events={} remote={} sync={} jobs={} transfers={}",
             self.context,
             self.wall_s,
@@ -130,7 +141,12 @@ impl RunReport {
             self.sync_messages,
             self.jobs_completed,
             self.transfers_completed
-        )
+        );
+        if let Some(cp) = &self.critical_path {
+            line.push(' ');
+            line.push_str(&cp.summary());
+        }
+        line
     }
 
     /// Deterministic digest of the run's *virtual-time* results.  Identical
@@ -210,6 +226,12 @@ pub struct Deployment {
     /// wire rates) to stderr as telemetry arrives.  Display only — it
     /// reads folded snapshots and never feeds anything back into the run.
     watch: bool,
+    /// Watch render throttle override in milliseconds (0 = default).
+    watch_ms: u64,
+    /// Dual-clock tracing mode (off by default; see [`crate::trace`]).
+    trace_mode: TraceMode,
+    /// Per-context span ring capacity on each agent.
+    trace_buffer: usize,
 }
 
 impl Deployment {
@@ -233,6 +255,9 @@ impl Deployment {
             probe_every: Duration::from_millis(2),
             telemetry_windows: 0,
             watch: false,
+            watch_ms: 0,
+            trace_mode: TraceMode::Off,
+            trace_buffer: 65536,
         }
     }
 
@@ -257,6 +282,9 @@ impl Deployment {
             probe_every: Duration::from_millis(d.probe_fallback_ms.max(1)),
             telemetry_windows: d.telemetry_windows,
             watch: false,
+            watch_ms: 0,
+            trace_mode: d.trace,
+            trace_buffer: d.trace_buffer_spans,
         }
     }
 
@@ -351,6 +379,26 @@ impl Deployment {
         self
     }
 
+    /// Watch render throttle in milliseconds (0 keeps the default).
+    pub fn watch_ms(mut self, ms: u64) -> Self {
+        self.watch_ms = ms;
+        self
+    }
+
+    /// Dual-clock tracing mode (see [`crate::trace`]).  Strictly
+    /// observational: a traced run's fingerprint is bit-identical to the
+    /// untraced one.
+    pub fn trace(mut self, mode: TraceMode) -> Self {
+        self.trace_mode = mode;
+        self
+    }
+
+    /// Per-context span ring capacity on each agent (drop-oldest).
+    pub fn trace_buffer_spans(mut self, n: usize) -> Self {
+        self.trace_buffer = n.max(1);
+        self
+    }
+
     /// Thread a scenario content fingerprint into every [`RunReport`]
     /// this deployment produces (see [`crate::scenario`]).
     pub fn scenario_fingerprint(mut self, fp: impl Into<String>) -> Self {
@@ -419,6 +467,8 @@ impl Deployment {
                 budget: self.budget,
                 heartbeat_ms: 0,
                 telemetry_windows: self.telemetry_windows,
+                trace: self.trace_mode,
+                trace_buffer_spans: self.trace_buffer,
             };
             let backend = Arc::clone(&backend);
             handles.push(
@@ -561,12 +611,21 @@ impl Deployment {
                     ended: false,
                     pending_gvt: None,
                     telemetry: BTreeMap::new(),
+                    trace: BTreeMap::new(),
+                    trace_dropped: BTreeMap::new(),
+                    phases: BTreeMap::new(),
+                    leader_spans: Vec::new(),
                 },
             );
         }
 
         // Replay any messages that arrived during the monitor bootstrap.
-        let mut watch_view = self.watch.then(TelemetryWatch::new);
+        let mut watch_view = self
+            .watch
+            .then(|| TelemetryWatch::new().with_interval_ms(self.watch_ms));
+        // Leader-side wall profiling (ingest time) when the profiler is
+        // on; deployment-global, attributed to the first context.
+        let mut leader_phases = self.trace_mode.wall_on().then(PhaseProfile::default);
         for m in pending_msgs {
             Self::leader_ingest(&hub, &mut runs, &mut watch_view, m);
         }
@@ -619,10 +678,18 @@ impl Deployment {
             }
             // Drain; spin briefly before a short park — the leader's
             // responsiveness paces probe rounds and thus GVT latency.
+            // The LeaderRecv phase times only the busy drain, not the
+            // idle park, so the histogram reflects ingest cost.
+            let lr0 = leader_phases.as_ref().map(|_| Instant::now());
             let mut got = false;
             while let Some(msg) = leader_ep.recv_timeout(Duration::ZERO) {
                 Self::leader_ingest(&hub, &mut runs, &mut watch_view, msg);
                 got = true;
+            }
+            if let (Some(prof), Some(t0)) = (leader_phases.as_mut(), lr0) {
+                if got {
+                    prof.record(Phase::LeaderRecv, t0.elapsed().as_micros() as u64);
+                }
             }
             if !got {
                 let mut msg = None;
@@ -654,6 +721,19 @@ impl Deployment {
                     if let Some(w) = &mut watch_view {
                         w.on_gvt(*ctx, gvt);
                     }
+                    // GVT rounds are scheduling artifacts (their count and
+                    // times vary with wall-clock pacing), so they are
+                    // sched spans: wall/both mode only, never part of the
+                    // byte-identical virtual trace.
+                    if self.trace_mode.wall_on() {
+                        st.leader_spans.push(TraceSpan {
+                            kind: SpanKind::Gvt,
+                            t_s: gvt,
+                            dur_s: 0.0,
+                            lp: 0,
+                            aux: st.leader_spans.len() as u64,
+                        });
+                    }
                     for &a in &agent_ids {
                         let _ = leader_ep.send(
                             a,
@@ -684,6 +764,18 @@ impl Deployment {
         }
         for h in handles {
             let _ = h.join();
+        }
+        if let Some(w) = &mut watch_view {
+            w.finish();
+        }
+        // Leader ingest time is deployment-global; attribute it once (to
+        // the lowest context) so multi-context fleets never double count.
+        if let Some(prof) = leader_phases {
+            if !prof.is_empty() {
+                if let Some(st) = runs.values_mut().next() {
+                    st.phases.entry(LEADER).or_default().merge(&prof);
+                }
+            }
         }
 
         // --- reports -------------------------------------------------------------
@@ -740,6 +832,16 @@ impl Deployment {
             }
             let jobs = st.pool.of_kind("job").len();
             let transfers = st.pool.of_kind("transfer").len();
+            let mut span_map = st.trace;
+            if !st.leader_spans.is_empty() {
+                span_map.entry(LEADER).or_default().extend(st.leader_spans);
+            }
+            let trace = TraceData {
+                spans: span_map.into_iter().collect(),
+                dropped: st.trace_dropped.values().sum(),
+                phases: st.phases.into_iter().collect(),
+            };
+            let cp = critical_path(&trace);
             reports.push(RunReport {
                 context: ctx,
                 wall_s: st.wall_s.unwrap_or(0.0),
@@ -767,6 +869,8 @@ impl Deployment {
                 frames_skipped,
                 scenario_fingerprint: self.scenario_fp.clone(),
                 telemetry: st.telemetry.into_iter().collect(),
+                trace,
+                critical_path: cp,
                 pool: st.pool,
                 per_agent,
                 placements: placements_all[i]
@@ -851,6 +955,29 @@ impl Deployment {
                     st.final_stats.insert(from, stats);
                 }
             }
+            NetMsg::Control(ControlMsg::TraceChunk {
+                context,
+                from,
+                dropped,
+                spans,
+                ..
+            }) => {
+                // Chunks arrive in seq order on the agent's FIFO channel;
+                // `dropped` repeats on every chunk, so insert (not add).
+                if let Some(st) = runs.get_mut(&context) {
+                    st.trace.entry(from).or_default().extend(spans);
+                    st.trace_dropped.insert(from, dropped);
+                }
+            }
+            NetMsg::Control(ControlMsg::PhaseReport {
+                context,
+                from,
+                profile,
+            }) => {
+                if let Some(st) = runs.get_mut(&context) {
+                    st.phases.entry(from).or_default().merge(&profile);
+                }
+            }
             NetMsg::Control(ControlMsg::PerfSample { from, value, load }) => {
                 if let Some(sample) = crate::monitor::HostSample::from_json(&load) {
                     hub.ingest_value(from, value, sample);
@@ -874,6 +1001,15 @@ struct RunState {
     /// Per-agent telemetry snapshots in arrival order (the control
     /// channel is FIFO per agent, so arrival order is emission order).
     telemetry: BTreeMap<AgentId, Vec<TelemetrySnapshot>>,
+    /// Per-agent virtual-time spans from `TraceChunk` frames (FIFO per
+    /// agent, so concatenation preserves emission order).
+    trace: BTreeMap<AgentId, Vec<TraceSpan>>,
+    /// Ring-drop count per agent (the same value rides every chunk).
+    trace_dropped: BTreeMap<AgentId, u64>,
+    /// Wall-clock phase histograms per agent (`PhaseReport` frames).
+    phases: BTreeMap<AgentId, PhaseProfile>,
+    /// Leader-side scheduling spans (GVT rounds; wall mode only).
+    leader_spans: Vec<TraceSpan>,
 }
 
 #[cfg(test)]

@@ -54,6 +54,7 @@ pub use workers::{BatchChannel, BatchSender, LpState, WorkerPool};
 use std::collections::{BTreeMap, HashMap};
 use std::fmt;
 
+use crate::trace::{SpanKind, TraceMode, TraceSpan};
 use crate::util::json::Json;
 use crate::util::{AgentId, ContextId, LpId};
 
@@ -455,6 +456,13 @@ pub struct Engine<P> {
     scratch_groups: Vec<(LpId, Vec<Event<P>>)>,
     scratch_group_index: HashMap<LpId, usize>,
     free_event_bufs: Vec<Vec<Event<P>>>,
+    /// Virtual-time span capture (see [`crate::trace`]).  Off by default;
+    /// the agent layer enables it per the deploy trace mode and drains the
+    /// buffer into its bounded ring once per scheduler turn, so this vec
+    /// only ever holds one turn's worth of spans.  Capture is strictly
+    /// observational — no engine decision reads it.
+    trace_mode: TraceMode,
+    trace_spans: Vec<TraceSpan>,
 }
 
 /// Cap on recycled event buffers retained between batches.
@@ -497,6 +505,8 @@ impl<P: Clone + Send + 'static> Engine<P> {
             scratch_groups: Vec::new(),
             scratch_group_index: HashMap::new(),
             free_event_bufs: Vec::new(),
+            trace_mode: TraceMode::Off,
+            trace_spans: Vec::new(),
         }
     }
 
@@ -780,6 +790,7 @@ impl<P: Clone + Send + 'static> Engine<P> {
                 let chan = self.workers.as_ref().map(|_| BatchChannel::new());
                 let mut events = 0usize;
                 let mut timestamps = 0usize;
+                let mut win_start = None;
                 let mut batch = std::mem::take(&mut self.scratch_batch);
                 while timestamps < max_timestamps {
                     batch.clear();
@@ -787,6 +798,9 @@ impl<P: Clone + Send + 'static> Engine<P> {
                         break;
                     };
                     self.lvt = ts;
+                    if win_start.is_none() {
+                        win_start = Some(ts);
+                    }
                     events += batch.len();
                     timestamps += 1;
                     self.execute_batch(ts, &mut batch, chan.as_ref());
@@ -796,6 +810,20 @@ impl<P: Clone + Send + 'static> Engine<P> {
                 self.stats.windows += 1;
                 self.stats.window_timestamps += timestamps as u64;
                 self.stats.max_window_events = self.stats.max_window_events.max(events);
+                if self.trace_mode.wall_on() {
+                    if let Some(t0) = win_start {
+                        // Scheduling span: window layout depends on promise
+                        // arrival timing, so this is excluded from the
+                        // byte-identity contract (see [`crate::trace`]).
+                        self.trace_spans.push(TraceSpan {
+                            kind: SpanKind::Window,
+                            t_s: t0.secs(),
+                            dur_s: (self.lvt.secs() - t0.secs()).max(0.0),
+                            lp: self.stats.windows,
+                            aux: events as u64,
+                        });
+                    }
+                }
                 if timestamps == max_timestamps {
                     // The loop ended on the budget, not the horizon.
                     self.stats.windows_truncated += 1;
@@ -959,6 +987,18 @@ impl<P: Clone + Send + 'static> Engine<P> {
             match slot {
                 Some(mut slot) => {
                     slot.state = LpState::Ready;
+                    if self.trace_mode.virtual_on() {
+                        // Groups are sorted by LP id, so the span stream is
+                        // in canonical (ts, lp) order regardless of worker
+                        // interleaving — the byte-identity anchor.
+                        self.trace_spans.push(TraceSpan {
+                            kind: SpanKind::LpDispatch,
+                            t_s: ts.secs(),
+                            dur_s: 0.0,
+                            lp: lp_id.raw(),
+                            aux: evs.len() as u64,
+                        });
+                    }
                     jobs.push((lp_id, evs, slot));
                 }
                 None => {
@@ -1073,6 +1113,17 @@ impl<P: Clone + Send + 'static> Engine<P> {
                 self.queues.push_local(ev);
             } else {
                 self.stats.events_sent_remote += 1;
+                if self.trace_mode.virtual_on() {
+                    // Timestamped with the *delivery* time: the critical-
+                    // path walk joins chains where the event lands.
+                    self.trace_spans.push(TraceSpan {
+                        kind: SpanKind::EventSend,
+                        t_s: ev.time.secs(),
+                        dur_s: 0.0,
+                        lp: src_lp.raw(),
+                        aux: dst.raw(),
+                    });
+                }
                 self.outbox_events.push((dst_agent, ev));
             }
         }
@@ -1165,6 +1216,19 @@ impl<P: Clone + Send + 'static> Engine<P> {
         for peer in self.lvt_table.peers() {
             self.announce_to(peer, SimTime::INF);
         }
+    }
+
+    /// Select what virtual-time spans to capture (see [`crate::trace`]):
+    /// causal spans (LP dispatches, remote sends) under `virtual`/`both`,
+    /// scheduling spans (safe windows) under `wall`/`both`.
+    pub fn set_trace(&mut self, mode: TraceMode) {
+        self.trace_mode = mode;
+    }
+
+    /// Take every span recorded since the last drain (empty when tracing
+    /// is off).
+    pub fn drain_trace(&mut self) -> Vec<TraceSpan> {
+        std::mem::take(&mut self.trace_spans)
     }
 
     /// Collect and clear everything destined off-agent.
@@ -1345,6 +1409,9 @@ impl<P: Clone + Send + 'static + crate::transport::Wire> Engine<P> {
         self.outbox_events.clear();
         self.outbox_sync.clear();
         self.outbox_results.clear();
+        // Trace spans are observational side buffers, not simulation state
+        // (same category as scratch buffers): not captured, cleared here.
+        self.trace_spans.clear();
 
         let mut by_id: BTreeMap<LpId, &Json> = BTreeMap::new();
         for lj in snap.get("lps").and_then(Json::as_arr).context("lps")? {

@@ -59,6 +59,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod space;
 pub mod testkit;
+pub mod trace;
 pub mod transport;
 pub mod util;
 pub mod workload;
@@ -73,5 +74,6 @@ pub mod prelude {
     pub use crate::model::Scenario;
     pub use crate::runtime::ComputeBackend;
     pub use crate::scenario::CompiledScenario;
+    pub use crate::trace::{CriticalPath, TraceMode};
     pub use crate::transport::WireCodec;
 }

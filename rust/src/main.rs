@@ -60,8 +60,9 @@ USAGE:
   dsim run <config.json> [--results out.jsonl]
   dsim scenario validate <file.json> [--set path=value ...]
   dsim scenario run      <file.json> [--set path=value ...] [--results out.jsonl] [--watch]
+                         [--watch-ms n] [--trace out.json]
   dsim scenario launch   <file.json> [--set path=value ...] [--results out.jsonl] [--watch]
-                         [--report-on-abort out.json]
+                         [--watch-ms n] [--trace out.json] [--report-on-abort out.json]
   dsim scenario sweep    <file.json> [--set path=value ...] [--parallel n] [--out corpus.json|.csv]
   dsim demo
   dsim sweep-bandwidth <mbps> [<mbps> ...]
@@ -74,6 +75,7 @@ USAGE:
              [--window-budget adaptive|fixed(N)|fixed(inf)]
              [--window-budget-min n] [--window-budget-max n]
              [--heartbeat-ms n] [--telemetry-windows n]
+             [--trace-mode off|virtual|wall|both] [--trace-buffer-spans n]
              [--connect-timeout-ms n] [--connect-backoff-ms n]
              [--ckpt-dir dir] [--restore ckpt] [--launch-attempt n]
              [--faults json]
@@ -88,7 +90,13 @@ fingerprint matches `scenario run` on the same file.
 
 With `deploy.telemetry_windows > 0`, agents stream live telemetry
 snapshots to the leader every N executed windows; `--watch` renders
-them as a GVT/LVT-lag/wire-rate status line on stderr.  `scenario
+them as a GVT/LVT-lag/wire-rate/host-load status line on stderr
+(`--watch-ms` adjusts the render throttle).  `--trace out.json`
+records the dual-clock trace (deploy.trace, forced to `both` when the
+file leaves it off) and writes it as Chrome trace-event JSON — open it
+in Perfetto (ui.perfetto.dev) to see per-LP virtual-time spans and
+wall-clock phase histograms; fingerprints are identical with tracing
+on or off.  `scenario
 sweep --parallel n` runs independent sweep points on a worker pool;
 `--out` writes the grid as a machine-readable corpus (JSON, or CSV if
 the path ends in .csv) keyed by scenario + point fingerprint, with no
@@ -161,6 +169,8 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
     let mut results_path: Option<String> = None;
     let mut abort_report: Option<String> = None;
     let mut watch = false;
+    let mut watch_ms: u64 = 0;
+    let mut trace_path: Option<String> = None;
     let mut parallel: usize = 1;
     let mut corpus_path: Option<String> = None;
     let mut i = 2;
@@ -169,6 +179,23 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
             "--watch" => {
                 watch = true;
                 i += 1;
+            }
+            "--watch-ms" => {
+                let n = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--watch-ms needs a millisecond period"))?;
+                watch_ms = n
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--watch-ms expects a number, got '{n}'"))?;
+                anyhow::ensure!(watch_ms >= 1, "--watch-ms needs at least 1 millisecond");
+                i += 2;
+            }
+            "--trace" => {
+                let out = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--trace needs a path"))?;
+                trace_path = Some(out.clone());
+                i += 2;
             }
             "--parallel" => {
                 let n = args
@@ -214,7 +241,8 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
             other => {
                 return Err(anyhow::anyhow!(
                     "unknown argument '{other}' (expected --set path=value, --results out.jsonl, \
-                     --report-on-abort out.json, --watch, --parallel n, or --out corpus.json)"
+                     --report-on-abort out.json, --watch, --watch-ms n, --trace out.json, \
+                     --parallel n, or --out corpus.json)"
                 ))
             }
         }
@@ -225,8 +253,13 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
     if abort_report.is_some() && sub != "launch" {
         anyhow::bail!("--report-on-abort only applies to `dsim scenario launch`");
     }
-    if watch && sub != "run" && sub != "launch" {
-        anyhow::bail!("--watch only applies to `dsim scenario run` and `dsim scenario launch`");
+    if (watch || watch_ms != 0) && sub != "run" && sub != "launch" {
+        anyhow::bail!(
+            "--watch/--watch-ms only apply to `dsim scenario run` and `dsim scenario launch`"
+        );
+    }
+    if trace_path.is_some() && sub != "run" && sub != "launch" {
+        anyhow::bail!("--trace only applies to `dsim scenario run` and `dsim scenario launch`");
     }
     if (parallel != 1 || corpus_path.is_some()) && sub != "sweep" {
         anyhow::bail!("--parallel and --out only apply to `dsim scenario sweep`");
@@ -260,22 +293,49 @@ fn cmd_scenario(args: &[String]) -> anyhow::Result<()> {
         "run" | "launch" => {
             let doc = scenario::load_doc(Path::new(path), &sets)?;
             let compiled = scenario::compile(&scenario::without_sweep(&doc))?;
+            // `--trace out.json` turns tracing on when the file leaves
+            // `deploy.trace` at off; a declared mode is respected.
+            let trace_override = (trace_path.is_some() && compiled.deploy.trace.is_off())
+                .then_some(dsim::trace::TraceMode::Both);
             let outcomes = if sub == "launch" {
                 // One real OS process per agent, leader-side liveness,
                 // coordinated checkpoints + restart per the deploy block.
                 let opts = scenario::LaunchOptions {
                     report_on_abort: abort_report.as_deref().map(Into::into),
                     watch,
+                    watch_ms,
+                    trace: trace_override,
                     ..Default::default()
                 };
                 scenario::launch(&compiled, &opts)?
             } else {
-                compiled.run_with(watch)?
+                compiled.run_with_opts(scenario::RunOptions {
+                    watch,
+                    watch_ms,
+                    trace: trace_override,
+                })?
             };
             for o in &outcomes {
                 println!("{}", o.row());
             }
             println!("scenario fingerprint: {}", compiled.fingerprint);
+            if let Some(out) = &trace_path {
+                // One Chrome trace for the whole run: contexts stack as
+                // extra per-agent rows in the same file.
+                let mut data = dsim::trace::TraceData::default();
+                for o in &outcomes {
+                    data.spans.extend(o.trace.spans.iter().cloned());
+                    data.dropped += o.trace.dropped;
+                    data.phases.extend(o.trace.phases.iter().cloned());
+                }
+                let mode = trace_override.unwrap_or(compiled.deploy.trace);
+                dsim::trace::write_chrome_trace(Path::new(out), &data, mode)?;
+                let spans: usize = data.spans.iter().map(|(_, v)| v.len()).sum();
+                println!(
+                    "trace saved to {out} ({spans} spans, {} dropped) — open in ui.perfetto.dev",
+                    data.dropped
+                );
+            }
             if let Some(out) = &results_path {
                 // One file for the whole run: merge every context's pool
                 // (a per-context save would truncate its predecessors).
@@ -419,6 +479,17 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(0);
+    // Dual-clock tracing (0-cost when off; forwarded by `scenario
+    // launch` when the deploy or `--trace` enables it).
+    let trace: dsim::trace::TraceMode = get("--trace-mode")
+        .map(|s| s.parse().map_err(anyhow::Error::msg))
+        .transpose()?
+        .unwrap_or_default();
+    let trace_buffer_spans: usize = get("--trace-buffer-spans")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(65536);
+    anyhow::ensure!(trace_buffer_spans >= 1, "--trace-buffer-spans must be >= 1");
     let exec = get("--exec")
         .map(|s| s.parse().map_err(anyhow::Error::msg))
         .transpose()?
@@ -514,6 +585,8 @@ fn cmd_agent(args: &[String]) -> anyhow::Result<()> {
         budget,
         heartbeat_ms,
         telemetry_windows,
+        trace,
+        trace_buffer_spans,
     };
     println!("agent {me} listening on {bind}");
     let mut runtime = AgentRuntime::new(cfg, transport, backend);

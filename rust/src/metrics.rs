@@ -197,6 +197,7 @@ impl Default for ResultPool {
 pub struct TelemetryWatch {
     started: Instant,
     last_render: Option<Instant>,
+    render_every: Duration,
     gvt: BTreeMap<ContextId, f64>,
     agents: BTreeMap<AgentId, (Instant, TelemetrySnapshot)>,
     /// Previous `(arrival, wire_bytes, wire_frames)` per agent, for rates.
@@ -210,10 +211,19 @@ impl TelemetryWatch {
         TelemetryWatch {
             started: Instant::now(),
             last_render: None,
+            render_every: WATCH_RENDER_EVERY,
             gvt: BTreeMap::new(),
             agents: BTreeMap::new(),
             prev_wire: BTreeMap::new(),
         }
+    }
+
+    /// Override the render throttle (`--watch-ms`; 0 keeps the default).
+    pub fn with_interval_ms(mut self, ms: u64) -> Self {
+        if ms > 0 {
+            self.render_every = Duration::from_millis(ms);
+        }
+        self
     }
 
     /// Fold one agent snapshot into the view and maybe refresh the line.
@@ -235,12 +245,24 @@ impl TelemetryWatch {
 
     fn maybe_render(&mut self, now: Instant) {
         if let Some(last) = self.last_render {
-            if now.duration_since(last) < WATCH_RENDER_EVERY {
+            if now.duration_since(last) < self.render_every {
                 return;
             }
         }
         self.last_render = Some(now);
         eprintln!("{}", self.render_line(now));
+    }
+
+    /// Flush one final line unconditionally (run completion).  Without
+    /// this, the last snapshots of a short run can all land inside one
+    /// throttle window and the view would end mid-flight.
+    pub fn finish(&mut self) {
+        if self.agents.is_empty() && self.gvt.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        self.last_render = Some(now);
+        eprintln!("{} done", self.render_line(now));
     }
 
     /// One compact status line; factored out so tests can exercise the
@@ -254,12 +276,18 @@ impl TelemetryWatch {
         let mut qh = 0u64;
         let mut bytes_rate = 0.0f64;
         let mut frames_rate = 0.0f64;
+        let mut cpu_max = 0.0f64;
+        let mut mem_max = 0.0f64;
+        let mut rtt_max = 0.0f64;
         for (a, (at, s)) in &self.agents {
             lvt_min = lvt_min.min(s.lvt_s);
             lvt_max = lvt_max.max(s.lvt_s);
             queued += s.events_queued;
             qd = qd.max(s.queue_depth);
             qh = qh.max(s.queue_highwater);
+            cpu_max = cpu_max.max(s.cpu_load);
+            mem_max = mem_max.max(s.mem_used);
+            rtt_max = rtt_max.max(s.rtt_ms);
             if let Some((prev_at, prev_bytes, prev_frames)) = self.prev_wire.get(a) {
                 let dt = at.duration_since(*prev_at).as_secs_f64();
                 if dt > 0.0 {
@@ -288,6 +316,14 @@ impl TelemetryWatch {
                 fmt_bytes(bytes_rate),
                 frames_rate
             ));
+            // MonitorHub host samples folded into the stream (worst
+            // loaded host across the fleet); pre-host-sample agents send
+            // zeros, which render as an idle host rather than noise.
+            if cpu_max > 0.0 || mem_max > 0.0 {
+                line.push_str(&format!(
+                    " host cpu={cpu_max:.2} mem={mem_max:.2} rtt={rtt_max:.1}ms"
+                ));
+            }
         }
         line
     }
@@ -432,6 +468,9 @@ mod tests {
             wire_bytes: bytes,
             wire_frames: frames,
             events_queued: 5,
+            cpu_load: 0.25,
+            mem_used: 0.5,
+            rtt_ms: 1.5,
         };
         w.on_snapshot(ContextId(0), AgentId(1), &mk(2.0, 1024, 4));
         w.on_snapshot(ContextId(0), AgentId(2), &mk(2.5, 2048, 8));
@@ -442,6 +481,7 @@ mod tests {
         assert!(line.contains("lvt=2.000..2.500s"), "{line}");
         assert!(line.contains("lag=1.000s"), "{line}");
         assert!(line.contains("queued=10 q=1/3"), "{line}");
+        assert!(line.contains("host cpu=0.25 mem=0.50 rtt=1.5ms"), "{line}");
     }
 
     #[test]

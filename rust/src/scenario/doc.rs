@@ -251,10 +251,12 @@ fn substitute(
 // Section parsers
 // ---------------------------------------------------------------------------
 
-const DEPLOY_KEYS: [&str; 24] = [
+const DEPLOY_KEYS: [&str; 26] = [
     "heartbeat_ms",
     "checkpoint_windows",
     "telemetry_windows",
+    "trace",
+    "trace_buffer_spans",
     "on_failure",
     "connect_timeout_ms",
     "connect_backoff_ms",
@@ -343,6 +345,10 @@ fn parse_deploy(j: &Json, path: &str) -> Result<(RunTransport, DeployConfig)> {
         checkpoint_windows: usize_knob("checkpoint_windows", d.checkpoint_windows as usize)?
             as u64,
         telemetry_windows: usize_knob("telemetry_windows", d.telemetry_windows as usize)? as u64,
+        trace: str_knob("trace", &d.trace.to_string())?
+            .parse()
+            .map_err(|e| anyhow!("at {path}.trace: {e}"))?,
+        trace_buffer_spans: usize_knob("trace_buffer_spans", d.trace_buffer_spans)?,
         on_failure: str_knob("on_failure", &d.on_failure.to_string())?
             .parse()
             .map_err(|e| anyhow!("at {path}.on_failure: {e}"))?,

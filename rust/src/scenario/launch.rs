@@ -46,6 +46,7 @@ use crate::config::OnFailure;
 use crate::coordinator::LEADER;
 use crate::model::Payload;
 use crate::testkit::{drive_fleet_leader, CheckpointLog, DriveOptions, FleetAbort, FleetWatchdog};
+use crate::trace::{critical_path, TraceMode};
 use crate::transport::{TcpOptions, TcpTransport};
 use crate::util::json::Json;
 use crate::util::AgentId;
@@ -82,6 +83,13 @@ pub struct LaunchOptions {
     /// Render the live watch view to stderr while the fleet runs
     /// (`--watch`).  Display only — fingerprints are unaffected.
     pub watch: bool,
+    /// Watch render throttle in milliseconds (`--watch-ms`; 0 = the
+    /// built-in default).
+    pub watch_ms: u64,
+    /// Trace-mode override (`--trace out.json` forces `both` when the
+    /// file says `off`); `None` launches with `deploy.trace` as
+    /// declared.  Forwarded to every agent subprocess.
+    pub trace: Option<TraceMode>,
 }
 
 /// Owns a spawned agent process and guarantees it dies with the handle:
@@ -318,6 +326,13 @@ fn spawn_fleet_attempt(
         if sc.deploy.telemetry_windows > 0 {
             cmd.args(["--telemetry-windows", &sc.deploy.telemetry_windows.to_string()]);
         }
+        let trace_mode = opts.trace.unwrap_or(sc.deploy.trace);
+        if !trace_mode.is_off() {
+            cmd.args(["--trace-mode", &trace_mode.to_string()]).args([
+                "--trace-buffer-spans",
+                &sc.deploy.trace_buffer_spans.to_string(),
+            ]);
+        }
         if sc.deploy.checkpoint_windows > 0 || restore.is_some() {
             cmd.arg("--ckpt-dir").arg(&ckpt_dir);
         }
@@ -419,6 +434,8 @@ pub fn run_launched(
                     ckpt_log: Some(Arc::clone(&ckpt_log)),
                     resume_from,
                     watch: opts.watch,
+                    watch_ms: opts.watch_ms,
+                    trace: opts.trace.unwrap_or(sc.deploy.trace),
                 },
             )
         });
@@ -460,6 +477,16 @@ pub fn run_launched(
             let _ = std::fs::remove_dir_all(checkpoint_dir(sc, opts, &fleet.run_id));
         }
         let windows: u64 = out.stats.iter().map(|(_, s)| s.windows).sum();
+        let (mut max_queue_len, mut max_window_events) = (0, 0);
+        let (mut wire_bytes, mut wire_frames, mut budget_last) = (0u64, 0u64, 0u64);
+        for (_, s) in &out.stats {
+            max_queue_len = max_queue_len.max(s.max_queue_len);
+            max_window_events = max_window_events.max(s.max_window_events);
+            wire_bytes += s.wire_bytes;
+            wire_frames += s.wire_frames;
+            budget_last = budget_last.max(s.budget_last);
+        }
+        let cp = critical_path(&out.trace);
         return Ok(vec![ScenarioOutcome {
             context: ctx.name.clone(),
             wall_s: out.wall_s,
@@ -471,6 +498,13 @@ pub fn run_launched(
             windows,
             fingerprint: out.fingerprint,
             scenario_fingerprint: sc.fingerprint.clone(),
+            max_queue_len,
+            max_window_events,
+            wire_bytes,
+            wire_frames,
+            budget_last,
+            critical_path: cp,
+            trace: out.trace,
             pool: Some(out.pool),
             telemetry: out.telemetry,
         }]);

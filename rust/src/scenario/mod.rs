@@ -58,6 +58,8 @@
 //! | `heartbeat_ms` | agent liveness heartbeat period toward the leader, 0 = off (0; `scenario launch` defaults its fleets to 250) |
 //! | `checkpoint_windows` | coordinated checkpoint cadence for `scenario launch` fleets, in executed windows — every time any agent's window count crosses another multiple, the leader drives a barrier at a globally quiescent window boundary and every agent serializes its full engine state to disk; 0 = off (0) |
 //! | `telemetry_windows` | live-telemetry cadence, in executed windows — every time an agent's window count crosses another multiple, it streams one snapshot (LVT, window budget, writer-queue occupancy, wire bytes/frames, event-queue depth) to the leader, which folds the per-agent time-series into the run report and renders `--watch` from it; virtual cadence, so fingerprints are bit-identical with telemetry on or off; 0 = off (0) |
+//! | `trace` | `off` \| `virtual` \| `wall` \| `both` — dual-clock tracing ([`crate::trace`]): `virtual` records per-LP dispatch, remote-send and checkpoint spans against simulation time (observational and deterministic — the span stream is byte-identical across transports and codecs, and fingerprints are bit-identical with tracing on or off); `wall` records per-phase wall-clock histograms (queue pop, LP dispatch, batch encode, writer flush, leader recv) plus sync-window/GVT round spans; `both` records both clocks; export with `--trace out.json` — Chrome trace-event JSON, loads in Perfetto (off) |
+//! | `trace_buffer_spans` | per-context virtual-span ring-buffer capacity — the memory cap for million-LP traced runs; when a run outgrows it the oldest spans drop first and the drop count is reported alongside the trace (65536) |
 //! | `on_failure` | `abort` \| `restart` — what the launch leader does when a fleet member dies mid-run: tear the fleet down (default), or respawn it, roll every member back to the latest committed checkpoint (from scratch if none), and resume (abort) |
 //! | `connect_timeout_ms` | total time an agent retries a TCP connect to an unreachable peer, with exponential backoff (5000) |
 //! | `connect_backoff_ms` | initial connect-retry backoff, doubling per attempt up to 1 s (100) |
@@ -165,6 +167,7 @@ use crate::coordinator::{AgentConfig, Deployment, RunReport};
 use crate::metrics::ResultPool;
 use crate::model::Scenario;
 use crate::runtime::ComputeBackend;
+use crate::trace::{critical_path, CriticalPath, TraceData, TraceMode};
 use crate::transport::TcpOptions;
 use crate::util::json::Json;
 use crate::util::LpId;
@@ -243,6 +246,33 @@ pub struct ScenarioOutcome {
     /// `deploy.telemetry_windows > 0`; in-proc and tcp fleets both
     /// collect it).  Never part of the determinism fingerprint.
     pub telemetry: Vec<(crate::util::AgentId, Vec<crate::transport::TelemetrySnapshot>)>,
+    /// Peak event-queue depth any agent observed.  Sampled on event
+    /// arrival, so it rides the wall-scheduling plane: shown in [`row`]
+    /// but excluded from the sweep corpus, which carries the
+    /// virtual-plane `max_window_events` instead.
+    pub max_queue_len: usize,
+    /// Largest single safe window, in events, across the fleet — the
+    /// peak burst the queue had to drain in one window.  The window
+    /// partition is a pure function of virtual execution, so this is
+    /// deterministic like the fingerprint.
+    pub max_window_events: usize,
+    /// Encoded wire bytes the fleet emitted (0 on in-proc runs, which
+    /// meter nothing unless byte accounting is enabled).
+    pub wire_bytes: u64,
+    /// Frames the fleet emitted (WindowBatch + WindowReport under
+    /// batching; one per message on the legacy path).  Frame boundaries
+    /// follow flush cadence — wall plane, like `max_queue_len`.
+    pub wire_frames: u64,
+    /// Final window budget: the fixed constant, or where the adaptive
+    /// controller settled.
+    pub budget_last: u64,
+    /// Dual-clock trace (empty unless `deploy.trace != off` or the run
+    /// was forced on with `--trace`).  Export with
+    /// [`crate::trace::write_chrome_trace`].
+    pub trace: TraceData,
+    /// Longest causal LP chain through the virtual trace (None when the
+    /// run was untraced or produced no dispatch spans).
+    pub critical_path: Option<CriticalPath>,
 }
 
 impl ScenarioOutcome {
@@ -251,9 +281,9 @@ impl ScenarioOutcome {
     /// `scenario launch` output can be compared directly (the CI launch
     /// smoke greps it).
     pub fn row(&self) -> String {
-        format!(
+        let mut line = format!(
             "ctx={} wall={:.3}s makespan={:.1}s events={} remote={} jobs={} transfers={} \
-             windows={} fingerprint={}",
+             windows={} maxq={} frames={} fingerprint={}",
             self.context,
             self.wall_s,
             self.makespan_s,
@@ -262,9 +292,29 @@ impl ScenarioOutcome {
             self.jobs,
             self.transfers,
             self.windows,
+            self.max_queue_len,
+            self.wire_frames,
             fingerprint::fnv16(&self.fingerprint)
-        )
+        );
+        if let Some(cp) = &self.critical_path {
+            line.push(' ');
+            line.push_str(&cp.summary());
+        }
+        line
     }
+}
+
+/// Everything the CLI can toggle about *how* a scenario run executes
+/// without touching *what* it computes ([`CompiledScenario::run_with_opts`]).
+#[derive(Clone, Copy, Default)]
+pub struct RunOptions {
+    /// Render the live watch view to stderr as telemetry arrives.
+    pub watch: bool,
+    /// Watch render throttle in milliseconds (0 = the built-in default).
+    pub watch_ms: u64,
+    /// Trace-mode override (`--trace out.json` forces `both` when the
+    /// file says `off`); `None` runs with `deploy.trace` as declared.
+    pub trace: Option<TraceMode>,
 }
 
 /// Read a scenario file and apply `--set path=value` overrides; the
@@ -396,7 +446,7 @@ impl CompiledScenario {
     /// Run the scenario to completion on its declared transport and
     /// return one outcome per context.
     pub fn run(&self) -> Result<Vec<ScenarioOutcome>> {
-        self.run_with(false)
+        self.run_with_opts(RunOptions::default())
     }
 
     /// [`run`](Self::run) with the live watch view toggled (`--watch`):
@@ -404,7 +454,18 @@ impl CompiledScenario {
     /// to stderr as telemetry arrives.  Display only — results and
     /// fingerprints are identical either way.
     pub fn run_with(&self, watch: bool) -> Result<Vec<ScenarioOutcome>> {
+        self.run_with_opts(RunOptions {
+            watch,
+            ..RunOptions::default()
+        })
+    }
+
+    /// [`run`](Self::run) with every CLI toggle: watch view, watch
+    /// throttle, and a trace-mode override.  All of it is observational
+    /// — results and fingerprints are identical under every combination.
+    pub fn run_with_opts(&self, opts: RunOptions) -> Result<Vec<ScenarioOutcome>> {
         self.preflight()?;
+        let trace_mode = opts.trace.unwrap_or(self.deploy.trace);
         match self.transport {
             RunTransport::InProc => {
                 let scenarios: Vec<GeneratedScenario> = self
@@ -412,7 +473,12 @@ impl CompiledScenario {
                     .iter()
                     .map(|c| c.generated.clone())
                     .collect();
-                let reports = self.deployment().watch(watch).run_many(scenarios)?;
+                let reports = self
+                    .deployment()
+                    .watch(opts.watch)
+                    .watch_ms(opts.watch_ms)
+                    .trace(trace_mode)
+                    .run_many(scenarios)?;
                 Ok(self
                     .contexts
                     .iter()
@@ -426,7 +492,7 @@ impl CompiledScenario {
                     .contexts
                     .first()
                     .ok_or_else(|| anyhow!("scenario has no contexts"))?;
-                Ok(vec![self.run_tcp(ctx, watch)?])
+                Ok(vec![self.run_tcp(ctx, opts, trace_mode)?])
             }
         }
     }
@@ -443,6 +509,18 @@ impl CompiledScenario {
             windows: report.windows,
             fingerprint: report.determinism_fingerprint(),
             scenario_fingerprint: report.scenario_fingerprint.clone(),
+            max_queue_len: report.max_queue_len,
+            max_window_events: report
+                .per_agent
+                .iter()
+                .map(|(_, s)| s.max_window_events)
+                .max()
+                .unwrap_or(0),
+            wire_bytes: report.wire_bytes,
+            wire_frames: report.wire_frames,
+            budget_last: report.budget_last,
+            critical_path: report.critical_path,
+            trace: report.trace,
             telemetry: report.telemetry,
             pool: Some(report.pool),
         }
@@ -456,7 +534,12 @@ impl CompiledScenario {
     /// pins `deploy.placement = rr` for tcp scenarios) and uses the
     /// best-effort `ComputeBackend::auto` — `backend`, `artifacts_dir`
     /// and `probe_fallback_ms` are in-proc knobs.
-    fn run_tcp(&self, ctx: &NamedContext, watch: bool) -> Result<ScenarioOutcome> {
+    fn run_tcp(
+        &self,
+        ctx: &NamedContext,
+        opts: RunOptions,
+        trace_mode: TraceMode,
+    ) -> Result<ScenarioOutcome> {
         if self.deploy.agents == 0 {
             bail!("deploy.agents must be >= 1");
         }
@@ -487,6 +570,8 @@ impl CompiledScenario {
             // heartbeat channel is for subprocess fleets (`launch`).
             heartbeat_ms: 0,
             telemetry_windows: deploy.telemetry_windows,
+            trace: trace_mode,
+            trace_buffer_spans: deploy.trace_buffer_spans,
         });
         let ids = peer_ids.clone();
         let backend = std::sync::Arc::new(ComputeBackend::auto(Path::new("artifacts")));
@@ -508,7 +593,9 @@ impl CompiledScenario {
             &ctx.generated,
             crate::testkit::DriveOptions {
                 pins,
-                watch,
+                watch: opts.watch,
+                watch_ms: opts.watch_ms,
+                trace: trace_mode,
                 ..Default::default()
             },
         );
@@ -517,6 +604,16 @@ impl CompiledScenario {
         }
         let out = driven.map_err(|abort| anyhow!("{abort}"))?;
         let windows: u64 = out.stats.iter().map(|(_, s)| s.windows).sum();
+        let (mut max_queue_len, mut max_window_events) = (0, 0);
+        let (mut wire_bytes, mut wire_frames, mut budget_last) = (0u64, 0u64, 0u64);
+        for (_, s) in &out.stats {
+            max_queue_len = max_queue_len.max(s.max_queue_len);
+            max_window_events = max_window_events.max(s.max_window_events);
+            wire_bytes += s.wire_bytes;
+            wire_frames += s.wire_frames;
+            budget_last = budget_last.max(s.budget_last);
+        }
+        let cp = critical_path(&out.trace);
         Ok(ScenarioOutcome {
             context: ctx.name.clone(),
             wall_s: out.wall_s,
@@ -528,6 +625,13 @@ impl CompiledScenario {
             windows,
             fingerprint: out.fingerprint,
             scenario_fingerprint: self.fingerprint.clone(),
+            max_queue_len,
+            max_window_events,
+            wire_bytes,
+            wire_frames,
+            budget_last,
+            critical_path: cp,
+            trace: out.trace,
             pool: Some(out.pool),
             telemetry: out.telemetry,
         })

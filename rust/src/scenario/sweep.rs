@@ -253,6 +253,26 @@ pub fn corpus_json(scenario: &str, results: &[PointResult]) -> Json {
                 .outcomes
                 .iter()
                 .map(|o| {
+                    // Observability columns stay on the virtual plane to
+                    // keep the byte-identity guarantee: the peak-depth
+                    // column is the largest single window (the window
+                    // partition is a pure function of virtual execution),
+                    // not the live `max_queue_len` gauge, and frame
+                    // counts are omitted entirely — both are sampled on
+                    // arrival/flush cadence and legitimately vary with
+                    // real-time scheduling (they ride `row()` instead).
+                    // `wire_bytes` is 0 unmetered and `budget_last` is
+                    // the constant under the default fixed budget; a
+                    // sweep that byte-compares corpora should leave
+                    // metering off and the budget fixed.
+                    let cp = match &o.critical_path {
+                        Some(cp) => Json::obj(vec![
+                            ("events", Json::num(cp.events as f64)),
+                            ("lp", Json::num(cp.lp as f64)),
+                            ("total_events", Json::num(cp.total_events as f64)),
+                        ]),
+                        None => Json::Null,
+                    };
                     Json::obj(vec![
                         ("context", Json::str(o.context.clone())),
                         ("events", Json::num(o.events as f64)),
@@ -260,6 +280,10 @@ pub fn corpus_json(scenario: &str, results: &[PointResult]) -> Json {
                         ("jobs", Json::num(o.jobs as f64)),
                         ("transfers", Json::num(o.transfers as f64)),
                         ("windows", Json::num(o.windows as f64)),
+                        ("max_window_events", Json::num(o.max_window_events as f64)),
+                        ("wire_bytes", Json::num(o.wire_bytes as f64)),
+                        ("budget_last", Json::num(o.budget_last as f64)),
+                        ("critical_path", cp),
                         ("makespan_s", Json::num(o.makespan_s)),
                         ("fingerprint", Json::str(o.fingerprint.clone())),
                     ])
@@ -283,12 +307,13 @@ pub fn corpus_json(scenario: &str, results: &[PointResult]) -> Json {
 pub fn corpus_csv(scenario: &str, results: &[PointResult]) -> String {
     let mut out = String::from(
         "scenario,point,point_fingerprint,context,events,remote_events,jobs,transfers,\
-         windows,makespan_s,fingerprint\n",
+         windows,max_window_events,wire_bytes,budget_last,cp_events,makespan_s,\
+         fingerprint\n",
     );
     for r in results {
         for o in &r.outcomes {
             out.push_str(&format!(
-                "{scenario},{},{},{},{},{},{},{},{},{},{}\n",
+                "{scenario},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.label,
                 r.point_fingerprint,
                 o.context,
@@ -297,6 +322,10 @@ pub fn corpus_csv(scenario: &str, results: &[PointResult]) -> String {
                 o.jobs,
                 o.transfers,
                 o.windows,
+                o.max_window_events,
+                o.wire_bytes,
+                o.budget_last,
+                o.critical_path.map_or(0, |cp| cp.events),
                 o.makespan_s,
                 o.fingerprint,
             ));

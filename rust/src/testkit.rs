@@ -40,6 +40,7 @@ use crate::engine::SimTime;
 use crate::metrics::{ResultPool, TelemetryWatch};
 use crate::model::Payload;
 use crate::runtime::ComputeBackend;
+use crate::trace::{PhaseProfile, SpanKind, TraceData, TraceMode, TraceSpan};
 use crate::transport::{
     ControlMsg, InProcEndpoint, InProcNetwork, NetMsg, TcpOptions, TcpTransport, TelemetrySnapshot,
     Transport, Wire,
@@ -187,6 +188,10 @@ pub struct FleetOutcome {
     /// Per-agent live-telemetry time-series in emission order (empty
     /// unless the fleet ran with `telemetry_windows > 0`).
     pub telemetry: Vec<(AgentId, Vec<TelemetrySnapshot>)>,
+    /// Dual-clock trace assembled from the agents' teardown reports
+    /// (empty unless the fleet ran with `trace != off`); leader-side GVT
+    /// round spans are filed under [`LEADER`].
+    pub trace: TraceData,
 }
 
 /// External per-iteration health probe for [`drive_fleet_leader`] —
@@ -239,6 +244,12 @@ pub struct DriveOptions {
     /// Render the live watch view (GVT progress, per-agent LVT lag, wire
     /// rates) to stderr as telemetry arrives.  Display only.
     pub watch: bool,
+    /// Watch render throttle in milliseconds (0 = the built-in default).
+    pub watch_ms: u64,
+    /// Trace mode the *fleet* is running under (the agents' configs carry
+    /// it to the engines); the leader uses it to record its own GVT round
+    /// spans under `wall`/`both` and to collect agent trace reports.
+    pub trace: TraceMode,
 }
 
 impl Default for DriveOptions {
@@ -252,6 +263,8 @@ impl Default for DriveOptions {
             ckpt_log: None,
             resume_from: None,
             watch: false,
+            watch_ms: 0,
+            trace: TraceMode::Off,
         }
     }
 }
@@ -389,7 +402,16 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
     // Per-agent telemetry series; each agent's snapshots arrive FIFO on
     // its control channel, so the per-agent order is emission order.
     let mut telemetry: BTreeMap<AgentId, Vec<TelemetrySnapshot>> = BTreeMap::new();
-    let mut watch = opts.watch.then(TelemetryWatch::new);
+    let mut watch = opts
+        .watch
+        .then(|| TelemetryWatch::new().with_interval_ms(opts.watch_ms));
+    // Dual-clock trace state: per-agent virtual spans and phase profiles
+    // (reported at EndRun, on the same FIFO channel as FinalStats), plus
+    // the leader's own GVT round spans under wall profiling.
+    let mut trace_spans: BTreeMap<AgentId, Vec<TraceSpan>> = BTreeMap::new();
+    let mut trace_dropped: BTreeMap<AgentId, u64> = BTreeMap::new();
+    let mut phases: BTreeMap<AgentId, PhaseProfile> = BTreeMap::new();
+    let mut leader_spans: Vec<TraceSpan> = Vec::new();
 
     // The whole drive runs inside one closure so any failure path can
     // fall through to the common teardown below with the state collected
@@ -557,6 +579,15 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
                         if let Some(gvt) = detector.take_gvt() {
                             if let Some(w) = watch.as_mut() {
                                 w.on_gvt(ctx, gvt);
+                            }
+                            if opts.trace.wall_on() {
+                                leader_spans.push(TraceSpan {
+                                    kind: SpanKind::Gvt,
+                                    t_s: gvt,
+                                    dur_s: 0.0,
+                                    lp: 0,
+                                    aux: leader_spans.len() as u64,
+                                });
                             }
                             for &a in ids {
                                 send(
@@ -790,12 +821,29 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
                     }
                     telemetry.entry(from).or_default().push(snap);
                 }
+                Some(NetMsg::Control(ControlMsg::TraceChunk {
+                    from,
+                    dropped,
+                    spans,
+                    ..
+                })) => {
+                    trace_spans.entry(from).or_default().extend(spans);
+                    // `dropped` is the agent's running total, repeated on
+                    // every chunk — last write wins, summed per fleet below.
+                    trace_dropped.insert(from, dropped);
+                }
+                Some(NetMsg::Control(ControlMsg::PhaseReport { from, profile, .. })) => {
+                    phases.entry(from).or_default().merge(&profile);
+                }
                 _ => {}
             }
         }
         Ok(())
     };
     let result = drive();
+    if let Some(w) = watch.as_mut() {
+        w.finish();
+    }
 
     // Common teardown: best-effort shutdown broadcast (also on abort, so
     // surviving agents exit instead of spinning on a dead fleet).
@@ -807,6 +855,14 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
     let transfers = pool.of_kind("transfer").len();
     let fingerprint =
         fingerprint_parts(events, remote, jobs, transfers, makespan, &pool.kind_counts());
+    if !leader_spans.is_empty() {
+        trace_spans.entry(LEADER).or_default().extend(leader_spans);
+    }
+    let trace = TraceData {
+        spans: trace_spans.into_iter().collect(),
+        dropped: trace_dropped.values().sum(),
+        phases: phases.into_iter().collect(),
+    };
     let outcome = FleetOutcome {
         fingerprint,
         events,
@@ -818,6 +874,7 @@ pub fn drive_fleet_leader<T: Transport<Payload>>(
         pool,
         stats,
         telemetry: telemetry.into_iter().collect(),
+        trace,
     };
     match result {
         Ok(()) => Ok(outcome),

@@ -1,0 +1,802 @@
+//! Dual-clock tracing: deterministic virtual-time event traces plus a
+//! wall-clock phase profiler, both exportable as Chrome trace-event JSON
+//! (loadable in Perfetto / `chrome://tracing`).
+//!
+//! ## Two clocks, two contracts
+//!
+//! **Virtual-time spans** are recorded against simulation time by the
+//! engine and agents.  They split into two classes:
+//!
+//! * **Causal** spans ([`SpanKind::LpDispatch`], [`SpanKind::EventSend`],
+//!   [`SpanKind::Checkpoint`]) describe *what the simulation did*: which
+//!   LP executed how many events at which timestamp, which remote events
+//!   crossed agent boundaries, where checkpoint barriers cut the run.
+//!   Their content is a pure function of the virtual execution, so the
+//!   causal trace is **byte-identical across transports and codecs**
+//!   ({in-proc, tcp} × {json, binary}) — the same determinism bar the
+//!   fingerprint meets.  The leader-side critical-path report is computed
+//!   from them.
+//! * **Scheduling** spans ([`SpanKind::Window`], [`SpanKind::Gvt`]) carry
+//!   virtual timestamps but describe *how the run was executed*: safe
+//!   windows and proven-GVT rounds depend on message arrival timing, so
+//!   their layout legitimately varies run to run.  They are classified
+//!   with the wall-clock profile and excluded from the byte-identity
+//!   guarantee.
+//!
+//! **Wall-clock phases** are lightweight timers around the agent loop's
+//! stages (transport queue pop, LP dispatch, batch encode, writer flush)
+//! plus the leader's receive loop, aggregated into per-phase log₂
+//! histograms ([`PhaseProfile`]).  They ride the control channel only and
+//! never touch fingerprints or the ResultPool.
+//!
+//! ## Determinism contract
+//!
+//! Recording is strictly observational: span capture reads engine state
+//! and appends to side buffers; emission uses dedicated `ControlMsg`
+//! frames at run teardown.  A trace-on run therefore emits byte-identical
+//! data-plane traffic to a trace-off run, and fingerprints are unchanged
+//! (asserted by the `trace_determinism` suite and the CI trace smoke).
+//! The per-context ring buffer ([`TraceRing`]) caps memory at
+//! `trace_buffer_spans` spans — million-LP runs keep the newest spans and
+//! count the dropped prefix, deterministically (the span stream itself is
+//! deterministic, so the surviving window is too).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::AgentId;
+
+// ---------------------------------------------------------------------------
+// Trace mode knob
+// ---------------------------------------------------------------------------
+
+/// What the fleet records: nothing (default), the deterministic
+/// virtual-time trace, the wall-clock phase profile, or both.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceMode {
+    #[default]
+    Off,
+    Virtual,
+    Wall,
+    Both,
+}
+
+impl TraceMode {
+    /// Virtual-time span capture enabled?
+    pub fn virtual_on(self) -> bool {
+        matches!(self, TraceMode::Virtual | TraceMode::Both)
+    }
+
+    /// Wall-clock phase profiling (and scheduling spans) enabled?
+    pub fn wall_on(self) -> bool {
+        matches!(self, TraceMode::Wall | TraceMode::Both)
+    }
+
+    pub fn is_off(self) -> bool {
+        self == TraceMode::Off
+    }
+}
+
+impl std::fmt::Display for TraceMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TraceMode::Off => "off",
+            TraceMode::Virtual => "virtual",
+            TraceMode::Wall => "wall",
+            TraceMode::Both => "both",
+        })
+    }
+}
+
+impl std::str::FromStr for TraceMode {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "off" => Ok(TraceMode::Off),
+            "virtual" => Ok(TraceMode::Virtual),
+            "wall" => Ok(TraceMode::Wall),
+            "both" => Ok(TraceMode::Both),
+            other => Err(format!("unknown trace mode '{other}' (off|virtual|wall|both)")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Virtual-time spans
+// ---------------------------------------------------------------------------
+
+/// Kind of one virtual-time trace span (see module docs for the
+/// causal-vs-scheduling split).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// One LP executed `aux` events at virtual time `t_s` (causal).
+    LpDispatch = 0,
+    /// A remote event left `lp` toward LP `aux`, delivered at `t_s`
+    /// (causal; recorded at the sender, timestamped with delivery time).
+    EventSend = 1,
+    /// Coordinated checkpoint barrier `aux` committed with the agent at
+    /// virtual time `t_s` (causal for a given barrier schedule).
+    Checkpoint = 2,
+    /// Safe window number `lp` spanning `[t_s, t_s + dur_s]` executed
+    /// `aux` events (scheduling: window layout is timing-dependent).
+    Window = 3,
+    /// The leader proved GVT `t_s` (scheduling; `aux` is the broadcast
+    /// sequence number).
+    Gvt = 4,
+}
+
+impl SpanKind {
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        Some(match v {
+            0 => SpanKind::LpDispatch,
+            1 => SpanKind::EventSend,
+            2 => SpanKind::Checkpoint,
+            3 => SpanKind::Window,
+            4 => SpanKind::Gvt,
+            _ => return None,
+        })
+    }
+
+    /// Chrome trace-event `name` for this kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::LpDispatch => "dispatch",
+            SpanKind::EventSend => "send",
+            SpanKind::Checkpoint => "checkpoint",
+            SpanKind::Window => "window",
+            SpanKind::Gvt => "gvt",
+        }
+    }
+}
+
+/// One virtual-time trace span.  Compact on purpose: five scalar fields
+/// serialize identically through every codec, which is what keeps the
+/// causal trace byte-comparable.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceSpan {
+    pub kind: SpanKind,
+    /// Virtual start time, seconds.
+    pub t_s: f64,
+    /// Virtual duration, seconds (0 for instantaneous spans).
+    pub dur_s: f64,
+    /// Primary subject: LP id for dispatch/send, window index for
+    /// windows, 0 otherwise.
+    pub lp: u64,
+    /// Kind-specific payload: event count (dispatch/window), destination
+    /// LP (send), barrier id (checkpoint), broadcast seq (gvt).
+    pub aux: u64,
+}
+
+impl TraceSpan {
+    /// Is this span part of the deterministic causal trace?
+    pub fn causal(&self) -> bool {
+        matches!(
+            self.kind,
+            SpanKind::LpDispatch | SpanKind::EventSend | SpanKind::Checkpoint
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("k", Json::num(self.kind as u8 as f64)),
+            ("t", Json::num(self.t_s)),
+            ("d", Json::num(self.dur_s)),
+            ("lp", Json::num(self.lp as f64)),
+            ("x", Json::num(self.aux as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<TraceSpan> {
+        Some(TraceSpan {
+            kind: SpanKind::from_u8(j.get("k")?.as_u64()? as u8)?,
+            t_s: j.get("t")?.as_f64()?,
+            dur_s: j.get("d")?.as_f64()?,
+            lp: j.get("lp")?.as_u64()?,
+            aux: j.get("x")?.as_u64()?,
+        })
+    }
+}
+
+/// Bounded span store: keeps the newest `cap` spans, counts the rest.
+/// Per simulation context, agent-side.
+#[derive(Debug)]
+pub struct TraceRing {
+    cap: usize,
+    spans: VecDeque<TraceSpan>,
+    dropped: u64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing {
+            cap: cap.max(1),
+            spans: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    pub fn push(&mut self, span: TraceSpan) {
+        if self.spans.len() == self.cap {
+            self.spans.pop_front();
+            self.dropped += 1;
+        }
+        self.spans.push_back(span);
+    }
+
+    pub fn extend(&mut self, spans: impl IntoIterator<Item = TraceSpan>) {
+        for s in spans {
+            self.push(s);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Spans dropped to honor the cap.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Take everything, oldest first.
+    pub fn drain(&mut self) -> Vec<TraceSpan> {
+        self.spans.drain(..).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wall-clock phase profiler
+// ---------------------------------------------------------------------------
+
+/// The instrumented stages of the run loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Phase {
+    /// Draining queued transport messages (agent loop step 1).
+    QueuePop = 0,
+    /// `Engine::advance_window` — executing the safe window's LP handlers.
+    LpDispatch = 1,
+    /// Draining the outbox and grouping it into per-peer batches.
+    BatchEncode = 2,
+    /// Handing frames to the transport (includes send-side blocking).
+    WriterFlush = 3,
+    /// The leader's receive-and-ingest loop.
+    LeaderRecv = 4,
+}
+
+/// Number of phases in [`PhaseProfile`].
+pub const PHASE_COUNT: usize = 5;
+
+/// Phase display names, indexed by `Phase as usize`.
+pub const PHASE_NAMES: [&str; PHASE_COUNT] = [
+    "queue_pop",
+    "lp_dispatch",
+    "batch_encode",
+    "writer_flush",
+    "leader_recv",
+];
+
+/// Histogram buckets per phase: bucket `i` counts samples with
+/// `2^(i-1) <= us < 2^i` (bucket 0 is `us == 0`), capped at the last.
+pub const PHASE_BUCKETS: usize = 16;
+
+/// One phase's aggregate: sample count, total/max microseconds, and a
+/// log₂ histogram.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseStat {
+    pub count: u64,
+    pub total_us: u64,
+    pub max_us: u64,
+    pub buckets: [u64; PHASE_BUCKETS],
+}
+
+impl PhaseStat {
+    fn bucket(us: u64) -> usize {
+        if us == 0 {
+            0
+        } else {
+            ((64 - us.leading_zeros()) as usize).min(PHASE_BUCKETS - 1)
+        }
+    }
+
+    pub fn record(&mut self, us: u64) {
+        self.count += 1;
+        self.total_us += us;
+        self.max_us = self.max_us.max(us);
+        self.buckets[Self::bucket(us)] += 1;
+    }
+
+    pub fn merge(&mut self, other: &PhaseStat) {
+        self.count += other.count;
+        self.total_us += other.total_us;
+        self.max_us = self.max_us.max(other.max_us);
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+    }
+
+    /// Mean microseconds per sample (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_us as f64 / self.count as f64
+        }
+    }
+}
+
+/// Per-agent wall-clock profile: one [`PhaseStat`] per [`Phase`].
+/// Strictly control-plane: shipped once per run at teardown, never folded
+/// into fingerprints or the ResultPool.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseProfile {
+    pub stats: [PhaseStat; PHASE_COUNT],
+}
+
+impl PhaseProfile {
+    pub fn record(&mut self, phase: Phase, us: u64) {
+        self.stats[phase as usize].record(us);
+    }
+
+    pub fn merge(&mut self, other: &PhaseProfile) {
+        for (s, o) in self.stats.iter_mut().zip(other.stats.iter()) {
+            s.merge(o);
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stats.iter().all(|s| s.count == 0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.stats.iter().map(|s| {
+            Json::obj(vec![
+                ("n", Json::num(s.count as f64)),
+                ("tot", Json::num(s.total_us as f64)),
+                ("max", Json::num(s.max_us as f64)),
+                (
+                    "b",
+                    Json::arr(s.buckets.iter().map(|b| Json::num(*b as f64))),
+                ),
+            ])
+        }))
+    }
+
+    pub fn from_json(j: &Json) -> Option<PhaseProfile> {
+        let arr = j.as_arr()?;
+        let mut profile = PhaseProfile::default();
+        for (i, sj) in arr.iter().take(PHASE_COUNT).enumerate() {
+            let mut stat = PhaseStat {
+                count: sj.get("n")?.as_u64()?,
+                total_us: sj.get("tot")?.as_u64()?,
+                max_us: sj.get("max")?.as_u64()?,
+                buckets: [0; PHASE_BUCKETS],
+            };
+            if let Some(bs) = sj.get("b").and_then(Json::as_arr) {
+                for (k, b) in bs.iter().take(PHASE_BUCKETS).enumerate() {
+                    stat.buckets[k] = b.as_u64()?;
+                }
+            }
+            profile.stats[i] = stat;
+        }
+        Some(profile)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Collected run trace
+// ---------------------------------------------------------------------------
+
+/// Everything the leader collected for one run: per-agent span streams
+/// (emission order — the control channel is FIFO per agent), the dropped
+/// count under the ring cap, and per-agent phase profiles (the leader's
+/// own receive-loop profile rides under [`crate::coordinator::LEADER`]).
+#[derive(Debug, Default)]
+pub struct TraceData {
+    pub spans: Vec<(AgentId, Vec<TraceSpan>)>,
+    pub dropped: u64,
+    pub phases: Vec<(AgentId, PhaseProfile)>,
+}
+
+impl TraceData {
+    pub fn is_empty(&self) -> bool {
+        self.spans.iter().all(|(_, s)| s.is_empty())
+            && self.phases.iter().all(|(_, p)| p.is_empty())
+    }
+
+    /// All causal spans across the fleet in canonical order (time, kind,
+    /// lp, aux, agent) — the byte-comparable virtual trace.
+    pub fn causal_sorted(&self) -> Vec<(AgentId, TraceSpan)> {
+        let mut all: Vec<(AgentId, TraceSpan)> = self
+            .spans
+            .iter()
+            .flat_map(|(a, spans)| spans.iter().filter(|s| s.causal()).map(|s| (*a, *s)))
+            .collect();
+        all.sort_by(|(aa, a), (ba, b)| {
+            a.t_s
+                .partial_cmp(&b.t_s)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.kind.cmp(&b.kind))
+                .then(a.lp.cmp(&b.lp))
+                .then(a.aux.cmp(&b.aux))
+                .then(aa.cmp(ba))
+        });
+        all
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Critical-path report
+// ---------------------------------------------------------------------------
+
+/// Longest causal LP chain through the run, in events — the leader-side
+/// bound on how much of the workload was inherently sequential.
+///
+/// Computed by an LP-level dynamic program over the causal trace: dispatch
+/// spans accumulate onto their LP's chain; each cross-agent event send
+/// joins the destination LP's chain to the source LP's.  Local cross-LP
+/// edges are not traced (they never cross a frame), so the estimate is an
+/// LP-*chain* critical path, not an exact event-graph one; it is exact
+/// whenever causality flows through remote events and self-scheduling.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CriticalPath {
+    /// Events on the longest chain.
+    pub events: u64,
+    /// The LP the chain ends at.
+    pub lp: u64,
+    /// Total events dispatched fleet-wide (the parallelism denominator).
+    pub total_events: u64,
+}
+
+impl CriticalPath {
+    /// Available parallelism: total events over critical-path events.
+    pub fn parallelism(&self) -> f64 {
+        if self.events == 0 {
+            0.0
+        } else {
+            self.total_events as f64 / self.events as f64
+        }
+    }
+
+    /// One-line human summary for `RunReport`.
+    pub fn summary(&self) -> String {
+        format!(
+            "critical-path={} events (lp {}) of {} total, parallelism {:.1}x",
+            self.events,
+            self.lp,
+            self.total_events,
+            self.parallelism()
+        )
+    }
+}
+
+/// Compute the [`CriticalPath`] from a collected trace (None when no
+/// dispatch spans were captured — tracing off or virtual spans dropped).
+pub fn critical_path(data: &TraceData) -> Option<CriticalPath> {
+    let spans = data.causal_sorted();
+    let mut chain: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut total = 0u64;
+    let mut saw_dispatch = false;
+    // Canonical order already sorts EventSend (kind 1) after LpDispatch
+    // (kind 0) at equal timestamps; an event *delivered* at t joins
+    // chains before the destination dispatches at t, so walk sends of
+    // timestamp t ahead of dispatches of timestamp t by buffering.
+    let mut i = 0usize;
+    while i < spans.len() {
+        let t = spans[i].1.t_s;
+        let mut j = i;
+        while j < spans.len() && spans[j].1.t_s == t {
+            j += 1;
+        }
+        // 1. Edges due at this timestamp: dst inherits src's chain.
+        for (_, s) in &spans[i..j] {
+            if s.kind == SpanKind::EventSend {
+                let src = chain.get(&s.lp).copied().unwrap_or(0);
+                let dst = chain.entry(s.aux).or_insert(0);
+                *dst = (*dst).max(src);
+            }
+        }
+        // 2. Dispatches at this timestamp extend their LP's chain.
+        for (_, s) in &spans[i..j] {
+            if s.kind == SpanKind::LpDispatch {
+                saw_dispatch = true;
+                total += s.aux;
+                *chain.entry(s.lp).or_insert(0) += s.aux;
+            }
+        }
+        i = j;
+    }
+    if !saw_dispatch {
+        return None;
+    }
+    let (lp, events) = chain
+        .into_iter()
+        .max_by_key(|(lp, n)| (*n, std::cmp::Reverse(*lp)))?;
+    Some(CriticalPath {
+        events,
+        lp,
+        total_events: total,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------------
+
+/// Format a microsecond value with fixed precision — deterministic across
+/// platforms, which is what makes the virtual export byte-comparable.
+fn us(seconds: f64) -> String {
+    format!("{:.3}", seconds * 1e6)
+}
+
+/// One trace-event row pending serialization (keeps [`push_event`]'s
+/// signature small).
+struct ChromeEvent<'a> {
+    name: &'a str,
+    cat: &'a str,
+    ts_us: String,
+    dur_us: String,
+    pid: u64,
+    tid: u64,
+    args: Vec<(&'a str, String)>,
+}
+
+fn push_event(out: &mut String, ev: &ChromeEvent<'_>) {
+    if out.ends_with('}') {
+        out.push_str(",\n");
+    }
+    out.push_str(&format!(
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{},\"tid\":{}",
+        ev.name, ev.cat, ev.ts_us, ev.dur_us, ev.pid, ev.tid
+    ));
+    if !ev.args.is_empty() {
+        out.push_str(",\"args\":{");
+        for (i, (k, v)) in ev.args.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{k}\":{v}"));
+        }
+        out.push('}');
+    }
+    out.push('}');
+}
+
+/// Render the collected trace as a Chrome trace-event JSON array.
+///
+/// The **virtual** section (emitted when `mode.virtual_on()`) contains the
+/// causal spans in canonical order with virtual-time µs timestamps —
+/// byte-identical across transports and codecs for the same scenario.
+/// The **wall** section (when `mode.wall_on()`) appends scheduling spans
+/// (windows, GVT rounds) and one aggregate event per (agent, phase)
+/// carrying the histogram in `args` — timing data, excluded from the
+/// byte-identity contract.
+pub fn chrome_trace(data: &TraceData, mode: TraceMode) -> String {
+    let mut out = String::from("[\n");
+    if mode.virtual_on() {
+        for (agent, s) in data.causal_sorted() {
+            let (tid, args): (u64, Vec<(&str, String)>) = match s.kind {
+                SpanKind::LpDispatch => (s.lp, vec![("events", s.aux.to_string())]),
+                SpanKind::EventSend => (s.lp, vec![("dst_lp", s.aux.to_string())]),
+                SpanKind::Checkpoint => (0, vec![("ckpt", s.aux.to_string())]),
+                _ => (0, vec![]),
+            };
+            push_event(
+                &mut out,
+                &ChromeEvent {
+                    name: s.kind.name(),
+                    cat: "virtual",
+                    ts_us: us(s.t_s),
+                    dur_us: us(s.dur_s),
+                    pid: agent.raw(),
+                    tid,
+                    args,
+                },
+            );
+        }
+    }
+    if mode.wall_on() {
+        for (agent, spans) in &data.spans {
+            for s in spans.iter().filter(|s| !s.causal()) {
+                push_event(
+                    &mut out,
+                    &ChromeEvent {
+                        name: s.kind.name(),
+                        cat: "sched",
+                        ts_us: us(s.t_s),
+                        dur_us: us(s.dur_s),
+                        pid: agent.raw(),
+                        tid: s.lp,
+                        args: vec![("n", s.aux.to_string())],
+                    },
+                );
+            }
+        }
+        for (agent, profile) in &data.phases {
+            // Lay the phases out sequentially on the agent's wall track so
+            // the aggregate durations are visible side by side.
+            let mut cursor = 0u64;
+            for (i, stat) in profile.stats.iter().enumerate() {
+                if stat.count == 0 {
+                    continue;
+                }
+                push_event(
+                    &mut out,
+                    &ChromeEvent {
+                        name: PHASE_NAMES[i],
+                        cat: "wall",
+                        ts_us: format!("{cursor}.000"),
+                        dur_us: format!("{}.000", stat.total_us.max(1)),
+                        pid: agent.raw(),
+                        tid: 1_000_000,
+                        args: vec![
+                            ("count", stat.count.to_string()),
+                            ("max_us", stat.max_us.to_string()),
+                            ("mean_us", format!("{:.1}", stat.mean_us())),
+                        ],
+                    },
+                );
+                cursor += stat.total_us.max(1);
+            }
+        }
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// Write [`chrome_trace`] output to `path`.
+pub fn write_chrome_trace(path: &Path, data: &TraceData, mode: TraceMode) -> Result<()> {
+    std::fs::write(path, chrome_trace(data, mode))
+        .with_context(|| format!("write trace {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, t: f64, lp: u64, aux: u64) -> TraceSpan {
+        TraceSpan {
+            kind,
+            t_s: t,
+            dur_s: 0.0,
+            lp,
+            aux,
+        }
+    }
+
+    #[test]
+    fn trace_mode_roundtrip() {
+        for m in [
+            TraceMode::Off,
+            TraceMode::Virtual,
+            TraceMode::Wall,
+            TraceMode::Both,
+        ] {
+            assert_eq!(m.to_string().parse::<TraceMode>().unwrap(), m);
+        }
+        assert!("nope".parse::<TraceMode>().is_err());
+        assert!(TraceMode::Both.virtual_on() && TraceMode::Both.wall_on());
+        assert!(!TraceMode::Virtual.wall_on() && !TraceMode::Wall.virtual_on());
+    }
+
+    #[test]
+    fn ring_caps_and_counts_drops() {
+        let mut r = TraceRing::new(3);
+        for i in 0..5 {
+            r.push(span(SpanKind::LpDispatch, i as f64, i, 1));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let spans = r.drain();
+        assert_eq!(spans[0].t_s, 2.0, "oldest surviving span");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn span_json_roundtrip() {
+        let s = TraceSpan {
+            kind: SpanKind::EventSend,
+            t_s: 1.25,
+            dur_s: 0.5,
+            lp: 7,
+            aux: 9,
+        };
+        assert_eq!(TraceSpan::from_json(&s.to_json()).unwrap(), s);
+    }
+
+    #[test]
+    fn phase_histogram_buckets() {
+        let mut p = PhaseProfile::default();
+        p.record(Phase::LpDispatch, 0);
+        p.record(Phase::LpDispatch, 1);
+        p.record(Phase::LpDispatch, 1024);
+        p.record(Phase::QueuePop, u64::MAX / 2);
+        let d = &p.stats[Phase::LpDispatch as usize];
+        assert_eq!(d.count, 3);
+        assert_eq!(d.total_us, 1025);
+        assert_eq!(d.max_us, 1024);
+        assert_eq!(d.buckets[0], 1);
+        assert_eq!(d.buckets[1], 1);
+        assert_eq!(d.buckets[11], 1);
+        // Overflow samples land in the last bucket.
+        assert_eq!(p.stats[Phase::QueuePop as usize].buckets[PHASE_BUCKETS - 1], 1);
+        // JSON roundtrip preserves everything.
+        assert_eq!(PhaseProfile::from_json(&p.to_json()).unwrap(), p);
+        // Merge adds counts.
+        let mut q = p;
+        q.merge(&p);
+        assert_eq!(q.stats[Phase::LpDispatch as usize].count, 6);
+    }
+
+    #[test]
+    fn critical_path_chains_through_sends() {
+        // lp1 dispatches 3 events, sends to lp2 which dispatches 2 more:
+        // chain = 5.  lp3 independently dispatches 4.
+        let data = TraceData {
+            spans: vec![(
+                AgentId(1),
+                vec![
+                    span(SpanKind::LpDispatch, 0.0, 1, 3),
+                    span(SpanKind::EventSend, 1.0, 1, 2),
+                    span(SpanKind::LpDispatch, 0.5, 3, 4),
+                    span(SpanKind::LpDispatch, 1.0, 2, 2),
+                ],
+            )],
+            dropped: 0,
+            phases: vec![],
+        };
+        let cp = critical_path(&data).unwrap();
+        assert_eq!(cp.events, 5);
+        assert_eq!(cp.lp, 2);
+        assert_eq!(cp.total_events, 9);
+        assert!((cp.parallelism() - 1.8).abs() < 1e-9);
+        assert!(cp.summary().contains("critical-path=5 events"));
+    }
+
+    #[test]
+    fn critical_path_empty_when_untraced() {
+        assert!(critical_path(&TraceData::default()).is_none());
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_and_sorted() {
+        let data = TraceData {
+            spans: vec![(
+                AgentId(2),
+                vec![
+                    span(SpanKind::LpDispatch, 1.0, 4, 2),
+                    span(SpanKind::EventSend, 0.5, 4, 9),
+                    span(SpanKind::Window, 0.0, 0, 2),
+                ],
+            )],
+            dropped: 0,
+            phases: vec![(AgentId(2), {
+                let mut p = PhaseProfile::default();
+                p.record(Phase::WriterFlush, 12);
+                p
+            })],
+        };
+        let both = chrome_trace(&data, TraceMode::Both);
+        let parsed = Json::parse(&both).expect("valid JSON");
+        let events = parsed.as_arr().expect("array");
+        assert_eq!(events.len(), 4);
+        // Virtual section sorted by time: the send (0.5s) precedes the
+        // dispatch (1.0s).
+        assert_eq!(events[0].get("name").unwrap().as_str(), Some("send"));
+        assert_eq!(events[1].get("name").unwrap().as_str(), Some("dispatch"));
+        // Virtual-only export excludes scheduling + wall events.
+        let virt = chrome_trace(&data, TraceMode::Virtual);
+        let virt_events = Json::parse(&virt).unwrap();
+        assert_eq!(virt_events.as_arr().unwrap().len(), 2);
+        // Byte-stable: same data renders the same bytes.
+        assert_eq!(virt, chrome_trace(&data, TraceMode::Virtual));
+    }
+}

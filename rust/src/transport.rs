@@ -127,6 +127,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::HostStatsView;
 use crate::engine::{Event, SimTime, SyncMsg};
 use crate::space::SpaceMsg;
+use crate::trace::{PhaseProfile, SpanKind, TraceSpan};
 use crate::util::bin;
 use crate::util::json::Json;
 use crate::util::{AgentId, ContextId, LpId};
@@ -280,6 +281,28 @@ pub enum ControlMsg {
         from: AgentId,
         snap: TelemetrySnapshot,
     },
+    /// Agent -> leader: one chunk of the agent's virtual-time trace (see
+    /// [`crate::trace`]), emitted at EndRun *before* [`ControlMsg::FinalStats`]
+    /// — the per-agent control channel is FIFO, so the leader holds the
+    /// complete trace by the time stats arrive.  `seq` numbers the chunks;
+    /// `dropped` is the ring-cap drop count (repeated on every chunk).
+    /// Pure observability: never folded into fingerprints; drive loops
+    /// that predate the frame ignore it via their catch-all arms.
+    TraceChunk {
+        context: ContextId,
+        from: AgentId,
+        seq: u64,
+        dropped: u64,
+        spans: Vec<TraceSpan>,
+    },
+    /// Agent -> leader: the run's wall-clock phase profile (see
+    /// [`crate::trace::PhaseProfile`]), emitted once at EndRun.  Pure
+    /// observability, like [`ControlMsg::TraceChunk`].
+    PhaseReport {
+        context: ContextId,
+        from: AgentId,
+        profile: PhaseProfile,
+    },
 }
 
 /// One agent's live state at a window boundary (the payload of
@@ -304,6 +327,13 @@ pub struct TelemetrySnapshot {
     pub wire_frames: u64,
     /// Pending event-queue depth (local + remote events).
     pub events_queued: u64,
+    /// Host 1-minute load average at emission (display-only: folded into
+    /// `--watch` next to LVT lag; 0 when host sampling is unavailable).
+    pub cpu_load: f64,
+    /// Host memory-used fraction in `[0, 1]` (display-only).
+    pub mem_used: f64,
+    /// Last leader round-trip estimate in milliseconds (display-only).
+    pub rtt_ms: f64,
 }
 
 impl TelemetrySnapshot {
@@ -318,6 +348,9 @@ impl TelemetrySnapshot {
             ("wire_bytes", Json::num(self.wire_bytes as f64)),
             ("wire_frames", Json::num(self.wire_frames as f64)),
             ("events_queued", Json::num(self.events_queued as f64)),
+            ("cpu_load", Json::num(self.cpu_load)),
+            ("mem_used", Json::num(self.mem_used)),
+            ("rtt_ms", Json::num(self.rtt_ms)),
         ])
     }
 }
@@ -991,6 +1024,33 @@ fn control_to_json(c: &ControlMsg) -> Json {
             ("wb", Json::num(snap.wire_bytes as f64)),
             ("wf", Json::num(snap.wire_frames as f64)),
             ("eq", Json::num(snap.events_queued as f64)),
+            ("cpu", Json::num(snap.cpu_load)),
+            ("mem", Json::num(snap.mem_used)),
+            ("rtt", Json::num(snap.rtt_ms)),
+        ]),
+        TraceChunk {
+            context,
+            from,
+            seq,
+            dropped,
+            spans,
+        } => Json::obj(vec![
+            ("k", Json::str("trace")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("from", Json::num(from.raw() as f64)),
+            ("seq", Json::num(*seq as f64)),
+            ("drop", Json::num(*dropped as f64)),
+            ("spans", Json::arr(spans.iter().map(|s| s.to_json()))),
+        ]),
+        PhaseReport {
+            context,
+            from,
+            profile,
+        } => Json::obj(vec![
+            ("k", Json::str("phase")),
+            ("ctx", Json::num(context.raw() as f64)),
+            ("from", Json::num(from.raw() as f64)),
+            ("prof", profile.to_json()),
         ]),
     }
 }
@@ -1176,7 +1236,31 @@ fn control_from_json(j: &Json) -> Result<ControlMsg> {
                 wire_bytes: j.get("wb").and_then(Json::as_u64).context("wb")?,
                 wire_frames: j.get("wf").and_then(Json::as_u64).context("wf")?,
                 events_queued: j.get("eq").and_then(Json::as_u64).context("eq")?,
+                // Absent in pre-host-sample frames; defaults keep mixed
+                // fleets decoding.
+                cpu_load: j.get("cpu").and_then(Json::as_f64).unwrap_or(0.0),
+                mem_used: j.get("mem").and_then(Json::as_f64).unwrap_or(0.0),
+                rtt_ms: j.get("rtt").and_then(Json::as_f64).unwrap_or(0.0),
             },
+        }),
+        Some("trace") => {
+            let mut spans = Vec::new();
+            for sj in j.get("spans").and_then(Json::as_arr).context("spans")? {
+                spans.push(TraceSpan::from_json(sj).ok_or_else(|| anyhow!("bad span {sj}"))?);
+            }
+            Ok(ControlMsg::TraceChunk {
+                context: ctx()?,
+                from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+                seq: j.get("seq").and_then(Json::as_u64).context("seq")?,
+                dropped: j.get("drop").and_then(Json::as_u64).context("drop")?,
+                spans,
+            })
+        }
+        Some("phase") => Ok(ControlMsg::PhaseReport {
+            context: ctx()?,
+            from: AgentId(j.get("from").and_then(Json::as_u64).context("from")?),
+            profile: PhaseProfile::from_json(j.get("prof").context("prof")?)
+                .ok_or_else(|| anyhow!("bad phase profile"))?,
         }),
         _ => bail!("bad control msg {j}"),
     }
@@ -1591,6 +1675,42 @@ fn control_to_bin(out: &mut Vec<u8>, c: &ControlMsg) {
             bin::put_u64(out, snap.wire_bytes);
             bin::put_u64(out, snap.wire_frames);
             bin::put_u64(out, snap.events_queued);
+            bin::put_f64(out, snap.cpu_load);
+            bin::put_f64(out, snap.mem_used);
+            bin::put_f64(out, snap.rtt_ms);
+        }
+        TraceChunk {
+            context,
+            from,
+            seq,
+            dropped,
+            spans,
+        } => {
+            out.push(24);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, from.raw());
+            bin::put_u64(out, *seq);
+            bin::put_u64(out, *dropped);
+            bin::put_u64(out, spans.len() as u64);
+            for s in spans {
+                out.push(s.kind as u8);
+                bin::put_f64(out, s.t_s);
+                bin::put_f64(out, s.dur_s);
+                bin::put_u64(out, s.lp);
+                bin::put_u64(out, s.aux);
+            }
+        }
+        PhaseReport {
+            context,
+            from,
+            profile,
+        } => {
+            out.push(25);
+            bin::put_u64(out, context.raw());
+            bin::put_u64(out, from.raw());
+            // Bridge through the JSON tree, like FinalStats: one frame per
+            // run, so compactness does not matter.
+            profile.to_json().encode_bin(out);
         }
     }
 }
@@ -1746,8 +1866,48 @@ fn control_from_bin(r: &mut bin::Reader) -> Result<ControlMsg> {
                 wire_bytes: r.u64()?,
                 wire_frames: r.u64()?,
                 events_queued: r.u64()?,
+                cpu_load: r.f64()?,
+                mem_used: r.f64()?,
+                rtt_ms: r.f64()?,
             },
         },
+        24 => {
+            let context = ContextId(r.u64()?);
+            let from = AgentId(r.u64()?);
+            let seq = r.u64()?;
+            let dropped = r.u64()?;
+            let n = r.len_prefix()?;
+            let mut spans = Vec::with_capacity(n.min(CAP_HINT));
+            for _ in 0..n {
+                let kind = r.u8()?;
+                spans.push(TraceSpan {
+                    kind: SpanKind::from_u8(kind)
+                        .ok_or_else(|| anyhow!("bad span kind {kind}"))?,
+                    t_s: r.f64()?,
+                    dur_s: r.f64()?,
+                    lp: r.u64()?,
+                    aux: r.u64()?,
+                });
+            }
+            ControlMsg::TraceChunk {
+                context,
+                from,
+                seq,
+                dropped,
+                spans,
+            }
+        }
+        25 => {
+            let context = ContextId(r.u64()?);
+            let from = AgentId(r.u64()?);
+            let j = Json::decode_bin(r)?;
+            ControlMsg::PhaseReport {
+                context,
+                from,
+                profile: PhaseProfile::from_json(&j)
+                    .ok_or_else(|| anyhow!("bad phase profile"))?,
+            }
+        }
         t => bail!("bad control tag {t}"),
     })
 }
@@ -3164,6 +3324,41 @@ mod tests {
                     wire_bytes: 4096,
                     wire_frames: 17,
                     events_queued: 42,
+                    cpu_load: 1.5,
+                    mem_used: 0.25,
+                    rtt_ms: 3.75,
+                },
+            },
+            ControlMsg::TraceChunk {
+                context: ContextId(1),
+                from: AgentId(2),
+                seq: 4,
+                dropped: 7,
+                spans: vec![
+                    crate::trace::TraceSpan {
+                        kind: SpanKind::LpDispatch,
+                        t_s: 1.5,
+                        dur_s: 0.0,
+                        lp: 9,
+                        aux: 3,
+                    },
+                    crate::trace::TraceSpan {
+                        kind: SpanKind::EventSend,
+                        t_s: 2.25,
+                        dur_s: 0.0,
+                        lp: 9,
+                        aux: 11,
+                    },
+                ],
+            },
+            ControlMsg::PhaseReport {
+                context: ContextId(1),
+                from: AgentId(2),
+                profile: {
+                    let mut p = PhaseProfile::default();
+                    p.record(crate::trace::Phase::LpDispatch, 120);
+                    p.record(crate::trace::Phase::WriterFlush, 7);
+                    p
                 },
             },
         ];
@@ -3220,7 +3415,7 @@ mod tests {
 
     fn rand_control(rng: &mut Pcg32) -> ControlMsg {
         let ctx = ContextId(rng.below(4));
-        match rng.below(23) {
+        match rng.below(25) {
             0 => ControlMsg::DeployLp {
                 context: ctx,
                 lp: LpId(rng.below(64)),
@@ -3363,6 +3558,42 @@ mod tests {
                     wire_bytes: rng.below(1 << 20),
                     wire_frames: rng.below(10_000),
                     events_queued: rng.below(100_000),
+                    cpu_load: rng.uniform(0.0, 64.0),
+                    mem_used: rng.uniform(0.0, 1.0),
+                    rtt_ms: rng.uniform(0.0, 100.0),
+                },
+            },
+            22 => ControlMsg::TraceChunk {
+                context: ctx,
+                from: AgentId(rng.below(8)),
+                seq: rng.below(16),
+                dropped: rng.below(1000),
+                spans: (0..rng.below(6))
+                    .map(|_| crate::trace::TraceSpan {
+                        kind: crate::trace::SpanKind::from_u8(rng.below(5) as u8).unwrap(),
+                        t_s: rng.uniform(0.0, 1e5),
+                        dur_s: rng.uniform(0.0, 10.0),
+                        lp: rng.below(64),
+                        aux: rng.below(1000),
+                    })
+                    .collect(),
+            },
+            23 => ControlMsg::PhaseReport {
+                context: ctx,
+                from: AgentId(rng.below(8)),
+                profile: {
+                    let mut p = PhaseProfile::default();
+                    for _ in 0..rng.below(20) {
+                        let phase = match rng.below(5) {
+                            0 => crate::trace::Phase::QueuePop,
+                            1 => crate::trace::Phase::LpDispatch,
+                            2 => crate::trace::Phase::BatchEncode,
+                            3 => crate::trace::Phase::WriterFlush,
+                            _ => crate::trace::Phase::LeaderRecv,
+                        };
+                        p.record(phase, rng.below(1 << 20));
+                    }
+                    p
                 },
             },
             _ => ControlMsg::Shutdown,

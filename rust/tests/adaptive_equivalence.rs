@@ -61,6 +61,8 @@ fn agent_cfg_q(
         budget,
         heartbeat_ms: 0,
         telemetry_windows: 0,
+        trace: Default::default(),
+        trace_buffer_spans: 65536,
     }
 }
 

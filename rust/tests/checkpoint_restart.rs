@@ -30,6 +30,8 @@ fn cfg(me: AgentId) -> AgentConfig {
         budget: WindowBudgetSpec::default(),
         heartbeat_ms: 0,
         telemetry_windows: 0,
+        trace: Default::default(),
+        trace_buffer_spans: 65536,
     }
 }
 

@@ -253,6 +253,8 @@ fn unknown_peer_events_rejected_in_both_exec_modes() {
             budget: Default::default(),
             heartbeat_ms: 0,
             telemetry_windows: 0,
+            trace: Default::default(),
+            trace_buffer_spans: 65536,
         };
         let handle = std::thread::spawn(move || {
             let _ = AgentRuntime::new(cfg, ep, backend).run();

@@ -36,6 +36,8 @@ fn agent_cfg(me: AgentId, workers: usize, proto: SyncProtocol, wire_batch: bool)
         budget: WindowBudgetSpec::default(),
         heartbeat_ms: 0,
         telemetry_windows: 0,
+        trace: Default::default(),
+        trace_buffer_spans: 65536,
     }
 }
 

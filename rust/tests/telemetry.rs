@@ -29,6 +29,8 @@ fn cfg(me: AgentId, telemetry_windows: u64) -> AgentConfig {
         budget: WindowBudgetSpec::default(),
         heartbeat_ms: 0,
         telemetry_windows,
+        trace: Default::default(),
+        trace_buffer_spans: 65536,
     }
 }
 

@@ -1,0 +1,281 @@
+//! Dual-clock tracing determinism (see [`dsim::trace`]).
+//!
+//! The virtual half of the trace is causal — LP dispatches, remote event
+//! sends, checkpoint barriers — and must be a pure function of virtual
+//! execution: byte-identical across {in-proc, tcp} x {json, binary}, with
+//! the determinism fingerprint bit-identical whether tracing is on or
+//! off (the same bar live telemetry met in `telemetry.rs`).  The wall
+//! half (window/GVT scheduling spans, phase histograms) is timing data
+//! and is deliberately outside those assertions.
+
+use dsim::coordinator::{AgentConfig, WindowBudgetSpec};
+use dsim::engine::{ExecMode, SyncProtocol};
+use dsim::testkit::{check, drive_two_center, inproc_fleet, tcp_fleet, FLEET_AGENTS};
+use dsim::trace::{
+    chrome_trace, critical_path, write_chrome_trace, SpanKind, TraceData, TraceMode, TraceRing,
+    TraceSpan,
+};
+use dsim::transport::{TcpOptions, WireCodec};
+use dsim::util::json::Json;
+use dsim::util::AgentId;
+
+fn cfg(me: AgentId, trace: TraceMode, trace_buffer_spans: usize) -> AgentConfig {
+    AgentConfig {
+        me,
+        peers: FLEET_AGENTS.to_vec(),
+        lookahead: 0.05,
+        protocol: SyncProtocol::NullMessagesByDemand,
+        workers: 0,
+        exec: ExecMode::SafeWindow,
+        event_queue: Default::default(),
+        wire_batch: true,
+        budget: WindowBudgetSpec::default(),
+        heartbeat_ms: 0,
+        telemetry_windows: 0,
+        trace,
+        trace_buffer_spans,
+    }
+}
+
+/// Canonical serialization of the causal trace — the byte-identity
+/// subject (agent + span in [`TraceData::causal_sorted`] order).
+fn causal_bytes(trace: &TraceData) -> String {
+    trace
+        .causal_sorted()
+        .iter()
+        .map(|(a, s)| format!("{} {}", a.raw(), s.to_json()))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn tracing_on_keeps_fingerprints_bit_identical() {
+    // Baseline: tracing off, in-proc.  No spans arrive.
+    let (l, a) = inproc_fleet(|me| cfg(me, TraceMode::Off, 65536));
+    let baseline = drive_two_center(l, a);
+    assert!(
+        baseline.trace.is_empty(),
+        "tracing off must collect no spans"
+    );
+    assert!(critical_path(&baseline.trace).is_none());
+
+    // Virtual tracing on, in-proc: same digest, non-empty causal trace,
+    // and a critical-path report the leader can print.
+    let (l, a) = inproc_fleet(|me| cfg(me, TraceMode::Virtual, 65536));
+    let on = drive_two_center(l, a);
+    assert_eq!(
+        on.fingerprint, baseline.fingerprint,
+        "virtual tracing must not perturb the simulation"
+    );
+    assert!(!on.trace.is_empty(), "virtual mode must stream spans");
+    let cp = critical_path(&on.trace).expect("dispatch spans must yield a critical path");
+    assert!(cp.events > 0 && cp.events <= cp.total_events);
+    assert!(cp.parallelism() >= 1.0);
+
+    // Both clocks over real sockets, both wire codecs.
+    for codec in [WireCodec::Json, WireCodec::Binary] {
+        let opts = TcpOptions {
+            codec,
+            ..TcpOptions::default()
+        };
+        let (l, a) = tcp_fleet(opts, |me| cfg(me, TraceMode::Both, 65536));
+        let out = drive_two_center(l, a);
+        assert_eq!(
+            out.fingerprint, baseline.fingerprint,
+            "trace divergence under codec={codec}"
+        );
+        assert!(!out.trace.is_empty(), "no spans under codec={codec}");
+    }
+}
+
+#[test]
+fn virtual_trace_is_byte_identical_across_transports_and_codecs() {
+    let (l, a) = inproc_fleet(|me| cfg(me, TraceMode::Virtual, 65536));
+    let reference = causal_bytes(&drive_two_center(l, a).trace);
+    assert!(!reference.is_empty(), "reference causal trace is empty");
+
+    // The wall clock must not leak into the causal stream: `both` over
+    // every codec serializes the identical bytes.
+    for codec in [WireCodec::Json, WireCodec::Binary] {
+        for mode in [TraceMode::Virtual, TraceMode::Both] {
+            let opts = TcpOptions {
+                codec,
+                ..TcpOptions::default()
+            };
+            let (l, a) = tcp_fleet(opts, |me| cfg(me, mode, 65536));
+            let out = drive_two_center(l, a);
+            assert_eq!(
+                causal_bytes(&out.trace),
+                reference,
+                "causal trace diverged under codec={codec} mode={mode}"
+            );
+        }
+    }
+}
+
+#[test]
+fn ring_cap_bounds_spans_and_reports_drops() {
+    let cap = 64;
+    let (l, a) = inproc_fleet(|me| cfg(me, TraceMode::Virtual, cap));
+    let out = drive_two_center(l, a);
+    assert!(
+        out.trace.dropped > 0,
+        "a {cap}-span ring must overflow on the two-center demo"
+    );
+    for (agent, spans) in &out.trace.spans {
+        assert!(
+            spans.len() <= cap,
+            "{agent}: {} spans exceed ring cap {cap}",
+            spans.len()
+        );
+    }
+
+    // Dropping oldest spans is a collection concern only — the digest
+    // still matches an untraced run.
+    let (l, a) = inproc_fleet(|me| cfg(me, TraceMode::Off, 65536));
+    let baseline = drive_two_center(l, a);
+    assert_eq!(out.fingerprint, baseline.fingerprint);
+}
+
+#[test]
+fn chrome_export_is_valid_json() {
+    let (l, a) = inproc_fleet(|me| cfg(me, TraceMode::Both, 65536));
+    let out = drive_two_center(l, a);
+
+    let rendered = chrome_trace(&out.trace, TraceMode::Both);
+    let parsed = Json::parse(&rendered).expect("chrome trace must parse as JSON");
+    let events = parsed.as_arr().expect("chrome trace must be a JSON array");
+    assert!(!events.is_empty(), "chrome trace rendered no events");
+    for ev in events {
+        for key in ["name", "cat", "ph", "ts", "dur", "pid", "tid"] {
+            assert!(ev.get(key).is_some(), "trace event missing {key:?}: {ev}");
+        }
+    }
+    // Both clocks present: causal rows and scheduling/phase rows.
+    let cats: Vec<String> = events
+        .iter()
+        .filter_map(|e| e.get("cat")?.as_str().map(str::to_string))
+        .collect();
+    assert!(cats.iter().any(|c| c == "virtual"), "no virtual-clock rows");
+    assert!(
+        cats.iter().any(|c| c == "sched" || c == "wall"),
+        "no wall-clock rows"
+    );
+
+    // The file writer round-trips through disk unchanged.
+    let path = std::env::temp_dir().join(format!("dsim_trace_{}.json", std::process::id()));
+    write_chrome_trace(&path, &out.trace, TraceMode::Both).expect("write chrome trace");
+    let reread = std::fs::read_to_string(&path).expect("read trace back");
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(reread, rendered);
+}
+
+#[test]
+fn dispatch_spans_nest_inside_window_spans() {
+    // `both` records the scheduling plane too: every (instantaneous)
+    // dispatch span must fall inside one of its agent's window spans, and
+    // the window stream itself must be ordered and non-overlapping —
+    // the well-nestedness Perfetto relies on to stack the tracks.
+    let eps = 1e-6;
+    let (l, a) = inproc_fleet(|me| cfg(me, TraceMode::Both, 1 << 20));
+    let out = drive_two_center(l, a);
+    let mut saw_windows = false;
+    for (agent, spans) in &out.trace.spans {
+        let wins: Vec<&TraceSpan> = spans
+            .iter()
+            .filter(|s| s.kind == SpanKind::Window)
+            .collect();
+        if wins.is_empty() {
+            continue; // leader-side streams carry no window spans
+        }
+        saw_windows = true;
+        for pair in wins.windows(2) {
+            assert!(
+                pair[1].t_s >= pair[0].t_s + pair[0].dur_s - eps,
+                "{agent}: window spans overlap ({:?} then {:?})",
+                pair[0],
+                pair[1]
+            );
+        }
+        for d in spans.iter().filter(|s| s.kind == SpanKind::LpDispatch) {
+            assert!(
+                wins.iter()
+                    .any(|w| d.t_s >= w.t_s - eps && d.t_s <= w.t_s + w.dur_s + eps),
+                "{agent}: dispatch at t={} outside every window span",
+                d.t_s
+            );
+        }
+    }
+    assert!(saw_windows, "no agent recorded window spans under `both`");
+}
+
+#[test]
+fn ring_and_canonical_order_properties() {
+    check("trace ring + canonical order", 64, |rng| {
+        let cap = rng.range(1, 32) as usize;
+        let n = rng.range(0, 200) as usize;
+        let mut ring = TraceRing::new(cap);
+        let mut pushed = Vec::with_capacity(n);
+        for _ in 0..n {
+            let kind = match rng.range(0, 4) {
+                0 => SpanKind::LpDispatch,
+                1 => SpanKind::EventSend,
+                2 => SpanKind::Checkpoint,
+                3 => SpanKind::Window,
+                _ => SpanKind::Gvt,
+            };
+            let span = TraceSpan {
+                kind,
+                t_s: rng.range(0, 1000) as f64 * 0.25,
+                dur_s: rng.range(0, 8) as f64 * 0.5,
+                lp: rng.range(0, 16),
+                aux: rng.range(0, 4),
+            };
+            ring.push(span);
+            pushed.push(span);
+        }
+
+        // Bounded, drop-oldest, exact drop accounting.
+        if ring.len() > cap {
+            return Err(format!("ring len {} exceeds cap {cap}", ring.len()));
+        }
+        let expect_dropped = n.saturating_sub(cap) as u64;
+        if ring.dropped() != expect_dropped {
+            return Err(format!(
+                "dropped {} != expected {expect_dropped}",
+                ring.dropped()
+            ));
+        }
+        let kept = ring.drain();
+        if kept != pushed[n - kept.len()..] {
+            return Err("ring did not keep the newest spans in order".into());
+        }
+
+        // Spans survive the wire encoding unchanged.
+        for s in &kept {
+            if TraceSpan::from_json(&s.to_json()) != Some(*s) {
+                return Err(format!("span {s:?} did not round-trip through JSON"));
+            }
+        }
+
+        // Canonical order is monotone in virtual time, and the export is
+        // valid JSON for any span soup.
+        let data = TraceData {
+            spans: vec![(AgentId(1), kept)],
+            dropped: expect_dropped,
+            phases: Vec::new(),
+        };
+        let causal = data.causal_sorted();
+        for pair in causal.windows(2) {
+            if pair[0].1.t_s > pair[1].1.t_s {
+                return Err("causal_sorted not monotone in t_s".into());
+            }
+        }
+        let rendered = chrome_trace(&data, TraceMode::Both);
+        match Json::parse(&rendered) {
+            Ok(j) if j.as_arr().is_some() => Ok(()),
+            Ok(_) => Err("chrome trace not a JSON array".into()),
+            Err(e) => Err(format!("chrome trace does not parse: {e:#}")),
+        }
+    });
+}
